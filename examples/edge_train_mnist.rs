@@ -1,0 +1,98 @@
+//! End-to-end edge-training driver — the repository's E2E validation
+//! run (recorded in EXPERIMENTS.md §E2E).
+//!
+//! Trains the paper's MNIST MLP (784-256-256-256-256-10, the actual
+//! paper-scale model) for several hundred steps on the synthetic
+//! MNIST surrogate through the **full three-layer stack**:
+//!
+//!   L1 Pallas kernels → L2 JAX train step → AOT HLO text →
+//!   L3 Rust PJRT runtime → this coordinator loop,
+//!
+//! under a Raspberry-Pi-class memory envelope, logging the loss curve
+//! and both algorithms' (standard vs proposed) accuracy + modeled
+//! memory side by side.
+//!
+//!     cargo run --release --example edge_train_mnist [-- --steps 300]
+
+use anyhow::Result;
+use bnn_edge::coordinator::{EngineKind, MemoryEnvelope, RunConfig, Runner};
+use bnn_edge::memmodel::{breakdown, DtypeConfig, Optimizer};
+use bnn_edge::models::{get, lower};
+use bnn_edge::report::{acc_table, AccRow};
+use bnn_edge::util::cli::Args;
+use bnn_edge::util::MIB;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 300)?;
+    let use_pallas = !args.bool("no-pallas");
+
+    let graph = lower(&get("mlp")?)?;
+    let mut rows = Vec::new();
+    let mut baseline = 0.0f32;
+
+    for algo in ["standard", "proposed"] {
+        let cfg = RunConfig {
+            model: "mlp".into(),
+            algo: algo.into(),
+            dataset: "syn-mnist".into(),
+            batch: 100,
+            epochs: 100, // bounded by max_steps
+            max_steps: Some(steps),
+            n_train: 4000,
+            n_test: 1000,
+            eval_every_steps: 20,
+            lr: 0.001,
+            engine: EngineKind::Hlo,
+            envelope: Some(MemoryEnvelope::raspberry_pi()),
+            metrics_path: Some(format!("results/e2e_mlp_{algo}.jsonl").into()),
+            // route the proposed run through the Pallas-kernel artifact
+            use_pallas_artifact: use_pallas && algo == "proposed",
+            ..Default::default()
+        };
+        println!("== {algo}: artifact {} ==", cfg.train_artifact());
+        let mut runner = Runner::new(cfg)?;
+        let result = runner.run()?;
+        println!("{}", result.summary());
+        // print the loss curve coarsely (full curve in the jsonl)
+        for p in result.metrics.points.iter().step_by(40) {
+            println!(
+                "  step {:>4}  loss {:.4}  train acc {:.1}%{}",
+                p.step,
+                p.train_loss,
+                p.train_acc * 100.0,
+                p.val_acc
+                    .map(|v| format!("  val acc {:.1}%", v * 100.0))
+                    .unwrap_or_default()
+            );
+        }
+        let dt = DtypeConfig::ablation(algo).unwrap();
+        let mib = breakdown(&graph, 100, &dt, Optimizer::Adam).total_bytes() / MIB;
+        if algo == "standard" {
+            baseline = result.best_test_acc;
+        }
+        let std_mib =
+            breakdown(&graph, 100, &DtypeConfig::standard(), Optimizer::Adam).total_bytes()
+                / MIB;
+        rows.push(AccRow {
+            label: format!("MLP/syn-MNIST {algo}"),
+            baseline_acc: baseline,
+            acc: result.best_test_acc,
+            mib: Some(mib),
+            mib_factor: if algo == "proposed" {
+                Some(std_mib / mib)
+            } else {
+                None
+            },
+        });
+    }
+
+    let md = acc_table(
+        "E2E: MLP (paper scale) on syn-MNIST — standard vs proposed",
+        &rows,
+    );
+    println!("{md}");
+    bnn_edge::report::write_section("results/e2e_mlp.md", &md)?;
+    println!("curves: results/e2e_mlp_standard.jsonl / _proposed.jsonl");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Memory-envelope exploration: what actually fits on an edge device?
+//!
+//! Walks the model zoo under a Raspberry-Pi-class envelope, printing
+//! for each model/algorithm the largest admissible batch (Fig. 2's
+//! "~10× batch" observation) and for BinaryNet the full Table-2
+//! breakdown at that operating point.  Also runs the tracked-
+//! allocator measurement for the naive engines so *measured* peak
+//! memory can be compared with the model (Fig. 6's methodology).
+//!
+//!     cargo run --release --example memory_envelope [-- --envelope-mib 819]
+
+use anyhow::Result;
+use bnn_edge::coordinator::{fit_batch, MemoryEnvelope};
+use bnn_edge::data::build;
+use bnn_edge::memmodel::{breakdown, DtypeConfig, Optimizer};
+use bnn_edge::models::{get, lower};
+use bnn_edge::naive::{build_engine, Accel};
+use bnn_edge::util::cli::Args;
+use bnn_edge::util::table::{Align, Table};
+use bnn_edge::util::MIB;
+use bnn_edge::{memtrack, report};
+
+#[global_allocator]
+static ALLOC: memtrack::TrackingAlloc = memtrack::TrackingAlloc;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let env = MemoryEnvelope::mib(args.f64_or("envelope-mib", 819.0)?);
+
+    let mut t = Table::new(
+        &format!("Largest batch within {:.0} MiB", env.bytes / MIB),
+        &["Model", "standard", "proposed", "headroom"],
+    )
+    .align(0, Align::Left);
+    for model in ["mlp", "cnv", "binarynet", "resnete18"] {
+        let g = lower(&get(model)?)?;
+        let s = fit_batch(&g, "standard", Optimizer::Adam, &env)?;
+        let p = fit_batch(&g, "proposed", Optimizer::Adam, &env)?;
+        let ratio = match (s, p) {
+            (Some(a), Some(b)) if a > 0 => format!("{:.1}x", b as f64 / a as f64),
+            _ => "-".into(),
+        };
+        let fmt = |x: Option<usize>| x.map(|v| v.to_string()).unwrap_or("-".into());
+        t.row(&[model.to_string(), fmt(s), fmt(p), ratio]);
+    }
+    println!("{}", t.to_markdown());
+
+    // Table-2 breakdown at the paper's BinaryNet operating point.
+    let g = lower(&get("binarynet")?)?;
+    let std = breakdown(&g, 100, &DtypeConfig::standard(), Optimizer::Adam);
+    let prop = breakdown(&g, 100, &DtypeConfig::proposed(), Optimizer::Adam);
+    println!("{}", report::table2(&std, &prop));
+
+    // Measured (tracking allocator) vs modeled, naive engines on the
+    // paper's MLP — the Fig. 6 methodology in miniature.
+    let g = lower(&get("mlp")?)?;
+    let batch = 100;
+    let ds = build("syn-mnist", batch, 0, 1)?;
+    let x = ds.train_x.clone();
+    let y = ds.train_y.clone();
+    println!("measured peak heap while training one step (MLP, B={batch}):");
+    for algo in ["standard", "proposed"] {
+        let mut engine = build_engine(algo, &g, batch, "adam", Accel::Naive, 1)?;
+        // warm once so lazily-allocated state exists, then measure
+        engine.train_step(&x, &y, 0.001)?;
+        let (_, stats) = memtrack::measure(|| engine.train_step(&x, &y, 0.001));
+        let dt = DtypeConfig::ablation(algo).unwrap();
+        let modeled = breakdown(&g, batch, &dt, Optimizer::Adam).total_bytes() / MIB;
+        let state = engine.state_bytes() as f64 / MIB;
+        println!(
+            "  {algo:>9}: peak-growth {:.2} MiB + persistent {state:.2} MiB  (modeled total {modeled:.2} MiB)",
+            stats.growth_mib()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Quickstart: load an AOT train-step artifact, run a few steps on a
+//! synthetic batch, and print the Table-2 memory story for the same
+//! configuration.
+//!
+//!     make artifacts            # once (python, build-time only)
+//!     cargo run --release --example quickstart
+//!
+//! Everything below is pure Rust — the PJRT executable was compiled
+//! from JAX+Pallas ahead of time; Python is not on this path.
+
+use anyhow::Result;
+use bnn_edge::coordinator::{EngineKind, RunConfig, Runner};
+use bnn_edge::memmodel::{breakdown, DtypeConfig, Optimizer};
+use bnn_edge::models::{get, lower};
+use bnn_edge::report;
+
+fn main() -> Result<()> {
+    // 1. The memory claim (Sec. 4 / Table 2): why the proposed
+    //    training step fits edge devices.
+    let graph = lower(&get("mlp_mini")?)?;
+    let std = breakdown(&graph, 64, &DtypeConfig::standard(), Optimizer::Adam);
+    let prop = breakdown(&graph, 64, &DtypeConfig::proposed(), Optimizer::Adam);
+    println!("{}", report::table2(&std, &prop));
+
+    // 2. Train the same model for real through the AOT HLO step
+    //    (Alg. 2 baked in by python/compile at build time).
+    let cfg = RunConfig {
+        model: "mlp_mini".into(),
+        algo: "proposed".into(),
+        dataset: "syn-mnist64".into(),
+        batch: 64,
+        epochs: 2,
+        n_train: 640,
+        n_test: 128,
+        eval_every_steps: 5,
+        lr: 0.003,
+        engine: EngineKind::Hlo,
+        ..Default::default()
+    };
+    println!("training {} ({})...", cfg.model, cfg.train_artifact());
+    let mut runner = Runner::new(cfg)?;
+    let result = runner.run()?;
+    println!("{}", result.summary());
+
+    // 3. Show the loss trend (the metrics stream drives Figs. 3-5).
+    let pts = &result.metrics.points;
+    let first = pts.first().unwrap();
+    let last = pts.iter().rev().find(|p| p.val_acc.is_some()).unwrap();
+    println!(
+        "loss {:.3} -> {:.3}; val acc {:.1}% at step {}",
+        first.train_loss,
+        last.train_loss,
+        last.val_acc.unwrap() * 100.0,
+        last.step
+    );
+    Ok(())
+}

@@ -1,0 +1,285 @@
+"""AOT export: lower every (model, algo, optimizer, batch) train/eval
+step variant to HLO **text** + a JSON manifest + binary goldens.
+
+HLO text — never `lowered.compiler_ir('hlo').serialize()` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the `xla` crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly.
+
+Artifacts (per variant `<name>`):
+    artifacts/<name>.hlo.txt     HLO text, loaded by rust runtime
+    artifacts/<name>.meta.json   positional input/output manifest
+    artifacts/<name>.golden.bin  (selected variants) flat little-endian
+                                 f32 dump of one fixed-seed step's
+                                 inputs and outputs, offsets in meta —
+                                 the Rust side's numerical ground truth
+
+Python runs ONCE at build time (`make artifacts`); the rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import layers as L
+from . import models as M
+from . import train_step as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ----------------------------------------------------------- manifest
+
+def _param_names(spec):
+    names = []
+    for i in range(spec.num_param_layers()):
+        names += [f"w{i}", f"beta{i}"]
+    return names
+
+
+def _opt_names(spec, optimizer):
+    n = spec.num_param_layers()
+    if optimizer == "adam":
+        return (["t"] + [f"m_{x}" for i in range(n) for x in (f"w{i}", f"beta{i}")]
+                + [f"v_{x}" for i in range(n) for x in (f"w{i}", f"beta{i}")])
+    if optimizer == "sgd":
+        return [f"vel_{x}" for i in range(n) for x in (f"w{i}", f"beta{i}")]
+    if optimizer == "bop":
+        return ([f"ema_w{i}" for i in range(n)] + ["t"]
+                + [f"bm_beta{i}" for i in range(n)]
+                + [f"bv_beta{i}" for i in range(n)])
+    raise ValueError(optimizer)
+
+
+@dataclasses.dataclass
+class Variant:
+    model: str
+    algo: str            # ablation name (TrainConfig.ablation key)
+    optimizer: str       # 'adam' | 'sgd' | 'bop' (train only)
+    batch: int
+    kind: str = "train"  # 'train' | 'eval'
+    pallas: bool = False
+    golden: bool = False
+
+    @property
+    def name(self):
+        bits = [self.model, self.algo]
+        if self.kind == "train":
+            bits.append(self.optimizer)
+        bits.append(f"b{self.batch}")
+        if self.pallas:
+            bits.append("pallas")
+        if self.kind == "eval":
+            bits.append("eval")
+        return "_".join(bits)
+
+
+def build_variant(v: Variant, outdir: str):
+    spec = M.get_model(v.model)
+    cfg = dataclasses.replace(L.TrainConfig.ablation(v.algo),
+                              use_pallas=v.pallas)
+    xspec = jax.ShapeDtypeStruct((v.batch,) + spec.input_shape, jnp.float32)
+    yspec = jax.ShapeDtypeStruct((v.batch, spec.classes), jnp.float32)
+    pshapes = [s for pair in M.param_shapes(spec) for s in pair]
+    pspecs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in pshapes]
+
+    inputs, outputs = [], []
+
+    def add(lst, names, shapes, kind):
+        for nm, sh in zip(names, shapes):
+            lst.append({"name": nm, "shape": list(sh), "kind": kind})
+
+    if v.kind == "train":
+        flat, nparams, nopt = T.make_flat_train_step(spec, cfg, v.optimizer)
+        oshapes = T.opt_state_shapes(spec, v.optimizer)
+        ospecs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in oshapes]
+        args = pspecs + ospecs + [
+            xspec, yspec, jax.ShapeDtypeStruct((), jnp.float32)]
+        add(inputs, _param_names(spec), pshapes, "param")
+        add(inputs, _opt_names(spec, v.optimizer), oshapes, "opt")
+        add(inputs, ["x"], [xspec.shape], "x")
+        add(inputs, ["y"], [yspec.shape], "y")
+        add(inputs, ["lr"], [()], "lr")
+        add(outputs, _param_names(spec), pshapes, "param")
+        add(outputs, _opt_names(spec, v.optimizer), oshapes, "opt")
+        add(outputs, ["loss", "acc"], [(), ()], "metric")
+    else:
+        flat, nparams = T.make_flat_eval_step(spec, cfg)
+        args = pspecs + [xspec, yspec]
+        add(inputs, _param_names(spec), pshapes, "param")
+        add(inputs, ["x"], [xspec.shape], "x")
+        add(inputs, ["y"], [yspec.shape], "y")
+        add(outputs, ["loss", "acc"], [(), ()], "metric")
+
+    lowered = jax.jit(flat).lower(*args)
+    hlo = to_hlo_text(lowered)
+    with open(os.path.join(outdir, v.name + ".hlo.txt"), "w") as f:
+        f.write(hlo)
+
+    meta = {
+        "name": v.name,
+        "model": v.model,
+        "algo": v.algo,
+        "optimizer": v.optimizer if v.kind == "train" else None,
+        "kind": v.kind,
+        "batch": v.batch,
+        "classes": spec.classes,
+        "input_shape": list(spec.input_shape),
+        "use_pallas": v.pallas,
+        "inputs": inputs,
+        "outputs": outputs,
+    }
+
+    if v.golden:
+        meta["golden"] = dump_golden(v, spec, cfg, flat, outdir)
+
+    with open(os.path.join(outdir, v.name + ".meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return len(hlo)
+
+
+def dump_golden(v, spec, cfg, flat, outdir):
+    """One fixed-seed step: dump concrete inputs + outputs as flat
+    little-endian f32 (inputs first, then outputs, in manifest order)."""
+    key = jax.random.PRNGKey(42)
+    params = M.init_params(spec, key)
+    if v.kind == "train" and v.optimizer == "bop":
+        params = T.init_bop_weights(params)
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (v.batch,) + spec.input_shape, jnp.float32)
+    labels = jax.random.randint(ky, (v.batch,), 0, spec.classes)
+    y = jax.nn.one_hot(labels, spec.classes)
+    if v.kind == "train":
+        opt = T.init_opt_state(spec, v.optimizer)
+        concrete = params + opt + [x, y, jnp.float32(0.001)]
+    else:
+        concrete = params + [x, y]
+    outs = jax.jit(flat)(*concrete)
+
+    blob = bytearray()
+    sections = []
+    for arrs in (concrete, list(outs)):
+        for a in arrs:
+            a = np.asarray(a, np.float32)
+            sections.append({"offset": len(blob) // 4, "len": int(a.size)})
+            blob += a.tobytes()
+    path = os.path.join(outdir, v.name + ".golden.bin")
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+    return {"file": v.name + ".golden.bin", "sections": sections,
+            "n_inputs": len(concrete), "n_outputs": len(outs)}
+
+
+# ------------------------------------------------------- variant sets
+
+def variant_set(which: str):
+    vs = []
+    A = "adam"
+
+    def train(model, algo, opt=A, batch=100, **kw):
+        vs.append(Variant(model, algo, opt, batch, "train", **kw))
+
+    def evalv(model, algo, batch=200, **kw):
+        vs.append(Variant(model, algo, A, batch, "eval", **kw))
+
+    # --- core: quickstart + golden verification + e2e example ---
+    train("mlp_mini", "standard", batch=64, golden=True)
+    train("mlp_mini", "proposed", batch=64, golden=True)
+    train("mlp_mini", "proposed", batch=64, pallas=True, golden=True)
+    evalv("mlp_mini", "standard", batch=64)
+    evalv("mlp_mini", "proposed", batch=64)
+    train("mlp", "standard", batch=100)
+    train("mlp", "proposed", batch=100)
+    train("mlp", "proposed", batch=100, pallas=True)
+    evalv("mlp", "standard", batch=200)
+    evalv("mlp", "proposed", batch=200)
+    if which == "core":
+        return vs
+
+    # --- Table 3/4: model x dataset accuracy (proposed vs standard) ---
+    for model in ("cnv_mini", "binarynet_mini"):
+        for algo in ("standard", "proposed"):
+            train(model, algo, batch=100)
+            evalv(model, algo, batch=200)
+    # Table 3's non-binary reference networks (robustness asymmetry)
+    for model in ("mlp_mini", "cnv_mini", "binarynet_mini"):
+        for algo in ("nn_standard", "nn_proposed"):
+            b = 64 if model == "mlp_mini" else 100
+            train(model, algo, batch=b)
+            evalv(model, algo, batch=200 if model != "mlp_mini" else 64)
+    vs.append(Variant("cnv_mini", "proposed", A, 100, "train",
+                      pallas=True, golden=True))
+
+    # --- Table 5 ablation: optimizer x data representation ---
+    for opt in ("adam", "sgd", "bop"):
+        for algo in ("standard", "f16", "boolgrad_l2", "boolgrad_l1",
+                     "proposed"):
+            if (opt, algo) in (("adam", "standard"), ("adam", "proposed")):
+                continue  # already emitted above
+            train("binarynet_mini", algo, opt=opt, batch=100)
+    for algo in ("f16", "boolgrad_l2", "boolgrad_l1"):
+        evalv("binarynet_mini", algo, batch=200)
+
+    # --- Table 6: ImageNet-class residual models, per-approximation ---
+    for model in ("resnete_mini", "bireal_mini"):
+        for algo in ("standard", "f16", "boolgrad_l2", "boolgrad_l1",
+                     "proposed"):
+            train(model, algo, batch=64)
+            evalv(model, algo, batch=100)
+
+    # --- Fig. 2: batch-size sweep (3 optimizers x 2 algos x 3 sizes) ---
+    for opt in ("adam", "sgd", "bop"):
+        for algo in ("standard", "proposed"):
+            for b in (16, 64, 256):
+                train("binarynet_mini", algo, opt=opt, batch=b)
+
+    return vs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--set", default="full", choices=["core", "full"])
+    ap.add_argument("--only", default=None,
+                    help="comma-separated variant-name substrings")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    vs = variant_set(args.set)
+    seen = set()
+    vs = [v for v in vs if not (v.name in seen or seen.add(v.name))]
+    if args.only:
+        keys = args.only.split(",")
+        vs = [v for v in vs if any(k in v.name for k in keys)]
+
+    for i, v in enumerate(vs):
+        n = build_variant(v, args.out)
+        print(f"[{i + 1}/{len(vs)}] {v.name}: {n} chars", flush=True)
+    # index reflects everything on disk (merge across --only runs)
+    names = sorted(
+        f[: -len(".meta.json")]
+        for f in os.listdir(args.out)
+        if f.endswith(".meta.json")
+    )
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump(names, f, indent=1)
+    print(f"wrote {len(vs)} artifacts to {args.out} (index: {len(names)})")
+
+
+if __name__ == "__main__":
+    main()

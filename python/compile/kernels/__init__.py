@@ -1,0 +1,7 @@
+# L1: Pallas kernels for the paper's compute hot-spots, each with a
+# pure-jnp oracle in ref.py (tested in python/tests/).
+from . import ref  # noqa: F401
+from .binary_matmul import binary_matmul  # noqa: F401
+from .l1_batchnorm import l1_batchnorm_fwd  # noqa: F401
+from .bn_backward import bn_backward_proposed  # noqa: F401
+from .sign import sign_ste  # noqa: F401

@@ -1,0 +1,111 @@
+"""Pallas kernel: binary (sign-sign) matmul — Alg. 1/2 line 4.
+
+Y = sgn(X) @ sgn(W), the XNOR-popcount GEMM of BNN training, expressed
+as a +/-1 matmul so it maps onto the TPU MXU systolic array (TPUs have
+no popcount datapath; feeding the MXU +/-1 operands in bf16 is the
+canonical realization — see DESIGN.md §Hardware-Adaptation).
+
+Tiling: a 3-D grid (M/bm, N/bn, K/bk).  Each grid step holds one
+(bm, bk) X-tile, one (bk, bn) W-tile and the (bm, bn) accumulator in
+VMEM; the K axis is the innermost (fastest-varying) grid dimension so
+the output tile stays resident while partial products accumulate —
+the HBM<->VMEM schedule a CUDA kernel would express with threadblocks
+is expressed here with BlockSpec index maps.
+
+VMEM per grid step (f32): bm*bk + bk*bn + bm*bn floats.  With the
+default (128, 128, 128) tiles that is 3 * 64 KiB = 192 KiB — far under
+the ~16 MiB VMEM budget, leaving room for double buffering.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; structure (not wallclock) is what carries to real TPUs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (128, 128, 128)  # (bm, bn, bk)
+
+
+def _kernel(x_ref, w_ref, o_ref, *, nsteps_k):
+    """One (bm, bn) output tile; K-accumulation across grid steps."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xs = jnp.where(x_ref[...] >= 0, 1.0, -1.0).astype(jnp.float32)
+    ws = jnp.where(w_ref[...] >= 0, 1.0, -1.0).astype(jnp.float32)
+    o_ref[...] += jnp.dot(xs, ws, preferred_element_type=jnp.float32)
+
+
+def _pad_to(x, multiple, axis, value=0.0):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def binary_matmul(x, w, block=DEFAULT_BLOCK):
+    """Y = sgn(X) @ sgn(W) via the tiled Pallas kernel.
+
+    x: (M, K) float; w: (K, N) float.  Returns (M, N) float32.
+    Inputs are zero-padded to tile multiples.  Since sgn(0) = +1, each
+    zero-padded K lane contributes exactly +1*+1 = +1 to *every*
+    output element, so the constant pad_k is subtracted afterwards;
+    M/N padding is simply sliced off.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn, bk = block
+    bm, bn, bk = min(bm, _ceil_mult(m)), min(bn, _ceil_mult(n)), min(bk, _ceil_mult(k))
+
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nsteps_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+
+    # Zero-padded K lanes contribute sgn(0)*sgn(0) = +1 each; remove.
+    pad_k = kp - k
+    if pad_k:
+        out = out - float(pad_k)
+    return out[:m, :n]
+
+
+def _ceil_mult(dim, base=8):
+    """Smallest multiple of `base` >= dim (for tiny test shapes)."""
+    return ((dim + base - 1) // base) * base
+
+
+def vmem_bytes(block=DEFAULT_BLOCK, dtype_bytes=4):
+    """Modeled VMEM residency per grid step (see module docstring)."""
+    bm, bn, bk = block
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes
+
+
+def mxu_utilization_estimate(m, k, n, block=DEFAULT_BLOCK):
+    """Fraction of MXU issue slots doing useful work for an (m,k,n)
+    problem under this tiling: useful MACs / (grid steps * bm*bn*bk).
+    Padding waste is the only structural inefficiency."""
+    bm, bn, bk = block
+    gm, gn, gk = -(-m // bm), -(-n // bn), -(-k // bk)
+    issued = gm * gn * gk * bm * bn * bk
+    return (m * k * n) / issued

@@ -1,0 +1,78 @@
+"""Pallas kernel: proposed batch-norm backward — Alg. 2 lines 10-13.
+
+The paper's key memory contribution: backward propagation through batch
+normalization using only *binary* retained activations xhat = sgn(xn)
+plus per-channel mean magnitudes omega.  Per channel m:
+
+    v      = dx / psi
+    dy     = v - mu(v) - (omega * mu(v . xhat)) . xhat
+    dbeta  = sum_B dx
+
+Tiling mirrors the forward kernel: a 1-D grid over channel tiles, each
+grid step reducing a full (B, bc) block in VMEM.  The binary xhat block
+would occupy B*bc bits on a real TPU (int8 at worst under Mosaic);
+modeled VMEM below accounts xhat at 1 byte/element.
+
+interpret=True for CPU-PJRT executability.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_C = 128
+
+
+def _kernel(dx_ref, xhat_ref, om_ref, psi_ref, dy_ref, db_ref):
+    dx = dx_ref[...]
+    xhat = xhat_ref[...]
+    v = dx / psi_ref[...][None, :]
+    mu_v = jnp.mean(v, axis=0)
+    mu_vx = jnp.mean(v * xhat, axis=0)
+    dy_ref[...] = v - mu_v[None, :] - (om_ref[...] * mu_vx)[None, :] * xhat
+    db_ref[...] = jnp.sum(dx, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def bn_backward_proposed(dx, xhat, omega, psi, block_c=DEFAULT_BLOCK_C):
+    """dx: (B, C); xhat: (B, C) in {-1,+1}; omega, psi: (C,).
+    Returns (dy, dbeta): (B, C), (C,)."""
+    b, c = dx.shape
+    bc = min(block_c, c)
+    pad = (-c) % bc
+    if pad:
+        dx = jnp.pad(dx, ((0, 0), (0, pad)))
+        xhat = jnp.pad(xhat, ((0, 0), (0, pad)), constant_values=1.0)
+        omega = jnp.pad(omega, (0, pad))
+        psi = jnp.pad(psi, (0, pad), constant_values=1.0)  # avoid /0
+    cp = dx.shape[1]
+    grid = (cp // bc,)
+
+    dy, dbeta = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, bc), lambda j: (0, j)),
+            pl.BlockSpec((b, bc), lambda j: (0, j)),
+            pl.BlockSpec((bc,), lambda j: (j,)),
+            pl.BlockSpec((bc,), lambda j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, bc), lambda j: (0, j)),
+            pl.BlockSpec((bc,), lambda j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, cp), jnp.float32),
+            jax.ShapeDtypeStruct((cp,), jnp.float32),
+        ],
+        interpret=True,
+    )(dx, xhat, omega, psi)
+    return dy[:, :c], dbeta[:c]
+
+
+def vmem_bytes(batch, block_c=DEFAULT_BLOCK_C):
+    """Modeled VMEM per grid step: f32 dx + dy blocks, 1-byte xhat
+    block, three statistic rows."""
+    return batch * block_c * (4 + 4 + 1) + 3 * block_c * 4

@@ -1,0 +1,82 @@
+"""Pallas kernel: l1 batch-normalization forward — Alg. 2 lines 5-8.
+
+Per output channel m:
+    mu      = mean_B(y)
+    psi     = ||y - mu||_1 / B + eps      (mean absolute deviation)
+    x_next  = (y - mu) / psi + beta
+    omega   = ||x_next||_1 / B            (mean magnitude, retained for
+                                           the proposed backward)
+
+Tiling: 1-D grid over channel tiles.  Each grid step holds one
+(B, bc) activation block plus four (bc,) statistic rows in VMEM, so the
+whole batch-reduction for a channel happens in one step — no cross-step
+accumulation, no HBM round-trip for partial sums.  VMEM per step at
+(B=256, bc=128, f32) = 2*B*bc*4 + O(bc) ≈ 256 KiB.
+
+All reductions run on the VPU (element-wise + cross-lane adds); there
+is no MXU work here.  interpret=True for CPU-PJRT executability.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_C = 128
+
+
+def _kernel(y_ref, beta_ref, x_ref, mu_ref, psi_ref, om_ref, *, batch, eps):
+    y = y_ref[...]
+    mu = jnp.mean(y, axis=0)
+    cent = y - mu[None, :]
+    psi = jnp.sum(jnp.abs(cent), axis=0) / batch + eps
+    x = cent / psi[None, :] + beta_ref[...][None, :]
+    x_ref[...] = x
+    mu_ref[...] = mu
+    psi_ref[...] = psi
+    om_ref[...] = jnp.mean(jnp.abs(x), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "eps"))
+def l1_batchnorm_fwd(y, beta, block_c=DEFAULT_BLOCK_C, eps=1e-5):
+    """Forward l1 batch norm.  y: (B, C) float; beta: (C,) float.
+    Returns (x_next, mu, psi, omega): (B, C), (C,), (C,), (C,)."""
+    b, c = y.shape
+    bc = min(block_c, c)
+    pad = (-c) % bc
+    if pad:
+        # Padded channels normalize garbage zeros; sliced off below.
+        y = jnp.pad(y, ((0, 0), (0, pad)))
+        beta = jnp.pad(beta, (0, pad))
+    cp = y.shape[1]
+    grid = (cp // bc,)
+
+    x, mu, psi, om = pl.pallas_call(
+        functools.partial(_kernel, batch=float(b), eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, bc), lambda j: (0, j)),
+            pl.BlockSpec((bc,), lambda j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, bc), lambda j: (0, j)),
+            pl.BlockSpec((bc,), lambda j: (j,)),
+            pl.BlockSpec((bc,), lambda j: (j,)),
+            pl.BlockSpec((bc,), lambda j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, cp), jnp.float32),
+            jax.ShapeDtypeStruct((cp,), jnp.float32),
+            jax.ShapeDtypeStruct((cp,), jnp.float32),
+            jax.ShapeDtypeStruct((cp,), jnp.float32),
+        ],
+        interpret=True,
+    )(y, beta)
+    return x[:, :c], mu[:c], psi[:c], om[:c]
+
+
+def vmem_bytes(batch, block_c=DEFAULT_BLOCK_C, dtype_bytes=4):
+    """Modeled VMEM residency per grid step: input block + output block
+    + 4 statistic rows (mu, psi, omega, beta)."""
+    return (2 * batch * block_c + 4 * block_c) * dtype_bytes

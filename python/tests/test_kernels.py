@@ -1,0 +1,241 @@
+"""Kernel vs. ref oracle — the CORE correctness signal for L1.
+
+Every Pallas kernel must match its pure-jnp oracle to float32
+tolerance across a hypothesis-swept space of shapes and value
+distributions, including the degenerate corners (single-row batches,
+single channels, non-tile-multiple dims, all-negative inputs).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.binary_matmul import (
+    binary_matmul,
+    mxu_utilization_estimate,
+    vmem_bytes as bm_vmem,
+)
+from compile.kernels.l1_batchnorm import l1_batchnorm_fwd
+from compile.kernels.bn_backward import bn_backward_proposed
+from compile.kernels.sign import sign_ste
+
+jax.config.update("jax_platform_name", "cpu")
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# --------------------------------------------------------------- sign
+
+def test_sign_zero_is_plus_one():
+    s = ref.sign(jnp.array([0.0, -0.0, 1.0, -1.0]))
+    # sgn(0) = +1: codomain must be exactly {-1, +1}
+    assert s.tolist() == [1.0, 1.0, 1.0, -1.0]
+
+
+def test_sign_codomain_binary():
+    x = jnp.asarray(rng(0).normal(size=(64, 32)), jnp.float32)
+    s = ref.sign(x)
+    assert set(np.unique(np.asarray(s))) <= {-1.0, 1.0}
+
+
+@given(
+    r=st.integers(1, 70),
+    c=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_sign_ste_matches_ref(r, c, seed):
+    x = jnp.asarray(rng(seed).normal(size=(r, c)) * 2, jnp.float32)
+    s, m = sign_ste(x)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(ref.sign(x)))
+    np.testing.assert_allclose(np.asarray(m), np.asarray(ref.ste_mask(x)))
+
+
+def test_ste_mask_boundary_inclusive():
+    x = jnp.array([[1.0, -1.0, 1.0001, -1.0001]])
+    _, m = sign_ste(x)
+    assert m.tolist() == [[1.0, 1.0, 0.0, 0.0]]
+
+
+# ------------------------------------------------------ binary matmul
+
+@given(
+    m=st.integers(1, 65),
+    k=st.integers(1, 65),
+    n=st.integers(1, 65),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_binary_matmul_matches_ref(m, k, n, seed):
+    g = rng(seed)
+    x = jnp.asarray(g.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(g.normal(size=(k, n)), jnp.float32)
+    got = binary_matmul(x, w)
+    want = ref.binary_matmul(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_binary_matmul_large_tile_multiple():
+    g = rng(7)
+    x = jnp.asarray(g.normal(size=(256, 256)), jnp.float32)
+    w = jnp.asarray(g.normal(size=(256, 128)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(binary_matmul(x, w)),
+        np.asarray(ref.binary_matmul(x, w)),
+        atol=1e-4,
+    )
+
+
+def test_binary_matmul_output_parity():
+    # sum of K +/-1 products has the same parity as K
+    g = rng(1)
+    k = 33
+    x = jnp.asarray(g.normal(size=(8, k)), jnp.float32)
+    w = jnp.asarray(g.normal(size=(k, 8)), jnp.float32)
+    out = np.asarray(binary_matmul(x, w))
+    assert np.all((out.astype(np.int64) - k) % 2 == 0)
+    assert np.all(np.abs(out) <= k)
+
+
+def test_binary_matmul_all_positive_inputs():
+    x = jnp.ones((4, 16))
+    w = jnp.ones((16, 4))
+    np.testing.assert_allclose(np.asarray(binary_matmul(x, w)), 16.0)
+
+
+def test_binary_matmul_ignores_magnitude():
+    g = rng(3)
+    x = jnp.asarray(g.normal(size=(16, 32)), jnp.float32)
+    w = jnp.asarray(g.normal(size=(32, 16)), jnp.float32)
+    a = binary_matmul(x, w)
+    b = binary_matmul(x * 100.0, w * 0.001)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_mxu_utilization_estimate_exact_tiles():
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert mxu_utilization_estimate(64, 128, 128) < 1.0
+
+
+def test_vmem_budget():
+    # default tiling must stay far below the 16 MiB VMEM budget
+    assert bm_vmem() < 4 * 2**20
+
+
+# ---------------------------------------------------------- l1 BN fwd
+
+@given(
+    b=st.integers(2, 64),
+    c=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_l1_bn_fwd_matches_ref(b, c, seed):
+    g = rng(seed)
+    y = jnp.asarray(g.normal(size=(b, c)) * 3, jnp.float32)
+    beta = jnp.asarray(g.normal(size=(c,)) * 0.1, jnp.float32)
+    x, mu, psi, om = l1_batchnorm_fwd(y, beta)
+    xr, mur, psir, omr = ref.batchnorm_l1_fwd(y, beta)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(xr), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(mur), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(psi), np.asarray(psir), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(om), np.asarray(omr), atol=1e-5, rtol=1e-5)
+
+
+def test_l1_bn_fwd_centering():
+    # output (minus beta) must have ~zero batch mean per channel
+    g = rng(11)
+    y = jnp.asarray(g.normal(size=(128, 16)) * 5 + 2, jnp.float32)
+    beta = jnp.zeros((16,))
+    x, _, _, _ = l1_batchnorm_fwd(y, beta)
+    np.testing.assert_allclose(np.asarray(jnp.mean(x, 0)), 0.0, atol=1e-4)
+
+
+def test_l1_bn_fwd_scale_invariant_shape():
+    # psi is the mean absolute deviation: scaling y scales psi
+    g = rng(12)
+    y = jnp.asarray(g.normal(size=(64, 8)), jnp.float32)
+    beta = jnp.zeros((8,))
+    _, _, psi1, _ = l1_batchnorm_fwd(y, beta)
+    _, _, psi2, _ = l1_batchnorm_fwd(y * 10.0, beta)
+    np.testing.assert_allclose(np.asarray(psi2), np.asarray(psi1) * 10, rtol=1e-3)
+
+
+def test_l1_bn_fwd_beta_shifts_output():
+    g = rng(13)
+    y = jnp.asarray(g.normal(size=(32, 4)), jnp.float32)
+    x0, _, _, _ = l1_batchnorm_fwd(y, jnp.zeros((4,)))
+    x1, _, _, _ = l1_batchnorm_fwd(y, jnp.full((4,), 0.5))
+    np.testing.assert_allclose(np.asarray(x1 - x0), 0.5, atol=1e-5)
+
+
+# --------------------------------------------------- proposed BN bwd
+
+@given(
+    b=st.integers(2, 64),
+    c=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_bn_backward_proposed_matches_ref(b, c, seed):
+    g = rng(seed)
+    dx = jnp.asarray(g.normal(size=(b, c)), jnp.float32)
+    xhat = ref.sign(jnp.asarray(g.normal(size=(b, c)), jnp.float32))
+    omega = jnp.asarray(np.abs(g.normal(size=(c,))) + 0.1, jnp.float32)
+    psi = jnp.asarray(np.abs(g.normal(size=(c,))) + 0.1, jnp.float32)
+    dy, db = bn_backward_proposed(dx, xhat, omega, psi)
+    dyr, dbr = ref.batchnorm_proposed_bwd(dx, xhat, omega, psi)
+    np.testing.assert_allclose(np.asarray(dy), np.asarray(dyr), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(dbr), atol=1e-4, rtol=1e-5)
+
+
+def test_bn_backward_dbeta_is_colsum():
+    g = rng(21)
+    dx = jnp.asarray(g.normal(size=(16, 8)), jnp.float32)
+    xhat = jnp.ones((16, 8))
+    _, db = bn_backward_proposed(dx, xhat, jnp.ones((8,)), jnp.ones((8,)))
+    np.testing.assert_allclose(np.asarray(db), np.asarray(jnp.sum(dx, 0)), atol=1e-5)
+
+
+def test_bn_backward_psi_scales_inverse():
+    g = rng(22)
+    dx = jnp.asarray(g.normal(size=(16, 8)), jnp.float32)
+    xhat = ref.sign(jnp.asarray(g.normal(size=(16, 8)), jnp.float32))
+    om = jnp.ones((8,))
+    dy1, _ = bn_backward_proposed(dx, xhat, om, jnp.ones((8,)))
+    dy2, _ = bn_backward_proposed(dx, xhat, om, jnp.full((8,), 2.0))
+    np.testing.assert_allclose(np.asarray(dy2), np.asarray(dy1) / 2, atol=1e-5)
+
+
+# ---------------------------------- approximation-quality properties
+
+def test_proposed_bwd_approximates_l1_bwd_when_mean_zero():
+    """DESIGN.md invariant: for mu(x) ~ 0 the proposed backward is
+    close to Eq. (1)'s exact l1 backward (the paper's derivation)."""
+    g = rng(33)
+    b, c = 512, 16
+    y = jnp.asarray(g.normal(size=(b, c)), jnp.float32)
+    beta = jnp.zeros((c,))
+    x, mu, psi, om = ref.batchnorm_l1_fwd(y, beta)
+    dx = jnp.asarray(g.normal(size=(b, c)), jnp.float32)
+
+    dy_l1, _ = ref.batchnorm_l1_bwd(dx, x, beta, psi)
+    dy_prop, _ = ref.batchnorm_proposed_bwd(dx, ref.sign(x), om, psi)
+    # cosine similarity of gradient directions must be high
+    a = np.asarray(dy_l1).ravel()
+    p = np.asarray(dy_prop).ravel()
+    cos = a @ p / (np.linalg.norm(a) * np.linalg.norm(p) + 1e-12)
+    assert cos > 0.95, cos
+
+
+def test_wgrad_binarize_and_attenuate():
+    g = rng(40)
+    dw = jnp.asarray(g.normal(size=(64, 32)), jnp.float32)
+    dwh = ref.binarize_wgrad(dw)
+    assert set(np.unique(np.asarray(dwh))) <= {-1.0, 1.0}
+    att = ref.attenuate_wgrad(dwh, 64)
+    np.testing.assert_allclose(np.abs(np.asarray(att)), 1 / np.sqrt(64), rtol=1e-6)

@@ -1,0 +1,184 @@
+"""Train-step assembly: optimizer updates, learning dynamics per
+(model, algo, optimizer) variant, flat-wrapper I/O contract, and
+hypothesis sweeps over batch/width."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layers as L
+from compile import models as M
+from compile import train_step as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def toy_data(key, spec, n):
+    k1, k2, k3 = jax.random.split(key, 3)
+    protos = jax.random.normal(k1, (spec.classes,) + spec.input_shape)
+    lbl = jax.random.randint(k2, (n,), 0, spec.classes)
+    x = protos[lbl] + 0.4 * jax.random.normal(k3, (n,) + spec.input_shape)
+    return x, jax.nn.one_hot(lbl, spec.classes), lbl
+
+
+def train_n(spec, cfg, optimizer, steps, batch=64, lr=0.003, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(spec, key)
+    if optimizer == "bop":
+        params = T.init_bop_weights(params)
+    opt = T.init_opt_state(spec, optimizer)
+    step = jax.jit(T.make_train_step(spec, cfg, optimizer))
+    x, y, _ = toy_data(key, spec, batch)
+    losses = []
+    for _ in range(steps):
+        params, opt, loss, acc = step(params, opt, x, y, jnp.float32(lr))
+        losses.append(float(loss))
+    return params, losses, float(acc)
+
+
+class TestLearningDynamics:
+    @pytest.mark.parametrize("optimizer", ["adam", "sgd", "bop"])
+    def test_mlp_learns_with_each_optimizer(self, optimizer):
+        spec = M.mlp_mini()
+        cfg = L.TrainConfig.proposed()
+        lr = {"adam": 0.003, "sgd": 0.05, "bop": 0.001}[optimizer]
+        _, losses, _ = train_n(spec, cfg, optimizer, 40, lr=lr)
+        assert losses[-1] < losses[0] * 0.8, (losses[0], losses[-1])
+
+    @pytest.mark.parametrize(
+        "algo", ["standard", "f16", "boolgrad_l2", "boolgrad_l1",
+                 "proposed", "nn_standard", "nn_proposed"]
+    )
+    def test_every_ablation_learns(self, algo):
+        spec = M.mlp_mini()
+        cfg = L.TrainConfig.ablation(algo)
+        _, losses, _ = train_n(spec, cfg, "adam", 40)
+        assert losses[-1] < losses[0] * 0.85, (algo, losses[0], losses[-1])
+
+    def test_weights_stay_clipped(self):
+        spec = M.mlp_mini()
+        cfg = L.TrainConfig.proposed()
+        params, _, _ = train_n(spec, cfg, "adam", 20, lr=0.1)
+        for i in range(0, len(params), 2):
+            assert float(jnp.max(jnp.abs(params[i]))) <= 1.0
+
+    def test_bop_weights_stay_binary(self):
+        spec = M.mlp_mini()
+        cfg = L.TrainConfig.proposed()
+        params, _, _ = train_n(spec, cfg, "bop", 15)
+        for i in range(0, len(params), 2):
+            vals = set(np.unique(np.asarray(params[i])))
+            assert vals <= {-1.0, 1.0}, vals
+
+
+class TestOptStateLayout:
+    def test_adam_state_size(self):
+        spec = M.mlp_mini()
+        shapes = T.opt_state_shapes(spec, "adam")
+        nparams = 2 * spec.num_param_layers()
+        assert len(shapes) == 1 + 2 * nparams
+        assert shapes[0] == ()
+
+    def test_sgd_state_size(self):
+        spec = M.mlp_mini()
+        assert len(T.opt_state_shapes(spec, "sgd")) == 2 * spec.num_param_layers()
+
+    def test_bop_state_size(self):
+        spec = M.mlp_mini()
+        n = spec.num_param_layers()
+        assert len(T.opt_state_shapes(spec, "bop")) == n + 1 + 2 * n
+
+    def test_unknown_optimizer(self):
+        with pytest.raises(ValueError):
+            T.opt_state_shapes(M.mlp_mini(), "rmsprop")
+
+
+class TestFlatWrappers:
+    def test_flat_train_roundtrip(self):
+        spec = M.mlp_mini()
+        cfg = L.TrainConfig.proposed()
+        flat, nparams, nopt = T.make_flat_train_step(spec, cfg, "adam")
+        key = jax.random.PRNGKey(0)
+        params = M.init_params(spec, key)
+        opt = T.init_opt_state(spec, "adam")
+        x, y, _ = toy_data(key, spec, 16)
+        outs = flat(*params, *opt, x, y, jnp.float32(0.001))
+        assert len(outs) == nparams + nopt + 2
+        # output shapes mirror input shapes positionally
+        for got, want in zip(outs, params + opt):
+            assert got.shape == want.shape
+
+    def test_flat_eval(self):
+        spec = M.mlp_mini()
+        cfg = L.TrainConfig.proposed()
+        flat, nparams = T.make_flat_eval_step(spec, cfg)
+        key = jax.random.PRNGKey(0)
+        params = M.init_params(spec, key)
+        x, y, _ = toy_data(key, spec, 16)
+        loss, acc = flat(*params, x, y)
+        assert loss.shape == () and acc.shape == ()
+        assert 0.0 <= float(acc) <= 1.0
+
+    def test_eval_is_pure(self):
+        spec = M.mlp_mini()
+        cfg = L.TrainConfig.proposed()
+        flat, _ = T.make_flat_eval_step(spec, cfg)
+        key = jax.random.PRNGKey(1)
+        params = M.init_params(spec, key)
+        x, y, _ = toy_data(key, spec, 16)
+        a = flat(*params, x, y)
+        b = flat(*params, x, y)
+        assert float(a[0]) == float(b[0])
+
+
+@given(
+    batch=st.sampled_from([1, 2, 8, 32]),
+    hidden=st.sampled_from([16, 48, 64]),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=8, deadline=None)
+def test_step_runs_across_shapes(batch, hidden, seed):
+    """Hypothesis sweep: the full proposed step traces and runs for
+    arbitrary batch/width combinations with finite outputs."""
+    spec = M.mlp(name="t", inp=32, hidden=hidden, depth=3, classes=5)
+    cfg = L.TrainConfig.proposed()
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(spec, key)
+    opt = T.init_opt_state(spec, "adam")
+    step = T.make_train_step(spec, cfg, "adam")
+    x, y, _ = toy_data(key, spec, batch)
+    params2, opt2, loss, acc = step(params, opt, x, y, jnp.float32(0.001))
+    assert np.isfinite(float(loss))
+    assert 0.0 <= float(acc) <= 1.0
+    for p in params2:
+        assert bool(jnp.all(jnp.isfinite(p)))
+
+
+class TestModelZoo:
+    @pytest.mark.parametrize("name", list(M.ZOO.keys()))
+    def test_init_and_forward(self, name):
+        spec = M.get_model(name)
+        key = jax.random.PRNGKey(0)
+        params = M.init_params(spec, key)
+        assert len(params) == 2 * spec.num_param_layers()
+        x = jax.random.normal(key, (2,) + spec.input_shape)
+        logits = M.apply_model(spec, L.TrainConfig.proposed(), params, x)
+        assert logits.shape == (2, spec.classes)
+
+    def test_resnete_vs_bireal_param_counts(self):
+        a = M.get_model("resnete_mini")
+        b = M.get_model("bireal_mini")
+        # ResNetE has 2 convs per skip: more param layers
+        assert a.num_param_layers() > b.num_param_layers()
+
+    def test_glorot_scale(self):
+        spec = M.mlp_mini()
+        params = M.init_params(spec, jax.random.PRNGKey(0))
+        w0 = np.asarray(params[0])
+        limit = np.sqrt(6.0 / (64 + 64))
+        assert np.abs(w0).max() <= limit + 1e-6
+        assert np.abs(w0).std() > 0.01

@@ -1,0 +1,58 @@
+//! Shared helpers for the paper-reproduction benches.
+//!
+//! Every `rust/benches/*.rs` target regenerates one table or figure
+//! of the paper; each prints the paper's value next to ours and
+//! writes the rendered table to `results/`.
+//!
+//! Accuracy runs are scaled (mini models, synthetic data, few epochs)
+//! — the *deltas and orderings* are the reproduction target, not
+//! absolute accuracy.  See DESIGN.md §Substitutions.
+
+#![allow(dead_code)]
+
+use bnn_edge::coordinator::{EngineKind, RunConfig, RunResult, Runner};
+
+/// Scaled run used by the accuracy benches (~70-90 HLO steps — BNNs
+/// converge more slowly than their NN references, so runs must be
+/// long enough for the binary nets to leave the noise floor).
+pub fn bench_cfg(model: &str, algo: &str, opt: &str, batch: usize) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        algo: algo.into(),
+        optimizer: opt.into(),
+        dataset: bnn_edge::config::dataset_for(model).into(),
+        batch,
+        epochs: 6,
+        n_train: 1200,
+        n_test: 400,
+        eval_every_steps: 12,
+        lr: if opt == "sgd" { 0.05 } else { 0.002 },
+        engine: EngineKind::Hlo,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+pub fn run(cfg: RunConfig) -> RunResult {
+    let label = format!(
+        "{} {} {} b{}",
+        cfg.model, cfg.algo, cfg.optimizer, cfg.batch
+    );
+    let t0 = std::time::Instant::now();
+    let mut runner = Runner::new(cfg).unwrap_or_else(|e| panic!("{label}: {e}"));
+    let r = runner.run().unwrap_or_else(|e| panic!("{label}: {e}"));
+    eprintln!(
+        "  [{label}] best acc {:.1}% in {:.1}s ({} steps)",
+        r.best_test_acc * 100.0,
+        t0.elapsed().as_secs_f64(),
+        r.steps
+    );
+    r
+}
+
+/// Print + persist a rendered section.
+pub fn emit(file: &str, md: &str) {
+    println!("{md}");
+    bnn_edge::report::write_section(format!("results/{file}"), md)
+        .expect("write results/");
+}

@@ -1,0 +1,62 @@
+//! Figs. 3/4 — validation-accuracy-vs-time curves for the Table 4
+//! configurations: the paper's convergence-rate claim ("no discernible
+//! change in convergence rate").
+//!
+//! Emits aligned curves (standard vs proposed) and a quantitative
+//! convergence check: steps to reach 90% of final accuracy must be
+//! comparable (within 1.5x) between the two algorithms.
+
+mod common;
+
+use bnn_edge::report::series_table;
+
+fn steps_to_frac(curve: &[(usize, f32)], frac: f32) -> usize {
+    let last = curve.last().map(|p| p.1).unwrap_or(0.0);
+    let target = last * frac;
+    curve
+        .iter()
+        .find(|(_, a)| *a >= target)
+        .map(|(s, _)| *s)
+        .unwrap_or(usize::MAX)
+}
+
+fn main() {
+    for (model, batch) in [("mlp_mini", 64), ("binarynet_mini", 100)] {
+        let mut curves = Vec::new();
+        for algo in ["standard", "proposed"] {
+            let mut cfg = common::bench_cfg(model, algo, "adam", batch);
+            cfg.eval_every_steps = 6;
+            cfg.epochs = 4;
+            cfg.metrics_path =
+                Some(format!("results/fig3_{model}_{algo}.jsonl").into());
+            let r = common::run(cfg);
+            curves.push((algo, r.metrics.val_curve()));
+        }
+        // align on step index
+        let steps: Vec<usize> = curves[0].1.iter().map(|p| p.0).collect();
+        let mut points = Vec::new();
+        for (i, &s) in steps.iter().enumerate() {
+            let ys = curves
+                .iter()
+                .map(|(_, c)| c.get(i).map(|p| p.1 as f64 * 100.0))
+                .collect();
+            points.push((s as f64, ys));
+        }
+        let md = series_table(
+            &format!("Fig. 3/4 — validation accuracy vs step, {model} (B={batch})"),
+            "step",
+            &["standard %", "proposed %"],
+            &points,
+            1,
+        );
+        common::emit(&format!("fig3_{model}.md"), &md);
+
+        let s_std = steps_to_frac(&curves[0].1, 0.9);
+        let s_prop = steps_to_frac(&curves[1].1, 0.9);
+        let ratio = s_prop as f64 / s_std.max(1) as f64;
+        println!(
+            "{model}: steps to 90%-of-final acc — std {s_std}, prop {s_prop} \
+             (ratio {ratio:.2}; paper: no discernible change)"
+        );
+    }
+}

@@ -1,0 +1,68 @@
+//! Fig. 6 — measured vs modeled memory for the naïve prototypes
+//! (MLP / MNIST-class data, Adam), across batch sizes.
+//!
+//! Paper: measured ≈ modeled with a ~5% constant process overhead
+//! plus a batch-correlated activation-copy overhead, far more
+//! pronounced for the standard algorithm (f32 copies vs bool).
+//! Measured here with the tracking global allocator: persistent
+//! engine state + peak transient growth during one training step.
+
+mod common;
+
+use bnn_edge::data::build;
+use bnn_edge::memmodel::{breakdown, DtypeConfig, Optimizer};
+use bnn_edge::memtrack;
+use bnn_edge::models::{get, lower};
+use bnn_edge::naive::{build_engine, Accel};
+use bnn_edge::report::series_table;
+use bnn_edge::util::MIB;
+
+#[global_allocator]
+static ALLOC: memtrack::TrackingAlloc = memtrack::TrackingAlloc;
+
+fn main() {
+    let g = lower(&get("mlp").unwrap()).unwrap();
+    let batches = [25usize, 50, 100, 200, 400];
+    let mut points = Vec::new();
+    for &b in &batches {
+        let ds = build("syn-mnist", b, 0, 1).unwrap();
+        let mut ys = Vec::new();
+        for algo in ["standard", "proposed"] {
+            let mut engine = build_engine(algo, &g, b, "adam", Accel::Naive, 1).unwrap();
+            engine.train_step(&ds.train_x, &ds.train_y, 0.001).unwrap();
+            let (_, stats) =
+                memtrack::measure(|| engine.train_step(&ds.train_x, &ds.train_y, 0.001));
+            let measured =
+                (stats.growth() + engine.state_bytes()) as f64 / MIB;
+            let modeled = breakdown(
+                &g,
+                b,
+                &DtypeConfig::ablation(algo).unwrap(),
+                Optimizer::Adam,
+            )
+            .total_bytes()
+                / MIB;
+            ys.push(Some(measured));
+            ys.push(Some(modeled));
+            ys.push(Some(measured / modeled));
+        }
+        points.push((b as f64, ys));
+    }
+    let md = series_table(
+        "Fig. 6 — measured (tracking allocator) vs modeled MiB, naive MLP prototypes",
+        "batch",
+        &[
+            "std measured",
+            "std modeled",
+            "std ratio",
+            "prop measured",
+            "prop modeled",
+            "prop ratio",
+        ],
+        &points,
+        2,
+    );
+    common::emit("fig6.md", &md);
+    println!("paper: measured/modeled ratios slightly above 1.0, growing with batch");
+    println!("       (activation-copy overhead), larger for the standard algorithm");
+}

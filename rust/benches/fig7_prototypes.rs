@@ -1,0 +1,123 @@
+//! Fig. 7 — embedded prototypes: measured peak memory vs training
+//! time per batch (a, b) and modeled energy per batch (c), for
+//!
+//!   naive-standard, naive-proposed     (direct loops — the paper's
+//!                                       naïve C++ prototypes)
+//!   blocked-standard, blocked-proposed (im2col + blocked GEMM — the
+//!                                       paper's CBLAS acceleration)
+//!   HLO/PJRT                           (the full-framework stand-in
+//!                                       for the paper's Keras row)
+//!
+//! Paper's shape: acceleration buys ~10× speed for 1.6-2.1× memory;
+//! the framework (Keras) is fastest but needs orders of magnitude
+//! more memory; proposed stays 2-4.5× smaller than standard at every
+//! point; energy savings are modest (1.02-1.18×).
+
+mod common;
+
+use bnn_edge::coordinator::{EngineKind, RunConfig, Runner};
+use bnn_edge::data::build;
+use bnn_edge::energy::step_cost;
+use bnn_edge::memmodel::DtypeConfig;
+use bnn_edge::memtrack;
+use bnn_edge::models::{get, lower};
+use bnn_edge::naive::{build_engine, Accel};
+use bnn_edge::util::bench::fmt_time;
+use bnn_edge::util::table::{Align, Table};
+use bnn_edge::util::MIB;
+
+#[global_allocator]
+static ALLOC: memtrack::TrackingAlloc = memtrack::TrackingAlloc;
+
+fn measure_engine(
+    model: &str,
+    algo: &str,
+    accel: Accel,
+    batch: usize,
+) -> (f64, f64) {
+    let g = lower(&get(model).unwrap()).unwrap();
+    let ds = build(bnn_edge::config::dataset_for(model), batch, 0, 1).unwrap();
+    let mut engine = build_engine(algo, &g, batch, "adam", accel, 1).unwrap();
+    engine.train_step(&ds.train_x, &ds.train_y, 0.001).unwrap();
+    let t0 = std::time::Instant::now();
+    let reps = 3;
+    let (_, stats) = memtrack::measure(|| {
+        for _ in 0..reps {
+            engine.train_step(&ds.train_x, &ds.train_y, 0.001).unwrap();
+        }
+    });
+    let time_per_batch = t0.elapsed().as_secs_f64() / reps as f64;
+    let mem = (stats.growth() + engine.state_bytes()) as f64 / MIB;
+    (mem, time_per_batch)
+}
+
+fn measure_hlo(model: &str, algo: &str, batch: usize) -> Option<(f64, f64)> {
+    let cfg = RunConfig {
+        model: model.into(),
+        algo: algo.into(),
+        dataset: bnn_edge::config::dataset_for(model).into(),
+        batch,
+        epochs: 1,
+        max_steps: Some(3),
+        n_train: batch * 4,
+        n_test: batch,
+        eval_every_steps: 1000,
+        engine: EngineKind::Hlo,
+        ..Default::default()
+    };
+    let mut runner = Runner::new(cfg).ok()?;
+    let ds = build(bnn_edge::config::dataset_for(model), batch, 0, 1).unwrap();
+    let eng = runner.engine_mut();
+    eng.train_step(&ds.train_x, &ds.train_y, 0.001).ok()?;
+    let t0 = std::time::Instant::now();
+    let (_, stats) = memtrack::measure(|| {
+        for _ in 0..3 {
+            eng.train_step(&ds.train_x, &ds.train_y, 0.001).unwrap();
+        }
+    });
+    let t = t0.elapsed().as_secs_f64() / 3.0;
+    // XLA allocates outside the rust allocator too; state_bytes is
+    // the rust-visible parameter footprint (the paper's Keras row is
+    // likewise dominated by framework overhead we cannot see — noted)
+    Some(((stats.growth() + eng.state_bytes()) as f64 / MIB, t))
+}
+
+fn main() {
+    for (model, batch) in [("mlp", 200), ("binarynet_mini", 40)] {
+        let mut t = Table::new(
+            &format!("Fig. 7 — {model} (B={batch}): memory vs time vs energy per batch"),
+            &["Implementation", "Peak MiB", "s/batch", "mJ/batch (modeled)"],
+        )
+        .align(0, Align::Left);
+        let g = lower(&get(model).unwrap()).unwrap();
+        for (label, algo, accel) in [
+            ("naive standard", "standard", Accel::Naive),
+            ("naive proposed", "proposed", Accel::Naive),
+            ("accel standard", "standard", Accel::Blocked),
+            ("accel proposed", "proposed", Accel::Blocked),
+        ] {
+            let (mem, time) = measure_engine(model, algo, accel, batch);
+            let dt = DtypeConfig::ablation(algo).unwrap();
+            let mj = step_cost(&g, batch, &dt, 2.0).energy_mj();
+            t.row(&[
+                label.to_string(),
+                format!("{mem:.2}"),
+                fmt_time(time),
+                format!("{mj:.2}"),
+            ]);
+        }
+        if let Some((mem, time)) = measure_hlo(model, "proposed", if model == "mlp" { 100 } else { 100 }) {
+            let dt = DtypeConfig::ablation("proposed").unwrap();
+            let mj = step_cost(&g, 100, &dt, 2.0).energy_mj();
+            t.row(&[
+                "XLA/PJRT framework (B=100)".to_string(),
+                format!("{mem:.2}+runtime"),
+                fmt_time(time),
+                format!("{mj:.2}"),
+            ]);
+        }
+        common::emit(&format!("fig7_{model}.md"), &t.to_markdown());
+    }
+    println!("paper: accel ~10x faster for 1.6-2.1x memory; proposed 2.2-4.5x");
+    println!("       smaller than standard; energy savings 1.02-1.18x");
+}

@@ -1,0 +1,78 @@
+//! §Perf microbenches — the L3 hot paths.
+//!
+//! XNOR-popcount GEMM (naive vs blocked) vs dense f32 GEMM at the
+//! paper's layer shapes, plus pack/transpose overheads and the naive
+//! engines' full step time.  Results feed EXPERIMENTS.md §Perf.
+
+mod common;
+
+use bnn_edge::bitops::{gemm, BitMatrix};
+use bnn_edge::data::build;
+use bnn_edge::models::{get, lower};
+use bnn_edge::naive::{build_engine, Accel};
+use bnn_edge::util::bench::{black_box, Bencher};
+use bnn_edge::util::rng::Pcg32;
+
+fn main() {
+    let mut bench = Bencher::default();
+    let mut g = Pcg32::new(1);
+
+    // BinaryNet fc1-class GEMM: (100 x 8192) @ (8192 x 1024)
+    // and a conv-class GEMM: (6400 x 1152) @ (1152 x 128)
+    for (m, k, n, label) in [
+        (100, 8192, 1024, "fc1 100x8192x1024"),
+        (512, 1152, 128, "conv 512x1152x128"),
+    ] {
+        let a = g.normal_vec(m * k);
+        let b = g.normal_vec(n * k); // already transposed layout
+        let ap = BitMatrix::pack(m, k, &a);
+        let btp = BitMatrix::pack(n, k, &b);
+        let mut out = vec![0.0f32; m * n];
+
+        bench.bench(&format!("xnor_naive   {label}"), || {
+            gemm::xnor_gemm_naive(&ap, &btp, &mut out);
+            black_box(out[0]);
+        });
+        bench.bench(&format!("xnor_blocked {label}"), || {
+            gemm::xnor_gemm(&ap, &btp, &mut out);
+            black_box(out[0]);
+        });
+        // dense f32 comparison (what the standard engine pays)
+        let bt = g.normal_vec(k * n);
+        bench.bench(&format!("f32_blocked  {label}"), || {
+            gemm::gemm_f32(m, k, n, &a, &bt, &mut out);
+            black_box(out[0]);
+        });
+        let ops = 2.0 * (m * k * n) as f64;
+        let r = bench.results();
+        let tx = r[r.len() - 2].median_s();
+        let tf = r[r.len() - 1].median_s();
+        println!(
+            "  -> xnor {:.2} Gop/s, f32 {:.2} GFLOP/s, xnor speedup {:.1}x",
+            ops / tx / 1e9,
+            ops / tf / 1e9,
+            tf / tx
+        );
+    }
+
+    // pack/unpack overhead (the energy model's E_PACK term)
+    let xs = g.normal_vec(100 * 8192);
+    bench.bench("pack 100x8192", || {
+        black_box(BitMatrix::pack(100, 8192, &xs));
+    });
+
+    // full naive-engine step times (Fig. 7's time axis)
+    for (model, batch) in [("mlp", 100), ("binarynet_mini", 32)] {
+        let graph = lower(&get(model).unwrap()).unwrap();
+        let ds = build(bnn_edge::config::dataset_for(model), batch, 0, 1).unwrap();
+        for (algo, accel, label) in [
+            ("standard", Accel::Blocked, "blocked std"),
+            ("proposed", Accel::Blocked, "blocked prop"),
+        ] {
+            let mut e = build_engine(algo, &graph, batch, "adam", accel, 1).unwrap();
+            bench.bench(&format!("step {label} {model} b{batch}"), || {
+                e.train_step(&ds.train_x, &ds.train_y, 0.001).unwrap();
+            });
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! Table 4 — accuracy + modeled memory for the model/dataset grid,
+//! standard vs proposed (Adam, B=100).
+//!
+//! Paper: Δacc within [−2.1, +0.4] pp; memory 2.78–4.17×, geomean
+//! 3.67×.  Reproduction target: small accuracy deltas (|Δ| ≲ few pp)
+//! with the same memory factors (full-scale models).
+
+mod common;
+
+use bnn_edge::memmodel::{breakdown, DtypeConfig, Optimizer};
+use bnn_edge::models::{get, lower};
+use bnn_edge::report::{acc_table, AccRow};
+use bnn_edge::util::stats::geomean;
+use bnn_edge::util::MIB;
+
+fn main() {
+    // (mini model for accuracy, full model for paper-scale memory,
+    //  dataset, paper std/prop MiB)
+    let grid = [
+        ("mlp_mini", "mlp", "syn-mnist64", 7.40, 2.65),
+        ("cnv_mini", "cnv", "syn-cifar16", 134.05, 32.16),
+        ("cnv_mini", "cnv", "syn-svhn16", 134.05, 32.16),
+        ("binarynet_mini", "binarynet", "syn-cifar16", 512.81, 138.15),
+        ("binarynet_mini", "binarynet", "syn-svhn16", 512.81, 138.15),
+    ];
+    let mut rows = Vec::new();
+    let mut factors = Vec::new();
+    for (mini, full, ds, paper_std, paper_prop) in grid {
+        let batch = if mini == "mlp_mini" { 64 } else { 100 };
+        let mut cstd = common::bench_cfg(mini, "standard", "adam", batch);
+        cstd.dataset = ds.into();
+        let mut cprop = common::bench_cfg(mini, "proposed", "adam", batch);
+        cprop.dataset = ds.into();
+        let rstd = common::run(cstd);
+        let rprop = common::run(cprop);
+
+        let g = lower(&get(full).unwrap()).unwrap();
+        let smib =
+            breakdown(&g, 100, &DtypeConfig::standard(), Optimizer::Adam).total_bytes() / MIB;
+        let pmib =
+            breakdown(&g, 100, &DtypeConfig::proposed(), Optimizer::Adam).total_bytes() / MIB;
+        factors.push(smib / pmib);
+        rows.push(AccRow {
+            label: format!("{full}/{ds} standard (paper {paper_std} MiB)"),
+            baseline_acc: rstd.best_test_acc,
+            acc: rstd.best_test_acc,
+            mib: Some(smib),
+            mib_factor: None,
+        });
+        rows.push(AccRow {
+            label: format!("{full}/{ds} proposed (paper {paper_prop} MiB)"),
+            baseline_acc: rstd.best_test_acc,
+            acc: rprop.best_test_acc,
+            mib: Some(pmib),
+            mib_factor: Some(smib / pmib),
+        });
+    }
+    let md = acc_table("Table 4 — accuracy and modeled memory, std vs proposed", &rows);
+    common::emit("table4.md", &md);
+    println!(
+        "geomean memory reduction: ours {:.2}x (paper 3.67x)",
+        geomean(&factors)
+    );
+}

@@ -1,0 +1,233 @@
+//! XNOR-popcount GEMM kernels.
+//!
+//! `xnor_gemm_naive` — straight triple loop over packed words: the
+//! paper's naïve C++ prototype equivalent.
+//!
+//! `xnor_gemm` — register-blocked 1×4 micro-kernel over the packed K
+//! axis: the "CBLAS-accelerated" path of Fig. 7 (memory-for-speed:
+//! it wants `b` pre-transposed, which the engine caches per step).
+//!
+//! Both compute `out[m][n] = Σ_k a[m,k]·b[k,n]` over ±1 values where
+//! `b_t` is the transposed packed B (rows = N, cols = K).  Zero tail
+//! bits in both operands XOR to 0, so `k − 2·popcount(xor)` is exact
+//! with no padding correction.
+
+use super::BitMatrix;
+
+/// Naive packed GEMM: out (m×n) f32 = a (m×k ±1) @ b (k×n ±1),
+/// with `b_t` packed transposed (n rows of k bits).
+pub fn xnor_gemm_naive(a: &BitMatrix, b_t: &BitMatrix, out: &mut [f32]) {
+    assert_eq!(a.cols, b_t.cols, "K mismatch");
+    let (m, n, k) = (a.rows, b_t.rows, a.cols);
+    assert_eq!(out.len(), m * n);
+    // Zero-padded tail bits XOR to 0 in both operands (a "match"),
+    // so dot = k_padded - 2*mismatch - pad = k - 2*mismatch exactly.
+    for i in 0..m {
+        let ar = a.row_words(i);
+        for j in 0..n {
+            let br = b_t.row_words(j);
+            let mut mismatch = 0u32;
+            for w in 0..ar.len() {
+                mismatch += (ar[w] ^ br[w]).count_ones();
+            }
+            out[i * n + j] = (k as i64 - 2 * mismatch as i64) as f32;
+        }
+    }
+}
+
+/// Blocked packed GEMM: 1×4 N-unrolled micro-kernel; ~3-4× the naive
+/// throughput at BinaryNet sizes (see benches/perf log).
+pub fn xnor_gemm(a: &BitMatrix, b_t: &BitMatrix, out: &mut [f32]) {
+    assert_eq!(a.cols, b_t.cols, "K mismatch");
+    let (m, n, k) = (a.rows, b_t.rows, a.cols);
+    assert_eq!(out.len(), m * n);
+    let kw = a.words_per_row;
+    let n4 = n - n % 4;
+
+    for i in 0..m {
+        let ar = a.row_words(i);
+        let orow = &mut out[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j < n4 {
+            let b0 = &b_t.data[j * kw..(j + 1) * kw];
+            let b1 = &b_t.data[(j + 1) * kw..(j + 2) * kw];
+            let b2 = &b_t.data[(j + 2) * kw..(j + 3) * kw];
+            let b3 = &b_t.data[(j + 3) * kw..(j + 4) * kw];
+            let (mut c0, mut c1, mut c2, mut c3) = (0u64, 0u64, 0u64, 0u64);
+            for w in 0..kw {
+                let aw = ar[w];
+                c0 += (aw ^ b0[w]).count_ones() as u64;
+                c1 += (aw ^ b1[w]).count_ones() as u64;
+                c2 += (aw ^ b2[w]).count_ones() as u64;
+                c3 += (aw ^ b3[w]).count_ones() as u64;
+            }
+            let kk = k as i64;
+            orow[j] = (kk - 2 * c0 as i64) as f32;
+            orow[j + 1] = (kk - 2 * c1 as i64) as f32;
+            orow[j + 2] = (kk - 2 * c2 as i64) as f32;
+            orow[j + 3] = (kk - 2 * c3 as i64) as f32;
+            j += 4;
+        }
+        while j < n {
+            let br = b_t.row_words(j);
+            let mut c = 0u64;
+            for w in 0..kw {
+                c += (ar[w] ^ br[w]).count_ones() as u64;
+            }
+            orow[j] = (k as i64 - 2 * c as i64) as f32;
+            j += 1;
+        }
+    }
+}
+
+/// f32 reference GEMM (the standard engine's compute): out = a @ b,
+/// both dense row-major.  Simple ikj loop — cache-friendly enough for
+/// the mini models; the blocked variant below is the accelerated path.
+pub fn gemm_f32_naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Cache-blocked f32 GEMM (the "CBLAS" stand-in for the standard
+/// engine): ikj with 64×256 K×N tiling.
+pub fn gemm_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    const KB: usize = 64;
+    const NB: usize = 256;
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    let mut k0 = 0;
+    while k0 < k {
+        let kend = (k0 + KB).min(k);
+        let mut n0 = 0;
+        while n0 < n {
+            let nend = (n0 + NB).min(n);
+            for i in 0..m {
+                let orow = &mut out[i * n + n0..i * n + nend];
+                for kk in k0..kend {
+                    let av = a[i * k + kk];
+                    let brow = &b[kk * n + n0..kk * n + nend];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            n0 = nend;
+        }
+        k0 = kend;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn ref_pm1(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let sgn = |x: f32| if x >= 0.0 { 1.0 } else { -1.0f32 };
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += sgn(a[i * k + kk]) * sgn(b[kk * n + j]);
+                }
+                out[i * n + j] = s;
+            }
+        }
+        out
+    }
+
+    fn pack_b_t(k: usize, n: usize, b: &[f32]) -> BitMatrix {
+        // transpose b (k×n) into (n×k) then pack
+        let mut bt = vec![0.0f32; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b[kk * n + j];
+            }
+        }
+        BitMatrix::pack(n, k, &bt)
+    }
+
+    #[test]
+    fn xnor_matches_reference_odd_shapes() {
+        let mut g = Pcg32::new(3);
+        for (m, k, n) in [(1, 1, 1), (3, 64, 5), (4, 65, 7), (5, 200, 9), (8, 127, 4)] {
+            let a = g.normal_vec(m * k);
+            let b = g.normal_vec(k * n);
+            let want = ref_pm1(m, k, n, &a, &b);
+            let ap = BitMatrix::pack(m, k, &a);
+            let btp = pack_b_t(k, n, &b);
+            let mut naive = vec![0.0; m * n];
+            let mut blocked = vec![0.0; m * n];
+            xnor_gemm_naive(&ap, &btp, &mut naive);
+            xnor_gemm(&ap, &btp, &mut blocked);
+            assert_eq!(naive, want, "naive {m}x{k}x{n}");
+            assert_eq!(blocked, want, "blocked {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn xnor_extremes() {
+        // all +1 . all +1 = k; all +1 . all -1 = -k
+        let k = 70;
+        let a = BitMatrix::pack(1, k, &vec![1.0; k]);
+        let bp = BitMatrix::pack(1, k, &vec![1.0; k]);
+        let bn = BitMatrix::pack(1, k, &vec![-1.0; k]);
+        let mut out = vec![0.0; 1];
+        xnor_gemm(&a, &bp, &mut out);
+        assert_eq!(out[0], k as f32);
+        xnor_gemm(&a, &bn, &mut out);
+        assert_eq!(out[0], -(k as f32));
+    }
+
+    #[test]
+    fn f32_gemms_agree() {
+        let mut g = Pcg32::new(4);
+        for (m, k, n) in [(3, 5, 7), (16, 64, 33), (10, 100, 257)] {
+            let a = g.normal_vec(m * k);
+            let b = g.normal_vec(k * n);
+            let mut x = vec![0.0; m * n];
+            let mut y = vec![0.0; m * n];
+            gemm_f32_naive(m, k, n, &a, &b, &mut x);
+            gemm_f32(m, k, n, &a, &b, &mut y);
+            for i in 0..x.len() {
+                assert!((x[i] - y[i]).abs() < 1e-3, "{i}: {} vs {}", x[i], y[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_identity() {
+        // A @ I = A
+        let m = 4;
+        let k = 8;
+        let mut g = Pcg32::new(5);
+        let a = g.normal_vec(m * k);
+        let mut eye = vec![0.0f32; k * k];
+        for i in 0..k {
+            eye[i * k + i] = 1.0;
+        }
+        let mut out = vec![0.0; m * k];
+        gemm_f32(m, k, k, &a, &eye, &mut out);
+        for i in 0..a.len() {
+            assert!((out[i] - a[i]).abs() < 1e-6);
+        }
+    }
+}

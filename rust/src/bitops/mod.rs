@@ -1,0 +1,211 @@
+//! Bit-packing substrate: the XNOR-popcount GEMM of BNN training.
+//!
+//! Binary tensors are packed 64 values/word (bit = 1 ⇔ +1).  The dot
+//! product of two ±1 vectors of length k is
+//!
+//! ```text
+//! dot = k − 2·popcount(a XOR b)
+//! ```
+//!
+//! — one `xor` + one `popcnt` per 64 elements, the arithmetic the
+//! paper's inference-side literature (FINN et al.) builds on and what
+//! our proposed-scheme naive engine uses for both storage (32× smaller
+//! activations) and compute.  The blocked variant is the "CBLAS"
+//! accelerated path of Fig. 7; `xnor_gemm_naive` is the paper's naïve
+//! prototype.
+
+pub mod gemm;
+
+pub use gemm::{xnor_gemm, xnor_gemm_naive};
+
+/// A bit-packed ±1 matrix, row-major, rows padded to whole u64 words.
+/// Bit set ⇔ +1; zero-padded tail bits are corrected for in the GEMM.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub words_per_row: usize,
+    pub data: Vec<u64>,
+}
+
+impl BitMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> BitMatrix {
+        let wpr = cols.div_ceil(64);
+        BitMatrix { rows, cols, words_per_row: wpr, data: vec![0; rows * wpr] }
+    }
+
+    /// Pack the signs of an f32 row-major matrix (x ≥ 0 ⇔ +1, the
+    /// paper's sgn with sgn(0) = +1).
+    pub fn pack(rows: usize, cols: usize, xs: &[f32]) -> BitMatrix {
+        assert_eq!(xs.len(), rows * cols);
+        let mut m = BitMatrix::zeros(rows, cols);
+        for r in 0..rows {
+            let row = &xs[r * cols..(r + 1) * cols];
+            let base = r * m.words_per_row;
+            for (c, &v) in row.iter().enumerate() {
+                if v >= 0.0 {
+                    m.data[base + (c >> 6)] |= 1u64 << (c & 63);
+                }
+            }
+        }
+        m
+    }
+
+    /// Unpack to ±1 f32.
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut out = vec![-1.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            let base = r * self.words_per_row;
+            for c in 0..self.cols {
+                if self.data[base + (c >> 6)] >> (c & 63) & 1 == 1 {
+                    out[r * self.cols + c] = 1.0;
+                }
+            }
+        }
+        out
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        if self.data[r * self.words_per_row + (c >> 6)] >> (c & 63) & 1 == 1 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    #[inline]
+    pub fn row_words(&self, r: usize) -> &[u64] {
+        &self.data[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// Pack the signs of an f16-bit-pattern matrix (k rows × n cols,
+    /// row-major) directly into the *transposed* (n × k) layout the
+    /// XNOR GEMM wants — no f32 materialization, no separate
+    /// transpose pass (§Perf: saves ~30% of the proposed forward).
+    /// Sign convention matches `pack`: x >= 0 ⇔ +1, and -0.0 ⇔ +1.
+    pub fn pack_f16_t(f16_bits: &[u16], k: usize, n: usize) -> BitMatrix {
+        assert_eq!(f16_bits.len(), k * n);
+        let mut m = BitMatrix::zeros(n, k);
+        for kk in 0..k {
+            let row = &f16_bits[kk * n..(kk + 1) * n];
+            for (j, &h) in row.iter().enumerate() {
+                // +1 unless strictly negative (sign bit set, nonzero)
+                if h >> 15 == 0 || h & 0x7fff == 0 {
+                    m.data[j * m.words_per_row + (kk >> 6)] |= 1u64 << (kk & 63);
+                }
+            }
+        }
+        m
+    }
+
+    /// Transpose (used to lay out W column-major for the GEMM).
+    pub fn transpose(&self) -> BitMatrix {
+        let mut t = BitMatrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            let base = r * self.words_per_row;
+            for c in 0..self.cols {
+                if self.data[base + (c >> 6)] >> (c & 63) & 1 == 1 {
+                    t.data[c * t.words_per_row + (r >> 6)] |= 1u64 << (r & 63);
+                }
+            }
+        }
+        t
+    }
+
+    /// Heap bytes (what the tracking allocator will see).
+    pub fn heap_bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+/// Pack a boolean mask (true ⇔ keep) — STE / pooling masks, 1 bit each.
+#[derive(Clone, Debug)]
+pub struct BitMask {
+    pub len: usize,
+    pub data: Vec<u64>,
+}
+
+impl BitMask {
+    pub fn from_bools<I: IntoIterator<Item = bool>>(len: usize, it: I) -> BitMask {
+        let mut m = BitMask { len, data: vec![0; len.div_ceil(64)] };
+        for (i, b) in it.into_iter().enumerate() {
+            if b {
+                m.data[i >> 6] |= 1 << (i & 63);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.data[i >> 6] >> (i & 63) & 1 == 1
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.data.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut g = Pcg32::new(1);
+        for (r, c) in [(1, 1), (3, 64), (5, 65), (7, 130), (16, 100)] {
+            let xs = g.normal_vec(r * c);
+            let m = BitMatrix::pack(r, c, &xs);
+            let u = m.unpack();
+            for i in 0..xs.len() {
+                assert_eq!(u[i], if xs[i] >= 0.0 { 1.0 } else { -1.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn sign_zero_is_plus_one() {
+        // NB: -0.0 >= 0.0 is true in IEEE, so both zeros pack to +1 —
+        // matching jnp.where(x >= 0, 1, -1).
+        let m = BitMatrix::pack(1, 3, &[0.0, -0.0, -1.0]);
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(0, 1), 1.0);
+        assert_eq!(m.get(0, 2), -1.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut g = Pcg32::new(2);
+        let xs = g.normal_vec(9 * 70);
+        let m = BitMatrix::pack(9, 70, &xs);
+        assert_eq!(m.transpose().transpose(), m);
+        let t = m.transpose();
+        for r in 0..9 {
+            for c in 0..70 {
+                assert_eq!(m.get(r, c), t.get(c, r));
+            }
+        }
+    }
+
+    #[test]
+    fn storage_is_32x_smaller() {
+        let m = BitMatrix::pack(100, 1024, &vec![1.0; 100 * 1024]);
+        assert_eq!(m.heap_bytes(), 100 * 1024 / 8);
+        assert_eq!(100 * 1024 * 4 / m.heap_bytes(), 32);
+    }
+
+    #[test]
+    fn bitmask_basics() {
+        let m = BitMask::from_bools(130, (0..130).map(|i| i % 3 == 0));
+        assert!(m.get(0) && m.get(3) && !m.get(1));
+        assert_eq!(m.count_ones(), (0..130).filter(|i| i % 3 == 0).count());
+    }
+}

@@ -1,0 +1,210 @@
+//! Experiment presets: every table/figure of the paper as a list of
+//! runnable configurations (the benches iterate these), plus JSON
+//! config-file loading for user-defined runs.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{EngineKind, RunConfig};
+use crate::util::json::Json;
+
+/// A preset: named experiment → the runs that regenerate it.
+pub struct Preset {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub runs: Vec<RunConfig>,
+}
+
+fn base(model: &str, algo: &str, opt: &str, dataset: &str, batch: usize) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        algo: algo.into(),
+        optimizer: opt.into(),
+        dataset: dataset.into(),
+        batch,
+        epochs: 3,
+        n_train: 2000,
+        n_test: 400,
+        eval_every_steps: 10,
+        engine: EngineKind::Hlo,
+        ..Default::default()
+    }
+}
+
+/// Dataset each benchmark model trains on (mini surrogates).
+pub fn dataset_for(model: &str) -> &'static str {
+    match model {
+        "mlp" => "syn-mnist",
+        "mlp_mini" => "syn-mnist64",
+        "cnv_mini" | "binarynet_mini" => "syn-cifar16",
+        "resnete_mini" | "bireal_mini" => "syn-imagenet16",
+        _ => "syn-cifar16",
+    }
+}
+
+pub fn preset(name: &str) -> Result<Preset> {
+    Ok(match name {
+        // Table 3/4: std vs proposed per model/dataset pair
+        "table34" => Preset {
+            name: "table34",
+            description: "Tables 3-4: accuracy std vs proposed across models",
+            runs: {
+                let mut v = Vec::new();
+                for (model, ds) in [
+                    ("mlp_mini", "syn-mnist64"),
+                    ("cnv_mini", "syn-cifar16"),
+                    ("cnv_mini", "syn-svhn16"),
+                    ("binarynet_mini", "syn-cifar16"),
+                    ("binarynet_mini", "syn-svhn16"),
+                ] {
+                    for algo in ["standard", "proposed"] {
+                        let mut c = base(model, algo, "adam", ds, if model == "mlp_mini" { 64 } else { 100 });
+                        c.epochs = 4;
+                        v.push(c);
+                    }
+                }
+                v
+            },
+        },
+        // Table 5: ablation x optimizer on BinaryNet-mini
+        "table5" => Preset {
+            name: "table5",
+            description: "Table 5: data-representation ablation x optimizer",
+            runs: {
+                let mut v = Vec::new();
+                for opt in ["adam", "sgd", "bop"] {
+                    for algo in
+                        ["standard", "f16", "boolgrad_l2", "boolgrad_l1", "proposed"]
+                    {
+                        let mut c =
+                            base("binarynet_mini", algo, opt, "syn-cifar16", 100);
+                        c.lr = if opt == "sgd" { 0.1 } else { 0.001 };
+                        c.epochs = 3;
+                        v.push(c);
+                    }
+                }
+                v
+            },
+        },
+        // Table 6: residual minis, per-approximation
+        "table6" => Preset {
+            name: "table6",
+            description: "Table 6: ResNetE/Bi-Real per-approximation accuracy",
+            runs: {
+                let mut v = Vec::new();
+                for model in ["resnete_mini", "bireal_mini"] {
+                    for algo in
+                        ["standard", "f16", "boolgrad_l2", "boolgrad_l1", "proposed"]
+                    {
+                        let mut c = base(model, algo, "adam", "syn-imagenet16", 64);
+                        c.epochs = 3;
+                        v.push(c);
+                    }
+                }
+                v
+            },
+        },
+        // Fig 2: batch sweep
+        "fig2" => Preset {
+            name: "fig2",
+            description: "Fig. 2: batch size vs accuracy/memory per optimizer",
+            runs: {
+                let mut v = Vec::new();
+                for opt in ["adam", "sgd", "bop"] {
+                    for algo in ["standard", "proposed"] {
+                        for b in [16usize, 64, 256] {
+                            let mut c =
+                                base("binarynet_mini", algo, opt, "syn-cifar16", b);
+                            c.lr = if opt == "sgd" { 0.1 } else { 0.001 };
+                            c.epochs = 2;
+                            v.push(c);
+                        }
+                    }
+                }
+                v
+            },
+        },
+        _ => return Err(anyhow!("unknown preset '{name}'")),
+    })
+}
+
+/// Parse a user config file: `{"runs": [{...RunConfig fields...}]}`.
+pub fn from_json(text: &str) -> Result<Vec<RunConfig>> {
+    let j = Json::parse(text)?;
+    let runs = j.req("runs")?.as_arr()?;
+    runs.iter().map(run_from_json).collect()
+}
+
+fn run_from_json(j: &Json) -> Result<RunConfig> {
+    let d = RunConfig::default();
+    let gs = |k: &str, dv: &str| -> String {
+        j.get(k).and_then(|v| v.as_str().ok()).unwrap_or(dv).to_string()
+    };
+    let gu = |k: &str, dv: usize| -> usize {
+        j.get(k).and_then(|v| v.as_usize().ok()).unwrap_or(dv)
+    };
+    let gf = |k: &str, dv: f64| -> f64 {
+        j.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(dv)
+    };
+    Ok(RunConfig {
+        model: gs("model", &d.model),
+        algo: gs("algo", &d.algo),
+        optimizer: gs("optimizer", &d.optimizer),
+        dataset: gs("dataset", &d.dataset),
+        batch: gu("batch", d.batch),
+        epochs: gu("epochs", d.epochs),
+        lr: gf("lr", d.lr as f64) as f32,
+        engine: EngineKind::parse(&gs("engine", "hlo"))?,
+        seed: gu("seed", d.seed as usize) as u64,
+        n_train: gu("n_train", d.n_train),
+        n_test: gu("n_test", d.n_test),
+        eval_every_steps: gu("eval_every", d.eval_every_steps),
+        ..Default::default()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_build() {
+        assert_eq!(preset("table34").unwrap().runs.len(), 10);
+        assert_eq!(preset("table5").unwrap().runs.len(), 15);
+        assert_eq!(preset("table6").unwrap().runs.len(), 10);
+        assert_eq!(preset("fig2").unwrap().runs.len(), 18);
+        assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn preset_configs_are_consistent() {
+        for p in ["table34", "table5", "table6", "fig2"] {
+            for run in preset(p).unwrap().runs {
+                // model exists + dataset matches its input size
+                let g = crate::models::lower(&crate::models::get(&run.model).unwrap())
+                    .unwrap();
+                let ds = crate::data::build(&run.dataset, 4, 0, 1).unwrap();
+                assert_eq!(ds.sample_elems(), g.input_elems, "{p}/{}", run.model);
+            }
+        }
+    }
+
+    #[test]
+    fn json_config_roundtrip() {
+        let cfgs = from_json(
+            r#"{"runs": [{"model": "cnv_mini", "dataset": "syn-cifar16",
+                 "batch": 32, "lr": 0.01, "engine": "blocked"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfgs.len(), 1);
+        assert_eq!(cfgs[0].model, "cnv_mini");
+        assert_eq!(cfgs[0].batch, 32);
+        assert_eq!(cfgs[0].engine, EngineKind::Blocked);
+        assert!((cfgs[0].lr - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bad_json_errors() {
+        assert!(from_json("{}").is_err());
+        assert!(from_json(r#"{"runs": [{"engine": "gpu"}]}"#).is_err());
+    }
+}

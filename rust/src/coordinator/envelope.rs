@@ -1,0 +1,140 @@
+//! Memory envelope: the edge device's budget, enforced up front.
+//!
+//! The paper's point is that training must *fit* (Raspberry Pi 3B+:
+//! 1 GiB, minus OS).  The coordinator refuses runs whose modeled
+//! footprint exceeds the envelope and can auto-tune the largest batch
+//! that fits — the mechanism behind Fig. 2's "~10× batch at
+//! iso-memory" observation.
+
+use anyhow::{anyhow, Result};
+
+use crate::memmodel::{breakdown, DtypeConfig, Optimizer};
+use crate::models::Graph;
+use crate::util::MIB;
+
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryEnvelope {
+    pub bytes: f64,
+}
+
+impl MemoryEnvelope {
+    pub fn mib(mib: f64) -> MemoryEnvelope {
+        MemoryEnvelope { bytes: mib * MIB }
+    }
+
+    /// Raspberry Pi 3B+: 1 GiB minus ~20% OS overhead (the paper
+    /// notes the OS prevents using all of it).
+    pub fn raspberry_pi() -> MemoryEnvelope {
+        MemoryEnvelope::mib(819.0)
+    }
+
+    pub fn admits(&self, modeled_bytes: f64) -> bool {
+        modeled_bytes <= self.bytes
+    }
+}
+
+/// Check a configuration against the envelope; error explains by how
+/// much it misses.
+pub fn check(
+    graph: &Graph,
+    batch: usize,
+    algo: &str,
+    opt: Optimizer,
+    env: &MemoryEnvelope,
+) -> Result<f64> {
+    let cfg = DtypeConfig::ablation(algo)
+        .ok_or_else(|| anyhow!("unknown algo '{algo}'"))?;
+    let total = breakdown(graph, batch, &cfg, opt).total_bytes();
+    if !env.admits(total) {
+        return Err(anyhow!(
+            "modeled footprint {:.1} MiB exceeds envelope {:.1} MiB \
+             (model {}, algo {algo}, B={batch}) — reduce batch or use \
+             the proposed scheme",
+            total / MIB,
+            env.bytes / MIB,
+            graph.name
+        ));
+    }
+    Ok(total)
+}
+
+/// Largest batch (binary search over [1, 1<<20]) whose modeled
+/// footprint fits the envelope; `None` if even B=1 misses.
+pub fn fit_batch(
+    graph: &Graph,
+    algo: &str,
+    opt: Optimizer,
+    env: &MemoryEnvelope,
+) -> Result<Option<usize>> {
+    let cfg = DtypeConfig::ablation(algo)
+        .ok_or_else(|| anyhow!("unknown algo '{algo}'"))?;
+    let fits = |b: usize| env.admits(breakdown(graph, b, &cfg, opt).total_bytes());
+    if !fits(1) {
+        return Ok(None);
+    }
+    let (mut lo, mut hi) = (1usize, 1usize << 20);
+    if fits(hi) {
+        return Ok(Some(hi));
+    }
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Ok(Some(lo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{get, lower};
+
+    fn graph() -> Graph {
+        lower(&get("binarynet").unwrap()).unwrap()
+    }
+
+    #[test]
+    fn standard_binarynet_misses_pi_at_b100_scaled() {
+        // standard @ B=100 is 512.81 MiB -> fits 819; @ B=200 misses
+        let g = graph();
+        let env = MemoryEnvelope::raspberry_pi();
+        assert!(check(&g, 100, "standard", Optimizer::Adam, &env).is_ok());
+        assert!(check(&g, 300, "standard", Optimizer::Adam, &env).is_err());
+        // proposed fits at 300 easily
+        assert!(check(&g, 300, "proposed", Optimizer::Adam, &env).is_ok());
+    }
+
+    #[test]
+    fn fit_batch_monotone_and_tight() {
+        let g = graph();
+        // envelope = our own modeled standard footprint at B=100
+        let at100 = breakdown(&g, 100, &DtypeConfig::standard(), Optimizer::Adam)
+            .total_bytes();
+        let env = MemoryEnvelope { bytes: at100 };
+        let std = fit_batch(&g, "standard", Optimizer::Adam, &env)
+            .unwrap()
+            .unwrap();
+        let prop = fit_batch(&g, "proposed", Optimizer::Adam, &env)
+            .unwrap()
+            .unwrap();
+        assert_eq!(std, 100);
+        assert!(prop > 5 * std, "prop {prop} vs std {std}");
+        // tightness: B and B+1 straddle the envelope
+        let cfg = DtypeConfig::ablation("proposed").unwrap();
+        let at = breakdown(&g, prop, &cfg, Optimizer::Adam).total_bytes();
+        let above = breakdown(&g, prop + 1, &cfg, Optimizer::Adam).total_bytes();
+        assert!(env.admits(at) && !env.admits(above));
+    }
+
+    #[test]
+    fn impossible_envelope() {
+        let g = graph();
+        let env = MemoryEnvelope::mib(10.0);
+        assert!(fit_batch(&g, "standard", Optimizer::Adam, &env)
+            .unwrap()
+            .is_none());
+    }
+}

@@ -1,0 +1,197 @@
+//! HLO-backed step engine: drives an AOT train-step executable
+//! (compiled once by python/compile/aot.py) through the PJRT runtime.
+//!
+//! This is the system's primary engine — L1 Pallas kernels and the L2
+//! JAX model are baked into the artifact; Rust feeds parameters and
+//! batches, and feeds the returned state back in, with Python nowhere
+//! on the path.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::naive::StepEngine;
+use crate::runtime::{Artifact, Engine, IoKind, Tensor};
+use crate::util::rng::Pcg32;
+
+pub struct HloEngine {
+    train: Arc<Artifact>,
+    eval: Option<Arc<Artifact>>,
+    /// params + opt state, fed back every step (manifest order).
+    state: Vec<Tensor>,
+    n_params: usize,
+    loss_idx: usize,
+    acc_idx: usize,
+}
+
+impl HloEngine {
+    /// Load `train_name` (and optionally an eval artifact) and init
+    /// parameters with Glorot (same scheme as python init) + zero opt
+    /// state.
+    pub fn new(
+        engine: &Engine,
+        train_name: &str,
+        eval_name: Option<&str>,
+        seed: u64,
+    ) -> Result<HloEngine> {
+        let train = engine.load(train_name)?;
+        let m = &train.manifest;
+        if m.kind != "train" {
+            bail!("'{train_name}' is not a train artifact");
+        }
+        let eval = match eval_name {
+            Some(n) => Some(engine.load(n)?),
+            None => None,
+        };
+        let mut rng = Pcg32::new(seed);
+        let mut state = Vec::new();
+        let is_bop = m.optimizer.as_deref() == Some("bop");
+        for spec in &m.inputs {
+            match spec.kind {
+                IoKind::Param => {
+                    // weights (rank >= 2) get Glorot; betas zeros
+                    if spec.shape.len() >= 2 {
+                        let fan_out = *spec.shape.last().unwrap();
+                        let fan_in = spec.numel() / fan_out;
+                        let mut w = rng.glorot(fan_in, fan_out, spec.numel());
+                        if is_bop {
+                            for v in w.iter_mut() {
+                                *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+                            }
+                        }
+                        state.push(Tensor::new(spec.shape.clone(), w)?);
+                    } else {
+                        state.push(Tensor::zeros(&spec.shape));
+                    }
+                }
+                IoKind::Opt => state.push(Tensor::zeros(&spec.shape)),
+                _ => {}
+            }
+        }
+        let n_params = m.input_indices(IoKind::Param).len();
+        let loss_idx = m
+            .output_index("loss")
+            .ok_or_else(|| anyhow!("no loss output"))?;
+        let acc_idx = m
+            .output_index("acc")
+            .ok_or_else(|| anyhow!("no acc output"))?;
+        Ok(HloEngine { train, eval, state, n_params, loss_idx, acc_idx })
+    }
+
+    pub fn manifest(&self) -> &crate::runtime::Manifest {
+        &self.train.manifest
+    }
+
+    /// Batch size of the eval artifact (eval chunking granularity).
+    pub fn eval_batch(&self) -> Option<usize> {
+        self.eval.as_ref().map(|a| a.manifest.batch)
+    }
+
+    fn input_shape_elems(&self) -> usize {
+        self.train.manifest.input_shape.iter().product()
+    }
+
+    fn xy_tensors(
+        batch: usize,
+        sample: usize,
+        classes: usize,
+        shape: &[usize],
+        x: &[f32],
+        labels: &[usize],
+    ) -> Result<(Tensor, Tensor)> {
+        if x.len() != batch * sample || labels.len() != batch {
+            bail!(
+                "batch shapes: x has {} want {}, labels {} want {batch}",
+                x.len(),
+                batch * sample,
+                labels.len()
+            );
+        }
+        let mut xshape = vec![batch];
+        xshape.extend_from_slice(shape);
+        let xt = Tensor::new(xshape, x.to_vec())?;
+        let mut y = vec![0.0f32; batch * classes];
+        for (i, &l) in labels.iter().enumerate() {
+            y[i * classes + l] = 1.0;
+        }
+        let yt = Tensor::new(vec![batch, classes], y)?;
+        Ok((xt, yt))
+    }
+}
+
+impl StepEngine for HloEngine {
+    fn train_step(&mut self, x: &[f32], labels: &[usize], lr: f32) -> Result<(f32, f32)> {
+        let m = &self.train.manifest;
+        let (xt, yt) = Self::xy_tensors(
+            m.batch,
+            self.input_shape_elems(),
+            m.classes,
+            &m.input_shape,
+            x,
+            labels,
+        )?;
+        let mut inputs = self.state.clone();
+        inputs.push(xt);
+        inputs.push(yt);
+        inputs.push(Tensor::scalar(lr));
+        let outs = self.train.run(&inputs)?;
+        let loss = outs[self.loss_idx].item()?;
+        let acc = outs[self.acc_idx].item()?;
+        // feed params + opt state back (they precede the metrics)
+        let n_state = self.state.len();
+        self.state = outs.into_iter().take(n_state).collect();
+        Ok((loss, acc))
+    }
+
+    fn eval(&mut self, x: &[f32], labels: &[usize]) -> Result<(f32, f32)> {
+        let e = self
+            .eval
+            .as_ref()
+            .ok_or_else(|| anyhow!("no eval artifact loaded"))?;
+        let m = &e.manifest;
+        let (xt, yt) = Self::xy_tensors(
+            m.batch,
+            self.input_shape_elems(),
+            m.classes,
+            &m.input_shape,
+            x,
+            labels,
+        )?;
+        let mut inputs: Vec<Tensor> =
+            self.state.iter().take(self.n_params).cloned().collect();
+        inputs.push(xt);
+        inputs.push(yt);
+        let outs = e.run(&inputs)?;
+        Ok((outs[0].item()?, outs[1].item()?))
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.state.iter().map(|t| t.len() * 4).sum()
+    }
+
+    fn batch(&self) -> usize {
+        self.train.manifest.batch
+    }
+
+    fn weights_snapshot(&self) -> Vec<Vec<f32>> {
+        // weight tensors are the even param slots (w0, beta0, w1, ...)
+        self.state
+            .iter()
+            .take(self.n_params)
+            .map(|t| t.data.clone())
+            .collect()
+    }
+
+    fn load_weights(&mut self, w: &[Vec<f32>]) -> Result<()> {
+        if w.len() != self.n_params {
+            bail!("snapshot has {} tensors, artifact wants {}", w.len(), self.n_params);
+        }
+        for (i, src) in w.iter().enumerate() {
+            if src.len() != self.state[i].len() {
+                bail!("tensor {i} length mismatch");
+            }
+            self.state[i].data = src.clone();
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,135 @@
+//! Metrics stream: per-step train loss/acc + periodic validation
+//! points, with JSONL export (the raw material for Figs. 3/4/5).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct MetricPoint {
+    pub step: usize,
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub train_acc: f32,
+    /// Present on evaluation steps only.
+    pub val_loss: Option<f32>,
+    pub val_acc: Option<f32>,
+    pub lr: f32,
+    pub wall_s: f64,
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub points: Vec<MetricPoint>,
+    pub best_val_acc: f32,
+    pub best_val_step: usize,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics { points: Vec::new(), best_val_acc: 0.0, best_val_step: 0 }
+    }
+
+    pub fn push(&mut self, p: MetricPoint) {
+        if let Some(va) = p.val_acc {
+            if va > self.best_val_acc {
+                self.best_val_acc = va;
+                self.best_val_step = p.step;
+            }
+        }
+        self.points.push(p);
+    }
+
+    pub fn last(&self) -> Option<&MetricPoint> {
+        self.points.last()
+    }
+
+    /// Validation-accuracy curve: (step, acc) pairs (Figs. 3/4/5).
+    pub fn val_curve(&self) -> Vec<(usize, f32)> {
+        self.points
+            .iter()
+            .filter_map(|p| p.val_acc.map(|a| (p.step, a)))
+            .collect()
+    }
+
+    /// Monotone step index invariant (tested + asserted by property
+    /// tests): points are pushed in execution order.
+    pub fn steps_monotone(&self) -> bool {
+        self.points.windows(2).all(|w| w[0].step <= w[1].step)
+    }
+
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for p in &self.points {
+            let mut o = Json::obj();
+            o.set("step", p.step.into())
+                .set("epoch", p.epoch.into())
+                .set("train_loss", (p.train_loss as f64).into())
+                .set("train_acc", (p.train_acc as f64).into())
+                .set("lr", (p.lr as f64).into())
+                .set("wall_s", p.wall_s.into());
+            if let Some(v) = p.val_loss {
+                o.set("val_loss", (v as f64).into());
+            }
+            if let Some(v) = p.val_acc {
+                o.set("val_acc", (v as f64).into());
+            }
+            out.push_str(&o.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_jsonl<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_jsonl().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(step: usize, val: Option<f32>) -> MetricPoint {
+        MetricPoint {
+            step,
+            epoch: 0,
+            train_loss: 1.0,
+            train_acc: 0.5,
+            val_loss: val.map(|_| 1.0),
+            val_acc: val,
+            lr: 0.001,
+            wall_s: 0.1,
+        }
+    }
+
+    #[test]
+    fn tracks_best() {
+        let mut m = Metrics::new();
+        m.push(point(1, Some(0.5)));
+        m.push(point(2, Some(0.8)));
+        m.push(point(3, Some(0.7)));
+        assert_eq!(m.best_val_acc, 0.8);
+        assert_eq!(m.best_val_step, 2);
+        assert_eq!(m.val_curve().len(), 3);
+        assert!(m.steps_monotone());
+    }
+
+    #[test]
+    fn jsonl_parses_back() {
+        let mut m = Metrics::new();
+        m.push(point(1, None));
+        m.push(point(2, Some(0.9)));
+        let jsonl = m.to_jsonl();
+        let lines: Vec<&str> = jsonl.trim().lines().collect();
+        assert_eq!(lines.len(), 2);
+        let j = Json::parse(lines[1]).unwrap();
+        assert_eq!(j.req("step").unwrap().as_usize().unwrap(), 2);
+        assert!((j.req("val_acc").unwrap().as_f64().unwrap() - 0.9).abs() < 1e-6);
+        assert!(Json::parse(lines[0]).unwrap().get("val_acc").is_none());
+    }
+}

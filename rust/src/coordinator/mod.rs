@@ -1,0 +1,152 @@
+//! Training coordinator: the L3 run orchestrator.
+//!
+//! Owns the end-to-end training loop the paper's experiments need:
+//! dataset → engine (AOT-HLO via PJRT, or a pure-Rust naive engine) →
+//! per-step metrics → periodic evaluation → dev-based LR scheduling →
+//! checkpointing → best-test-accuracy reporting (the paper reports
+//! the highest test accuracy achieved in each run).
+//!
+//! Edge-specific duties:
+//! - **memory envelope** enforcement: refuse configurations whose
+//!   modeled footprint exceeds the device budget (Raspberry Pi: 1 GiB)
+//!   and auto-tune the largest batch that fits (Fig. 2's ~10× claim);
+//! - metrics as JSONL for the figure benches (Figs. 3/4/5 curves).
+
+mod envelope;
+mod hlo_engine;
+mod metrics;
+mod runner;
+
+pub use envelope::{fit_batch, MemoryEnvelope};
+pub use hlo_engine::HloEngine;
+pub use metrics::{MetricPoint, Metrics};
+pub use runner::{EngineKind, RunConfig, RunResult, Runner};
+
+use anyhow::Result;
+
+use crate::util::cli::Args;
+
+/// Launcher entrypoint (`bnn-edge <subcommand> ...`).
+pub fn cli_main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "memory" => cmd_memory(&args),
+        "energy" => cmd_energy(&args),
+        "fit-batch" => cmd_fit_batch(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "datasets" => cmd_datasets(),
+        "federated" => crate::federated::cli(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "bnn-edge — low-memory BNN training on the edge (Wang et al. 2021)
+
+USAGE: bnn-edge <command> [flags]
+
+COMMANDS:
+  train       run a training job
+              --model mlp_mini --algo proposed --optimizer adam
+              --dataset syn-mnist64 --batch 64 --epochs 3
+              --engine hlo|naive|blocked [--lr 0.001] [--seed 42]
+              [--envelope-mib 1024] [--metrics out.jsonl]
+              [--artifacts artifacts]
+  memory      print the Table-2 style breakdown
+              --model binarynet [--batch 100] [--algo proposed]
+              [--optimizer adam]
+  energy      print the modeled energy cost per step
+              --model binarynet [--batch 100]
+  fit-batch   largest batch fitting an envelope
+              --model binarynet --envelope-mib 512 [--algo proposed]
+  artifacts   list AOT artifacts [--artifacts artifacts]
+  datasets    list synthetic datasets
+  federated   run the federated edge-fleet demo
+              [--workers 4] [--rounds 5] [--local-steps 8]
+"
+    );
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let mut runner = Runner::new(cfg)?;
+    let result = runner.run()?;
+    println!("{}", result.summary());
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    use crate::memmodel::{breakdown, DtypeConfig, Optimizer};
+    let model = args.str_or("model", "binarynet");
+    let batch = args.usize_or("batch", 100)?;
+    let algo = args.str_or("algo", "proposed");
+    let optimizer = Optimizer::parse(&args.str_or("optimizer", "adam"))
+        .ok_or_else(|| anyhow::anyhow!("bad optimizer"))?;
+    let graph = crate::models::lower(&crate::models::get(&model)?)?;
+    let std = breakdown(&graph, batch, &DtypeConfig::standard(), optimizer);
+    let cfg = DtypeConfig::ablation(&algo)
+        .ok_or_else(|| anyhow::anyhow!("unknown algo '{algo}'"))?;
+    let prop = breakdown(&graph, batch, &cfg, optimizer);
+    println!("{}", crate::report::table2(&std, &prop));
+    Ok(())
+}
+
+fn cmd_energy(args: &Args) -> Result<()> {
+    use crate::energy::step_cost;
+    use crate::memmodel::DtypeConfig;
+    let model = args.str_or("model", "binarynet");
+    let batch = args.usize_or("batch", 100)?;
+    let graph = crate::models::lower(&crate::models::get(&model)?)?;
+    for (name, cfg) in [
+        ("standard", DtypeConfig::standard()),
+        ("proposed", DtypeConfig::proposed()),
+    ] {
+        let c = step_cost(&graph, batch, &cfg, 2.0);
+        println!(
+            "{name:>9}: {:.2} mJ/step  (DRAM {:.1} MiB moved, {:.0}M MACs, {:.0}M pack ops)",
+            c.energy_mj(),
+            c.dram_bytes / crate::util::MIB,
+            c.mac_ops / 1e6,
+            c.pack_ops / 1e6
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fit_batch(args: &Args) -> Result<()> {
+    use crate::memmodel::Optimizer;
+    let model = args.str_or("model", "binarynet");
+    let algo = args.str_or("algo", "proposed");
+    let mib = args.f64_or("envelope-mib", 1024.0)?;
+    let graph = crate::models::lower(&crate::models::get(&model)?)?;
+    let env = MemoryEnvelope::mib(mib);
+    for a in ["standard", &algo] {
+        match fit_batch(&graph, a, Optimizer::Adam, &env)? {
+            Some(b) => println!("{a:>9}: max batch {b} within {mib} MiB"),
+            None => println!("{a:>9}: does not fit at any batch size"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let engine = crate::runtime::Engine::cpu(&dir)?;
+    for name in engine.available()? {
+        println!("{name}");
+    }
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    for (name, desc) in crate::data::catalog() {
+        println!("{name:<16} {desc}");
+    }
+    Ok(())
+}

@@ -1,0 +1,412 @@
+//! The run loop: epochs → shuffled batches → engine step → metrics →
+//! periodic eval → LR schedule → checkpoint → best-acc result.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::envelope::{check, MemoryEnvelope};
+use super::hlo_engine::HloEngine;
+use super::metrics::{MetricPoint, Metrics};
+use crate::data::{build, Batches, Dataset};
+use crate::memmodel::Optimizer;
+use crate::naive::{build_engine, Accel, StepEngine};
+use crate::optim::LrSchedule;
+use crate::util::cli::Args;
+use crate::util::rng::Pcg32;
+
+/// Which engine executes steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT HLO via PJRT (the primary path; needs artifacts).
+    Hlo,
+    /// Pure-Rust engine, direct loops (the naïve prototype).
+    Naive,
+    /// Pure-Rust engine, blocked GEMM ("CBLAS"-accelerated).
+    Blocked,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        Ok(match s {
+            "hlo" => EngineKind::Hlo,
+            "naive" => EngineKind::Naive,
+            "blocked" => EngineKind::Blocked,
+            _ => bail!("unknown engine '{s}' (hlo|naive|blocked)"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: String,
+    pub algo: String,          // ablation name
+    pub optimizer: String,     // adam | sgd | bop
+    pub dataset: String,
+    pub batch: usize,
+    pub epochs: usize,
+    pub max_steps: Option<usize>,
+    pub lr: f32,
+    pub engine: EngineKind,
+    pub seed: u64,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub eval_every_steps: usize,
+    pub envelope: Option<MemoryEnvelope>,
+    pub artifacts_dir: PathBuf,
+    pub metrics_path: Option<PathBuf>,
+    pub use_pallas_artifact: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> RunConfig {
+        RunConfig {
+            model: "mlp_mini".into(),
+            algo: "proposed".into(),
+            optimizer: "adam".into(),
+            dataset: "syn-mnist64".into(),
+            batch: 64,
+            epochs: 3,
+            max_steps: None,
+            lr: 0.001,
+            engine: EngineKind::Hlo,
+            seed: 42,
+            n_train: 2000,
+            n_test: 400,
+            eval_every_steps: 20,
+            envelope: None,
+            artifacts_dir: "artifacts".into(),
+            metrics_path: None,
+            use_pallas_artifact: false,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_args(args: &Args) -> Result<RunConfig> {
+        let d = RunConfig::default();
+        Ok(RunConfig {
+            model: args.str_or("model", &d.model),
+            algo: args.str_or("algo", &d.algo),
+            optimizer: args.str_or("optimizer", &d.optimizer),
+            dataset: args.str_or("dataset", &d.dataset),
+            batch: args.usize_or("batch", d.batch)?,
+            epochs: args.usize_or("epochs", d.epochs)?,
+            max_steps: args.get("max-steps").map(|v| v.parse()).transpose()?,
+            lr: args.f64_or("lr", d.lr as f64)? as f32,
+            engine: EngineKind::parse(&args.str_or("engine", "hlo"))?,
+            seed: args.usize_or("seed", d.seed as usize)? as u64,
+            n_train: args.usize_or("n-train", d.n_train)?,
+            n_test: args.usize_or("n-test", d.n_test)?,
+            eval_every_steps: args.usize_or("eval-every", d.eval_every_steps)?,
+            envelope: args
+                .get("envelope-mib")
+                .map(|v| v.parse::<f64>().map(MemoryEnvelope::mib))
+                .transpose()?,
+            artifacts_dir: args.str_or("artifacts", "artifacts").into(),
+            metrics_path: args.get("metrics").map(PathBuf::from),
+            use_pallas_artifact: args.bool("pallas"),
+        })
+    }
+
+    /// Train artifact name per aot.py's Variant naming.
+    pub fn train_artifact(&self) -> String {
+        let mut n = format!(
+            "{}_{}_{}_b{}",
+            self.model, self.algo, self.optimizer, self.batch
+        );
+        if self.use_pallas_artifact {
+            n.push_str("_pallas");
+        }
+        n
+    }
+
+    /// Matching eval artifact, if the set includes one.
+    pub fn eval_artifact(&self, available: &[String]) -> Option<String> {
+        // prefer algo-exact eval; batch may differ (chunked eval)
+        available
+            .iter()
+            .find(|n| {
+                n.starts_with(&format!("{}_{}_b", self.model, self.algo))
+                    && n.ends_with("_eval")
+            })
+            .cloned()
+    }
+}
+
+#[derive(Debug)]
+pub struct RunResult {
+    pub config_summary: String,
+    pub metrics: Metrics,
+    pub best_test_acc: f32,
+    pub final_train_loss: f32,
+    pub steps: usize,
+    pub wall_s: f64,
+    pub modeled_mib: Option<f64>,
+}
+
+impl RunResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: best test acc {:.2}% | final train loss {:.4} | {} steps in {:.1}s{}",
+            self.config_summary,
+            self.best_test_acc * 100.0,
+            self.final_train_loss,
+            self.steps,
+            self.wall_s,
+            match self.modeled_mib {
+                Some(m) => format!(" | modeled {m:.1} MiB"),
+                None => String::new(),
+            }
+        )
+    }
+}
+
+pub struct Runner {
+    cfg: RunConfig,
+    dataset: Dataset,
+    engine: Box<dyn StepEngine>,
+    eval_chunk: usize,
+    schedule: LrSchedule,
+    modeled_mib: Option<f64>,
+}
+
+impl Runner {
+    pub fn new(cfg: RunConfig) -> Result<Runner> {
+        let dataset = build(&cfg.dataset, cfg.n_train, cfg.n_test, cfg.seed)?;
+        let graph = crate::models::lower(&crate::models::get(&cfg.model)?)?;
+        if dataset.sample_elems() != graph.input_elems {
+            bail!(
+                "dataset '{}' ({} elems) does not match model '{}' ({} elems)",
+                cfg.dataset,
+                dataset.sample_elems(),
+                cfg.model,
+                graph.input_elems
+            );
+        }
+        // memory envelope gate (modeled; the edge-device admission)
+        let modeled_mib = match &cfg.envelope {
+            Some(env) => {
+                let opt = Optimizer::parse(&cfg.optimizer)
+                    .ok_or_else(|| anyhow!("bad optimizer '{}'", cfg.optimizer))?;
+                Some(check(&graph, cfg.batch, &cfg.algo, opt, env)? / crate::util::MIB)
+            }
+            None => None,
+        };
+
+        let (engine, eval_chunk): (Box<dyn StepEngine>, usize) = match cfg.engine {
+            EngineKind::Hlo => {
+                let rt = crate::runtime::Engine::cpu(&cfg.artifacts_dir)?;
+                let avail = rt.available()?;
+                let train_name = cfg.train_artifact();
+                if !avail.contains(&train_name) {
+                    bail!(
+                        "artifact '{train_name}' not found — run `make artifacts` \
+                         (available: {} artifacts)",
+                        avail.len()
+                    );
+                }
+                let eval_name = cfg.eval_artifact(&avail);
+                let eng =
+                    HloEngine::new(&rt, &train_name, eval_name.as_deref(), cfg.seed)?;
+                let chunk = eng.eval_batch().unwrap_or(cfg.batch);
+                (Box::new(eng), chunk)
+            }
+            EngineKind::Naive | EngineKind::Blocked => {
+                let accel = if cfg.engine == EngineKind::Naive {
+                    Accel::Naive
+                } else {
+                    Accel::Blocked
+                };
+                let eng = build_engine(
+                    &cfg.algo,
+                    &graph,
+                    cfg.batch,
+                    &cfg.optimizer,
+                    accel,
+                    cfg.seed,
+                )?;
+                (eng, cfg.batch)
+            }
+        };
+
+        let schedule = LrSchedule::dev_based(cfg.lr);
+        Ok(Runner { cfg, dataset, engine, eval_chunk, schedule, modeled_mib })
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+
+    pub fn engine_mut(&mut self) -> &mut dyn StepEngine {
+        self.engine.as_mut()
+    }
+
+    /// Evaluate on the test split in eval_chunk-sized pieces.
+    pub fn evaluate(&mut self) -> Result<(f32, f32)> {
+        let k = self.dataset.sample_elems();
+        let chunk = self.eval_chunk;
+        let n = (self.dataset.n_test() / chunk) * chunk;
+        if n == 0 {
+            bail!("test split smaller than eval batch {chunk}");
+        }
+        let (mut loss, mut acc) = (0.0f64, 0.0f64);
+        let mut batches = 0;
+        for start in (0..n).step_by(chunk) {
+            let x = &self.dataset.test_x[start * k..(start + chunk) * k];
+            let y = &self.dataset.test_y[start..start + chunk];
+            let (l, a) = self.engine.eval(x, y)?;
+            loss += l as f64;
+            acc += a as f64;
+            batches += 1;
+        }
+        Ok(((loss / batches as f64) as f32, (acc / batches as f64) as f32))
+    }
+
+    pub fn run(&mut self) -> Result<RunResult> {
+        let t0 = Instant::now();
+        let mut metrics = Metrics::new();
+        let mut rng = Pcg32::with_stream(self.cfg.seed, 0x9e3779b97f4a7c15);
+        let mut step = 0usize;
+
+        'epochs: for epoch in 0..self.cfg.epochs {
+            // materialize the epoch's batches up front so evaluate()
+            // (which needs &mut self) can interleave with stepping
+            let epoch_batches: Vec<(Vec<f32>, Vec<usize>)> = {
+                let mut it = Batches::new(&self.dataset, self.cfg.batch, &mut rng);
+                std::iter::from_fn(|| it.next()).collect()
+            };
+            for (x, y) in epoch_batches {
+                let lr = self.schedule.lr(epoch);
+                let (loss, acc) = self.engine.train_step(&x, &y, lr)?;
+                step += 1;
+                let eval_now = step % self.cfg.eval_every_steps == 0;
+                let (vl, va) = if eval_now {
+                    let (l, a) = self.evaluate()?;
+                    self.schedule.observe(a);
+                    (Some(l), Some(a))
+                } else {
+                    (None, None)
+                };
+                metrics.push(MetricPoint {
+                    step,
+                    epoch,
+                    train_loss: loss,
+                    train_acc: acc,
+                    val_loss: vl,
+                    val_acc: va,
+                    lr,
+                    wall_s: t0.elapsed().as_secs_f64(),
+                });
+                if let Some(ms) = self.cfg.max_steps {
+                    if step >= ms {
+                        break 'epochs;
+                    }
+                }
+            }
+        }
+        // final eval (ensures best-acc includes the endpoint)
+        let (vl, va) = self.evaluate()?;
+        metrics.push(MetricPoint {
+            step: step + 1,
+            epoch: self.cfg.epochs,
+            train_loss: metrics.last().map(|p| p.train_loss).unwrap_or(0.0),
+            train_acc: metrics.last().map(|p| p.train_acc).unwrap_or(0.0),
+            val_loss: Some(vl),
+            val_acc: Some(va),
+            lr: self.schedule.lr(self.cfg.epochs),
+            wall_s: t0.elapsed().as_secs_f64(),
+        });
+
+        if let Some(p) = &self.cfg.metrics_path {
+            metrics.write_jsonl(p)?;
+        }
+        let final_train_loss = metrics
+            .points
+            .iter()
+            .rev()
+            .find(|p| p.train_loss.is_finite())
+            .map(|p| p.train_loss)
+            .unwrap_or(f32::NAN);
+        Ok(RunResult {
+            config_summary: format!(
+                "{} {} {} on {} (B={}, {:?})",
+                self.cfg.model,
+                self.cfg.algo,
+                self.cfg.optimizer,
+                self.cfg.dataset,
+                self.cfg.batch,
+                self.cfg.engine
+            ),
+            best_test_acc: metrics.best_val_acc,
+            final_train_loss,
+            steps: step,
+            wall_s: t0.elapsed().as_secs_f64(),
+            metrics,
+            modeled_mib: self.modeled_mib,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(engine: EngineKind) -> RunConfig {
+        RunConfig {
+            engine,
+            n_train: 640,
+            n_test: 128,
+            epochs: 6,
+            eval_every_steps: 10,
+            batch: 64,
+            lr: 0.003,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn blocked_runner_end_to_end() {
+        let mut r = Runner::new(cfg(EngineKind::Blocked)).unwrap();
+        let result = r.run().unwrap();
+        assert!(result.steps >= 8, "{}", result.steps);
+        assert!(result.best_test_acc > 0.15, "acc {}", result.best_test_acc);
+        assert!(result.metrics.steps_monotone());
+        // loss went down
+        let first = result.metrics.points.first().unwrap().train_loss;
+        assert!(result.final_train_loss < first);
+    }
+
+    #[test]
+    fn envelope_gates_runs() {
+        let mut c = cfg(EngineKind::Blocked);
+        c.envelope = Some(MemoryEnvelope::mib(0.01));
+        assert!(Runner::new(c).is_err());
+        let mut c = cfg(EngineKind::Blocked);
+        c.envelope = Some(MemoryEnvelope::mib(100.0));
+        let r = Runner::new(c).unwrap();
+        assert!(r.modeled_mib.unwrap() < 100.0);
+    }
+
+    #[test]
+    fn dataset_model_mismatch_rejected() {
+        let mut c = cfg(EngineKind::Blocked);
+        c.dataset = "syn-cifar16".into(); // 768 elems vs mlp_mini's 64
+        assert!(Runner::new(c).is_err());
+    }
+
+    #[test]
+    fn artifact_names() {
+        let c = RunConfig::default();
+        assert_eq!(c.train_artifact(), "mlp_mini_proposed_adam_b64");
+        let avail = vec![
+            "mlp_mini_proposed_b64_eval".to_string(),
+            "mlp_mini_standard_b64_eval".to_string(),
+        ];
+        assert_eq!(
+            c.eval_artifact(&avail).unwrap(),
+            "mlp_mini_proposed_b64_eval"
+        );
+    }
+}

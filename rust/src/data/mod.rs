@@ -1,0 +1,337 @@
+//! Synthetic edge datasets.
+//!
+//! The paper trains on MNIST, CIFAR-10, SVHN and ImageNet; none are
+//! redistributable inside this offline image, so we synthesize
+//! class-conditional image distributions with the properties the
+//! experiments actually exercise (DESIGN.md §Substitutions):
+//!
+//! - models are near-chance at init and must genuinely learn;
+//! - a held-out test split measures generalization, not memorization;
+//! - difficulty is controlled (noise + intra-class deformation), so
+//!   the *relative* accuracy of training algorithms is meaningful;
+//! - generation is deterministic in the seed (reproducible tables).
+//!
+//! Generator: each class owns `protos_per_class` latent prototype
+//! images built from oriented sinusoidal gratings + blob mixtures
+//! (digit-ish strokes for the MNIST-like sets); a sample picks a
+//! prototype, applies a random shift/flip deformation, then adds
+//! pixel noise.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// Per-sample shape, `[h, w, c]` or `[feat]`.
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<usize>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn sample_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.test_y.len()
+    }
+
+    /// One-hot encode labels for a batch slice.
+    pub fn one_hot(&self, labels: &[usize]) -> Vec<f32> {
+        let mut out = vec![0.0; labels.len() * self.classes];
+        for (i, &l) in labels.iter().enumerate() {
+            out[i * self.classes + l] = 1.0;
+        }
+        out
+    }
+}
+
+/// Batch iterator with epoch shuffling.
+pub struct Batches<'a> {
+    ds: &'a Dataset,
+    order: Vec<usize>,
+    batch: usize,
+    pos: usize,
+}
+
+impl<'a> Batches<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize, rng: &mut Pcg32) -> Batches<'a> {
+        let mut order: Vec<usize> = (0..ds.n_train()).collect();
+        rng.shuffle(&mut order);
+        Batches { ds, order, batch, pos: 0 }
+    }
+
+    /// Next (x, labels) batch; `None` at epoch end.  Short final
+    /// batches are dropped (fixed-shape AOT executables).
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> Option<(Vec<f32>, Vec<usize>)> {
+        if self.pos + self.batch > self.order.len() {
+            return None;
+        }
+        let k = self.ds.sample_elems();
+        let mut x = Vec::with_capacity(self.batch * k);
+        let mut y = Vec::with_capacity(self.batch);
+        for &i in &self.order[self.pos..self.pos + self.batch] {
+            x.extend_from_slice(&self.ds.train_x[i * k..(i + 1) * k]);
+            y.push(self.ds.train_y[i]);
+        }
+        self.pos += self.batch;
+        Some((x, y))
+    }
+}
+
+/// Catalog of synthetic stand-ins (name → paper dataset).
+pub fn catalog() -> &'static [(&'static str, &'static str)] {
+    &[
+        ("syn-mnist", "MNIST (28x28x1, strokes)"),
+        ("syn-mnist64", "MNIST downscaled to the mlp_mini 64-feat input"),
+        ("syn-cifar10", "CIFAR-10 (32x32x3, textures)"),
+        ("syn-cifar16", "CIFAR-10 downscaled for *_mini models (16x16x3)"),
+        ("syn-svhn", "SVHN (32x32x3, digit-ish on clutter)"),
+        ("syn-svhn16", "SVHN downscaled for *_mini models (16x16x3)"),
+        ("syn-imagenet16", "ImageNet surrogate for residual minis (16x16x3)"),
+    ]
+}
+
+/// Build a dataset by name.  `n_train`/`n_test` samples, seeded.
+pub fn build(name: &str, n_train: usize, n_test: usize, seed: u64) -> Result<Dataset> {
+    let (shape, classes, noise, flat): (Vec<usize>, usize, f32, bool) = match name {
+        "syn-mnist" => (vec![28, 28, 1], 10, 0.25, true),
+        "syn-mnist64" => (vec![8, 8, 1], 10, 0.20, true),
+        "syn-cifar10" => (vec![32, 32, 3], 10, 0.45, false),
+        "syn-cifar16" => (vec![16, 16, 3], 10, 0.40, false),
+        "syn-svhn" => (vec![32, 32, 3], 10, 0.35, false),
+        "syn-svhn16" => (vec![16, 16, 3], 10, 0.30, false),
+        "syn-imagenet16" => (vec![16, 16, 3], 10, 0.50, false),
+        _ => bail!("unknown dataset '{name}' (see data::catalog())"),
+    };
+    let mut g = Pcg32::with_stream(seed, hash_name(name));
+    let gen = ClassGen::new(&mut g, &shape, classes);
+    let (train_x, train_y) = gen.sample_split(&mut g, n_train, noise);
+    let (test_x, test_y) = gen.sample_split(&mut g, n_test, noise);
+    let input_shape = if flat {
+        vec![shape.iter().product()]
+    } else {
+        shape
+    };
+    Ok(Dataset {
+        name: name.into(),
+        input_shape,
+        classes,
+        train_x,
+        train_y,
+        test_x,
+        test_y,
+    })
+}
+
+fn hash_name(s: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h | 1
+}
+
+struct ClassGen {
+    h: usize,
+    w: usize,
+    c: usize,
+    protos: Vec<Vec<f32>>, // classes * protos_per_class images
+    per_class: usize,
+    classes: usize,
+}
+
+impl ClassGen {
+    fn new(g: &mut Pcg32, shape: &[usize], classes: usize) -> ClassGen {
+        let (h, w, c) = (shape[0], shape[1], shape[2]);
+        let per_class = 4;
+        let mut protos = Vec::with_capacity(classes * per_class);
+        for class in 0..classes {
+            for _ in 0..per_class {
+                protos.push(Self::proto(g, h, w, c, class, classes));
+            }
+        }
+        ClassGen { h, w, c, protos, per_class, classes }
+    }
+
+    /// A prototype: 2 oriented gratings + 3 gaussian blobs, with
+    /// class-dependent orientation/frequency/polarity so classes are
+    /// separable but overlapping (non-trivial task).
+    fn proto(g: &mut Pcg32, h: usize, w: usize, c: usize, class: usize, classes: usize) -> Vec<f32> {
+        let mut img = vec![0.0f32; h * w * c];
+        let base_angle = class as f32 / classes as f32 * std::f32::consts::PI;
+        for grating in 0..2 {
+            let angle = base_angle + g.uniform(-0.2, 0.2) + grating as f32 * 0.7;
+            let freq = 0.5 + (class % 5) as f32 * 0.35 + g.uniform(-0.1, 0.1);
+            let (sa, ca) = angle.sin_cos();
+            let phase = g.uniform(0.0, std::f32::consts::TAU);
+            let chan_w: Vec<f32> = (0..c).map(|_| g.uniform(0.3, 1.0)).collect();
+            for y in 0..h {
+                for x in 0..w {
+                    let t = (x as f32 * ca + y as f32 * sa) * freq + phase;
+                    let v = t.sin() * 0.6;
+                    for ch in 0..c {
+                        img[(y * w + x) * c + ch] += v * chan_w[ch];
+                    }
+                }
+            }
+        }
+        for _ in 0..3 {
+            let (cx, cy) = (g.uniform(0.2, 0.8) * w as f32, g.uniform(0.2, 0.8) * h as f32);
+            let sig = g.uniform(1.0, 2.5 + (class % 3) as f32);
+            let amp = g.uniform(-1.0, 1.0) * if class % 2 == 0 { 1.0 } else { -1.0 };
+            let chan = g.below(c);
+            for y in 0..h {
+                for x in 0..w {
+                    let d2 = (x as f32 - cx).powi(2) + (y as f32 - cy).powi(2);
+                    img[(y * w + x) * c + chan] += amp * (-d2 / (2.0 * sig * sig)).exp();
+                }
+            }
+        }
+        img
+    }
+
+    fn sample_split(&self, g: &mut Pcg32, n: usize, noise: f32) -> (Vec<f32>, Vec<usize>) {
+        let k = self.h * self.w * self.c;
+        let mut xs = Vec::with_capacity(n * k);
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = i % self.classes;
+            let proto = &self.protos[class * self.per_class + g.below(self.per_class)];
+            // deform: circular shift up to ±2 px each axis, h-flip
+            let (dx, dy) = (g.below(5) as isize - 2, g.below(5) as isize - 2);
+            let flip = g.next_f32() < 0.5;
+            for y in 0..self.h {
+                for x in 0..self.w {
+                    let sx0 = if flip { self.w - 1 - x } else { x } as isize;
+                    let sx = (sx0 + dx).rem_euclid(self.w as isize) as usize;
+                    let sy = (y as isize + dy).rem_euclid(self.h as isize) as usize;
+                    for ch in 0..self.c {
+                        let v = proto[(sy * self.w + sx) * self.c + ch]
+                            + noise * g.normal();
+                        xs.push(v);
+                    }
+                }
+            }
+            ys.push(class);
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = build("syn-mnist64", 64, 16, 7).unwrap();
+        let b = build("syn-mnist64", 64, 16, 7).unwrap();
+        assert_eq!(a.train_x, b.train_x);
+        let c = build("syn-mnist64", 64, 16, 8).unwrap();
+        assert_ne!(a.train_x, c.train_x);
+    }
+
+    #[test]
+    fn shapes_and_counts() {
+        let d = build("syn-cifar16", 100, 20, 1).unwrap();
+        assert_eq!(d.input_shape, vec![16, 16, 3]);
+        assert_eq!(d.train_x.len(), 100 * 16 * 16 * 3);
+        assert_eq!(d.n_test(), 20);
+        let d = build("syn-mnist", 10, 5, 1).unwrap();
+        assert_eq!(d.input_shape, vec![784]); // flattened for the MLP
+    }
+
+    #[test]
+    fn classes_balanced() {
+        let d = build("syn-svhn16", 100, 0, 2).unwrap();
+        for cls in 0..10 {
+            assert_eq!(d.train_y.iter().filter(|&&y| y == cls).count(), 10);
+        }
+    }
+
+    #[test]
+    fn classes_are_separable_by_nearest_prototype() {
+        // sanity: 1-NN on class means beats chance by a wide margin,
+        // so a real model can learn this task
+        let d = build("syn-cifar16", 400, 100, 3).unwrap();
+        let k = d.sample_elems();
+        let mut means = vec![vec![0.0f64; k]; d.classes];
+        let mut counts = vec![0usize; d.classes];
+        for i in 0..d.n_train() {
+            let c = d.train_y[i];
+            counts[c] += 1;
+            for j in 0..k {
+                means[c][j] += d.train_x[i * k + j] as f64;
+            }
+        }
+        for c in 0..d.classes {
+            for j in 0..k {
+                means[c][j] /= counts[c] as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..d.n_test() {
+            let x = &d.test_x[i * k..(i + 1) * k];
+            let mut best = (f64::INFINITY, 0);
+            for c in 0..d.classes {
+                let dist: f64 = x
+                    .iter()
+                    .zip(&means[c])
+                    .map(|(&a, &b)| (a as f64 - b) * (a as f64 - b))
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 == d.test_y[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / d.n_test() as f64;
+        assert!(acc > 0.35, "1-NN acc {acc} barely above chance");
+        assert!(acc < 1.0, "task should not be trivial");
+    }
+
+    #[test]
+    fn one_hot() {
+        let d = build("syn-mnist64", 4, 0, 1).unwrap();
+        let oh = d.one_hot(&[0, 3]);
+        assert_eq!(oh.len(), 20);
+        assert_eq!(oh[0], 1.0);
+        assert_eq!(oh[13], 1.0);
+        assert_eq!(oh.iter().sum::<f32>(), 2.0);
+    }
+
+    #[test]
+    fn batches_cover_epoch_without_repeats() {
+        let d = build("syn-mnist64", 50, 0, 1).unwrap();
+        let mut g = Pcg32::new(9);
+        let mut it = Batches::new(&d, 16, &mut g);
+        let mut n = 0;
+        while let Some((x, y)) = it.next() {
+            assert_eq!(x.len(), 16 * d.sample_elems());
+            assert_eq!(y.len(), 16);
+            n += 16;
+        }
+        assert_eq!(n, 48); // 50 -> 3 full batches, tail dropped
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(build("mnist", 1, 1, 0).is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! Federated edge-fleet coordinator.
+//!
+//! The paper motivates on-device training via federated learning
+//! (Sec. 1, refs [13], [14]); this module makes that concrete: a
+//! leader distributes weight snapshots to a fleet of simulated edge
+//! workers (threads), each of which trains the *proposed* low-memory
+//! step on its private shard and sends back a **bit-packed sign
+//! update** — 1 bit per weight, the communication-side twin of the
+//! paper's binary weight gradients (and of signSGD [9], which the
+//! paper cites as the gradient-quantization precedent).
+//!
+//! Aggregation is **majority sign vote** with a fixed step size:
+//!
+//! ```text
+//! w ← clip(w − η_fed · sign(Σ_k sign(Δw_k)))   where votes ≥ quorum
+//! ```
+//!
+//! Invariants (tested here + property-tested in rust/tests/):
+//! - every shard is routed to exactly one worker per round;
+//! - aggregation is permutation-invariant in worker order;
+//! - worker dropout below quorum stalls the round rather than
+//!   corrupting state; committed rounds never roll back.
+
+mod leader;
+mod worker;
+
+pub use leader::{FedConfig, FedResult, Leader};
+pub use worker::{SignUpdate, WorkerHandle};
+
+use anyhow::Result;
+
+use crate::util::cli::Args;
+
+/// `bnn-edge federated` entrypoint.
+pub fn cli(args: &Args) -> Result<()> {
+    let cfg = FedConfig {
+        workers: args.usize_or("workers", 4)?,
+        rounds: args.usize_or("rounds", 5)?,
+        local_steps: args.usize_or("local-steps", 8)?,
+        batch: args.usize_or("batch", 32)?,
+        model: args.str_or("model", "mlp_mini"),
+        dataset: args.str_or("dataset", "syn-mnist64"),
+        lr: args.f64_or("lr", 0.002)? as f32,
+        fed_lr: args.f64_or("fed-lr", 0.01)? as f32,
+        seed: args.usize_or("seed", 42)? as u64,
+        samples_per_worker: args.usize_or("samples-per-worker", 256)?,
+        drop_worker: None,
+    };
+    let mut leader = Leader::new(cfg)?;
+    let result = leader.run()?;
+    println!("{}", result.summary());
+    Ok(())
+}
+
+/// Majority sign vote over packed updates: returns ±1 per weight (0 on
+/// exact tie).  Pure function → trivially permutation-invariant; the
+/// tests pin that down anyway.
+pub fn sign_vote(updates: &[&crate::bitops::BitMatrix]) -> Vec<i8> {
+    assert!(!updates.is_empty());
+    let rows = updates[0].rows;
+    let cols = updates[0].cols;
+    let n = rows * cols;
+    let mut tally = vec![0i32; n];
+    for u in updates {
+        assert_eq!(u.rows, rows);
+        assert_eq!(u.cols, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                tally[r * cols + c] += if u.get(r, c) > 0.0 { 1 } else { -1 };
+            }
+        }
+    }
+    tally
+        .into_iter()
+        .map(|t| match t.cmp(&0) {
+            std::cmp::Ordering::Greater => 1,
+            std::cmp::Ordering::Less => -1,
+            std::cmp::Ordering::Equal => 0,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitops::BitMatrix;
+    use crate::util::rng::Pcg32;
+
+    fn pack(v: &[f32], rows: usize, cols: usize) -> BitMatrix {
+        BitMatrix::pack(rows, cols, v)
+    }
+
+    #[test]
+    fn sign_vote_majority() {
+        let a = pack(&[1.0, 1.0, -1.0, -1.0], 2, 2);
+        let b = pack(&[1.0, -1.0, -1.0, 1.0], 2, 2);
+        let c = pack(&[1.0, -1.0, -1.0, -1.0], 2, 2);
+        let v = sign_vote(&[&a, &b, &c]);
+        assert_eq!(v, vec![1, -1, -1, -1]);
+    }
+
+    #[test]
+    fn sign_vote_tie_is_zero() {
+        let a = pack(&[1.0, -1.0], 1, 2);
+        let b = pack(&[-1.0, 1.0], 1, 2);
+        assert_eq!(sign_vote(&[&a, &b]), vec![0, 0]);
+    }
+
+    #[test]
+    fn sign_vote_permutation_invariant() {
+        let mut g = Pcg32::new(1);
+        let ms: Vec<BitMatrix> = (0..5)
+            .map(|_| pack(&g.normal_vec(24), 4, 6))
+            .collect();
+        let refs: Vec<&BitMatrix> = ms.iter().collect();
+        let base = sign_vote(&refs);
+        let perm: Vec<&BitMatrix> = vec![&ms[3], &ms[0], &ms[4], &ms[2], &ms[1]];
+        assert_eq!(sign_vote(&perm), base);
+    }
+}

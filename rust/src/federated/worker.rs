@@ -1,0 +1,112 @@
+//! Edge worker: a thread owning a private data shard and a proposed-
+//! scheme engine.  Per round: load the leader's weights, run local
+//! steps under the edge memory envelope, return a bit-packed sign
+//! update (1 bit/weight uplink — the federated twin of Alg. 2's
+//! binary weight gradients).
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::bitops::BitMatrix;
+use crate::models::Graph;
+use crate::naive::{Accel, ProposedTrainer, StepEngine};
+
+/// Leader → worker: weights + round meta.  `None` weights = shutdown.
+pub enum RoundMsg {
+    Work { round: usize, weights: Vec<Vec<f32>>, local_steps: usize, lr: f32 },
+    Shutdown,
+}
+
+/// Worker → leader: packed sign(Δw) per layer + local metrics.
+pub struct SignUpdate {
+    pub worker_id: usize,
+    pub round: usize,
+    /// Per-layer packed signs of (w_local − w_start); rows×cols match
+    /// the layer's logical (fan_in, fan_out).
+    pub deltas: Vec<BitMatrix>,
+    pub mean_loss: f32,
+    pub samples_seen: usize,
+}
+
+pub struct WorkerHandle {
+    pub id: usize,
+    pub tx: Sender<RoundMsg>,
+    pub join: JoinHandle<()>,
+}
+
+/// Spawn a worker thread.  `shard_x`/`shard_y` is its private data
+/// (never leaves the thread — the privacy property federated learning
+/// exists for).
+#[allow(clippy::too_many_arguments)]
+pub fn spawn_worker(
+    id: usize,
+    graph: Graph,
+    batch: usize,
+    shard_x: Vec<f32>,
+    shard_y: Vec<usize>,
+    seed: u64,
+    tx_up: Sender<Result<SignUpdate, usize>>,
+) -> WorkerHandle {
+    let (tx, rx): (Sender<RoundMsg>, Receiver<RoundMsg>) = std::sync::mpsc::channel();
+    let join = std::thread::spawn(move || {
+        let mut engine = match ProposedTrainer::new(&graph, batch, "adam", Accel::Blocked, seed)
+        {
+            Ok(e) => e,
+            Err(_) => {
+                let _ = tx_up.send(Err(id));
+                return;
+            }
+        };
+        let k = shard_x.len() / shard_y.len().max(1);
+        let n_batches = shard_y.len() / batch;
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                RoundMsg::Shutdown => break,
+                RoundMsg::Work { round, weights, local_steps, lr } => {
+                    if engine.load_weights(&weights).is_err() {
+                        let _ = tx_up.send(Err(id));
+                        continue;
+                    }
+                    let mut loss_sum = 0.0f32;
+                    let mut seen = 0usize;
+                    for s in 0..local_steps {
+                        let bi = (round * local_steps + s) % n_batches.max(1);
+                        let x = &shard_x[bi * batch * k..(bi + 1) * batch * k];
+                        let y = &shard_y[bi * batch..(bi + 1) * batch];
+                        match engine.train_step(x, y, lr) {
+                            Ok((l, _)) => {
+                                loss_sum += l;
+                                seen += batch;
+                            }
+                            Err(_) => {
+                                let _ = tx_up.send(Err(id));
+                                continue;
+                            }
+                        }
+                    }
+                    // packed sign(Δw): 1 bit per weight uplink
+                    let now = engine.weights_snapshot();
+                    let deltas = now
+                        .iter()
+                        .zip(&weights)
+                        .map(|(new, old)| {
+                            let d: Vec<f32> =
+                                new.iter().zip(old).map(|(a, b)| a - b).collect();
+                            BitMatrix::pack(1, d.len(), &d)
+                        })
+                        .collect();
+                    let _ = tx_up.send(Ok(SignUpdate {
+                        worker_id: id,
+                        round,
+                        deltas,
+                        mean_loss: loss_sum / local_steps.max(1) as f32,
+                        samples_seen: seen,
+                    }));
+                }
+            }
+        }
+    });
+    WorkerHandle { id, tx, join }
+}

@@ -1,0 +1,42 @@
+//! `bnn-edge`: low-memory binary-neural-network training on the edge.
+//!
+//! Rust + JAX + Pallas reproduction of Wang et al., *"Enabling Binary
+//! Neural Network Training on the Edge"* (2021).  Python/JAX/Pallas
+//! exists only on the compile path (`python/compile` → `artifacts/`);
+//! this crate owns the entire runtime: the PJRT executor, the pure-Rust
+//! training engines (the paper's Raspberry-Pi prototype substitute),
+//! the memory model, the energy model, the training coordinator and
+//! the federated edge-fleet coordinator.
+//!
+//! Layer map (see DESIGN.md):
+//! - [`runtime`]   — load + execute AOT HLO train/eval steps via PJRT
+//! - [`models`]    — model zoo + shape inference (full-scale + mini)
+//! - [`memmodel`]  — the paper's variable representation & lifetime
+//!                   analysis (Table 2 and every memory column)
+//! - [`bitops`]    — bit-packed XNOR-popcount GEMM substrate
+//! - [`naive`]     — pure-Rust Algorithms 1 & 2 (measured memory path)
+//! - [`optim`]     — Adam / SGD+momentum / Bop + LR schedules
+//! - [`data`]      — synthetic edge datasets (MNIST/CIFAR/SVHN-like)
+//! - [`energy`]    — memory-traffic energy model (Fig. 7c)
+//! - [`memtrack`]  — tracking allocator: *measured* peak heap (Fig. 6)
+//! - [`coordinator`] — run plans, step loop, metrics, checkpoints,
+//!                   memory envelopes, batch auto-tuning
+//! - [`federated`] — leader/worker fleet with sign-vote aggregation
+//! - [`util`]      — zero-dependency substrates (JSON, f16, RNG, CLI,
+//!                   stats, tables) replacing serde/clap/criterion,
+//!                   which are unreachable in this offline image
+
+pub mod bitops;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod federated;
+pub mod memmodel;
+pub mod memtrack;
+pub mod models;
+pub mod naive;
+pub mod optim;
+pub mod report;
+pub mod runtime;
+pub mod util;

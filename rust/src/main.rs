@@ -1,0 +1,4 @@
+//! bnn-edge launcher (CLI filled in by the coordinator module).
+fn main() -> anyhow::Result<()> {
+    bnn_edge::coordinator::cli_main()
+}

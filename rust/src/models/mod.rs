@@ -1,0 +1,458 @@
+//! Model zoo + shape inference.
+//!
+//! Mirrors `python/compile/models.py` exactly for the `*_mini`
+//! variants (the AOT-executable ones) and additionally provides the
+//! *full-scale* paper models — MLP, CNV, BinaryNet, ResNetE-18,
+//! Bi-Real-18 — whose lowered graphs drive the memory model (Table 2,
+//! Table 6), the naive engines, and the energy model.
+//!
+//! `lower()` turns a [`ModelSpec`] into a flat [`Graph`] of per-layer
+//! nodes with concrete per-sample element counts: everything the
+//! variable representation & lifetime analysis (Sec. 4) needs.
+
+mod zoo;
+
+pub use zoo::{get, names};
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Dense,
+    Conv,
+    MaxPool,
+    GlobalPool,
+    Flatten,
+    /// Residual skip wrapper around 1 (Bi-Real) or 2 (ResNetE) convs;
+    /// lowered to the convs it contains, plus an f32 skip buffer.
+    ResidualMarker,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Padding {
+    /// Zero-pad so output spatial = ceil(input / stride) (BinaryNet).
+    #[default]
+    Same,
+    /// No padding: output = (input - kernel)/stride + 1 (FINN CNV).
+    Valid,
+}
+
+/// Author-facing layer description.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerSpec {
+    pub kind: LayerKind,
+    pub out: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub first: bool,
+    pub bireal: bool,
+    pub pad: Padding,
+}
+
+impl LayerSpec {
+    pub fn dense(out: usize) -> LayerSpec {
+        LayerSpec { kind: LayerKind::Dense, out, kernel: 0, stride: 1, first: false, bireal: false, pad: Padding::Same }
+    }
+
+    pub fn conv(out: usize, kernel: usize) -> LayerSpec {
+        LayerSpec { kind: LayerKind::Conv, out, kernel, stride: 1, first: false, bireal: false, pad: Padding::Same }
+    }
+
+    pub fn conv_s(out: usize, kernel: usize, stride: usize) -> LayerSpec {
+        LayerSpec { stride, ..LayerSpec::conv(out, kernel) }
+    }
+
+    pub fn maxpool() -> LayerSpec {
+        LayerSpec { kind: LayerKind::MaxPool, out: 0, kernel: 2, stride: 2, first: false, bireal: false, pad: Padding::Valid }
+    }
+
+    pub fn global_pool() -> LayerSpec {
+        LayerSpec { kind: LayerKind::GlobalPool, out: 0, kernel: 0, stride: 1, first: false, bireal: false, pad: Padding::Valid }
+    }
+
+    pub fn flatten() -> LayerSpec {
+        LayerSpec { kind: LayerKind::Flatten, out: 0, kernel: 0, stride: 1, first: false, bireal: false, pad: Padding::Valid }
+    }
+
+    pub fn residual(out: usize, kernel: usize, stride: usize, bireal: bool) -> LayerSpec {
+        LayerSpec { kind: LayerKind::ResidualMarker, out, kernel, stride, first: false, bireal, pad: Padding::Same }
+    }
+
+    pub fn as_first(mut self) -> LayerSpec {
+        self.first = true;
+        self
+    }
+
+    pub fn valid(mut self) -> LayerSpec {
+        self.pad = Padding::Valid;
+        self
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Per-sample input shape: `[feat]` (MLP) or `[h, w, c]`.
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    pub layers: Vec<LayerSpec>,
+}
+
+/// One lowered compute node — the unit the memory/energy models and
+/// the naive engines operate on.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub kind: LayerKind,
+    /// Per-sample elements entering this node (the `X_l` the paper
+    /// retains between forward and backward propagation).
+    pub in_elems: usize,
+    /// Per-sample elements leaving (`Y_l` for matmul nodes).
+    pub out_elems: usize,
+    /// Weight elements (0 for pool/flatten).
+    pub w_elems: usize,
+    /// Output channels (batch-norm statistic rows).
+    pub channels: usize,
+    /// Fan-in `N_l` (the Alg. 2 line-18 attenuation divisor).
+    pub fan_in: usize,
+    /// GEMM dims per sample: (m, k, n) of the im2col matmul.
+    pub gemm: (usize, usize, usize),
+    /// True if this layer consumes unquantized inputs (first layer).
+    pub first: bool,
+    /// True if wrapped in a high-precision residual skip.
+    pub in_residual: bool,
+}
+
+impl Node {
+    pub fn is_matmul(&self) -> bool {
+        matches!(self.kind, LayerKind::Dense | LayerKind::Conv)
+    }
+}
+
+/// Lowered graph: nodes in execution order + bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub input_elems: usize,
+    pub classes: usize,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    /// Total weight elements (the paper's `W`).
+    pub fn total_weights(&self) -> usize {
+        self.nodes.iter().map(|n| n.w_elems).sum()
+    }
+
+    /// Total batch-norm channels (β, µ, ψ, ω rows).
+    pub fn total_channels(&self) -> usize {
+        self.nodes.iter().map(|n| n.channels).sum()
+    }
+
+    /// Per-sample retained activation elements: ALL matmul-layer
+    /// inputs, including the first (the paper's Table 2 `X` row counts
+    /// the input batch too — verified against its 111.33 MiB).
+    pub fn retained_act_elems(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.is_matmul())
+            .map(|n| n.in_elems)
+            .sum()
+    }
+
+    /// Per-sample elements of the largest matmul output — `Y`/`∂X`
+    /// and `∂Y` are transient and sized by the *largest* layer.
+    pub fn max_y_elems(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.is_matmul())
+            .map(|n| n.out_elems)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Per-sample max-pool mask elements (sized by pool inputs).
+    pub fn pool_mask_elems(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.kind == LayerKind::MaxPool)
+            .map(|n| n.in_elems)
+            .sum()
+    }
+
+    /// Per-sample f32 residual-skip buffer elements (largest skip
+    /// alive at once; ResNetE/Bi-Real keep skips high-precision).
+    pub fn residual_skip_elems(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.in_residual)
+            .map(|n| n.in_elems)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Multiply-accumulate count per sample (forward pass).
+    pub fn macs(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| {
+                let (m, k, nn) = n.gemm;
+                m * k * nn
+            })
+            .sum()
+    }
+}
+
+/// Shape-infer a [`ModelSpec`] into a [`Graph`].
+pub fn lower(spec: &ModelSpec) -> Result<Graph> {
+    let mut nodes = Vec::new();
+    let (mut feat, mut spatial, mut ch): (usize, Option<(usize, usize)>, usize);
+    match spec.input_shape.as_slice() {
+        [f] => {
+            feat = *f;
+            spatial = None;
+            ch = 0;
+        }
+        [h, w, c] => {
+            feat = 0;
+            spatial = Some((*h, *w));
+            ch = *c;
+        }
+        other => bail!("bad input shape {other:?}"),
+    }
+    let input_elems: usize = spec.input_shape.iter().product();
+
+    fn push_conv(
+        nodes: &mut Vec<Node>,
+        l: &LayerSpec,
+        spatial: &mut Option<(usize, usize)>,
+        ch: &mut usize,
+        out: usize,
+        in_residual: bool,
+    ) -> Result<()> {
+        let (h, w) = spatial.ok_or_else(|| anyhow::anyhow!("conv without spatial dims"))?;
+        let (oh, ow) = match l.pad {
+            Padding::Same => (h.div_ceil(l.stride), w.div_ceil(l.stride)),
+            Padding::Valid => (
+                (h - l.kernel) / l.stride + 1,
+                (w - l.kernel) / l.stride + 1,
+            ),
+        };
+        let k = l.kernel * l.kernel * *ch;
+        nodes.push(Node {
+            kind: LayerKind::Conv,
+            in_elems: h * w * *ch,
+            out_elems: oh * ow * out,
+            w_elems: k * out,
+            channels: out,
+            fan_in: k,
+            gemm: (oh * ow, k, out),
+            first: l.first,
+            in_residual,
+        });
+        *spatial = Some((oh, ow));
+        *ch = out;
+        Ok(())
+    }
+
+    for l in &spec.layers {
+        match l.kind {
+            LayerKind::Dense => {
+                let in_feat = if feat == 0 {
+                    let (h, w) = spatial.take().unwrap();
+                    h * w * ch
+                } else {
+                    feat
+                };
+                nodes.push(Node {
+                    kind: LayerKind::Dense,
+                    in_elems: in_feat,
+                    out_elems: l.out,
+                    w_elems: in_feat * l.out,
+                    channels: l.out,
+                    fan_in: in_feat,
+                    gemm: (1, in_feat, l.out),
+                    first: l.first,
+                    in_residual: false,
+                });
+                feat = l.out;
+            }
+            LayerKind::Conv => {
+                push_conv(&mut nodes, l, &mut spatial, &mut ch, l.out, false)?;
+            }
+            LayerKind::ResidualMarker => {
+                // 1 conv (Bi-Real) or 2 convs (ResNetE) inside a skip
+                let mut inner = *l;
+                inner.kind = LayerKind::Conv;
+                push_conv(&mut nodes, &inner, &mut spatial, &mut ch, l.out, true)?;
+                if !l.bireal {
+                    let mut second = inner;
+                    second.stride = 1;
+                    push_conv(&mut nodes, &second, &mut spatial, &mut ch, l.out, true)?;
+                }
+            }
+            LayerKind::MaxPool => {
+                let (h, w) = spatial.unwrap();
+                nodes.push(Node {
+                    kind: LayerKind::MaxPool,
+                    in_elems: h * w * ch,
+                    out_elems: (h / 2) * (w / 2) * ch,
+                    w_elems: 0,
+                    channels: 0,
+                    fan_in: 0,
+                    gemm: (0, 0, 0),
+                    first: false,
+                    in_residual: false,
+                });
+                spatial = Some((h / 2, w / 2));
+            }
+            LayerKind::GlobalPool => {
+                let (h, w) = spatial.unwrap();
+                nodes.push(Node {
+                    kind: LayerKind::GlobalPool,
+                    in_elems: h * w * ch,
+                    out_elems: ch,
+                    w_elems: 0,
+                    channels: 0,
+                    fan_in: 0,
+                    gemm: (0, 0, 0),
+                    first: false,
+                    in_residual: false,
+                });
+                spatial = None;
+                feat = ch;
+            }
+            LayerKind::Flatten => {
+                if let Some((h, w)) = spatial.take() {
+                    feat = h * w * ch;
+                }
+                nodes.push(Node {
+                    kind: LayerKind::Flatten,
+                    in_elems: feat,
+                    out_elems: feat,
+                    w_elems: 0,
+                    channels: 0,
+                    fan_in: 0,
+                    gemm: (0, 0, 0),
+                    first: false,
+                    in_residual: false,
+                });
+            }
+        }
+    }
+    Ok(Graph {
+        name: spec.name.clone(),
+        input_elems,
+        classes: spec.classes,
+        nodes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binarynet_matches_paper_table2() {
+        // Table 2 cross-check (B=100, f32): W = 53.49 MiB, X = 111.33
+        // MiB, Y/∂X = 50.00 MiB, pool masks = 87.46 MiB.
+        let g = lower(&zoo::get("binarynet").unwrap()).unwrap();
+        let b = 100.0;
+        let mib = |elems: usize, bytes: f64| elems as f64 * bytes / (1024.0 * 1024.0);
+        let w = mib(g.total_weights(), 4.0);
+        assert!((w - 53.49).abs() < 0.05, "W = {w}");
+        let x = mib(g.retained_act_elems(), 4.0) * b;
+        assert!((x - 111.33).abs() < 0.2, "X = {x}");
+        let y = mib(g.max_y_elems(), 4.0) * b;
+        assert!((y - 50.0).abs() < 0.05, "Y = {y}");
+        let masks = mib(g.pool_mask_elems(), 4.0) * b;
+        assert!((masks - 87.46).abs() < 0.1, "masks = {masks}");
+    }
+
+    #[test]
+    fn mlp_shapes() {
+        let g = lower(&zoo::get("mlp").unwrap()).unwrap();
+        assert_eq!(g.nodes.len(), 5);
+        assert_eq!(g.nodes[0].w_elems, 784 * 256);
+        assert_eq!(g.nodes[4].w_elems, 256 * 10);
+        assert!(g.nodes[0].first);
+        assert_eq!(g.total_weights(), 784 * 256 + 3 * 256 * 256 + 256 * 10);
+    }
+
+    #[test]
+    fn mini_variants_mirror_python() {
+        let g = lower(&zoo::get("mlp_mini").unwrap()).unwrap();
+        assert_eq!(g.nodes.len(), 3);
+        assert_eq!(g.nodes[0].w_elems, 64 * 64);
+        let g = lower(&zoo::get("cnv_mini").unwrap()).unwrap();
+        assert_eq!(g.input_elems, 16 * 16 * 3);
+    }
+
+    #[test]
+    fn resnet18_has_18_weight_layers() {
+        let g = lower(&zoo::get("resnete18").unwrap()).unwrap();
+        let convs = g.nodes.iter().filter(|n| n.is_matmul()).count();
+        assert_eq!(convs, 18); // stem + 16 residual convs + fc
+        let p = g.total_weights();
+        assert!((11_000_000..12_000_000).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn bireal18_single_conv_blocks() {
+        let g = lower(&zoo::get("bireal18").unwrap()).unwrap();
+        let skips = g.nodes.iter().filter(|n| n.in_residual).count();
+        assert_eq!(skips, 16); // every binary conv has its own skip
+    }
+
+    #[test]
+    fn pooling_halves_spatial() {
+        // FINN CNV has exactly two pools (28->14 and 10->5)
+        let g = lower(&zoo::get("cnv").unwrap()).unwrap();
+        let pools: Vec<&Node> = g
+            .nodes
+            .iter()
+            .filter(|n| n.kind == LayerKind::MaxPool)
+            .collect();
+        assert_eq!(pools.len(), 2);
+        assert_eq!(pools[0].out_elems * 4, pools[0].in_elems);
+        // BinaryNet (same-padded) has three
+        let g = lower(&zoo::get("binarynet").unwrap()).unwrap();
+        assert_eq!(
+            g.nodes.iter().filter(|n| n.kind == LayerKind::MaxPool).count(),
+            3
+        );
+    }
+
+    #[test]
+    fn cnv_valid_padding_shapes() {
+        // 32 -(3x3 valid)-> 30 -> 28 -pool-> 14 -> 12 -> 10 -pool-> 5
+        // -> 3 -> 1; conv6 output is 1x1x256 feeding FC512
+        let g = lower(&zoo::get("cnv").unwrap()).unwrap();
+        let convs: Vec<&Node> =
+            g.nodes.iter().filter(|n| n.kind == LayerKind::Conv).collect();
+        assert_eq!(convs[0].out_elems, 30 * 30 * 64);
+        assert_eq!(convs[5].out_elems, 256);
+        let fc1 = g
+            .nodes
+            .iter()
+            .find(|n| n.kind == LayerKind::Dense)
+            .unwrap();
+        assert_eq!(fc1.in_elems, 256);
+    }
+
+    #[test]
+    fn macs_positive_and_scale() {
+        let small = lower(&zoo::get("mlp_mini").unwrap()).unwrap().macs();
+        let big = lower(&zoo::get("binarynet").unwrap()).unwrap().macs();
+        assert!(small > 0);
+        assert!(big > small * 100);
+    }
+
+    #[test]
+    fn every_zoo_model_lowers() {
+        for name in names() {
+            let g = lower(&zoo::get(name).unwrap()).unwrap();
+            assert!(g.total_weights() > 0, "{name}");
+            assert!(g.max_y_elems() > 0, "{name}");
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! The model zoo.
+//!
+//! Full-scale paper models (memory modeling, Tables 2/4/5/6) and the
+//! `*_mini` AOT-executable variants whose widths mirror
+//! `python/compile/models.py` exactly.
+
+use anyhow::{bail, Result};
+
+use super::{LayerSpec as L, ModelSpec};
+
+/// All model names, full-scale first.
+pub fn names() -> &'static [&'static str] {
+    &[
+        "mlp",
+        "cnv",
+        "binarynet",
+        "resnete18",
+        "bireal18",
+        "mlp_mini",
+        "cnv_mini",
+        "binarynet_mini",
+        "resnete_mini",
+        "bireal_mini",
+    ]
+}
+
+pub fn get(name: &str) -> Result<ModelSpec> {
+    Ok(match name {
+        "mlp" => mlp("mlp", 784, 256, 5, 10),
+        "mlp_mini" => mlp("mlp_mini", 64, 64, 3, 10),
+        "cnv" => cnv_full(),
+        "cnv_mini" => cnv("cnv_mini", 16, &[16, 16, 32, 32], &[64], 10),
+        "binarynet" => cnv(
+            "binarynet",
+            32,
+            &[128, 128, 256, 256, 512, 512],
+            &[1024, 1024],
+            10,
+        ),
+        "binarynet_mini" => cnv("binarynet_mini", 16, &[16, 16, 32, 32], &[64, 64], 10),
+        "resnete18" => resnet18("resnete18", false),
+        "bireal18" => resnet18("bireal18", true),
+        "resnete_mini" => resnet_mini("resnete_mini", false),
+        "bireal_mini" => resnet_mini("bireal_mini", true),
+        _ => bail!("unknown model '{name}' (known: {:?})", names()),
+    })
+}
+
+/// Paper's MNIST MLP: `depth` dense layers, `hidden` units each.
+fn mlp(name: &str, inp: usize, hidden: usize, depth: usize, classes: usize) -> ModelSpec {
+    let mut layers = Vec::new();
+    for i in 0..depth - 1 {
+        let mut l = L::dense(hidden);
+        if i == 0 {
+            l = l.as_first();
+        }
+        layers.push(l);
+    }
+    layers.push(L::dense(classes));
+    ModelSpec {
+        name: name.into(),
+        input_shape: vec![inp],
+        classes,
+        layers,
+    }
+}
+
+/// FINN's CNV, faithful to the original: *valid* (unpadded) 3x3
+/// convs C64-C64-P-C128-C128-P-C256-C256 (no third pool; conv6's
+/// output is 1x1), then FC512-FC512-FC10.  Valid padding is what
+/// makes Table 4's 134.05 MiB standard-training total come out.
+fn cnv_full() -> ModelSpec {
+    let ch = [64usize, 64, 128, 128, 256, 256];
+    let mut layers = Vec::new();
+    for (i, &c) in ch.iter().enumerate() {
+        let mut l = L::conv(c, 3).valid();
+        if i == 0 {
+            l = l.as_first();
+        }
+        layers.push(l);
+        if i == 1 || i == 3 {
+            layers.push(L::maxpool());
+        }
+    }
+    layers.push(L::flatten());
+    layers.push(L::dense(512));
+    layers.push(L::dense(512));
+    layers.push(L::dense(10));
+    ModelSpec {
+        name: "cnv".into(),
+        input_shape: vec![32, 32, 3],
+        classes: 10,
+        layers,
+    }
+}
+
+/// Courbariaux BinaryNet family (and the mini CNV variants, which
+/// mirror python/compile/models.py): *same*-padded conv pairs with
+/// max-pool after each pair, then an FC head.
+fn cnv(name: &str, size: usize, ch: &[usize], fc: &[usize], classes: usize) -> ModelSpec {
+    let mut layers = Vec::new();
+    for (i, &c) in ch.iter().enumerate() {
+        let mut l = L::conv(c, 3);
+        if i == 0 {
+            l = l.as_first();
+        }
+        layers.push(l);
+        if i % 2 == 1 {
+            layers.push(L::maxpool());
+        }
+    }
+    layers.push(L::flatten());
+    for &u in fc {
+        layers.push(L::dense(u));
+    }
+    layers.push(L::dense(classes));
+    ModelSpec {
+        name: name.into(),
+        input_shape: vec![size, size, 3],
+        classes,
+        layers,
+    }
+}
+
+/// Full ImageNet-scale ResNetE-18 / Bi-Real-18: 7x7/2 stem conv +
+/// max-pool, 4 stages x 2 blocks (stride-2 at stage entry), global
+/// average pool, 1000-way FC.  Blocks: 2 convs/skip for ResNetE,
+/// 1 conv/skip for Bi-Real — identical weight totals either way.
+fn resnet18(name: &str, bireal: bool) -> ModelSpec {
+    let mut layers = vec![L::conv_s(64, 7, 2).as_first(), L::maxpool()];
+    let stages: &[(usize, usize)] = &[(64, 1), (128, 2), (256, 2), (512, 2)];
+    for &(c, first_stride) in stages {
+        if bireal {
+            // Bi-Real: 4 single-conv skips per stage
+            layers.push(L::residual(c, 3, first_stride, true));
+            layers.push(L::residual(c, 3, 1, true));
+            layers.push(L::residual(c, 3, 1, true));
+            layers.push(L::residual(c, 3, 1, true));
+        } else {
+            // ResNetE: 2 two-conv blocks per stage
+            layers.push(L::residual(c, 3, first_stride, false));
+            layers.push(L::residual(c, 3, 1, false));
+        }
+    }
+    layers.push(L::global_pool());
+    layers.push(L::dense(1000));
+    ModelSpec {
+        name: name.into(),
+        input_shape: vec![224, 224, 3],
+        classes: 1000,
+        layers,
+    }
+}
+
+/// Mini residual nets mirroring python/compile/models.py
+/// `resnet_binary(size=16, stem=16, blocks=4)`.
+fn resnet_mini(name: &str, bireal: bool) -> ModelSpec {
+    let mut layers = vec![L::conv(16, 3).as_first()];
+    for i in 0..4usize {
+        let c = if i >= 2 { 32 } else { 16 };
+        layers.push(L::residual(c, 3, 1, bireal));
+    }
+    layers.push(L::flatten());
+    layers.push(L::dense(10));
+    ModelSpec {
+        name: name.into(),
+        input_shape: vec![16, 16, 3],
+        classes: 10,
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_model_errors() {
+        assert!(get("nope").is_err());
+    }
+
+    #[test]
+    fn all_names_resolve() {
+        for n in names() {
+            assert!(get(n).is_ok(), "{n}");
+        }
+    }
+
+    #[test]
+    fn resnet_weight_parity() {
+        // ResNetE and Bi-Real have the same conv inventory
+        let a = crate::models::lower(&get("resnete18").unwrap()).unwrap();
+        let b = crate::models::lower(&get("bireal18").unwrap()).unwrap();
+        assert_eq!(a.total_weights(), b.total_weights());
+    }
+}

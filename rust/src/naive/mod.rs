@@ -1,0 +1,166 @@
+//! Pure-Rust training engines: Algorithms 1 and 2, end to end.
+//!
+//! These are the paper's Raspberry-Pi prototypes (Sec. 6.2), rebuilt:
+//!
+//! - [`StandardTrainer`] — Algorithm 1: float32 everything, ℓ2 batch
+//!   norm.  The paper's "naïve C++ (standard)".
+//! - [`ProposedTrainer`] — Algorithm 2: *actually* bit-packed binary
+//!   activations/STE masks/weight gradients and f16-stored weights,
+//!   momenta and gradients, ℓ1 + BNN-specific batch norm.  The
+//!   paper's "naïve C++ (proposed)" — measured memory really shrinks.
+//!
+//! Each comes in two compute modes (Fig. 7's naïve vs CBLAS story):
+//!
+//! - `Accel::Naive`   — direct convolution/GEMM loops, minimal
+//!   buffers: lowest memory, slowest.
+//! - `Accel::Blocked` — im2col + cache-blocked GEMM (and the XNOR
+//!   path for binary×binary): ~order-of-magnitude faster, buys speed
+//!   with transient buffer memory exactly as the paper reports
+//!   (1.59–2.08× memory for 8.6–29.8× speed).
+//!
+//! Both engines are cross-validated against the AOT HLO step (same
+//! algorithm, same numerics class) in rust/tests/.
+
+mod plan;
+mod proposed;
+mod standard;
+
+pub use plan::{LayerPlan, Plan};
+pub use proposed::ProposedTrainer;
+pub use standard::StandardTrainer;
+
+use anyhow::Result;
+
+use crate::models::Graph;
+use crate::util::rng::Pcg32;
+
+/// Compute mode (Fig. 7: naïve vs "CBLAS"-accelerated).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Accel {
+    Naive,
+    Blocked,
+}
+
+/// Engine-agnostic step interface used by the coordinator, benches
+/// and the federated workers.
+pub trait StepEngine {
+    /// One training step on a batch; returns (loss, accuracy).
+    fn train_step(&mut self, x: &[f32], labels: &[usize], lr: f32) -> Result<(f32, f32)>;
+    /// Forward-only evaluation; returns (loss, accuracy).
+    fn eval(&mut self, x: &[f32], labels: &[usize]) -> Result<(f32, f32)>;
+    /// Bytes of persistent state currently held (weights, momenta,
+    /// retained stats) — *measured*, not modeled.
+    fn state_bytes(&self) -> usize;
+    /// Batch size the engine was built for.
+    fn batch(&self) -> usize;
+    /// Flat snapshot of the latent weights (checkpointing/federated).
+    fn weights_snapshot(&self) -> Vec<Vec<f32>>;
+    /// Overwrite latent weights from a snapshot.
+    fn load_weights(&mut self, w: &[Vec<f32>]) -> Result<()>;
+}
+
+/// Build an engine by algorithm name ("standard" | "proposed").
+pub fn build_engine(
+    algo: &str,
+    graph: &Graph,
+    batch: usize,
+    optimizer: &str,
+    accel: Accel,
+    seed: u64,
+) -> Result<Box<dyn StepEngine>> {
+    Ok(match algo {
+        "standard" => Box::new(StandardTrainer::new(graph, batch, optimizer, accel, seed)?),
+        "proposed" => Box::new(ProposedTrainer::new(graph, batch, optimizer, accel, seed)?),
+        _ => anyhow::bail!("unknown algo '{algo}' (standard|proposed)"),
+    })
+}
+
+// ------------------------------------------------------- shared math
+
+/// Softmax cross-entropy + gradient w.r.t. logits (divided by B).
+/// Returns (mean loss, accuracy); writes dlogits in place.
+pub(crate) fn softmax_xent_grad(
+    logits: &[f32],
+    labels: &[usize],
+    classes: usize,
+    dlogits: &mut [f32],
+) -> (f32, f32) {
+    let b = labels.len();
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for i in 0..b {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for &v in row {
+            denom += (v - max).exp();
+        }
+        let mut argmax = 0;
+        for (c, &v) in row.iter().enumerate() {
+            let p = (v - max).exp() / denom;
+            dlogits[i * classes + c] = (p - if labels[i] == c { 1.0 } else { 0.0 }) / b as f32;
+            if v > row[argmax] {
+                argmax = c;
+            }
+        }
+        let p_true = (row[labels[i]] - max).exp() / denom;
+        loss -= (p_true.max(1e-12)).ln() as f64;
+        if argmax == labels[i] {
+            correct += 1;
+        }
+    }
+    ((loss / b as f64) as f32, correct as f32 / b as f32)
+}
+
+/// Glorot init for a layer plan, mirroring python init_params.
+pub(crate) fn glorot_init(rng: &mut Pcg32, fan_in: usize, fan_out: usize, n: usize) -> Vec<f32> {
+    rng.glorot(fan_in, fan_out, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_xent_uniform() {
+        // uniform logits: loss = ln(C), acc = chance-ish
+        let classes = 4;
+        let logits = vec![0.0; 2 * classes];
+        let mut d = vec![0.0; 2 * classes];
+        let (loss, _) = softmax_xent_grad(&logits, &[1, 2], classes, &mut d);
+        assert!((loss - (classes as f32).ln()).abs() < 1e-5);
+        // gradient rows sum to zero
+        for i in 0..2 {
+            let s: f32 = d[i * classes..(i + 1) * classes].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_xent_confident_correct() {
+        let logits = vec![10.0, -10.0, -10.0];
+        let mut d = vec![0.0; 3];
+        let (loss, acc) = softmax_xent_grad(&logits, &[0], 3, &mut d);
+        assert!(loss < 1e-3);
+        assert_eq!(acc, 1.0);
+        assert!(d[0].abs() < 1e-3); // p ~ 1, grad ~ 0
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let classes = 5;
+        let mut logits = vec![0.3, -0.2, 1.1, 0.0, -0.7];
+        let labels = [2usize];
+        let mut d = vec![0.0; classes];
+        let (l0, _) = softmax_xent_grad(&logits, &labels, classes, &mut d);
+        let eps = 1e-3;
+        for c in 0..classes {
+            logits[c] += eps;
+            let mut tmp = vec![0.0; classes];
+            let (l1, _) = softmax_xent_grad(&logits, &labels, classes, &mut tmp);
+            logits[c] -= eps;
+            let fd = (l1 - l0) / eps;
+            assert!((fd - d[c]).abs() < 1e-3, "c={c} fd={fd} an={}", d[c]);
+        }
+    }
+}

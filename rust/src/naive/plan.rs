@@ -1,0 +1,211 @@
+//! Execution plan: a [`Graph`] specialized to concrete conv geometry
+//! for the naive engines (stride-1 SAME convs + 2×2 max-pool + dense,
+//! matching the models the paper's prototype ran: MLP and the
+//! BinaryNet/CNV family).
+
+use anyhow::{bail, Result};
+
+use crate::models::{Graph, LayerKind, Node};
+
+#[derive(Clone, Debug)]
+pub enum LayerPlan {
+    Dense {
+        k: usize,
+        n: usize,
+        first: bool,
+    },
+    /// 3×3 (or kxk) stride-1 SAME conv as im2col GEMM geometry.
+    Conv {
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        kside: usize,
+        first: bool,
+    },
+    MaxPool {
+        h: usize,
+        w: usize,
+        c: usize,
+    },
+    Flatten,
+}
+
+impl LayerPlan {
+    pub fn weight_len(&self) -> usize {
+        match self {
+            LayerPlan::Dense { k, n, .. } => k * n,
+            LayerPlan::Conv { cin, cout, kside, .. } => kside * kside * cin * cout,
+            _ => 0,
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        match self {
+            LayerPlan::Dense { n, .. } => *n,
+            LayerPlan::Conv { cout, .. } => *cout,
+            _ => 0,
+        }
+    }
+
+    pub fn fan_in(&self) -> usize {
+        match self {
+            LayerPlan::Dense { k, .. } => *k,
+            LayerPlan::Conv { cin, kside, .. } => kside * kside * cin,
+            _ => 0,
+        }
+    }
+
+    /// Per-sample output elements.
+    pub fn out_elems(&self) -> usize {
+        match self {
+            LayerPlan::Dense { n, .. } => *n,
+            LayerPlan::Conv { h, w, cout, .. } => h * w * cout,
+            LayerPlan::MaxPool { h, w, c } => (h / 2) * (w / 2) * c,
+            LayerPlan::Flatten => 0,
+        }
+    }
+
+    /// Per-sample input elements.
+    pub fn in_elems(&self) -> usize {
+        match self {
+            LayerPlan::Dense { k, .. } => *k,
+            LayerPlan::Conv { h, w, cin, .. } => h * w * cin,
+            LayerPlan::MaxPool { h, w, c } => h * w * c,
+            LayerPlan::Flatten => 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub name: String,
+    pub input_elems: usize,
+    pub classes: usize,
+    pub layers: Vec<LayerPlan>,
+}
+
+impl Plan {
+    /// Build from a lowered graph.  Residual models are not supported
+    /// by the naive engines (the paper's prototype ran MLP and
+    /// BinaryNet only); use the HLO path for those.
+    pub fn from_graph(graph: &Graph) -> Result<Plan> {
+        let mut layers = Vec::new();
+        // reconstruct spatial dims by walking nodes
+        for node in &graph.nodes {
+            match node.kind {
+                LayerKind::Dense => layers.push(LayerPlan::Dense {
+                    k: node.fan_in,
+                    n: node.channels,
+                    first: node.first,
+                }),
+                LayerKind::Conv => {
+                    if node.in_residual {
+                        bail!(
+                            "naive engines do not support residual models \
+                             ({}); use the HLO runtime",
+                            graph.name
+                        );
+                    }
+                    // SAME stride-1: out positions == in positions
+                    let (pos, k, cout) = node.gemm;
+                    if node.out_elems != pos * cout || pos * k / k != pos {
+                        bail!("non-SAME conv in '{}' unsupported by naive engine", graph.name);
+                    }
+                    let (h, w) = square_of(pos)?;
+                    let cin = node.in_elems / (h * w);
+                    if cin * h * w != node.in_elems {
+                        bail!("conv geometry mismatch in '{}'", graph.name);
+                    }
+                    let kside = isqrt(k / cin)?;
+                    layers.push(LayerPlan::Conv { h, w, cin, cout, kside, first: node.first });
+                }
+                LayerKind::MaxPool => {
+                    let c = prev_channels(&layers, node)?;
+                    let (h, w) = square_of(node.in_elems / c)?;
+                    layers.push(LayerPlan::MaxPool { h, w, c });
+                }
+                LayerKind::Flatten => layers.push(LayerPlan::Flatten),
+                LayerKind::GlobalPool | LayerKind::ResidualMarker => {
+                    bail!("layer {:?} unsupported by naive engine", node.kind)
+                }
+            }
+        }
+        Ok(Plan {
+            name: graph.name.clone(),
+            input_elems: graph.input_elems,
+            classes: graph.classes,
+            layers,
+        })
+    }
+}
+
+fn prev_channels(layers: &[LayerPlan], _node: &Node) -> Result<usize> {
+    for l in layers.iter().rev() {
+        let c = l.channels();
+        if c > 0 {
+            return Ok(c);
+        }
+    }
+    bail!("max-pool before any conv layer is unsupported")
+}
+
+fn square_of(n: usize) -> Result<(usize, usize)> {
+    let s = isqrt(n)?;
+    Ok((s, s))
+}
+
+fn isqrt(n: usize) -> Result<usize> {
+    let s = (n as f64).sqrt().round() as usize;
+    if s * s != n {
+        bail!("{n} is not a perfect square (non-square spatial dims unsupported)");
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{get, lower};
+
+    #[test]
+    fn mlp_plan() {
+        let g = lower(&get("mlp").unwrap()).unwrap();
+        let p = Plan::from_graph(&g).unwrap();
+        assert_eq!(p.layers.len(), 5);
+        assert!(matches!(p.layers[0], LayerPlan::Dense { k: 784, n: 256, first: true }));
+        assert!(matches!(p.layers[4], LayerPlan::Dense { k: 256, n: 10, first: false }));
+    }
+
+    #[test]
+    fn binarynet_mini_plan() {
+        let g = lower(&get("binarynet_mini").unwrap()).unwrap();
+        let p = Plan::from_graph(&g).unwrap();
+        // conv,conv,pool,conv,conv,pool,flatten,fc,fc,fc
+        assert_eq!(p.layers.len(), 10);
+        match p.layers[0] {
+            LayerPlan::Conv { h: 16, w: 16, cin: 3, cout: 16, kside: 3, first: true } => {}
+            ref other => panic!("{other:?}"),
+        }
+        match p.layers[2] {
+            LayerPlan::MaxPool { h: 16, w: 16, c: 16 } => {}
+            ref other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn residuals_rejected() {
+        let g = lower(&get("resnete_mini").unwrap()).unwrap();
+        assert!(Plan::from_graph(&g).is_err());
+    }
+
+    #[test]
+    fn weight_lens_match_graph() {
+        for m in ["mlp", "binarynet_mini", "cnv_mini", "binarynet"] {
+            let g = lower(&get(m).unwrap()).unwrap();
+            let p = Plan::from_graph(&g).unwrap();
+            let total: usize = p.layers.iter().map(|l| l.weight_len()).sum();
+            assert_eq!(total, g.total_weights(), "{m}");
+        }
+    }
+}

@@ -1,0 +1,825 @@
+//! Algorithm 2 — the paper's proposed low-memory BNN training step,
+//! with *genuinely* reduced storage:
+//!
+//! - retained activations: **bit-packed** X̂ (matmul inputs) and
+//!   BN-output signs, plus packed STE masks — 1 bit each (Table 2's
+//!   "X" and mask rows realized 32× smaller on the heap);
+//! - per-channel BN statistics ψ, ω: f16;
+//! - latent weights / momenta: f16 [`Store`];
+//! - weight gradients: bit-packed ∂Ŵ retained through the update
+//!   phase, consumed via `update_fn` with the `1/√N_l` attenuation
+//!   (Alg. 2 lines 16+18) — no f32 gradient buffer ever exists;
+//! - gradients flowing between layers are held in f16 across layer
+//!   boundaries (∂X/∂Y rows of Table 2).
+//!
+//! The forward f32 activation between a BN and the next binarization
+//! is transient, exactly as the paper's lifetime analysis assumes.
+
+use anyhow::{bail, Result};
+
+use super::plan::{LayerPlan, Plan};
+use super::standard::{
+    col2im, conv_direct, im2col, maxpool_forward, sign_vec, transpose,
+};
+use super::{glorot_init, softmax_xent_grad, Accel, StepEngine};
+use crate::bitops::{gemm::gemm_f32, xnor_gemm, xnor_gemm_naive, BitMask, BitMatrix};
+use crate::models::Graph;
+use crate::optim::{OptState, Store};
+use crate::util::f16::F16Vec;
+use crate::util::rng::Pcg32;
+
+/// Per-matmul-layer retained residuals (Alg. 2's memory inventory).
+#[derive(Default)]
+struct Residuals {
+    /// Bit-packed binarized matmul input (rows × k); None for the
+    /// first layer (f32 input kept separately).
+    xhat: Option<BitMatrix>,
+    /// f32 copy of the first layer's input batch.
+    x_first: Option<Vec<f32>>,
+    /// Packed STE mask 1{|x| ≤ 1} over the matmul input.
+    ste: Option<BitMask>,
+    /// Packed signs of the BN output (x_next − β) — the backward's
+    /// only activation dependence (the paper's key trick).
+    bn_sign: Option<BitMatrix>,
+    /// ψ (mean absolute deviation) and ω (mean magnitude), f16.
+    psi: F16Vec,
+    omega: F16Vec,
+    /// Bit-packed binarized weight gradient ∂Ŵ (retained to update).
+    dw_sign: Option<BitMatrix>,
+    /// ∂β (channels are tiny; f32).
+    dbeta: Vec<f32>,
+}
+
+pub struct ProposedTrainer {
+    plan: Plan,
+    batch: usize,
+    accel: Accel,
+    optimizer: String,
+    /// Latent weights, f16-stored (binary-valued ±1 under Bop).
+    weights: Vec<Store>,
+    betas: Vec<Store>,
+    opt_w: Vec<OptState>,
+    opt_b: Vec<OptState>,
+    res: Vec<Residuals>,
+    pool_masks: Vec<BitMask>,
+}
+
+impl ProposedTrainer {
+    pub fn new(
+        graph: &Graph,
+        batch: usize,
+        optimizer: &str,
+        accel: Accel,
+        seed: u64,
+    ) -> Result<ProposedTrainer> {
+        let plan = Plan::from_graph(graph)?;
+        if batch == 0 {
+            bail!("batch must be positive");
+        }
+        let mut rng = Pcg32::new(seed);
+        let mut weights = Vec::new();
+        let mut betas = Vec::new();
+        let mut opt_w = Vec::new();
+        let mut opt_b = Vec::new();
+        for l in &plan.layers {
+            let wl = l.weight_len();
+            if wl == 0 {
+                continue;
+            }
+            let mut w = glorot_init(&mut rng, l.fan_in(), l.channels(), wl);
+            if optimizer == "bop" {
+                for v in w.iter_mut() {
+                    *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+                }
+            }
+            weights.push(Store::from_f32(w, true)); // f16 latent
+            betas.push(Store::from_f32(vec![0.0; l.channels()], true));
+            opt_w.push(OptState::new(optimizer, wl, true));
+            opt_b.push(OptState::new(optimizer, l.channels(), true));
+        }
+        Ok(ProposedTrainer {
+            plan,
+            batch,
+            accel,
+            optimizer: optimizer.to_string(),
+            weights,
+            betas,
+            opt_w,
+            opt_b,
+            res: Vec::new(),
+            pool_masks: Vec::new(),
+        })
+    }
+
+    /// Binary matmul Y = X̂ Ŵ: XNOR-popcount path.
+    fn bin_matmul(&self, xhat: &BitMatrix, wi: usize, k: usize, n: usize) -> Vec<f32> {
+        // pack Ŵ transposed (n × k) straight from the f16 sign bits —
+        // no f32 materialization or transpose pass (§Perf)
+        let wpt = match &self.weights[wi] {
+            Store::F16(v) => BitMatrix::pack_f16_t(&v.0, k, n),
+            Store::F32(v) => {
+                let wt = transpose(v, k, n);
+                BitMatrix::pack(n, k, &wt)
+            }
+        };
+        let mut y = vec![0.0f32; xhat.rows * n];
+        match self.accel {
+            Accel::Naive => xnor_gemm_naive(xhat, &wpt, &mut y),
+            Accel::Blocked => xnor_gemm(xhat, &wpt, &mut y),
+        }
+        y
+    }
+
+    /// dX = dY Ŵᵀ — real × binary GEMM (blocked unpacks Ŵ into a
+    /// transient ±1 f32 buffer: the paper's memory-for-speed trade).
+    fn real_bin_matmul_t(&self, dy: &[f32], wi: usize, rows: usize, k: usize, n: usize) -> Vec<f32> {
+        let w = self.weights[wi].to_f32();
+        let mut dx = vec![0.0f32; rows * k];
+        match self.accel {
+            Accel::Blocked => {
+                let wt = transpose(&sign_vec(&w), k, n); // (n×k) signs
+                gemm_f32(rows, n, k, dy, &wt, &mut dx);
+            }
+            Accel::Naive => {
+                for r in 0..rows {
+                    let dyr = &dy[r * n..(r + 1) * n];
+                    let dxr = &mut dx[r * k..(r + 1) * k];
+                    for (j, &g) in dyr.iter().enumerate() {
+                        if g == 0.0 {
+                            continue;
+                        }
+                        for (kk, dxv) in dxr.iter_mut().enumerate() {
+                            let s = if w[kk * n + j] >= 0.0 { 1.0 } else { -1.0 };
+                            *dxv += g * s;
+                        }
+                    }
+                }
+            }
+        }
+        dx
+    }
+
+    /// ∂W = X̂ᵀ ∂Y — binary × real GEMM, immediately binarized into a
+    /// packed ∂Ŵ (the f32 accumulator is one K-row at a time).
+    fn dw_packed(
+        &self,
+        xhat: Option<&BitMatrix>,
+        x_first: Option<&[f32]>,
+        dy: &[f32],
+        rows: usize,
+        k: usize,
+        n: usize,
+    ) -> BitMatrix {
+        let mut dw_bits = BitMatrix::zeros(k, n);
+        match self.accel {
+            Accel::Blocked => {
+                // transient f32 dW, then pack (memory-for-speed)
+                let mut dw = vec![0.0f32; k * n];
+                match xhat {
+                    Some(xh) => {
+                        let xt = transpose(&xh.unpack(), rows, k);
+                        gemm_f32(k, rows, n, &xt, dy, &mut dw);
+                    }
+                    None => {
+                        let xt = transpose(x_first.unwrap(), rows, k);
+                        gemm_f32(k, rows, n, &xt, dy, &mut dw);
+                    }
+                }
+                dw_bits = BitMatrix::pack(k, n, &dw);
+            }
+            Accel::Naive => {
+                // row-at-a-time accumulator: k-loop outer keeps only
+                // an n-sized f32 scratch alive
+                let mut acc = vec![0.0f32; n];
+                for kk in 0..k {
+                    acc.fill(0.0);
+                    for r in 0..rows {
+                        let xv = match xhat {
+                            Some(xh) => xh.get(r, kk),
+                            None => x_first.unwrap()[r * k + kk],
+                        };
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let dyr = &dy[r * n..(r + 1) * n];
+                        for (j, &g) in dyr.iter().enumerate() {
+                            acc[j] += xv * g;
+                        }
+                    }
+                    for (j, &v) in acc.iter().enumerate() {
+                        if v >= 0.0 {
+                            dw_bits.data[kk * dw_bits.words_per_row + (j >> 6)] |=
+                                1u64 << (j & 63);
+                        }
+                    }
+                }
+            }
+        }
+        dw_bits
+    }
+
+    fn forward(&mut self, x: &[f32], retain: bool) -> Result<Vec<f32>> {
+        let b = self.batch;
+        self.res.clear();
+        self.pool_masks.clear();
+
+        let mut cur = x.to_vec();
+        let mut wi = 0;
+        for li in 0..self.plan.layers.len() {
+            let layer = self.plan.layers[li].clone();
+            match layer {
+                LayerPlan::Dense { k, n, first } => {
+                    cur = self.matmul_bn_forward(cur, b, k, n, first, wi, retain, None)?;
+                    wi += 1;
+                }
+                LayerPlan::Conv { h, w, cin, cout, kside, first } => {
+                    let rows = b * h * w;
+                    let k = kside * kside * cin;
+                    cur = self.matmul_bn_forward(
+                        cur,
+                        rows,
+                        k,
+                        cout,
+                        first,
+                        wi,
+                        retain,
+                        Some((h, w, cin, kside)),
+                    )?;
+                    wi += 1;
+                }
+                LayerPlan::MaxPool { h, w, c } => {
+                    let (out, mask) = maxpool_forward(&cur, b, h, w, c);
+                    if retain {
+                        // pack: 1 bit per input element (was-max)
+                        let mut bits = vec![false; b * h * w * c];
+                        const OFF: [(usize, usize); 4] =
+                            [(0, 0), (0, 1), (1, 0), (1, 1)];
+                        for bi in 0..b {
+                            for oy in 0..h / 2 {
+                                for ox in 0..w / 2 {
+                                    for ch in 0..c {
+                                        let o = ((bi * (h / 2) + oy) * (w / 2) + ox) * c + ch;
+                                        let (dy, dx) = OFF[mask[o] as usize];
+                                        bits[((bi * h + oy * 2 + dy) * w + ox * 2 + dx) * c
+                                            + ch] = true;
+                                    }
+                                }
+                            }
+                        }
+                        self.pool_masks
+                            .push(BitMask::from_bools(bits.len(), bits.into_iter()));
+                    }
+                    cur = out;
+                }
+                LayerPlan::Flatten => {}
+            }
+        }
+        Ok(cur)
+    }
+
+    /// Shared matmul+BN forward.  `conv`: Some((h, w, cin, kside)).
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_bn_forward(
+        &mut self,
+        cur: Vec<f32>,
+        rows: usize,
+        k: usize,
+        n: usize,
+        first: bool,
+        wi: usize,
+        retain: bool,
+        conv: Option<(usize, usize, usize, usize)>,
+    ) -> Result<Vec<f32>> {
+        let mut res = Residuals::default();
+        let y: Vec<f32>;
+        if first {
+            // real-input layer: f32 GEMM against sign(W)
+            let w = sign_vec(&self.weights[wi].to_f32());
+            y = match conv {
+                None => {
+                    let mut out = vec![0.0f32; rows * n];
+                    gemm_f32(rows, k, n, &cur, &w, &mut out);
+                    out
+                }
+                Some((h, wd, cin, kside)) => match self.accel {
+                    Accel::Blocked => {
+                        let cols = im2col(&cur, self.batch, h, wd, cin, kside);
+                        let mut out = vec![0.0f32; rows * n];
+                        gemm_f32(rows, k, n, &cols, &w, &mut out);
+                        out
+                    }
+                    Accel::Naive => {
+                        conv_direct(&cur, &w, self.batch, h, wd, cin, n, kside)
+                    }
+                },
+            };
+            if retain {
+                res.x_first = Some(cur);
+            }
+        } else {
+            // binarize input: packed X̂ + packed STE mask; f32 freed
+            let (xhat, ste) = match conv {
+                None => {
+                    let xh = BitMatrix::pack(rows, k, &cur);
+                    let ste = BitMask::from_bools(cur.len(), cur.iter().map(|v| v.abs() <= 1.0));
+                    (xh, ste)
+                }
+                Some((h, wd, cin, kside)) => {
+                    // mask over the *activation map* (in_elems), pack
+                    // the im2col'd sign matrix for the GEMM
+                    let ste = BitMask::from_bools(cur.len(), cur.iter().map(|v| v.abs() <= 1.0));
+                    let cols = im2col(&cur, self.batch, h, wd, cin, kside);
+                    (BitMatrix::pack(rows, k, &cols), ste)
+                }
+            };
+            drop(cur);
+            y = self.bin_matmul(&xhat, wi, k, n);
+            if retain {
+                res.xhat = Some(xhat);
+                res.ste = Some(ste);
+            }
+        }
+
+        // l1 batch norm (Alg. 2 lines 5-8)
+        let beta = self.betas[wi].to_f32();
+        let (x_next, psi, omega, bn_sign) = bn_l1_forward_packed(&y, rows, n, &beta);
+        if retain {
+            res.psi = F16Vec::from_f32(&psi);
+            res.omega = F16Vec::from_f32(&omega);
+            res.bn_sign = Some(bn_sign);
+            self.res.push(res);
+        }
+        Ok(x_next)
+    }
+
+    fn backward(&mut self, dlogits: Vec<f32>, lr: f32) -> Result<()> {
+        let b = self.batch;
+        // ∂X/∂Y between layers is held f16 (Table 2's grad rows)
+        let mut dcur = F16Vec::from_f32(&dlogits);
+        drop(dlogits);
+        let mut wi = self.weights.len();
+        let mut pool_i = self.pool_masks.len();
+
+        for li in (0..self.plan.layers.len()).rev() {
+            let layer = self.plan.layers[li].clone();
+            match layer {
+                LayerPlan::Dense { k, n, first } => {
+                    wi -= 1;
+                    dcur = self.matmul_bn_backward(dcur, b, k, n, first, wi, None)?;
+                }
+                LayerPlan::Conv { h, w, cin, cout, kside, first } => {
+                    wi -= 1;
+                    let rows = b * h * w;
+                    dcur = self.matmul_bn_backward(
+                        dcur,
+                        rows,
+                        kside * kside * cin,
+                        cout,
+                        first,
+                        wi,
+                        Some((h, w, cin, kside)),
+                    )?;
+                }
+                LayerPlan::MaxPool { h, w, c } => {
+                    pool_i -= 1;
+                    let mask = &self.pool_masks[pool_i];
+                    let dout = dcur.to_f32();
+                    let mut dx = vec![0.0f32; b * h * w * c];
+                    let (oh, ow) = (h / 2, w / 2);
+                    // route each pooled grad to its masked input cell
+                    let mut oidx = 0usize;
+                    for bi in 0..b {
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                for ch in 0..c {
+                                    let g = dout[oidx];
+                                    oidx += 1;
+                                    for (dy, dxo) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                                        let ii = ((bi * h + oy * 2 + dy) * w + ox * 2 + dxo)
+                                            * c
+                                            + ch;
+                                        if mask.get(ii) {
+                                            dx[ii] = g;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    dcur = F16Vec::from_f32(&dx);
+                }
+                LayerPlan::Flatten => {}
+            }
+        }
+
+        // ---- update phase (Alg. 2 lines 17-19): consume packed ∂Ŵ
+        for st in self.opt_w.iter_mut().chain(self.opt_b.iter_mut()) {
+            st.tick();
+        }
+        let is_bop = self.optimizer == "bop";
+        for (wi, res) in self.res.iter().enumerate() {
+            let dw = res.dw_sign.as_ref().expect("backward filled dw");
+            let fan_in = dw.rows;
+            let atten = 1.0 / (fan_in as f32).sqrt();
+            let n = dw.cols;
+            let wpr = dw.words_per_row;
+            let data = &dw.data;
+            self.opt_w[wi].update_fn(
+                &mut self.weights[wi],
+                |i| {
+                    let (r, c) = (i / n, i % n);
+                    let bit = data[r * wpr + (c >> 6)] >> (c & 63) & 1;
+                    (if bit == 1 { 1.0 } else { -1.0 }) * atten
+                },
+                lr,
+                !is_bop,
+            );
+            self.opt_b[wi].update(&mut self.betas[wi], &res.dbeta, lr, false);
+        }
+        Ok(())
+    }
+
+    /// Shared matmul+BN backward; returns the f16-held input grad.
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_bn_backward(
+        &mut self,
+        dcur: F16Vec,
+        rows: usize,
+        k: usize,
+        n: usize,
+        first: bool,
+        wi: usize,
+        conv: Option<(usize, usize, usize, usize)>,
+    ) -> Result<F16Vec> {
+        let dx_next = dcur.to_f32();
+        drop(dcur);
+        // BN backward (Alg. 2 lines 10-13) from packed signs + ω, ψ
+        let res_view = &self.res[wi];
+        let (dy, dbeta) = bn_proposed_backward_packed(
+            &dx_next,
+            res_view.bn_sign.as_ref().unwrap(),
+            &res_view.omega.to_f32(),
+            &res_view.psi.to_f32(),
+            rows,
+            n,
+        );
+        drop(dx_next);
+
+        // ∂Ŵ (packed, retained for the update phase).  The first
+        // layer's retained input is the raw image — im2col it into
+        // the (rows × k) matrix the dW GEMM expects (transient).
+        let first_cols: Option<Vec<f32>> = match (&res_view.x_first, conv) {
+            (Some(xf), Some((h, w, cin, kside))) => {
+                Some(im2col(xf, self.batch, h, w, cin, kside))
+            }
+            (Some(xf), None) => Some(xf.clone()),
+            _ => None,
+        };
+        let dw = self.dw_packed(
+            res_view.xhat.as_ref(),
+            first_cols.as_deref(),
+            &dy,
+            rows,
+            k,
+            n,
+        );
+        drop(first_cols);
+
+        // ∂X for the upstream layer (skip for the first layer)
+        let out = if first {
+            F16Vec::zeros(0)
+        } else {
+            let mut dcols = self.real_bin_matmul_t(&dy, wi, rows, k, n);
+            let dx = match conv {
+                None => {
+                    // STE mask applies directly
+                    let ste = res_view.ste.as_ref().unwrap();
+                    for (i, v) in dcols.iter_mut().enumerate() {
+                        if !ste.get(i) {
+                            *v = 0.0;
+                        }
+                    }
+                    dcols
+                }
+                Some((h, w, cin, kside)) => {
+                    let mut dx = col2im(&dcols, self.batch, h, w, cin, kside);
+                    drop(dcols);
+                    let ste = res_view.ste.as_ref().unwrap();
+                    for (i, v) in dx.iter_mut().enumerate() {
+                        if !ste.get(i) {
+                            *v = 0.0;
+                        }
+                    }
+                    dx
+                }
+            };
+            F16Vec::from_f32(&dx)
+        };
+        self.res[wi].dw_sign = Some(dw);
+        self.res[wi].dbeta = dbeta;
+        Ok(out)
+    }
+}
+
+
+impl StepEngine for ProposedTrainer {
+    fn train_step(&mut self, x: &[f32], labels: &[usize], lr: f32) -> Result<(f32, f32)> {
+        if x.len() != self.batch * self.plan.input_elems || labels.len() != self.batch {
+            bail!("bad batch shapes");
+        }
+        let logits = self.forward(x, true)?;
+        let classes = self.plan.classes;
+        let mut dlogits = vec![0.0f32; self.batch * classes];
+        let (loss, acc) = softmax_xent_grad(&logits, labels, classes, &mut dlogits);
+        drop(logits);
+        self.backward(dlogits, lr)?;
+        self.res.clear();
+        self.pool_masks.clear();
+        Ok((loss, acc))
+    }
+
+    fn eval(&mut self, x: &[f32], labels: &[usize]) -> Result<(f32, f32)> {
+        let logits = self.forward(x, false)?;
+        let classes = self.plan.classes;
+        let mut d = vec![0.0f32; self.batch * classes];
+        Ok(softmax_xent_grad(&logits, labels, classes, &mut d))
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.weights.iter().map(Store::heap_bytes).sum::<usize>()
+            + self.betas.iter().map(Store::heap_bytes).sum::<usize>()
+            + self.opt_w.iter().map(OptState::heap_bytes).sum::<usize>()
+            + self.opt_b.iter().map(OptState::heap_bytes).sum::<usize>()
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn weights_snapshot(&self) -> Vec<Vec<f32>> {
+        // interleaved [w0, beta0, w1, beta1, ...] — the HLO engines'
+        // param order, so snapshots transfer across engine kinds
+        let mut out = Vec::with_capacity(self.weights.len() * 2);
+        for (w, b) in self.weights.iter().zip(&self.betas) {
+            out.push(w.to_f32());
+            out.push(b.to_f32());
+        }
+        out
+    }
+
+    fn load_weights(&mut self, w: &[Vec<f32>]) -> Result<()> {
+        if w.len() != self.weights.len() * 2 {
+            bail!("snapshot layer count mismatch");
+        }
+        for (i, chunk) in w.chunks(2).enumerate() {
+            if chunk[0].len() != self.weights[i].len()
+                || chunk[1].len() != self.betas[i].len()
+            {
+                bail!("snapshot shape mismatch at layer {i}");
+            }
+            self.weights[i] = Store::from_f32(chunk[0].clone(), true);
+            self.betas[i] = Store::from_f32(chunk[1].clone(), true);
+        }
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------- BN kernels
+
+/// ℓ1 BN forward emitting f32 x_next + (ψ, ω, packed sign(xn)).
+fn bn_l1_forward_packed(
+    y: &[f32],
+    rows: usize,
+    channels: usize,
+    beta: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, BitMatrix) {
+    let mut mu = vec![0.0f32; channels];
+    for r in 0..rows {
+        for c in 0..channels {
+            mu[c] += y[r * channels + c];
+        }
+    }
+    for m in mu.iter_mut() {
+        *m /= rows as f32;
+    }
+    let mut psi = vec![0.0f32; channels];
+    for r in 0..rows {
+        for c in 0..channels {
+            psi[c] += (y[r * channels + c] - mu[c]).abs();
+        }
+    }
+    for p in psi.iter_mut() {
+        *p = *p / rows as f32 + 1e-5;
+    }
+    let mut x_next = vec![0.0f32; y.len()];
+    let mut omega = vec![0.0f32; channels];
+    let mut sign = BitMatrix::zeros(rows, channels);
+    for r in 0..rows {
+        let base = r * sign.words_per_row;
+        for c in 0..channels {
+            let xn = (y[r * channels + c] - mu[c]) / psi[c];
+            let v = xn + beta[c];
+            x_next[r * channels + c] = v;
+            omega[c] += v.abs();
+            if xn >= 0.0 {
+                sign.data[base + (c >> 6)] |= 1u64 << (c & 63);
+            }
+        }
+    }
+    for o in omega.iter_mut() {
+        *o /= rows as f32;
+    }
+    (x_next, psi, omega, sign)
+}
+
+/// Proposed BN backward (Alg. 2 lines 10-13) from packed signs.
+fn bn_proposed_backward_packed(
+    dx: &[f32],
+    xhat: &BitMatrix,
+    omega: &[f32],
+    psi: &[f32],
+    rows: usize,
+    channels: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut mean_v = vec![0.0f32; channels];
+    let mut mean_vx = vec![0.0f32; channels];
+    let mut dbeta = vec![0.0f32; channels];
+    for r in 0..rows {
+        for c in 0..channels {
+            let d = dx[r * channels + c];
+            let v = d / psi[c];
+            mean_v[c] += v;
+            mean_vx[c] += v * xhat.get(r, c);
+            dbeta[c] += d;
+        }
+    }
+    for c in 0..channels {
+        mean_v[c] /= rows as f32;
+        mean_vx[c] /= rows as f32;
+    }
+    let mut dy = vec![0.0f32; dx.len()];
+    for r in 0..rows {
+        for c in 0..channels {
+            let v = dx[r * channels + c] / psi[c];
+            dy[r * channels + c] = v - mean_v[c] - omega[c] * mean_vx[c] * xhat.get(r, c);
+        }
+    }
+    (dy, dbeta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{get, lower};
+
+    fn make(model: &str, batch: usize, accel: Accel, opt: &str) -> ProposedTrainer {
+        let g = lower(&get(model).unwrap()).unwrap();
+        ProposedTrainer::new(&g, batch, opt, accel, 42).unwrap()
+    }
+
+    fn toy_batch(n: usize, k: usize, classes: usize, seed: u64) -> (Vec<f32>, Vec<usize>) {
+        let mut g = Pcg32::new(seed);
+        let protos: Vec<Vec<f32>> = (0..classes).map(|_| g.normal_vec(k)).collect();
+        let mut x = Vec::with_capacity(n * k);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = i % classes;
+            for j in 0..k {
+                x.push(protos[c][j] + 0.3 * g.normal());
+            }
+            y.push(c);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn mlp_mini_learns() {
+        let mut t = make("mlp_mini", 32, Accel::Blocked, "adam");
+        let (x, y) = toy_batch(32, 64, 10, 1);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..40 {
+            let (loss, _) = t.train_step(&x, &y, 0.003).unwrap();
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        assert!(last < first.unwrap() * 0.6, "{first:?} -> {last}");
+    }
+
+    #[test]
+    fn conv_net_learns() {
+        let mut t = make("cnv_mini", 16, Accel::Blocked, "adam");
+        let (x, y) = toy_batch(16, 16 * 16 * 3, 10, 2);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..25 {
+            let (loss, _) = t.train_step(&x, &y, 0.003).unwrap();
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        assert!(last < first.unwrap() * 0.8, "{first:?} -> {last}");
+    }
+
+    #[test]
+    fn bop_trains_binary_weights() {
+        let mut t = make("mlp_mini", 32, Accel::Blocked, "bop");
+        let (x, y) = toy_batch(32, 64, 10, 3);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..60 {
+            let (loss, _) = t.train_step(&x, &y, 0.001).unwrap();
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        assert!(last < first.unwrap(), "{first:?} -> {last}");
+        // weights must remain exactly binary under Bop (even slots;
+        // odd slots are BN biases)
+        for (i, w) in t.weights_snapshot().iter().enumerate() {
+            if i % 2 == 0 {
+                assert!(w.iter().all(|&v| v == 1.0 || v == -1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn naive_and_blocked_agree() {
+        let mut a = make("mlp_mini", 8, Accel::Naive, "adam");
+        let mut b = make("mlp_mini", 8, Accel::Blocked, "adam");
+        let (x, y) = toy_batch(8, 64, 10, 4);
+        for step in 0..3 {
+            let (la, _) = a.train_step(&x, &y, 0.01).unwrap();
+            let (lb, _) = b.train_step(&x, &y, 0.01).unwrap();
+            assert!((la - lb).abs() < 1e-3, "step {step}: {la} vs {lb}");
+        }
+    }
+
+    #[test]
+    fn state_is_half_of_standard() {
+        use super::super::standard::StandardTrainer;
+        let g = lower(&get("mlp").unwrap()).unwrap();
+        let s = StandardTrainer::new(&g, 16, "adam", Accel::Blocked, 1).unwrap();
+        let p = ProposedTrainer::new(&g, 16, "adam", Accel::Blocked, 1).unwrap();
+        let ratio = s.state_bytes() as f64 / p.state_bytes() as f64;
+        assert!((ratio - 2.0).abs() < 0.01, "{ratio}");
+    }
+
+    #[test]
+    fn bn_l1_forward_centers() {
+        let mut g = Pcg32::new(5);
+        let rows = 128;
+        let ch = 6;
+        let y: Vec<f32> = g.normal_vec(rows * ch).iter().map(|v| v * 2.0 + 0.5).collect();
+        let (xn, psi, omega, sgn) = bn_l1_forward_packed(&y, rows, ch, &vec![0.0; ch]);
+        for c in 0..ch {
+            let m: f32 = (0..rows).map(|r| xn[r * ch + c]).sum::<f32>() / rows as f32;
+            assert!(m.abs() < 1e-4, "{m}");
+            assert!(psi[c] > 0.0);
+            assert!(omega[c] > 0.0);
+        }
+        // packed signs match xn signs (beta = 0)
+        for r in 0..rows {
+            for c in 0..ch {
+                assert_eq!(
+                    sgn.get(r, c),
+                    if xn[r * ch + c] >= 0.0 { 1.0 } else { -1.0 }
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn proposed_bn_backward_matches_ref_math() {
+        // cross-check against the formula (mirrors python ref.py)
+        let mut g = Pcg32::new(6);
+        let (rows, ch) = (32, 4);
+        let dx = g.normal_vec(rows * ch);
+        let xh_f: Vec<f32> = g.normal_vec(rows * ch);
+        let xhat = BitMatrix::pack(rows, ch, &xh_f);
+        let omega: Vec<f32> = (0..ch).map(|_| g.uniform(0.1, 1.0)).collect();
+        let psi: Vec<f32> = (0..ch).map(|_| g.uniform(0.1, 1.0)).collect();
+        let (dy, dbeta) = bn_proposed_backward_packed(&dx, &xhat, &omega, &psi, rows, ch);
+        for c in 0..ch {
+            let v: Vec<f32> = (0..rows).map(|r| dx[r * ch + c] / psi[c]).collect();
+            let mv: f32 = v.iter().sum::<f32>() / rows as f32;
+            let mvx: f32 = (0..rows)
+                .map(|r| v[r] * xhat.get(r, c))
+                .sum::<f32>()
+                / rows as f32;
+            for r in 0..rows {
+                let want = v[r] - mv - omega[c] * mvx * xhat.get(r, c);
+                assert!((dy[r * ch + c] - want).abs() < 1e-5);
+            }
+            let db: f32 = (0..rows).map(|r| dx[r * ch + c]).sum();
+            assert!((dbeta[c] - db).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn eval_does_not_mutate() {
+        let mut t = make("mlp_mini", 8, Accel::Blocked, "adam");
+        let (x, y) = toy_batch(8, 64, 10, 7);
+        let before = t.weights_snapshot();
+        t.eval(&x, &y).unwrap();
+        assert_eq!(before, t.weights_snapshot());
+    }
+}

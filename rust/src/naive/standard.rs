@@ -1,0 +1,760 @@
+//! Algorithm 1 — Courbariaux & Bengio's standard BNN training step,
+//! float32 everywhere, ℓ2 batch normalization.
+//!
+//! Memory behaviour is the point: every layer's input activations are
+//! retained in f32 between forward and backward (Fig. 1's red
+//! dependency), pool masks are f32-indexed, weights/momenta/grads are
+//! f32 — exactly the left half of Table 2, so the tracking allocator
+//! measures what the paper's standard prototype measured.
+
+use anyhow::{bail, Result};
+
+use super::plan::{LayerPlan, Plan};
+use super::{glorot_init, softmax_xent_grad, Accel, StepEngine};
+use crate::bitops::gemm::{gemm_f32, gemm_f32_naive};
+use crate::models::Graph;
+use crate::optim::{OptState, Store};
+use crate::util::rng::Pcg32;
+
+pub struct StandardTrainer {
+    plan: Plan,
+    batch: usize,
+    accel: Accel,
+    // parameters (f32 latent weights, clipped to [-1,1]) + BN biases
+    weights: Vec<Store>,
+    betas: Vec<Store>,
+    opt_w: Vec<OptState>,
+    opt_b: Vec<OptState>,
+    // retained per step (transient between fwd and bwd)
+    acts: Vec<Vec<f32>>,       // f32 activations per layer boundary
+    pool_masks: Vec<Vec<u32>>, // argmax index per pooled cell (f32-class storage)
+    bn_mu: Vec<Vec<f32>>,
+    bn_psi: Vec<Vec<f32>>,
+}
+
+impl StandardTrainer {
+    pub fn new(
+        graph: &Graph,
+        batch: usize,
+        optimizer: &str,
+        accel: Accel,
+        seed: u64,
+    ) -> Result<StandardTrainer> {
+        let plan = Plan::from_graph(graph)?;
+        if batch == 0 {
+            bail!("batch must be positive");
+        }
+        let mut rng = Pcg32::new(seed);
+        let mut weights = Vec::new();
+        let mut betas = Vec::new();
+        let mut opt_w = Vec::new();
+        let mut opt_b = Vec::new();
+        for l in &plan.layers {
+            let wl = l.weight_len();
+            if wl == 0 {
+                continue;
+            }
+            let w = glorot_init(&mut rng, l.fan_in(), l.channels(), wl);
+            weights.push(Store::F32(w));
+            betas.push(Store::F32(vec![0.0; l.channels()]));
+            opt_w.push(OptState::new(optimizer, wl, false));
+            opt_b.push(OptState::new(optimizer, l.channels(), false));
+        }
+        Ok(StandardTrainer {
+            plan,
+            batch,
+            accel,
+            weights,
+            betas,
+            opt_w,
+            opt_b,
+            acts: Vec::new(),
+            pool_masks: Vec::new(),
+            bn_mu: Vec::new(),
+            bn_psi: Vec::new(),
+        })
+    }
+
+    /// GEMM dispatch honoring the accel mode.
+    fn gemm(&self, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+        match self.accel {
+            Accel::Naive => gemm_f32_naive(m, k, n, a, b, out),
+            Accel::Blocked => gemm_f32(m, k, n, a, b, out),
+        }
+    }
+
+    /// Forward through all layers, retaining f32 activations; returns
+    /// logits.  `retain` disables residual storage for eval.
+    fn forward(&mut self, x: &[f32], retain: bool) -> Result<Vec<f32>> {
+        let b = self.batch;
+        self.acts.clear();
+        self.pool_masks.clear();
+        self.bn_mu.clear();
+        self.bn_psi.clear();
+
+        let mut cur = x.to_vec();
+        let mut wi = 0;
+        for li in 0..self.plan.layers.len() {
+            let layer = self.plan.layers[li].clone();
+            match layer {
+                LayerPlan::Dense { k, n, first } => {
+                    if retain {
+                        self.acts.push(cur.clone()); // retained X_l (f32!)
+                    }
+                    // binarize input (except first layer) + weights
+                    let a = if first { cur.clone() } else { sign_vec(&cur) };
+                    let bw = sign_vec(&self.weights[wi].to_f32());
+                    let mut y = vec![0.0f32; b * n];
+                    self.gemm(b, k, n, &a, &bw, &mut y);
+                    let (xn, mu, psi) = bn_l2_forward(&y, b, n, &self.betas[wi].to_f32());
+                    if retain {
+                        self.bn_mu.push(mu);
+                        self.bn_psi.push(psi);
+                        self.acts.push(xn.clone()); // x_{l+1} retained
+                    }
+                    cur = xn;
+                    wi += 1;
+                }
+                LayerPlan::Conv { h, w, cin, cout, kside, first } => {
+                    if retain {
+                        self.acts.push(cur.clone());
+                    }
+                    let a = if first { cur.clone() } else { sign_vec(&cur) };
+                    let bw = sign_vec(&self.weights[wi].to_f32());
+                    let y = self.conv_forward(&a, &bw, b, h, w, cin, cout, kside);
+                    let (xn, mu, psi) =
+                        bn_l2_forward(&y, b * h * w, cout, &self.betas[wi].to_f32());
+                    if retain {
+                        self.bn_mu.push(mu);
+                        self.bn_psi.push(psi);
+                        self.acts.push(xn.clone());
+                    }
+                    cur = xn;
+                    wi += 1;
+                }
+                LayerPlan::MaxPool { h, w, c } => {
+                    let (out, mask) = maxpool_forward(&cur, b, h, w, c);
+                    if retain {
+                        self.pool_masks.push(mask);
+                    }
+                    cur = out;
+                }
+                LayerPlan::Flatten => { /* layout already flat NHWC */ }
+            }
+        }
+        Ok(cur)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn conv_forward(
+        &self,
+        a: &[f32],
+        w: &[f32],
+        b: usize,
+        h: usize,
+        wd: usize,
+        cin: usize,
+        cout: usize,
+        kside: usize,
+    ) -> Vec<f32> {
+        match self.accel {
+            Accel::Blocked => {
+                // im2col (transient memory-for-speed buffer) + GEMM
+                let k = kside * kside * cin;
+                let cols = im2col(a, b, h, wd, cin, kside);
+                let mut y = vec![0.0f32; b * h * wd * cout];
+                gemm_f32(b * h * wd, k, cout, &cols, w, &mut y);
+                y
+            }
+            Accel::Naive => conv_direct(a, w, b, h, wd, cin, cout, kside),
+        }
+    }
+
+    fn backward(&mut self, dlogits: Vec<f32>, lr: f32) -> Result<()> {
+        let b = self.batch;
+        let mut dcur = dlogits;
+        let mut wi = self.weights.len();
+        let mut act_i = self.acts.len();
+        let mut pool_i = self.pool_masks.len();
+
+        for st in self.opt_w.iter_mut().chain(self.opt_b.iter_mut()) {
+            st.tick();
+        }
+
+        for li in (0..self.plan.layers.len()).rev() {
+            let layer = self.plan.layers[li].clone();
+            match layer {
+                LayerPlan::Dense { k, n, first } => {
+                    wi -= 1;
+                    act_i -= 2;
+                    let xn = &self.acts[act_i + 1];
+                    let xin = &self.acts[act_i];
+                    let rows = b;
+                    let (dy, dbeta) = bn_l2_backward(
+                        &dcur,
+                        xn,
+                        &self.betas[wi].to_f32(),
+                        &self.bn_psi[wi],
+                        rows,
+                        n,
+                    );
+                    let xhat = if first { xin.clone() } else { sign_vec(xin) };
+                    let bw = sign_vec(&self.weights[wi].to_f32());
+                    // dX = dY @ W^T  (W^T materialized transiently)
+                    let wt = transpose(&bw, k, n);
+                    let mut dx = vec![0.0f32; rows * k];
+                    self.gemm(rows, n, k, &dy, &wt, &mut dx);
+                    if !first {
+                        ste_mask_apply(&mut dx, xin);
+                    }
+                    // dW = X̂^T dY
+                    let xt = transpose(&xhat, rows, k);
+                    let mut dw = vec![0.0f32; k * n];
+                    self.gemm(k, rows, n, &xt, &dy, &mut dw);
+                    cancel_wgrad(&mut dw, &self.weights[wi]);
+                    self.opt_w[wi].update(&mut self.weights[wi], &dw, lr, true);
+                    self.opt_b[wi].update(&mut self.betas[wi], &dbeta, lr, false);
+                    dcur = dx;
+                }
+                LayerPlan::Conv { h, w, cin, cout, kside, first } => {
+                    wi -= 1;
+                    act_i -= 2;
+                    let rows = b * h * w;
+                    let xn = &self.acts[act_i + 1];
+                    let xin = &self.acts[act_i];
+                    let (dy, dbeta) = bn_l2_backward(
+                        &dcur,
+                        xn,
+                        &self.betas[wi].to_f32(),
+                        &self.bn_psi[wi],
+                        rows,
+                        cout,
+                    );
+                    let xhat = if first { xin.clone() } else { sign_vec(xin) };
+                    let bw = sign_vec(&self.weights[wi].to_f32());
+                    let k = kside * kside * cin;
+                    // dX via col2im(dY @ W^T); dW via cols^T dY
+                    let wt = transpose(&bw, k, cout);
+                    let mut dcols = vec![0.0f32; rows * k];
+                    self.gemm(rows, cout, k, &dy, &wt, &mut dcols);
+                    let mut dx = col2im(&dcols, b, h, w, cin, kside);
+                    if !first {
+                        ste_mask_apply(&mut dx, xin);
+                    }
+                    let cols = im2col(&xhat, b, h, w, cin, kside);
+                    let colst = transpose(&cols, rows, k);
+                    let mut dw = vec![0.0f32; k * cout];
+                    self.gemm(k, rows, cout, &colst, &dy, &mut dw);
+                    cancel_wgrad(&mut dw, &self.weights[wi]);
+                    self.opt_w[wi].update(&mut self.weights[wi], &dw, lr, true);
+                    self.opt_b[wi].update(&mut self.betas[wi], &dbeta, lr, false);
+                    dcur = dx;
+                }
+                LayerPlan::MaxPool { h, w, c } => {
+                    pool_i -= 1;
+                    dcur = maxpool_backward(&dcur, &self.pool_masks[pool_i], b, h, w, c);
+                }
+                LayerPlan::Flatten => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+impl StepEngine for StandardTrainer {
+    fn train_step(&mut self, x: &[f32], labels: &[usize], lr: f32) -> Result<(f32, f32)> {
+        if x.len() != self.batch * self.plan.input_elems || labels.len() != self.batch {
+            bail!("bad batch shapes");
+        }
+        let logits = self.forward(x, true)?;
+        let classes = self.plan.classes;
+        let mut dlogits = vec![0.0f32; self.batch * classes];
+        let (loss, acc) = softmax_xent_grad(&logits, labels, classes, &mut dlogits);
+        self.backward(dlogits, lr)?;
+        // drop per-step residuals (lifetimes end with the step)
+        self.acts.clear();
+        self.pool_masks.clear();
+        self.bn_mu.clear();
+        self.bn_psi.clear();
+        Ok((loss, acc))
+    }
+
+    fn eval(&mut self, x: &[f32], labels: &[usize]) -> Result<(f32, f32)> {
+        let logits = self.forward(x, false)?;
+        let classes = self.plan.classes;
+        let mut d = vec![0.0f32; self.batch * classes];
+        Ok(softmax_xent_grad(&logits, labels, classes, &mut d))
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.weights.iter().map(Store::heap_bytes).sum::<usize>()
+            + self.betas.iter().map(Store::heap_bytes).sum::<usize>()
+            + self.opt_w.iter().map(OptState::heap_bytes).sum::<usize>()
+            + self.opt_b.iter().map(OptState::heap_bytes).sum::<usize>()
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn weights_snapshot(&self) -> Vec<Vec<f32>> {
+        // interleaved [w0, beta0, ...] — see ProposedTrainer
+        let mut out = Vec::with_capacity(self.weights.len() * 2);
+        for (w, b) in self.weights.iter().zip(&self.betas) {
+            out.push(w.to_f32());
+            out.push(b.to_f32());
+        }
+        out
+    }
+
+    fn load_weights(&mut self, w: &[Vec<f32>]) -> Result<()> {
+        if w.len() != self.weights.len() * 2 {
+            bail!("snapshot layer count mismatch");
+        }
+        for (i, chunk) in w.chunks(2).enumerate() {
+            if chunk[0].len() != self.weights[i].len()
+                || chunk[1].len() != self.betas[i].len()
+            {
+                bail!("snapshot shape mismatch at layer {i}");
+            }
+            self.weights[i] = Store::F32(chunk[0].clone());
+            self.betas[i] = Store::F32(chunk[1].clone());
+        }
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------- shared helpers
+// (pub(crate): the proposed engine reuses the float kernels)
+
+pub(crate) fn sign_vec(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect()
+}
+
+pub(crate) fn transpose(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut t = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            t[c * rows + r] = a[r * cols + c];
+        }
+    }
+    t
+}
+
+/// STE gradient cancellation: dx ⊙ 1{|x| ≤ 1}.
+pub(crate) fn ste_mask_apply(dx: &mut [f32], x: &[f32]) {
+    for (d, &v) in dx.iter_mut().zip(x) {
+        if v.abs() > 1.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// Weight gradient cancellation (Courbariaux): zero where |w| > 1.
+pub(crate) fn cancel_wgrad(dw: &mut [f32], w: &Store) {
+    for (i, d) in dw.iter_mut().enumerate() {
+        if w.get(i).abs() > 1.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// ℓ2 batch norm forward over (rows × channels): Alg. 1 lines 5-7.
+pub(crate) fn bn_l2_forward(
+    y: &[f32],
+    rows: usize,
+    channels: usize,
+    beta: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut mu = vec![0.0f32; channels];
+    let mut psi = vec![0.0f32; channels];
+    for r in 0..rows {
+        for c in 0..channels {
+            mu[c] += y[r * channels + c];
+        }
+    }
+    for m in mu.iter_mut() {
+        *m /= rows as f32;
+    }
+    for r in 0..rows {
+        for c in 0..channels {
+            let d = y[r * channels + c] - mu[c];
+            psi[c] += d * d;
+        }
+    }
+    for p in psi.iter_mut() {
+        *p = (*p / rows as f32 + 1e-5).sqrt();
+    }
+    let mut xn = vec![0.0f32; y.len()];
+    for r in 0..rows {
+        for c in 0..channels {
+            xn[r * channels + c] = (y[r * channels + c] - mu[c]) / psi[c] + beta[c];
+        }
+    }
+    (xn, mu, psi)
+}
+
+/// ℓ2 batch norm backward: Alg. 1 lines 10-13 (xn is x_{l+1}).
+pub(crate) fn bn_l2_backward(
+    dx: &[f32],
+    x_next: &[f32],
+    beta: &[f32],
+    psi: &[f32],
+    rows: usize,
+    channels: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut mean_v = vec![0.0f32; channels];
+    let mut mean_vx = vec![0.0f32; channels];
+    let mut dbeta = vec![0.0f32; channels];
+    for r in 0..rows {
+        for c in 0..channels {
+            let v = dx[r * channels + c] / psi[c];
+            let xn = x_next[r * channels + c] - beta[c];
+            mean_v[c] += v;
+            mean_vx[c] += v * xn;
+            dbeta[c] += dx[r * channels + c];
+        }
+    }
+    for c in 0..channels {
+        mean_v[c] /= rows as f32;
+        mean_vx[c] /= rows as f32;
+    }
+    let mut dy = vec![0.0f32; dx.len()];
+    for r in 0..rows {
+        for c in 0..channels {
+            let v = dx[r * channels + c] / psi[c];
+            let xn = x_next[r * channels + c] - beta[c];
+            dy[r * channels + c] = v - mean_v[c] - mean_vx[c] * xn;
+        }
+    }
+    (dy, dbeta)
+}
+
+/// 2×2 max pool (NHWC); mask stores the winning cell index (0..4).
+pub(crate) fn maxpool_forward(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) -> (Vec<f32>, Vec<u32>) {
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; b * oh * ow * c];
+    let mut mask = vec![0u32; b * oh * ow * c];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut bidx = 0u32;
+                    for (i, (dy, dx)) in
+                        [(0, 0), (0, 1), (1, 0), (1, 1)].iter().enumerate()
+                    {
+                        let v = x[((bi * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ch];
+                        if v > best {
+                            best = v;
+                            bidx = i as u32;
+                        }
+                    }
+                    let o = ((bi * oh + oy) * ow + ox) * c + ch;
+                    out[o] = best;
+                    mask[o] = bidx;
+                }
+            }
+        }
+    }
+    (out, mask)
+}
+
+pub(crate) fn maxpool_backward(
+    dout: &[f32],
+    mask: &[u32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) -> Vec<f32> {
+    let (oh, ow) = (h / 2, w / 2);
+    let mut dx = vec![0.0f32; b * h * w * c];
+    const OFF: [(usize, usize); 4] = [(0, 0), (0, 1), (1, 0), (1, 1)];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    let o = ((bi * oh + oy) * ow + ox) * c + ch;
+                    let (dy, dxo) = OFF[mask[o] as usize];
+                    dx[((bi * h + oy * 2 + dy) * w + ox * 2 + dxo) * c + ch] = dout[o];
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// im2col for stride-1 SAME kxk conv, NHWC: output (B·H·W, k²·Cin).
+pub(crate) fn im2col(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kside: usize,
+) -> Vec<f32> {
+    let k = kside * kside * cin;
+    let pad = (kside - 1) / 2;
+    let mut cols = vec![0.0f32; b * h * w * k];
+    for bi in 0..b {
+        for y in 0..h {
+            for x0 in 0..w {
+                let row = ((bi * h + y) * w + x0) * k;
+                let mut idx = row;
+                for ky in 0..kside {
+                    let sy = y as isize + ky as isize - pad as isize;
+                    for kx in 0..kside {
+                        let sx = x0 as isize + kx as isize - pad as isize;
+                        if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
+                            let src = ((bi * h + sy as usize) * w + sx as usize) * cin;
+                            cols[idx..idx + cin].copy_from_slice(&x[src..src + cin]);
+                        }
+                        idx += cin;
+                    }
+                }
+            }
+        }
+    }
+    cols
+}
+
+/// col2im: scatter-add patch grads back to the input grad (SAME, s=1).
+pub(crate) fn col2im(
+    dcols: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kside: usize,
+) -> Vec<f32> {
+    let k = kside * kside * cin;
+    let pad = (kside - 1) / 2;
+    let mut dx = vec![0.0f32; b * h * w * cin];
+    for bi in 0..b {
+        for y in 0..h {
+            for x0 in 0..w {
+                let row = ((bi * h + y) * w + x0) * k;
+                let mut idx = row;
+                for ky in 0..kside {
+                    let sy = y as isize + ky as isize - pad as isize;
+                    for kx in 0..kside {
+                        let sx = x0 as isize + kx as isize - pad as isize;
+                        if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
+                            let dst = ((bi * h + sy as usize) * w + sx as usize) * cin;
+                            for ci in 0..cin {
+                                dx[dst + ci] += dcols[idx + ci];
+                            }
+                        }
+                        idx += cin;
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Direct SAME stride-1 convolution (naïve mode: no im2col buffer).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_direct(
+    x: &[f32],
+    wgt: &[f32], // (k², cin, cout) flattened as kside*kside*cin rows × cout
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    kside: usize,
+) -> Vec<f32> {
+    let pad = (kside - 1) / 2;
+    let mut y = vec![0.0f32; b * h * w * cout];
+    for bi in 0..b {
+        for oy in 0..h {
+            for ox in 0..w {
+                let orow = ((bi * h + oy) * w + ox) * cout;
+                for ky in 0..kside {
+                    let sy = oy as isize + ky as isize - pad as isize;
+                    if sy < 0 || sy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kside {
+                        let sx = ox as isize + kx as isize - pad as isize;
+                        if sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        let xrow = ((bi * h + sy as usize) * w + sx as usize) * cin;
+                        let wrow = (ky * kside + kx) * cin;
+                        for ci in 0..cin {
+                            let xv = x[xrow + ci];
+                            let wr = (wrow + ci) * cout;
+                            for co in 0..cout {
+                                y[orow + co] += xv * wgt[wr + co];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{get, lower};
+
+    fn make(model: &str, batch: usize, accel: Accel) -> StandardTrainer {
+        let g = lower(&get(model).unwrap()).unwrap();
+        StandardTrainer::new(&g, batch, "adam", accel, 42).unwrap()
+    }
+
+    fn toy_batch(n: usize, k: usize, classes: usize, seed: u64) -> (Vec<f32>, Vec<usize>) {
+        let mut g = Pcg32::new(seed);
+        let protos: Vec<Vec<f32>> = (0..classes).map(|_| g.normal_vec(k)).collect();
+        let mut x = Vec::with_capacity(n * k);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = i % classes;
+            for j in 0..k {
+                x.push(protos[c][j] + 0.3 * g.normal());
+            }
+            y.push(c);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn mlp_mini_learns() {
+        let mut t = make("mlp_mini", 32, Accel::Blocked);
+        let (x, y) = toy_batch(32, 64, 10, 1);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..40 {
+            let (loss, _) = t.train_step(&x, &y, 0.003).unwrap();
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        assert!(last < first.unwrap() * 0.5, "{first:?} -> {last}");
+    }
+
+    #[test]
+    fn conv_net_learns() {
+        let mut t = make("cnv_mini", 16, Accel::Blocked);
+        let (x, y) = toy_batch(16, 16 * 16 * 3, 10, 2);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..25 {
+            let (loss, _) = t.train_step(&x, &y, 0.003).unwrap();
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        assert!(last < first.unwrap() * 0.75, "{first:?} -> {last}");
+    }
+
+    #[test]
+    fn naive_and_blocked_agree() {
+        let mut a = make("mlp_mini", 8, Accel::Naive);
+        let mut b = make("mlp_mini", 8, Accel::Blocked);
+        let (x, y) = toy_batch(8, 64, 10, 3);
+        for step in 0..3 {
+            let (la, _) = a.train_step(&x, &y, 0.01).unwrap();
+            let (lb, _) = b.train_step(&x, &y, 0.01).unwrap();
+            assert!((la - lb).abs() < 1e-4, "step {step}: {la} vs {lb}");
+        }
+        for (wa, wb) in a.weights_snapshot().iter().zip(b.weights_snapshot().iter()) {
+            for (u, v) in wa.iter().zip(wb) {
+                assert!((u - v).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_direct_matches_im2col_gemm() {
+        let mut g = Pcg32::new(4);
+        let (b, h, w, cin, cout, kside) = (2, 5, 5, 3, 4, 3);
+        let x = g.normal_vec(b * h * w * cin);
+        let wg = g.normal_vec(kside * kside * cin * cout);
+        let direct = conv_direct(&x, &wg, b, h, w, cin, cout, kside);
+        let cols = im2col(&x, b, h, w, cin, kside);
+        let mut gemm_out = vec![0.0f32; b * h * w * cout];
+        gemm_f32(b * h * w, kside * kside * cin, cout, &cols, &wg, &mut gemm_out);
+        for i in 0..direct.len() {
+            assert!((direct[i] - gemm_out[i]).abs() < 1e-4, "{i}");
+        }
+    }
+
+    #[test]
+    fn col2im_adjoint_of_im2col() {
+        // <im2col(x), c> == <x, col2im(c)> (adjointness)
+        let mut g = Pcg32::new(5);
+        let (b, h, w, cin, kside) = (1, 4, 4, 2, 3);
+        let x = g.normal_vec(b * h * w * cin);
+        let cvec = g.normal_vec(b * h * w * kside * kside * cin);
+        let cx = im2col(&x, b, h, w, cin, kside);
+        let ic: f32 = cx.iter().zip(&cvec).map(|(a, b)| a * b).sum();
+        let xc = col2im(&cvec, b, h, w, cin, kside);
+        let ci: f32 = x.iter().zip(&xc).map(|(a, b)| a * b).sum();
+        assert!((ic - ci).abs() < 1e-3, "{ic} vs {ci}");
+    }
+
+    #[test]
+    fn maxpool_roundtrip() {
+        let x = vec![
+            1.0, 5.0, 2.0, 0.0, //
+            3.0, 4.0, 8.0, 1.0, //
+            0.0, 2.0, 1.0, 1.0, //
+            9.0, 1.0, 0.0, 3.0,
+        ];
+        let (out, mask) = maxpool_forward(&x, 1, 4, 4, 1);
+        assert_eq!(out, vec![5.0, 8.0, 9.0, 3.0]);
+        let dx = maxpool_backward(&[1.0, 2.0, 3.0, 4.0], &mask, 1, 4, 4, 1);
+        assert_eq!(dx.iter().filter(|&&v| v != 0.0).count(), 4);
+        assert_eq!(dx[1], 1.0); // the 5.0 cell
+        assert_eq!(dx[12], 3.0); // the 9.0 cell
+    }
+
+    #[test]
+    fn bn_l2_normalizes() {
+        let mut g = Pcg32::new(6);
+        let rows = 64;
+        let ch = 4;
+        let y: Vec<f32> = g.normal_vec(rows * ch).iter().map(|v| v * 3.0 + 1.0).collect();
+        let (xn, _, _) = bn_l2_forward(&y, rows, ch, &vec![0.0; ch]);
+        for c in 0..ch {
+            let m: f32 = (0..rows).map(|r| xn[r * ch + c]).sum::<f32>() / rows as f32;
+            let v: f32 =
+                (0..rows).map(|r| (xn[r * ch + c] - m).powi(2)).sum::<f32>() / rows as f32;
+            assert!(m.abs() < 1e-4);
+            assert!((v - 1.0).abs() < 0.05, "{v}");
+        }
+    }
+
+    #[test]
+    fn eval_does_not_mutate() {
+        let mut t = make("mlp_mini", 8, Accel::Blocked);
+        let (x, y) = toy_batch(8, 64, 10, 7);
+        let before = t.weights_snapshot();
+        t.eval(&x, &y).unwrap();
+        assert_eq!(before, t.weights_snapshot());
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let mut a = make("mlp_mini", 8, Accel::Blocked);
+        let mut b = make("mlp_mini", 8, Accel::Blocked);
+        let (x, y) = toy_batch(8, 64, 10, 8);
+        a.train_step(&x, &y, 0.01).unwrap();
+        b.load_weights(&a.weights_snapshot()).unwrap();
+        let (la, _) = a.eval(&x, &y).unwrap();
+        let (lb, _) = b.eval(&x, &y).unwrap();
+        assert!((la - lb).abs() < 1e-6);
+    }
+}

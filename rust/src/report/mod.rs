@@ -1,0 +1,162 @@
+//! Paper-style table/series rendering: every bench funnels its
+//! results through here so stdout and `results/*.md` look like the
+//! paper's tables.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::memmodel::Breakdown;
+use crate::util::table::{factor, f, pp, Align, Table};
+use crate::util::MIB;
+
+/// Table 2: per-variable breakdown, standard vs proposed.
+pub fn table2(std: &Breakdown, prop: &Breakdown) -> String {
+    let mut t = Table::new(
+        &format!(
+            "Table 2 — {} training memory (B={})",
+            std.model, std.batch
+        ),
+        &["Variable", "Std dtype", "Std MiB", "Prop dtype", "Prop MiB", "delta"],
+    )
+    .align(0, Align::Left);
+    for row in &std.rows {
+        let p = prop.row(row.name);
+        let (pd, pm, delta) = match p {
+            Some(p) => (
+                p.dtype.name().to_string(),
+                f(p.bytes / MIB, 2),
+                factor(row.bytes / p.bytes),
+            ),
+            None => ("-".into(), "-".into(), "-".into()),
+        };
+        t.row(&[
+            row.name.to_string(),
+            row.dtype.name().to_string(),
+            f(row.bytes / MIB, 2),
+            pd,
+            pm,
+            delta,
+        ]);
+    }
+    t.row(&[
+        "Total".to_string(),
+        String::new(),
+        f(std.total_mib(), 2),
+        String::new(),
+        f(prop.total_mib(), 2),
+        factor(std.total_bytes() / prop.total_bytes()),
+    ]);
+    t.to_markdown()
+}
+
+/// Accuracy-delta row formatting (Tables 3-6): value + Δpp column.
+pub struct AccRow {
+    pub label: String,
+    pub baseline_acc: f32,
+    pub acc: f32,
+    pub mib: Option<f64>,
+    pub mib_factor: Option<f64>,
+}
+
+pub fn acc_table(title: &str, rows: &[AccRow]) -> String {
+    let mut t = Table::new(
+        title,
+        &["Configuration", "Acc %", "delta pp", "Modeled MiB", "delta x"],
+    )
+    .align(0, Align::Left);
+    for r in rows {
+        t.row(&[
+            r.label.clone(),
+            f(r.acc as f64 * 100.0, 2),
+            pp((r.acc - r.baseline_acc) as f64 * 100.0),
+            r.mib.map(|m| f(m, 2)).unwrap_or_else(|| "-".into()),
+            r.mib_factor.map(factor).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.to_markdown()
+}
+
+/// (x, series...) curves as a markdown table (Figs. 2/3/4/5/6/7).
+pub fn series_table(
+    title: &str,
+    x_label: &str,
+    series_labels: &[&str],
+    points: &[(f64, Vec<Option<f64>>)],
+    decimals: usize,
+) -> String {
+    let mut header = vec![x_label];
+    header.extend_from_slice(series_labels);
+    let mut t = Table::new(title, &header);
+    for (x, ys) in points {
+        let mut row = vec![f(*x, 0)];
+        for y in ys {
+            row.push(y.map(|v| f(v, decimals)).unwrap_or_else(|| "-".into()));
+        }
+        t.row(&row);
+    }
+    t.to_markdown()
+}
+
+/// Append a rendered section to results/<file> (creating dirs).
+pub fn write_section<P: AsRef<Path>>(path: P, content: &str) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&path, content)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memmodel::{breakdown, DtypeConfig, Optimizer};
+    use crate::models::{get, lower};
+
+    #[test]
+    fn table2_renders() {
+        let g = lower(&get("binarynet").unwrap()).unwrap();
+        let s = breakdown(&g, 100, &DtypeConfig::standard(), Optimizer::Adam);
+        let p = breakdown(&g, 100, &DtypeConfig::proposed(), Optimizer::Adam);
+        let md = table2(&s, &p);
+        assert!(md.contains("| X "));
+        assert!(md.contains("512.8"));
+        assert!(md.contains("138.")); // total
+        assert!(md.contains("32.00x")); // X reduction
+    }
+
+    #[test]
+    fn acc_table_renders_deltas() {
+        let rows = vec![
+            AccRow {
+                label: "standard".into(),
+                baseline_acc: 0.887,
+                acc: 0.887,
+                mib: Some(512.81),
+                mib_factor: None,
+            },
+            AccRow {
+                label: "proposed".into(),
+                baseline_acc: 0.887,
+                acc: 0.891,
+                mib: Some(138.15),
+                mib_factor: Some(3.71),
+            },
+        ];
+        let md = acc_table("Table 4", &rows);
+        assert!(md.contains("+0.40"));
+        assert!(md.contains("3.71x"));
+    }
+
+    #[test]
+    fn series_renders_gaps() {
+        let md = series_table(
+            "Fig 2",
+            "batch",
+            &["std", "prop"],
+            &[(16.0, vec![Some(1.0), Some(2.0)]), (64.0, vec![None, Some(3.0)])],
+            1,
+        );
+        assert!(md.contains("| -"));
+    }
+}

@@ -1,0 +1,69 @@
+//! Golden records: fixed-seed step inputs/outputs dumped by aot.py as
+//! flat little-endian f32.  The Rust runtime must reproduce the
+//! outputs bit-for-bit-ish (<= 1e-5) — this is the cross-language
+//! numerical contract between L2 (JAX) and L3.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+use super::Tensor;
+
+pub struct Golden {
+    pub inputs: Vec<Tensor>,
+    pub outputs: Vec<Tensor>,
+}
+
+impl Golden {
+    pub fn load(dir: &Path, manifest: &Manifest) -> Result<Golden> {
+        let info = manifest
+            .golden
+            .as_ref()
+            .with_context(|| format!("artifact '{}' has no golden", manifest.name))?;
+        let raw = std::fs::read(dir.join(&info.file))?;
+        if raw.len() % 4 != 0 {
+            bail!("golden blob length {} not a multiple of 4", raw.len());
+        }
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        if info.sections.len() != info.n_inputs + info.n_outputs {
+            bail!("golden section count mismatch");
+        }
+        let specs: Vec<&super::IoSpec> = manifest
+            .inputs
+            .iter()
+            .chain(manifest.outputs.iter())
+            .collect();
+        if specs.len() != info.sections.len() {
+            bail!(
+                "golden sections ({}) != manifest io count ({})",
+                info.sections.len(),
+                specs.len()
+            );
+        }
+
+        let mut tensors = Vec::with_capacity(specs.len());
+        for (spec, &(off, len)) in specs.iter().zip(&info.sections) {
+            if spec.numel() != len {
+                bail!(
+                    "golden section for '{}' has {} elements, shape {:?} wants {}",
+                    spec.name,
+                    len,
+                    spec.shape,
+                    spec.numel()
+                );
+            }
+            let data = floats
+                .get(off..off + len)
+                .context("golden section out of range")?
+                .to_vec();
+            tensors.push(Tensor::new(spec.shape.clone(), data)?);
+        }
+        let outputs = tensors.split_off(info.n_inputs);
+        Ok(Golden { inputs: tensors, outputs })
+    }
+}

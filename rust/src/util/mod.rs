@@ -1,0 +1,29 @@
+//! Zero-dependency substrates.
+//!
+//! This offline image can only resolve the `xla` crate's vendored
+//! dependency closure — no serde, clap, tokio, rand or criterion — so
+//! everything a production launcher normally pulls from crates.io is
+//! implemented here, small and tested:
+//!
+//! - [`json`]  — recursive-descent JSON parser + writer (manifests,
+//!              metrics, configs)
+//! - [`f16`]   — IEEE binary16 and bfloat16 conversion (storage
+//!              emulation for the naive engine + memory accounting)
+//! - [`rng`]   — PCG32/xorshift RNG + normal sampling (datasets, init)
+//! - [`stats`] — mean/stddev/percentiles + online Welford accumulator
+//! - [`cli`]   — flag parser for the launcher and examples
+//! - [`table`] — paper-style aligned table rendering
+//! - [`bench`] — criterion-style timing harness for `cargo bench`
+
+pub mod bench;
+pub mod cli;
+pub mod f16;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Mebibytes, the paper's memory unit.
+pub const MIB: f64 = 1024.0 * 1024.0;
+/// Gibibytes (Table 6's unit).
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;

@@ -1,0 +1,167 @@
+//! PCG32 RNG + distributions.  Deterministic, seedable, dependency-free
+//! (crates.io `rand` is unreachable offline).  Used for dataset
+//! synthesis, weight init, shuffling and the property-test harness.
+
+/// PCG-XSH-RR 64/32 (O'Neill 2014).
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64) -> Pcg32 {
+        Pcg32::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Pcg32 {
+        let mut r = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        r.next_u32();
+        r.state = r.state.wrapping_add(seed);
+        r.next_u32();
+        r
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Uniform integer in [0, n).  Rejection-free bounded sampling
+    /// (Lemire) is overkill here; modulo bias is < 2^-24 for our n.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f32();
+            if u1 <= f32::EPSILON {
+                continue;
+            }
+            let u2 = self.next_f32();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return r * (2.0 * std::f32::consts::PI * u2).cos();
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Glorot/Xavier uniform init (paper Sec. 3 cites Glorot & Bengio).
+    pub fn glorot(&mut self, fan_in: usize, fan_out: usize, n: usize) -> Vec<f32> {
+        let limit = (6.0 / (fan_in + fan_out) as f32).sqrt();
+        (0..n).map(|_| self.uniform(-limit, limit)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let va: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let vb: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut g = Pcg32::new(3);
+        let n = 100_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let x = g.next_f32();
+            assert!((0.0..1.0).contains(&x));
+            sum += x as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut g = Pcg32::new(4);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = g.normal() as f64;
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "{mean}");
+        assert!((var - 1.0).abs() < 0.03, "{var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut g = Pcg32::new(5);
+        let mut v: Vec<usize> = (0..100).collect();
+        g.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut g = Pcg32::new(6);
+        for _ in 0..10_000 {
+            assert!(g.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn glorot_limits() {
+        let mut g = Pcg32::new(7);
+        let w = g.glorot(100, 50, 1000);
+        let lim = (6.0f32 / 150.0).sqrt();
+        assert!(w.iter().all(|&x| x.abs() <= lim));
+        assert!(w.iter().any(|&x| x.abs() > lim * 0.5));
+    }
+}

@@ -1,0 +1,136 @@
+//! Paper-style aligned table rendering for the report module and
+//! bench harness output (`results/*.md` and stdout).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+#[derive(Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    align: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            align: header
+                .iter()
+                .map(|_| Align::Right)
+                .collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn align(mut self, idx: usize, a: Align) -> Table {
+        self.align[idx] = a;
+        self
+    }
+
+    pub fn row<S: ToString>(&mut self, cells: &[S]) -> &mut Table {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.iter().map(|c| c.to_string()).collect());
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as GitHub-flavored markdown (also readable on a tty).
+    pub fn to_markdown(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        let fmt_row = |cells: &[String], out: &mut String| {
+            out.push('|');
+            for (i, c) in cells.iter().enumerate() {
+                let cell = match self.align[i] {
+                    Align::Left => format!(" {:<width$} ", c, width = w[i]),
+                    Align::Right => format!(" {:>width$} ", c, width = w[i]),
+                };
+                out.push_str(&cell);
+                out.push('|');
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &mut out);
+        out.push('|');
+        for (i, wi) in w.iter().enumerate() {
+            let dashes = "-".repeat(*wi);
+            match self.align[i] {
+                Align::Left => out.push_str(&format!(" {dashes} |")),
+                Align::Right => out.push_str(&format!(" {dashes}:|")),
+            }
+        }
+        out.push('\n');
+        for r in &self.rows {
+            fmt_row(r, &mut out);
+        }
+        out
+    }
+}
+
+/// Format a float with `d` decimals.
+pub fn f(x: f64, d: usize) -> String {
+    format!("{x:.d$}")
+}
+
+/// Format a reduction factor "3.71x".
+pub fn factor(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// Format a signed pp delta "+0.35" / "-1.34".
+pub fn pp(x: f64) -> String {
+    format!("{x:+.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new("T", &["Model", "Acc"]).align(0, Align::Left);
+        t.row(&["mlp", "98.2"]);
+        t.row(&["binarynet", "88.7"]);
+        let md = t.to_markdown();
+        assert!(md.contains("### T"));
+        assert!(md.contains("| Model     |  Acc |"));
+        assert!(md.contains("| binarynet | 88.7 |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(&["only-one"]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(factor(3.714), "3.71x");
+        assert_eq!(pp(0.35), "+0.35");
+        assert_eq!(pp(-1.34), "-1.34");
+    }
+}

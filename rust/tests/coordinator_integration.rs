@@ -1,0 +1,117 @@
+//! Coordinator integration over the HLO engine: full runs, cross-
+//! engine weight transfer, dev-based LR behaviour, and the memory
+//! envelope on real configurations.
+
+use bnn_edge::coordinator::{EngineKind, MemoryEnvelope, RunConfig, Runner};
+
+fn base(engine: EngineKind) -> RunConfig {
+    RunConfig {
+        engine,
+        n_train: 640,
+        n_test: 128,
+        epochs: 8,
+        eval_every_steps: 10,
+        batch: 64,
+        lr: 0.003,
+        artifacts_dir: std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts"),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn hlo_run_proposed_learns() {
+    let mut r = Runner::new(base(EngineKind::Hlo)).unwrap();
+    let res = r.run().unwrap();
+    assert!(res.best_test_acc > 0.22, "acc {}", res.best_test_acc);
+    assert!(res.metrics.steps_monotone());
+    let first = res.metrics.points.first().unwrap().train_loss;
+    assert!(res.final_train_loss < first);
+}
+
+#[test]
+fn hlo_run_standard_learns() {
+    let mut cfg = base(EngineKind::Hlo);
+    cfg.algo = "standard".into();
+    let mut r = Runner::new(cfg).unwrap();
+    let res = r.run().unwrap();
+    assert!(res.best_test_acc > 0.25, "acc {}", res.best_test_acc);
+}
+
+#[test]
+fn metrics_jsonl_written() {
+    let path = std::env::temp_dir().join("bnn_edge_test_metrics.jsonl");
+    let mut cfg = base(EngineKind::Hlo);
+    cfg.epochs = 1;
+    cfg.metrics_path = Some(path.clone());
+    Runner::new(cfg).unwrap().run().unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.lines().count() >= 10);
+    for line in text.lines() {
+        bnn_edge::util::json::Json::parse(line).unwrap();
+    }
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn seeds_change_results_deterministically() {
+    let run = |seed: u64| {
+        let mut cfg = base(EngineKind::Blocked);
+        cfg.epochs = 1;
+        cfg.seed = seed;
+        Runner::new(cfg).unwrap().run().unwrap().final_train_loss
+    };
+    let a1 = run(1);
+    let a2 = run(1);
+    let b = run(2);
+    assert_eq!(a1, a2, "same seed must reproduce bit-identically");
+    assert_ne!(a1, b, "different seeds must differ");
+}
+
+#[test]
+fn envelope_rejects_oversized_hlo_run() {
+    let mut cfg = base(EngineKind::Hlo);
+    cfg.envelope = Some(MemoryEnvelope::mib(0.01));
+    assert!(Runner::new(cfg).is_err());
+}
+
+#[test]
+fn weights_transfer_naive_to_hlo_eval() {
+    // train with the pure-Rust engine, evaluate through the HLO eval
+    // artifact: snapshots are engine-portable (same [w, beta] layout)
+    use bnn_edge::coordinator::HloEngine;
+    use bnn_edge::models::{get, lower};
+    use bnn_edge::naive::{build_engine, Accel, StepEngine};
+    use bnn_edge::runtime::Engine;
+
+    let graph = lower(&get("mlp_mini").unwrap()).unwrap();
+    let ds = bnn_edge::data::build("syn-mnist64", 256, 64, 3).unwrap();
+    let mut naive = build_engine("proposed", &graph, 64, "adam", Accel::Blocked, 3).unwrap();
+    for step in 0..12 {
+        let lo = (step * 64) % 192;
+        let x = &ds.train_x[lo * 64..(lo + 64) * 64];
+        let y = &ds.train_y[lo..lo + 64];
+        naive.train_step(x, y, 0.003).unwrap();
+    }
+    let eng = Engine::cpu(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    )
+    .unwrap();
+    let mut hlo = HloEngine::new(
+        &eng,
+        "mlp_mini_proposed_adam_b64",
+        Some("mlp_mini_proposed_b64_eval"),
+        0,
+    )
+    .unwrap();
+    hlo.load_weights(&naive.weights_snapshot()).unwrap();
+    let (l_naive, a_naive) = naive.eval(&ds.test_x, &ds.test_y).unwrap();
+    let (l_hlo, a_hlo) = hlo.eval(&ds.test_x, &ds.test_y).unwrap();
+    // same weights, same eval batch: same numbers (f16 storage in the
+    // naive engine vs f32 interchange costs a little slack)
+    assert!(
+        (l_naive - l_hlo).abs() < 0.05 * l_naive.max(l_hlo),
+        "loss {l_naive} vs {l_hlo}"
+    );
+    assert!((a_naive - a_hlo).abs() <= 0.08, "acc {a_naive} vs {a_hlo}");
+}

@@ -1,0 +1,149 @@
+//! Engine parity: the pure-Rust naive engines agree with the
+//! Python-lowered HLO step on identical inputs — DESIGN.md's
+//! "Engines agree" invariant, cross-language and cross-implementation.
+//!
+//! Uses the golden records (fixed-seed params/batch dumped by aot.py):
+//! the naive StandardTrainer ingests the golden parameters and batch
+//! and must reproduce the golden loss/accuracy.
+
+use bnn_edge::models::{get, lower};
+use bnn_edge::naive::{Accel, StandardTrainer, StepEngine};
+use bnn_edge::runtime::{Engine, IoKind};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn naive_standard_matches_hlo_golden_loss() {
+    let eng = Engine::cpu(artifacts_dir()).unwrap();
+    let name = "mlp_mini_standard_adam_b64";
+    let art = eng.load(name).unwrap();
+    let golden = eng.golden(name).unwrap();
+    let m = &art.manifest;
+
+    // golden params -> naive engine (snapshot layout = [w, beta, ...])
+    let graph = lower(&get("mlp_mini").unwrap()).unwrap();
+    let mut naive = StandardTrainer::new(&graph, m.batch, "adam", Accel::Blocked, 0).unwrap();
+    let params: Vec<Vec<f32>> = m
+        .input_indices(IoKind::Param)
+        .into_iter()
+        .map(|i| golden.inputs[i].data.clone())
+        .collect();
+    naive.load_weights(&params).unwrap();
+
+    // golden batch
+    let xi = m.input_indices(IoKind::X)[0];
+    let yi = m.input_indices(IoKind::Y)[0];
+    let x = &golden.inputs[xi].data;
+    let labels: Vec<usize> = golden.inputs[yi]
+        .data
+        .chunks(m.classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        })
+        .collect();
+
+    let (loss, acc) = naive.train_step(x, &labels, 0.001).unwrap();
+    let loss_idx = m.output_index("loss").unwrap() ;
+    let acc_idx = m.output_index("acc").unwrap();
+    let want_loss = golden.outputs[loss_idx].item().unwrap();
+    let want_acc = golden.outputs[acc_idx].item().unwrap();
+
+    assert!(
+        (loss - want_loss).abs() < 5e-3,
+        "loss: naive {loss} vs HLO {want_loss}"
+    );
+    assert!(
+        (acc - want_acc).abs() < 1e-6,
+        "acc: naive {acc} vs HLO {want_acc}"
+    );
+}
+
+#[test]
+fn naive_and_hlo_converge_to_similar_loss() {
+    // run both engines for 15 steps on the same fixed batch from the
+    // golden record; final losses must be in the same regime
+    let eng = Engine::cpu(artifacts_dir()).unwrap();
+    let name = "mlp_mini_standard_adam_b64";
+    let art = eng.load(name).unwrap();
+    let golden = eng.golden(name).unwrap();
+    let m = &art.manifest;
+
+    let xi = m.input_indices(IoKind::X)[0];
+    let yi = m.input_indices(IoKind::Y)[0];
+    let x = golden.inputs[xi].data.clone();
+    let labels: Vec<usize> = golden.inputs[yi]
+        .data
+        .chunks(m.classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        })
+        .collect();
+
+    // HLO side
+    let mut inputs = golden.inputs.clone();
+    let n_state = m.input_indices(IoKind::Param).len() + m.input_indices(IoKind::Opt).len();
+    let loss_idx = m.output_index("loss").unwrap();
+    let mut hlo_loss = 0.0;
+    for _ in 0..15 {
+        let outs = art.run(&inputs).unwrap();
+        hlo_loss = outs[loss_idx].item().unwrap();
+        for (i, t) in outs.into_iter().take(n_state).enumerate() {
+            inputs[i] = t;
+        }
+    }
+
+    // naive side, from the same golden init
+    let graph = lower(&get("mlp_mini").unwrap()).unwrap();
+    let mut naive = StandardTrainer::new(&graph, m.batch, "adam", Accel::Blocked, 0).unwrap();
+    let params: Vec<Vec<f32>> = m
+        .input_indices(IoKind::Param)
+        .into_iter()
+        .map(|i| golden.inputs[i].data.clone())
+        .collect();
+    naive.load_weights(&params).unwrap();
+    let mut nv_loss = 0.0;
+    for _ in 0..15 {
+        let (l, _) = naive.train_step(&x, &labels, 0.001).unwrap();
+        nv_loss = l;
+    }
+
+    assert!(
+        (hlo_loss - nv_loss).abs() < 0.25 * hlo_loss.max(nv_loss),
+        "divergent training: hlo {hlo_loss} vs naive {nv_loss}"
+    );
+}
+
+#[test]
+fn conv_golden_pallas_agrees() {
+    // the pallas conv artifact (im2col + binary_matmul kernel) golden
+    // validates the channel-ordering fix across the whole stack
+    let eng = Engine::cpu(artifacts_dir()).unwrap();
+    let name = "cnv_mini_proposed_adam_b100_pallas";
+    let art = eng.load(name).unwrap();
+    let golden = eng.golden(name).unwrap();
+    let outs = art.run(&golden.inputs).unwrap();
+    for (i, (got, want)) in outs.iter().zip(&golden.outputs).enumerate() {
+        let d = got.max_abs_diff(want);
+        // Accumulation-order differences between the tracing-time
+        // interpret run (golden) and the compiled HLO can flip the
+        // *sign* of a near-zero dW accumulation, which binarization
+        // then amplifies to a 2/sqrt(N) step in the Adam moments.
+        // Params move by <= 2*lr from such a flip; moments by
+        // 2*(1-b1)/sqrt(N).  Kind-aware tolerances:
+        let tol = match art.manifest.outputs[i].kind {
+            bnn_edge::runtime::IoKind::Opt => 5e-2,
+            _ => 5e-3,
+        };
+        assert!(d <= tol, "output {i} ('{}') diff {d}", art.manifest.outputs[i].name);
+    }
+}

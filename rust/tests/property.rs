@@ -1,0 +1,205 @@
+//! Randomized property tests (mini-proptest: seeded PCG sweeps with
+//! failure-case printing) over the substrates' invariants —
+//! DESIGN.md §Key-invariants.
+
+use bnn_edge::bitops::{gemm, BitMatrix};
+use bnn_edge::data;
+use bnn_edge::federated::sign_vote;
+use bnn_edge::memmodel::{breakdown, DtypeConfig, Optimizer};
+use bnn_edge::models::{get, lower, names};
+use bnn_edge::util::f16::{f16_bits_to_f32, f32_to_f16_bits, q16};
+use bnn_edge::util::json::Json;
+use bnn_edge::util::rng::Pcg32;
+
+const CASES: usize = 60;
+
+#[test]
+fn prop_memmodel_monotone_in_batch() {
+    // modeled footprint is monotone nondecreasing in batch size for
+    // every model / config / optimizer
+    let mut g = Pcg32::new(1);
+    for _ in 0..CASES {
+        let model = names()[g.below(names().len())];
+        let graph = lower(&get(model).unwrap()).unwrap();
+        let cfg = match g.below(3) {
+            0 => DtypeConfig::standard(),
+            1 => DtypeConfig::proposed(),
+            _ => DtypeConfig::ablation("boolgrad_l1").unwrap(),
+        };
+        let opt = [Optimizer::Adam, Optimizer::Sgd, Optimizer::Bop][g.below(3)];
+        let b1 = 1 + g.below(500);
+        let b2 = b1 + 1 + g.below(500);
+        let m1 = breakdown(&graph, b1, &cfg, opt).total_bytes();
+        let m2 = breakdown(&graph, b2, &cfg, opt).total_bytes();
+        assert!(m2 >= m1, "{model} {b1}->{b2}: {m1} > {m2}");
+    }
+}
+
+#[test]
+fn prop_proposed_never_larger_than_standard() {
+    let mut g = Pcg32::new(2);
+    for _ in 0..CASES {
+        let model = names()[g.below(names().len())];
+        let graph = lower(&get(model).unwrap()).unwrap();
+        let b = 1 + g.below(1000);
+        for opt in [Optimizer::Adam, Optimizer::Sgd, Optimizer::Bop] {
+            let s = breakdown(&graph, b, &DtypeConfig::standard(), opt).total_bytes();
+            let p = breakdown(&graph, b, &DtypeConfig::proposed(), opt).total_bytes();
+            assert!(p < s, "{model} b={b}: proposed {p} >= standard {s}");
+            // and the saving is at least 2x (the f16 floor)
+            assert!(s / p >= 2.0, "{model} b={b}: only {}x", s / p);
+        }
+    }
+}
+
+#[test]
+fn prop_breakdown_total_is_row_sum() {
+    let mut g = Pcg32::new(3);
+    for _ in 0..CASES {
+        let model = names()[g.below(names().len())];
+        let graph = lower(&get(model).unwrap()).unwrap();
+        let b = 1 + g.below(300);
+        let bd = breakdown(&graph, b, &DtypeConfig::proposed(), Optimizer::Adam);
+        let sum: f64 = bd.rows.iter().map(|r| r.bytes).sum();
+        assert!((sum - bd.total_bytes()).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn prop_xnor_gemm_matches_dense_reference() {
+    let mut g = Pcg32::new(4);
+    for case in 0..CASES {
+        let m = 1 + g.below(12);
+        let k = 1 + g.below(200);
+        let n = 1 + g.below(12);
+        let a = g.normal_vec(m * k);
+        let bt = g.normal_vec(n * k);
+        let ap = BitMatrix::pack(m, k, &a);
+        let btp = BitMatrix::pack(n, k, &bt);
+        let mut fast = vec![0.0; m * n];
+        gemm::xnor_gemm(&ap, &btp, &mut fast);
+        let sgn = |x: f32| if x >= 0.0 { 1.0 } else { -1.0f32 };
+        for i in 0..m {
+            for j in 0..n {
+                let mut want = 0.0;
+                for kk in 0..k {
+                    want += sgn(a[i * k + kk]) * sgn(bt[j * k + kk]);
+                }
+                assert_eq!(fast[i * n + j], want, "case {case} ({m},{k},{n})@({i},{j})");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_f16_roundtrip_error_bounded() {
+    // |q16(x) - x| <= 2^-11 * |x| for normal-range values (half ULP)
+    let mut g = Pcg32::new(5);
+    for _ in 0..10_000 {
+        let x = (g.next_f32() - 0.5) * 2000.0;
+        if x.abs() < 1e-4 {
+            continue;
+        }
+        let err = (q16(x) - x).abs();
+        assert!(err <= x.abs() * 4.9e-4, "x={x} err={err}");
+    }
+}
+
+#[test]
+fn prop_f16_order_preserving() {
+    let mut g = Pcg32::new(6);
+    for _ in 0..5_000 {
+        let a = (g.next_f32() - 0.5) * 100.0;
+        let b = (g.next_f32() - 0.5) * 100.0;
+        if a < b {
+            assert!(q16(a) <= q16(b), "{a} {b}");
+        }
+    }
+}
+
+#[test]
+fn prop_f16_bits_exhaustive_finite_roundtrip() {
+    // every finite f16 bit pattern round-trips exactly through f32
+    for bits in 0..=0xffffu16 {
+        let exp = (bits >> 10) & 0x1f;
+        if exp == 31 {
+            continue; // inf/nan
+        }
+        let x = f16_bits_to_f32(bits);
+        assert_eq!(f32_to_f16_bits(x), bits, "bits {bits:#06x} -> {x}");
+    }
+}
+
+#[test]
+fn prop_sign_vote_bounded_and_odd() {
+    // |vote| <= 1, and vote(-updates) == -vote(updates)
+    let mut g = Pcg32::new(7);
+    for _ in 0..CASES {
+        let n = 1 + g.below(100);
+        let k = 1 + g.below(7);
+        let ms: Vec<BitMatrix> = (0..k)
+            .map(|_| BitMatrix::pack(1, n, &g.normal_vec(n)))
+            .collect();
+        let refs: Vec<&BitMatrix> = ms.iter().collect();
+        let v = sign_vote(&refs);
+        assert!(v.iter().all(|&x| (-1..=1).contains(&x)));
+        // negate all updates: flip every bit
+        let neg: Vec<BitMatrix> = ms
+            .iter()
+            .map(|m| {
+                let vals: Vec<f32> = m.unpack().iter().map(|x| -x).collect();
+                BitMatrix::pack(1, n, &vals)
+            })
+            .collect();
+        let nrefs: Vec<&BitMatrix> = neg.iter().collect();
+        let nv = sign_vote(&nrefs);
+        for (a, b) in v.iter().zip(&nv) {
+            assert_eq!(*a, -b);
+        }
+    }
+}
+
+#[test]
+fn prop_dataset_deterministic_and_disjoint_splits() {
+    let mut g = Pcg32::new(8);
+    for _ in 0..10 {
+        let seed = g.next_u64();
+        let a = data::build("syn-cifar16", 64, 32, seed).unwrap();
+        let b = data::build("syn-cifar16", 64, 32, seed).unwrap();
+        assert_eq!(a.train_x, b.train_x);
+        assert_eq!(a.test_x, b.test_x);
+        // train and test are different draws
+        assert_ne!(a.train_x[..100], a.test_x[..100]);
+    }
+}
+
+#[test]
+fn prop_json_numeric_roundtrip() {
+    let mut g = Pcg32::new(9);
+    for _ in 0..500 {
+        let x = (g.next_f32() as f64 - 0.5) * 10f64.powi(g.below(9) as i32 - 4);
+        let s = Json::Num(x).to_string();
+        let back = Json::parse(&s).unwrap().as_f64().unwrap();
+        assert!(
+            (back - x).abs() <= x.abs() * 1e-9 + 1e-12,
+            "{x} -> {s} -> {back}"
+        );
+    }
+}
+
+#[test]
+fn prop_bitmatrix_pack_get_agree() {
+    let mut g = Pcg32::new(10);
+    for _ in 0..CASES {
+        let r = 1 + g.below(20);
+        let c = 1 + g.below(200);
+        let xs = g.normal_vec(r * c);
+        let m = BitMatrix::pack(r, c, &xs);
+        for _ in 0..20 {
+            let i = g.below(r);
+            let j = g.below(c);
+            let want = if xs[i * c + j] >= 0.0 { 1.0 } else { -1.0 };
+            assert_eq!(m.get(i, j), want);
+        }
+    }
+}
