@@ -1,78 +1,154 @@
-//! §Perf microbenches — the L3 hot paths.
+//! §Perf microbenches — the L3 hot paths, swept across every GEMM
+//! backend tier (naive / blocked / tiled×threads).
 //!
-//! XNOR-popcount GEMM (naive vs blocked) vs dense f32 GEMM at the
-//! paper's layer shapes, plus pack/transpose overheads and the naive
-//! engines' full step time.  Results feed EXPERIMENTS.md §Perf.
+//! Emits `BENCH_gemm.json` (stable schema: `{backend, m, k, n,
+//! giops, threads}`) so each PR's throughput is diffable against the
+//! last — the perf trajectory the CI smoke job archives.  Also times
+//! the word-level pack/transpose overheads (the energy model's
+//! E_PACK term) and full naive-engine step times (Fig. 7's time
+//! axis).
+//!
+//! Flags: `--smoke` (quick sampling + trimmed shape set for CI; the
+//! acceptance shape is still included so the CI artifact records the
+//! tiled-vs-blocked ratio), `--out PATH` (default `BENCH_gemm.json`),
+//! `--backends naive,blocked,tiled` (optional subset; tiled uses
+//! `--threads`, 0 = auto).
 
 mod common;
 
-use bnn_edge::bitops::{gemm, BitMatrix};
+use bnn_edge::bitops::{gemm, Backend, BitMatrix};
 use bnn_edge::data::build;
 use bnn_edge::models::{get, lower};
 use bnn_edge::naive::{build_engine, Accel};
-use bnn_edge::util::bench::{black_box, Bencher};
+use bnn_edge::util::bench::{black_box, write_json_rows, Bencher};
+use bnn_edge::util::cli::Args;
+use bnn_edge::util::json::Json;
 use bnn_edge::util::rng::Pcg32;
 
 fn main() {
-    let mut bench = Bencher::default();
+    let args = Args::from_env();
+    let smoke = args.bool("smoke");
+    let out_path = args.str_or("out", "BENCH_gemm.json");
+    let mut bench = if smoke { Bencher::quick() } else { Bencher::default() };
     let mut g = Pcg32::new(1);
 
-    // BinaryNet fc1-class GEMM: (100 x 8192) @ (8192 x 1024)
-    // and a conv-class GEMM: (6400 x 1152) @ (1152 x 128)
-    for (m, k, n, label) in [
-        (100, 8192, 1024, "fc1 100x8192x1024"),
-        (512, 1152, 128, "conv 512x1152x128"),
-    ] {
+    // default sweep: every tier, tiled at 1/2/4 threads; `--backends`
+    // narrows it (names parsed by Backend::parse, tiled honoring
+    // `--threads`)
+    let backends: Vec<Backend> = match args.get("backends") {
+        None => vec![
+            Backend::Naive,
+            Backend::Blocked,
+            Backend::Tiled { threads: 1 },
+            Backend::Tiled { threads: 2 },
+            Backend::Tiled { threads: 4 },
+        ],
+        Some(list) => list
+            .split(',')
+            .map(|s| Backend::parse(s.trim(), args.threads().unwrap_or(0)))
+            .collect::<Result<_, _>>()
+            .expect("--backends"),
+    };
+
+    // Headline first: the ISSUE acceptance shape (BinaryNet fc
+    // class) is benched even in smoke mode so the CI artifact always
+    // records the tiled-vs-blocked ratio at the shape the acceptance
+    // criterion names; full mode adds the fc1/conv-class shapes.
+    let shapes: &[(usize, usize, usize, &str)] = if smoke {
+        &[
+            (256, 4096, 4096, "fc 256x4096x4096"),
+            (64, 512, 256, "smoke 64x512x256"),
+        ]
+    } else {
+        &[
+            (256, 4096, 4096, "fc 256x4096x4096"),
+            (100, 8192, 1024, "fc1 100x8192x1024"),
+            (512, 1152, 128, "conv 512x1152x128"),
+        ]
+    };
+
+    let mut rows: Vec<Json> = Vec::new();
+    for &(m, k, n, label) in shapes {
         let a = g.normal_vec(m * k);
-        let b = g.normal_vec(n * k); // already transposed layout
+        let bt = g.normal_vec(n * k); // already transposed layout
         let ap = BitMatrix::pack(m, k, &a);
-        let btp = BitMatrix::pack(n, k, &b);
+        let btp = BitMatrix::pack(n, k, &bt);
         let mut out = vec![0.0f32; m * n];
-
-        bench.bench(&format!("xnor_naive   {label}"), || {
-            gemm::xnor_gemm_naive(&ap, &btp, &mut out);
-            black_box(out[0]);
-        });
-        bench.bench(&format!("xnor_blocked {label}"), || {
-            gemm::xnor_gemm(&ap, &btp, &mut out);
-            black_box(out[0]);
-        });
-        // dense f32 comparison (what the standard engine pays)
-        let bt = g.normal_vec(k * n);
-        bench.bench(&format!("f32_blocked  {label}"), || {
-            gemm::gemm_f32(m, k, n, &a, &bt, &mut out);
-            black_box(out[0]);
-        });
         let ops = 2.0 * (m * k * n) as f64;
-        let r = bench.results();
-        let tx = r[r.len() - 2].median_s();
-        let tf = r[r.len() - 1].median_s();
-        println!(
-            "  -> xnor {:.2} Gop/s, f32 {:.2} GFLOP/s, xnor speedup {:.1}x",
-            ops / tx / 1e9,
-            ops / tf / 1e9,
-            tf / tx
-        );
-    }
 
-    // pack/unpack overhead (the energy model's E_PACK term)
-    let xs = g.normal_vec(100 * 8192);
-    bench.bench("pack 100x8192", || {
-        black_box(BitMatrix::pack(100, 8192, &xs));
-    });
-
-    // full naive-engine step times (Fig. 7's time axis)
-    for (model, batch) in [("mlp", 100), ("binarynet_mini", 32)] {
-        let graph = lower(&get(model).unwrap()).unwrap();
-        let ds = build(bnn_edge::config::dataset_for(model), batch, 0, 1).unwrap();
-        for (algo, accel, label) in [
-            ("standard", Accel::Blocked, "blocked std"),
-            ("proposed", Accel::Blocked, "blocked prop"),
-        ] {
-            let mut e = build_engine(algo, &graph, batch, "adam", accel, 1).unwrap();
-            bench.bench(&format!("step {label} {model} b{batch}"), || {
-                e.train_step(&ds.train_x, &ds.train_y, 0.001).unwrap();
+        let mut blocked_giops = 0.0f64;
+        for &be in &backends {
+            let r = bench.bench(&format!("xnor {:<9} {label}", be.label()), || {
+                be.xnor_gemm(&ap, &btp, &mut out);
+                black_box(out[0]);
             });
+            let giops = r.giops(ops);
+            if be == Backend::Blocked {
+                blocked_giops = giops;
+            }
+            let rel = if blocked_giops > 0.0 {
+                format!(" ({:.2}x blocked)", giops / blocked_giops)
+            } else {
+                String::new()
+            };
+            println!("  -> {:<9} {label}: {giops:.2} GiOp/s{rel}", be.label());
+            let mut row = Json::obj();
+            row.set("backend", Json::from(be.name()));
+            row.set("m", Json::from(m));
+            row.set("k", Json::from(k));
+            row.set("n", Json::from(n));
+            row.set("giops", Json::from(giops));
+            row.set("threads", Json::from(be.threads()));
+            rows.push(row);
+        }
+
+        // dense f32 comparison (what the standard engine pays) —
+        // skipped on the headline shape, where scalar f32 would take
+        // tens of seconds per iteration
+        if m * k * n <= 1_000_000_000 {
+            let b = g.normal_vec(k * n);
+            let r = bench.bench(&format!("f32 blocked   {label}"), || {
+                gemm::gemm_f32(m, k, n, &a, &b, &mut out);
+                black_box(out[0]);
+            });
+            println!(
+                "  -> f32 blocked {label}: {:.2} GFLOP/s",
+                r.giops(ops)
+            );
         }
     }
+
+    // pack / transpose overhead (the energy model's E_PACK term) —
+    // both word-level now
+    let (pr, pc) = if smoke { (64, 512) } else { (100, 8192) };
+    let xs = g.normal_vec(pr * pc);
+    bench.bench(&format!("pack {pr}x{pc}"), || {
+        black_box(BitMatrix::pack(pr, pc, &xs));
+    });
+    let packed = BitMatrix::pack(pr, pc, &xs);
+    bench.bench(&format!("bit transpose {pr}x{pc}"), || {
+        black_box(packed.transpose());
+    });
+
+    // full naive-engine step times (Fig. 7's time axis), now with the
+    // tiled backend alongside
+    if !smoke {
+        for (model, batch) in [("mlp", 100), ("binarynet_mini", 32)] {
+            let graph = lower(&get(model).unwrap()).unwrap();
+            let ds = build(bnn_edge::config::dataset_for(model), batch, 0, 1).unwrap();
+            for (algo, accel, label) in [
+                ("standard", Accel::Blocked, "blocked std"),
+                ("proposed", Accel::Blocked, "blocked prop"),
+                ("proposed", Accel::Tiled(0), "tiled   prop"),
+            ] {
+                let mut e = build_engine(algo, &graph, batch, "adam", accel, 1).unwrap();
+                bench.bench(&format!("step {label} {model} b{batch}"), || {
+                    e.train_step(&ds.train_x, &ds.train_y, 0.001).unwrap();
+                });
+            }
+        }
+    }
+
+    write_json_rows(&out_path, rows).expect("write BENCH_gemm.json");
+    println!("wrote {out_path}");
 }

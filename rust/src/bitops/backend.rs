@@ -1,0 +1,135 @@
+//! Kernel dispatch: one enum selects which GEMM tier every engine,
+//! bench and CLI entry point runs.
+//!
+//! - [`Backend::Naive`]   — triple-loop kernels, minimal buffers (the
+//!   paper's naïve prototype).
+//! - [`Backend::Blocked`] — 1×4 register-blocked XNOR kernel + cache-
+//!   blocked f32 GEMM (the original "CBLAS" path of Fig. 7).
+//! - [`Backend::Tiled`]   — 4×4 MR×NR micro-kernel with K-word tiling,
+//!   row-parallel over a worker [`Pool`] (`threads = 1` is the pure
+//!   single-core tiled kernel).
+//!
+//! The enum is `Copy` and carries its thread count, so engines stash
+//! one and dispatch per matmul with zero setup cost.  Thread counts
+//! come from config/CLI (`--engine tiled --threads N`, `0` = auto).
+
+use anyhow::{bail, Result};
+
+use super::{gemm, BitMatrix, Pool};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Naive,
+    Blocked,
+    Tiled { threads: usize },
+}
+
+impl Backend {
+    /// Parse a backend name; `threads` applies to `tiled` (0 = auto,
+    /// resolved immediately so the choice is recorded deterministically).
+    pub fn parse(s: &str, threads: usize) -> Result<Backend> {
+        Ok(match s {
+            "naive" => Backend::Naive,
+            "blocked" => Backend::Blocked,
+            "tiled" => Backend::Tiled { threads: Pool::new(threads).threads() },
+            _ => bail!("unknown backend '{s}' (naive|blocked|tiled)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Naive => "naive",
+            Backend::Blocked => "blocked",
+            Backend::Tiled { .. } => "tiled",
+        }
+    }
+
+    /// Worker count this backend will use (1 for the serial tiers).
+    pub fn threads(&self) -> usize {
+        match self {
+            Backend::Tiled { threads } => Pool::new(*threads).threads(),
+            _ => 1,
+        }
+    }
+
+    /// Display label, e.g. `tiled(4)`.
+    pub fn label(&self) -> String {
+        match self {
+            Backend::Tiled { .. } => format!("tiled({})", self.threads()),
+            _ => self.name().to_string(),
+        }
+    }
+
+    /// Packed ±1 GEMM: out (m×n) = a (m×k) @ b (k×n), `b_t` packed
+    /// transposed.  All tiers are bit-exact.
+    pub fn xnor_gemm(&self, a: &BitMatrix, b_t: &BitMatrix, out: &mut [f32]) {
+        match self {
+            Backend::Naive => gemm::xnor_gemm_naive(a, b_t, out),
+            Backend::Blocked => gemm::xnor_gemm(a, b_t, out),
+            Backend::Tiled { threads } => {
+                gemm::xnor_gemm_parallel(a, b_t, out, &Pool::new(*threads))
+            }
+        }
+    }
+
+    /// Dense f32 GEMM: out = a (m×k) @ b (k×n).
+    pub fn gemm_f32(&self, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+        match self {
+            Backend::Naive => gemm::gemm_f32_naive(m, k, n, a, b, out),
+            Backend::Blocked => gemm::gemm_f32(m, k, n, a, b, out),
+            Backend::Tiled { threads } => {
+                gemm::gemm_f32_parallel(m, k, n, a, b, out, &Pool::new(*threads))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn parse_and_labels() {
+        assert_eq!(Backend::parse("naive", 0).unwrap(), Backend::Naive);
+        assert_eq!(Backend::parse("blocked", 7).unwrap(), Backend::Blocked);
+        match Backend::parse("tiled", 3).unwrap() {
+            Backend::Tiled { threads } => assert_eq!(threads, 3),
+            other => panic!("{other:?}"),
+        }
+        // auto thread count resolves to something positive
+        assert!(Backend::parse("tiled", 0).unwrap().threads() >= 1);
+        assert!(Backend::parse("gpu", 0).is_err());
+        assert_eq!(Backend::parse("tiled", 2).unwrap().label(), "tiled(2)");
+        assert_eq!(Backend::Blocked.label(), "blocked");
+    }
+
+    #[test]
+    fn all_backends_agree() {
+        let mut g = Pcg32::new(11);
+        let (m, k, n) = (5, 130, 7);
+        let a = g.normal_vec(m * k);
+        let bt = g.normal_vec(n * k); // transposed layout
+        let ap = BitMatrix::pack(m, k, &a);
+        let btp = BitMatrix::pack(n, k, &bt);
+        let mut want = vec![0.0; m * n];
+        Backend::Naive.xnor_gemm(&ap, &btp, &mut want);
+        for be in [Backend::Blocked, Backend::Tiled { threads: 1 }, Backend::Tiled { threads: 3 }]
+        {
+            let mut got = vec![0.0; m * n];
+            be.xnor_gemm(&ap, &btp, &mut got);
+            assert_eq!(got, want, "{}", be.label());
+        }
+
+        let b = g.normal_vec(k * n);
+        let mut fw = vec![0.0; m * n];
+        Backend::Naive.gemm_f32(m, k, n, &a, &b, &mut fw);
+        for be in [Backend::Blocked, Backend::Tiled { threads: 2 }] {
+            let mut got = vec![0.0; m * n];
+            be.gemm_f32(m, k, n, &a, &b, &mut got);
+            for i in 0..fw.len() {
+                assert!((got[i] - fw[i]).abs() < 1e-3, "{} @ {i}", be.label());
+            }
+        }
+    }
+}

@@ -1,18 +1,31 @@
 //! XNOR-popcount GEMM kernels.
 //!
-//! `xnor_gemm_naive` — straight triple loop over packed words: the
-//! paper's naïve C++ prototype equivalent.
+//! Three tiers (the backend dispatch in [`super::Backend`]):
 //!
-//! `xnor_gemm` — register-blocked 1×4 micro-kernel over the packed K
-//! axis: the "CBLAS-accelerated" path of Fig. 7 (memory-for-speed:
-//! it wants `b` pre-transposed, which the engine caches per step).
+//! - `xnor_gemm_naive` — straight triple loop over packed words: the
+//!   paper's naïve C++ prototype equivalent.
+//! - `xnor_gemm` — register-blocked 1×4 micro-kernel over the packed
+//!   K axis: the original "CBLAS-accelerated" path of Fig. 7.
+//! - `xnor_gemm_tiled` / `xnor_gemm_parallel` — 4×4 MR×NR micro-kernel
+//!   with K-word tiling (each 4-row A panel × 4-row B panel stays
+//!   L1-resident while 16 popcount accumulators stay hot), plus a
+//!   row-banded multi-threaded driver over [`super::Pool`].
 //!
-//! Both compute `out[m][n] = Σ_k a[m,k]·b[k,n]` over ±1 values where
-//! `b_t` is the transposed packed B (rows = N, cols = K).  Zero tail
-//! bits in both operands XOR to 0, so `k − 2·popcount(xor)` is exact
-//! with no padding correction.
+//! All variants compute `out[m][n] = Σ_k a[m,k]·b[k,n]` over ±1 values
+//! where `b_t` is the transposed packed B (rows = N, cols = K).  Zero
+//! tail bits in both operands XOR to 0, so `k − 2·popcount(xor)` is
+//! exact with no padding correction — every kernel here is bit-exact
+//! against `xnor_gemm_naive` (tests below + rust/tests/property.rs).
 
-use super::BitMatrix;
+use super::{BitMatrix, Pool};
+
+/// Register block sizes of the tiled micro-kernel.
+const MR: usize = 4;
+const NR: usize = 4;
+/// K-tile in packed words: a 4-row B panel of 128 words is 4 KiB
+/// (L1-resident), and 128·64 = 8192 bits bounds each u32 partial
+/// accumulator far below overflow regardless of total K.
+const KC_WORDS: usize = 128;
 
 /// Naive packed GEMM: out (m×n) f32 = a (m×k ±1) @ b (k×n ±1),
 /// with `b_t` packed transposed (n rows of k bits).
@@ -35,49 +48,164 @@ pub fn xnor_gemm_naive(a: &BitMatrix, b_t: &BitMatrix, out: &mut [f32]) {
     }
 }
 
+/// One output row via the 1×4 N-unrolled kernel (also the M-remainder
+/// path of the tiled kernel).
+#[inline]
+fn xnor_row_1x4(ar: &[u64], b_t: &BitMatrix, orow: &mut [f32], k: usize) {
+    let n = b_t.rows;
+    let kw = b_t.words_per_row;
+    let n4 = n - n % 4;
+    let kk = k as i64;
+    let mut j = 0;
+    while j < n4 {
+        let b0 = &b_t.data[j * kw..(j + 1) * kw];
+        let b1 = &b_t.data[(j + 1) * kw..(j + 2) * kw];
+        let b2 = &b_t.data[(j + 2) * kw..(j + 3) * kw];
+        let b3 = &b_t.data[(j + 3) * kw..(j + 4) * kw];
+        let (mut c0, mut c1, mut c2, mut c3) = (0u64, 0u64, 0u64, 0u64);
+        for w in 0..kw {
+            let aw = ar[w];
+            c0 += (aw ^ b0[w]).count_ones() as u64;
+            c1 += (aw ^ b1[w]).count_ones() as u64;
+            c2 += (aw ^ b2[w]).count_ones() as u64;
+            c3 += (aw ^ b3[w]).count_ones() as u64;
+        }
+        orow[j] = (kk - 2 * c0 as i64) as f32;
+        orow[j + 1] = (kk - 2 * c1 as i64) as f32;
+        orow[j + 2] = (kk - 2 * c2 as i64) as f32;
+        orow[j + 3] = (kk - 2 * c3 as i64) as f32;
+        j += 4;
+    }
+    while j < n {
+        let br = b_t.row_words(j);
+        let mut c = 0u64;
+        for w in 0..kw {
+            c += (ar[w] ^ br[w]).count_ones() as u64;
+        }
+        orow[j] = (kk - 2 * c as i64) as f32;
+        j += 1;
+    }
+}
+
 /// Blocked packed GEMM: 1×4 N-unrolled micro-kernel; ~3-4× the naive
 /// throughput at BinaryNet sizes (see benches/perf log).
 pub fn xnor_gemm(a: &BitMatrix, b_t: &BitMatrix, out: &mut [f32]) {
     assert_eq!(a.cols, b_t.cols, "K mismatch");
     let (m, n, k) = (a.rows, b_t.rows, a.cols);
     assert_eq!(out.len(), m * n);
-    let kw = a.words_per_row;
-    let n4 = n - n % 4;
-
     for i in 0..m {
-        let ar = a.row_words(i);
-        let orow = &mut out[i * n..(i + 1) * n];
+        xnor_row_1x4(a.row_words(i), b_t, &mut out[i * n..(i + 1) * n], k);
+    }
+}
+
+/// Band kernel of the tiled path: rows `row0..row0 + band.len()/n`
+/// of the output, 4×4 register blocks, K in `KC_WORDS` tiles.
+fn xnor_band(a: &BitMatrix, b_t: &BitMatrix, row0: usize, band: &mut [f32]) {
+    let n = b_t.rows;
+    if n == 0 || band.is_empty() {
+        return;
+    }
+    let k = a.cols;
+    let kw = a.words_per_row;
+    let kk = k as i64;
+    let br = band.len() / n;
+    let bdata = &b_t.data;
+    let m4 = br - br % MR;
+    let n4 = n - n % NR;
+
+    let mut i = 0;
+    while i < m4 {
+        let a0 = a.row_words(row0 + i);
+        let a1 = a.row_words(row0 + i + 1);
+        let a2 = a.row_words(row0 + i + 2);
+        let a3 = a.row_words(row0 + i + 3);
         let mut j = 0;
         while j < n4 {
-            let b0 = &b_t.data[j * kw..(j + 1) * kw];
-            let b1 = &b_t.data[(j + 1) * kw..(j + 2) * kw];
-            let b2 = &b_t.data[(j + 2) * kw..(j + 3) * kw];
-            let b3 = &b_t.data[(j + 3) * kw..(j + 4) * kw];
+            let b0 = &bdata[j * kw..(j + 1) * kw];
+            let b1 = &bdata[(j + 1) * kw..(j + 2) * kw];
+            let b2 = &bdata[(j + 2) * kw..(j + 3) * kw];
+            let b3 = &bdata[(j + 3) * kw..(j + 4) * kw];
+            // 16 mismatch totals; partials per K tile stay u32
+            let mut c = [[0u64; NR]; MR];
+            let mut w0 = 0;
+            while w0 < kw {
+                let we = (w0 + KC_WORDS).min(kw);
+                let mut p = [[0u32; NR]; MR];
+                for w in w0..we {
+                    let (aw0, aw1, aw2, aw3) = (a0[w], a1[w], a2[w], a3[w]);
+                    let (bw0, bw1, bw2, bw3) = (b0[w], b1[w], b2[w], b3[w]);
+                    p[0][0] += (aw0 ^ bw0).count_ones();
+                    p[0][1] += (aw0 ^ bw1).count_ones();
+                    p[0][2] += (aw0 ^ bw2).count_ones();
+                    p[0][3] += (aw0 ^ bw3).count_ones();
+                    p[1][0] += (aw1 ^ bw0).count_ones();
+                    p[1][1] += (aw1 ^ bw1).count_ones();
+                    p[1][2] += (aw1 ^ bw2).count_ones();
+                    p[1][3] += (aw1 ^ bw3).count_ones();
+                    p[2][0] += (aw2 ^ bw0).count_ones();
+                    p[2][1] += (aw2 ^ bw1).count_ones();
+                    p[2][2] += (aw2 ^ bw2).count_ones();
+                    p[2][3] += (aw2 ^ bw3).count_ones();
+                    p[3][0] += (aw3 ^ bw0).count_ones();
+                    p[3][1] += (aw3 ^ bw1).count_ones();
+                    p[3][2] += (aw3 ^ bw2).count_ones();
+                    p[3][3] += (aw3 ^ bw3).count_ones();
+                }
+                for ii in 0..MR {
+                    for jj in 0..NR {
+                        c[ii][jj] += p[ii][jj] as u64;
+                    }
+                }
+                w0 = we;
+            }
+            for (ii, crow) in c.iter().enumerate() {
+                let o = (i + ii) * n + j;
+                for (jj, &cv) in crow.iter().enumerate() {
+                    band[o + jj] = (kk - 2 * cv as i64) as f32;
+                }
+            }
+            j += NR;
+        }
+        // N remainder: 4 rows × 1 column
+        while j < n {
+            let bj = b_t.row_words(j);
             let (mut c0, mut c1, mut c2, mut c3) = (0u64, 0u64, 0u64, 0u64);
             for w in 0..kw {
-                let aw = ar[w];
-                c0 += (aw ^ b0[w]).count_ones() as u64;
-                c1 += (aw ^ b1[w]).count_ones() as u64;
-                c2 += (aw ^ b2[w]).count_ones() as u64;
-                c3 += (aw ^ b3[w]).count_ones() as u64;
+                let bw = bj[w];
+                c0 += (a0[w] ^ bw).count_ones() as u64;
+                c1 += (a1[w] ^ bw).count_ones() as u64;
+                c2 += (a2[w] ^ bw).count_ones() as u64;
+                c3 += (a3[w] ^ bw).count_ones() as u64;
             }
-            let kk = k as i64;
-            orow[j] = (kk - 2 * c0 as i64) as f32;
-            orow[j + 1] = (kk - 2 * c1 as i64) as f32;
-            orow[j + 2] = (kk - 2 * c2 as i64) as f32;
-            orow[j + 3] = (kk - 2 * c3 as i64) as f32;
-            j += 4;
-        }
-        while j < n {
-            let br = b_t.row_words(j);
-            let mut c = 0u64;
-            for w in 0..kw {
-                c += (ar[w] ^ br[w]).count_ones() as u64;
-            }
-            orow[j] = (k as i64 - 2 * c as i64) as f32;
+            band[i * n + j] = (kk - 2 * c0 as i64) as f32;
+            band[(i + 1) * n + j] = (kk - 2 * c1 as i64) as f32;
+            band[(i + 2) * n + j] = (kk - 2 * c2 as i64) as f32;
+            band[(i + 3) * n + j] = (kk - 2 * c3 as i64) as f32;
             j += 1;
         }
+        i += MR;
     }
+    // M remainder: 1×4 row kernel
+    while i < br {
+        xnor_row_1x4(a.row_words(row0 + i), b_t, &mut band[i * n..(i + 1) * n], k);
+        i += 1;
+    }
+}
+
+/// Tiled packed GEMM, single-threaded: the 4×4 micro-kernel alone.
+pub fn xnor_gemm_tiled(a: &BitMatrix, b_t: &BitMatrix, out: &mut [f32]) {
+    assert_eq!(a.cols, b_t.cols, "K mismatch");
+    assert_eq!(out.len(), a.rows * b_t.rows);
+    xnor_band(a, b_t, 0, out);
+}
+
+/// Tiled packed GEMM, row-parallel over `pool`: each worker owns a
+/// contiguous output band and runs the 4×4 micro-kernel on it.
+pub fn xnor_gemm_parallel(a: &BitMatrix, b_t: &BitMatrix, out: &mut [f32], pool: &Pool) {
+    assert_eq!(a.cols, b_t.cols, "K mismatch");
+    let (m, n) = (a.rows, b_t.rows);
+    assert_eq!(out.len(), m * n);
+    pool.run_rows(m, n, out, |row0, band| xnor_band(a, b_t, row0, band));
 }
 
 /// f32 reference GEMM (the standard engine's compute): out = a @ b,
@@ -134,6 +262,26 @@ pub fn gemm_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f
     }
 }
 
+/// Row-parallel tiled f32 GEMM: each worker runs the cache-blocked
+/// kernel on a contiguous M band (disjoint slices of `a` and `out`).
+pub fn gemm_f32_parallel(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    pool: &Pool,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    pool.run_rows(m, n, out, |row0, band| {
+        let rows = band.len() / n.max(1);
+        gemm_f32(rows, k, n, &a[row0 * k..(row0 + rows) * k], b, band);
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,17 +332,58 @@ mod tests {
     }
 
     #[test]
+    fn tiled_and_parallel_bit_exact_vs_naive() {
+        // odd shapes: K not a multiple of 64, M/N below the 4×4 tile,
+        // single row/col, K crossing the KC_WORDS tile boundary
+        let mut g = Pcg32::new(7);
+        for (m, k, n) in [
+            (1, 1, 1),
+            (1, 65, 1),
+            (2, 63, 3),
+            (3, 64, 4),
+            (4, 100, 4),
+            (5, 127, 9),
+            (7, 130, 6),
+            (8, 8256, 5), // kw = 129 > KC_WORDS: exercises the K tiling
+            (13, 200, 17),
+            (70, 130, 70), // 4900 output cells: crosses the pool's
+                           // MIN_PARALLEL_CELLS, so threads really band
+        ] {
+            let a = g.normal_vec(m * k);
+            let b = g.normal_vec(k * n);
+            let ap = BitMatrix::pack(m, k, &a);
+            let btp = pack_b_t(k, n, &b);
+            let mut naive = vec![0.0; m * n];
+            xnor_gemm_naive(&ap, &btp, &mut naive);
+            let mut tiled = vec![0.0; m * n];
+            xnor_gemm_tiled(&ap, &btp, &mut tiled);
+            assert_eq!(tiled, naive, "tiled {m}x{k}x{n}");
+            for threads in [1, 2, 4] {
+                let mut par = vec![0.0; m * n];
+                xnor_gemm_parallel(&ap, &btp, &mut par, &Pool::new(threads));
+                assert_eq!(par, naive, "parallel t={threads} {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
     fn xnor_extremes() {
-        // all +1 . all +1 = k; all +1 . all -1 = -k
+        // all +1 . all +1 = k; all +1 . all -1 = -k — on every kernel
         let k = 70;
         let a = BitMatrix::pack(1, k, &vec![1.0; k]);
         let bp = BitMatrix::pack(1, k, &vec![1.0; k]);
         let bn = BitMatrix::pack(1, k, &vec![-1.0; k]);
         let mut out = vec![0.0; 1];
-        xnor_gemm(&a, &bp, &mut out);
-        assert_eq!(out[0], k as f32);
-        xnor_gemm(&a, &bn, &mut out);
-        assert_eq!(out[0], -(k as f32));
+        for f in [
+            xnor_gemm as fn(&BitMatrix, &BitMatrix, &mut [f32]),
+            xnor_gemm_naive,
+            xnor_gemm_tiled,
+        ] {
+            f(&a, &bp, &mut out);
+            assert_eq!(out[0], k as f32);
+            f(&a, &bn, &mut out);
+            assert_eq!(out[0], -(k as f32));
+        }
     }
 
     #[test]
@@ -209,6 +398,13 @@ mod tests {
             gemm_f32(m, k, n, &a, &b, &mut y);
             for i in 0..x.len() {
                 assert!((x[i] - y[i]).abs() < 1e-3, "{i}: {} vs {}", x[i], y[i]);
+            }
+            // the parallel path splits only along M, so each band is
+            // the blocked kernel verbatim: results are bit-identical
+            for threads in [1, 2, 4] {
+                let mut z = vec![0.0; m * n];
+                gemm_f32_parallel(m, k, n, &a, &b, &mut z, &Pool::new(threads));
+                assert_eq!(y, z, "parallel t={threads} {m}x{k}x{n}");
             }
         }
     }

@@ -10,13 +10,26 @@
 //! — one `xor` + one `popcnt` per 64 elements, the arithmetic the
 //! paper's inference-side literature (FINN et al.) builds on and what
 //! our proposed-scheme naive engine uses for both storage (32× smaller
-//! activations) and compute.  The blocked variant is the "CBLAS"
-//! accelerated path of Fig. 7; `xnor_gemm_naive` is the paper's naïve
-//! prototype.
+//! activations) and compute.
+//!
+//! The kernel stack (see [`gemm`]) has three tiers selected by
+//! [`Backend`]: the paper's naïve prototype, the 1×4 blocked "CBLAS"
+//! path of Fig. 7, and the 4×4 tiled kernel with a row-parallel
+//! worker [`Pool`].  Packing, unpacking and transposition are all
+//! word-level (branch-free pack, 64×64 bit-block transpose) so the
+//! non-GEMM overheads stay negligible next to the popcount stream,
+//! and [`PackedWeightCache`] lets the training engines pack each
+//! layer's binarized weights once per step instead of once per matmul.
 
+pub mod backend;
+pub mod cache;
 pub mod gemm;
+pub mod pool;
 
-pub use gemm::{xnor_gemm, xnor_gemm_naive};
+pub use backend::Backend;
+pub use cache::PackedWeightCache;
+pub use gemm::{xnor_gemm, xnor_gemm_naive, xnor_gemm_parallel, xnor_gemm_tiled};
+pub use pool::Pool;
 
 /// A bit-packed ±1 matrix, row-major, rows padded to whole u64 words.
 /// Bit set ⇔ +1; zero-padded tail bits are corrected for in the GEMM.
@@ -28,6 +41,26 @@ pub struct BitMatrix {
     pub data: Vec<u64>,
 }
 
+/// Transpose a 64×64 bit block in place, word-level (Hacker's
+/// Delight 7-3, mirrored for our LSB-first column convention):
+/// log₂64 = 6 passes of masked swap instead of 4096 bit probes.
+#[inline]
+fn transpose64(a: &mut [u64; 64]) {
+    let mut j: usize = 32;
+    let mut m: u64 = 0xFFFF_FFFF_0000_0000;
+    while j != 0 {
+        let mut k: usize = 0;
+        while k < 64 {
+            let t = (a[k] ^ (a[k + j] << j)) & m;
+            a[k] ^= t;
+            a[k + j] ^= t >> j;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m >> j;
+    }
+}
+
 impl BitMatrix {
     pub fn zeros(rows: usize, cols: usize) -> BitMatrix {
         let wpr = cols.div_ceil(64);
@@ -35,17 +68,21 @@ impl BitMatrix {
     }
 
     /// Pack the signs of an f32 row-major matrix (x ≥ 0 ⇔ +1, the
-    /// paper's sgn with sgn(0) = +1).
+    /// paper's sgn with sgn(0) = +1).  Branch-free: each output word
+    /// is assembled from 64 sign tests in registers and stored once.
     pub fn pack(rows: usize, cols: usize, xs: &[f32]) -> BitMatrix {
         assert_eq!(xs.len(), rows * cols);
         let mut m = BitMatrix::zeros(rows, cols);
+        let wpr = m.words_per_row;
         for r in 0..rows {
             let row = &xs[r * cols..(r + 1) * cols];
-            let base = r * m.words_per_row;
-            for (c, &v) in row.iter().enumerate() {
-                if v >= 0.0 {
-                    m.data[base + (c >> 6)] |= 1u64 << (c & 63);
+            let words = &mut m.data[r * wpr..(r + 1) * wpr];
+            for (w, chunk) in words.iter_mut().zip(row.chunks(64)) {
+                let mut acc = 0u64;
+                for (b, &v) in chunk.iter().enumerate() {
+                    acc |= ((v >= 0.0) as u64) << b;
                 }
+                *w = acc;
             }
         }
         m
@@ -85,31 +122,65 @@ impl BitMatrix {
     /// XNOR GEMM wants — no f32 materialization, no separate
     /// transpose pass (§Perf: saves ~30% of the proposed forward).
     /// Sign convention matches `pack`: x >= 0 ⇔ +1, and -0.0 ⇔ +1.
+    ///
+    /// Word-level: 64×64 tiles are read row-major (input-sequential)
+    /// while 64 output words accumulate branch-free in registers and
+    /// are stored once each — no per-bit read-modify-write of the
+    /// output array.
     pub fn pack_f16_t(f16_bits: &[u16], k: usize, n: usize) -> BitMatrix {
         assert_eq!(f16_bits.len(), k * n);
         let mut m = BitMatrix::zeros(n, k);
-        for kk in 0..k {
-            let row = &f16_bits[kk * n..(kk + 1) * n];
-            for (j, &h) in row.iter().enumerate() {
-                // +1 unless strictly negative (sign bit set, nonzero)
-                if h >> 15 == 0 || h & 0x7fff == 0 {
-                    m.data[j * m.words_per_row + (kk >> 6)] |= 1u64 << (kk & 63);
+        let wpr = m.words_per_row;
+        let mut j0 = 0;
+        while j0 < n {
+            let jb = 64.min(n - j0);
+            for wi in 0..wpr {
+                let k0 = wi * 64;
+                let kb = 64.min(k - k0);
+                let mut words = [0u64; 64];
+                for t in 0..kb {
+                    let row = &f16_bits[(k0 + t) * n + j0..(k0 + t) * n + j0 + jb];
+                    for (jj, w) in words[..jb].iter_mut().enumerate() {
+                        let h = row[jj];
+                        // +1 unless strictly negative (sign set, nonzero)
+                        let nonneg = (h >> 15 == 0) | (h & 0x7fff == 0);
+                        *w |= (nonneg as u64) << t;
+                    }
+                }
+                for (jj, &w) in words[..jb].iter().enumerate() {
+                    m.data[(j0 + jj) * wpr + wi] = w;
                 }
             }
+            j0 += 64;
         }
         m
     }
 
-    /// Transpose (used to lay out W column-major for the GEMM).
+    /// Transpose (used to lay out W column-major for the GEMM):
+    /// 64×64 word-level block transpose, O(rows·cols/64) word ops
+    /// instead of the old O(rows·cols) bit-by-bit scatter.  Padding
+    /// bits stay zero (gathered blocks are zero-padded), preserving
+    /// the GEMM's exact-tail invariant.
     pub fn transpose(&self) -> BitMatrix {
         let mut t = BitMatrix::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            let base = r * self.words_per_row;
-            for c in 0..self.cols {
-                if self.data[base + (c >> 6)] >> (c & 63) & 1 == 1 {
-                    t.data[c * t.words_per_row + (r >> 6)] |= 1u64 << (r & 63);
+        let twpr = t.words_per_row;
+        let mut blk = [0u64; 64];
+        let mut rb = 0;
+        while rb < self.rows {
+            let rn = 64.min(self.rows - rb);
+            let tw = rb >> 6; // destination word index for these rows
+            for cb in 0..self.words_per_row {
+                for (i, b) in blk.iter_mut().enumerate() {
+                    *b = if i < rn { self.data[(rb + i) * self.words_per_row + cb] } else { 0 };
+                }
+                transpose64(&mut blk);
+                let c0 = cb << 6;
+                let cn = 64.min(self.cols - c0);
+                for (j, &w) in blk[..cn].iter().enumerate() {
+                    t.data[(c0 + j) * twpr + tw] = w;
                 }
             }
+            rb += 64;
         }
         t
     }
@@ -156,6 +227,7 @@ impl BitMask {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
     use crate::util::rng::Pcg32;
 
     #[test]
@@ -182,6 +254,17 @@ mod tests {
     }
 
     #[test]
+    fn pack_padding_bits_are_zero() {
+        // the GEMM's exactness relies on zero tail bits even for
+        // all-positive inputs
+        let m = BitMatrix::pack(3, 70, &vec![1.0; 3 * 70]);
+        for r in 0..3 {
+            let last = m.row_words(r)[m.words_per_row - 1];
+            assert_eq!(last >> (70 % 64), 0, "row {r}");
+        }
+    }
+
+    #[test]
     fn transpose_involution() {
         let mut g = Pcg32::new(2);
         let xs = g.normal_vec(9 * 70);
@@ -193,6 +276,59 @@ mod tests {
                 assert_eq!(m.get(r, c), t.get(c, r));
             }
         }
+    }
+
+    #[test]
+    fn block_transpose_matches_scalar_all_shapes() {
+        // exercise every tail case of the 64×64 blocking: exact
+        // multiples, single row/col, both dims crossing one block
+        let mut g = Pcg32::new(8);
+        for (r, c) in [
+            (1, 1),
+            (1, 200),
+            (64, 1),
+            (64, 64),
+            (65, 63),
+            (100, 64),
+            (128, 200),
+            (130, 129),
+        ] {
+            let xs = g.normal_vec(r * c);
+            let m = BitMatrix::pack(r, c, &xs);
+            let t = m.transpose();
+            assert_eq!(t.rows, c);
+            assert_eq!(t.cols, r);
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(m.get(i, j), t.get(j, i), "{r}x{c} @ ({i},{j})");
+                }
+            }
+            // padding bits of the transpose stay zero
+            if t.cols % 64 != 0 {
+                for i in 0..t.rows {
+                    let last = t.row_words(i)[t.words_per_row - 1];
+                    assert_eq!(last >> (t.cols % 64), 0, "{r}x{c} t-row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_f16_t_matches_pack_then_transpose() {
+        let mut g = Pcg32::new(9);
+        for (k, n) in [(1, 1), (3, 5), (64, 64), (65, 70), (130, 33), (200, 129)] {
+            let xs = g.normal_vec(k * n);
+            let bits: Vec<u16> = xs.iter().map(|&v| f32_to_f16_bits(v)).collect();
+            let direct = BitMatrix::pack_f16_t(&bits, k, n);
+            // reference over the f16-roundtripped values (f16 may round
+            // a tiny negative to -0.0, which packs as +1 in both paths)
+            let rt: Vec<f32> = bits.iter().map(|&h| f16_bits_to_f32(h)).collect();
+            let via_f32 = BitMatrix::pack(k, n, &rt).transpose();
+            assert_eq!(direct, via_f32, "{k}x{n}");
+        }
+        // -0.0 in f16 packs as +1 (sign bit set, magnitude zero)
+        let neg0 = BitMatrix::pack_f16_t(&[0x8000u16], 1, 1);
+        assert_eq!(neg0.get(0, 0), 1.0);
     }
 
     #[test]

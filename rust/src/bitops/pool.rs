@@ -1,0 +1,121 @@
+//! Row-parallel execution pool for the GEMM kernels.
+//!
+//! A [`Pool`] is a lightweight handle holding a configured worker
+//! count (from config/CLI; `0` = auto-detect).  Work is dispatched
+//! with `std::thread::scope`, which lets the kernels borrow the
+//! operands and disjoint output bands without `Arc`/cloning; the pool
+//! handle itself is reusable across calls and steps, and spawn cost
+//! (~tens of µs) is amortized over multi-millisecond GEMMs.
+//!
+//! Parallelism model: the output matrix is split into contiguous
+//! *row bands*, one per worker, so every worker writes a disjoint
+//! `&mut` slice and reads the shared packed operands.  No locks, no
+//! atomics in the hot path.
+
+/// Worker pool handle.  `threads == 1` runs inline (no spawns), so a
+/// single code path serves both the serial and parallel backends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// `threads = 0` auto-detects from `available_parallelism`.
+    pub fn new(threads: usize) -> Pool {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        Pool { threads: threads.max(1) }
+    }
+
+    /// Inline-only pool (the serial backends).
+    pub fn serial() -> Pool {
+        Pool { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Outputs smaller than this run inline: for mini-model shapes
+    /// the scoped-spawn cost (~tens of µs/worker) would exceed the
+    /// kernel time and invert the blocked < tiled ordering.
+    const MIN_PARALLEL_CELLS: usize = 4096;
+
+    /// Split `rows` rows of `out` (each `row_len` elements) into at
+    /// most `threads` contiguous bands and run `f(first_row, band)`
+    /// on each band, in parallel.  `out.len()` must be
+    /// `rows * row_len`; each band is a disjoint `&mut` sub-slice.
+    /// Small outputs (see [`Self::MIN_PARALLEL_CELLS`]) run inline.
+    pub fn run_rows<T, F>(&self, rows: usize, row_len: usize, out: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert_eq!(out.len(), rows * row_len, "band partition mismatch");
+        if rows == 0 || row_len == 0 {
+            return;
+        }
+        let workers = self.threads.min(rows); // both ≥ 1 here
+        if workers <= 1 || out.len() < Self::MIN_PARALLEL_CELLS {
+            f(0, out);
+            return;
+        }
+        let band_rows = rows.div_ceil(workers);
+        std::thread::scope(|s| {
+            for (bi, band) in out.chunks_mut(band_rows * row_len).enumerate() {
+                let f = &f;
+                s.spawn(move || f(bi * band_rows, band));
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn auto_detect_is_positive() {
+        assert!(Pool::new(0).threads() >= 1);
+        assert_eq!(Pool::new(3).threads(), 3);
+        assert_eq!(Pool::serial().threads(), 1);
+    }
+
+    #[test]
+    fn bands_cover_all_rows_exactly_once() {
+        // every cell written once with its global row id, any thread
+        // count, including threads > rows and odd splits; row_len is
+        // large enough that the bigger cases cross MIN_PARALLEL_CELLS
+        // and genuinely band across workers
+        for threads in [1, 2, 3, 4, 7, 16] {
+            for rows in [1usize, 2, 5, 16, 33] {
+                let row_len = 512;
+                let mut out = vec![usize::MAX; rows * row_len];
+                let calls = AtomicUsize::new(0);
+                Pool::new(threads).run_rows(rows, row_len, &mut out, |r0, band| {
+                    calls.fetch_add(1, Ordering::Relaxed);
+                    for (i, row) in band.chunks_mut(row_len).enumerate() {
+                        row.fill(r0 + i);
+                    }
+                });
+                for r in 0..rows {
+                    for c in 0..row_len {
+                        assert_eq!(out[r * row_len + c], r, "t={threads} rows={rows}");
+                    }
+                }
+                assert!(calls.load(Ordering::Relaxed) <= threads.min(rows));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_work_is_a_noop() {
+        let mut out: Vec<f32> = Vec::new();
+        Pool::new(4).run_rows(0, 8, &mut out, |_, _| panic!("no work expected"));
+        Pool::new(4).run_rows(8, 0, &mut out, |_, _| panic!("no work expected"));
+    }
+}

@@ -57,7 +57,8 @@ pub fn preset(name: &str) -> Result<Preset> {
                     ("binarynet_mini", "syn-svhn16"),
                 ] {
                     for algo in ["standard", "proposed"] {
-                        let mut c = base(model, algo, "adam", ds, if model == "mlp_mini" { 64 } else { 100 });
+                        let batch = if model == "mlp_mini" { 64 } else { 100 };
+                        let mut c = base(model, algo, "adam", ds, batch);
                         c.epochs = 4;
                         v.push(c);
                     }
@@ -154,6 +155,7 @@ fn run_from_json(j: &Json) -> Result<RunConfig> {
         epochs: gu("epochs", d.epochs),
         lr: gf("lr", d.lr as f64) as f32,
         engine: EngineKind::parse(&gs("engine", "hlo"))?,
+        threads: gu("threads", d.threads),
         seed: gu("seed", d.seed as usize) as u64,
         n_train: gu("n_train", d.n_train),
         n_test: gu("n_test", d.n_test),
@@ -200,6 +202,20 @@ mod tests {
         assert_eq!(cfgs[0].batch, 32);
         assert_eq!(cfgs[0].engine, EngineKind::Blocked);
         assert!((cfgs[0].lr - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_config_tiled_engine_with_threads() {
+        let cfgs = from_json(
+            r#"{"runs": [{"model": "mlp_mini", "dataset": "syn-mnist64",
+                 "engine": "tiled", "threads": 4}]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfgs[0].engine, EngineKind::Tiled);
+        assert_eq!(cfgs[0].threads, 4);
+        // threads defaults to auto (0) when omitted
+        let d = from_json(r#"{"runs": [{"engine": "tiled"}]}"#).unwrap();
+        assert_eq!(d[0].threads, 0);
     }
 
     #[test]

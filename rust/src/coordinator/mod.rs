@@ -55,7 +55,8 @@ COMMANDS:
   train       run a training job
               --model mlp_mini --algo proposed --optimizer adam
               --dataset syn-mnist64 --batch 64 --epochs 3
-              --engine hlo|naive|blocked [--lr 0.001] [--seed 42]
+              --engine hlo|naive|blocked|tiled [--threads 4]
+              [--lr 0.001] [--seed 42]
               [--envelope-mib 1024] [--metrics out.jsonl]
               [--artifacts artifacts]
   memory      print the Table-2 style breakdown

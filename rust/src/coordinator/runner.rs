@@ -25,6 +25,9 @@ pub enum EngineKind {
     Naive,
     /// Pure-Rust engine, blocked GEMM ("CBLAS"-accelerated).
     Blocked,
+    /// Pure-Rust engine, 4×4 tiled kernels row-parallel over the
+    /// worker pool (`RunConfig::threads`; 0 = auto).
+    Tiled,
 }
 
 impl EngineKind {
@@ -33,7 +36,8 @@ impl EngineKind {
             "hlo" => EngineKind::Hlo,
             "naive" => EngineKind::Naive,
             "blocked" => EngineKind::Blocked,
-            _ => bail!("unknown engine '{s}' (hlo|naive|blocked)"),
+            "tiled" => EngineKind::Tiled,
+            _ => bail!("unknown engine '{s}' (hlo|naive|blocked|tiled)"),
         })
     }
 }
@@ -49,6 +53,8 @@ pub struct RunConfig {
     pub max_steps: Option<usize>,
     pub lr: f32,
     pub engine: EngineKind,
+    /// Worker threads for the tiled engine (0 = auto-detect).
+    pub threads: usize,
     pub seed: u64,
     pub n_train: usize,
     pub n_test: usize,
@@ -71,6 +77,7 @@ impl Default for RunConfig {
             max_steps: None,
             lr: 0.001,
             engine: EngineKind::Hlo,
+            threads: 0,
             seed: 42,
             n_train: 2000,
             n_test: 400,
@@ -96,6 +103,7 @@ impl RunConfig {
             max_steps: args.get("max-steps").map(|v| v.parse()).transpose()?,
             lr: args.f64_or("lr", d.lr as f64)? as f32,
             engine: EngineKind::parse(&args.str_or("engine", "hlo"))?,
+            threads: args.threads()?,
             seed: args.usize_or("seed", d.seed as usize)? as u64,
             n_train: args.usize_or("n-train", d.n_train)?,
             n_test: args.usize_or("n-test", d.n_test)?,
@@ -213,11 +221,12 @@ impl Runner {
                 let chunk = eng.eval_batch().unwrap_or(cfg.batch);
                 (Box::new(eng), chunk)
             }
-            EngineKind::Naive | EngineKind::Blocked => {
-                let accel = if cfg.engine == EngineKind::Naive {
-                    Accel::Naive
-                } else {
-                    Accel::Blocked
+            EngineKind::Naive | EngineKind::Blocked | EngineKind::Tiled => {
+                let accel = match cfg.engine {
+                    EngineKind::Naive => Accel::Naive,
+                    EngineKind::Blocked => Accel::Blocked,
+                    // resolve 0 = auto once here, not per matmul
+                    _ => Accel::Tiled(crate::bitops::Pool::new(cfg.threads).threads()),
                 };
                 let eng = build_engine(
                     &cfg.algo,
@@ -376,6 +385,23 @@ mod tests {
         // loss went down
         let first = result.metrics.points.first().unwrap().train_loss;
         assert!(result.final_train_loss < first);
+    }
+
+    #[test]
+    fn tiled_runner_end_to_end() {
+        let mut c = cfg(EngineKind::Tiled);
+        c.threads = 2;
+        let mut r = Runner::new(c).unwrap();
+        let result = r.run().unwrap();
+        assert!(result.steps >= 8, "{}", result.steps);
+        assert!(result.best_test_acc > 0.15, "acc {}", result.best_test_acc);
+        assert!(result.metrics.steps_monotone());
+    }
+
+    #[test]
+    fn engine_parse_accepts_tiled() {
+        assert_eq!(EngineKind::parse("tiled").unwrap(), EngineKind::Tiled);
+        assert!(EngineKind::parse("gpu").is_err());
     }
 
     #[test]

