@@ -1,0 +1,177 @@
+//! §Perf conv microbench — the end-to-end packed conv pipeline,
+//! swept across model-zoo conv shapes and every GEMM backend tier.
+//!
+//! Two pipelines per shape:
+//!
+//! - **fused** (this PR): `bitops::im2col_packed` signs+packs patches
+//!   straight into bit panels (pool-threaded), then the XNOR GEMM —
+//!   zero f32 im2col bytes on the binary path;
+//! - **`tiled-im2col`** (the PR-1 baseline): f32 `im2col`, then
+//!   `BitMatrix::pack`, then the same tiled XNOR GEMM — the
+//!   acceptance criterion diffs fused `tiled` rows against these.
+//!
+//! Emits `BENCH_conv.json` (stable schema: `{backend, layer, h, w,
+//! cin, cout, kside, batch, giops, threads, im2col_f32_bytes}`) via
+//! `util::bench::write_json_rows`; `giops` counts the conv GEMM ops
+//! (2·B·H·W·k²·Cin·Cout) over the *whole* pipeline time, so im2col
+//! overheads depress it honestly.  `im2col_f32_bytes` records the
+//! transient f32 buffer each variant materializes (0 = fused).
+//!
+//! Flags: `--smoke` (quick sampling + trimmed sweep for CI; keeps the
+//! fused-vs-baseline pair the acceptance criterion needs), `--out
+//! PATH` (default `BENCH_conv.json`).
+
+use bnn_edge::bitops::{im2col_packed, simd, Backend, BitMatrix};
+use bnn_edge::models::{get, lower};
+use bnn_edge::naive::{im2col, LayerPlan, Plan};
+use bnn_edge::util::bench::{black_box, write_json_rows, Bencher};
+use bnn_edge::util::cli::Args;
+use bnn_edge::util::json::Json;
+use bnn_edge::util::rng::Pcg32;
+
+struct Shape {
+    layer: String,
+    batch: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    kside: usize,
+}
+
+/// Non-first conv layers of the zoo models, deduped by geometry.
+fn zoo_shapes(models: &[(&str, usize)]) -> Vec<Shape> {
+    let mut out: Vec<Shape> = Vec::new();
+    for &(model, batch) in models {
+        let plan = Plan::from_graph(&lower(&get(model).unwrap()).unwrap()).unwrap();
+        for (li, l) in plan.layers.iter().enumerate() {
+            if let LayerPlan::Conv { h, w, cin, cout, kside, first: false } = *l {
+                if out.iter().any(|s| {
+                    (s.h, s.w, s.cin, s.cout, s.kside, s.batch) == (h, w, cin, cout, kside, batch)
+                }) {
+                    continue;
+                }
+                out.push(Shape {
+                    layer: format!("{model}/conv{li}"),
+                    batch,
+                    h,
+                    w,
+                    cin,
+                    cout,
+                    kside,
+                });
+            }
+        }
+    }
+    out
+}
+
+fn push_row(
+    rows: &mut Vec<Json>,
+    backend: &str,
+    s: &Shape,
+    giops: f64,
+    threads: usize,
+    im2col_f32_bytes: usize,
+) {
+    let mut row = Json::obj();
+    row.set("backend", Json::from(backend));
+    row.set("layer", Json::from(s.layer.as_str()));
+    row.set("h", Json::from(s.h));
+    row.set("w", Json::from(s.w));
+    row.set("cin", Json::from(s.cin));
+    row.set("cout", Json::from(s.cout));
+    row.set("kside", Json::from(s.kside));
+    row.set("batch", Json::from(s.batch));
+    row.set("giops", Json::from(giops));
+    row.set("threads", Json::from(threads));
+    row.set("im2col_f32_bytes", Json::from(im2col_f32_bytes));
+    rows.push(row);
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.bool("smoke");
+    let out_path = args.str_or("out", "BENCH_conv.json");
+    let mut bench = if smoke { Bencher::quick() } else { Bencher::default() };
+    let mut g = Pcg32::new(2);
+    println!("simd level: {}", simd::label());
+
+    // CNN zoo sweep: small CIFAR-class nets always; the full
+    // BinaryNet conv stack only off-smoke (seconds per backend)
+    let models: &[(&str, usize)] = if smoke {
+        &[("cnv_mini", 8), ("binarynet_mini", 8)]
+    } else {
+        &[("cnv_mini", 8), ("binarynet_mini", 8), ("binarynet", 2)]
+    };
+    let shapes = zoo_shapes(models);
+
+    // fused tiers: serial ones plus tiled across thread counts
+    let backends: Vec<Backend> = if smoke {
+        vec![Backend::Blocked, Backend::Tiled { threads: 2 }, Backend::Tiled { threads: 4 }]
+    } else {
+        vec![
+            Backend::Naive,
+            Backend::Blocked,
+            Backend::Tiled { threads: 1 },
+            Backend::Tiled { threads: 2 },
+            Backend::Tiled { threads: 4 },
+        ]
+    };
+
+    let mut rows: Vec<Json> = Vec::new();
+    for s in &shapes {
+        let (b, h, w, cin, cout, kside) = (s.batch, s.h, s.w, s.cin, s.cout, s.kside);
+        let k = kside * kside * cin;
+        let orows = b * h * w;
+        let ops = 2.0 * (orows * k * cout) as f64;
+        let x = g.normal_vec(b * h * w * cin);
+        let wt_f = g.normal_vec(cout * k); // transposed (cout × k) layout
+        let wt = BitMatrix::pack(cout, k, &wt_f);
+        let mut y = vec![0.0f32; orows * cout];
+        let label = format!("{} b{b} {h}x{w}x{cin}->{cout} k{kside}", s.layer);
+
+        // fused pipeline per backend tier
+        for &be in &backends {
+            let pool = be.pool();
+            let r = bench.bench(&format!("conv fused {:<9} {label}", be.label()), || {
+                let xh = im2col_packed(&x, b, h, w, cin, kside, &pool);
+                be.xnor_gemm(&xh, &wt, &mut y);
+                black_box(y[0]);
+            });
+            let giops = r.giops(ops);
+            println!("  -> fused {:<9} {label}: {giops:.2} GiOp/s", be.label());
+            push_row(&mut rows, be.name(), s, giops, be.threads(), 0);
+        }
+
+        // PR-1 baseline: f32 im2col + pack + the same tiled GEMM
+        for threads in [2usize, 4] {
+            let be = Backend::Tiled { threads };
+            let r = bench.bench(&format!("conv im2col tiled({threads}) {label}"), || {
+                let cols = im2col(&x, b, h, w, cin, kside);
+                let xh = BitMatrix::pack(orows, k, &cols);
+                be.xnor_gemm(&xh, &wt, &mut y);
+                black_box(y[0]);
+            });
+            let base_giops = r.giops(ops);
+            let fused = rows.iter().rev().find(|row| {
+                let txt = |key: &str| row.req(key).ok().and_then(|v| v.as_str().ok());
+                let num = |key: &str| row.req(key).ok().and_then(|v| v.as_f64().ok());
+                txt("backend") == Some("tiled")
+                    && txt("layer") == Some(s.layer.as_str())
+                    && num("threads") == Some(threads as f64)
+            });
+            if let Some(f) = fused {
+                let fg = f.req("giops").unwrap().as_f64().unwrap();
+                println!(
+                    "  -> tiled({threads}) fused/im2col ratio {label}: {:.2}x",
+                    fg / base_giops
+                );
+            }
+            push_row(&mut rows, "tiled-im2col", s, base_giops, threads, orows * k * 4);
+        }
+    }
+
+    write_json_rows(&out_path, rows).expect("write BENCH_conv.json");
+    println!("wrote {out_path}");
+}

@@ -5,9 +5,11 @@
 //!   paper's naïve prototype).
 //! - [`Backend::Blocked`] — 1×4 register-blocked XNOR kernel + cache-
 //!   blocked f32 GEMM (the original "CBLAS" path of Fig. 7).
-//! - [`Backend::Tiled`]   — 4×4 MR×NR micro-kernel with K-word tiling,
-//!   row-parallel over a worker [`Pool`] (`threads = 1` is the pure
-//!   single-core tiled kernel).
+//! - [`Backend::Tiled`]   — the fast tier: SIMD XOR-popcount panels
+//!   (AVX2/NEON via [`super::simd`]) falling back to the scalar 4×4
+//!   MR×NR micro-kernel with K-word tiling, row-parallel over the
+//!   persistent worker [`Pool`] (`threads = 1` is the pure
+//!   single-core kernel).
 //!
 //! The enum is `Copy` and carries its thread count, so engines stash
 //! one and dispatch per matmul with zero setup cost.  Thread counts
@@ -31,7 +33,7 @@ impl Backend {
         Ok(match s {
             "naive" => Backend::Naive,
             "blocked" => Backend::Blocked,
-            "tiled" => Backend::Tiled { threads: Pool::new(threads).threads() },
+            "tiled" => Backend::Tiled { threads: Pool::resolve(threads) },
             _ => bail!("unknown backend '{s}' (naive|blocked|tiled)"),
         })
     }
@@ -47,8 +49,17 @@ impl Backend {
     /// Worker count this backend will use (1 for the serial tiers).
     pub fn threads(&self) -> usize {
         match self {
-            Backend::Tiled { threads } => Pool::new(*threads).threads(),
+            Backend::Tiled { threads } => Pool::resolve(*threads),
             _ => 1,
+        }
+    }
+
+    /// Worker pool for the fused non-GEMM stages (bit-im2col): the
+    /// persistent shared pool for `Tiled`, inline for serial tiers.
+    pub fn pool(&self) -> Pool {
+        match self {
+            Backend::Tiled { threads } => Pool::new(*threads),
+            _ => Pool::serial(),
         }
     }
 
@@ -99,6 +110,9 @@ mod tests {
         }
         // auto thread count resolves to something positive
         assert!(Backend::parse("tiled", 0).unwrap().threads() >= 1);
+        // fused-stage pool matches the tier's parallelism
+        assert_eq!(Backend::Tiled { threads: 3 }.pool().threads(), 3);
+        assert_eq!(Backend::Blocked.pool().threads(), 1);
         assert!(Backend::parse("gpu", 0).is_err());
         assert_eq!(Backend::parse("tiled", 2).unwrap().label(), "tiled(2)");
         assert_eq!(Backend::Blocked.label(), "blocked");

@@ -6,18 +6,23 @@
 //!   paper's naïve C++ prototype equivalent.
 //! - `xnor_gemm` — register-blocked 1×4 micro-kernel over the packed
 //!   K axis: the original "CBLAS-accelerated" path of Fig. 7.
-//! - `xnor_gemm_tiled` / `xnor_gemm_parallel` — 4×4 MR×NR micro-kernel
-//!   with K-word tiling (each 4-row A panel × 4-row B panel stays
-//!   L1-resident while 16 popcount accumulators stay hot), plus a
-//!   row-banded multi-threaded driver over [`super::Pool`].
+//! - `xnor_gemm_tiled` / `xnor_gemm_parallel` — the tiled tier, plus a
+//!   row-banded multi-threaded driver over [`super::Pool`].  Its band
+//!   kernel dispatches on [`super::simd::level`]: with AVX2/NEON
+//!   available it runs 1×4 column panels over the vectorized
+//!   XOR-popcount kernels of [`super::simd`]; otherwise it falls back
+//!   to the scalar 4×4 MR×NR micro-kernel with K-word tiling (each
+//!   4-row A panel × 4-row B panel stays L1-resident while 16 popcount
+//!   accumulators stay hot).
 //!
 //! All variants compute `out[m][n] = Σ_k a[m,k]·b[k,n]` over ±1 values
 //! where `b_t` is the transposed packed B (rows = N, cols = K).  Zero
 //! tail bits in both operands XOR to 0, so `k − 2·popcount(xor)` is
-//! exact with no padding correction — every kernel here is bit-exact
-//! against `xnor_gemm_naive` (tests below + rust/tests/property.rs).
+//! exact with no padding correction — every kernel here (every SIMD
+//! level included: popcounts are exact integers) is bit-exact against
+//! `xnor_gemm_naive` (tests below + rust/tests/property.rs).
 
-use super::{BitMatrix, Pool};
+use super::{simd, BitMatrix, Pool};
 
 /// Register block sizes of the tiled micro-kernel.
 const MR: usize = 4;
@@ -99,8 +104,55 @@ pub fn xnor_gemm(a: &BitMatrix, b_t: &BitMatrix, out: &mut [f32]) {
 }
 
 /// Band kernel of the tiled path: rows `row0..row0 + band.len()/n`
-/// of the output, 4×4 register blocks, K in `KC_WORDS` tiles.
+/// of the output.  Dispatches once per band on the detected SIMD
+/// level; both paths are bit-exact (integer popcounts).
 fn xnor_band(a: &BitMatrix, b_t: &BitMatrix, row0: usize, band: &mut [f32]) {
+    if simd::level() == simd::Level::Scalar {
+        xnor_band_scalar(a, b_t, row0, band);
+    } else {
+        xnor_band_simd(a, b_t, row0, band);
+    }
+}
+
+/// SIMD band kernel: 1×4 column panels over the vectorized
+/// XOR-popcount kernels.  No KC tiling needed — the vector kernels
+/// fold byte counts into 64-bit lanes, which cannot overflow.
+fn xnor_band_simd(a: &BitMatrix, b_t: &BitMatrix, row0: usize, band: &mut [f32]) {
+    let n = b_t.rows;
+    if n == 0 || band.is_empty() {
+        return;
+    }
+    let kw = b_t.words_per_row;
+    let kk = a.cols as i64;
+    let br = band.len() / n;
+    let bdata = &b_t.data;
+    let n4 = n - n % 4;
+    for i in 0..br {
+        let ar = a.row_words(row0 + i);
+        let orow = &mut band[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j < n4 {
+            let b0 = &bdata[j * kw..(j + 1) * kw];
+            let b1 = &bdata[(j + 1) * kw..(j + 2) * kw];
+            let b2 = &bdata[(j + 2) * kw..(j + 3) * kw];
+            let b3 = &bdata[(j + 3) * kw..(j + 4) * kw];
+            let c = simd::xor_popcount_1x4(ar, b0, b1, b2, b3);
+            orow[j] = (kk - 2 * c[0] as i64) as f32;
+            orow[j + 1] = (kk - 2 * c[1] as i64) as f32;
+            orow[j + 2] = (kk - 2 * c[2] as i64) as f32;
+            orow[j + 3] = (kk - 2 * c[3] as i64) as f32;
+            j += 4;
+        }
+        while j < n {
+            let c = simd::xor_popcount(ar, b_t.row_words(j));
+            orow[j] = (kk - 2 * c as i64) as f32;
+            j += 1;
+        }
+    }
+}
+
+/// Scalar band kernel: 4×4 register blocks, K in `KC_WORDS` tiles.
+fn xnor_band_scalar(a: &BitMatrix, b_t: &BitMatrix, row0: usize, band: &mut [f32]) {
     let n = b_t.rows;
     if n == 0 || band.is_empty() {
         return;
@@ -192,15 +244,25 @@ fn xnor_band(a: &BitMatrix, b_t: &BitMatrix, row0: usize, band: &mut [f32]) {
     }
 }
 
-/// Tiled packed GEMM, single-threaded: the 4×4 micro-kernel alone.
+/// Tiled packed GEMM, single-threaded: the band kernel alone (SIMD
+/// where detected, scalar 4×4 otherwise).
 pub fn xnor_gemm_tiled(a: &BitMatrix, b_t: &BitMatrix, out: &mut [f32]) {
     assert_eq!(a.cols, b_t.cols, "K mismatch");
     assert_eq!(out.len(), a.rows * b_t.rows);
     xnor_band(a, b_t, 0, out);
 }
 
+/// Forced-scalar tiled GEMM: the 4×4 micro-kernel regardless of the
+/// detected SIMD level.  Reference path for the SIMD bit-exactness
+/// property tests (and a fair "PR-1 kernel" baseline in benches).
+pub fn xnor_gemm_tiled_scalar(a: &BitMatrix, b_t: &BitMatrix, out: &mut [f32]) {
+    assert_eq!(a.cols, b_t.cols, "K mismatch");
+    assert_eq!(out.len(), a.rows * b_t.rows);
+    xnor_band_scalar(a, b_t, 0, out);
+}
+
 /// Tiled packed GEMM, row-parallel over `pool`: each worker owns a
-/// contiguous output band and runs the 4×4 micro-kernel on it.
+/// contiguous output band and runs the dispatched band kernel on it.
 pub fn xnor_gemm_parallel(a: &BitMatrix, b_t: &BitMatrix, out: &mut [f32], pool: &Pool) {
     assert_eq!(a.cols, b_t.cols, "K mismatch");
     let (m, n) = (a.rows, b_t.rows);
@@ -363,6 +425,33 @@ mod tests {
                 xnor_gemm_parallel(&ap, &btp, &mut par, &Pool::new(threads));
                 assert_eq!(par, naive, "parallel t={threads} {m}x{k}x{n}");
             }
+        }
+    }
+
+    #[test]
+    fn simd_and_scalar_bands_bit_exact() {
+        // the dispatched tiled kernel (vectorized where the host has
+        // AVX2/NEON) against the forced-scalar 4×4 micro-kernel, on
+        // shapes hitting every panel/word remainder
+        let mut g = Pcg32::new(17);
+        for (m, k, n) in [
+            (1, 1, 1),
+            (2, 63, 3),
+            (4, 64, 4),
+            (5, 129, 9),
+            (7, 257, 6),
+            (8, 8256, 5),
+            (13, 200, 17),
+        ] {
+            let a = g.normal_vec(m * k);
+            let b = g.normal_vec(k * n);
+            let ap = BitMatrix::pack(m, k, &a);
+            let btp = pack_b_t(k, n, &b);
+            let mut scalar = vec![0.0; m * n];
+            xnor_gemm_tiled_scalar(&ap, &btp, &mut scalar);
+            let mut dispatched = vec![0.0; m * n];
+            xnor_gemm_tiled(&ap, &btp, &mut dispatched);
+            assert_eq!(dispatched, scalar, "{m}x{k}x{n}");
         }
     }
 

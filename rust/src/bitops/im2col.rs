@@ -1,0 +1,368 @@
+//! Fused binary im2col: sign-pack conv patches straight into
+//! [`BitMatrix`] row panels.
+//!
+//! The pre-fusion binary conv *forward* materialized a full f32
+//! im2col buffer (`B·H·W × k²·Cin × 4` bytes — the hottest transient
+//! of the forward pass) and then bit-packed it in a second pass.  The
+//! paper's central claim is that binary activations alone need be
+//! retained; [`im2col_packed`] realizes that on the forward compute
+//! path too: each output row's patch is signed and packed directly
+//! from the NHWC activation map, 32× less transient memory and one
+//! pass instead of three, threaded over output rows via the
+//! persistent [`Pool`].  (The conv *backward* still materializes
+//! rows × k f32 buffers — dX patch gradients, and the standard
+//! engine's dW im2col — so the step-level peak is governed by the
+//! backward until that lever lands; see ROADMAP perf notes.)
+//!
+//! Padding convention: SAME zero-padding taps pack as **+1** — the
+//! f32 reference wrote `0.0` into the cols buffer and
+//! `BitMatrix::pack` maps `0.0 ≥ 0` to bit-set — so
+//! `im2col_packed(x) == BitMatrix::pack(im2col(x))` bit for bit (the
+//! property tests pin this).  That is exactly what the proposed
+//! engine's binary conv consumed all along.  For the *standard*
+//! engine, whose f32 conv treats padding as a true zero,
+//! [`subtract_pad_contrib`] applies the masked SAME-padding edge
+//! correction: with pad bits fixed at +1,
+//! `y_zero_pad = y_xnor − Σ_{oob taps} Σ_cin ŵ`, a weight-only term
+//! subtracted on the border output columns (O(border·k²·Cout), weight
+//! scan O(k·Cout/64) word-popcounts).
+
+use super::{BitMatrix, Pool};
+
+/// OR `vals.len()` sign bits (`v ≥ 0` ⇔ set, the paper's sgn with
+/// sgn(0) = +1) into `words` starting at bit offset `bit`, assembling
+/// whole words in registers across word boundaries.
+#[inline]
+fn set_sign_bits(words: &mut [u64], mut bit: usize, vals: &[f32]) {
+    let mut i = 0;
+    while i < vals.len() {
+        let word = bit >> 6;
+        let off = bit & 63;
+        let take = (64 - off).min(vals.len() - i);
+        let mut acc = 0u64;
+        for (j, &v) in vals[i..i + take].iter().enumerate() {
+            acc |= ((v >= 0.0) as u64) << j;
+        }
+        words[word] |= acc << off;
+        i += take;
+        bit += take;
+    }
+}
+
+/// OR `n` set bits into `words` starting at bit offset `bit` (the
+/// +1-packed SAME-padding taps).
+#[inline]
+fn set_ones(words: &mut [u64], mut bit: usize, mut n: usize) {
+    while n > 0 {
+        let word = bit >> 6;
+        let off = bit & 63;
+        let take = (64 - off).min(n);
+        let mask = if take == 64 { u64::MAX } else { ((1u64 << take) - 1) << off };
+        words[word] |= mask;
+        bit += take;
+        n -= take;
+    }
+}
+
+/// Pack one patch row: output position (`bi`, `y`, `x0`) of a
+/// stride-1 SAME `kside`×`kside` conv over the NHWC map `x`.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn pack_patch(
+    x: &[f32],
+    words: &mut [u64],
+    bi: usize,
+    y: usize,
+    x0: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kside: usize,
+    pad: usize,
+) {
+    let mut bit = 0usize;
+    for ky in 0..kside {
+        let sy = y as isize + ky as isize - pad as isize;
+        let row_ok = sy >= 0 && sy < h as isize;
+        for kx in 0..kside {
+            let sx = x0 as isize + kx as isize - pad as isize;
+            if row_ok && sx >= 0 && sx < w as isize {
+                let src = ((bi * h + sy as usize) * w + sx as usize) * cin;
+                set_sign_bits(words, bit, &x[src..src + cin]);
+            } else {
+                set_ones(words, bit, cin);
+            }
+            bit += cin;
+        }
+    }
+}
+
+/// Fused sign-pack im2col for a stride-1 SAME `kside`×`kside` conv
+/// over the NHWC map `x` (`b`×`h`×`w`×`cin`): returns the packed
+/// (B·H·W × k²·Cin) patch matrix, bit-identical to
+/// `BitMatrix::pack(b*h*w, k, &im2col(x, ..))` — without ever
+/// materializing the f32 cols buffer.  Threaded over output rows via
+/// `pool` (each worker owns a disjoint band of packed rows).
+pub fn im2col_packed(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kside: usize,
+    pool: &Pool,
+) -> BitMatrix {
+    assert_eq!(x.len(), b * h * w * cin, "NHWC shape mismatch");
+    let k = kside * kside * cin;
+    let rows = b * h * w;
+    let mut m = BitMatrix::zeros(rows, k);
+    let wpr = m.words_per_row;
+    let pad = (kside - 1) / 2;
+    pool.run_rows(rows, wpr, &mut m.data, |r0, band| {
+        for (i, words) in band.chunks_mut(wpr).enumerate() {
+            let r = r0 + i;
+            let bi = r / (h * w);
+            let rem = r % (h * w);
+            pack_patch(x, words, bi, rem / w, rem % w, h, w, cin, kside, pad);
+        }
+    });
+    m
+}
+
+/// Popcount of the bit range `[start, end)` of a packed row.
+fn count_bit_range(words: &[u64], start: usize, end: usize) -> u32 {
+    debug_assert!(start <= end);
+    if start == end {
+        return 0;
+    }
+    let (sw, sb) = (start >> 6, start & 63);
+    let (ew, eb) = (end >> 6, end & 63);
+    if sw == ew {
+        // same word: end > start so 0 < eb - sb < 64
+        let mask = ((1u64 << (eb - sb)) - 1) << sb;
+        return (words[sw] & mask).count_ones();
+    }
+    let mut c = (words[sw] >> sb).count_ones();
+    for w in &words[sw + 1..ew] {
+        c += w.count_ones();
+    }
+    if eb > 0 {
+        c += (words[ew] << (64 - eb)).count_ones();
+    }
+    c
+}
+
+/// Masked SAME-padding correction for the fused XNOR conv of the
+/// standard engine: `im2col_packed` fixes out-of-bounds taps at +1,
+/// so with packed transposed weights `wt` (Cout × k²·Cin) the XNOR
+/// product overshoots the zero-padded truth by the padded taps'
+/// weight sums.  Subtracts, per border output position, `T[tap] =
+/// Σ_cin ŵ[tap]` for each out-of-bounds tap; interior positions are
+/// untouched.  `y` is the (B·H·W × Cout) conv output in place.
+pub fn subtract_pad_contrib(
+    y: &mut [f32],
+    wt: &BitMatrix,
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kside: usize,
+) {
+    let pad = (kside - 1) / 2;
+    if pad == 0 {
+        return; // 1×1 taps never leave the map
+    }
+    let cout = wt.rows;
+    let kk = kside * kside;
+    debug_assert_eq!(wt.cols, kk * cin);
+    debug_assert_eq!(y.len(), b * h * w * cout);
+    // per-tap channel-summed ±1 weights: T[tap][j] = 2·ones − cin
+    let mut t = vec![0.0f32; kk * cout];
+    for j in 0..cout {
+        let rw = wt.row_words(j);
+        for tap in 0..kk {
+            let ones = count_bit_range(rw, tap * cin, (tap + 1) * cin);
+            t[tap * cout + j] = (2 * ones as i64 - cin as i64) as f32;
+        }
+    }
+    for bi in 0..b {
+        for yy in 0..h {
+            for xx in 0..w {
+                // interior positions have no out-of-bounds taps
+                if yy >= pad && yy + pad < h && xx >= pad && xx + pad < w {
+                    continue;
+                }
+                let o = ((bi * h + yy) * w + xx) * cout;
+                let orow = &mut y[o..o + cout];
+                for ky in 0..kside {
+                    let sy = yy as isize + ky as isize - pad as isize;
+                    let y_oob = sy < 0 || sy >= h as isize;
+                    for kx in 0..kside {
+                        let sx = xx as isize + kx as isize - pad as isize;
+                        if y_oob || sx < 0 || sx >= w as isize {
+                            let trow = &t[(ky * kside + kx) * cout..][..cout];
+                            for (yv, &tv) in orow.iter_mut().zip(trow) {
+                                *yv -= tv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitops::gemm::{gemm_f32, xnor_gemm_naive};
+    use crate::util::rng::Pcg32;
+
+    /// f32 reference im2col (mirrors `naive::im2col`, kept local so
+    /// the substrate test has no engine dependency).
+    fn im2col_ref(x: &[f32], b: usize, h: usize, w: usize, cin: usize, kside: usize) -> Vec<f32> {
+        let k = kside * kside * cin;
+        let pad = (kside - 1) / 2;
+        let mut cols = vec![0.0f32; b * h * w * k];
+        for bi in 0..b {
+            for y in 0..h {
+                for x0 in 0..w {
+                    let mut idx = ((bi * h + y) * w + x0) * k;
+                    for ky in 0..kside {
+                        let sy = y as isize + ky as isize - pad as isize;
+                        for kx in 0..kside {
+                            let sx = x0 as isize + kx as isize - pad as isize;
+                            if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
+                                let src = ((bi * h + sy as usize) * w + sx as usize) * cin;
+                                cols[idx..idx + cin].copy_from_slice(&x[src..src + cin]);
+                            }
+                            idx += cin;
+                        }
+                    }
+                }
+            }
+        }
+        cols
+    }
+
+    fn geometries() -> Vec<(usize, usize, usize, usize, usize)> {
+        // (b, h, w, cin, kside): kside 1/3/5, patch widths off the
+        // word grid (45, 297, 630 bits), batch 1/3
+        vec![
+            (1, 4, 4, 1, 1),
+            (1, 5, 5, 3, 3),
+            (2, 4, 4, 5, 3),
+            (1, 6, 6, 33, 3),
+            (3, 5, 5, 2, 5),
+            (1, 7, 7, 13, 5),
+            (2, 3, 3, 64, 1),
+            (1, 4, 4, 70, 3),
+        ]
+    }
+
+    fn noisy_map(g: &mut Pcg32, n: usize) -> Vec<f32> {
+        // include exact zeros: sgn(0) = +1 must match the reference
+        g.normal_vec(n)
+            .into_iter()
+            .enumerate()
+            .map(|(i, v)| if i % 17 == 0 { 0.0 } else { v })
+            .collect()
+    }
+
+    #[test]
+    fn fused_matches_im2col_then_pack() {
+        let mut g = Pcg32::new(41);
+        for (b, h, w, cin, kside) in geometries() {
+            let x = noisy_map(&mut g, b * h * w * cin);
+            let k = kside * kside * cin;
+            let want = BitMatrix::pack(b * h * w, k, &im2col_ref(&x, b, h, w, cin, kside));
+            for threads in [1, 2, 4] {
+                let got = im2col_packed(&x, b, h, w, cin, kside, &Pool::new(threads));
+                assert_eq!(got, want, "b{b} {h}x{w}x{cin} k{kside} t{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_padding_bits_stay_zero() {
+        // tail bits beyond k must stay clear (GEMM exact-tail invariant)
+        let mut g = Pcg32::new(42);
+        for (b, h, w, cin, kside) in geometries() {
+            let k = kside * kside * cin;
+            if k % 64 == 0 {
+                continue;
+            }
+            let x = noisy_map(&mut g, b * h * w * cin);
+            let m = im2col_packed(&x, b, h, w, cin, kside, &Pool::serial());
+            for r in 0..m.rows {
+                let last = m.row_words(r)[m.words_per_row - 1];
+                assert_eq!(last >> (k % 64), 0, "row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn count_bit_range_matches_bit_probes() {
+        let mut g = Pcg32::new(43);
+        let words: Vec<u64> = (0..6).map(|_| g.next_u64()).collect();
+        let bits = words.len() * 64;
+        for start in (0..bits).step_by(7) {
+            for end in (start..=bits).step_by(13) {
+                let want: u32 =
+                    (start..end).map(|c| (words[c >> 6] >> (c & 63) & 1) as u32).sum();
+                assert_eq!(count_bit_range(&words, start, end), want, "{start}..{end}");
+            }
+        }
+        assert_eq!(count_bit_range(&words, 5, 5), 0);
+        assert_eq!(count_bit_range(&words, 0, 64), words[0].count_ones());
+    }
+
+    #[test]
+    fn xnor_with_pad_correction_equals_zero_pad_conv() {
+        // fused packed conv + correction == f32 zero-padded conv of
+        // the signed activations (both sides exact integers)
+        let mut g = Pcg32::new(44);
+        for (b, h, w, cin, kside) in geometries() {
+            let k = kside * kside * cin;
+            let rows = b * h * w;
+            let cout = 5;
+            let x = noisy_map(&mut g, b * h * w * cin);
+            let wf = g.normal_vec(k * cout);
+            // zero-pad reference: im2col of sign(x) (pads stay 0.0)
+            // against sign(w), f32 GEMM
+            let xs: Vec<f32> =
+                x.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+            let cols = im2col_ref(&xs, b, h, w, cin, kside);
+            let ws: Vec<f32> =
+                wf.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+            let mut want = vec![0.0f32; rows * cout];
+            gemm_f32(rows, k, cout, &cols, &ws, &mut want);
+            // fused path: packed patches (+1 pads) × packed Ŵᵀ, then
+            // the masked edge correction
+            let xhat = im2col_packed(&x, b, h, w, cin, kside, &Pool::serial());
+            let mut wt_f = vec![0.0f32; cout * k];
+            for kk in 0..k {
+                for j in 0..cout {
+                    wt_f[j * k + kk] = wf[kk * cout + j];
+                }
+            }
+            let wt = BitMatrix::pack(cout, k, &wt_f);
+            let mut got = vec![0.0f32; rows * cout];
+            xnor_gemm_naive(&xhat, &wt, &mut got);
+            subtract_pad_contrib(&mut got, &wt, b, h, w, cin, kside);
+            assert_eq!(got, want, "b{b} {h}x{w}x{cin} k{kside}");
+        }
+    }
+
+    #[test]
+    fn kside1_needs_no_correction() {
+        let mut g = Pcg32::new(45);
+        let (b, h, w, cin) = (2, 3, 3, 64);
+        let x = g.normal_vec(b * h * w * cin);
+        let wt = BitMatrix::pack(4, cin, &g.normal_vec(4 * cin));
+        let mut y = vec![1.5f32; b * h * w * 4];
+        let before = y.clone();
+        subtract_pad_contrib(&mut y, &wt, b, h, w, cin, 1);
+        assert_eq!(y, before);
+    }
+}

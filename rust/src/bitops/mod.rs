@@ -14,21 +14,29 @@
 //!
 //! The kernel stack (see [`gemm`]) has three tiers selected by
 //! [`Backend`]: the paper's naïve prototype, the 1×4 blocked "CBLAS"
-//! path of Fig. 7, and the 4×4 tiled kernel with a row-parallel
+//! path of Fig. 7, and the tiled kernel — SIMD XOR-popcount panels
+//! (AVX2 `vpshufb` / NEON `vcnt`, runtime-dispatched via [`simd`])
+//! with a scalar 4×4 fallback — row-parallel over the persistent
 //! worker [`Pool`].  Packing, unpacking and transposition are all
 //! word-level (branch-free pack, 64×64 bit-block transpose) so the
-//! non-GEMM overheads stay negligible next to the popcount stream,
-//! and [`PackedWeightCache`] lets the training engines pack each
-//! layer's binarized weights once per step instead of once per matmul.
+//! non-GEMM overheads stay negligible next to the popcount stream;
+//! [`PackedWeightCache`] lets the training engines pack each layer's
+//! binarized weights once per step instead of once per matmul, and
+//! [`im2col_packed`] signs and packs conv patches straight into row
+//! panels so the binary conv path never materializes an f32 im2col
+//! buffer.
 
 pub mod backend;
 pub mod cache;
 pub mod gemm;
+pub mod im2col;
 pub mod pool;
+pub mod simd;
 
 pub use backend::Backend;
 pub use cache::PackedWeightCache;
 pub use gemm::{xnor_gemm, xnor_gemm_naive, xnor_gemm_parallel, xnor_gemm_tiled};
+pub use im2col::{im2col_packed, subtract_pad_contrib};
 pub use pool::Pool;
 
 /// A bit-packed ±1 matrix, row-major, rows padded to whole u64 words.

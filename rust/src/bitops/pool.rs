@@ -1,38 +1,229 @@
-//! Row-parallel execution pool for the GEMM kernels.
+//! Persistent row-parallel execution pool for the GEMM and bit-pack
+//! kernels.
 //!
-//! A [`Pool`] is a lightweight handle holding a configured worker
-//! count (from config/CLI; `0` = auto-detect).  Work is dispatched
-//! with `std::thread::scope`, which lets the kernels borrow the
-//! operands and disjoint output bands without `Arc`/cloning; the pool
-//! handle itself is reusable across calls and steps, and spawn cost
-//! (~tens of µs) is amortized over multi-millisecond GEMMs.
+//! PR 1 dispatched bands with `std::thread::scope`, paying a fresh
+//! spawn (~tens of µs per worker) on *every* matmul.  At BinaryNet fc
+//! sizes that is noise; at the small conv shapes edge training
+//! actually runs (mini models, batch ≤ 32, layers of a few ms) it is
+//! a measurable tax.  Workers are now **long-lived**: spawned once per
+//! distinct worker count into a process-global registry and fed jobs
+//! through a condvar-guarded slot, so a [`Pool`] handle is a cheap
+//! `Arc` clone and per-call dispatch cost drops to a lock + wakeup.
 //!
-//! Parallelism model: the output matrix is split into contiguous
-//! *row bands*, one per worker, so every worker writes a disjoint
-//! `&mut` slice and reads the shared packed operands.  No locks, no
-//! atomics in the hot path.
+//! Parallelism model (unchanged): the output is split into contiguous
+//! *row bands*.  Bands are claimed from an atomic counter by the
+//! caller **and** the workers (the caller participates, so `threads`
+//! counts it), every claimant writes a disjoint `&mut` band and reads
+//! the shared operands.  No locks or atomics in the kernel hot path.
+//!
+//! Borrowed (non-`'static`) closures cross into the workers through a
+//! type-erased raw-pointer job.  Soundness hinges on the drain
+//! protocol: `run_rows` does not return until the job slot is cleared
+//! *and* every worker that picked the job pointer has bumped back in
+//! (`active == 0`), so the stack frame holding the closure and band
+//! descriptors strictly outlives all worker access.  Panics inside a
+//! band are caught per-band, the sweep completes, and the panic is
+//! rethrown on the caller.
+//!
+//! Nested `run_rows` (a band closure that itself parallelizes) runs
+//! inline — a thread-local flag short-circuits it — so kernels can
+//! compose without deadlocking the slot.
 
-/// Worker pool handle.  `threads == 1` runs inline (no spawns), so a
-/// single code path serves both the serial and parallel backends.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Worker pool handle: a configured thread count plus a shared set of
+/// persistent workers (`None` when `threads == 1`: inline only, no
+/// spawns — a single code path serves serial and parallel backends).
+#[derive(Clone)]
 pub struct Pool {
     threads: usize,
+    shared: Option<Arc<Shared>>,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("threads", &self.threads).finish()
+    }
+}
+
+impl PartialEq for Pool {
+    fn eq(&self, other: &Pool) -> bool {
+        self.threads == other.threads
+    }
+}
+impl Eq for Pool {}
+
+/// One published parallel sweep: a type-erased pointer to the
+/// caller-stack [`Ctx`] plus its monomorphized band runner.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    run: unsafe fn(*const ()),
+}
+// SAFETY: the pointed-to Ctx lives on the publishing caller's stack
+// and is only dereferenced between publish and drain (see run_rows).
+unsafe impl Send for Job {}
+
+#[derive(Default)]
+struct State {
+    /// Current job, present from publish until the caller's drain.
+    job: Option<Job>,
+    /// Bumped per publish so a worker joins each job at most once.
+    generation: u64,
+    /// Workers currently inside `job.run`.
+    active: usize,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new job.
+    work: Condvar,
+    /// Callers wait here for worker drain / slot release.
+    done: Condvar,
+}
+
+/// Band-sweep descriptor shared between the caller and the workers
+/// for one `run_rows` call.  Lives on the caller's stack.
+struct Ctx<T, F> {
+    out: *mut T,
+    rows: usize,
+    row_len: usize,
+    band_rows: usize,
+    n_bands: usize,
+    next: AtomicUsize,
+    panicked: AtomicBool,
+    f: *const F,
+}
+
+/// Claims bands until the counter is exhausted.  Monomorphized per
+/// `run_rows` call; reached only through `Job::run`.
+unsafe fn run_ctx<T: Send, F: Fn(usize, &mut [T]) + Sync>(p: *const ()) {
+    let ctx = unsafe { &*(p as *const Ctx<T, F>) };
+    let f = unsafe { &*ctx.f };
+    loop {
+        let bi = ctx.next.fetch_add(1, Ordering::Relaxed);
+        if bi >= ctx.n_bands {
+            return;
+        }
+        let r0 = bi * ctx.band_rows;
+        let rn = ctx.band_rows.min(ctx.rows - r0);
+        // disjoint per band: band bi covers rows [r0, r0 + rn)
+        let band = unsafe {
+            std::slice::from_raw_parts_mut(ctx.out.add(r0 * ctx.row_len), rn * ctx.row_len)
+        };
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(r0, band))).is_err() {
+            ctx.panicked.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+std::thread_local! {
+    /// True while this thread is executing inside a pool sweep —
+    /// makes a nested `run_rows` run inline instead of deadlocking
+    /// on the job slot.
+    static IN_POOL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen_gen: u64 = 0;
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if let Some(job) = st.job {
+            if st.generation != seen_gen {
+                seen_gen = st.generation;
+                st.active += 1;
+                drop(st);
+                IN_POOL.with(|c| c.set(true));
+                unsafe { (job.run)(job.data) };
+                IN_POOL.with(|c| c.set(false));
+                st = shared.state.lock().unwrap();
+                st.active -= 1;
+                if st.active == 0 {
+                    shared.done.notify_all();
+                }
+                continue;
+            }
+        }
+        st = shared.work.wait(st).unwrap();
+    }
+}
+
+/// Process-global registry: one persistent worker set per distinct
+/// worker count, spawned on first use and kept for process lifetime.
+fn registry() -> &'static Mutex<HashMap<usize, Arc<Shared>>> {
+    static REG: OnceLock<Mutex<HashMap<usize, Arc<Shared>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn global_shared_workers(workers: usize) -> Arc<Shared> {
+    let mut reg = registry().lock().unwrap();
+    reg.entry(workers)
+        .or_insert_with(|| {
+            let sh = Arc::new(Shared {
+                state: Mutex::new(State::default()),
+                work: Condvar::new(),
+                done: Condvar::new(),
+            });
+            for i in 0..workers {
+                let s = Arc::clone(&sh);
+                std::thread::Builder::new()
+                    .name(format!("bitops-pool-{i}"))
+                    .spawn(move || worker_loop(s))
+                    .expect("spawn bitops pool worker");
+            }
+            sh
+        })
+        .clone()
+}
+
+std::thread_local! {
+    /// Per-thread mirror of the registry: engines construct a `Pool`
+    /// per matmul (the `Backend` enum is `Copy` and cannot hold the
+    /// `Arc`), so repeat lookups must not touch the global mutex.
+    static LOCAL_POOLS: std::cell::RefCell<HashMap<usize, Arc<Shared>>> =
+        std::cell::RefCell::new(HashMap::new());
+}
+
+fn shared_workers(workers: usize) -> Arc<Shared> {
+    LOCAL_POOLS.with(|cache| {
+        if let Some(sh) = cache.borrow().get(&workers) {
+            return Arc::clone(sh);
+        }
+        let sh = global_shared_workers(workers);
+        cache.borrow_mut().insert(workers, Arc::clone(&sh));
+        sh
+    })
 }
 
 impl Pool {
-    /// `threads = 0` auto-detects from `available_parallelism`.
+    /// `threads = 0` auto-detects from `available_parallelism`.  The
+    /// handle shares `threads - 1` persistent workers (the caller is
+    /// the remaining participant); handles with the same count share
+    /// the same workers.
     pub fn new(threads: usize) -> Pool {
-        let threads = if threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        let threads = Pool::resolve(threads);
+        let shared = if threads > 1 { Some(shared_workers(threads - 1)) } else { None };
+        Pool { threads, shared }
+    }
+
+    /// Resolve a configured thread count (`0` = auto-detect, probed
+    /// once per process) without touching the worker registry.
+    pub fn resolve(threads: usize) -> usize {
+        if threads == 0 {
+            static AUTO: OnceLock<usize> = OnceLock::new();
+            *AUTO.get_or_init(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
         } else {
             threads
-        };
-        Pool { threads: threads.max(1) }
+        }
     }
 
     /// Inline-only pool (the serial backends).
     pub fn serial() -> Pool {
-        Pool { threads: 1 }
+        Pool { threads: 1, shared: None }
     }
 
     pub fn threads(&self) -> usize {
@@ -40,15 +231,16 @@ impl Pool {
     }
 
     /// Outputs smaller than this run inline: for mini-model shapes
-    /// the scoped-spawn cost (~tens of µs/worker) would exceed the
-    /// kernel time and invert the blocked < tiled ordering.
+    /// even the persistent dispatch (lock + wakeup, ~µs) would exceed
+    /// the kernel time and invert the blocked < tiled ordering.
     const MIN_PARALLEL_CELLS: usize = 4096;
 
     /// Split `rows` rows of `out` (each `row_len` elements) into at
     /// most `threads` contiguous bands and run `f(first_row, band)`
-    /// on each band, in parallel.  `out.len()` must be
-    /// `rows * row_len`; each band is a disjoint `&mut` sub-slice.
-    /// Small outputs (see [`Self::MIN_PARALLEL_CELLS`]) run inline.
+    /// on each band, in parallel (caller + persistent workers).
+    /// `out.len()` must be `rows * row_len`; each band is a disjoint
+    /// `&mut` sub-slice.  Small outputs (see
+    /// [`Self::MIN_PARALLEL_CELLS`]) and nested calls run inline.
     pub fn run_rows<T, F>(&self, rows: usize, row_len: usize, out: &mut [T], f: F)
     where
         T: Send,
@@ -59,17 +251,62 @@ impl Pool {
             return;
         }
         let workers = self.threads.min(rows); // both ≥ 1 here
-        if workers <= 1 || out.len() < Self::MIN_PARALLEL_CELLS {
-            f(0, out);
-            return;
-        }
-        let band_rows = rows.div_ceil(workers);
-        std::thread::scope(|s| {
-            for (bi, band) in out.chunks_mut(band_rows * row_len).enumerate() {
-                let f = &f;
-                s.spawn(move || f(bi * band_rows, band));
+        let shared = match &self.shared {
+            Some(sh)
+                if workers > 1
+                    && out.len() >= Self::MIN_PARALLEL_CELLS
+                    && !IN_POOL.with(|c| c.get()) =>
+            {
+                sh
             }
-        });
+            _ => {
+                f(0, out);
+                return;
+            }
+        };
+        let band_rows = rows.div_ceil(workers);
+        let n_bands = rows.div_ceil(band_rows);
+        let ctx = Ctx {
+            out: out.as_mut_ptr(),
+            rows,
+            row_len,
+            band_rows,
+            n_bands,
+            next: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            f: &f,
+        };
+        let job = Job {
+            data: (&ctx as *const Ctx<T, F>).cast(),
+            run: run_ctx::<T, F>,
+        };
+        {
+            let mut st = shared.state.lock().unwrap();
+            while st.job.is_some() {
+                // another caller's sweep owns the slot: wait it out
+                st = shared.done.wait(st).unwrap();
+            }
+            st.job = Some(job);
+            st.generation = st.generation.wrapping_add(1);
+            shared.work.notify_all();
+        }
+        // the caller is one of the `threads` participants
+        IN_POOL.with(|c| c.set(true));
+        unsafe { run_ctx::<T, F>(job.data) };
+        IN_POOL.with(|c| c.set(false));
+        // drain: all bands are claimed once the caller's sweep ends;
+        // wait for workers still finishing theirs, then release the
+        // slot.  Only after this may `ctx`/`f` leave scope.
+        let mut st = shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+        shared.done.notify_all(); // release queued callers
+        drop(st);
+        if ctx.panicked.load(Ordering::Relaxed) {
+            panic!("bitops::Pool: a parallel band panicked");
+        }
     }
 }
 
@@ -83,6 +320,8 @@ mod tests {
         assert!(Pool::new(0).threads() >= 1);
         assert_eq!(Pool::new(3).threads(), 3);
         assert_eq!(Pool::serial().threads(), 1);
+        assert_eq!(Pool::resolve(5), 5);
+        assert!(Pool::resolve(0) >= 1);
     }
 
     #[test]
@@ -117,5 +356,89 @@ mod tests {
         let mut out: Vec<f32> = Vec::new();
         Pool::new(4).run_rows(0, 8, &mut out, |_, _| panic!("no work expected"));
         Pool::new(4).run_rows(8, 0, &mut out, |_, _| panic!("no work expected"));
+    }
+
+    #[test]
+    fn persistent_workers_survive_many_dispatches() {
+        // the amortization claim: one pool handle, hundreds of sweeps
+        let pool = Pool::new(4);
+        let rows = 16;
+        let row_len = 512;
+        for round in 0..200usize {
+            let mut out = vec![0usize; rows * row_len];
+            pool.run_rows(rows, row_len, &mut out, |r0, band| {
+                for (i, row) in band.chunks_mut(row_len).enumerate() {
+                    row.fill(round + r0 + i);
+                }
+            });
+            for r in 0..rows {
+                assert_eq!(out[r * row_len], round + r, "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_callers_are_serialized_not_corrupted() {
+        // several threads hammering the same shared worker set: the
+        // job slot serializes sweeps, results stay disjoint
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let pool = Pool::new(3);
+                    let rows = 32;
+                    let row_len = 256;
+                    for _ in 0..50 {
+                        let mut out = vec![usize::MAX; rows * row_len];
+                        pool.run_rows(rows, row_len, &mut out, |r0, band| {
+                            for (i, row) in band.chunks_mut(row_len).enumerate() {
+                                row.fill(t * 1000 + r0 + i);
+                            }
+                        });
+                        for r in 0..rows {
+                            assert_eq!(out[r * row_len + 7], t * 1000 + r);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn nested_run_rows_runs_inline() {
+        // a band closure that parallelizes again must not deadlock on
+        // the job slot — it runs inline via the IN_POOL guard
+        let pool = Pool::new(2);
+        let rows = 8;
+        let row_len = 1024;
+        let mut out = vec![0usize; rows * row_len];
+        let inner_pool = Pool::new(2);
+        pool.run_rows(rows, row_len, &mut out, |r0, band| {
+            let brows = band.len() / row_len;
+            inner_pool.run_rows(brows, row_len, band, |ir0, iband| {
+                for (i, row) in iband.chunks_mut(row_len).enumerate() {
+                    row.fill(r0 + ir0 + i);
+                }
+            });
+        });
+        for r in 0..rows {
+            assert_eq!(out[r * row_len], r);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel band panicked")]
+    fn band_panics_propagate_to_caller() {
+        let pool = Pool::new(2);
+        let rows = 8;
+        let row_len = 1024; // crosses MIN_PARALLEL_CELLS
+        let mut out = vec![0u8; rows * row_len];
+        pool.run_rows(rows, row_len, &mut out, |r0, _| {
+            if r0 == 0 {
+                panic!("boom");
+            }
+        });
     }
 }

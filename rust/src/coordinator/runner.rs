@@ -226,7 +226,7 @@ impl Runner {
                     EngineKind::Naive => Accel::Naive,
                     EngineKind::Blocked => Accel::Blocked,
                     // resolve 0 = auto once here, not per matmul
-                    _ => Accel::Tiled(crate::bitops::Pool::new(cfg.threads).threads()),
+                    _ => Accel::Tiled(crate::bitops::Pool::resolve(cfg.threads)),
                 };
                 let eng = build_engine(
                     &cfg.algo,

@@ -13,7 +13,7 @@
 //! Reproduces Table 2 to the MiB and every memory column of Tables
 //! 4/5/6 and Figs. 2/6.
 
-use crate::models::Graph;
+use crate::models::{Graph, LayerKind};
 use crate::util::MIB;
 
 /// Storage data types of the paper's Table 1/2 rows.
@@ -305,6 +305,57 @@ pub fn breakdown(
     Breakdown { model: graph.name.clone(), batch, rows }
 }
 
+/// Peak transient im2col footprint of the binary conv **forward**
+/// GEMM path (max over non-first conv layers; the real-input first
+/// layer keeps its f32 im2col and is priced by the engine's
+/// transient rows).
+///
+/// Pre-fusion (PR 1) the accelerated engines' forward materialized a
+/// f32 cols buffer of B·H·W × k²·Cin and bit-packed it in a second
+/// pass — both live at the pack.  The fused `bitops::im2col_packed`
+/// packs patches directly: `f32_bytes` drops to exactly zero and
+/// only the 1-bit panel remains (~33× less for word-aligned K).
+/// Scope: this models the forward im2col only — the conv *backward*
+/// still allocates rows × k f32 buffers (dX patch gradients; the
+/// standard engine's dW im2col), so the whole-step peak transient is
+/// unchanged until that lever lands.  `memtrack`-measured
+/// counterpart: rust/tests/memtrack_conv.rs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConvColsTransient {
+    /// f32 cols buffer bytes (0 on the fused path).
+    pub f32_bytes: f64,
+    /// Bit-packed patch panel bytes (rows padded to whole u64 words).
+    pub packed_bytes: f64,
+}
+
+impl ConvColsTransient {
+    pub fn total(&self) -> f64 {
+        self.f32_bytes + self.packed_bytes
+    }
+}
+
+/// Model the binary conv path's transient im2col memory, pre-fusion
+/// (`fused = false`: f32 cols + packed panel) or fused
+/// (`fused = true`: packed panel only, zero f32 bytes).
+pub fn conv_cols_transient(graph: &Graph, batch: usize, fused: bool) -> ConvColsTransient {
+    let mut best = ConvColsTransient::default();
+    for n in &graph.nodes {
+        if n.kind != LayerKind::Conv || n.first {
+            continue;
+        }
+        let (pos, k, _) = n.gemm;
+        let rows = (pos * batch) as f64;
+        let cand = ConvColsTransient {
+            f32_bytes: if fused { 0.0 } else { rows * k as f64 * 4.0 },
+            packed_bytes: rows * (k.div_ceil(64) * 8) as f64,
+        };
+        if cand.total() > best.total() {
+            best = cand;
+        }
+    }
+    best
+}
+
 /// Reduction factor standard/proposed (the paper's Δ columns).
 pub fn reduction(graph: &Graph, batch: usize, opt: Optimizer) -> f64 {
     let std = breakdown(graph, batch, &DtypeConfig::standard(), opt);
@@ -470,6 +521,42 @@ mod tests {
         // standard stays f32-containered (405.83)
         let s = breakdown(&g, 100, &DtypeConfig::standard(), Optimizer::Bop);
         assert_eq!(s.row("W").unwrap().dtype, Dtype::F32);
+    }
+
+    #[test]
+    fn fused_im2col_drops_modeled_conv_transient_33x() {
+        // BinaryNet's binary convs have K ∈ {1152, 2304, 4608}, all
+        // word-aligned, so pre-fusion (f32 cols + packed panel) vs
+        // fused (panel only) is exactly (32x + x) / x = 33
+        let g = lower(&get("binarynet").unwrap()).unwrap();
+        let pre = conv_cols_transient(&g, 100, false);
+        let post = conv_cols_transient(&g, 100, true);
+        assert_eq!(post.f32_bytes, 0.0);
+        assert!(pre.f32_bytes > 0.0);
+        // peak layer: conv2, 32*32 positions x K=1152 at B=100
+        let rows = 100.0 * 1024.0;
+        assert_eq!(pre.f32_bytes, rows * 1152.0 * 4.0);
+        assert_eq!(post.packed_bytes, rows * (1152.0 / 8.0));
+        let ratio = pre.total() / post.total();
+        assert!((ratio - 33.0).abs() < 1e-9, "{ratio}");
+        // the eliminated buffer is the dominant conv transient: bigger
+        // than the modeled dX/Y row of the proposed config
+        let bd = binarynet_b100(&DtypeConfig::proposed());
+        assert!(pre.f32_bytes > bd.row("dX/Y").unwrap().bytes);
+    }
+
+    #[test]
+    fn fused_conv_transient_zero_f32_for_every_model() {
+        use crate::models::names;
+        for m in names() {
+            let g = lower(&get(m).unwrap()).unwrap();
+            let t = conv_cols_transient(&g, 64, true);
+            assert_eq!(t.f32_bytes, 0.0, "{m}");
+            // models without binary convs (mlp) model zero transient
+            if m.starts_with("mlp") {
+                assert_eq!(t.total(), 0.0, "{m}");
+            }
+        }
     }
 
     #[test]

@@ -17,11 +17,14 @@
 //! copy overhead (both reproduced here by real allocations).
 //!
 //! Thread-safety: the live/peak counters are `AtomicUsize`, so
-//! allocations from *any* thread — including the tiled GEMM worker
-//! pool (`bitops::Pool`) spawned inside a measured scope — are
-//! attributed to that scope's peak.  Concurrent `measure` scopes are
-//! serialized by an internal mutex (the peak baseline is a single
-//! global), so calls from multiple threads are safe, just ordered.
+//! allocations from *any* thread — including the persistent GEMM /
+//! bit-im2col worker pool (`bitops::Pool`) executing bands inside a
+//! measured scope — are attributed to that scope's peak.  Concurrent
+//! `measure` scopes are serialized by an internal mutex (the peak
+//! baseline is a single global), so calls from multiple threads are
+//! safe, just ordered.  The measured counterpart of the conv-path
+//! model (`memmodel::conv_cols_transient`) lives in
+//! rust/tests/memtrack_conv.rs.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};

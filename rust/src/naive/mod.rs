@@ -14,12 +14,16 @@
 //!
 //! - `Accel::Naive`   — direct convolution/GEMM loops, minimal
 //!   buffers: lowest memory, slowest.
-//! - `Accel::Blocked` — im2col + cache-blocked GEMM (and the XNOR
-//!   path for binary×binary): ~order-of-magnitude faster, buys speed
-//!   with transient buffer memory exactly as the paper reports
-//!   (1.59–2.08× memory for 8.6–29.8× speed).
+//! - `Accel::Blocked` — cache-blocked GEMM and the XNOR path for
+//!   binary×binary: ~order-of-magnitude faster, buying speed with
+//!   transient buffer memory as the paper reports (1.59–2.08× memory
+//!   for 8.6–29.8× speed).  Binary conv layers run the **fused**
+//!   pipeline — `bitops::im2col_packed` signs and packs patches
+//!   straight into bit panels, so the f32 im2col buffer only remains
+//!   on the real-input first layer.
 //! - `Accel::Tiled(threads)` — the blocked memory strategy with the
-//!   4×4 tiled kernels, row-parallel over a worker pool (`0` = auto).
+//!   SIMD/4×4 tiled kernels, bit-im2col and GEMM both row-parallel
+//!   over the persistent worker pool (`0` = auto).
 //!
 //! Both engines cache each layer's binarized weights in a
 //! [`crate::bitops::PackedWeightCache`], packing at most once per
@@ -35,6 +39,9 @@ mod standard;
 pub use plan::{LayerPlan, Plan};
 pub use proposed::ProposedTrainer;
 pub use standard::StandardTrainer;
+// the f32 im2col reference, public for the conv perf bench and the
+// memtrack/property tests that diff the fused bit-im2col against it
+pub use standard::im2col;
 
 use anyhow::Result;
 

@@ -22,7 +22,7 @@ use super::standard::{
     col2im, conv_direct, im2col, maxpool_forward, sign_vec, transpose,
 };
 use super::{glorot_init, softmax_xent_grad, Accel, StepEngine};
-use crate::bitops::{BitMask, BitMatrix, PackedWeightCache};
+use crate::bitops::{im2col_packed, BitMask, BitMatrix, PackedWeightCache};
 use crate::models::Graph;
 use crate::optim::{OptState, Store};
 use crate::util::f16::F16Vec;
@@ -351,11 +351,15 @@ impl ProposedTrainer {
                     (xh, ste)
                 }
                 Some((h, wd, cin, kside)) => {
-                    // mask over the *activation map* (in_elems), pack
-                    // the im2col'd sign matrix for the GEMM
+                    // mask over the *activation map* (in_elems); the
+                    // conv patches are signed+packed straight into
+                    // row panels — no f32 im2col buffer, no separate
+                    // pack pass (§Perf: the fused binary conv path),
+                    // threaded over output rows via the pool
                     let ste = BitMask::from_bools(cur.len(), cur.iter().map(|v| v.abs() <= 1.0));
-                    let cols = im2col(&cur, self.batch, h, wd, cin, kside);
-                    (BitMatrix::pack(rows, k, &cols), ste)
+                    let pool = self.accel.backend().pool();
+                    let xh = im2col_packed(&cur, self.batch, h, wd, cin, kside, &pool);
+                    (xh, ste)
                 }
             };
             drop(cur);

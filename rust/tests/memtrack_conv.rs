@@ -1,0 +1,74 @@
+//! Measured transient conv memory: the fused bit-im2col really
+//! eliminates the f32 cols buffer (the `memtrack` counterpart of
+//! `memmodel::conv_cols_transient`).
+//!
+//! This integration binary installs the tracking allocator (the lib
+//! test harness cannot), measures the pre-fusion path — f32 `im2col`
+//! then `BitMatrix::pack`, exactly what the engines ran before this
+//! PR — against `bitops::im2col_packed`, and asserts the drop against
+//! the modeled figures.
+//!
+//! Single `#[test]`: peak tracking is process-global, so keeping one
+//! test in this binary avoids cross-test allocation noise.
+
+use bnn_edge::bitops::{im2col_packed, BitMatrix, Pool};
+use bnn_edge::memtrack::{measure, TrackingAlloc};
+use bnn_edge::naive::im2col;
+use bnn_edge::util::rng::Pcg32;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+#[test]
+fn fused_bit_im2col_eliminates_f32_cols_buffer() {
+    assert!(bnn_edge::memtrack::is_active(), "tracking allocator not installed");
+
+    // a binary conv shape off the word grid: K = 297 bits
+    let (b, h, w, cin, kside) = (2usize, 16usize, 16usize, 33usize, 3usize);
+    let k = kside * kside * cin;
+    let rows = b * h * w;
+    let cols_bytes = rows * k * 4; // the pre-fusion f32 im2col buffer
+    let packed_bytes = rows * k.div_ceil(64) * 8;
+
+    let mut g = Pcg32::new(1);
+    let x = g.normal_vec(b * h * w * cin);
+
+    // pre-fusion: materialize f32 cols, then bit-pack (both live at
+    // the pack — the PR-1 binary conv path)
+    let (pre_m, pre) = measure(|| {
+        let cols = im2col(&x, b, h, w, cin, kside);
+        std::hint::black_box(BitMatrix::pack(rows, k, &cols))
+    });
+    // fused: straight to the packed panel
+    let (post_m, post) = measure(|| {
+        std::hint::black_box(im2col_packed(&x, b, h, w, cin, kside, &Pool::serial()))
+    });
+    assert_eq!(post_m, pre_m, "paths must produce identical panels");
+
+    // pre-fusion peak contains the full f32 buffer + the panel
+    assert!(
+        pre.growth() >= cols_bytes + packed_bytes,
+        "pre-fusion peak {} < cols {} + panel {}",
+        pre.growth(),
+        cols_bytes,
+        packed_bytes
+    );
+    // fused peak holds the packed panel but nowhere near the f32
+    // buffer: zero f32 im2col bytes on the binary path
+    assert!(post.growth() >= packed_bytes);
+    assert!(
+        post.growth() < cols_bytes / 8,
+        "fused peak {} should be far below the f32 cols buffer {}",
+        post.growth(),
+        cols_bytes
+    );
+    // and the measured drop matches the modeled ~33x within slack
+    // (allocator rounding; K=297 is not word-aligned so modeled
+    // ratio here is (rows*k*4 + panel) / panel ≈ 30.7)
+    let measured_ratio = pre.growth() as f64 / post.growth() as f64;
+    let modeled_ratio = (cols_bytes + packed_bytes) as f64 / packed_bytes as f64;
+    assert!(
+        measured_ratio > modeled_ratio * 0.5,
+        "measured {measured_ratio:.1}x vs modeled {modeled_ratio:.1}x"
+    );
+}

@@ -2,11 +2,12 @@
 //! failure-case printing) over the substrates' invariants —
 //! DESIGN.md §Key-invariants.
 
-use bnn_edge::bitops::{gemm, BitMatrix};
+use bnn_edge::bitops::{gemm, im2col_packed, simd, BitMatrix, Pool};
 use bnn_edge::data;
 use bnn_edge::federated::sign_vote;
 use bnn_edge::memmodel::{breakdown, DtypeConfig, Optimizer};
 use bnn_edge::models::{get, lower, names};
+use bnn_edge::naive::im2col;
 use bnn_edge::util::f16::{f16_bits_to_f32, f32_to_f16_bits, q16};
 use bnn_edge::util::json::Json;
 use bnn_edge::util::rng::Pcg32;
@@ -209,8 +210,9 @@ fn prop_tiled_and_parallel_xnor_bit_exact_vs_naive() {
     // the tentpole invariant: every kernel tier and thread count is
     // bit-exact against the naive triple loop, across odd shapes
     // (K not a multiple of 64, M/N below the 4×4 tile, single
-    // row/col) — tier-1 for the tiled backend
-    use bnn_edge::bitops::Pool;
+    // row/col) — tier-1 for the tiled backend.  With AVX2/NEON
+    // detected, xnor_gemm_tiled/parallel run the SIMD panels, so this
+    // is also the SIMD-vs-scalar GEMM exactness sweep.
     let mut g = Pcg32::new(21);
     for case in 0..CASES {
         let m = 1 + g.below(20);
@@ -275,6 +277,81 @@ fn prop_backend_dispatch_agrees_everywhere() {
             let mut got = vec![0.0; m * n];
             be.xnor_gemm(&ap, &btp, &mut got);
             assert_eq!(got, want, "case {case} {}", be.label());
+        }
+    }
+}
+
+#[test]
+fn prop_im2col_packed_matches_reference() {
+    // the fused bit-im2col is bit-exact against f32 im2col + pack —
+    // kside 1/3/5, patch widths off the u64 word grid, batch 1/3,
+    // every pool thread count (bands must tile the rows exactly)
+    let mut g = Pcg32::new(25);
+    let ksides = [1usize, 3, 5];
+    for case in 0..CASES {
+        let kside = ksides[g.below(3)];
+        let b = 1 + 2 * g.below(2); // 1 or 3
+        let h = kside.max(2) + g.below(6);
+        let w = kside.max(2) + g.below(6);
+        let cin = 1 + g.below(70); // k²·cin rarely a multiple of 64
+        let k = kside * kside * cin;
+        let rows = b * h * w;
+        // exact zeros must pack as +1, like the f32 reference
+        let x: Vec<f32> = g
+            .normal_vec(b * h * w * cin)
+            .into_iter()
+            .enumerate()
+            .map(|(i, v)| if i % 13 == 0 { 0.0 } else { v })
+            .collect();
+        let want = BitMatrix::pack(rows, k, &im2col(&x, b, h, w, cin, kside));
+        for threads in [1, 2, 4] {
+            let got = im2col_packed(&x, b, h, w, cin, kside, &Pool::new(threads));
+            assert_eq!(
+                got, want,
+                "case {case} b{b} {h}x{w}x{cin} k{kside} t{threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_simd_gemm_bit_exact_vs_scalar_kernels() {
+    // the dispatched SIMD popcount kernels and the tiled GEMM built
+    // on them against the forced-scalar paths, across thread counts
+    let mut g = Pcg32::new(26);
+    for case in 0..CASES {
+        let len = g.below(40);
+        let a: Vec<u64> = (0..len).map(|_| g.next_u64()).collect();
+        let bs: Vec<Vec<u64>> =
+            (0..4).map(|_| (0..len).map(|_| g.next_u64()).collect()).collect();
+        assert_eq!(
+            simd::xor_popcount(&a, &bs[0]),
+            simd::xor_popcount_scalar(&a, &bs[0]),
+            "case {case} len {len}"
+        );
+        assert_eq!(
+            simd::xor_popcount_1x4(&a, &bs[0], &bs[1], &bs[2], &bs[3]),
+            simd::xor_popcount_1x4_scalar(&a, &bs[0], &bs[1], &bs[2], &bs[3]),
+            "case {case} len {len}"
+        );
+    }
+    for case in 0..30 {
+        let m = 1 + g.below(16);
+        let k = 1 + g.below(400);
+        let n = 1 + g.below(16);
+        let a = g.normal_vec(m * k);
+        let bt = g.normal_vec(n * k);
+        let ap = BitMatrix::pack(m, k, &a);
+        let btp = BitMatrix::pack(n, k, &bt);
+        let mut scalar = vec![0.0; m * n];
+        gemm::xnor_gemm_tiled_scalar(&ap, &btp, &mut scalar);
+        let mut dispatched = vec![0.0; m * n];
+        gemm::xnor_gemm_tiled(&ap, &btp, &mut dispatched);
+        assert_eq!(dispatched, scalar, "case {case} tiled ({m},{k},{n})");
+        for threads in [1, 2, 4] {
+            let mut par = vec![0.0; m * n];
+            gemm::xnor_gemm_parallel(&ap, &btp, &mut par, &Pool::new(threads));
+            assert_eq!(par, scalar, "case {case} t={threads} ({m},{k},{n})");
         }
     }
 }
