@@ -1,14 +1,13 @@
 //! §Perf conv microbench — the end-to-end packed conv pipeline,
 //! swept across model-zoo conv shapes and every GEMM backend tier.
 //!
-//! Two pipelines per shape:
+//! **Forward** (default): two pipelines per shape —
 //!
-//! - **fused** (this PR): `bitops::im2col_packed` signs+packs patches
-//!   straight into bit panels (pool-threaded), then the XNOR GEMM —
-//!   zero f32 im2col bytes on the binary path;
+//! - **fused**: `bitops::im2col_packed` signs+packs patches straight
+//!   into bit panels (pool-threaded), then the XNOR GEMM — zero f32
+//!   im2col bytes on the binary path;
 //! - **`tiled-im2col`** (the PR-1 baseline): f32 `im2col`, then
-//!   `BitMatrix::pack`, then the same tiled XNOR GEMM — the
-//!   acceptance criterion diffs fused `tiled` rows against these.
+//!   `BitMatrix::pack`, then the same tiled XNOR GEMM.
 //!
 //! Emits `BENCH_conv.json` (stable schema: `{backend, layer, h, w,
 //! cin, cout, kside, batch, giops, threads, im2col_f32_bytes}`) via
@@ -17,13 +16,31 @@
 //! overheads depress it honestly.  `im2col_f32_bytes` records the
 //! transient f32 buffer each variant materializes (0 = fused).
 //!
+//! **Backward** (`--backward`): the conv backward pipelines —
+//!
+//! - **fused**: `conv_dx_streaming` (tap-streamed dX, no rows×k
+//!   `dcols`) + `im2col_packed` → `packed_at_gemm_f32` dW +
+//!   `subtract_pad_dw_contrib`;
+//! - **`tiled-im2col`** (the pre-fusion baseline): Ŵᵀ unpack → f32
+//!   dcols GEMM → col2im, then sign → f32 im2col → transpose → dW
+//!   GEMM.
+//!
+//! Emits `BENCH_conv_bwd.json` (`{backend, layer, h, w, cin, cout,
+//! kside, batch, giops, threads, dcols_f32_bytes}`); `giops` counts
+//! both backward GEMMs (4·B·H·W·k²·Cin·Cout) over the pipeline time,
+//! and fused rows carry `dcols_f32_bytes: 0`.
+//!
 //! Flags: `--smoke` (quick sampling + trimmed sweep for CI; keeps the
-//! fused-vs-baseline pair the acceptance criterion needs), `--out
-//! PATH` (default `BENCH_conv.json`).
+//! fused-vs-baseline pair the acceptance criterion needs),
+//! `--backward`, `--out PATH` (default `BENCH_conv.json` /
+//! `BENCH_conv_bwd.json`).
 
-use bnn_edge::bitops::{im2col_packed, simd, Backend, BitMatrix};
+use bnn_edge::bitops::{
+    conv_dx_streaming, im2col_packed, packed_at_gemm_f32, simd, subtract_pad_dw_contrib,
+    Backend, BitMatrix,
+};
 use bnn_edge::models::{get, lower};
-use bnn_edge::naive::{im2col, LayerPlan, Plan};
+use bnn_edge::naive::{col2im, im2col, transpose, LayerPlan, Plan};
 use bnn_edge::util::bench::{black_box, write_json_rows, Bencher};
 use bnn_edge::util::cli::Args;
 use bnn_edge::util::json::Json;
@@ -72,7 +89,8 @@ fn push_row(
     s: &Shape,
     giops: f64,
     threads: usize,
-    im2col_f32_bytes: usize,
+    bytes_field: &str,
+    bytes: usize,
 ) {
     let mut row = Json::obj();
     row.set("backend", Json::from(backend));
@@ -85,14 +103,16 @@ fn push_row(
     row.set("batch", Json::from(s.batch));
     row.set("giops", Json::from(giops));
     row.set("threads", Json::from(threads));
-    row.set("im2col_f32_bytes", Json::from(im2col_f32_bytes));
+    row.set(bytes_field, Json::from(bytes));
     rows.push(row);
 }
 
 fn main() {
     let args = Args::from_env();
     let smoke = args.bool("smoke");
-    let out_path = args.str_or("out", "BENCH_conv.json");
+    let backward = args.bool("backward");
+    let out_path =
+        args.str_or("out", if backward { "BENCH_conv_bwd.json" } else { "BENCH_conv.json" });
     let mut bench = if smoke { Bencher::quick() } else { Bencher::default() };
     let mut g = Pcg32::new(2);
     println!("simd level: {}", simd::label());
@@ -124,12 +144,64 @@ fn main() {
         let (b, h, w, cin, cout, kside) = (s.batch, s.h, s.w, s.cin, s.cout, s.kside);
         let k = kside * kside * cin;
         let orows = b * h * w;
-        let ops = 2.0 * (orows * k * cout) as f64;
         let x = g.normal_vec(b * h * w * cin);
         let wt_f = g.normal_vec(cout * k); // transposed (cout × k) layout
         let wt = BitMatrix::pack(cout, k, &wt_f);
-        let mut y = vec![0.0f32; orows * cout];
         let label = format!("{} b{b} {h}x{w}x{cin}->{cout} k{kside}", s.layer);
+
+        if backward {
+            // conv backward: dX (streaming col2im) + dW (packed-A GEMM
+            // + pad correction) — two GEMMs' worth of work
+            let ops = 4.0 * (orows * k * cout) as f64;
+            let dy = g.normal_vec(orows * cout);
+            for &be in &backends {
+                let pool = be.pool();
+                let r = bench.bench(&format!("conv bwd fused {:<9} {label}", be.label()), || {
+                    let dx = conv_dx_streaming(&dy, &wt, b, h, w, cin, kside, be);
+                    let xh = im2col_packed(&x, b, h, w, cin, kside, &pool);
+                    let mut dw = vec![0.0f32; k * cout];
+                    packed_at_gemm_f32(&xh, &dy, cout, &mut dw, &pool);
+                    subtract_pad_dw_contrib(&mut dw, &dy, b, h, w, cin, cout, kside);
+                    black_box(dx[0] + dw[0]);
+                });
+                let giops = r.giops(ops);
+                println!("  -> bwd fused {:<9} {label}: {giops:.2} GiOp/s", be.label());
+                push_row(&mut rows, be.name(), s, giops, be.threads(), "dcols_f32_bytes", 0);
+            }
+            // pre-fusion baseline: f32 dcols + col2im, f32 im2col +
+            // transpose + dW GEMM (the PR-2 backward)
+            for threads in [2usize, 4] {
+                let be = Backend::Tiled { threads };
+                let r = bench.bench(&format!("conv bwd im2col tiled({threads}) {label}"), || {
+                    let wt_dense = wt.unpack();
+                    let mut dcols = vec![0.0f32; orows * k];
+                    be.gemm_f32(orows, cout, k, &dy, &wt_dense, &mut dcols);
+                    let dx = col2im(&dcols, b, h, w, cin, kside);
+                    let xhat: Vec<f32> =
+                        x.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+                    let cols = im2col(&xhat, b, h, w, cin, kside);
+                    let colst = transpose(&cols, orows, k);
+                    let mut dw = vec![0.0f32; k * cout];
+                    be.gemm_f32(k, orows, cout, &colst, &dy, &mut dw);
+                    black_box(dx[0] + dw[0]);
+                });
+                let base_giops = r.giops(ops);
+                println!("  -> bwd im2col tiled({threads}) {label}: {base_giops:.2} GiOp/s");
+                push_row(
+                    &mut rows,
+                    "tiled-im2col",
+                    s,
+                    base_giops,
+                    threads,
+                    "dcols_f32_bytes",
+                    orows * k * 4,
+                );
+            }
+            continue;
+        }
+
+        let ops = 2.0 * (orows * k * cout) as f64;
+        let mut y = vec![0.0f32; orows * cout];
 
         // fused pipeline per backend tier
         for &be in &backends {
@@ -141,7 +213,7 @@ fn main() {
             });
             let giops = r.giops(ops);
             println!("  -> fused {:<9} {label}: {giops:.2} GiOp/s", be.label());
-            push_row(&mut rows, be.name(), s, giops, be.threads(), 0);
+            push_row(&mut rows, be.name(), s, giops, be.threads(), "im2col_f32_bytes", 0);
         }
 
         // PR-1 baseline: f32 im2col + pack + the same tiled GEMM
@@ -168,10 +240,18 @@ fn main() {
                     fg / base_giops
                 );
             }
-            push_row(&mut rows, "tiled-im2col", s, base_giops, threads, orows * k * 4);
+            push_row(
+                &mut rows,
+                "tiled-im2col",
+                s,
+                base_giops,
+                threads,
+                "im2col_f32_bytes",
+                orows * k * 4,
+            );
         }
     }
 
-    write_json_rows(&out_path, rows).expect("write BENCH_conv.json");
+    write_json_rows(&out_path, rows).expect("write conv bench json");
     println!("wrote {out_path}");
 }

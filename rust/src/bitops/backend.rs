@@ -93,6 +93,28 @@ impl Backend {
             }
         }
     }
+
+    /// Packed-A real GEMM of the conv/dense backward's dW: out (k×n)
+    /// = Âᵀ @ B, `a` the bit-packed (rows×k) ±1 activations, `b` the
+    /// dense (rows×n) ∂Y.  Row-banded over the tier's pool on `Tiled`;
+    /// bit-identical across tiers and thread counts.
+    pub fn packed_at_gemm_f32(&self, a: &BitMatrix, b: &[f32], n: usize, out: &mut [f32]) {
+        gemm::packed_at_gemm_f32(a, b, n, out, &self.pool());
+    }
+
+    /// f32 AᵀB GEMM without materializing Aᵀ: out (k×n) = aᵀ (rows×k)
+    /// @ b (rows×n) — the reference backward's transpose-free dW.
+    pub fn gemm_f32_at(
+        &self,
+        rows: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+    ) {
+        gemm::gemm_f32_at(rows, k, n, a, b, out, &self.pool());
+    }
 }
 
 #[cfg(test)]

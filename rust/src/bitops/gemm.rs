@@ -344,6 +344,109 @@ pub fn gemm_f32_parallel(
     });
 }
 
+/// Bit mask selecting bits `[start, end)` of one u64 word
+/// (`0 ≤ start < end ≤ 64`).
+#[inline]
+fn word_range_mask(start: usize, end: usize) -> u64 {
+    debug_assert!(start < end && end <= 64);
+    let hi = if end == 64 { u64::MAX } else { (1u64 << end) - 1 };
+    hi & (u64::MAX << start)
+}
+
+/// Packed-A real GEMM: out (k×n) = Âᵀ @ B, where Â is the bit-packed
+/// ±1 (rows × k) matrix and B is dense f32 (rows × n) —
+/// `out[kk][j] = Σ_r Â[r][kk]·b[r][j]`.
+///
+/// This is the conv/dense backward's dW contraction (X̂ᵀ·∂Y) computed
+/// straight from the packed activation panel: no (rows × k) f32
+/// unpack, no (k × rows) transpose — the buffers that used to bound
+/// the backward's transient peak.  Row-outer per band: each ∂Y row is
+/// added to the band's out rows with set bits and subtracted from
+/// those with clear bits, so every out cell accumulates in ascending
+/// row order — **bit-identical** to densifying Âᵀ and running
+/// [`gemm_f32`]/[`gemm_f32_naive`], at any thread count (bands split
+/// the k axis, never the reduction axis).
+pub fn packed_at_gemm_f32(a: &BitMatrix, b: &[f32], n: usize, out: &mut [f32], pool: &Pool) {
+    let (rows, k) = (a.rows, a.cols);
+    assert_eq!(b.len(), rows * n, "B shape mismatch");
+    assert_eq!(out.len(), k * n, "out shape mismatch");
+    if k == 0 || n == 0 {
+        return;
+    }
+    pool.run_rows(k, n, out, |kk0, band| {
+        band.fill(0.0);
+        let kk1 = kk0 + band.len() / n;
+        for r in 0..rows {
+            let brow = &b[r * n..(r + 1) * n];
+            let words = a.row_words(r);
+            let (w0, wlast) = (kk0 >> 6, (kk1 - 1) >> 6);
+            for w in w0..=wlast {
+                let lo = (w << 6).max(kk0);
+                let hi = ((w << 6) + 64).min(kk1);
+                let mask = word_range_mask(lo - (w << 6), hi - (w << 6));
+                let mut set = words[w] & mask;
+                let mut clear = !words[w] & mask;
+                while set != 0 {
+                    let kk = (w << 6) + set.trailing_zeros() as usize;
+                    let orow = &mut band[(kk - kk0) * n..(kk - kk0 + 1) * n];
+                    simd::add_assign_f32(orow, brow);
+                    set &= set - 1;
+                }
+                while clear != 0 {
+                    let kk = (w << 6) + clear.trailing_zeros() as usize;
+                    let orow = &mut band[(kk - kk0) * n..(kk - kk0 + 1) * n];
+                    simd::sub_assign_f32(orow, brow);
+                    clear &= clear - 1;
+                }
+            }
+        }
+    });
+}
+
+/// f32 AᵀB GEMM without materializing Aᵀ: out (k×n) = aᵀ (rows×k) @ b
+/// (rows×n).  Replaces the `transpose(a)` + [`gemm_f32`] pair of the
+/// pre-fusion backward (one whole rows×k transient gone); row-outer,
+/// so each out cell accumulates in ascending row order — bit-identical
+/// to the transpose+GEMM path at any thread count.  ±1 entries take
+/// the exact add/sub path (the engines' signed activations).
+pub fn gemm_f32_at(
+    rows: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    pool: &Pool,
+) {
+    assert_eq!(a.len(), rows * k);
+    assert_eq!(b.len(), rows * n);
+    assert_eq!(out.len(), k * n);
+    if k == 0 || n == 0 {
+        return;
+    }
+    pool.run_rows(k, n, out, |kk0, band| {
+        band.fill(0.0);
+        let kks = band.len() / n;
+        for r in 0..rows {
+            let arow = &a[r * k + kk0..r * k + kk0 + kks];
+            let brow = &b[r * n..(r + 1) * n];
+            for (kkl, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut band[kkl * n..(kkl + 1) * n];
+                if av == 1.0 {
+                    simd::add_assign_f32(orow, brow);
+                } else if av == -1.0 {
+                    simd::sub_assign_f32(orow, brow);
+                } else {
+                    simd::axpy_f32(orow, av, brow);
+                }
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -494,6 +597,89 @@ mod tests {
                 let mut z = vec![0.0; m * n];
                 gemm_f32_parallel(m, k, n, &a, &b, &mut z, &Pool::new(threads));
                 assert_eq!(y, z, "parallel t={threads} {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn word_range_mask_cases() {
+        assert_eq!(word_range_mask(0, 64), u64::MAX);
+        assert_eq!(word_range_mask(0, 1), 1);
+        assert_eq!(word_range_mask(63, 64), 1u64 << 63);
+        assert_eq!(word_range_mask(4, 8), 0b1111_0000);
+        assert_eq!(word_range_mask(0, 64).count_ones(), 64);
+        for s in 0..64 {
+            for e in (s + 1)..=64 {
+                assert_eq!(word_range_mask(s, e).count_ones() as usize, e - s, "{s}..{e}");
+            }
+        }
+    }
+
+    fn transpose_ref(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        let mut t = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                t[c * rows + r] = a[r * cols + c];
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn packed_at_gemm_bit_identical_to_densified_reference() {
+        // the dW kernel's exactness claim: identical to unpacking Âᵀ
+        // and running the dense f32 GEMM — odd shapes (k off the word
+        // grid, k below/above one word, single row/col) and every
+        // thread count (bands split k, not the reduction)
+        let mut g = Pcg32::new(51);
+        for (rows, k, n) in [
+            (1, 1, 1),
+            (3, 63, 4),
+            (5, 64, 3),
+            (7, 65, 5),
+            (16, 130, 9),
+            (33, 200, 17),
+            (64, 70, 70), // 4900 cells: crosses MIN_PARALLEL_CELLS
+        ] {
+            let av = g.normal_vec(rows * k);
+            let b = g.normal_vec(rows * n);
+            let a = BitMatrix::pack(rows, k, &av);
+            let at = transpose_ref(&a.unpack(), rows, k); // (k × rows) ±1
+            let mut want = vec![0.0f32; k * n];
+            gemm_f32(k, rows, n, &at, &b, &mut want);
+            for threads in [1, 2, 4] {
+                let mut got = vec![0.0f32; k * n];
+                packed_at_gemm_f32(&a, &b, n, &mut got, &Pool::new(threads));
+                assert_eq!(got, want, "t={threads} ({rows},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_f32_at_bit_identical_to_transpose_then_gemm() {
+        let mut g = Pcg32::new(52);
+        for (rows, k, n) in [(1, 1, 1), (4, 7, 3), (16, 64, 33), (10, 100, 9), (70, 70, 70)] {
+            // mix dense values with exact ±1/0 entries (the signed
+            // activation fast paths)
+            let a: Vec<f32> = g
+                .normal_vec(rows * k)
+                .into_iter()
+                .enumerate()
+                .map(|(i, v)| match i % 5 {
+                    0 => 1.0,
+                    1 => -1.0,
+                    2 => 0.0,
+                    _ => v,
+                })
+                .collect();
+            let b = g.normal_vec(rows * n);
+            let at = transpose_ref(&a, rows, k);
+            let mut want = vec![0.0f32; k * n];
+            gemm_f32(k, rows, n, &at, &b, &mut want);
+            for threads in [1, 2, 4] {
+                let mut got = vec![0.0f32; k * n];
+                gemm_f32_at(rows, k, n, &a, &b, &mut got, &Pool::new(threads));
+                assert_eq!(got, want, "t={threads} ({rows},{k},{n})");
             }
         }
     }

@@ -27,7 +27,20 @@
 //! subtracted on the border output columns (O(border·k²·Cout), weight
 //! scan O(k·Cout/64) word-popcounts).
 
-use super::{BitMatrix, Pool};
+use super::{simd, Backend, BitMatrix, Pool};
+
+/// SAME im2col geometry is only symmetric for odd kernels:
+/// `pad = (kside-1)/2` silently under-pads the right/bottom for even
+/// `kside`.  Every conv entry point asserts this; the engines reject
+/// even kernels earlier, at plan-build time (`naive::Plan`).
+#[inline]
+pub(crate) fn assert_odd_kside(kside: usize) {
+    assert!(
+        kside % 2 == 1 && kside > 0,
+        "SAME conv requires an odd kernel side, got {kside} \
+         (pad = (kside-1)/2 would be asymmetric)"
+    );
+}
 
 /// OR `vals.len()` sign bits (`v ≥ 0` ⇔ set, the paper's sgn with
 /// sgn(0) = +1) into `words` starting at bit offset `bit`, assembling
@@ -112,6 +125,7 @@ pub fn im2col_packed(
     kside: usize,
     pool: &Pool,
 ) -> BitMatrix {
+    assert_odd_kside(kside);
     assert_eq!(x.len(), b * h * w * cin, "NHWC shape mismatch");
     let k = kside * kside * cin;
     let rows = b * h * w;
@@ -168,6 +182,7 @@ pub fn subtract_pad_contrib(
     cin: usize,
     kside: usize,
 ) {
+    assert_odd_kside(kside);
     let pad = (kside - 1) / 2;
     if pad == 0 {
         return; // 1×1 taps never leave the map
@@ -208,6 +223,162 @@ pub fn subtract_pad_contrib(
                     }
                 }
             }
+        }
+    }
+}
+
+/// Scatter-add one conv tap's (B·H·W × cin) panel into the NHWC input
+/// gradient map — the streaming col2im inner step.  Output position
+/// (bi, y, x) contributes its panel row to input position
+/// (bi, y + ky − pad, x + kx − pad); out-of-bounds taps are skipped
+/// (zero-padding contributes no input gradient).  Rows contiguous in
+/// `x` shift together, so each (bi, y) line is one vector add.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im_tap_scatter(
+    dx: &mut [f32],
+    panel: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kside: usize,
+    ky: usize,
+    kx: usize,
+) {
+    assert_odd_kside(kside);
+    debug_assert_eq!(dx.len(), b * h * w * cin);
+    debug_assert_eq!(panel.len(), b * h * w * cin);
+    debug_assert!(ky < kside && kx < kside);
+    let pad = (kside - 1) / 2;
+    let oy = ky as isize - pad as isize; // sy = y + oy
+    let ox = kx as isize - pad as isize; // sx = x + ox
+    // valid output range: sy ∈ [0, h), sx ∈ [0, w)
+    let ylo = (-oy).max(0) as usize;
+    let yhi = ((h as isize - oy).min(h as isize)).max(0) as usize;
+    let xlo = (-ox).max(0) as usize;
+    let xhi = ((w as isize - ox).min(w as isize)).max(0) as usize;
+    if ylo >= yhi || xlo >= xhi {
+        return;
+    }
+    let run = (xhi - xlo) * cin; // contiguous in x on both sides
+    for bi in 0..b {
+        for y in ylo..yhi {
+            let sy = (y as isize + oy) as usize;
+            let sx = (xlo as isize + ox) as usize;
+            let src = ((bi * h + y) * w + xlo) * cin;
+            let dst = ((bi * h + sy) * w + sx) * cin;
+            simd::add_assign_f32(&mut dx[dst..dst + run], &panel[src..src + run]);
+        }
+    }
+}
+
+/// Streaming col2im-fused dX for the stride-1 SAME conv backward:
+/// `dx = col2im(∂Y · Ŵᵀ)` computed **tap-by-tap** — per (ky, kx) a
+/// (B·H·W × cin) panel `∂Y · Ŵᵀ[tap]` (the backend's f32 GEMM,
+/// row-banded over the worker pool on the tiled tier) is scatter-added
+/// straight into `dx` via [`col2im_tap_scatter`].
+///
+/// The full (B·H·W × k²·Cin) `dcols` patch-gradient buffer — the
+/// backward's dominant f32 transient — never exists; the peak
+/// transient is one panel (k²× smaller) plus the (Cout × cin) f32 tap
+/// weights unpacked from the packed Ŵᵀ.  Equal to
+/// `col2im(gemm(∂Y, Ŵᵀ))` up to f32 summation order (taps accumulate
+/// tap-major instead of row-major), and identical across backends and
+/// thread counts (bands never split a reduction).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_dx_streaming(
+    dy: &[f32],
+    wt: &BitMatrix,
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kside: usize,
+    backend: Backend,
+) -> Vec<f32> {
+    assert_odd_kside(kside);
+    let cout = wt.rows;
+    let rows = b * h * w;
+    assert_eq!(dy.len(), rows * cout, "dY shape mismatch");
+    assert_eq!(wt.cols, kside * kside * cin, "Ŵᵀ shape mismatch");
+    let mut dx = vec![0.0f32; b * h * w * cin];
+    let mut panel = vec![0.0f32; rows * cin];
+    let mut wtap = vec![0.0f32; cout * cin];
+    for ky in 0..kside {
+        for kx in 0..kside {
+            let tap = ky * kside + kx;
+            // unpack this tap's (cout × cin) ±1 weight slice from the
+            // packed Ŵᵀ row words — never the full (cout × k) f32
+            for j in 0..cout {
+                let words = wt.row_words(j);
+                let row = &mut wtap[j * cin..(j + 1) * cin];
+                for (ci, v) in row.iter_mut().enumerate() {
+                    let c = tap * cin + ci;
+                    *v = if words[c >> 6] >> (c & 63) & 1 == 1 { 1.0 } else { -1.0 };
+                }
+            }
+            backend.gemm_f32(rows, cout, cin, dy, &wtap, &mut panel);
+            col2im_tap_scatter(&mut dx, &panel, b, h, w, cin, kside, ky, kx);
+        }
+    }
+    dx
+}
+
+/// Masked SAME-padding correction for the packed-activation dW of the
+/// standard engine: `im2col_packed` fixes out-of-bounds taps at +1,
+/// so `X̂ᵀ·∂Y` overshoots the zero-padded truth by the border rows'
+/// ∂Y sums.  For each tap, `B[tap][j] = Σ_{r: tap OOB at r} ∂Y[r][j]`
+/// is accumulated over border output positions only, then subtracted
+/// from all `cin` dW rows of that tap.  O(border·k²·Cout + k²·Cin·Cout)
+/// — weight-scale work, no rows×k anything.
+#[allow(clippy::too_many_arguments)]
+pub fn subtract_pad_dw_contrib(
+    dw: &mut [f32],
+    dy: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    kside: usize,
+) {
+    assert_odd_kside(kside);
+    let pad = (kside - 1) / 2;
+    if pad == 0 {
+        return; // 1×1 taps never leave the map
+    }
+    let kk = kside * kside;
+    debug_assert_eq!(dw.len(), kk * cin * cout);
+    debug_assert_eq!(dy.len(), b * h * w * cout);
+    // border ∂Y sums per tap
+    let mut bs = vec![0.0f32; kk * cout];
+    for bi in 0..b {
+        for yy in 0..h {
+            for xx in 0..w {
+                // interior positions have no out-of-bounds taps
+                if yy >= pad && yy + pad < h && xx >= pad && xx + pad < w {
+                    continue;
+                }
+                let dyr = &dy[((bi * h + yy) * w + xx) * cout..][..cout];
+                for ky in 0..kside {
+                    let sy = yy as isize + ky as isize - pad as isize;
+                    let y_oob = sy < 0 || sy >= h as isize;
+                    for kx in 0..kside {
+                        let sx = xx as isize + kx as isize - pad as isize;
+                        if y_oob || sx < 0 || sx >= w as isize {
+                            let brow = &mut bs[(ky * kside + kx) * cout..][..cout];
+                            simd::add_assign_f32(brow, dyr);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for tap in 0..kk {
+        let brow = &bs[tap * cout..(tap + 1) * cout];
+        for ci in 0..cin {
+            let drow = &mut dw[(tap * cin + ci) * cout..][..cout];
+            simd::sub_assign_f32(drow, brow);
         }
     }
 }
@@ -364,5 +535,161 @@ mod tests {
         let before = y.clone();
         subtract_pad_contrib(&mut y, &wt, b, h, w, cin, 1);
         assert_eq!(y, before);
+    }
+
+    /// f32 reference col2im (mirrors `naive::col2im`, local so the
+    /// substrate tests have no engine dependency).
+    fn col2im_ref(
+        dcols: &[f32],
+        b: usize,
+        h: usize,
+        w: usize,
+        cin: usize,
+        kside: usize,
+    ) -> Vec<f32> {
+        let k = kside * kside * cin;
+        let pad = (kside - 1) / 2;
+        let mut dx = vec![0.0f32; b * h * w * cin];
+        for bi in 0..b {
+            for y in 0..h {
+                for x0 in 0..w {
+                    let mut idx = ((bi * h + y) * w + x0) * k;
+                    for ky in 0..kside {
+                        let sy = y as isize + ky as isize - pad as isize;
+                        for kx in 0..kside {
+                            let sx = x0 as isize + kx as isize - pad as isize;
+                            if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
+                                let dst = ((bi * h + sy as usize) * w + sx as usize) * cin;
+                                for ci in 0..cin {
+                                    dx[dst + ci] += dcols[idx + ci];
+                                }
+                            }
+                            idx += cin;
+                        }
+                    }
+                }
+            }
+        }
+        dx
+    }
+
+    #[test]
+    fn tap_scatter_sums_to_col2im() {
+        // Σ_taps scatter(panel_tap(c)) == col2im(c) (f32 reorder only)
+        let mut g = Pcg32::new(46);
+        for (b, h, w, cin, kside) in geometries() {
+            let k = kside * kside * cin;
+            let rows = b * h * w;
+            let c = g.normal_vec(rows * k);
+            let want = col2im_ref(&c, b, h, w, cin, kside);
+            let mut got = vec![0.0f32; b * h * w * cin];
+            let mut panel = vec![0.0f32; rows * cin];
+            for ky in 0..kside {
+                for kx in 0..kside {
+                    let tap = ky * kside + kx;
+                    for r in 0..rows {
+                        panel[r * cin..(r + 1) * cin]
+                            .copy_from_slice(&c[r * k + tap * cin..r * k + (tap + 1) * cin]);
+                    }
+                    col2im_tap_scatter(&mut got, &panel, b, h, w, cin, kside, ky, kx);
+                }
+            }
+            for i in 0..want.len() {
+                assert!(
+                    (got[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
+                    "b{b} {h}x{w}x{cin} k{kside} @ {i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_dx_matches_gemm_col2im_reference() {
+        // conv_dx_streaming == col2im(∂Y · Ŵᵀ) within f32 reorder, on
+        // every backend tier and thread count — and it is identical
+        // across tiers (same kernels, bands never split a reduction)
+        let mut g = Pcg32::new(47);
+        for (b, h, w, cin, kside) in geometries() {
+            let k = kside * kside * cin;
+            let rows = b * h * w;
+            let cout = 5;
+            let dy = g.normal_vec(rows * cout);
+            let wt = BitMatrix::pack(cout, k, &g.normal_vec(cout * k));
+            let wt_f = wt.unpack();
+            let mut dcols = vec![0.0f32; rows * k];
+            gemm_f32(rows, cout, k, &dy, &wt_f, &mut dcols);
+            let want = col2im_ref(&dcols, b, h, w, cin, kside);
+            let first = conv_dx_streaming(&dy, &wt, b, h, w, cin, kside, Backend::Blocked);
+            for i in 0..want.len() {
+                assert!(
+                    (first[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
+                    "b{b} {h}x{w}x{cin} k{kside} @ {i}: {} vs {}",
+                    first[i],
+                    want[i]
+                );
+            }
+            for threads in [1, 2, 4] {
+                let got = conv_dx_streaming(
+                    &dy,
+                    &wt,
+                    b,
+                    h,
+                    w,
+                    cin,
+                    kside,
+                    Backend::Tiled { threads },
+                );
+                assert_eq!(got, first, "b{b} {h}x{w}x{cin} k{kside} t{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_dw_with_pad_correction_equals_zero_pad_reference() {
+        // im2col_packed(x)ᵀ·∂Y (pads +1) + correction == zero-padded
+        // colsᵀ·∂Y — the standard engine's fused dW semantics
+        use crate::bitops::gemm::packed_at_gemm_f32;
+        let mut g = Pcg32::new(48);
+        for (b, h, w, cin, kside) in geometries() {
+            let k = kside * kside * cin;
+            let rows = b * h * w;
+            let cout = 4;
+            let x = noisy_map(&mut g, b * h * w * cin);
+            let dy = g.normal_vec(rows * cout);
+            // reference: zero-pad im2col of sign(x), transposed GEMM
+            let xs: Vec<f32> =
+                x.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+            let cols = im2col_ref(&xs, b, h, w, cin, kside);
+            let mut colst = vec![0.0f32; k * rows];
+            for r in 0..rows {
+                for kk in 0..k {
+                    colst[kk * rows + r] = cols[r * k + kk];
+                }
+            }
+            let mut want = vec![0.0f32; k * cout];
+            gemm_f32(k, rows, cout, &colst, &dy, &mut want);
+            // fused: packed panel, packed-A GEMM, border correction
+            let xh = im2col_packed(&x, b, h, w, cin, kside, &Pool::serial());
+            let mut got = vec![0.0f32; k * cout];
+            packed_at_gemm_f32(&xh, &dy, cout, &mut got, &Pool::serial());
+            subtract_pad_dw_contrib(&mut got, &dy, b, h, w, cin, cout, kside);
+            for i in 0..want.len() {
+                assert!(
+                    (got[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
+                    "b{b} {h}x{w}x{cin} k{kside} @ {i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "odd kernel side")]
+    fn even_kside_rejected_by_packed_im2col() {
+        let x = vec![0.0f32; 4 * 4 * 2];
+        im2col_packed(&x, 1, 4, 4, 2, 2, &Pool::serial());
     }
 }

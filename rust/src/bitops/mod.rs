@@ -25,6 +25,13 @@
 //! [`im2col_packed`] signs and packs conv patches straight into row
 //! panels so the binary conv path never materializes an f32 im2col
 //! buffer.
+//!
+//! The conv **backward** is fused the same way: [`conv_dx_streaming`]
+//! computes `col2im(∂Y·Ŵᵀ)` tap-by-tap (one rows×cin panel, never the
+//! rows×k²·Cin `dcols` buffer) and [`packed_at_gemm_f32`] contracts
+//! `X̂ᵀ·∂Y` straight from the packed activation panel (no f32 unpack,
+//! no transpose), with [`subtract_pad_dw_contrib`] restoring zero-pad
+//! dW semantics for the standard engine.
 
 pub mod backend;
 pub mod cache;
@@ -35,8 +42,14 @@ pub mod simd;
 
 pub use backend::Backend;
 pub use cache::PackedWeightCache;
-pub use gemm::{xnor_gemm, xnor_gemm_naive, xnor_gemm_parallel, xnor_gemm_tiled};
-pub use im2col::{im2col_packed, subtract_pad_contrib};
+pub use gemm::{
+    gemm_f32_at, packed_at_gemm_f32, xnor_gemm, xnor_gemm_naive, xnor_gemm_parallel,
+    xnor_gemm_tiled,
+};
+pub use im2col::{
+    col2im_tap_scatter, conv_dx_streaming, im2col_packed, subtract_pad_contrib,
+    subtract_pad_dw_contrib,
+};
 pub use pool::Pool;
 
 /// A bit-packed ±1 matrix, row-major, rows padded to whole u64 words.

@@ -135,6 +135,79 @@ pub fn xor_popcount_1x4_scalar(
     [c0, c1, c2, c3]
 }
 
+// ------------------------------------------------------- f32 row ops
+//
+// The packed conv *backward* streams f32 rows: the streaming-col2im
+// scatter adds tap panels into the dX map, and the packed-A dW GEMM
+// adds/subtracts ∂Y rows into weight-gradient rows selected by X̂
+// bits.  These elementwise kernels are the whole inner loop there.
+// Every level is bit-exact (elementwise add/sub/mul never
+// reassociates, and axpy is mul-then-add — no FMA — so vector and
+// scalar round identically).
+
+/// dst[i] += src[i] — dispatched.
+#[inline]
+pub fn add_assign_f32(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { x86::add_assign_avx2(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::add_assign_neon(dst, src) },
+        _ => add_assign_f32_scalar(dst, src),
+    }
+}
+
+/// dst[i] -= src[i] — dispatched.
+#[inline]
+pub fn sub_assign_f32(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { x86::sub_assign_avx2(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::sub_assign_neon(dst, src) },
+        _ => sub_assign_f32_scalar(dst, src),
+    }
+}
+
+/// dst[i] += a * src[i] — dispatched (mul-then-add, never fused).
+#[inline]
+pub fn axpy_f32(dst: &mut [f32], a: f32, src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { x86::axpy_avx2(dst, a, src) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::axpy_neon(dst, a, src) },
+        _ => axpy_f32_scalar(dst, a, src),
+    }
+}
+
+/// Scalar reference (also the fallback tier).
+#[inline]
+pub fn add_assign_f32_scalar(dst: &mut [f32], src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// Scalar reference (also the fallback tier).
+#[inline]
+pub fn sub_assign_f32_scalar(dst: &mut [f32], src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d -= s;
+    }
+}
+
+/// Scalar reference (also the fallback tier).
+#[inline]
+pub fn axpy_f32_scalar(dst: &mut [f32], a: f32, src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += a * s;
+    }
+}
+
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     use std::arch::x86_64::*;
@@ -243,6 +316,69 @@ mod x86 {
             out
         }
     }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (see [`super::level`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign_avx2(dst: &mut [f32], src: &[f32]) {
+        unsafe {
+            let n8 = dst.len() & !7;
+            let mut i = 0;
+            while i < n8 {
+                let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+                let s = _mm256_loadu_ps(src.as_ptr().add(i));
+                _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(d, s));
+                i += 8;
+            }
+            while i < dst.len() {
+                dst[i] += src[i];
+                i += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (see [`super::level`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sub_assign_avx2(dst: &mut [f32], src: &[f32]) {
+        unsafe {
+            let n8 = dst.len() & !7;
+            let mut i = 0;
+            while i < n8 {
+                let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+                let s = _mm256_loadu_ps(src.as_ptr().add(i));
+                _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_sub_ps(d, s));
+                i += 8;
+            }
+            while i < dst.len() {
+                dst[i] -= src[i];
+                i += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (see [`super::level`]).
+    /// Mul-then-add (no FMA) so rounding matches the scalar path.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_avx2(dst: &mut [f32], a: f32, src: &[f32]) {
+        unsafe {
+            let va = _mm256_set1_ps(a);
+            let n8 = dst.len() & !7;
+            let mut i = 0;
+            while i < n8 {
+                let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+                let s = _mm256_loadu_ps(src.as_ptr().add(i));
+                let p = _mm256_mul_ps(va, s);
+                _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(d, p));
+                i += 8;
+            }
+            while i < dst.len() {
+                dst[i] += a * src[i];
+                i += 1;
+            }
+        }
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -312,6 +448,68 @@ mod neon {
             out
         }
     }
+
+    /// # Safety
+    /// NEON is baseline on aarch64; caller dispatches via [`super::level`].
+    #[target_feature(enable = "neon")]
+    pub unsafe fn add_assign_neon(dst: &mut [f32], src: &[f32]) {
+        unsafe {
+            let n4 = dst.len() & !3;
+            let mut i = 0;
+            while i < n4 {
+                let d = vld1q_f32(dst.as_ptr().add(i));
+                let s = vld1q_f32(src.as_ptr().add(i));
+                vst1q_f32(dst.as_mut_ptr().add(i), vaddq_f32(d, s));
+                i += 4;
+            }
+            while i < dst.len() {
+                dst[i] += src[i];
+                i += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64; caller dispatches via [`super::level`].
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sub_assign_neon(dst: &mut [f32], src: &[f32]) {
+        unsafe {
+            let n4 = dst.len() & !3;
+            let mut i = 0;
+            while i < n4 {
+                let d = vld1q_f32(dst.as_ptr().add(i));
+                let s = vld1q_f32(src.as_ptr().add(i));
+                vst1q_f32(dst.as_mut_ptr().add(i), vsubq_f32(d, s));
+                i += 4;
+            }
+            while i < dst.len() {
+                dst[i] -= src[i];
+                i += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64; caller dispatches via [`super::level`].
+    /// vmulq + vaddq (not vfmaq) so rounding matches the scalar path.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_neon(dst: &mut [f32], a: f32, src: &[f32]) {
+        unsafe {
+            let va = vdupq_n_f32(a);
+            let n4 = dst.len() & !3;
+            let mut i = 0;
+            while i < n4 {
+                let d = vld1q_f32(dst.as_ptr().add(i));
+                let s = vld1q_f32(src.as_ptr().add(i));
+                vst1q_f32(dst.as_mut_ptr().add(i), vaddq_f32(d, vmulq_f32(va, s)));
+                i += 4;
+            }
+            while i < dst.len() {
+                dst[i] += a * src[i];
+                i += 1;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -374,5 +572,47 @@ mod tests {
         assert_eq!(xor_popcount(&a, &z), 320);
         assert_eq!(xor_popcount(&a, &a), 0);
         assert_eq!(xor_popcount_1x4(&a, &z, &a, &z, &a), [320, 0, 320, 0]);
+    }
+
+    #[test]
+    fn f32_row_ops_match_scalar_all_lengths() {
+        // bit-exact across SIMD levels: elementwise add/sub and
+        // mul-then-add axpy round identically in vector and scalar
+        // form — lengths cross AVX2's 8-lane and NEON's 4-lane strides
+        let mut g = Pcg32::new(33);
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 33, 128, 257] {
+            let src = g.normal_vec(len);
+            let base = g.normal_vec(len);
+            let a = g.normal();
+
+            let mut want = base.clone();
+            add_assign_f32_scalar(&mut want, &src);
+            let mut got = base.clone();
+            add_assign_f32(&mut got, &src);
+            assert_eq!(got, want, "add len {len}");
+
+            let mut want = base.clone();
+            sub_assign_f32_scalar(&mut want, &src);
+            let mut got = base.clone();
+            sub_assign_f32(&mut got, &src);
+            assert_eq!(got, want, "sub len {len}");
+
+            let mut want = base.clone();
+            axpy_f32_scalar(&mut want, a, &src);
+            let mut got = base.clone();
+            axpy_f32(&mut got, a, &src);
+            assert_eq!(got, want, "axpy len {len}");
+        }
+    }
+
+    #[test]
+    fn f32_row_ops_basics() {
+        let mut d = vec![1.0f32, 2.0, 3.0];
+        add_assign_f32(&mut d, &[10.0, 20.0, 30.0]);
+        assert_eq!(d, vec![11.0, 22.0, 33.0]);
+        sub_assign_f32(&mut d, &[1.0, 2.0, 3.0]);
+        assert_eq!(d, vec![10.0, 20.0, 30.0]);
+        axpy_f32(&mut d, -0.5, &[2.0, 2.0, 2.0]);
+        assert_eq!(d, vec![9.0, 19.0, 29.0]);
     }
 }

@@ -39,9 +39,10 @@ mod standard;
 pub use plan::{LayerPlan, Plan};
 pub use proposed::ProposedTrainer;
 pub use standard::StandardTrainer;
-// the f32 im2col reference, public for the conv perf bench and the
-// memtrack/property tests that diff the fused bit-im2col against it
-pub use standard::im2col;
+// the f32 im2col/col2im/transpose references, public for the conv
+// perf bench and the memtrack/property tests that diff the fused
+// bit-im2col and the streaming conv backward against them
+pub use standard::{col2im, im2col, transpose};
 
 use anyhow::Result;
 

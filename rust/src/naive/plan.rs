@@ -118,6 +118,18 @@ impl Plan {
                         bail!("conv geometry mismatch in '{}'", graph.name);
                     }
                     let kside = isqrt(k / cin)?;
+                    // pad = (kside-1)/2 is only a symmetric SAME
+                    // padding for odd kernels — an even kside would
+                    // silently under-pad the right/bottom edge and
+                    // produce wrong geometry in every im2col/col2im
+                    if kside == 0 || kside % 2 == 0 {
+                        bail!(
+                            "conv kernel side {kside} in '{}' unsupported: SAME \
+                             geometry requires an odd kernel (pad = (kside-1)/2 \
+                             would be asymmetric)",
+                            graph.name
+                        );
+                    }
                     layers.push(LayerPlan::Conv { h, w, cin, cout, kside, first: node.first });
                 }
                 LayerKind::MaxPool => {
@@ -197,6 +209,41 @@ mod tests {
     fn residuals_rejected() {
         let g = lower(&get("resnete_mini").unwrap()).unwrap();
         assert!(Plan::from_graph(&g).is_err());
+    }
+
+    #[test]
+    fn even_kside_rejected_at_plan_build() {
+        // pad = (kside-1)/2 would silently produce asymmetric SAME
+        // geometry for even kernels — plan building must refuse
+        use crate::models::{LayerSpec, ModelSpec};
+        for kernel in [2usize, 4] {
+            let spec = ModelSpec {
+                name: format!("even_k{kernel}"),
+                input_shape: vec![8, 8, 3],
+                classes: 10,
+                layers: vec![
+                    LayerSpec::conv(4, kernel).as_first(),
+                    LayerSpec::flatten(),
+                    LayerSpec::dense(10),
+                ],
+            };
+            let g = lower(&spec).unwrap();
+            let err = Plan::from_graph(&g).unwrap_err().to_string();
+            assert!(err.contains("odd kernel"), "k={kernel}: {err}");
+        }
+        // odd kernels still build
+        let spec = ModelSpec {
+            name: "odd_k5".into(),
+            input_shape: vec![8, 8, 3],
+            classes: 10,
+            layers: vec![
+                LayerSpec::conv(4, 5).as_first(),
+                LayerSpec::flatten(),
+                LayerSpec::dense(10),
+            ],
+        };
+        let g = lower(&spec).unwrap();
+        assert!(Plan::from_graph(&g).is_ok());
     }
 
     #[test]

@@ -22,7 +22,7 @@ use super::standard::{
     col2im, conv_direct, im2col, maxpool_forward, sign_vec, transpose,
 };
 use super::{glorot_init, softmax_xent_grad, Accel, StepEngine};
-use crate::bitops::{im2col_packed, BitMask, BitMatrix, PackedWeightCache};
+use crate::bitops::{conv_dx_streaming, im2col_packed, BitMask, BitMatrix, PackedWeightCache};
 use crate::models::Graph;
 use crate::optim::{OptState, Store};
 use crate::util::f16::F16Vec;
@@ -197,17 +197,20 @@ impl ProposedTrainer {
         let mut dw_bits = BitMatrix::zeros(k, n);
         match self.accel {
             Accel::Blocked | Accel::Tiled(_) => {
-                // transient f32 dW, then pack (memory-for-speed)
+                // k×n f32 dW accumulator, then pack.  The contraction
+                // runs straight off the *retained packed* X̂ — the
+                // (rows×k) f32 unpack and (k×rows) transpose of the
+                // pre-fusion path (the backward's rows×k transients)
+                // never exist.  Bit-identical to that path: per-cell
+                // accumulation order is unchanged.
                 let backend = self.accel.backend();
                 let mut dw = vec![0.0f32; k * n];
                 match xhat {
-                    Some(xh) => {
-                        let xt = transpose(&xh.unpack(), rows, k);
-                        backend.gemm_f32(k, rows, n, &xt, dy, &mut dw);
-                    }
+                    Some(xh) => backend.packed_at_gemm_f32(xh, dy, n, &mut dw),
                     None => {
-                        let xt = transpose(x_first.unwrap(), rows, k);
-                        backend.gemm_f32(k, rows, n, &xt, dy, &mut dw);
+                        // real-input first layer: f32 input, but the
+                        // transpose copy is gone (AᵀB GEMM)
+                        backend.gemm_f32_at(rows, k, n, x_first.unwrap(), dy, &mut dw);
                     }
                 }
                 dw_bits = BitMatrix::pack(k, n, &dw);
@@ -523,9 +526,9 @@ impl ProposedTrainer {
         let out = if first {
             F16Vec::zeros(0)
         } else {
-            let mut dcols = self.real_bin_matmul_t(&dy, wi, rows, k, n);
             let dx = match conv {
                 None => {
+                    let mut dcols = self.real_bin_matmul_t(&dy, wi, rows, k, n);
                     // STE mask applies directly
                     let ste = self.res[wi].ste.as_ref().unwrap();
                     for (i, v) in dcols.iter_mut().enumerate() {
@@ -536,8 +539,24 @@ impl ProposedTrainer {
                     dcols
                 }
                 Some((h, w, cin, kside)) => {
-                    let mut dx = col2im(&dcols, self.batch, h, w, cin, kside);
-                    drop(dcols);
+                    let mut dx = match self.accel {
+                        Accel::Naive => {
+                            // reference: full rows×k patch gradients,
+                            // then the scatter-add col2im
+                            let dcols = self.real_bin_matmul_t(&dy, wi, rows, k, n);
+                            col2im(&dcols, self.batch, h, w, cin, kside)
+                        }
+                        _ => {
+                            // streaming col2im straight off the cached
+                            // *packed* Ŵᵀ: per-tap rows×cin panels —
+                            // neither the rows×k dcols nor the full
+                            // f32 Ŵᵀ unpack ever exists
+                            let backend = self.accel.backend();
+                            let batch = self.batch;
+                            let wt = self.packed_wt(wi, k, n);
+                            conv_dx_streaming(&dy, wt, batch, h, w, cin, kside, backend)
+                        }
+                    };
                     let ste = self.res[wi].ste.as_ref().unwrap();
                     for (i, v) in dx.iter_mut().enumerate() {
                         if !ste.get(i) {
@@ -574,6 +593,14 @@ impl StepEngine for ProposedTrainer {
 
     fn eval(&mut self, x: &[f32], labels: &[usize]) -> Result<(f32, f32)> {
         let logits = self.forward(x, false)?;
+        // forward(retain = false) pushes nothing, and it clears any
+        // leftovers from an aborted step on entry — but the invariant
+        // the backward relies on (res[wi] belongs to *this* step's
+        // forward) deserves to be explicit: eval must never leave
+        // residuals a later backward could misread.  Regression-pinned
+        // in `eval_between_steps_is_invisible_to_training`.
+        self.res.clear();
+        self.pool_masks.clear();
         let classes = self.plan.classes;
         let mut d = vec![0.0f32; self.batch * classes];
         Ok(softmax_xent_grad(&logits, labels, classes, &mut d))
@@ -904,5 +931,28 @@ mod tests {
         let before = t.weights_snapshot();
         t.eval(&x, &y).unwrap();
         assert_eq!(before, t.weights_snapshot());
+    }
+
+    #[test]
+    fn eval_between_steps_is_invisible_to_training() {
+        // an eval interleaved between train steps must leave no stale
+        // residuals/pool masks behind (the backward indexes res[wi]
+        // positionally — a leak would be misread as this step's X̂) and
+        // must not perturb the training trajectory at all
+        let (x, y) = toy_batch(8, 16 * 16 * 3, 10, 11);
+        let (xe, ye) = toy_batch(8, 16 * 16 * 3, 10, 12);
+        let mut a = make("cnv_mini", 8, Accel::Blocked, "adam");
+        let mut b = make("cnv_mini", 8, Accel::Blocked, "adam");
+        a.train_step(&x, &y, 0.01).unwrap();
+        b.train_step(&x, &y, 0.01).unwrap();
+        b.eval(&xe, &ye).unwrap();
+        assert!(b.res.is_empty(), "eval left residuals behind");
+        assert!(b.pool_masks.is_empty(), "eval left pool masks behind");
+        let (la, _) = a.train_step(&x, &y, 0.01).unwrap();
+        let (lb, _) = b.train_step(&x, &y, 0.01).unwrap();
+        assert_eq!(la, lb, "eval perturbed the training trajectory");
+        for (wa, wb) in a.weights_snapshot().iter().zip(b.weights_snapshot().iter()) {
+            assert_eq!(wa, wb);
+        }
     }
 }

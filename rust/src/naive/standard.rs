@@ -11,7 +11,10 @@ use anyhow::{bail, Result};
 
 use super::plan::{LayerPlan, Plan};
 use super::{glorot_init, softmax_xent_grad, Accel, StepEngine};
-use crate::bitops::{im2col_packed, subtract_pad_contrib, BitMatrix, PackedWeightCache};
+use crate::bitops::{
+    conv_dx_streaming, im2col_packed, subtract_pad_contrib, subtract_pad_dw_contrib, BitMatrix,
+    PackedWeightCache,
+};
 use crate::models::Graph;
 use crate::optim::{OptState, Store};
 use crate::util::rng::Pcg32;
@@ -240,22 +243,27 @@ impl StandardTrainer {
                         rows,
                         n,
                     );
-                    let xhat = {
-                        let xin = &self.acts[act_i];
-                        if first { xin.clone() } else { sign_vec(xin) }
-                    };
                     // dX = dY @ W^T  (Ŵᵀ from the per-step cache via
                     // the word-level block transpose)
-                    let wt = self.signed_wt(wi, k, n);
-                    let mut dx = vec![0.0f32; rows * k];
-                    self.gemm(rows, n, k, &dy, &wt, &mut dx);
+                    let mut dx = {
+                        let wt = self.signed_wt(wi, k, n);
+                        let mut dx = vec![0.0f32; rows * k];
+                        self.gemm(rows, n, k, &dy, &wt, &mut dx);
+                        dx
+                    };
                     if !first {
                         ste_mask_apply(&mut dx, &self.acts[act_i]);
                     }
-                    // dW = X̂^T dY
-                    let xt = transpose(&xhat, rows, k);
+                    // dW = X̂ᵀ·dY — transpose-free: the rows×k X̂ᵀ copy
+                    // of the pre-fusion path never exists
+                    let backend = self.accel.backend();
                     let mut dw = vec![0.0f32; k * n];
-                    self.gemm(k, rows, n, &xt, &dy, &mut dw);
+                    if first {
+                        backend.gemm_f32_at(rows, k, n, &self.acts[act_i], &dy, &mut dw);
+                    } else {
+                        let xhat = sign_vec(&self.acts[act_i]);
+                        backend.gemm_f32_at(rows, k, n, &xhat, &dy, &mut dw);
+                    }
                     cancel_wgrad(&mut dw, &self.weights[wi]);
                     self.opt_w[wi].update(&mut self.weights[wi], &dw, lr, true);
                     self.opt_b[wi].update(&mut self.betas[wi], &dbeta, lr, false);
@@ -274,23 +282,64 @@ impl StandardTrainer {
                         rows,
                         cout,
                     );
-                    let xhat = {
-                        let xin = &self.acts[act_i];
-                        if first { xin.clone() } else { sign_vec(xin) }
-                    };
                     let k = kside * kside * cin;
-                    // dX via col2im(dY @ W^T); dW via cols^T dY
-                    let wt = self.signed_wt(wi, k, cout);
-                    let mut dcols = vec![0.0f32; rows * k];
-                    self.gemm(rows, cout, k, &dy, &wt, &mut dcols);
-                    let mut dx = col2im(&dcols, b, h, w, cin, kside);
+                    let mut dw = vec![0.0f32; k * cout];
+                    let mut dx;
+                    if !first && self.accel != Accel::Naive {
+                        // fused backward: no rows×k f32 transient.
+                        // dX streams per-tap panels of dY·Ŵᵀ straight
+                        // into the map (never the full dcols); dW
+                        // contracts a re-packed bit-im2col panel (the
+                        // forward's fused im2col, +1 pads) against dY,
+                        // then subtracts the border dY sums to restore
+                        // zero-pad semantics.
+                        let backend = self.accel.backend();
+                        {
+                            let weights = &self.weights;
+                            let pack = || BitMatrix::pack(k, cout, &weights[wi].to_f32());
+                            let wt = self.wcache.wt_via_transpose(wi, pack);
+                            dx = conv_dx_streaming(&dy, wt, b, h, w, cin, kside, backend);
+                        }
+                        let xh = im2col_packed(
+                            &self.acts[act_i],
+                            b,
+                            h,
+                            w,
+                            cin,
+                            kside,
+                            &backend.pool(),
+                        );
+                        backend.packed_at_gemm_f32(&xh, &dy, cout, &mut dw);
+                        drop(xh);
+                        subtract_pad_dw_contrib(&mut dw, &dy, b, h, w, cin, cout, kside);
+                    } else {
+                        // reference path (real-input first layer /
+                        // naive accel): f32 im2col math, each rows×k
+                        // buffer scoped to die as soon as it is
+                        // consumed — peak one such buffer, not three
+                        dx = {
+                            let wt = self.signed_wt(wi, k, cout);
+                            let mut dcols = vec![0.0f32; rows * k];
+                            self.gemm(rows, cout, k, &dy, &wt, &mut dcols);
+                            col2im(&dcols, b, h, w, cin, kside)
+                        };
+                        let backend = self.accel.backend();
+                        let cols = {
+                            let xin = &self.acts[act_i];
+                            if first {
+                                // real-input layer: im2col the retained
+                                // activation in place, no copy
+                                im2col(xin, b, h, w, cin, kside)
+                            } else {
+                                let xhat = sign_vec(xin);
+                                im2col(&xhat, b, h, w, cin, kside)
+                            }
+                        };
+                        backend.gemm_f32_at(rows, k, cout, &cols, &dy, &mut dw);
+                    }
                     if !first {
                         ste_mask_apply(&mut dx, &self.acts[act_i]);
                     }
-                    let cols = im2col(&xhat, b, h, w, cin, kside);
-                    let colst = transpose(&cols, rows, k);
-                    let mut dw = vec![0.0f32; k * cout];
-                    self.gemm(k, rows, cout, &colst, &dy, &mut dw);
                     cancel_wgrad(&mut dw, &self.weights[wi]);
                     self.opt_w[wi].update(&mut self.weights[wi], &dw, lr, true);
                     self.opt_b[wi].update(&mut self.betas[wi], &dbeta, lr, false);
@@ -380,7 +429,7 @@ pub(crate) fn sign_vec(x: &[f32]) -> Vec<f32> {
     x.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect()
 }
 
-pub(crate) fn transpose(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+pub fn transpose(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
     let mut t = vec![0.0f32; rows * cols];
     for r in 0..rows {
         for c in 0..cols {
@@ -551,6 +600,7 @@ pub fn im2col(
     cin: usize,
     kside: usize,
 ) -> Vec<f32> {
+    assert!(kside % 2 == 1, "SAME conv requires an odd kernel side, got {kside}");
     let k = kside * kside * cin;
     let pad = (kside - 1) / 2;
     let mut cols = vec![0.0f32; b * h * w * k];
@@ -577,7 +627,9 @@ pub fn im2col(
 }
 
 /// col2im: scatter-add patch grads back to the input grad (SAME, s=1).
-pub(crate) fn col2im(
+/// The f32 reference the streaming `bitops::conv_dx_streaming` path is
+/// equivalent to (and the pre-fusion baseline the backward bench runs).
+pub fn col2im(
     dcols: &[f32],
     b: usize,
     h: usize,
@@ -585,6 +637,7 @@ pub(crate) fn col2im(
     cin: usize,
     kside: usize,
 ) -> Vec<f32> {
+    assert!(kside % 2 == 1, "SAME conv requires an odd kernel side, got {kside}");
     let k = kside * kside * cin;
     let pad = (kside - 1) / 2;
     let mut dx = vec![0.0f32; b * h * w * cin];

@@ -1,26 +1,35 @@
 //! Measured transient conv memory: the fused bit-im2col really
-//! eliminates the f32 cols buffer (the `memtrack` counterpart of
-//! `memmodel::conv_cols_transient`).
+//! eliminates the f32 cols buffer, and the fused conv *backward*
+//! really eliminates the rows×k patch-gradient buffers (the
+//! `memtrack` counterparts of `memmodel::conv_cols_transient` and
+//! `memmodel::conv_backward_transient`).
 //!
 //! This integration binary installs the tracking allocator (the lib
-//! test harness cannot), measures the pre-fusion path — f32 `im2col`
-//! then `BitMatrix::pack`, exactly what the engines ran before this
-//! PR — against `bitops::im2col_packed`, and asserts the drop against
-//! the modeled figures.
+//! test harness cannot), measures the pre-fusion paths — exactly what
+//! the engines ran before fusion — against the fused kernels, and
+//! asserts the drops against the modeled figures.
 //!
 //! Single `#[test]`: peak tracking is process-global, so keeping one
 //! test in this binary avoids cross-test allocation noise.
 
-use bnn_edge::bitops::{im2col_packed, BitMatrix, Pool};
+use bnn_edge::bitops::{
+    conv_dx_streaming, im2col_packed, packed_at_gemm_f32, subtract_pad_dw_contrib, Backend,
+    BitMatrix, Pool,
+};
 use bnn_edge::memtrack::{measure, TrackingAlloc};
-use bnn_edge::naive::im2col;
+use bnn_edge::models::{get, lower};
+use bnn_edge::naive::{col2im, im2col, transpose};
 use bnn_edge::util::rng::Pcg32;
 
 #[global_allocator]
 static ALLOC: TrackingAlloc = TrackingAlloc;
 
+fn gemm_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    Backend::Blocked.gemm_f32(m, k, n, a, b, out)
+}
+
 #[test]
-fn fused_bit_im2col_eliminates_f32_cols_buffer() {
+fn fused_conv_pipeline_eliminates_rows_x_k_f32_buffers() {
     assert!(bnn_edge::memtrack::is_active(), "tracking allocator not installed");
 
     // a binary conv shape off the word grid: K = 297 bits
@@ -71,4 +80,79 @@ fn fused_bit_im2col_eliminates_f32_cols_buffer() {
         measured_ratio > modeled_ratio * 0.5,
         "measured {measured_ratio:.1}x vs modeled {modeled_ratio:.1}x"
     );
+
+    // ---- conv backward: the step-peak holder after the forward fused.
+    // Pre-fusion (the PR-2 baseline) the layer arm held THREE rows×k
+    // f32 buffers live at peak — dX patch grads `dcols`, the dW im2col
+    // `cols` and its transpose — plus the unpacked Ŵᵀ.  The fused
+    // backward streams dX tap-by-tap (one rows×cin panel) and
+    // contracts dW from a re-packed 1-bit panel.
+    let cout = 32usize;
+    let dy = g.normal_vec(rows * cout);
+    let wt = BitMatrix::pack(cout, k, &g.normal_vec(cout * k));
+
+    let ((dx1, dw1), pre_b) = measure(|| {
+        let wt_f = wt.unpack(); // the signed_wt the engines consumed
+        let mut dcols = vec![0.0f32; rows * k];
+        gemm_f32(rows, cout, k, &dy, &wt_f, &mut dcols);
+        let dx = col2im(&dcols, b, h, w, cin, kside);
+        let xhat: Vec<f32> =
+            x.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+        let cols = im2col(&xhat, b, h, w, cin, kside);
+        let colst = transpose(&cols, rows, k);
+        let mut dw = vec![0.0f32; k * cout];
+        gemm_f32(k, rows, cout, &colst, &dy, &mut dw);
+        (dx, dw) // dcols/cols/colst all live to here, as in the engines
+    });
+    let ((dx2, dw2), post_b) = measure(|| {
+        let dx = conv_dx_streaming(&dy, &wt, b, h, w, cin, kside, Backend::Blocked);
+        let xh = im2col_packed(&x, b, h, w, cin, kside, &Pool::serial());
+        let mut dw = vec![0.0f32; k * cout];
+        packed_at_gemm_f32(&xh, &dy, cout, &mut dw, &Pool::serial());
+        subtract_pad_dw_contrib(&mut dw, &dy, b, h, w, cin, cout, kside);
+        (dx, dw)
+    });
+
+    // fused-backward gradients match the pre-fusion reference
+    for (i, (a, bb)) in dx1.iter().zip(&dx2).enumerate() {
+        assert!((a - bb).abs() <= 1e-4 * (1.0 + a.abs()), "dx @ {i}: {a} vs {bb}");
+    }
+    for (i, (a, bb)) in dw1.iter().zip(&dw2).enumerate() {
+        assert!((a - bb).abs() <= 1e-4 * (1.0 + a.abs()), "dw @ {i}: {a} vs {bb}");
+    }
+
+    // both measurements necessarily retain the outputs (dx, dw);
+    // everything else is the transient under test
+    let out_bytes = dx1.len() * 4 + dw1.len() * 4;
+    let pre_transient = pre_b.growth().saturating_sub(out_bytes);
+    let post_transient = post_b.growth().saturating_sub(out_bytes);
+    // pre-fusion peak really held ~3 rows×k f32 buffers at once
+    assert!(
+        pre_transient >= 3 * cols_bytes,
+        "pre-fusion backward peak {pre_transient} < 3 x rows*k buffer {cols_bytes}"
+    );
+    // fused path allocates NO rows×k f32 buffer anywhere
+    assert!(
+        post_transient < cols_bytes,
+        "fused backward transient {post_transient} should be below one rows*k f32 \
+         buffer {cols_bytes}"
+    );
+    // the acceptance bar: step-peak transient drops >= 3x measured...
+    let measured_b = pre_transient as f64 / post_transient as f64;
+    assert!(measured_b >= 3.0, "measured backward drop only {measured_b:.1}x");
+    // ...and tracks the modeled drop (memmodel::conv_backward_transient
+    // formulae instantiated on this geometry)
+    let modeled_pre = 3.0 * (rows * k * 4) as f64;
+    let modeled_post = (rows * cin * 4) as f64 + (rows * k.div_ceil(64) * 8) as f64;
+    let modeled_b = modeled_pre / modeled_post;
+    assert!(
+        measured_b > modeled_b * 0.5,
+        "measured {measured_b:.1}x vs modeled {modeled_b:.1}x"
+    );
+
+    // the lib-side model agrees at BinaryNet scale (acceptance: >= 3x)
+    let graph = lower(&get("binarynet").unwrap()).unwrap();
+    let m_pre = bnn_edge::memmodel::conv_backward_transient(&graph, 100, false);
+    let m_post = bnn_edge::memmodel::conv_backward_transient(&graph, 100, true);
+    assert!(m_pre.total() / m_post.total() >= 3.0);
 }

@@ -2,12 +2,16 @@
 //! failure-case printing) over the substrates' invariants —
 //! DESIGN.md §Key-invariants.
 
-use bnn_edge::bitops::{gemm, im2col_packed, simd, BitMatrix, Pool};
+use bnn_edge::bitops::{
+    col2im_tap_scatter, conv_dx_streaming, gemm, im2col_packed, simd, Backend, BitMatrix, Pool,
+};
 use bnn_edge::data;
 use bnn_edge::federated::sign_vote;
 use bnn_edge::memmodel::{breakdown, DtypeConfig, Optimizer};
-use bnn_edge::models::{get, lower, names};
-use bnn_edge::naive::im2col;
+use bnn_edge::models::{get, lower, names, LayerSpec, ModelSpec};
+use bnn_edge::naive::{
+    col2im, im2col, transpose, Accel, ProposedTrainer, StandardTrainer, StepEngine,
+};
 use bnn_edge::util::f16::{f16_bits_to_f32, f32_to_f16_bits, q16};
 use bnn_edge::util::json::Json;
 use bnn_edge::util::rng::Pcg32;
@@ -261,7 +265,6 @@ fn prop_block_transpose_matches_scalar() {
 
 #[test]
 fn prop_backend_dispatch_agrees_everywhere() {
-    use bnn_edge::bitops::Backend;
     let mut g = Pcg32::new(23);
     for case in 0..30 {
         let m = 1 + g.below(10);
@@ -353,6 +356,213 @@ fn prop_simd_gemm_bit_exact_vs_scalar_kernels() {
             gemm::xnor_gemm_parallel(&ap, &btp, &mut par, &Pool::new(threads));
             assert_eq!(par, scalar, "case {case} t={threads} ({m},{k},{n})");
         }
+    }
+}
+
+/// Random stride-1 SAME conv geometry: (b, h, w, cin, kside 1/3/5).
+fn conv_geometry(g: &mut Pcg32) -> (usize, usize, usize, usize, usize) {
+    let kside = [1usize, 3, 5][g.below(3)];
+    let b = 1 + g.below(2);
+    let h = kside.max(2) + g.below(4);
+    let w = kside.max(2) + g.below(4);
+    let cin = 1 + g.below(9);
+    (b, h, w, cin, kside)
+}
+
+/// Apply the streaming col2im operator to a full (rows × k) patch
+/// matrix: per-tap panels scattered via `col2im_tap_scatter` — the
+/// operator form of the fused dX path.
+fn streaming_col2im(c: &[f32], b: usize, h: usize, w: usize, cin: usize, kside: usize) -> Vec<f32> {
+    let k = kside * kside * cin;
+    let rows = b * h * w;
+    let mut dx = vec![0.0f32; b * h * w * cin];
+    let mut panel = vec![0.0f32; rows * cin];
+    for ky in 0..kside {
+        for kx in 0..kside {
+            let tap = ky * kside + kx;
+            for r in 0..rows {
+                panel[r * cin..(r + 1) * cin]
+                    .copy_from_slice(&c[r * k + tap * cin..r * k + (tap + 1) * cin]);
+            }
+            col2im_tap_scatter(&mut dx, &panel, b, h, w, cin, kside, ky, kx);
+        }
+    }
+    dx
+}
+
+#[test]
+fn prop_streaming_col2im_adjoint_of_im2col() {
+    // <im2col(x), c> == <x, streaming_col2im(c)> — the adjointness
+    // that makes the tap-streamed dX a correct conv backward, across
+    // kside 1/3/5 and random geometry (dots accumulated in f64)
+    let mut g = Pcg32::new(27);
+    for case in 0..CASES {
+        let (b, h, w, cin, kside) = conv_geometry(&mut g);
+        let k = kside * kside * cin;
+        let rows = b * h * w;
+        let x = g.normal_vec(b * h * w * cin);
+        let c = g.normal_vec(rows * k);
+        let cols = im2col(&x, b, h, w, cin, kside);
+        let lhs: f64 = cols.iter().zip(&c).map(|(a, v)| *a as f64 * *v as f64).sum();
+        let dx = streaming_col2im(&c, b, h, w, cin, kside);
+        let rhs: f64 = x.iter().zip(&dx).map(|(a, v)| *a as f64 * *v as f64).sum();
+        assert!(
+            (lhs - rhs).abs() <= 1e-3 * (1.0 + lhs.abs()),
+            "case {case} b{b} {h}x{w}x{cin} k{kside}: {lhs} vs {rhs}"
+        );
+        // and the streaming operator equals the batch col2im
+        let want = col2im(&c, b, h, w, cin, kside);
+        for i in 0..want.len() {
+            assert!(
+                (dx[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
+                "case {case} @ {i}: {} vs {}",
+                dx[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_conv_dx_streaming_matches_prefusion_reference() {
+    // the fused dX — tap-streamed panels off the *packed* Ŵᵀ —
+    // against the pre-fusion dcols = ∂Y·Ŵᵀ + col2im pipeline, across
+    // backends and thread counts (and exact across fused tiers)
+    let mut g = Pcg32::new(28);
+    for case in 0..30 {
+        let (b, h, w, cin, kside) = conv_geometry(&mut g);
+        let k = kside * kside * cin;
+        let rows = b * h * w;
+        let cout = 1 + g.below(7);
+        let dy = g.normal_vec(rows * cout);
+        let wt = BitMatrix::pack(cout, k, &g.normal_vec(cout * k));
+        let wt_f = wt.unpack();
+        let mut dcols = vec![0.0f32; rows * k];
+        gemm::gemm_f32(rows, cout, k, &dy, &wt_f, &mut dcols);
+        let want = col2im(&dcols, b, h, w, cin, kside);
+        let first = conv_dx_streaming(&dy, &wt, b, h, w, cin, kside, Backend::Blocked);
+        for i in 0..want.len() {
+            assert!(
+                (first[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
+                "case {case} @ {i}: {} vs {}",
+                first[i],
+                want[i]
+            );
+        }
+        for threads in [1, 2, 4] {
+            let got =
+                conv_dx_streaming(&dy, &wt, b, h, w, cin, kside, Backend::Tiled { threads });
+            assert_eq!(got, first, "case {case} t{threads}");
+        }
+    }
+}
+
+#[test]
+fn prop_packed_at_gemm_bit_exact_vs_densified() {
+    // the fused dW contraction off the packed X̂ panel is bit-identical
+    // to unpacking, transposing and running the dense f32 GEMM — any
+    // shape, any thread count (bands split k, never the reduction)
+    let mut g = Pcg32::new(29);
+    for case in 0..CASES {
+        let rows = 1 + g.below(40);
+        let k = 1 + g.below(200);
+        let n = 1 + g.below(12);
+        let av = g.normal_vec(rows * k);
+        let b = g.normal_vec(rows * n);
+        let a = BitMatrix::pack(rows, k, &av);
+        let at = transpose(&a.unpack(), rows, k); // (k × rows) ±1
+        let mut want = vec![0.0f32; k * n];
+        gemm::gemm_f32(k, rows, n, &at, &b, &mut want);
+        for threads in [1, 2, 4] {
+            let mut got = vec![0.0f32; k * n];
+            gemm::packed_at_gemm_f32(&a, &b, n, &mut got, &Pool::new(threads));
+            assert_eq!(got, want, "case {case} t={threads} ({rows},{k},{n})");
+        }
+    }
+}
+
+/// Small conv net with a given (odd) kernel side for the train-step
+/// equivalence sweep.
+fn conv_spec(kside: usize) -> ModelSpec {
+    ModelSpec {
+        name: format!("prop_conv_k{kside}"),
+        input_shape: vec![8, 8, 3],
+        classes: 10,
+        layers: vec![
+            LayerSpec::conv(5, kside).as_first(),
+            LayerSpec::conv(6, kside),
+            LayerSpec::maxpool(),
+            LayerSpec::flatten(),
+            LayerSpec::dense(10),
+        ],
+    }
+}
+
+#[test]
+fn train_step_fused_backward_matches_prefusion_reference() {
+    // full train-step gradient equivalence: the fused conv backward
+    // (streaming dX + packed dW) against the pre-fusion reference
+    // path (kept under Accel::Naive), both engines, kside 1/3/5,
+    // threads 1/2/4.  SGD keeps the update linear in the gradient, so
+    // the layer-level 1e-4 gradient agreement carries to the weights.
+    let mut g = Pcg32::new(30);
+    for kside in [1usize, 3, 5] {
+        let graph = lower(&conv_spec(kside)).unwrap();
+        let batch = 4;
+        let x = g.normal_vec(batch * 8 * 8 * 3);
+        let y: Vec<usize> = (0..batch).map(|i| i % 10).collect();
+
+        // standard engine: reference vs every fused tier
+        let mut reference =
+            StandardTrainer::new(&graph, batch, "sgd", Accel::Naive, 7).unwrap();
+        let (rl, _) = reference.train_step(&x, &y, 0.01).unwrap();
+        let rw = reference.weights_snapshot();
+        for accel in [Accel::Blocked, Accel::Tiled(1), Accel::Tiled(2), Accel::Tiled(4)] {
+            let mut t = StandardTrainer::new(&graph, batch, "sgd", accel, 7).unwrap();
+            let (l, _) = t.train_step(&x, &y, 0.01).unwrap();
+            assert!(
+                (l - rl).abs() <= 1e-4 * (1.0 + rl.abs()),
+                "std k{kside} {accel:?}: {l} vs {rl}"
+            );
+            for (wa, wb) in rw.iter().zip(t.weights_snapshot().iter()) {
+                for (u, v) in wa.iter().zip(wb) {
+                    assert!((u - v).abs() <= 1e-4, "std k{kside} {accel:?}: {u} vs {v}");
+                }
+            }
+        }
+
+        // proposed engine: every fused tier is *identical* (same
+        // kernels; pool bands never split a reduction)...
+        let mut blocked =
+            ProposedTrainer::new(&graph, batch, "sgd", Accel::Blocked, 7).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..3 {
+            losses.push(blocked.train_step(&x, &y, 0.01).unwrap().0);
+        }
+        let bw = blocked.weights_snapshot();
+        for threads in [1usize, 2, 4] {
+            let mut t =
+                ProposedTrainer::new(&graph, batch, "sgd", Accel::Tiled(threads), 7).unwrap();
+            for (si, &want) in losses.iter().enumerate() {
+                let (l, _) = t.train_step(&x, &y, 0.01).unwrap();
+                assert_eq!(l, want, "prop k{kside} t{threads} step {si}");
+            }
+            assert_eq!(t.weights_snapshot(), bw, "prop k{kside} t{threads}");
+        }
+        // ...and the naive reference tracks the fused trajectory (the
+        // packed ∂Ŵ sign quantization can amplify a ~1e-6 dX
+        // summation-order difference on a near-zero accumulation, so
+        // the band is loose — a geometry bug would diverge by O(1))
+        let mut naive = ProposedTrainer::new(&graph, batch, "sgd", Accel::Naive, 7).unwrap();
+        let mut nl = 0.0;
+        for _ in 0..3 {
+            nl = naive.train_step(&x, &y, 0.01).unwrap().0;
+        }
+        let bl = *losses.last().unwrap();
+        assert!(
+            (nl - bl).abs() <= 2e-2 * (1.0 + bl.abs()),
+            "prop k{kside}: naive {nl} vs fused {bl}"
+        );
     }
 }
 
