@@ -1,5 +1,6 @@
 //! §Perf conv microbench — the end-to-end packed conv pipeline,
-//! swept across model-zoo conv shapes and every GEMM backend tier.
+//! swept across model-zoo conv shapes (now including the strided
+//! ResNet stem/stage geometries) and every GEMM backend tier.
 //!
 //! **Forward** (default): two pipelines per shape —
 //!
@@ -10,11 +11,12 @@
 //!   `BitMatrix::pack`, then the same tiled XNOR GEMM.
 //!
 //! Emits `BENCH_conv.json` (stable schema: `{backend, layer, h, w,
-//! cin, cout, kside, batch, giops, threads, im2col_f32_bytes}`) via
-//! `util::bench::write_json_rows`; `giops` counts the conv GEMM ops
-//! (2·B·H·W·k²·Cin·Cout) over the *whole* pipeline time, so im2col
-//! overheads depress it honestly.  `im2col_f32_bytes` records the
-//! transient f32 buffer each variant materializes (0 = fused).
+//! cin, cout, kside, stride, pad, batch, giops, threads,
+//! im2col_f32_bytes}`) via `util::bench::write_json_rows`; `giops`
+//! counts the conv GEMM ops (2·B·OH·OW·k²·Cin·Cout) over the *whole*
+//! pipeline time, so im2col overheads depress it honestly.
+//! `im2col_f32_bytes` records the transient f32 buffer each variant
+//! materializes (0 = fused).
 //!
 //! **Backward** (`--backward`): the conv backward pipelines —
 //!
@@ -25,10 +27,9 @@
 //!   dcols GEMM → col2im, then sign → f32 im2col → transpose → dW
 //!   GEMM.
 //!
-//! Emits `BENCH_conv_bwd.json` (`{backend, layer, h, w, cin, cout,
-//! kside, batch, giops, threads, dcols_f32_bytes}`); `giops` counts
-//! both backward GEMMs (4·B·H·W·k²·Cin·Cout) over the pipeline time,
-//! and fused rows carry `dcols_f32_bytes: 0`.
+//! Emits `BENCH_conv_bwd.json` (same key, with `dcols_f32_bytes`);
+//! `giops` counts both backward GEMMs (4·B·OH·OW·k²·Cin·Cout) over
+//! the pipeline time, and fused rows carry `dcols_f32_bytes: 0`.
 //!
 //! Flags: `--smoke` (quick sampling + trimmed sweep for CI; keeps the
 //! fused-vs-baseline pair the acceptance criterion needs),
@@ -37,7 +38,7 @@
 
 use bnn_edge::bitops::{
     conv_dx_streaming, im2col_packed, packed_at_gemm_f32, simd, subtract_pad_dw_contrib,
-    Backend, BitMatrix,
+    Backend, BitMatrix, ConvGeom,
 };
 use bnn_edge::models::{get, lower};
 use bnn_edge::naive::{col2im, im2col, transpose, LayerPlan, Plan};
@@ -49,11 +50,8 @@ use bnn_edge::util::rng::Pcg32;
 struct Shape {
     layer: String,
     batch: usize,
-    h: usize,
-    w: usize,
-    cin: usize,
+    g: ConvGeom,
     cout: usize,
-    kside: usize,
 }
 
 /// Non-first conv layers of the zoo models, deduped by geometry.
@@ -62,23 +60,51 @@ fn zoo_shapes(models: &[(&str, usize)]) -> Vec<Shape> {
     for &(model, batch) in models {
         let plan = Plan::from_graph(&lower(&get(model).unwrap()).unwrap()).unwrap();
         for (li, l) in plan.layers.iter().enumerate() {
-            if let LayerPlan::Conv { h, w, cin, cout, kside, first: false } = *l {
-                if out.iter().any(|s| {
-                    (s.h, s.w, s.cin, s.cout, s.kside, s.batch) == (h, w, cin, cout, kside, batch)
-                }) {
+            if let LayerPlan::Conv { g, cout, first: false } = *l {
+                if out.iter().any(|s| (s.g, s.cout, s.batch) == (g, cout, batch)) {
                     continue;
                 }
-                out.push(Shape {
-                    layer: format!("{model}/conv{li}"),
-                    batch,
-                    h,
-                    w,
-                    cin,
-                    cout,
-                    kside,
-                });
+                out.push(Shape { layer: format!("{model}/conv{li}"), batch, g, cout });
             }
         }
+    }
+    out
+}
+
+/// Strided ResNet stem/stage geometries (reduced spatial scale so the
+/// smoke sweep stays CI-sized; full 224-class maps only differ by a
+/// constant spatial factor on these kernels).
+fn strided_shapes(smoke: bool) -> Vec<Shape> {
+    let mut out = vec![
+        // stem-like: k7 s2 SAME over a real-input-sized channel count
+        // is first-layer territory; the binary stage-entry convs are
+        // the packed-path shapes — k3 s2 SAME, channels doubling
+        Shape {
+            layer: "resnet/stage2_entry".into(),
+            batch: 8,
+            g: ConvGeom::same(16, 16, 64, 3, 2),
+            cout: 128,
+        },
+        Shape {
+            layer: "resnet/stage3_entry".into(),
+            batch: 8,
+            g: ConvGeom::same(8, 8, 128, 3, 2),
+            cout: 256,
+        },
+    ];
+    if !smoke {
+        out.push(Shape {
+            layer: "resnet/stem_k7s2".into(),
+            batch: 4,
+            g: ConvGeom::same(32, 32, 16, 7, 2),
+            cout: 64,
+        });
+        out.push(Shape {
+            layer: "cnv/valid_s1".into(),
+            batch: 8,
+            g: ConvGeom::valid(30, 30, 64, 3, 1),
+            cout: 64,
+        });
     }
     out
 }
@@ -95,11 +121,23 @@ fn push_row(
     let mut row = Json::obj();
     row.set("backend", Json::from(backend));
     row.set("layer", Json::from(s.layer.as_str()));
-    row.set("h", Json::from(s.h));
-    row.set("w", Json::from(s.w));
-    row.set("cin", Json::from(s.cin));
+    row.set("h", Json::from(s.g.h));
+    row.set("w", Json::from(s.g.w));
+    row.set("cin", Json::from(s.g.cin));
     row.set("cout", Json::from(s.cout));
-    row.set("kside", Json::from(s.kside));
+    row.set("kside", Json::from(s.g.kside));
+    row.set("stride", Json::from(s.g.stride));
+    // VALID iff the output dims satisfy the unpadded formula with no
+    // pad — pad-0 SAME geometries (e.g. k3 s2 on even dims) still
+    // overhang the bottom/right and must report "same".  The kside
+    // bound keeps the subtraction safe for kernel-exceeds-map SAME
+    // geometries.
+    let valid = !s.g.padded()
+        && s.g.kside <= s.g.h
+        && s.g.kside <= s.g.w
+        && s.g.oh == (s.g.h - s.g.kside) / s.g.stride + 1
+        && s.g.ow == (s.g.w - s.g.kside) / s.g.stride + 1;
+    row.set("pad", Json::from(if valid { "valid" } else { "same" }));
     row.set("batch", Json::from(s.batch));
     row.set("giops", Json::from(giops));
     row.set("threads", Json::from(threads));
@@ -120,11 +158,12 @@ fn main() {
     // CNN zoo sweep: small CIFAR-class nets always; the full
     // BinaryNet conv stack only off-smoke (seconds per backend)
     let models: &[(&str, usize)] = if smoke {
-        &[("cnv_mini", 8), ("binarynet_mini", 8)]
+        &[("cnv_mini", 8), ("binarynet_mini", 8), ("resnete_mini", 8)]
     } else {
-        &[("cnv_mini", 8), ("binarynet_mini", 8), ("binarynet", 2)]
+        &[("cnv_mini", 8), ("binarynet_mini", 8), ("resnete_mini", 8), ("binarynet", 2)]
     };
-    let shapes = zoo_shapes(models);
+    let mut shapes = zoo_shapes(models);
+    shapes.extend(strided_shapes(smoke));
 
     // fused tiers: serial ones plus tiled across thread counts
     let backends: Vec<Backend> = if smoke {
@@ -141,13 +180,16 @@ fn main() {
 
     let mut rows: Vec<Json> = Vec::new();
     for s in &shapes {
-        let (b, h, w, cin, cout, kside) = (s.batch, s.h, s.w, s.cin, s.cout, s.kside);
-        let k = kside * kside * cin;
-        let orows = b * h * w;
-        let x = g.normal_vec(b * h * w * cin);
+        let (b, geom, cout) = (s.batch, s.g, s.cout);
+        let k = geom.k();
+        let orows = geom.rows(b);
+        let x = g.normal_vec(geom.in_len(b));
         let wt_f = g.normal_vec(cout * k); // transposed (cout × k) layout
         let wt = BitMatrix::pack(cout, k, &wt_f);
-        let label = format!("{} b{b} {h}x{w}x{cin}->{cout} k{kside}", s.layer);
+        let label = format!(
+            "{} b{b} {}x{}x{}->{cout} k{} s{}",
+            s.layer, geom.h, geom.w, geom.cin, geom.kside, geom.stride
+        );
 
         if backward {
             // conv backward: dX (streaming col2im) + dW (packed-A GEMM
@@ -157,11 +199,11 @@ fn main() {
             for &be in &backends {
                 let pool = be.pool();
                 let r = bench.bench(&format!("conv bwd fused {:<9} {label}", be.label()), || {
-                    let dx = conv_dx_streaming(&dy, &wt, b, h, w, cin, kside, be);
-                    let xh = im2col_packed(&x, b, h, w, cin, kside, &pool);
+                    let dx = conv_dx_streaming(&dy, &wt, b, geom, be);
+                    let xh = im2col_packed(&x, b, geom, &pool);
                     let mut dw = vec![0.0f32; k * cout];
                     packed_at_gemm_f32(&xh, &dy, cout, &mut dw, &pool);
-                    subtract_pad_dw_contrib(&mut dw, &dy, b, h, w, cin, cout, kside);
+                    subtract_pad_dw_contrib(&mut dw, &dy, b, geom, cout);
                     black_box(dx[0] + dw[0]);
                 });
                 let giops = r.giops(ops);
@@ -176,10 +218,10 @@ fn main() {
                     let wt_dense = wt.unpack();
                     let mut dcols = vec![0.0f32; orows * k];
                     be.gemm_f32(orows, cout, k, &dy, &wt_dense, &mut dcols);
-                    let dx = col2im(&dcols, b, h, w, cin, kside);
+                    let dx = col2im(&dcols, b, geom);
                     let xhat: Vec<f32> =
                         x.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
-                    let cols = im2col(&xhat, b, h, w, cin, kside);
+                    let cols = im2col(&xhat, b, geom);
                     let colst = transpose(&cols, orows, k);
                     let mut dw = vec![0.0f32; k * cout];
                     be.gemm_f32(k, orows, cout, &colst, &dy, &mut dw);
@@ -207,7 +249,7 @@ fn main() {
         for &be in &backends {
             let pool = be.pool();
             let r = bench.bench(&format!("conv fused {:<9} {label}", be.label()), || {
-                let xh = im2col_packed(&x, b, h, w, cin, kside, &pool);
+                let xh = im2col_packed(&x, b, geom, &pool);
                 be.xnor_gemm(&xh, &wt, &mut y);
                 black_box(y[0]);
             });
@@ -220,7 +262,7 @@ fn main() {
         for threads in [2usize, 4] {
             let be = Backend::Tiled { threads };
             let r = bench.bench(&format!("conv im2col tiled({threads}) {label}"), || {
-                let cols = im2col(&x, b, h, w, cin, kside);
+                let cols = im2col(&x, b, geom);
                 let xh = BitMatrix::pack(orows, k, &cols);
                 be.xnor_gemm(&xh, &wt, &mut y);
                 black_box(y[0]);

@@ -1,0 +1,204 @@
+//! Conv geometry: one `Copy` struct carries everything a conv kernel
+//! needs to agree about shapes — input/output spatial dims, kernel
+//! side, stride and the explicit top/left padding — so stride-1 SAME,
+//! strided SAME (TensorFlow convention: `out = ceil(in / stride)`,
+//! extra pad on the bottom/right) and VALID (`out = (in − k)/stride
+//! + 1`, no padding) all flow through the same packed pipeline.
+//!
+//! Output dims are *stored*, never re-inferred: every kernel indexes
+//! output position `(oy, ox)` against input `(oy·stride + ky − pad_h,
+//! ox·stride + kx − pad_w)` with bounds checks, which is exactly the
+//! SAME-vs-VALID difference (VALID geometries simply never go out of
+//! bounds).
+
+/// Spatial geometry of one conv layer (per sample; batch is a
+/// separate argument everywhere so one geometry serves any batch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvGeom {
+    /// Input spatial dims and channels (NHWC map is `h × w × cin`).
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    /// Output spatial dims (`oh × ow` positions per sample).
+    pub oh: usize,
+    pub ow: usize,
+    /// Square kernel side.
+    pub kside: usize,
+    /// Spatial stride (both axes).
+    pub stride: usize,
+    /// Top / left zero-padding.  Bottom/right padding is implicit:
+    /// kernels bounds-check `oy·stride + ky − pad_h` against `[0, h)`.
+    pub pad_h: usize,
+    pub pad_w: usize,
+}
+
+impl ConvGeom {
+    /// SAME-padded conv: `out = ceil(in / stride)`, pad split with the
+    /// extra row/column on the bottom/right (TensorFlow convention; at
+    /// stride 1 with an odd kernel this is the symmetric
+    /// `pad = (kside − 1)/2`).  Panics on an even kernel — the naive
+    /// engines reject those earlier, at plan-build time.
+    pub fn same(h: usize, w: usize, cin: usize, kside: usize, stride: usize) -> ConvGeom {
+        assert!(
+            kside % 2 == 1 && kside > 0,
+            "SAME conv requires an odd kernel side, got {kside} \
+             (pad = (kside-1)/2 would be asymmetric)"
+        );
+        assert!(stride >= 1, "conv stride must be positive");
+        let oh = h.div_ceil(stride);
+        let ow = w.div_ceil(stride);
+        let pad_h = ((oh - 1) * stride + kside).saturating_sub(h) / 2;
+        let pad_w = ((ow - 1) * stride + kside).saturating_sub(w) / 2;
+        ConvGeom { h, w, cin, oh, ow, kside, stride, pad_h, pad_w }
+    }
+
+    /// Stride-1 SAME — the geometry the pre-PR-4 pipeline hardcoded.
+    pub fn same1(h: usize, w: usize, cin: usize, kside: usize) -> ConvGeom {
+        ConvGeom::same(h, w, cin, kside, 1)
+    }
+
+    /// VALID (unpadded) conv: `out = (in − kside)/stride + 1`.
+    pub fn valid(h: usize, w: usize, cin: usize, kside: usize, stride: usize) -> ConvGeom {
+        assert!(kside >= 1, "conv kernel side must be positive");
+        assert!(stride >= 1, "conv stride must be positive");
+        assert!(
+            kside <= h && kside <= w,
+            "VALID conv kernel {kside} exceeds input {h}x{w}"
+        );
+        let oh = (h - kside) / stride + 1;
+        let ow = (w - kside) / stride + 1;
+        ConvGeom { h, w, cin, oh, ow, kside, stride, pad_h: 0, pad_w: 0 }
+    }
+
+    /// im2col contraction width `k = kside² · cin`.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.kside * self.kside * self.cin
+    }
+
+    /// im2col rows for a batch: `b · oh · ow`.
+    #[inline]
+    pub fn rows(&self, b: usize) -> usize {
+        b * self.oh * self.ow
+    }
+
+    /// Input map length for a batch: `b · h · w · cin`.
+    #[inline]
+    pub fn in_len(&self, b: usize) -> usize {
+        b * self.h * self.w * self.cin
+    }
+
+    /// Any padding taps at all?  VALID (and SAME geometries whose
+    /// kernel never overhangs, e.g. 1×1) contribute no out-of-bounds
+    /// taps, so the pad corrections are no-ops.
+    #[inline]
+    pub fn padded(&self) -> bool {
+        self.pad_h > 0 || self.pad_w > 0
+    }
+
+    /// True for the stride-1 spatial-preserving case (SAME, s = 1):
+    /// output positions coincide with input positions.
+    #[inline]
+    pub fn unit(&self) -> bool {
+        self.stride == 1 && self.oh == self.h && self.ow == self.w
+    }
+}
+
+/// Half-open output range `[lo, hi)` of positions (along one axis)
+/// whose tap `kt` lands in bounds: `0 ≤ o·stride + kt − pad < n`.
+#[inline]
+pub(crate) fn tap_out_range(
+    o: usize,
+    n: usize,
+    pad: usize,
+    kt: usize,
+    stride: usize,
+) -> (usize, usize) {
+    let lo = if kt >= pad { 0 } else { (pad - kt).div_ceil(stride) };
+    let hi = if n + pad <= kt { 0 } else { ((n + pad - kt - 1) / stride + 1).min(o) };
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_stride1_matches_legacy_pad() {
+        for kside in [1usize, 3, 5, 7] {
+            let g = ConvGeom::same1(16, 12, 3, kside);
+            assert_eq!((g.oh, g.ow), (16, 12));
+            assert_eq!(g.pad_h, (kside - 1) / 2);
+            assert_eq!(g.pad_w, (kside - 1) / 2);
+            assert!(g.unit());
+        }
+    }
+
+    #[test]
+    fn same_strided_ceil_dims() {
+        // ResNet stem: 224, k7, s2 -> 112, total pad 5, top pad 2
+        let g = ConvGeom::same(224, 224, 3, 7, 2);
+        assert_eq!((g.oh, g.ow), (112, 112));
+        assert_eq!(g.pad_h, 2);
+        // stage entry: 16, k3, s2 -> 8, total pad 1, top pad 0
+        let g = ConvGeom::same(16, 16, 64, 3, 2);
+        assert_eq!((g.oh, g.ow), (8, 8));
+        assert_eq!(g.pad_h, 0);
+        // odd input: 7, k3, s2 -> 4, total pad (3*2+3)-7 = 2, top 1
+        let g = ConvGeom::same(7, 7, 8, 3, 2);
+        assert_eq!(g.oh, 4);
+        assert_eq!(g.pad_h, 1);
+        // k1 s2 never pads
+        let g = ConvGeom::same(5, 5, 2, 1, 2);
+        assert_eq!(g.oh, 3);
+        assert!(!g.padded());
+    }
+
+    #[test]
+    fn valid_dims() {
+        // FINN CNV: 32 -(3x3 valid)-> 30
+        let g = ConvGeom::valid(32, 32, 3, 3, 1);
+        assert_eq!((g.oh, g.ow), (30, 30));
+        assert!(!g.padded());
+        let g = ConvGeom::valid(9, 9, 1, 3, 2);
+        assert_eq!(g.oh, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "odd kernel side")]
+    fn same_rejects_even_kernel() {
+        ConvGeom::same(8, 8, 3, 2, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds input")]
+    fn valid_rejects_oversized_kernel() {
+        ConvGeom::valid(4, 4, 3, 5, 1);
+    }
+
+    #[test]
+    fn tap_ranges_brute_force() {
+        // tap_out_range equals the brute-force scan for every
+        // (n, o, pad, kt, stride) in a dense grid
+        for stride in 1..=3usize {
+            for n in 1..=9usize {
+                for pad in 0..=3usize {
+                    for o in 1..=9usize {
+                        for kt in 0..=6usize {
+                            let (lo, hi) = tap_out_range(o, n, pad, kt, stride);
+                            for ot in 0..o {
+                                let s = ot * stride + kt;
+                                let inb = s >= pad && s - pad < n;
+                                let claimed = ot >= lo && ot < hi;
+                                assert_eq!(
+                                    inb, claimed,
+                                    "n{n} o{o} pad{pad} kt{kt} s{stride} @ {ot}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,46 +1,35 @@
 //! Fused binary im2col: sign-pack conv patches straight into
-//! [`BitMatrix`] row panels.
+//! [`BitMatrix`] row panels — for *any* [`ConvGeom`] (stride-1 SAME,
+//! strided SAME, VALID).
 //!
 //! The pre-fusion binary conv *forward* materialized a full f32
-//! im2col buffer (`B·H·W × k²·Cin × 4` bytes — the hottest transient
-//! of the forward pass) and then bit-packed it in a second pass.  The
-//! paper's central claim is that binary activations alone need be
-//! retained; [`im2col_packed`] realizes that on the forward compute
-//! path too: each output row's patch is signed and packed directly
-//! from the NHWC activation map, 32× less transient memory and one
-//! pass instead of three, threaded over output rows via the
-//! persistent [`Pool`].  (The conv *backward* still materializes
-//! rows × k f32 buffers — dX patch gradients, and the standard
-//! engine's dW im2col — so the step-level peak is governed by the
-//! backward until that lever lands; see ROADMAP perf notes.)
+//! im2col buffer (`B·OH·OW × k²·Cin × 4` bytes — the hottest
+//! transient of the forward pass) and then bit-packed it in a second
+//! pass.  The paper's central claim is that binary activations alone
+//! need be retained; [`im2col_packed`] realizes that on the forward
+//! compute path too: each output row's patch is signed and packed
+//! directly from the NHWC activation map, 32× less transient memory
+//! and one pass instead of three, threaded over output rows via the
+//! persistent [`Pool`].
 //!
-//! Padding convention: SAME zero-padding taps pack as **+1** — the
-//! f32 reference wrote `0.0` into the cols buffer and
-//! `BitMatrix::pack` maps `0.0 ≥ 0` to bit-set — so
-//! `im2col_packed(x) == BitMatrix::pack(im2col(x))` bit for bit (the
-//! property tests pin this).  That is exactly what the proposed
-//! engine's binary conv consumed all along.  For the *standard*
-//! engine, whose f32 conv treats padding as a true zero,
-//! [`subtract_pad_contrib`] applies the masked SAME-padding edge
-//! correction: with pad bits fixed at +1,
-//! `y_zero_pad = y_xnor − Σ_{oob taps} Σ_cin ŵ`, a weight-only term
-//! subtracted on the border output columns (O(border·k²·Cout), weight
-//! scan O(k·Cout/64) word-popcounts).
+//! Geometry convention (see [`ConvGeom`]): output position `(oy, ox)`
+//! reads input `(oy·stride + ky − pad_h, ox·stride + kx − pad_w)`;
+//! out-of-bounds taps are the SAME zero-padding (VALID geometries
+//! never go out of bounds, so all pad machinery degenerates away).
+//!
+//! Padding taps pack as **+1** — the f32 reference writes `0.0` into
+//! the cols buffer and `BitMatrix::pack` maps `0.0 ≥ 0` to bit-set —
+//! so `im2col_packed(x) == BitMatrix::pack(im2col(x))` bit for bit
+//! (the property tests pin this).  That is exactly what the proposed
+//! engine's binary conv consumes.  For the *standard* engine, whose
+//! f32 conv treats padding as a true zero, [`subtract_pad_contrib`]
+//! applies the masked padding edge correction: with pad bits fixed at
+//! +1, `y_zero_pad = y_xnor − Σ_{oob taps} Σ_cin ŵ`, a weight-only
+//! term subtracted on the border output positions
+//! (O(border·k²·Cout), weight scan O(k·Cout/64) word-popcounts).
 
-use super::{simd, Backend, BitMatrix, Pool};
-
-/// SAME im2col geometry is only symmetric for odd kernels:
-/// `pad = (kside-1)/2` silently under-pads the right/bottom for even
-/// `kside`.  Every conv entry point asserts this; the engines reject
-/// even kernels earlier, at plan-build time (`naive::Plan`).
-#[inline]
-pub(crate) fn assert_odd_kside(kside: usize) {
-    assert!(
-        kside % 2 == 1 && kside > 0,
-        "SAME conv requires an odd kernel side, got {kside} \
-         (pad = (kside-1)/2 would be asymmetric)"
-    );
-}
+use super::geom::tap_out_range;
+use super::{simd, Backend, BitMatrix, ConvGeom, Pool};
 
 /// OR `vals.len()` sign bits (`v ≥ 0` ⇔ set, the paper's sgn with
 /// sgn(0) = +1) into `words` starting at bit offset `bit`, assembling
@@ -63,7 +52,7 @@ fn set_sign_bits(words: &mut [u64], mut bit: usize, vals: &[f32]) {
 }
 
 /// OR `n` set bits into `words` starting at bit offset `bit` (the
-/// +1-packed SAME-padding taps).
+/// +1-packed padding taps).
 #[inline]
 fn set_ones(words: &mut [u64], mut bit: usize, mut n: usize) {
     while n > 0 {
@@ -77,30 +66,19 @@ fn set_ones(words: &mut [u64], mut bit: usize, mut n: usize) {
     }
 }
 
-/// Pack one patch row: output position (`bi`, `y`, `x0`) of a
-/// stride-1 SAME `kside`×`kside` conv over the NHWC map `x`.
-#[allow(clippy::too_many_arguments)]
+/// Pack one patch row: output position (`bi`, `oy`, `ox`) of the conv
+/// geometry `g` over the NHWC map `x`.
 #[inline]
-fn pack_patch(
-    x: &[f32],
-    words: &mut [u64],
-    bi: usize,
-    y: usize,
-    x0: usize,
-    h: usize,
-    w: usize,
-    cin: usize,
-    kside: usize,
-    pad: usize,
-) {
+fn pack_patch(x: &[f32], words: &mut [u64], bi: usize, oy: usize, ox: usize, g: &ConvGeom) {
+    let cin = g.cin;
     let mut bit = 0usize;
-    for ky in 0..kside {
-        let sy = y as isize + ky as isize - pad as isize;
-        let row_ok = sy >= 0 && sy < h as isize;
-        for kx in 0..kside {
-            let sx = x0 as isize + kx as isize - pad as isize;
-            if row_ok && sx >= 0 && sx < w as isize {
-                let src = ((bi * h + sy as usize) * w + sx as usize) * cin;
+    for ky in 0..g.kside {
+        let sy = (oy * g.stride + ky) as isize - g.pad_h as isize;
+        let row_ok = sy >= 0 && sy < g.h as isize;
+        for kx in 0..g.kside {
+            let sx = (ox * g.stride + kx) as isize - g.pad_w as isize;
+            if row_ok && sx >= 0 && sx < g.w as isize {
+                let src = ((bi * g.h + sy as usize) * g.w + sx as usize) * cin;
                 set_sign_bits(words, bit, &x[src..src + cin]);
             } else {
                 set_ones(words, bit, cin);
@@ -110,34 +88,25 @@ fn pack_patch(
     }
 }
 
-/// Fused sign-pack im2col for a stride-1 SAME `kside`×`kside` conv
-/// over the NHWC map `x` (`b`×`h`×`w`×`cin`): returns the packed
-/// (B·H·W × k²·Cin) patch matrix, bit-identical to
-/// `BitMatrix::pack(b*h*w, k, &im2col(x, ..))` — without ever
-/// materializing the f32 cols buffer.  Threaded over output rows via
-/// `pool` (each worker owns a disjoint band of packed rows).
-pub fn im2col_packed(
-    x: &[f32],
-    b: usize,
-    h: usize,
-    w: usize,
-    cin: usize,
-    kside: usize,
-    pool: &Pool,
-) -> BitMatrix {
-    assert_odd_kside(kside);
-    assert_eq!(x.len(), b * h * w * cin, "NHWC shape mismatch");
-    let k = kside * kside * cin;
-    let rows = b * h * w;
+/// Fused sign-pack im2col for conv geometry `g` over the NHWC map `x`
+/// (`b`×`h`×`w`×`cin`): returns the packed (B·OH·OW × k²·Cin) patch
+/// matrix, bit-identical to `BitMatrix::pack(rows, k, &im2col(x, ..))`
+/// — without ever materializing the f32 cols buffer.  Threaded over
+/// output rows via `pool` (each worker owns a disjoint band of packed
+/// rows).
+pub fn im2col_packed(x: &[f32], b: usize, g: ConvGeom, pool: &Pool) -> BitMatrix {
+    assert_eq!(x.len(), g.in_len(b), "NHWC shape mismatch");
+    let k = g.k();
+    let rows = g.rows(b);
     let mut m = BitMatrix::zeros(rows, k);
     let wpr = m.words_per_row;
-    let pad = (kside - 1) / 2;
+    let per_sample = g.oh * g.ow;
     pool.run_rows(rows, wpr, &mut m.data, |r0, band| {
         for (i, words) in band.chunks_mut(wpr).enumerate() {
             let r = r0 + i;
-            let bi = r / (h * w);
-            let rem = r % (h * w);
-            pack_patch(x, words, bi, rem / w, rem % w, h, w, cin, kside, pad);
+            let bi = r / per_sample;
+            let rem = r % per_sample;
+            pack_patch(x, words, bi, rem / g.ow, rem % g.ow, &g);
         }
     });
     m
@@ -166,31 +135,38 @@ fn count_bit_range(words: &[u64], start: usize, end: usize) -> u32 {
     c
 }
 
-/// Masked SAME-padding correction for the fused XNOR conv of the
-/// standard engine: `im2col_packed` fixes out-of-bounds taps at +1,
-/// so with packed transposed weights `wt` (Cout × k²·Cin) the XNOR
-/// product overshoots the zero-padded truth by the padded taps'
-/// weight sums.  Subtracts, per border output position, `T[tap] =
-/// Σ_cin ŵ[tap]` for each out-of-bounds tap; interior positions are
-/// untouched.  `y` is the (B·H·W × Cout) conv output in place.
-pub fn subtract_pad_contrib(
-    y: &mut [f32],
-    wt: &BitMatrix,
-    b: usize,
-    h: usize,
-    w: usize,
-    cin: usize,
-    kside: usize,
-) {
-    assert_odd_kside(kside);
-    let pad = (kside - 1) / 2;
-    if pad == 0 {
-        return; // 1×1 taps never leave the map
+/// Is output position (`oy`, `ox`) interior — i.e. every tap of its
+/// kernel window lands inside the input map?
+#[inline]
+fn interior(oy: usize, ox: usize, g: &ConvGeom) -> bool {
+    let y0 = oy * g.stride;
+    let x0 = ox * g.stride;
+    y0 >= g.pad_h
+        && y0 + g.kside - g.pad_h <= g.h
+        && x0 >= g.pad_w
+        && x0 + g.kside - g.pad_w <= g.w
+}
+
+/// Masked padding correction for the fused XNOR conv of the standard
+/// engine: `im2col_packed` fixes out-of-bounds taps at +1, so with
+/// packed transposed weights `wt` (Cout × k²·Cin) the XNOR product
+/// overshoots the zero-padded truth by the padded taps' weight sums.
+/// Subtracts, per border output position, `T[tap] = Σ_cin ŵ[tap]` for
+/// each out-of-bounds tap; interior positions are untouched.  `y` is
+/// the (B·OH·OW × Cout) conv output in place.  No-op for unpadded
+/// (VALID / 1×1) geometries.
+pub fn subtract_pad_contrib(y: &mut [f32], wt: &BitMatrix, b: usize, g: ConvGeom) {
+    // a geometry can overhang bottom/right even with zero top/left pad
+    // only via SAME-stride interplay; cheapest exact test is below per
+    // position, but fully unpadded geometries never overhang at all
+    if !same_overhangs(&g) {
+        return;
     }
     let cout = wt.rows;
-    let kk = kside * kside;
+    let kk = g.kside * g.kside;
+    let cin = g.cin;
     debug_assert_eq!(wt.cols, kk * cin);
-    debug_assert_eq!(y.len(), b * h * w * cout);
+    debug_assert_eq!(y.len(), g.rows(b) * cout);
     // per-tap channel-summed ±1 weights: T[tap][j] = 2·ones − cin
     let mut t = vec![0.0f32; kk * cout];
     for j in 0..cout {
@@ -201,21 +177,20 @@ pub fn subtract_pad_contrib(
         }
     }
     for bi in 0..b {
-        for yy in 0..h {
-            for xx in 0..w {
-                // interior positions have no out-of-bounds taps
-                if yy >= pad && yy + pad < h && xx >= pad && xx + pad < w {
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                if interior(oy, ox, &g) {
                     continue;
                 }
-                let o = ((bi * h + yy) * w + xx) * cout;
+                let o = ((bi * g.oh + oy) * g.ow + ox) * cout;
                 let orow = &mut y[o..o + cout];
-                for ky in 0..kside {
-                    let sy = yy as isize + ky as isize - pad as isize;
-                    let y_oob = sy < 0 || sy >= h as isize;
-                    for kx in 0..kside {
-                        let sx = xx as isize + kx as isize - pad as isize;
-                        if y_oob || sx < 0 || sx >= w as isize {
-                            let trow = &t[(ky * kside + kx) * cout..][..cout];
+                for ky in 0..g.kside {
+                    let sy = (oy * g.stride + ky) as isize - g.pad_h as isize;
+                    let y_oob = sy < 0 || sy >= g.h as isize;
+                    for kx in 0..g.kside {
+                        let sx = (ox * g.stride + kx) as isize - g.pad_w as isize;
+                        if y_oob || sx < 0 || sx >= g.w as isize {
+                            let trow = &t[(ky * g.kside + kx) * cout..][..cout];
                             for (yv, &tv) in orow.iter_mut().zip(trow) {
                                 *yv -= tv;
                             }
@@ -227,86 +202,99 @@ pub fn subtract_pad_contrib(
     }
 }
 
-/// Scatter-add one conv tap's (B·H·W × cin) panel into the NHWC input
-/// gradient map — the streaming col2im inner step.  Output position
-/// (bi, y, x) contributes its panel row to input position
-/// (bi, y + ky − pad, x + kx − pad); out-of-bounds taps are skipped
-/// (zero-padding contributes no input gradient).  Rows contiguous in
-/// `x` shift together, so each (bi, y) line is one vector add.
-#[allow(clippy::too_many_arguments)]
+/// Can any tap of this geometry fall out of bounds?  Checks the four
+/// extreme window corners (top-left of position (0,0), bottom-right of
+/// position (oh−1, ow−1)).
+#[inline]
+fn same_overhangs(g: &ConvGeom) -> bool {
+    g.pad_h > 0
+        || g.pad_w > 0
+        || (g.oh - 1) * g.stride + g.kside > g.h + g.pad_h
+        || (g.ow - 1) * g.stride + g.kside > g.w + g.pad_w
+}
+
+/// Scatter-add one conv tap's (B·OH·OW × cin) panel into the NHWC
+/// input gradient map — the streaming col2im inner step.  Output
+/// position (bi, oy, ox) contributes its panel row to input position
+/// (bi, oy·stride + ky − pad_h, ox·stride + kx − pad_w); out-of-bounds
+/// taps are skipped (zero-padding contributes no input gradient).  At
+/// stride 1 rows contiguous in x shift together, so each (bi, oy)
+/// line is one vector add; strided geometries add per position.
 pub fn col2im_tap_scatter(
     dx: &mut [f32],
     panel: &[f32],
     b: usize,
-    h: usize,
-    w: usize,
-    cin: usize,
-    kside: usize,
+    g: ConvGeom,
     ky: usize,
     kx: usize,
 ) {
-    assert_odd_kside(kside);
-    debug_assert_eq!(dx.len(), b * h * w * cin);
-    debug_assert_eq!(panel.len(), b * h * w * cin);
-    debug_assert!(ky < kside && kx < kside);
-    let pad = (kside - 1) / 2;
-    let oy = ky as isize - pad as isize; // sy = y + oy
-    let ox = kx as isize - pad as isize; // sx = x + ox
-    // valid output range: sy ∈ [0, h), sx ∈ [0, w)
-    let ylo = (-oy).max(0) as usize;
-    let yhi = ((h as isize - oy).min(h as isize)).max(0) as usize;
-    let xlo = (-ox).max(0) as usize;
-    let xhi = ((w as isize - ox).min(w as isize)).max(0) as usize;
+    debug_assert_eq!(dx.len(), g.in_len(b));
+    debug_assert_eq!(panel.len(), g.rows(b) * g.cin);
+    debug_assert!(ky < g.kside && kx < g.kside);
+    let cin = g.cin;
+    let s = g.stride;
+    let (ylo, yhi) = tap_out_range(g.oh, g.h, g.pad_h, ky, s);
+    let (xlo, xhi) = tap_out_range(g.ow, g.w, g.pad_w, kx, s);
     if ylo >= yhi || xlo >= xhi {
         return;
     }
-    let run = (xhi - xlo) * cin; // contiguous in x on both sides
-    for bi in 0..b {
-        for y in ylo..yhi {
-            let sy = (y as isize + oy) as usize;
-            let sx = (xlo as isize + ox) as usize;
-            let src = ((bi * h + y) * w + xlo) * cin;
-            let dst = ((bi * h + sy) * w + sx) * cin;
-            simd::add_assign_f32(&mut dx[dst..dst + run], &panel[src..src + run]);
+    if s == 1 {
+        let run = (xhi - xlo) * cin; // contiguous in x on both sides
+        let sx = xlo + kx - g.pad_w;
+        for bi in 0..b {
+            for oy in ylo..yhi {
+                let sy = oy + ky - g.pad_h;
+                let src = ((bi * g.oh + oy) * g.ow + xlo) * cin;
+                let dst = ((bi * g.h + sy) * g.w + sx) * cin;
+                simd::add_assign_f32(&mut dx[dst..dst + run], &panel[src..src + run]);
+            }
+        }
+    } else {
+        for bi in 0..b {
+            for oy in ylo..yhi {
+                let sy = oy * s + ky - g.pad_h;
+                for ox in xlo..xhi {
+                    let sx = ox * s + kx - g.pad_w;
+                    let src = ((bi * g.oh + oy) * g.ow + ox) * cin;
+                    let dst = ((bi * g.h + sy) * g.w + sx) * cin;
+                    simd::add_assign_f32(&mut dx[dst..dst + cin], &panel[src..src + cin]);
+                }
+            }
         }
     }
 }
 
-/// Streaming col2im-fused dX for the stride-1 SAME conv backward:
+/// Streaming col2im-fused dX for the conv backward of geometry `g`:
 /// `dx = col2im(∂Y · Ŵᵀ)` computed **tap-by-tap** — per (ky, kx) a
-/// (B·H·W × cin) panel `∂Y · Ŵᵀ[tap]` (the backend's f32 GEMM,
-/// row-banded over the worker pool on the tiled tier) is scatter-added
-/// straight into `dx` via [`col2im_tap_scatter`].
+/// (B·OH·OW × cin) panel `∂Y · Ŵᵀ[tap]` (the backend's f32 GEMM,
+/// row-banded over the worker pool on the tiled tier) is
+/// scatter-added straight into `dx` via [`col2im_tap_scatter`].
 ///
-/// The full (B·H·W × k²·Cin) `dcols` patch-gradient buffer — the
+/// The full (B·OH·OW × k²·Cin) `dcols` patch-gradient buffer — the
 /// backward's dominant f32 transient — never exists; the peak
 /// transient is one panel (k²× smaller) plus the (Cout × cin) f32 tap
 /// weights unpacked from the packed Ŵᵀ.  Equal to
 /// `col2im(gemm(∂Y, Ŵᵀ))` up to f32 summation order (taps accumulate
 /// tap-major instead of row-major), and identical across backends and
 /// thread counts (bands never split a reduction).
-#[allow(clippy::too_many_arguments)]
 pub fn conv_dx_streaming(
     dy: &[f32],
     wt: &BitMatrix,
     b: usize,
-    h: usize,
-    w: usize,
-    cin: usize,
-    kside: usize,
+    g: ConvGeom,
     backend: Backend,
 ) -> Vec<f32> {
-    assert_odd_kside(kside);
     let cout = wt.rows;
-    let rows = b * h * w;
+    let rows = g.rows(b);
     assert_eq!(dy.len(), rows * cout, "dY shape mismatch");
-    assert_eq!(wt.cols, kside * kside * cin, "Ŵᵀ shape mismatch");
-    let mut dx = vec![0.0f32; b * h * w * cin];
+    assert_eq!(wt.cols, g.k(), "Ŵᵀ shape mismatch");
+    let cin = g.cin;
+    let mut dx = vec![0.0f32; g.in_len(b)];
     let mut panel = vec![0.0f32; rows * cin];
     let mut wtap = vec![0.0f32; cout * cin];
-    for ky in 0..kside {
-        for kx in 0..kside {
-            let tap = ky * kside + kx;
+    for ky in 0..g.kside {
+        for kx in 0..g.kside {
+            let tap = ky * g.kside + kx;
             // unpack this tap's (cout × cin) ±1 weight slice from the
             // packed Ŵᵀ row words — never the full (cout × k) f32
             for j in 0..cout {
@@ -318,55 +306,49 @@ pub fn conv_dx_streaming(
                 }
             }
             backend.gemm_f32(rows, cout, cin, dy, &wtap, &mut panel);
-            col2im_tap_scatter(&mut dx, &panel, b, h, w, cin, kside, ky, kx);
+            col2im_tap_scatter(&mut dx, &panel, b, g, ky, kx);
         }
     }
     dx
 }
 
-/// Masked SAME-padding correction for the packed-activation dW of the
+/// Masked padding correction for the packed-activation dW of the
 /// standard engine: `im2col_packed` fixes out-of-bounds taps at +1,
 /// so `X̂ᵀ·∂Y` overshoots the zero-padded truth by the border rows'
 /// ∂Y sums.  For each tap, `B[tap][j] = Σ_{r: tap OOB at r} ∂Y[r][j]`
 /// is accumulated over border output positions only, then subtracted
-/// from all `cin` dW rows of that tap.  O(border·k²·Cout + k²·Cin·Cout)
-/// — weight-scale work, no rows×k anything.
-#[allow(clippy::too_many_arguments)]
+/// from all `cin` dW rows of that tap.  O(border·k²·Cout +
+/// k²·Cin·Cout) — weight-scale work, no rows×k anything.  No-op for
+/// unpadded geometries.
 pub fn subtract_pad_dw_contrib(
     dw: &mut [f32],
     dy: &[f32],
     b: usize,
-    h: usize,
-    w: usize,
-    cin: usize,
+    g: ConvGeom,
     cout: usize,
-    kside: usize,
 ) {
-    assert_odd_kside(kside);
-    let pad = (kside - 1) / 2;
-    if pad == 0 {
-        return; // 1×1 taps never leave the map
+    if !same_overhangs(&g) {
+        return;
     }
-    let kk = kside * kside;
-    debug_assert_eq!(dw.len(), kk * cin * cout);
-    debug_assert_eq!(dy.len(), b * h * w * cout);
+    let kk = g.kside * g.kside;
+    debug_assert_eq!(dw.len(), kk * g.cin * cout);
+    debug_assert_eq!(dy.len(), g.rows(b) * cout);
     // border ∂Y sums per tap
     let mut bs = vec![0.0f32; kk * cout];
     for bi in 0..b {
-        for yy in 0..h {
-            for xx in 0..w {
-                // interior positions have no out-of-bounds taps
-                if yy >= pad && yy + pad < h && xx >= pad && xx + pad < w {
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                if interior(oy, ox, &g) {
                     continue;
                 }
-                let dyr = &dy[((bi * h + yy) * w + xx) * cout..][..cout];
-                for ky in 0..kside {
-                    let sy = yy as isize + ky as isize - pad as isize;
-                    let y_oob = sy < 0 || sy >= h as isize;
-                    for kx in 0..kside {
-                        let sx = xx as isize + kx as isize - pad as isize;
-                        if y_oob || sx < 0 || sx >= w as isize {
-                            let brow = &mut bs[(ky * kside + kx) * cout..][..cout];
+                let dyr = &dy[((bi * g.oh + oy) * g.ow + ox) * cout..][..cout];
+                for ky in 0..g.kside {
+                    let sy = (oy * g.stride + ky) as isize - g.pad_h as isize;
+                    let y_oob = sy < 0 || sy >= g.h as isize;
+                    for kx in 0..g.kside {
+                        let sx = (ox * g.stride + kx) as isize - g.pad_w as isize;
+                        if y_oob || sx < 0 || sx >= g.w as isize {
+                            let brow = &mut bs[(ky * g.kside + kx) * cout..][..cout];
                             simd::add_assign_f32(brow, dyr);
                         }
                     }
@@ -376,8 +358,8 @@ pub fn subtract_pad_dw_contrib(
     }
     for tap in 0..kk {
         let brow = &bs[tap * cout..(tap + 1) * cout];
-        for ci in 0..cin {
-            let drow = &mut dw[(tap * cin + ci) * cout..][..cout];
+        for ci in 0..g.cin {
+            let drow = &mut dw[(tap * g.cin + ci) * cout..][..cout];
             simd::sub_assign_f32(drow, brow);
         }
     }
@@ -386,28 +368,28 @@ pub fn subtract_pad_dw_contrib(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bitops::gemm::{gemm_f32, xnor_gemm_naive};
+    use crate::bitops::gemm::{gemm_f32, packed_at_gemm_f32, xnor_gemm_naive};
     use crate::util::rng::Pcg32;
 
-    /// f32 reference im2col (mirrors `naive::im2col`, kept local so
-    /// the substrate test has no engine dependency).
-    fn im2col_ref(x: &[f32], b: usize, h: usize, w: usize, cin: usize, kside: usize) -> Vec<f32> {
-        let k = kside * kside * cin;
-        let pad = (kside - 1) / 2;
-        let mut cols = vec![0.0f32; b * h * w * k];
+    /// f32 reference im2col for any geometry (mirrors `naive::im2col`,
+    /// kept local so the substrate test has no engine dependency).
+    fn im2col_ref(x: &[f32], b: usize, g: &ConvGeom) -> Vec<f32> {
+        let k = g.k();
+        let mut cols = vec![0.0f32; g.rows(b) * k];
         for bi in 0..b {
-            for y in 0..h {
-                for x0 in 0..w {
-                    let mut idx = ((bi * h + y) * w + x0) * k;
-                    for ky in 0..kside {
-                        let sy = y as isize + ky as isize - pad as isize;
-                        for kx in 0..kside {
-                            let sx = x0 as isize + kx as isize - pad as isize;
-                            if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
-                                let src = ((bi * h + sy as usize) * w + sx as usize) * cin;
-                                cols[idx..idx + cin].copy_from_slice(&x[src..src + cin]);
+            for oy in 0..g.oh {
+                for ox in 0..g.ow {
+                    let mut idx = ((bi * g.oh + oy) * g.ow + ox) * k;
+                    for ky in 0..g.kside {
+                        let sy = (oy * g.stride + ky) as isize - g.pad_h as isize;
+                        for kx in 0..g.kside {
+                            let sx = (ox * g.stride + kx) as isize - g.pad_w as isize;
+                            if sy >= 0 && sy < g.h as isize && sx >= 0 && sx < g.w as isize {
+                                let src =
+                                    ((bi * g.h + sy as usize) * g.w + sx as usize) * g.cin;
+                                cols[idx..idx + g.cin].copy_from_slice(&x[src..src + g.cin]);
                             }
-                            idx += cin;
+                            idx += g.cin;
                         }
                     }
                 }
@@ -416,18 +398,58 @@ mod tests {
         cols
     }
 
-    fn geometries() -> Vec<(usize, usize, usize, usize, usize)> {
-        // (b, h, w, cin, kside): kside 1/3/5, patch widths off the
-        // word grid (45, 297, 630 bits), batch 1/3
+    /// f32 reference col2im for any geometry.
+    fn col2im_ref(dcols: &[f32], b: usize, g: &ConvGeom) -> Vec<f32> {
+        let k = g.k();
+        let mut dx = vec![0.0f32; g.in_len(b)];
+        for bi in 0..b {
+            for oy in 0..g.oh {
+                for ox in 0..g.ow {
+                    let mut idx = ((bi * g.oh + oy) * g.ow + ox) * k;
+                    for ky in 0..g.kside {
+                        let sy = (oy * g.stride + ky) as isize - g.pad_h as isize;
+                        for kx in 0..g.kside {
+                            let sx = (ox * g.stride + kx) as isize - g.pad_w as isize;
+                            if sy >= 0 && sy < g.h as isize && sx >= 0 && sx < g.w as isize {
+                                let dst =
+                                    ((bi * g.h + sy as usize) * g.w + sx as usize) * g.cin;
+                                for ci in 0..g.cin {
+                                    dx[dst + ci] += dcols[idx + ci];
+                                }
+                            }
+                            idx += g.cin;
+                        }
+                    }
+                }
+            }
+        }
+        dx
+    }
+
+    /// (b, geometry) sweep: stride-1 SAME (the legacy cases, word-grid
+    /// offenders included), strided SAME, and strided/unit VALID.
+    fn geometries() -> Vec<(usize, ConvGeom)> {
         vec![
-            (1, 4, 4, 1, 1),
-            (1, 5, 5, 3, 3),
-            (2, 4, 4, 5, 3),
-            (1, 6, 6, 33, 3),
-            (3, 5, 5, 2, 5),
-            (1, 7, 7, 13, 5),
-            (2, 3, 3, 64, 1),
-            (1, 4, 4, 70, 3),
+            // legacy stride-1 SAME
+            (1, ConvGeom::same1(4, 4, 1, 1)),
+            (1, ConvGeom::same1(5, 5, 3, 3)),
+            (2, ConvGeom::same1(4, 4, 5, 3)),
+            (1, ConvGeom::same1(6, 6, 33, 3)),
+            (3, ConvGeom::same1(5, 5, 2, 5)),
+            (1, ConvGeom::same1(7, 7, 13, 5)),
+            (2, ConvGeom::same1(3, 3, 64, 1)),
+            (1, ConvGeom::same1(4, 4, 70, 3)),
+            // strided SAME (even + odd input, ResNet-stem-like k7)
+            (2, ConvGeom::same(8, 8, 3, 3, 2)),
+            (1, ConvGeom::same(7, 7, 5, 3, 2)),
+            (1, ConvGeom::same(9, 9, 2, 7, 2)),
+            (2, ConvGeom::same(6, 8, 4, 5, 2)),
+            (1, ConvGeom::same(8, 8, 33, 1, 2)),
+            // VALID, unit + strided (FINN-CNV-like)
+            (2, ConvGeom::valid(6, 6, 3, 3, 1)),
+            (1, ConvGeom::valid(8, 8, 17, 3, 2)),
+            (1, ConvGeom::valid(7, 5, 2, 5, 1)),
+            (2, ConvGeom::valid(9, 9, 4, 2, 3)), // even kernel OK for VALID
         ]
     }
 
@@ -442,14 +464,13 @@ mod tests {
 
     #[test]
     fn fused_matches_im2col_then_pack() {
-        let mut g = Pcg32::new(41);
-        for (b, h, w, cin, kside) in geometries() {
-            let x = noisy_map(&mut g, b * h * w * cin);
-            let k = kside * kside * cin;
-            let want = BitMatrix::pack(b * h * w, k, &im2col_ref(&x, b, h, w, cin, kside));
+        let mut rng = Pcg32::new(41);
+        for (b, g) in geometries() {
+            let x = noisy_map(&mut rng, g.in_len(b));
+            let want = BitMatrix::pack(g.rows(b), g.k(), &im2col_ref(&x, b, &g));
             for threads in [1, 2, 4] {
-                let got = im2col_packed(&x, b, h, w, cin, kside, &Pool::new(threads));
-                assert_eq!(got, want, "b{b} {h}x{w}x{cin} k{kside} t{threads}");
+                let got = im2col_packed(&x, b, g, &Pool::new(threads));
+                assert_eq!(got, want, "{g:?} b{b} t{threads}");
             }
         }
     }
@@ -457,17 +478,17 @@ mod tests {
     #[test]
     fn fused_padding_bits_stay_zero() {
         // tail bits beyond k must stay clear (GEMM exact-tail invariant)
-        let mut g = Pcg32::new(42);
-        for (b, h, w, cin, kside) in geometries() {
-            let k = kside * kside * cin;
+        let mut rng = Pcg32::new(42);
+        for (b, g) in geometries() {
+            let k = g.k();
             if k % 64 == 0 {
                 continue;
             }
-            let x = noisy_map(&mut g, b * h * w * cin);
-            let m = im2col_packed(&x, b, h, w, cin, kside, &Pool::serial());
+            let x = noisy_map(&mut rng, g.in_len(b));
+            let m = im2col_packed(&x, b, g, &Pool::serial());
             for r in 0..m.rows {
                 let last = m.row_words(r)[m.words_per_row - 1];
-                assert_eq!(last >> (k % 64), 0, "row {r}");
+                assert_eq!(last >> (k % 64), 0, "{g:?} row {r}");
             }
         }
     }
@@ -491,26 +512,27 @@ mod tests {
     #[test]
     fn xnor_with_pad_correction_equals_zero_pad_conv() {
         // fused packed conv + correction == f32 zero-padded conv of
-        // the signed activations (both sides exact integers)
-        let mut g = Pcg32::new(44);
-        for (b, h, w, cin, kside) in geometries() {
-            let k = kside * kside * cin;
-            let rows = b * h * w;
+        // the signed activations (both sides exact integers) — across
+        // SAME/VALID, stride 1/2/3
+        let mut rng = Pcg32::new(44);
+        for (b, g) in geometries() {
+            let k = g.k();
+            let rows = g.rows(b);
             let cout = 5;
-            let x = noisy_map(&mut g, b * h * w * cin);
-            let wf = g.normal_vec(k * cout);
+            let x = noisy_map(&mut rng, g.in_len(b));
+            let wf = rng.normal_vec(k * cout);
             // zero-pad reference: im2col of sign(x) (pads stay 0.0)
             // against sign(w), f32 GEMM
             let xs: Vec<f32> =
                 x.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
-            let cols = im2col_ref(&xs, b, h, w, cin, kside);
+            let cols = im2col_ref(&xs, b, &g);
             let ws: Vec<f32> =
                 wf.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
             let mut want = vec![0.0f32; rows * cout];
             gemm_f32(rows, k, cout, &cols, &ws, &mut want);
             // fused path: packed patches (+1 pads) × packed Ŵᵀ, then
             // the masked edge correction
-            let xhat = im2col_packed(&x, b, h, w, cin, kside, &Pool::serial());
+            let xhat = im2col_packed(&x, b, g, &Pool::serial());
             let mut wt_f = vec![0.0f32; cout * k];
             for kk in 0..k {
                 for j in 0..cout {
@@ -520,84 +542,61 @@ mod tests {
             let wt = BitMatrix::pack(cout, k, &wt_f);
             let mut got = vec![0.0f32; rows * cout];
             xnor_gemm_naive(&xhat, &wt, &mut got);
-            subtract_pad_contrib(&mut got, &wt, b, h, w, cin, kside);
-            assert_eq!(got, want, "b{b} {h}x{w}x{cin} k{kside}");
+            subtract_pad_contrib(&mut got, &wt, b, g);
+            assert_eq!(got, want, "{g:?} b{b}");
         }
     }
 
     #[test]
-    fn kside1_needs_no_correction() {
-        let mut g = Pcg32::new(45);
-        let (b, h, w, cin) = (2, 3, 3, 64);
-        let x = g.normal_vec(b * h * w * cin);
-        let wt = BitMatrix::pack(4, cin, &g.normal_vec(4 * cin));
-        let mut y = vec![1.5f32; b * h * w * 4];
-        let before = y.clone();
-        subtract_pad_contrib(&mut y, &wt, b, h, w, cin, 1);
-        assert_eq!(y, before);
-    }
-
-    /// f32 reference col2im (mirrors `naive::col2im`, local so the
-    /// substrate tests have no engine dependency).
-    fn col2im_ref(
-        dcols: &[f32],
-        b: usize,
-        h: usize,
-        w: usize,
-        cin: usize,
-        kside: usize,
-    ) -> Vec<f32> {
-        let k = kside * kside * cin;
-        let pad = (kside - 1) / 2;
-        let mut dx = vec![0.0f32; b * h * w * cin];
-        for bi in 0..b {
-            for y in 0..h {
-                for x0 in 0..w {
-                    let mut idx = ((bi * h + y) * w + x0) * k;
-                    for ky in 0..kside {
-                        let sy = y as isize + ky as isize - pad as isize;
-                        for kx in 0..kside {
-                            let sx = x0 as isize + kx as isize - pad as isize;
-                            if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
-                                let dst = ((bi * h + sy as usize) * w + sx as usize) * cin;
-                                for ci in 0..cin {
-                                    dx[dst + ci] += dcols[idx + ci];
-                                }
-                            }
-                            idx += cin;
-                        }
-                    }
-                }
-            }
+    fn unpadded_geometries_need_no_correction() {
+        let mut rng = Pcg32::new(45);
+        for g in [
+            ConvGeom::same1(3, 3, 64, 1),
+            ConvGeom::valid(6, 6, 5, 3, 1),
+            ConvGeom::valid(9, 9, 2, 3, 2),
+            ConvGeom::same(8, 8, 3, 1, 2),
+        ] {
+            let b = 2;
+            let cout = 4;
+            let wt = BitMatrix::pack(cout, g.k(), &rng.normal_vec(cout * g.k()));
+            let mut y = vec![1.5f32; g.rows(b) * cout];
+            let before = y.clone();
+            subtract_pad_contrib(&mut y, &wt, b, g);
+            assert_eq!(y, before, "{g:?}");
+            let dy = rng.normal_vec(g.rows(b) * cout);
+            let mut dw = vec![0.25f32; g.k() * cout];
+            let dbefore = dw.clone();
+            subtract_pad_dw_contrib(&mut dw, &dy, b, g, cout);
+            assert_eq!(dw, dbefore, "{g:?}");
         }
-        dx
     }
 
     #[test]
     fn tap_scatter_sums_to_col2im() {
         // Σ_taps scatter(panel_tap(c)) == col2im(c) (f32 reorder only)
-        let mut g = Pcg32::new(46);
-        for (b, h, w, cin, kside) in geometries() {
-            let k = kside * kside * cin;
-            let rows = b * h * w;
-            let c = g.normal_vec(rows * k);
-            let want = col2im_ref(&c, b, h, w, cin, kside);
-            let mut got = vec![0.0f32; b * h * w * cin];
-            let mut panel = vec![0.0f32; rows * cin];
-            for ky in 0..kside {
-                for kx in 0..kside {
-                    let tap = ky * kside + kx;
+        let mut rng = Pcg32::new(46);
+        for (b, g) in geometries() {
+            let k = g.k();
+            let rows = g.rows(b);
+            let c = rng.normal_vec(rows * k);
+            let want = col2im_ref(&c, b, &g);
+            let mut got = vec![0.0f32; g.in_len(b)];
+            let mut panel = vec![0.0f32; rows * g.cin];
+            for ky in 0..g.kside {
+                for kx in 0..g.kside {
+                    let tap = ky * g.kside + kx;
                     for r in 0..rows {
-                        panel[r * cin..(r + 1) * cin]
-                            .copy_from_slice(&c[r * k + tap * cin..r * k + (tap + 1) * cin]);
+                        panel[r * g.cin..(r + 1) * g.cin].copy_from_slice(
+                            &c[r * k + tap * g.cin..r * k + (tap + 1) * g.cin],
+                        );
                     }
-                    col2im_tap_scatter(&mut got, &panel, b, h, w, cin, kside, ky, kx);
+                    col2im_tap_scatter(&mut got, &panel, b, g, ky, kx);
                 }
             }
             for i in 0..want.len() {
                 assert!(
                     (got[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
-                    "b{b} {h}x{w}x{cin} k{kside} @ {i}: {} vs {}",
+                    "{g:?} b{b} @ {i}: {} vs {}",
                     got[i],
                     want[i]
                 );
@@ -610,38 +609,29 @@ mod tests {
         // conv_dx_streaming == col2im(∂Y · Ŵᵀ) within f32 reorder, on
         // every backend tier and thread count — and it is identical
         // across tiers (same kernels, bands never split a reduction)
-        let mut g = Pcg32::new(47);
-        for (b, h, w, cin, kside) in geometries() {
-            let k = kside * kside * cin;
-            let rows = b * h * w;
+        let mut rng = Pcg32::new(47);
+        for (b, g) in geometries() {
+            let k = g.k();
+            let rows = g.rows(b);
             let cout = 5;
-            let dy = g.normal_vec(rows * cout);
-            let wt = BitMatrix::pack(cout, k, &g.normal_vec(cout * k));
+            let dy = rng.normal_vec(rows * cout);
+            let wt = BitMatrix::pack(cout, k, &rng.normal_vec(cout * k));
             let wt_f = wt.unpack();
             let mut dcols = vec![0.0f32; rows * k];
             gemm_f32(rows, cout, k, &dy, &wt_f, &mut dcols);
-            let want = col2im_ref(&dcols, b, h, w, cin, kside);
-            let first = conv_dx_streaming(&dy, &wt, b, h, w, cin, kside, Backend::Blocked);
+            let want = col2im_ref(&dcols, b, &g);
+            let first = conv_dx_streaming(&dy, &wt, b, g, Backend::Blocked);
             for i in 0..want.len() {
                 assert!(
                     (first[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
-                    "b{b} {h}x{w}x{cin} k{kside} @ {i}: {} vs {}",
+                    "{g:?} b{b} @ {i}: {} vs {}",
                     first[i],
                     want[i]
                 );
             }
             for threads in [1, 2, 4] {
-                let got = conv_dx_streaming(
-                    &dy,
-                    &wt,
-                    b,
-                    h,
-                    w,
-                    cin,
-                    kside,
-                    Backend::Tiled { threads },
-                );
-                assert_eq!(got, first, "b{b} {h}x{w}x{cin} k{kside} t{threads}");
+                let got = conv_dx_streaming(&dy, &wt, b, g, Backend::Tiled { threads });
+                assert_eq!(got, first, "{g:?} b{b} t{threads}");
             }
         }
     }
@@ -649,19 +639,19 @@ mod tests {
     #[test]
     fn packed_dw_with_pad_correction_equals_zero_pad_reference() {
         // im2col_packed(x)ᵀ·∂Y (pads +1) + correction == zero-padded
-        // colsᵀ·∂Y — the standard engine's fused dW semantics
-        use crate::bitops::gemm::packed_at_gemm_f32;
-        let mut g = Pcg32::new(48);
-        for (b, h, w, cin, kside) in geometries() {
-            let k = kside * kside * cin;
-            let rows = b * h * w;
+        // colsᵀ·∂Y — the standard engine's fused dW semantics, across
+        // SAME/VALID and strides
+        let mut rng = Pcg32::new(48);
+        for (b, g) in geometries() {
+            let k = g.k();
+            let rows = g.rows(b);
             let cout = 4;
-            let x = noisy_map(&mut g, b * h * w * cin);
-            let dy = g.normal_vec(rows * cout);
+            let x = noisy_map(&mut rng, g.in_len(b));
+            let dy = rng.normal_vec(rows * cout);
             // reference: zero-pad im2col of sign(x), transposed GEMM
             let xs: Vec<f32> =
                 x.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
-            let cols = im2col_ref(&xs, b, h, w, cin, kside);
+            let cols = im2col_ref(&xs, b, &g);
             let mut colst = vec![0.0f32; k * rows];
             for r in 0..rows {
                 for kk in 0..k {
@@ -671,14 +661,14 @@ mod tests {
             let mut want = vec![0.0f32; k * cout];
             gemm_f32(k, rows, cout, &colst, &dy, &mut want);
             // fused: packed panel, packed-A GEMM, border correction
-            let xh = im2col_packed(&x, b, h, w, cin, kside, &Pool::serial());
+            let xh = im2col_packed(&x, b, g, &Pool::serial());
             let mut got = vec![0.0f32; k * cout];
             packed_at_gemm_f32(&xh, &dy, cout, &mut got, &Pool::serial());
-            subtract_pad_dw_contrib(&mut got, &dy, b, h, w, cin, cout, kside);
+            subtract_pad_dw_contrib(&mut got, &dy, b, g, cout);
             for i in 0..want.len() {
                 assert!(
                     (got[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
-                    "b{b} {h}x{w}x{cin} k{kside} @ {i}: {} vs {}",
+                    "{g:?} b{b} @ {i}: {} vs {}",
                     got[i],
                     want[i]
                 );
@@ -688,8 +678,9 @@ mod tests {
 
     #[test]
     #[should_panic(expected = "odd kernel side")]
-    fn even_kside_rejected_by_packed_im2col() {
-        let x = vec![0.0f32; 4 * 4 * 2];
-        im2col_packed(&x, 1, 4, 4, 2, 2, &Pool::serial());
+    fn even_kside_rejected_by_same_geometry() {
+        // SAME geometries (what the packed im2col consumes from the
+        // engines) still refuse even kernels at construction
+        ConvGeom::same1(4, 4, 2, 2);
     }
 }

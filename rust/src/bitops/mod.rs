@@ -24,7 +24,9 @@
 //! binarized weights once per step instead of once per matmul, and
 //! [`im2col_packed`] signs and packs conv patches straight into row
 //! panels so the binary conv path never materializes an f32 im2col
-//! buffer.
+//! buffer.  All conv kernels take a [`ConvGeom`] — stride, padding
+//! and independent input/output spatial dims — so stride-1 SAME,
+//! strided SAME and VALID convs run the same packed pipeline.
 //!
 //! The conv **backward** is fused the same way: [`conv_dx_streaming`]
 //! computes `col2im(∂Y·Ŵᵀ)` tap-by-tap (one rows×cin panel, never the
@@ -36,12 +38,14 @@
 pub mod backend;
 pub mod cache;
 pub mod gemm;
+pub mod geom;
 pub mod im2col;
 pub mod pool;
 pub mod simd;
 
 pub use backend::Backend;
 pub use cache::PackedWeightCache;
+pub use geom::ConvGeom;
 pub use gemm::{
     gemm_f32_at, packed_at_gemm_f32, xnor_gemm, xnor_gemm_naive, xnor_gemm_parallel,
     xnor_gemm_tiled,

@@ -336,14 +336,16 @@ impl ConvColsTransient {
 
 /// Model the binary conv path's transient im2col memory, pre-fusion
 /// (`fused = false`: f32 cols + packed panel) or fused
-/// (`fused = true`: packed panel only, zero f32 bytes).
+/// (`fused = true`: packed panel only, zero f32 bytes).  Rows are the
+/// conv's *output* positions (`h_out · w_out · batch` — what the
+/// fused packed pipeline allocates for strided/VALID geometry too).
 pub fn conv_cols_transient(graph: &Graph, batch: usize, fused: bool) -> ConvColsTransient {
     let mut best = ConvColsTransient::default();
     for n in &graph.nodes {
         if n.kind != LayerKind::Conv || n.first {
             continue;
         }
-        let (pos, k, _) = n.gemm;
+        let (pos, k, _) = n.gemm; // pos = h_out · w_out
         let rows = (pos * batch) as f64;
         let cand = ConvColsTransient {
             f32_bytes: if fused { 0.0 } else { rows * k as f64 * 4.0 },
@@ -400,12 +402,16 @@ pub fn conv_backward_transient(
         if n.kind != LayerKind::Conv || n.first {
             continue;
         }
-        let (pos, k, _) = n.gemm;
+        let (pos, k, _) = n.gemm; // pos = h_out · w_out
         let rows = (pos * batch) as f64;
-        // SAME stride-1 (what the naive engines run): in positions ==
-        // out positions, so in_elems/pos == Cin.  For strided convs
-        // this overestimates by stride² — a conservative panel bound.
-        let cin = (n.in_elems / pos) as f64;
+        // exact Cin from the recorded node geometry (the old
+        // in_elems/pos fallback overestimated strided convs by
+        // stride² — it priced input positions as if they were output
+        // positions); the streaming dX panel is rows × Cin
+        let cin = n
+            .geom
+            .map(|g| g.c_in as f64)
+            .unwrap_or((n.in_elems / pos) as f64);
         let cand = if fused {
             ConvBackwardTransient {
                 dcols_f32_bytes: 0.0,
@@ -675,6 +681,41 @@ mod tests {
                 assert_eq!(t.total(), 0.0, "{m}");
             }
         }
+    }
+
+    #[test]
+    fn strided_conv_transients_use_output_geometry() {
+        // resnete18's stage-entry convs are strided: rows must be
+        // h_out·w_out·batch and the dX panel must price the exact Cin
+        // (not in_elems/out_positions, which is stride²·Cin)
+        let g = lower(&get("resnete18").unwrap()).unwrap();
+        let entry = g
+            .nodes
+            .iter()
+            .find(|n| {
+                n.kind == LayerKind::Conv && n.geom.map(|gg| gg.stride) == Some(2) && !n.first
+            })
+            .unwrap();
+        let gg = entry.geom.unwrap();
+        assert_eq!(gg.h, 2 * gg.oh);
+        assert_eq!(entry.gemm.0, gg.oh * gg.ow);
+        assert_ne!(entry.in_elems / entry.gemm.0, gg.c_in); // the old bug
+        // peak layers across the model price consistently: rows·Cin·4
+        // for the panel, rows·⌈k/64⌉·8 for the packed panel — and the
+        // peak candidate must dominate a per-node recomputation
+        let t = conv_backward_transient(&g, 16, true);
+        assert_eq!(t.dcols_f32_bytes, 0.0);
+        let mut max_total = 0.0f64;
+        for n in &g.nodes {
+            if n.kind != LayerKind::Conv || n.first {
+                continue;
+            }
+            let (pos, k, _) = n.gemm;
+            let rows = (pos * 16) as f64;
+            let cin = n.geom.unwrap().c_in as f64;
+            max_total = max_total.max(rows * cin * 4.0 + rows * (k.div_ceil(64) * 8) as f64);
+        }
+        assert_eq!(t.total(), max_total);
     }
 
     #[test]

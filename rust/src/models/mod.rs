@@ -98,6 +98,25 @@ pub struct ModelSpec {
     pub layers: Vec<LayerSpec>,
 }
 
+/// Explicit spatial geometry of a Conv / MaxPool / GlobalPool node,
+/// recorded at lowering time so downstream consumers (the naive
+/// engines' `Plan`, the memory model) never re-infer dims by isqrt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeGeom {
+    /// Input spatial dims and channels.
+    pub h: usize,
+    pub w: usize,
+    pub c_in: usize,
+    /// Output spatial dims (GlobalPool: 1×1).
+    pub oh: usize,
+    pub ow: usize,
+    /// Kernel side (MaxPool: 2; GlobalPool: 0 — the whole map).
+    pub kside: usize,
+    /// Spatial stride.
+    pub stride: usize,
+    pub pad: Padding,
+}
+
 /// One lowered compute node — the unit the memory/energy models and
 /// the naive engines operate on.
 #[derive(Clone, Debug)]
@@ -120,6 +139,15 @@ pub struct Node {
     pub first: bool,
     /// True if wrapped in a high-precision residual skip.
     pub in_residual: bool,
+    /// Spatial geometry (None for dense/flatten nodes).
+    pub geom: Option<NodeGeom>,
+    /// Opens a residual block: the f32 skip is saved from this node's
+    /// input (set on the block's first conv).
+    pub skip_open: bool,
+    /// Closes a residual block: the (downsampled) skip is added after
+    /// this node's batch norm (set on the block's last conv; for
+    /// Bi-Real single-conv blocks the same node opens and closes).
+    pub skip_close: bool,
 }
 
 impl Node {
@@ -228,14 +256,20 @@ pub fn lower(spec: &ModelSpec) -> Result<Graph> {
         ch: &mut usize,
         out: usize,
         in_residual: bool,
+        skip: (bool, bool),
     ) -> Result<()> {
         let (h, w) = spatial.ok_or_else(|| anyhow::anyhow!("conv without spatial dims"))?;
+        if l.kernel == 0 || l.stride == 0 {
+            bail!("conv kernel/stride must be positive (k={}, s={})", l.kernel, l.stride);
+        }
         let (oh, ow) = match l.pad {
             Padding::Same => (h.div_ceil(l.stride), w.div_ceil(l.stride)),
-            Padding::Valid => (
-                (h - l.kernel) / l.stride + 1,
-                (w - l.kernel) / l.stride + 1,
-            ),
+            Padding::Valid => {
+                if l.kernel > h || l.kernel > w {
+                    bail!("VALID conv kernel {} exceeds input {h}x{w}", l.kernel);
+                }
+                ((h - l.kernel) / l.stride + 1, (w - l.kernel) / l.stride + 1)
+            }
         };
         let k = l.kernel * l.kernel * *ch;
         nodes.push(Node {
@@ -248,6 +282,18 @@ pub fn lower(spec: &ModelSpec) -> Result<Graph> {
             gemm: (oh * ow, k, out),
             first: l.first,
             in_residual,
+            geom: Some(NodeGeom {
+                h,
+                w,
+                c_in: *ch,
+                oh,
+                ow,
+                kside: l.kernel,
+                stride: l.stride,
+                pad: l.pad,
+            }),
+            skip_open: skip.0,
+            skip_close: skip.1,
         });
         *spatial = Some((oh, ow));
         *ch = out;
@@ -273,21 +319,36 @@ pub fn lower(spec: &ModelSpec) -> Result<Graph> {
                     gemm: (1, in_feat, l.out),
                     first: l.first,
                     in_residual: false,
+                    geom: None,
+                    skip_open: false,
+                    skip_close: false,
                 });
                 feat = l.out;
             }
             LayerKind::Conv => {
-                push_conv(&mut nodes, l, &mut spatial, &mut ch, l.out, false)?;
+                push_conv(&mut nodes, l, &mut spatial, &mut ch, l.out, false, (false, false))?;
             }
             LayerKind::ResidualMarker => {
-                // 1 conv (Bi-Real) or 2 convs (ResNetE) inside a skip
+                // 1 conv (Bi-Real) or 2 convs (ResNetE) inside a skip:
+                // the first conv opens the block (its input is the
+                // saved f32 skip), the last closes it (the skip is
+                // added after its batch norm)
                 let mut inner = *l;
                 inner.kind = LayerKind::Conv;
-                push_conv(&mut nodes, &inner, &mut spatial, &mut ch, l.out, true)?;
+                let close = l.bireal; // single-conv block opens+closes
+                push_conv(&mut nodes, &inner, &mut spatial, &mut ch, l.out, true, (true, close))?;
                 if !l.bireal {
                     let mut second = inner;
                     second.stride = 1;
-                    push_conv(&mut nodes, &second, &mut spatial, &mut ch, l.out, true)?;
+                    push_conv(
+                        &mut nodes,
+                        &second,
+                        &mut spatial,
+                        &mut ch,
+                        l.out,
+                        true,
+                        (false, true),
+                    )?;
                 }
             }
             LayerKind::MaxPool => {
@@ -302,6 +363,18 @@ pub fn lower(spec: &ModelSpec) -> Result<Graph> {
                     gemm: (0, 0, 0),
                     first: false,
                     in_residual: false,
+                    geom: Some(NodeGeom {
+                        h,
+                        w,
+                        c_in: ch,
+                        oh: h / 2,
+                        ow: w / 2,
+                        kside: 2,
+                        stride: 2,
+                        pad: Padding::Valid,
+                    }),
+                    skip_open: false,
+                    skip_close: false,
                 });
                 spatial = Some((h / 2, w / 2));
             }
@@ -317,6 +390,18 @@ pub fn lower(spec: &ModelSpec) -> Result<Graph> {
                     gemm: (0, 0, 0),
                     first: false,
                     in_residual: false,
+                    geom: Some(NodeGeom {
+                        h,
+                        w,
+                        c_in: ch,
+                        oh: 1,
+                        ow: 1,
+                        kside: 0,
+                        stride: 1,
+                        pad: Padding::Valid,
+                    }),
+                    skip_open: false,
+                    skip_close: false,
                 });
                 spatial = None;
                 feat = ch;
@@ -335,6 +420,9 @@ pub fn lower(spec: &ModelSpec) -> Result<Graph> {
                     gemm: (0, 0, 0),
                     first: false,
                     in_residual: false,
+                    geom: None,
+                    skip_open: false,
+                    skip_close: false,
                 });
             }
         }
@@ -445,6 +533,58 @@ mod tests {
         let big = lower(&zoo::get("binarynet").unwrap()).unwrap().macs();
         assert!(small > 0);
         assert!(big > small * 100);
+    }
+
+    #[test]
+    fn lowering_records_geometry_and_skip_markers() {
+        // resnete18: stem k7/s2 SAME (224 -> 112), residual convs
+        // carry open/close markers in pairs
+        let g = lower(&zoo::get("resnete18").unwrap()).unwrap();
+        let stem = g.nodes.iter().find(|n| n.kind == LayerKind::Conv).unwrap();
+        let ng = stem.geom.unwrap();
+        assert_eq!((ng.h, ng.w, ng.c_in, ng.oh, ng.ow), (224, 224, 3, 112, 112));
+        assert_eq!((ng.kside, ng.stride, ng.pad), (7, 2, Padding::Same));
+        assert!(!stem.skip_open && !stem.skip_close);
+        let opens = g.nodes.iter().filter(|n| n.skip_open).count();
+        let closes = g.nodes.iter().filter(|n| n.skip_close).count();
+        assert_eq!((opens, closes), (8, 8)); // 2-conv blocks: 8 skips
+        // the stage-entry conv is strided and opens its block
+        let entry = g
+            .nodes
+            .iter()
+            .find(|n| n.skip_open && n.geom.unwrap().stride == 2)
+            .unwrap();
+        let eg = entry.geom.unwrap();
+        assert_eq!((eg.h, eg.oh), (56, 28));
+        // Bi-Real: every residual conv both opens and closes
+        let g = lower(&zoo::get("bireal18").unwrap()).unwrap();
+        let both = g.nodes.iter().filter(|n| n.skip_open && n.skip_close).count();
+        assert_eq!(both, 16);
+        // VALID conv geometry (FINN CNV)
+        let g = lower(&zoo::get("cnv").unwrap()).unwrap();
+        let c0 = g.nodes.iter().find(|n| n.kind == LayerKind::Conv).unwrap();
+        let cg = c0.geom.unwrap();
+        assert_eq!((cg.h, cg.oh, cg.pad), (32, 30, Padding::Valid));
+        // pool nodes record explicit output dims
+        let p = g.nodes.iter().find(|n| n.kind == LayerKind::MaxPool).unwrap();
+        let pg = p.geom.unwrap();
+        assert_eq!((pg.h, pg.oh), (28, 14));
+    }
+
+    #[test]
+    fn valid_conv_kernel_larger_than_input_rejected() {
+        let spec = ModelSpec {
+            name: "tiny_valid".into(),
+            input_shape: vec![2, 2, 3],
+            classes: 10,
+            layers: vec![
+                LayerSpec::conv(4, 3).valid().as_first(),
+                LayerSpec::flatten(),
+                LayerSpec::dense(10),
+            ],
+        };
+        let err = lower(&spec).unwrap_err().to_string();
+        assert!(err.contains("exceeds input"), "{err}");
     }
 
     #[test]

@@ -29,14 +29,26 @@
 //! [`crate::bitops::PackedWeightCache`], packing at most once per
 //! step (invalidated on weight update).
 //!
+//! Since PR 4 the engines execute a *general* layer graph: strided
+//! and VALID convs (explicit [`crate::bitops::ConvGeom`] threaded
+//! through the whole packed pipeline), validated 2×2 max-pools,
+//! global average pooling, and residual blocks (ResNetE two-conv and
+//! Bi-Real single-conv skips with the strided 1×1-avg-pool +
+//! channel-duplication downsample shortcut).  The layer-graph control
+//! flow is shared between the engines (`ops`); each engine implements
+//! only its per-matmul-layer storage/precision policy.  Every zoo
+//! model — including `cnv` and the full/mini residual nets — builds a
+//! plan and takes gradient steps on all `Accel` tiers.
+//!
 //! Both engines are cross-validated against the AOT HLO step (same
 //! algorithm, same numerics class) in rust/tests/.
 
+mod ops;
 mod plan;
 mod proposed;
 mod standard;
 
-pub use plan::{LayerPlan, Plan};
+pub use plan::{LayerPlan, Plan, SkipGeom};
 pub use proposed::ProposedTrainer;
 pub use standard::StandardTrainer;
 // the f32 im2col/col2im/transpose references, public for the conv

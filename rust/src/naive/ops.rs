@@ -1,0 +1,345 @@
+//! Shared layer-graph execution core for the two naive engines.
+//!
+//! Both trainers walk the same [`super::plan::Plan`]; what differs is
+//! *per-matmul-layer* behaviour (what is retained and at which
+//! precision, which BN variant runs, how ∂W is stored) and the
+//! inter-layer gradient carrier (f32 for the standard engine, f16 for
+//! the proposed one).  Everything else — the layer-graph control
+//! flow, max-pool routing, global average pooling, and the residual
+//! skip handling (save at block entry, parameter-free strided
+//! 1×1-avg-pool + channel-duplication downsample, add after the
+//! closing conv's BN, and the mirrored gradient bookkeeping) — is
+//! written once here, over the [`EngineOps`] trait.
+//!
+//! Residual skips are f32 in both engines: the high-precision skip
+//! path is the accuracy enhancement the paper incorporates (Sec. 2),
+//! and `memmodel` prices it as an f32 transient
+//! (`Graph::residual_skip_elems`).
+
+use anyhow::{bail, Result};
+
+use super::plan::{LayerPlan, SkipGeom};
+use crate::bitops::simd;
+
+/// Engine-specific per-layer ops the shared driver composes.
+///
+/// `Grad` is the inter-layer gradient carrier (`Vec<f32>` — identity
+/// conversions — for the standard engine; `F16Vec` for the proposed
+/// engine, so gradients crossing layer boundaries really are held in
+/// f16 exactly as before the refactor: the driver converts at each
+/// boundary and a f16→f32→f16 round-trip is lossless).
+pub(crate) trait EngineOps {
+    type Grad;
+
+    fn batch(&self) -> usize;
+    fn grad_to_f32(g: Self::Grad) -> Vec<f32>;
+    fn grad_from_f32(v: Vec<f32>) -> Self::Grad;
+
+    /// One matmul layer (dense or conv) forward + batch norm;
+    /// retains whatever this engine's backward needs when `retain`.
+    fn matmul_forward(
+        &mut self,
+        cur: Vec<f32>,
+        wi: usize,
+        layer: &LayerPlan,
+        retain: bool,
+    ) -> Result<Vec<f32>>;
+
+    /// One matmul layer backward (BN backward, ∂W/∂β production or
+    /// application, ∂X); consumes the f32 gradient w.r.t. this
+    /// layer's BN output, returns the f32 gradient w.r.t. its input
+    /// (empty for the first layer).
+    fn matmul_backward(
+        &mut self,
+        dnext: Vec<f32>,
+        wi: usize,
+        layer: &LayerPlan,
+        lr: f32,
+    ) -> Result<Vec<f32>>;
+
+    /// 2×2 max-pool forward; the engine stores its own mask format
+    /// (pushed in layer order — the backward pops in reverse).
+    fn pool_forward(&mut self, cur: Vec<f32>, h: usize, w: usize, c: usize, retain: bool)
+        -> Vec<f32>;
+    fn pool_backward(&mut self, dnext: Vec<f32>, h: usize, w: usize, c: usize) -> Vec<f32>;
+}
+
+/// Forward through the whole layer graph; returns logits.  `retain`
+/// disables residual storage for eval (skip buffers are still
+/// consumed — they are part of the function value, not of the
+/// retained state).
+pub(crate) fn forward_plan<E: EngineOps>(
+    e: &mut E,
+    layers: &[LayerPlan],
+    x: &[f32],
+    retain: bool,
+) -> Result<Vec<f32>> {
+    let b = e.batch();
+    let mut cur = x.to_vec();
+    let mut wi = 0usize;
+    let mut skips: Vec<Vec<f32>> = Vec::new();
+    for layer in layers {
+        match layer {
+            LayerPlan::Dense { .. } | LayerPlan::Conv { .. } => {
+                cur = e.matmul_forward(cur, wi, layer, retain)?;
+                wi += 1;
+            }
+            LayerPlan::MaxPool { h, w, c, .. } => {
+                cur = e.pool_forward(cur, *h, *w, *c, retain);
+            }
+            LayerPlan::GlobalPool { h, w, c } => {
+                cur = global_pool_forward(&cur, b, *h, *w, *c);
+            }
+            LayerPlan::Residual { save: true, .. } => skips.push(cur.clone()),
+            LayerPlan::Residual { save: false, skip } => {
+                let s = skips.pop().ok_or_else(|| {
+                    anyhow::anyhow!("residual add without a saved skip (plan bug)")
+                })?;
+                skip_add(&mut cur, &s, b, skip);
+            }
+            LayerPlan::Flatten => { /* layout already flat NHWC */ }
+        }
+    }
+    if !skips.is_empty() {
+        bail!("unconsumed residual skip (plan bug)");
+    }
+    Ok(cur)
+}
+
+/// Backward through the whole layer graph, consuming ∂logits.
+pub(crate) fn backward_plan<E: EngineOps>(
+    e: &mut E,
+    layers: &[LayerPlan],
+    dlogits: Vec<f32>,
+    lr: f32,
+) -> Result<()> {
+    let b = e.batch();
+    let mut wi = layers.iter().filter(|l| l.weight_len() > 0).count();
+    let mut dcur = E::grad_from_f32(dlogits);
+    // gradients of pending skip branches: recorded at the block
+    // output (Residual close, seen first in reverse), merged into the
+    // main gradient at the block input (Residual save)
+    let mut skip_grads: Vec<Vec<f32>> = Vec::new();
+    for layer in layers.iter().rev() {
+        match layer {
+            LayerPlan::Dense { .. } | LayerPlan::Conv { .. } => {
+                wi -= 1;
+                let d = E::grad_to_f32(dcur);
+                let dx = e.matmul_backward(d, wi, layer, lr)?;
+                dcur = E::grad_from_f32(dx);
+            }
+            LayerPlan::MaxPool { h, w, c, .. } => {
+                let d = E::grad_to_f32(dcur);
+                dcur = E::grad_from_f32(e.pool_backward(d, *h, *w, *c));
+            }
+            LayerPlan::GlobalPool { h, w, c } => {
+                let d = E::grad_to_f32(dcur);
+                dcur = E::grad_from_f32(global_pool_backward(&d, b, *h, *w, *c));
+            }
+            LayerPlan::Residual { save: false, skip } => {
+                // d(out)/d(skip) is the downsample adjoint; the block
+                // path receives the gradient unchanged (the add is an
+                // identity towards the closing conv's BN output)
+                let d = E::grad_to_f32(dcur);
+                skip_grads.push(skip_grad(&d, b, skip));
+                dcur = E::grad_from_f32(d);
+            }
+            LayerPlan::Residual { save: true, .. } => {
+                let g = skip_grads.pop().ok_or_else(|| {
+                    anyhow::anyhow!("residual save without a recorded skip grad (plan bug)")
+                })?;
+                let mut d = E::grad_to_f32(dcur);
+                simd::add_assign_f32(&mut d, &g);
+                dcur = E::grad_from_f32(d);
+            }
+            LayerPlan::Flatten => {}
+        }
+    }
+    if !skip_grads.is_empty() {
+        bail!("unconsumed residual skip grad (plan bug)");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------ engine-independent ops
+
+/// Global average pool: NHWC (b, h, w, c) → (b, c).
+pub(crate) fn global_pool_forward(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let hw = h * w;
+    debug_assert_eq!(x.len(), b * hw * c);
+    let inv = 1.0 / hw as f32;
+    let mut out = vec![0.0f32; b * c];
+    for bi in 0..b {
+        let orow = &mut out[bi * c..(bi + 1) * c];
+        for p in 0..hw {
+            let xrow = &x[(bi * hw + p) * c..][..c];
+            simd::add_assign_f32(orow, xrow);
+        }
+        for v in orow.iter_mut() {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+/// Global average pool backward: every position receives ∂y/(h·w).
+pub(crate) fn global_pool_backward(
+    dy: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) -> Vec<f32> {
+    let hw = h * w;
+    debug_assert_eq!(dy.len(), b * c);
+    let inv = 1.0 / hw as f32;
+    let mut dx = vec![0.0f32; b * hw * c];
+    for bi in 0..b {
+        let dyr: Vec<f32> = dy[bi * c..(bi + 1) * c].iter().map(|v| v * inv).collect();
+        for p in 0..hw {
+            dx[(bi * hw + p) * c..][..c].copy_from_slice(&dyr);
+        }
+    }
+    dx
+}
+
+/// Add the downsampled skip into the block-output map in place:
+/// `cur[bi, oy, ox, co] += skip[bi, oy·stride, ox·stride, co mod c]`
+/// — strided 1×1 average pool (pure subsample) + channel duplication.
+pub(crate) fn skip_add(cur: &mut [f32], skip: &[f32], b: usize, g: &SkipGeom) {
+    debug_assert_eq!(cur.len(), b * g.oh * g.ow * g.co);
+    debug_assert_eq!(skip.len(), b * g.h * g.w * g.c);
+    if g.stride == 1 && g.c == g.co {
+        simd::add_assign_f32(cur, skip);
+        return;
+    }
+    let s = g.stride;
+    for bi in 0..b {
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let src = ((bi * g.h + oy * s) * g.w + ox * s) * g.c;
+                let dst = ((bi * g.oh + oy) * g.ow + ox) * g.co;
+                if g.c == g.co {
+                    simd::add_assign_f32(&mut cur[dst..dst + g.co], &skip[src..src + g.c]);
+                } else {
+                    for co in 0..g.co {
+                        cur[dst + co] += skip[src + co % g.c];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Adjoint of the downsample shortcut: gradient w.r.t. the saved
+/// skip.  Sampled positions accumulate the sums of their duplicated
+/// channels; unsampled positions (stride > 1) get zero.
+pub(crate) fn skip_grad(d: &[f32], b: usize, g: &SkipGeom) -> Vec<f32> {
+    debug_assert_eq!(d.len(), b * g.oh * g.ow * g.co);
+    if g.stride == 1 && g.c == g.co {
+        return d.to_vec();
+    }
+    let s = g.stride;
+    let mut ds = vec![0.0f32; b * g.h * g.w * g.c];
+    for bi in 0..b {
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let dst = ((bi * g.h + oy * s) * g.w + ox * s) * g.c;
+                let src = ((bi * g.oh + oy) * g.ow + ox) * g.co;
+                if g.c == g.co {
+                    simd::add_assign_f32(&mut ds[dst..dst + g.c], &d[src..src + g.co]);
+                } else {
+                    for co in 0..g.co {
+                        ds[dst + co % g.c] += d[src + co];
+                    }
+                }
+            }
+        }
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn global_pool_forward_means() {
+        let (b, h, w, c) = (2, 2, 3, 2);
+        let mut g = Pcg32::new(1);
+        let x = g.normal_vec(b * h * w * c);
+        let out = global_pool_forward(&x, b, h, w, c);
+        for bi in 0..b {
+            for ch in 0..c {
+                let want: f32 = (0..h * w)
+                    .map(|p| x[(bi * h * w + p) * c + ch])
+                    .sum::<f32>()
+                    / (h * w) as f32;
+                assert!((out[bi * c + ch] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn global_pool_adjoint() {
+        // <gp(x), dy> == <x, gp_bwd(dy)>
+        let (b, h, w, c) = (2, 3, 3, 4);
+        let mut g = Pcg32::new(2);
+        let x = g.normal_vec(b * h * w * c);
+        let dy = g.normal_vec(b * c);
+        let lhs: f64 = global_pool_forward(&x, b, h, w, c)
+            .iter()
+            .zip(&dy)
+            .map(|(a, v)| *a as f64 * *v as f64)
+            .sum();
+        let rhs: f64 = x
+            .iter()
+            .zip(&global_pool_backward(&dy, b, h, w, c))
+            .map(|(a, v)| *a as f64 * *v as f64)
+            .sum();
+        assert!((lhs - rhs).abs() < 1e-4, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn skip_downsample_adjoint() {
+        // <D(skip), d> == <skip, Dᵀ(d)> for identity, channel-doubling
+        // and strided shortcut geometries
+        let mut rng = Pcg32::new(3);
+        for g in [
+            SkipGeom { h: 4, w: 4, c: 3, oh: 4, ow: 4, co: 3, stride: 1 },
+            SkipGeom { h: 4, w: 4, c: 3, oh: 4, ow: 4, co: 6, stride: 1 },
+            SkipGeom { h: 6, w: 6, c: 2, oh: 3, ow: 3, co: 4, stride: 2 },
+            SkipGeom { h: 5, w: 5, c: 2, oh: 3, ow: 3, co: 2, stride: 2 },
+            SkipGeom { h: 4, w: 4, c: 1, oh: 2, ow: 2, co: 3, stride: 2 },
+        ] {
+            let b = 2;
+            let skip = rng.normal_vec(b * g.h * g.w * g.c);
+            let d = rng.normal_vec(b * g.oh * g.ow * g.co);
+            // D(skip) via skip_add into a zero map
+            let mut dsk = vec![0.0f32; d.len()];
+            skip_add(&mut dsk, &skip, b, &g);
+            let lhs: f64 = dsk.iter().zip(&d).map(|(a, v)| *a as f64 * *v as f64).sum();
+            let rhs: f64 = skip
+                .iter()
+                .zip(&skip_grad(&d, b, &g))
+                .map(|(a, v)| *a as f64 * *v as f64)
+                .sum();
+            assert!((lhs - rhs).abs() < 1e-3, "{g:?}: {lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn skip_add_duplicates_channels() {
+        // co = 2c: both copies read the same source channel
+        let g = SkipGeom { h: 2, w: 2, c: 2, oh: 1, ow: 1, co: 4, stride: 2 };
+        let skip = vec![1.0, 2.0, 10.0, 20.0, 100.0, 200.0, 1000.0, 2000.0];
+        let mut cur = vec![0.0f32; 4];
+        skip_add(&mut cur, &skip, 1, &g);
+        // subsample picks (0,0) -> channels [1, 2], duplicated
+        assert_eq!(cur, vec![1.0, 2.0, 1.0, 2.0]);
+        let ds = skip_grad(&[1.0, 2.0, 4.0, 8.0], 1, &g);
+        assert_eq!(&ds[..2], &[5.0, 10.0]); // 1+4, 2+8
+        assert!(ds[2..].iter().all(|&v| v == 0.0));
+    }
+}

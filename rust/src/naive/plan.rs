@@ -1,11 +1,32 @@
-//! Execution plan: a [`Graph`] specialized to concrete conv geometry
-//! for the naive engines (stride-1 SAME convs + 2×2 max-pool + dense,
-//! matching the models the paper's prototype ran: MLP and the
-//! BinaryNet/CNV family).
+//! Execution plan: a [`Graph`] specialized to concrete layer geometry
+//! for the naive engines.  Since PR 4 this is a *general* layer-graph
+//! plan: strided and VALID convs (explicit [`ConvGeom`] derived from
+//! the lowered nodes, never re-inferred by isqrt), validated 2×2
+//! max-pools, global average pools, and residual skip markers — every
+//! zoo model, including the CNV family and the full/mini residual
+//! nets, builds a plan and trains.
 
 use anyhow::{bail, Result};
 
-use crate::models::{Graph, LayerKind, Node};
+use crate::bitops::ConvGeom;
+use crate::models::{Graph, LayerKind, Padding};
+
+/// Residual skip geometry: the saved block-input map (`h × w × c`)
+/// and the block-output map (`oh × ow × co`) it is added to.  The
+/// downsample shortcut is parameter-free: a strided 1×1 average pool
+/// (spatial subsample at `stride`) plus channel duplication (output
+/// channel `co` reads input channel `co mod c` — the ResNetE
+/// concat-doubling expansion; identity when `co == c`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SkipGeom {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub co: usize,
+    pub stride: usize,
+}
 
 #[derive(Clone, Debug)]
 pub enum LayerPlan {
@@ -14,19 +35,38 @@ pub enum LayerPlan {
         n: usize,
         first: bool,
     },
-    /// 3×3 (or kxk) stride-1 SAME conv as im2col GEMM geometry.
+    /// Conv as im2col GEMM geometry — any stride, SAME or VALID,
+    /// independent input/output spatial dims (see [`ConvGeom`]).
     Conv {
-        h: usize,
-        w: usize,
-        cin: usize,
+        g: ConvGeom,
         cout: usize,
-        kside: usize,
         first: bool,
     },
+    /// 2×2 stride-2 max-pool with *validated* geometry: odd input
+    /// dims are rejected at plan build (the old silent `(h/2, w/2)`
+    /// floor dropped the last row/column), and the output dims are
+    /// stored explicitly.
     MaxPool {
         h: usize,
         w: usize,
         c: usize,
+        oh: usize,
+        ow: usize,
+    },
+    /// Global average pool: `h × w × c` → `c` per sample.
+    GlobalPool {
+        h: usize,
+        w: usize,
+        c: usize,
+    },
+    /// Residual block boundary.  `save = true` stores the incoming
+    /// f32 map as the skip (emitted just before the block's first
+    /// conv); `save = false` adds the downsampled skip to the block
+    /// output (emitted just after the closing conv's batch norm).
+    /// Both carry the same [`SkipGeom`].
+    Residual {
+        save: bool,
+        skip: SkipGeom,
     },
     Flatten,
 }
@@ -35,7 +75,7 @@ impl LayerPlan {
     pub fn weight_len(&self) -> usize {
         match self {
             LayerPlan::Dense { k, n, .. } => k * n,
-            LayerPlan::Conv { cin, cout, kside, .. } => kside * kside * cin * cout,
+            LayerPlan::Conv { g, cout, .. } => g.k() * cout,
             _ => 0,
         }
     }
@@ -51,7 +91,7 @@ impl LayerPlan {
     pub fn fan_in(&self) -> usize {
         match self {
             LayerPlan::Dense { k, .. } => *k,
-            LayerPlan::Conv { cin, kside, .. } => kside * kside * cin,
+            LayerPlan::Conv { g, .. } => g.k(),
             _ => 0,
         }
     }
@@ -60,9 +100,10 @@ impl LayerPlan {
     pub fn out_elems(&self) -> usize {
         match self {
             LayerPlan::Dense { n, .. } => *n,
-            LayerPlan::Conv { h, w, cout, .. } => h * w * cout,
-            LayerPlan::MaxPool { h, w, c } => (h / 2) * (w / 2) * c,
-            LayerPlan::Flatten => 0,
+            LayerPlan::Conv { g, cout, .. } => g.oh * g.ow * cout,
+            LayerPlan::MaxPool { oh, ow, c, .. } => oh * ow * c,
+            LayerPlan::GlobalPool { c, .. } => *c,
+            LayerPlan::Residual { .. } | LayerPlan::Flatten => 0,
         }
     }
 
@@ -70,9 +111,10 @@ impl LayerPlan {
     pub fn in_elems(&self) -> usize {
         match self {
             LayerPlan::Dense { k, .. } => *k,
-            LayerPlan::Conv { h, w, cin, .. } => h * w * cin,
-            LayerPlan::MaxPool { h, w, c } => h * w * c,
-            LayerPlan::Flatten => 0,
+            LayerPlan::Conv { g, .. } => g.h * g.w * g.cin,
+            LayerPlan::MaxPool { h, w, c, .. } => h * w * c,
+            LayerPlan::GlobalPool { h, w, c } => h * w * c,
+            LayerPlan::Residual { .. } | LayerPlan::Flatten => 0,
         }
     }
 }
@@ -86,12 +128,24 @@ pub struct Plan {
 }
 
 impl Plan {
-    /// Build from a lowered graph.  Residual models are not supported
-    /// by the naive engines (the paper's prototype ran MLP and
-    /// BinaryNet only); use the HLO path for those.
+    /// Number of weight-carrying (matmul) layers.
+    pub fn weight_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.weight_len() > 0).count()
+    }
+
+    /// Build from a lowered graph, validating every geometry the
+    /// engines rely on: SAME convs need odd kernels, VALID kernels
+    /// must fit the map, max-pool inputs must be even, residual skip
+    /// shapes must admit the parameter-free downsample shortcut.
     pub fn from_graph(graph: &Graph) -> Result<Plan> {
         let mut layers = Vec::new();
-        // reconstruct spatial dims by walking nodes
+        // (index of the pending Residual-save entry, h, w, c,
+        // accumulated block stride).  The shortcut subsample stride is
+        // the *product* of the block convs' strides — recorded, never
+        // re-inferred from the spatial ratio (which can pick a
+        // different subsample grid than the conv path for stride ≥ 3
+        // on small odd maps).
+        let mut open: Vec<(usize, usize, usize, usize, usize)> = Vec::new();
         for node in &graph.nodes {
             match node.kind {
                 LayerKind::Dense => layers.push(LayerPlan::Dense {
@@ -100,48 +154,127 @@ impl Plan {
                     first: node.first,
                 }),
                 LayerKind::Conv => {
-                    if node.in_residual {
-                        bail!(
-                            "naive engines do not support residual models \
-                             ({}); use the HLO runtime",
-                            graph.name
-                        );
-                    }
-                    // SAME stride-1: out positions == in positions
-                    let (pos, k, cout) = node.gemm;
-                    if node.out_elems != pos * cout || pos * k / k != pos {
-                        bail!("non-SAME conv in '{}' unsupported by naive engine", graph.name);
-                    }
-                    let (h, w) = square_of(pos)?;
-                    let cin = node.in_elems / (h * w);
-                    if cin * h * w != node.in_elems {
+                    let ng = node
+                        .geom
+                        .ok_or_else(|| anyhow::anyhow!("conv node without geometry"))?;
+                    let g = match ng.pad {
+                        Padding::Same => {
+                            // pad = (kside-1)/2 is only a symmetric SAME
+                            // padding for odd kernels — an even kside
+                            // would silently under-pad one edge and
+                            // produce wrong geometry in every
+                            // im2col/col2im
+                            if ng.kside == 0 || ng.kside % 2 == 0 {
+                                bail!(
+                                    "conv kernel side {} in '{}' unsupported: SAME \
+                                     geometry requires an odd kernel (pad = (kside-1)/2 \
+                                     would be asymmetric)",
+                                    ng.kside,
+                                    graph.name
+                                );
+                            }
+                            ConvGeom::same(ng.h, ng.w, ng.c_in, ng.kside, ng.stride)
+                        }
+                        Padding::Valid => {
+                            ConvGeom::valid(ng.h, ng.w, ng.c_in, ng.kside, ng.stride)
+                        }
+                    };
+                    if (g.oh, g.ow) != (ng.oh, ng.ow)
+                        || node.out_elems != g.oh * g.ow * node.channels
+                    {
                         bail!("conv geometry mismatch in '{}'", graph.name);
                     }
-                    let kside = isqrt(k / cin)?;
-                    // pad = (kside-1)/2 is only a symmetric SAME
-                    // padding for odd kernels — an even kside would
-                    // silently under-pad the right/bottom edge and
-                    // produce wrong geometry in every im2col/col2im
-                    if kside == 0 || kside % 2 == 0 {
+                    if node.skip_open {
+                        if !open.is_empty() {
+                            // stride compounding below assumes strictly
+                            // sequential blocks (what lowering emits);
+                            // nesting would silently mis-stride the
+                            // outer shortcut
+                            bail!("nested residual blocks in '{}' unsupported", graph.name);
+                        }
+                        open.push((layers.len(), ng.h, ng.w, ng.c_in, 1));
+                        // geometry patched when the block closes
+                        layers.push(LayerPlan::Residual {
+                            save: true,
+                            skip: SkipGeom {
+                                h: ng.h,
+                                w: ng.w,
+                                c: ng.c_in,
+                                oh: ng.h,
+                                ow: ng.w,
+                                co: ng.c_in,
+                                stride: 1,
+                            },
+                        });
+                    }
+                    if let Some(top) = open.last_mut() {
+                        // this conv executes inside the open block:
+                        // its stride compounds into the shortcut's
+                        top.4 *= ng.stride;
+                    }
+                    layers.push(LayerPlan::Conv { g, cout: node.channels, first: node.first });
+                    if node.skip_close {
+                        let (si, h, w, c, stride) = open.pop().ok_or_else(|| {
+                            anyhow::anyhow!("residual close without open in '{}'", graph.name)
+                        })?;
+                        let (oh, ow, co) = (ng.oh, ng.ow, node.channels);
+                        if oh == 0
+                            || h.div_ceil(stride) != oh
+                            || w.div_ceil(stride) != ow
+                            || (oh - 1) * stride >= h
+                            || (ow - 1) * stride >= w
+                            || co == 0
+                            || co % c != 0
+                        {
+                            bail!(
+                                "residual skip {h}x{w}x{c} -> {oh}x{ow}x{co} in '{}' \
+                                 unsupported: shortcut needs out = ceil(in/stride) \
+                                 spatially and channel duplication (co % c == 0)",
+                                graph.name
+                            );
+                        }
+                        let skip = SkipGeom { h, w, c, oh, ow, co, stride };
+                        layers[si] = LayerPlan::Residual { save: true, skip };
+                        layers.push(LayerPlan::Residual { save: false, skip });
+                    }
+                }
+                LayerKind::MaxPool => {
+                    let ng = node
+                        .geom
+                        .ok_or_else(|| anyhow::anyhow!("pool node without geometry"))?;
+                    if ng.h % 2 != 0 || ng.w % 2 != 0 {
                         bail!(
-                            "conv kernel side {kside} in '{}' unsupported: SAME \
-                             geometry requires an odd kernel (pad = (kside-1)/2 \
-                             would be asymmetric)",
+                            "2x2 stride-2 max-pool input {}x{} in '{}' has odd dims: \
+                             the pool would silently drop the last row/column",
+                            ng.h,
+                            ng.w,
                             graph.name
                         );
                     }
-                    layers.push(LayerPlan::Conv { h, w, cin, cout, kside, first: node.first });
+                    layers.push(LayerPlan::MaxPool {
+                        h: ng.h,
+                        w: ng.w,
+                        c: ng.c_in,
+                        oh: ng.oh,
+                        ow: ng.ow,
+                    });
                 }
-                LayerKind::MaxPool => {
-                    let c = prev_channels(&layers, node)?;
-                    let (h, w) = square_of(node.in_elems / c)?;
-                    layers.push(LayerPlan::MaxPool { h, w, c });
+                LayerKind::GlobalPool => {
+                    let ng = node
+                        .geom
+                        .ok_or_else(|| anyhow::anyhow!("pool node without geometry"))?;
+                    layers.push(LayerPlan::GlobalPool { h: ng.h, w: ng.w, c: ng.c_in });
                 }
                 LayerKind::Flatten => layers.push(LayerPlan::Flatten),
-                LayerKind::GlobalPool | LayerKind::ResidualMarker => {
-                    bail!("layer {:?} unsupported by naive engine", node.kind)
+                LayerKind::ResidualMarker => {
+                    // lowering expands markers into convs with
+                    // skip_open/skip_close; a surviving marker is a bug
+                    bail!("unexpanded residual marker in '{}'", graph.name)
                 }
             }
+        }
+        if !open.is_empty() {
+            bail!("unclosed residual block in '{}'", graph.name);
         }
         Ok(Plan {
             name: graph.name.clone(),
@@ -152,33 +285,10 @@ impl Plan {
     }
 }
 
-fn prev_channels(layers: &[LayerPlan], _node: &Node) -> Result<usize> {
-    for l in layers.iter().rev() {
-        let c = l.channels();
-        if c > 0 {
-            return Ok(c);
-        }
-    }
-    bail!("max-pool before any conv layer is unsupported")
-}
-
-fn square_of(n: usize) -> Result<(usize, usize)> {
-    let s = isqrt(n)?;
-    Ok((s, s))
-}
-
-fn isqrt(n: usize) -> Result<usize> {
-    let s = (n as f64).sqrt().round() as usize;
-    if s * s != n {
-        bail!("{n} is not a perfect square (non-square spatial dims unsupported)");
-    }
-    Ok(s)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::models::{get, lower};
+    use crate::models::{get, lower, LayerSpec, ModelSpec};
 
     #[test]
     fn mlp_plan() {
@@ -196,26 +306,163 @@ mod tests {
         // conv,conv,pool,conv,conv,pool,flatten,fc,fc,fc
         assert_eq!(p.layers.len(), 10);
         match p.layers[0] {
-            LayerPlan::Conv { h: 16, w: 16, cin: 3, cout: 16, kside: 3, first: true } => {}
+            LayerPlan::Conv { g, cout: 16, first: true }
+                if (g.h, g.w, g.cin, g.kside, g.stride) == (16, 16, 3, 3, 1)
+                    && g.unit() => {}
             ref other => panic!("{other:?}"),
         }
         match p.layers[2] {
-            LayerPlan::MaxPool { h: 16, w: 16, c: 16 } => {}
+            LayerPlan::MaxPool { h: 16, w: 16, c: 16, oh: 8, ow: 8 } => {}
             ref other => panic!("{other:?}"),
         }
     }
 
     #[test]
-    fn residuals_rejected() {
-        let g = lower(&get("resnete_mini").unwrap()).unwrap();
-        assert!(Plan::from_graph(&g).is_err());
+    fn residual_minis_plan_with_skip_markers() {
+        for (name, convs_per_block) in [("resnete_mini", 2usize), ("bireal_mini", 1)] {
+            let g = lower(&get(name).unwrap()).unwrap();
+            let p = Plan::from_graph(&g).unwrap();
+            let saves: Vec<usize> = p
+                .layers
+                .iter()
+                .enumerate()
+                .filter_map(|(i, l)| {
+                    matches!(l, LayerPlan::Residual { save: true, .. }).then_some(i)
+                })
+                .collect();
+            let adds = p
+                .layers
+                .iter()
+                .filter(|l| matches!(l, LayerPlan::Residual { save: false, .. }))
+                .count();
+            assert_eq!(saves.len(), 4, "{name}");
+            assert_eq!(adds, 4, "{name}");
+            // each save is immediately followed by its block's convs
+            // and then the matching add
+            for &si in &saves {
+                for j in 1..=convs_per_block {
+                    assert!(
+                        matches!(p.layers[si + j], LayerPlan::Conv { .. }),
+                        "{name} @ {si}+{j}"
+                    );
+                }
+                match p.layers[si + convs_per_block + 1] {
+                    LayerPlan::Residual { save: false, skip } => {
+                        assert_eq!(skip.stride, 1, "{name}");
+                        assert!(skip.co == skip.c || skip.co == 2 * skip.c, "{name}");
+                    }
+                    ref other => panic!("{name}: {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_residual_models_plan_with_strided_shortcuts() {
+        for name in ["resnete18", "bireal18"] {
+            let g = lower(&get(name).unwrap()).unwrap();
+            let p = Plan::from_graph(&g).unwrap();
+            // stage-entry blocks downsample 2x spatially and double
+            // channels; the shortcut geometry must record both
+            let strided: Vec<&SkipGeom> = p
+                .layers
+                .iter()
+                .filter_map(|l| match l {
+                    LayerPlan::Residual { save: false, skip } if skip.stride == 2 => Some(skip),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(strided.len(), 3, "{name}"); // stages 2, 3, 4
+            for s in strided {
+                assert_eq!(s.h, s.oh * 2, "{name}");
+                assert_eq!(s.co, s.c * 2, "{name}");
+            }
+            // global pool present with the final 7x7x512 map
+            assert!(
+                p.layers
+                    .iter()
+                    .any(|l| matches!(l, LayerPlan::GlobalPool { h: 7, w: 7, c: 512 })),
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn residual_shortcut_stride_is_recorded_not_inferred() {
+        // stride-4 block on a 5x5 map: oh = ceil(5/4) = 2.  Inferring
+        // the shortcut stride from the spatial ratio would pick
+        // ceil(5/2) = 3 — which also satisfies ceil(5/3) = 2 but
+        // subsamples rows {0,3} while the conv path samples {0,4}.
+        // The plan must carry the block convs' recorded stride.
+        let spec = ModelSpec {
+            name: "s4_resid".into(),
+            input_shape: vec![5, 5, 3],
+            classes: 10,
+            layers: vec![
+                LayerSpec::conv(4, 3).as_first(),
+                LayerSpec::residual(8, 3, 4, true), // bireal single conv, s4
+                LayerSpec::flatten(),
+                LayerSpec::dense(10),
+            ],
+        };
+        let p = Plan::from_graph(&lower(&spec).unwrap()).unwrap();
+        let skip = p
+            .layers
+            .iter()
+            .find_map(|l| match l {
+                LayerPlan::Residual { save: false, skip } => Some(*skip),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(skip.stride, 4, "{skip:?}");
+        assert_eq!((skip.h, skip.oh), (5, 2));
+        // a two-conv block compounds its convs' strides
+        let spec = ModelSpec {
+            name: "s2_two_conv".into(),
+            input_shape: vec![8, 8, 3],
+            classes: 10,
+            layers: vec![
+                LayerSpec::conv(4, 3).as_first(),
+                LayerSpec::residual(8, 3, 2, false), // resnete: s2 then s1
+                LayerSpec::flatten(),
+                LayerSpec::dense(10),
+            ],
+        };
+        let p = Plan::from_graph(&lower(&spec).unwrap()).unwrap();
+        let skip = p
+            .layers
+            .iter()
+            .find_map(|l| match l {
+                LayerPlan::Residual { save: false, skip } => Some(*skip),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!((skip.stride, skip.h, skip.oh), (2, 8, 4));
+    }
+
+    #[test]
+    fn cnv_valid_plan() {
+        let g = lower(&get("cnv").unwrap()).unwrap();
+        let p = Plan::from_graph(&g).unwrap();
+        let convs: Vec<&ConvGeom> = p
+            .layers
+            .iter()
+            .filter_map(|l| match l {
+                LayerPlan::Conv { g, .. } => Some(g),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(convs.len(), 6);
+        // 32 -(3x3 VALID)-> 30 -> 28 -pool-> 14 -> 12 -> 10 -pool-> 5 -> 3 -> 1
+        assert_eq!((convs[0].h, convs[0].oh), (32, 30));
+        assert!(!convs[0].padded());
+        assert_eq!((convs[5].h, convs[5].oh), (3, 1));
     }
 
     #[test]
     fn even_kside_rejected_at_plan_build() {
         // pad = (kside-1)/2 would silently produce asymmetric SAME
         // geometry for even kernels — plan building must refuse
-        use crate::models::{LayerSpec, ModelSpec};
         for kernel in [2usize, 4] {
             let spec = ModelSpec {
                 name: format!("even_k{kernel}"),
@@ -247,12 +494,49 @@ mod tests {
     }
 
     #[test]
+    fn odd_pool_input_rejected_at_plan_build() {
+        // 5x5 input into a 2x2 pool would silently drop a row/column
+        let spec = ModelSpec {
+            name: "odd_pool".into(),
+            input_shape: vec![5, 5, 3],
+            classes: 10,
+            layers: vec![
+                LayerSpec::conv(4, 3).as_first(),
+                LayerSpec::maxpool(),
+                LayerSpec::flatten(),
+                LayerSpec::dense(10),
+            ],
+        };
+        let g = lower(&spec).unwrap();
+        let err = Plan::from_graph(&g).unwrap_err().to_string();
+        assert!(err.contains("odd dims"), "{err}");
+        // even dims still build
+        let spec = ModelSpec {
+            name: "even_pool".into(),
+            input_shape: vec![6, 6, 3],
+            classes: 10,
+            layers: vec![
+                LayerSpec::conv(4, 3).as_first(),
+                LayerSpec::maxpool(),
+                LayerSpec::flatten(),
+                LayerSpec::dense(10),
+            ],
+        };
+        assert!(Plan::from_graph(&lower(&spec).unwrap()).is_ok());
+    }
+
+    #[test]
     fn weight_lens_match_graph() {
-        for m in ["mlp", "binarynet_mini", "cnv_mini", "binarynet"] {
+        for m in crate::models::names() {
             let g = lower(&get(m).unwrap()).unwrap();
             let p = Plan::from_graph(&g).unwrap();
             let total: usize = p.layers.iter().map(|l| l.weight_len()).sum();
             assert_eq!(total, g.total_weights(), "{m}");
+            assert_eq!(
+                p.weight_layers(),
+                g.nodes.iter().filter(|n| n.w_elems > 0).count(),
+                "{m}"
+            );
         }
     }
 }

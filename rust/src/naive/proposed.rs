@@ -14,15 +14,19 @@
 //!
 //! The forward f32 activation between a BN and the next binarization
 //! is transient, exactly as the paper's lifetime analysis assumes.
+//! Residual skips (and their gradients at the block boundary) are
+//! f32 — the high-precision skip path of Sec. 2 — and are handled by
+//! the shared layer-graph core in [`super::ops`].
 
 use anyhow::{bail, Result};
 
+use super::ops::{self, EngineOps};
 use super::plan::{LayerPlan, Plan};
-use super::standard::{
-    col2im, conv_direct, im2col, maxpool_forward, sign_vec, transpose,
-};
+use super::standard::{col2im, conv_direct, im2col, maxpool_forward, sign_vec, transpose};
 use super::{glorot_init, softmax_xent_grad, Accel, StepEngine};
-use crate::bitops::{conv_dx_streaming, im2col_packed, BitMask, BitMatrix, PackedWeightCache};
+use crate::bitops::{
+    conv_dx_streaming, im2col_packed, BitMask, BitMatrix, ConvGeom, PackedWeightCache,
+};
 use crate::models::Graph;
 use crate::optim::{OptState, Store};
 use crate::util::f16::F16Vec;
@@ -247,203 +251,15 @@ impl ProposedTrainer {
     }
 
     fn forward(&mut self, x: &[f32], retain: bool) -> Result<Vec<f32>> {
-        let b = self.batch;
         self.res.clear();
         self.pool_masks.clear();
-
-        let mut cur = x.to_vec();
-        let mut wi = 0;
-        for li in 0..self.plan.layers.len() {
-            let layer = self.plan.layers[li].clone();
-            match layer {
-                LayerPlan::Dense { k, n, first } => {
-                    cur = self.matmul_bn_forward(cur, b, k, n, first, wi, retain, None)?;
-                    wi += 1;
-                }
-                LayerPlan::Conv { h, w, cin, cout, kside, first } => {
-                    let rows = b * h * w;
-                    let k = kside * kside * cin;
-                    cur = self.matmul_bn_forward(
-                        cur,
-                        rows,
-                        k,
-                        cout,
-                        first,
-                        wi,
-                        retain,
-                        Some((h, w, cin, kside)),
-                    )?;
-                    wi += 1;
-                }
-                LayerPlan::MaxPool { h, w, c } => {
-                    let (out, mask) = maxpool_forward(&cur, b, h, w, c);
-                    if retain {
-                        // pack: 1 bit per input element (was-max)
-                        let mut bits = vec![false; b * h * w * c];
-                        const OFF: [(usize, usize); 4] =
-                            [(0, 0), (0, 1), (1, 0), (1, 1)];
-                        for bi in 0..b {
-                            for oy in 0..h / 2 {
-                                for ox in 0..w / 2 {
-                                    for ch in 0..c {
-                                        let o = ((bi * (h / 2) + oy) * (w / 2) + ox) * c + ch;
-                                        let (dy, dx) = OFF[mask[o] as usize];
-                                        bits[((bi * h + oy * 2 + dy) * w + ox * 2 + dx) * c
-                                            + ch] = true;
-                                    }
-                                }
-                            }
-                        }
-                        self.pool_masks
-                            .push(BitMask::from_bools(bits.len(), bits.into_iter()));
-                    }
-                    cur = out;
-                }
-                LayerPlan::Flatten => {}
-            }
-        }
-        Ok(cur)
-    }
-
-    /// Shared matmul+BN forward.  `conv`: Some((h, w, cin, kside)).
-    #[allow(clippy::too_many_arguments)]
-    fn matmul_bn_forward(
-        &mut self,
-        cur: Vec<f32>,
-        rows: usize,
-        k: usize,
-        n: usize,
-        first: bool,
-        wi: usize,
-        retain: bool,
-        conv: Option<(usize, usize, usize, usize)>,
-    ) -> Result<Vec<f32>> {
-        let mut res = Residuals::default();
-        let y: Vec<f32>;
-        if first {
-            // real-input layer: f32 GEMM against sign(W)
-            let backend = self.accel.backend();
-            let w = sign_vec(&self.weights[wi].to_f32());
-            y = match conv {
-                None => {
-                    let mut out = vec![0.0f32; rows * n];
-                    backend.gemm_f32(rows, k, n, &cur, &w, &mut out);
-                    out
-                }
-                Some((h, wd, cin, kside)) => match self.accel {
-                    Accel::Naive => {
-                        conv_direct(&cur, &w, self.batch, h, wd, cin, n, kside)
-                    }
-                    _ => {
-                        let cols = im2col(&cur, self.batch, h, wd, cin, kside);
-                        let mut out = vec![0.0f32; rows * n];
-                        backend.gemm_f32(rows, k, n, &cols, &w, &mut out);
-                        out
-                    }
-                },
-            };
-            if retain {
-                res.x_first = Some(cur);
-            }
-        } else {
-            // binarize input: packed X̂ + packed STE mask; f32 freed
-            let (xhat, ste) = match conv {
-                None => {
-                    let xh = BitMatrix::pack(rows, k, &cur);
-                    let ste = BitMask::from_bools(cur.len(), cur.iter().map(|v| v.abs() <= 1.0));
-                    (xh, ste)
-                }
-                Some((h, wd, cin, kside)) => {
-                    // mask over the *activation map* (in_elems); the
-                    // conv patches are signed+packed straight into
-                    // row panels — no f32 im2col buffer, no separate
-                    // pack pass (§Perf: the fused binary conv path),
-                    // threaded over output rows via the pool
-                    let ste = BitMask::from_bools(cur.len(), cur.iter().map(|v| v.abs() <= 1.0));
-                    let pool = self.accel.backend().pool();
-                    let xh = im2col_packed(&cur, self.batch, h, wd, cin, kside, &pool);
-                    (xh, ste)
-                }
-            };
-            drop(cur);
-            y = self.bin_matmul(&xhat, wi, k, n);
-            if retain {
-                res.xhat = Some(xhat);
-                res.ste = Some(ste);
-            }
-        }
-
-        // l1 batch norm (Alg. 2 lines 5-8)
-        let beta = self.betas[wi].to_f32();
-        let (x_next, psi, omega, bn_sign) = bn_l1_forward_packed(&y, rows, n, &beta);
-        if retain {
-            res.psi = F16Vec::from_f32(&psi);
-            res.omega = F16Vec::from_f32(&omega);
-            res.bn_sign = Some(bn_sign);
-            self.res.push(res);
-        }
-        Ok(x_next)
+        let layers = self.plan.layers.clone();
+        ops::forward_plan(self, &layers, x, retain)
     }
 
     fn backward(&mut self, dlogits: Vec<f32>, lr: f32) -> Result<()> {
-        let b = self.batch;
-        // ∂X/∂Y between layers is held f16 (Table 2's grad rows)
-        let mut dcur = F16Vec::from_f32(&dlogits);
-        drop(dlogits);
-        let mut wi = self.weights.len();
-        let mut pool_i = self.pool_masks.len();
-
-        for li in (0..self.plan.layers.len()).rev() {
-            let layer = self.plan.layers[li].clone();
-            match layer {
-                LayerPlan::Dense { k, n, first } => {
-                    wi -= 1;
-                    dcur = self.matmul_bn_backward(dcur, b, k, n, first, wi, None)?;
-                }
-                LayerPlan::Conv { h, w, cin, cout, kside, first } => {
-                    wi -= 1;
-                    let rows = b * h * w;
-                    dcur = self.matmul_bn_backward(
-                        dcur,
-                        rows,
-                        kside * kside * cin,
-                        cout,
-                        first,
-                        wi,
-                        Some((h, w, cin, kside)),
-                    )?;
-                }
-                LayerPlan::MaxPool { h, w, c } => {
-                    pool_i -= 1;
-                    let mask = &self.pool_masks[pool_i];
-                    let dout = dcur.to_f32();
-                    let mut dx = vec![0.0f32; b * h * w * c];
-                    let (oh, ow) = (h / 2, w / 2);
-                    // route each pooled grad to its masked input cell
-                    let mut oidx = 0usize;
-                    for bi in 0..b {
-                        for oy in 0..oh {
-                            for ox in 0..ow {
-                                for ch in 0..c {
-                                    let g = dout[oidx];
-                                    oidx += 1;
-                                    for (dy, dxo) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
-                                        let ii = ((bi * h + oy * 2 + dy) * w + ox * 2 + dxo)
-                                            * c
-                                            + ch;
-                                        if mask.get(ii) {
-                                            dx[ii] = g;
-                                        }
-                                    }
-                                }
-                            }
-                        }
-                    }
-                    dcur = F16Vec::from_f32(&dx);
-                }
-                LayerPlan::Flatten => {}
-            }
-        }
+        let layers = self.plan.layers.clone();
+        ops::backward_plan(self, &layers, dlogits, lr)?;
 
         // ---- update phase (Alg. 2 lines 17-19): consume packed ∂Ŵ
         for st in self.opt_w.iter_mut().chain(self.opt_b.iter_mut()) {
@@ -474,20 +290,99 @@ impl ProposedTrainer {
         Ok(())
     }
 
-    /// Shared matmul+BN backward; returns the f16-held input grad.
+    /// Shared matmul+BN forward.  `conv`: Some(geometry).
     #[allow(clippy::too_many_arguments)]
-    fn matmul_bn_backward(
+    fn matmul_bn_forward(
         &mut self,
-        dcur: F16Vec,
+        cur: Vec<f32>,
         rows: usize,
         k: usize,
         n: usize,
         first: bool,
         wi: usize,
-        conv: Option<(usize, usize, usize, usize)>,
-    ) -> Result<F16Vec> {
-        let dx_next = dcur.to_f32();
-        drop(dcur);
+        retain: bool,
+        conv: Option<ConvGeom>,
+    ) -> Result<Vec<f32>> {
+        let mut res = Residuals::default();
+        let y: Vec<f32>;
+        if first {
+            // real-input layer: f32 GEMM against sign(W)
+            let backend = self.accel.backend();
+            let w = sign_vec(&self.weights[wi].to_f32());
+            y = match conv {
+                None => {
+                    let mut out = vec![0.0f32; rows * n];
+                    backend.gemm_f32(rows, k, n, &cur, &w, &mut out);
+                    out
+                }
+                Some(g) => match self.accel {
+                    Accel::Naive => conv_direct(&cur, &w, self.batch, g, n),
+                    _ => {
+                        let cols = im2col(&cur, self.batch, g);
+                        let mut out = vec![0.0f32; rows * n];
+                        backend.gemm_f32(rows, k, n, &cols, &w, &mut out);
+                        out
+                    }
+                },
+            };
+            if retain {
+                res.x_first = Some(cur);
+            }
+        } else {
+            // binarize input: packed X̂ + packed STE mask; f32 freed
+            let (xhat, ste) = match conv {
+                None => {
+                    let xh = BitMatrix::pack(rows, k, &cur);
+                    let ste =
+                        BitMask::from_bools(cur.len(), cur.iter().map(|v| v.abs() <= 1.0));
+                    (xh, ste)
+                }
+                Some(g) => {
+                    // mask over the *activation map* (in_elems); the
+                    // conv patches are signed+packed straight into
+                    // row panels — no f32 im2col buffer, no separate
+                    // pack pass (§Perf: the fused binary conv path),
+                    // threaded over output rows via the pool
+                    let ste =
+                        BitMask::from_bools(cur.len(), cur.iter().map(|v| v.abs() <= 1.0));
+                    let pool = self.accel.backend().pool();
+                    let xh = im2col_packed(&cur, self.batch, g, &pool);
+                    (xh, ste)
+                }
+            };
+            drop(cur);
+            y = self.bin_matmul(&xhat, wi, k, n);
+            if retain {
+                res.xhat = Some(xhat);
+                res.ste = Some(ste);
+            }
+        }
+
+        // l1 batch norm (Alg. 2 lines 5-8)
+        let beta = self.betas[wi].to_f32();
+        let (x_next, psi, omega, bn_sign) = bn_l1_forward_packed(&y, rows, n, &beta);
+        if retain {
+            res.psi = F16Vec::from_f32(&psi);
+            res.omega = F16Vec::from_f32(&omega);
+            res.bn_sign = Some(bn_sign);
+            self.res.push(res);
+        }
+        Ok(x_next)
+    }
+
+    /// Shared matmul+BN backward; returns the f32 input grad (the
+    /// driver holds it f16 across layer boundaries).
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_bn_backward(
+        &mut self,
+        dx_next: Vec<f32>,
+        rows: usize,
+        k: usize,
+        n: usize,
+        first: bool,
+        wi: usize,
+        conv: Option<ConvGeom>,
+    ) -> Result<Vec<f32>> {
         // BN backward (Alg. 2 lines 10-13) from packed signs + ω, ψ
         let res_view = &self.res[wi];
         let (dy, dbeta) = bn_proposed_backward_packed(
@@ -504,69 +399,47 @@ impl ProposedTrainer {
         // layer's retained input is the raw image — im2col it into
         // the (rows × k) matrix the dW GEMM expects (transient).
         let first_cols: Option<Vec<f32>> = match (&res_view.x_first, conv) {
-            (Some(xf), Some((h, w, cin, kside))) => {
-                Some(im2col(xf, self.batch, h, w, cin, kside))
-            }
+            (Some(xf), Some(g)) => Some(im2col(xf, self.batch, g)),
             (Some(xf), None) => Some(xf.clone()),
             _ => None,
         };
-        let dw = self.dw_packed(
-            res_view.xhat.as_ref(),
-            first_cols.as_deref(),
-            &dy,
-            rows,
-            k,
-            n,
-        );
+        let dw = self.dw_packed(res_view.xhat.as_ref(), first_cols.as_deref(), &dy, rows, k, n);
         drop(first_cols);
 
         // ∂X for the upstream layer (skip for the first layer).  The
         // dX matmul takes `&mut self` (it reads the packed-Ŵᵀ cache),
         // so the residuals are re-borrowed afterwards for the STE mask.
         let out = if first {
-            F16Vec::zeros(0)
+            Vec::new()
         } else {
-            let dx = match conv {
-                None => {
-                    let mut dcols = self.real_bin_matmul_t(&dy, wi, rows, k, n);
-                    // STE mask applies directly
-                    let ste = self.res[wi].ste.as_ref().unwrap();
-                    for (i, v) in dcols.iter_mut().enumerate() {
-                        if !ste.get(i) {
-                            *v = 0.0;
-                        }
+            let mut dx = match conv {
+                None => self.real_bin_matmul_t(&dy, wi, rows, k, n),
+                Some(g) => match self.accel {
+                    Accel::Naive => {
+                        // reference: full rows×k patch gradients,
+                        // then the scatter-add col2im
+                        let dcols = self.real_bin_matmul_t(&dy, wi, rows, k, n);
+                        col2im(&dcols, self.batch, g)
                     }
-                    dcols
-                }
-                Some((h, w, cin, kside)) => {
-                    let mut dx = match self.accel {
-                        Accel::Naive => {
-                            // reference: full rows×k patch gradients,
-                            // then the scatter-add col2im
-                            let dcols = self.real_bin_matmul_t(&dy, wi, rows, k, n);
-                            col2im(&dcols, self.batch, h, w, cin, kside)
-                        }
-                        _ => {
-                            // streaming col2im straight off the cached
-                            // *packed* Ŵᵀ: per-tap rows×cin panels —
-                            // neither the rows×k dcols nor the full
-                            // f32 Ŵᵀ unpack ever exists
-                            let backend = self.accel.backend();
-                            let batch = self.batch;
-                            let wt = self.packed_wt(wi, k, n);
-                            conv_dx_streaming(&dy, wt, batch, h, w, cin, kside, backend)
-                        }
-                    };
-                    let ste = self.res[wi].ste.as_ref().unwrap();
-                    for (i, v) in dx.iter_mut().enumerate() {
-                        if !ste.get(i) {
-                            *v = 0.0;
-                        }
+                    _ => {
+                        // streaming col2im straight off the cached
+                        // *packed* Ŵᵀ: per-tap rows×cin panels —
+                        // neither the rows×k dcols nor the full
+                        // f32 Ŵᵀ unpack ever exists
+                        let backend = self.accel.backend();
+                        let batch = self.batch;
+                        let wt = self.packed_wt(wi, k, n);
+                        conv_dx_streaming(&dy, wt, batch, g, backend)
                     }
-                    dx
-                }
+                },
             };
-            F16Vec::from_f32(&dx)
+            let ste = self.res[wi].ste.as_ref().unwrap();
+            for (i, v) in dx.iter_mut().enumerate() {
+                if !ste.get(i) {
+                    *v = 0.0;
+                }
+            }
+            dx
         };
         self.res[wi].dw_sign = Some(dw);
         self.res[wi].dbeta = dbeta;
@@ -574,6 +447,130 @@ impl ProposedTrainer {
     }
 }
 
+impl EngineOps for ProposedTrainer {
+    /// ∂X/∂Y between layers is held f16 (Table 2's grad rows); the
+    /// f16→f32→f16 round-trips at pool/residual boundaries are
+    /// lossless, so behaviour matches the pre-refactor engine bit for
+    /// bit.
+    type Grad = F16Vec;
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn grad_to_f32(g: F16Vec) -> Vec<f32> {
+        g.to_f32()
+    }
+
+    fn grad_from_f32(v: Vec<f32>) -> F16Vec {
+        F16Vec::from_f32(&v)
+    }
+
+    fn matmul_forward(
+        &mut self,
+        cur: Vec<f32>,
+        wi: usize,
+        layer: &LayerPlan,
+        retain: bool,
+    ) -> Result<Vec<f32>> {
+        match *layer {
+            LayerPlan::Dense { k, n, first } => {
+                self.matmul_bn_forward(cur, self.batch, k, n, first, wi, retain, None)
+            }
+            LayerPlan::Conv { g, cout, first } => self.matmul_bn_forward(
+                cur,
+                g.rows(self.batch),
+                g.k(),
+                cout,
+                first,
+                wi,
+                retain,
+                Some(g),
+            ),
+            _ => unreachable!("matmul_forward on a non-matmul layer"),
+        }
+    }
+
+    fn matmul_backward(
+        &mut self,
+        dnext: Vec<f32>,
+        wi: usize,
+        layer: &LayerPlan,
+        _lr: f32, // updates happen in the deferred update phase
+    ) -> Result<Vec<f32>> {
+        match *layer {
+            LayerPlan::Dense { k, n, first } => {
+                self.matmul_bn_backward(dnext, self.batch, k, n, first, wi, None)
+            }
+            LayerPlan::Conv { g, cout, first } => self.matmul_bn_backward(
+                dnext,
+                g.rows(self.batch),
+                g.k(),
+                cout,
+                first,
+                wi,
+                Some(g),
+            ),
+            _ => unreachable!("matmul_backward on a non-matmul layer"),
+        }
+    }
+
+    fn pool_forward(
+        &mut self,
+        cur: Vec<f32>,
+        h: usize,
+        w: usize,
+        c: usize,
+        retain: bool,
+    ) -> Vec<f32> {
+        let b = self.batch;
+        let (out, mask) = maxpool_forward(&cur, b, h, w, c);
+        if retain {
+            // pack: 1 bit per input element (was-max)
+            let mut bits = vec![false; b * h * w * c];
+            const OFF: [(usize, usize); 4] = [(0, 0), (0, 1), (1, 0), (1, 1)];
+            for bi in 0..b {
+                for oy in 0..h / 2 {
+                    for ox in 0..w / 2 {
+                        for ch in 0..c {
+                            let o = ((bi * (h / 2) + oy) * (w / 2) + ox) * c + ch;
+                            let (dy, dx) = OFF[mask[o] as usize];
+                            bits[((bi * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ch] = true;
+                        }
+                    }
+                }
+            }
+            self.pool_masks.push(BitMask::from_bools(bits.len(), bits.into_iter()));
+        }
+        out
+    }
+
+    fn pool_backward(&mut self, dnext: Vec<f32>, h: usize, w: usize, c: usize) -> Vec<f32> {
+        let b = self.batch;
+        let mask = self.pool_masks.pop().expect("pool mask stack underflow");
+        let mut dx = vec![0.0f32; b * h * w * c];
+        let (oh, ow) = (h / 2, w / 2);
+        // route each pooled grad to its masked input cell
+        let mut oidx = 0usize;
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ch in 0..c {
+                        let g = dnext[oidx];
+                        oidx += 1;
+                        for (dy, dxo) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                            let ii = ((bi * h + oy * 2 + dy) * w + ox * 2 + dxo) * c + ch;
+                            if mask.get(ii) {
+                                dx[ii] = g;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        dx
+    }
+}
 
 impl StepEngine for ProposedTrainer {
     fn train_step(&mut self, x: &[f32], labels: &[usize], lr: f32) -> Result<(f32, f32)> {
@@ -784,6 +781,23 @@ mod tests {
     }
 
     #[test]
+    fn residual_nets_learn() {
+        for model in ["resnete_mini", "bireal_mini"] {
+            let mut t = make(model, 16, Accel::Blocked, "adam");
+            let (x, y) = toy_batch(16, 16 * 16 * 3, 10, 14);
+            let mut first = None;
+            let mut last = 0.0;
+            for _ in 0..25 {
+                let (loss, _) = t.train_step(&x, &y, 0.003).unwrap();
+                first.get_or_insert(loss);
+                last = loss;
+            }
+            assert!(last.is_finite(), "{model}");
+            assert!(last < first.unwrap(), "{model}: {first:?} -> {last}");
+        }
+    }
+
+    #[test]
     fn bop_trains_binary_weights() {
         let mut t = make("mlp_mini", 32, Accel::Blocked, "bop");
         let (x, y) = toy_batch(32, 64, 10, 3);
@@ -820,8 +834,13 @@ mod tests {
     fn tiled_matches_blocked_exactly() {
         // the XNOR tiers are bit-exact and the parallel f32 path only
         // re-bands the same blocked kernel, so whole training runs are
-        // numerically identical across blocked and tiled(threads)
-        for (model, batch, k) in [("mlp_mini", 8, 64), ("cnv_mini", 4, 16 * 16 * 3)] {
+        // numerically identical across blocked and tiled(threads) —
+        // residual models exercise the skip handling too
+        for (model, batch, k) in [
+            ("mlp_mini", 8, 64),
+            ("cnv_mini", 4, 16 * 16 * 3),
+            ("resnete_mini", 4, 16 * 16 * 3),
+        ] {
             let mut b = make(model, batch, Accel::Blocked, "adam");
             let mut t2 = make(model, batch, Accel::Tiled(2), "adam");
             let (x, y) = toy_batch(batch, k, 10, 5);
@@ -938,21 +957,24 @@ mod tests {
         // an eval interleaved between train steps must leave no stale
         // residuals/pool masks behind (the backward indexes res[wi]
         // positionally — a leak would be misread as this step's X̂) and
-        // must not perturb the training trajectory at all
+        // must not perturb the training trajectory at all.  Run on a
+        // residual model so the skip path is covered too.
         let (x, y) = toy_batch(8, 16 * 16 * 3, 10, 11);
         let (xe, ye) = toy_batch(8, 16 * 16 * 3, 10, 12);
-        let mut a = make("cnv_mini", 8, Accel::Blocked, "adam");
-        let mut b = make("cnv_mini", 8, Accel::Blocked, "adam");
-        a.train_step(&x, &y, 0.01).unwrap();
-        b.train_step(&x, &y, 0.01).unwrap();
-        b.eval(&xe, &ye).unwrap();
-        assert!(b.res.is_empty(), "eval left residuals behind");
-        assert!(b.pool_masks.is_empty(), "eval left pool masks behind");
-        let (la, _) = a.train_step(&x, &y, 0.01).unwrap();
-        let (lb, _) = b.train_step(&x, &y, 0.01).unwrap();
-        assert_eq!(la, lb, "eval perturbed the training trajectory");
-        for (wa, wb) in a.weights_snapshot().iter().zip(b.weights_snapshot().iter()) {
-            assert_eq!(wa, wb);
+        for model in ["cnv_mini", "bireal_mini"] {
+            let mut a = make(model, 8, Accel::Blocked, "adam");
+            let mut b = make(model, 8, Accel::Blocked, "adam");
+            a.train_step(&x, &y, 0.01).unwrap();
+            b.train_step(&x, &y, 0.01).unwrap();
+            b.eval(&xe, &ye).unwrap();
+            assert!(b.res.is_empty(), "{model}: eval left residuals behind");
+            assert!(b.pool_masks.is_empty(), "{model}: eval left pool masks behind");
+            let (la, _) = a.train_step(&x, &y, 0.01).unwrap();
+            let (lb, _) = b.train_step(&x, &y, 0.01).unwrap();
+            assert_eq!(la, lb, "{model}: eval perturbed the training trajectory");
+            for (wa, wb) in a.weights_snapshot().iter().zip(b.weights_snapshot().iter()) {
+                assert_eq!(wa, wb, "{model}");
+            }
         }
     }
 }

@@ -6,14 +6,23 @@
 //! dependency), pool masks are f32-indexed, weights/momenta/grads are
 //! f32 — exactly the left half of Table 2, so the tracking allocator
 //! measures what the paper's standard prototype measured.
+//!
+//! The layer-graph control flow (pooling, global pooling, residual
+//! skips) lives in [`super::ops`]; this file implements the standard
+//! engine's per-matmul-layer forward/backward over any [`ConvGeom`].
+//! Binary×binary matmuls — conv *and* hidden dense layers — run the
+//! packed XNOR path on the accelerated tiers (dense needs no pad
+//! correction: there is no padding, so the XNOR product is already
+//! the exact ±1 dot product).
 
 use anyhow::{bail, Result};
 
+use super::ops::{self, EngineOps};
 use super::plan::{LayerPlan, Plan};
 use super::{glorot_init, softmax_xent_grad, Accel, StepEngine};
 use crate::bitops::{
     conv_dx_streaming, im2col_packed, subtract_pad_contrib, subtract_pad_dw_contrib, BitMatrix,
-    PackedWeightCache,
+    ConvGeom, PackedWeightCache,
 };
 use crate::models::Graph;
 use crate::optim::{OptState, Store};
@@ -28,8 +37,10 @@ pub struct StandardTrainer {
     betas: Vec<Store>,
     opt_w: Vec<OptState>,
     opt_b: Vec<OptState>,
-    // retained per step (transient between fwd and bwd)
-    acts: Vec<Vec<f32>>,       // f32 activations per layer boundary
+    // retained per step (transient between fwd and bwd).  Each matmul
+    // layer wi pushes exactly two f32 activations in order: its input
+    // at index 2·wi and its BN output at 2·wi + 1.
+    acts: Vec<Vec<f32>>,
     pool_masks: Vec<Vec<u32>>, // argmax index per pooled cell (f32-class storage)
     bn_mu: Vec<Vec<f32>>,
     bn_psi: Vec<Vec<f32>>,
@@ -111,249 +122,267 @@ impl StandardTrainer {
             .unpack()
     }
 
-    /// Forward through all layers, retaining f32 activations; returns
-    /// logits.  `retain` disables residual storage for eval.
     fn forward(&mut self, x: &[f32], retain: bool) -> Result<Vec<f32>> {
-        let b = self.batch;
         self.acts.clear();
         self.pool_masks.clear();
         self.bn_mu.clear();
         self.bn_psi.clear();
-
-        let mut cur = x.to_vec();
-        let mut wi = 0;
-        for li in 0..self.plan.layers.len() {
-            let layer = self.plan.layers[li].clone();
-            match layer {
-                LayerPlan::Dense { k, n, first } => {
-                    if retain {
-                        self.acts.push(cur.clone()); // retained X_l (f32!)
-                    }
-                    // binarize input (except first layer) + weights
-                    let a = if first { cur.clone() } else { sign_vec(&cur) };
-                    let bw = self.signed_w(wi, k, n);
-                    let mut y = vec![0.0f32; b * n];
-                    self.gemm(b, k, n, &a, &bw, &mut y);
-                    let (xn, mu, psi) = bn_l2_forward(&y, b, n, &self.betas[wi].to_f32());
-                    if retain {
-                        self.bn_mu.push(mu);
-                        self.bn_psi.push(psi);
-                        self.acts.push(xn.clone()); // x_{l+1} retained
-                    }
-                    cur = xn;
-                    wi += 1;
-                }
-                LayerPlan::Conv { h, w, cin, cout, kside, first } => {
-                    if retain {
-                        self.acts.push(cur.clone());
-                    }
-                    let k = kside * kside * cin;
-                    let y = if first || self.accel == Accel::Naive {
-                        // real-input (or direct-loop) f32 path
-                        let a = if first { cur.clone() } else { sign_vec(&cur) };
-                        let bw = self.signed_w(wi, k, cout);
-                        self.conv_forward(&a, &bw, b, h, w, cin, cout, kside)
-                    } else {
-                        // fused binary path: patches signed+packed
-                        // straight into row panels (no f32 cols, no
-                        // sign_vec copy), XNOR against the cached
-                        // packed Ŵᵀ, then the masked SAME-padding
-                        // edge correction back to zero-pad semantics
-                        let backend = self.accel.backend();
-                        let xhat = im2col_packed(&cur, b, h, w, cin, kside, &backend.pool());
-                        let weights = &self.weights;
-                        let pack = || BitMatrix::pack(k, cout, &weights[wi].to_f32());
-                        let wt = self.wcache.wt_via_transpose(wi, pack);
-                        let mut y = vec![0.0f32; b * h * w * cout];
-                        backend.xnor_gemm(&xhat, wt, &mut y);
-                        subtract_pad_contrib(&mut y, wt, b, h, w, cin, kside);
-                        y
-                    };
-                    let (xn, mu, psi) =
-                        bn_l2_forward(&y, b * h * w, cout, &self.betas[wi].to_f32());
-                    if retain {
-                        self.bn_mu.push(mu);
-                        self.bn_psi.push(psi);
-                        self.acts.push(xn.clone());
-                    }
-                    cur = xn;
-                    wi += 1;
-                }
-                LayerPlan::MaxPool { h, w, c } => {
-                    let (out, mask) = maxpool_forward(&cur, b, h, w, c);
-                    if retain {
-                        self.pool_masks.push(mask);
-                    }
-                    cur = out;
-                }
-                LayerPlan::Flatten => { /* layout already flat NHWC */ }
-            }
-        }
-        Ok(cur)
+        let layers = self.plan.layers.clone();
+        ops::forward_plan(self, &layers, x, retain)
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn conv_forward(
-        &self,
-        a: &[f32],
-        w: &[f32],
-        b: usize,
-        h: usize,
-        wd: usize,
-        cin: usize,
-        cout: usize,
-        kside: usize,
-    ) -> Vec<f32> {
+    fn backward(&mut self, dlogits: Vec<f32>, lr: f32) -> Result<()> {
+        for st in self.opt_w.iter_mut().chain(self.opt_b.iter_mut()) {
+            st.tick();
+        }
+        let layers = self.plan.layers.clone();
+        ops::backward_plan(self, &layers, dlogits, lr)
+    }
+
+    /// Real-input (or direct-loop) f32 conv forward.
+    fn conv_forward(&self, a: &[f32], w: &[f32], b: usize, g: ConvGeom, cout: usize) -> Vec<f32> {
         match self.accel {
-            Accel::Naive => conv_direct(a, w, b, h, wd, cin, cout, kside),
+            Accel::Naive => conv_direct(a, w, b, g, cout),
             _ => {
                 // im2col (transient memory-for-speed buffer) + GEMM
-                let k = kside * kside * cin;
-                let cols = im2col(a, b, h, wd, cin, kside);
-                let mut y = vec![0.0f32; b * h * wd * cout];
-                self.gemm(b * h * wd, k, cout, &cols, w, &mut y);
+                let cols = im2col(a, b, g);
+                let mut y = vec![0.0f32; g.rows(b) * cout];
+                self.gemm(g.rows(b), g.k(), cout, &cols, w, &mut y);
                 y
             }
         }
     }
+}
 
-    fn backward(&mut self, dlogits: Vec<f32>, lr: f32) -> Result<()> {
+impl EngineOps for StandardTrainer {
+    type Grad = Vec<f32>;
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn grad_to_f32(g: Vec<f32>) -> Vec<f32> {
+        g
+    }
+
+    fn grad_from_f32(v: Vec<f32>) -> Vec<f32> {
+        v
+    }
+
+    fn matmul_forward(
+        &mut self,
+        cur: Vec<f32>,
+        wi: usize,
+        layer: &LayerPlan,
+        retain: bool,
+    ) -> Result<Vec<f32>> {
         let b = self.batch;
-        let mut dcur = dlogits;
-        let mut wi = self.weights.len();
-        let mut act_i = self.acts.len();
-        let mut pool_i = self.pool_masks.len();
-
-        for st in self.opt_w.iter_mut().chain(self.opt_b.iter_mut()) {
-            st.tick();
-        }
-
-        for li in (0..self.plan.layers.len()).rev() {
-            let layer = self.plan.layers[li].clone();
-            match layer {
-                LayerPlan::Dense { k, n, first } => {
-                    wi -= 1;
-                    act_i -= 2;
-                    let rows = b;
-                    let (dy, dbeta) = bn_l2_backward(
-                        &dcur,
-                        &self.acts[act_i + 1],
-                        &self.betas[wi].to_f32(),
-                        &self.bn_psi[wi],
-                        rows,
-                        n,
-                    );
-                    // dX = dY @ W^T  (Ŵᵀ from the per-step cache via
-                    // the word-level block transpose)
-                    let mut dx = {
-                        let wt = self.signed_wt(wi, k, n);
-                        let mut dx = vec![0.0f32; rows * k];
-                        self.gemm(rows, n, k, &dy, &wt, &mut dx);
-                        dx
-                    };
-                    if !first {
-                        ste_mask_apply(&mut dx, &self.acts[act_i]);
-                    }
-                    // dW = X̂ᵀ·dY — transpose-free: the rows×k X̂ᵀ copy
-                    // of the pre-fusion path never exists
-                    let backend = self.accel.backend();
-                    let mut dw = vec![0.0f32; k * n];
-                    if first {
-                        backend.gemm_f32_at(rows, k, n, &self.acts[act_i], &dy, &mut dw);
-                    } else {
-                        let xhat = sign_vec(&self.acts[act_i]);
-                        backend.gemm_f32_at(rows, k, n, &xhat, &dy, &mut dw);
-                    }
-                    cancel_wgrad(&mut dw, &self.weights[wi]);
-                    self.opt_w[wi].update(&mut self.weights[wi], &dw, lr, true);
-                    self.opt_b[wi].update(&mut self.betas[wi], &dbeta, lr, false);
-                    self.wcache.invalidate(wi);
-                    dcur = dx;
+        let (y, rows, n) = match *layer {
+            LayerPlan::Dense { k, n, first } => {
+                if retain {
+                    self.acts.push(cur.clone()); // retained X_l (f32!)
                 }
-                LayerPlan::Conv { h, w, cin, cout, kside, first } => {
-                    wi -= 1;
-                    act_i -= 2;
-                    let rows = b * h * w;
-                    let (dy, dbeta) = bn_l2_backward(
-                        &dcur,
-                        &self.acts[act_i + 1],
-                        &self.betas[wi].to_f32(),
-                        &self.bn_psi[wi],
-                        rows,
-                        cout,
-                    );
-                    let k = kside * kside * cin;
-                    let mut dw = vec![0.0f32; k * cout];
-                    let mut dx;
-                    if !first && self.accel != Accel::Naive {
-                        // fused backward: no rows×k f32 transient.
-                        // dX streams per-tap panels of dY·Ŵᵀ straight
-                        // into the map (never the full dcols); dW
-                        // contracts a re-packed bit-im2col panel (the
-                        // forward's fused im2col, +1 pads) against dY,
-                        // then subtracts the border dY sums to restore
-                        // zero-pad semantics.
-                        let backend = self.accel.backend();
-                        {
-                            let weights = &self.weights;
-                            let pack = || BitMatrix::pack(k, cout, &weights[wi].to_f32());
-                            let wt = self.wcache.wt_via_transpose(wi, pack);
-                            dx = conv_dx_streaming(&dy, wt, b, h, w, cin, kside, backend);
-                        }
-                        let xh = im2col_packed(
-                            &self.acts[act_i],
-                            b,
-                            h,
-                            w,
-                            cin,
-                            kside,
-                            &backend.pool(),
-                        );
-                        backend.packed_at_gemm_f32(&xh, &dy, cout, &mut dw);
-                        drop(xh);
-                        subtract_pad_dw_contrib(&mut dw, &dy, b, h, w, cin, cout, kside);
-                    } else {
-                        // reference path (real-input first layer /
-                        // naive accel): f32 im2col math, each rows×k
-                        // buffer scoped to die as soon as it is
-                        // consumed — peak one such buffer, not three
-                        dx = {
-                            let wt = self.signed_wt(wi, k, cout);
-                            let mut dcols = vec![0.0f32; rows * k];
-                            self.gemm(rows, cout, k, &dy, &wt, &mut dcols);
-                            col2im(&dcols, b, h, w, cin, kside)
-                        };
-                        let backend = self.accel.backend();
-                        let cols = {
-                            let xin = &self.acts[act_i];
-                            if first {
-                                // real-input layer: im2col the retained
-                                // activation in place, no copy
-                                im2col(xin, b, h, w, cin, kside)
-                            } else {
-                                let xhat = sign_vec(xin);
-                                im2col(&xhat, b, h, w, cin, kside)
-                            }
-                        };
-                        backend.gemm_f32_at(rows, k, cout, &cols, &dy, &mut dw);
-                    }
-                    if !first {
-                        ste_mask_apply(&mut dx, &self.acts[act_i]);
-                    }
-                    cancel_wgrad(&mut dw, &self.weights[wi]);
-                    self.opt_w[wi].update(&mut self.weights[wi], &dw, lr, true);
-                    self.opt_b[wi].update(&mut self.betas[wi], &dbeta, lr, false);
-                    self.wcache.invalidate(wi);
-                    dcur = dx;
-                }
-                LayerPlan::MaxPool { h, w, c } => {
-                    pool_i -= 1;
-                    dcur = maxpool_backward(&dcur, &self.pool_masks[pool_i], b, h, w, c);
-                }
-                LayerPlan::Flatten => {}
+                let y = if first || self.accel == Accel::Naive {
+                    // f32 GEMM over the binarized operands
+                    let a = if first { cur } else { sign_vec(&cur) };
+                    let bw = self.signed_w(wi, k, n);
+                    let mut y = vec![0.0f32; b * n];
+                    self.gemm(b, k, n, &a, &bw, &mut y);
+                    y
+                } else {
+                    // binary×binary hidden fc: pack X̂ and run the
+                    // XNOR-popcount path against the cached packed Ŵᵀ
+                    // — no padding, so no sign correction is needed
+                    // and the result is the exact ±1 dot product
+                    let xhat = BitMatrix::pack(b, k, &cur);
+                    let weights = &self.weights;
+                    let pack = || BitMatrix::pack(k, n, &weights[wi].to_f32());
+                    let wt = self.wcache.wt_via_transpose(wi, pack);
+                    let mut y = vec![0.0f32; b * n];
+                    self.accel.backend().xnor_gemm(&xhat, wt, &mut y);
+                    y
+                };
+                (y, b, n)
             }
+            LayerPlan::Conv { g, cout, first } => {
+                if retain {
+                    self.acts.push(cur.clone());
+                }
+                let rows = g.rows(b);
+                let y = if first || self.accel == Accel::Naive {
+                    // real-input (or direct-loop) f32 path
+                    let a = if first { cur } else { sign_vec(&cur) };
+                    let bw = self.signed_w(wi, g.k(), cout);
+                    self.conv_forward(&a, &bw, b, g, cout)
+                } else {
+                    // fused binary path: patches signed+packed
+                    // straight into row panels (no f32 cols, no
+                    // sign_vec copy), XNOR against the cached packed
+                    // Ŵᵀ, then the masked padding edge correction
+                    // back to zero-pad semantics (no-op for VALID)
+                    let backend = self.accel.backend();
+                    let xhat = im2col_packed(&cur, b, g, &backend.pool());
+                    let weights = &self.weights;
+                    let pack = || BitMatrix::pack(g.k(), cout, &weights[wi].to_f32());
+                    let wt = self.wcache.wt_via_transpose(wi, pack);
+                    let mut y = vec![0.0f32; rows * cout];
+                    backend.xnor_gemm(&xhat, wt, &mut y);
+                    subtract_pad_contrib(&mut y, wt, b, g);
+                    y
+                };
+                (y, rows, cout)
+            }
+            _ => unreachable!("matmul_forward on a non-matmul layer"),
+        };
+        let (xn, mu, psi) = bn_l2_forward(&y, rows, n, &self.betas[wi].to_f32());
+        if retain {
+            self.bn_mu.push(mu);
+            self.bn_psi.push(psi);
+            self.acts.push(xn.clone()); // x_{l+1} retained
         }
-        Ok(())
+        Ok(xn)
+    }
+
+    fn matmul_backward(
+        &mut self,
+        dnext: Vec<f32>,
+        wi: usize,
+        layer: &LayerPlan,
+        lr: f32,
+    ) -> Result<Vec<f32>> {
+        let b = self.batch;
+        match *layer {
+            LayerPlan::Dense { k, n, first } => {
+                let rows = b;
+                let (dy, dbeta) = bn_l2_backward(
+                    &dnext,
+                    &self.acts[2 * wi + 1],
+                    &self.betas[wi].to_f32(),
+                    &self.bn_psi[wi],
+                    rows,
+                    n,
+                );
+                // dX = dY @ W^T  (Ŵᵀ from the per-step cache via the
+                // word-level block transpose)
+                let mut dx = {
+                    let wt = self.signed_wt(wi, k, n);
+                    let mut dx = vec![0.0f32; rows * k];
+                    self.gemm(rows, n, k, &dy, &wt, &mut dx);
+                    dx
+                };
+                if !first {
+                    ste_mask_apply(&mut dx, &self.acts[2 * wi]);
+                }
+                // dW = X̂ᵀ·dY — transpose-free.  On the accelerated
+                // tiers the binary X̂ is packed and contracted straight
+                // off the bit panel (rows×k f32 sign copy gone);
+                // bands split k, never the reduction, so the result is
+                // bit-identical across tiers and thread counts.
+                let backend = self.accel.backend();
+                let mut dw = vec![0.0f32; k * n];
+                if first {
+                    backend.gemm_f32_at(rows, k, n, &self.acts[2 * wi], &dy, &mut dw);
+                } else if self.accel == Accel::Naive {
+                    let xhat = sign_vec(&self.acts[2 * wi]);
+                    backend.gemm_f32_at(rows, k, n, &xhat, &dy, &mut dw);
+                } else {
+                    let xhat = BitMatrix::pack(rows, k, &self.acts[2 * wi]);
+                    backend.packed_at_gemm_f32(&xhat, &dy, n, &mut dw);
+                }
+                cancel_wgrad(&mut dw, &self.weights[wi]);
+                self.opt_w[wi].update(&mut self.weights[wi], &dw, lr, true);
+                self.opt_b[wi].update(&mut self.betas[wi], &dbeta, lr, false);
+                self.wcache.invalidate(wi);
+                Ok(dx)
+            }
+            LayerPlan::Conv { g, cout, first } => {
+                let rows = g.rows(b);
+                let (dy, dbeta) = bn_l2_backward(
+                    &dnext,
+                    &self.acts[2 * wi + 1],
+                    &self.betas[wi].to_f32(),
+                    &self.bn_psi[wi],
+                    rows,
+                    cout,
+                );
+                let k = g.k();
+                let mut dw = vec![0.0f32; k * cout];
+                let mut dx;
+                if !first && self.accel != Accel::Naive {
+                    // fused backward: no rows×k f32 transient.
+                    // dX streams per-tap panels of dY·Ŵᵀ straight
+                    // into the map (never the full dcols); dW
+                    // contracts a re-packed bit-im2col panel (the
+                    // forward's fused im2col, +1 pads) against dY,
+                    // then subtracts the border dY sums to restore
+                    // zero-pad semantics (both no-ops for VALID).
+                    let backend = self.accel.backend();
+                    {
+                        let weights = &self.weights;
+                        let pack = || BitMatrix::pack(k, cout, &weights[wi].to_f32());
+                        let wt = self.wcache.wt_via_transpose(wi, pack);
+                        dx = conv_dx_streaming(&dy, wt, b, g, backend);
+                    }
+                    let xh = im2col_packed(&self.acts[2 * wi], b, g, &backend.pool());
+                    backend.packed_at_gemm_f32(&xh, &dy, cout, &mut dw);
+                    drop(xh);
+                    subtract_pad_dw_contrib(&mut dw, &dy, b, g, cout);
+                } else {
+                    // reference path (real-input first layer / naive
+                    // accel): f32 im2col math, each rows×k buffer
+                    // scoped to die as soon as it is consumed — peak
+                    // one such buffer, not three
+                    dx = {
+                        let wt = self.signed_wt(wi, k, cout);
+                        let mut dcols = vec![0.0f32; rows * k];
+                        self.gemm(rows, cout, k, &dy, &wt, &mut dcols);
+                        col2im(&dcols, b, g)
+                    };
+                    let backend = self.accel.backend();
+                    let cols = {
+                        let xin = &self.acts[2 * wi];
+                        if first {
+                            // real-input layer: im2col the retained
+                            // activation in place, no copy
+                            im2col(xin, b, g)
+                        } else {
+                            let xhat = sign_vec(xin);
+                            im2col(&xhat, b, g)
+                        }
+                    };
+                    backend.gemm_f32_at(rows, k, cout, &cols, &dy, &mut dw);
+                }
+                if !first {
+                    ste_mask_apply(&mut dx, &self.acts[2 * wi]);
+                }
+                cancel_wgrad(&mut dw, &self.weights[wi]);
+                self.opt_w[wi].update(&mut self.weights[wi], &dw, lr, true);
+                self.opt_b[wi].update(&mut self.betas[wi], &dbeta, lr, false);
+                self.wcache.invalidate(wi);
+                Ok(dx)
+            }
+            _ => unreachable!("matmul_backward on a non-matmul layer"),
+        }
+    }
+
+    fn pool_forward(
+        &mut self,
+        cur: Vec<f32>,
+        h: usize,
+        w: usize,
+        c: usize,
+        retain: bool,
+    ) -> Vec<f32> {
+        let (out, mask) = maxpool_forward(&cur, self.batch, h, w, c);
+        if retain {
+            self.pool_masks.push(mask);
+        }
+        out
+    }
+
+    fn pool_backward(&mut self, dnext: Vec<f32>, h: usize, w: usize, c: usize) -> Vec<f32> {
+        let mask = self.pool_masks.pop().expect("pool mask stack underflow");
+        maxpool_backward(&dnext, &mask, self.batch, h, w, c)
     }
 }
 
@@ -589,35 +618,26 @@ pub(crate) fn maxpool_backward(
     dx
 }
 
-/// im2col for stride-1 SAME kxk conv, NHWC: output (B·H·W, k²·Cin).
+/// im2col for any conv geometry, NHWC: output (B·OH·OW, k²·Cin).
 /// The f32 reference the fused `bitops::im2col_packed` is bit-exact
 /// against (and the pre-fusion baseline the conv bench diffs).
-pub fn im2col(
-    x: &[f32],
-    b: usize,
-    h: usize,
-    w: usize,
-    cin: usize,
-    kside: usize,
-) -> Vec<f32> {
-    assert!(kside % 2 == 1, "SAME conv requires an odd kernel side, got {kside}");
-    let k = kside * kside * cin;
-    let pad = (kside - 1) / 2;
-    let mut cols = vec![0.0f32; b * h * w * k];
+pub fn im2col(x: &[f32], b: usize, g: ConvGeom) -> Vec<f32> {
+    assert_eq!(x.len(), g.in_len(b), "NHWC shape mismatch");
+    let k = g.k();
+    let mut cols = vec![0.0f32; g.rows(b) * k];
     for bi in 0..b {
-        for y in 0..h {
-            for x0 in 0..w {
-                let row = ((bi * h + y) * w + x0) * k;
-                let mut idx = row;
-                for ky in 0..kside {
-                    let sy = y as isize + ky as isize - pad as isize;
-                    for kx in 0..kside {
-                        let sx = x0 as isize + kx as isize - pad as isize;
-                        if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
-                            let src = ((bi * h + sy as usize) * w + sx as usize) * cin;
-                            cols[idx..idx + cin].copy_from_slice(&x[src..src + cin]);
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let mut idx = ((bi * g.oh + oy) * g.ow + ox) * k;
+                for ky in 0..g.kside {
+                    let sy = (oy * g.stride + ky) as isize - g.pad_h as isize;
+                    for kx in 0..g.kside {
+                        let sx = (ox * g.stride + kx) as isize - g.pad_w as isize;
+                        if sy >= 0 && sy < g.h as isize && sx >= 0 && sx < g.w as isize {
+                            let src = ((bi * g.h + sy as usize) * g.w + sx as usize) * g.cin;
+                            cols[idx..idx + g.cin].copy_from_slice(&x[src..src + g.cin]);
                         }
-                        idx += cin;
+                        idx += g.cin;
                     }
                 }
             }
@@ -626,37 +646,29 @@ pub fn im2col(
     cols
 }
 
-/// col2im: scatter-add patch grads back to the input grad (SAME, s=1).
-/// The f32 reference the streaming `bitops::conv_dx_streaming` path is
-/// equivalent to (and the pre-fusion baseline the backward bench runs).
-pub fn col2im(
-    dcols: &[f32],
-    b: usize,
-    h: usize,
-    w: usize,
-    cin: usize,
-    kside: usize,
-) -> Vec<f32> {
-    assert!(kside % 2 == 1, "SAME conv requires an odd kernel side, got {kside}");
-    let k = kside * kside * cin;
-    let pad = (kside - 1) / 2;
-    let mut dx = vec![0.0f32; b * h * w * cin];
+/// col2im: scatter-add patch grads back to the input grad (any
+/// geometry).  The f32 reference the streaming
+/// `bitops::conv_dx_streaming` path is equivalent to (and the
+/// pre-fusion baseline the backward bench runs).
+pub fn col2im(dcols: &[f32], b: usize, g: ConvGeom) -> Vec<f32> {
+    let k = g.k();
+    assert_eq!(dcols.len(), g.rows(b) * k, "cols shape mismatch");
+    let mut dx = vec![0.0f32; g.in_len(b)];
     for bi in 0..b {
-        for y in 0..h {
-            for x0 in 0..w {
-                let row = ((bi * h + y) * w + x0) * k;
-                let mut idx = row;
-                for ky in 0..kside {
-                    let sy = y as isize + ky as isize - pad as isize;
-                    for kx in 0..kside {
-                        let sx = x0 as isize + kx as isize - pad as isize;
-                        if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
-                            let dst = ((bi * h + sy as usize) * w + sx as usize) * cin;
-                            for ci in 0..cin {
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let mut idx = ((bi * g.oh + oy) * g.ow + ox) * k;
+                for ky in 0..g.kside {
+                    let sy = (oy * g.stride + ky) as isize - g.pad_h as isize;
+                    for kx in 0..g.kside {
+                        let sx = (ox * g.stride + kx) as isize - g.pad_w as isize;
+                        if sy >= 0 && sy < g.h as isize && sx >= 0 && sx < g.w as isize {
+                            let dst = ((bi * g.h + sy as usize) * g.w + sx as usize) * g.cin;
+                            for ci in 0..g.cin {
                                 dx[dst + ci] += dcols[idx + ci];
                             }
                         }
-                        idx += cin;
+                        idx += g.cin;
                     }
                 }
             }
@@ -665,37 +677,32 @@ pub fn col2im(
     dx
 }
 
-/// Direct SAME stride-1 convolution (naïve mode: no im2col buffer).
-#[allow(clippy::too_many_arguments)]
+/// Direct convolution for any geometry (naïve mode: no im2col buffer).
 pub(crate) fn conv_direct(
     x: &[f32],
     wgt: &[f32], // (k², cin, cout) flattened as kside*kside*cin rows × cout
     b: usize,
-    h: usize,
-    w: usize,
-    cin: usize,
+    g: ConvGeom,
     cout: usize,
-    kside: usize,
 ) -> Vec<f32> {
-    let pad = (kside - 1) / 2;
-    let mut y = vec![0.0f32; b * h * w * cout];
+    let mut y = vec![0.0f32; g.rows(b) * cout];
     for bi in 0..b {
-        for oy in 0..h {
-            for ox in 0..w {
-                let orow = ((bi * h + oy) * w + ox) * cout;
-                for ky in 0..kside {
-                    let sy = oy as isize + ky as isize - pad as isize;
-                    if sy < 0 || sy >= h as isize {
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let orow = ((bi * g.oh + oy) * g.ow + ox) * cout;
+                for ky in 0..g.kside {
+                    let sy = (oy * g.stride + ky) as isize - g.pad_h as isize;
+                    if sy < 0 || sy >= g.h as isize {
                         continue;
                     }
-                    for kx in 0..kside {
-                        let sx = ox as isize + kx as isize - pad as isize;
-                        if sx < 0 || sx >= w as isize {
+                    for kx in 0..g.kside {
+                        let sx = (ox * g.stride + kx) as isize - g.pad_w as isize;
+                        if sx < 0 || sx >= g.w as isize {
                             continue;
                         }
-                        let xrow = ((bi * h + sy as usize) * w + sx as usize) * cin;
-                        let wrow = (ky * kside + kx) * cin;
-                        for ci in 0..cin {
+                        let xrow = ((bi * g.h + sy as usize) * g.w + sx as usize) * g.cin;
+                        let wrow = (ky * g.kside + kx) * g.cin;
+                        for ci in 0..g.cin {
                             let xv = x[xrow + ci];
                             let wr = (wrow + ci) * cout;
                             for co in 0..cout {
@@ -714,7 +721,7 @@ pub(crate) fn conv_direct(
 mod tests {
     use super::*;
     use crate::bitops::gemm::gemm_f32;
-    use crate::models::{get, lower};
+    use crate::models::{get, lower, LayerSpec, ModelSpec};
 
     fn make(model: &str, batch: usize, accel: Accel) -> StandardTrainer {
         let g = lower(&get(model).unwrap()).unwrap();
@@ -765,6 +772,22 @@ mod tests {
     }
 
     #[test]
+    fn residual_net_learns() {
+        // resnete_mini: stem conv + 4 skip blocks (one channel-doubling)
+        let mut t = make("resnete_mini", 16, Accel::Blocked);
+        let (x, y) = toy_batch(16, 16 * 16 * 3, 10, 12);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..25 {
+            let (loss, _) = t.train_step(&x, &y, 0.003).unwrap();
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        assert!(last.is_finite());
+        assert!(last < first.unwrap(), "{first:?} -> {last}");
+    }
+
+    #[test]
     fn naive_and_blocked_agree() {
         let mut a = make("mlp_mini", 8, Accel::Naive);
         let mut b = make("mlp_mini", 8, Accel::Blocked);
@@ -784,9 +807,14 @@ mod tests {
     #[test]
     fn tiled_matches_blocked_exactly() {
         // tiled re-bands the same kernels (and both fuse the binary
-        // conv path identically), so runs are identical — conv models
-        // exercise the bit-im2col + pad-correction pipeline
-        for (model, batch, k) in [("mlp_mini", 8, 64), ("cnv_mini", 4, 16 * 16 * 3)] {
+        // conv path identically), so runs are identical — conv and
+        // residual models exercise the bit-im2col + pad-correction +
+        // skip pipeline
+        for (model, batch, k) in [
+            ("mlp_mini", 8, 64),
+            ("cnv_mini", 4, 16 * 16 * 3),
+            ("bireal_mini", 4, 16 * 16 * 3),
+        ] {
             let mut a = make(model, batch, Accel::Blocked);
             let mut b = make(model, batch, Accel::Tiled(2));
             let (x, y) = toy_batch(batch, k, 10, 3);
@@ -822,6 +850,37 @@ mod tests {
     }
 
     #[test]
+    fn strided_and_valid_convs_train() {
+        // strided SAME + VALID convs end to end on the accelerated
+        // tiers, agreeing with the naive direct-conv reference
+        let spec = ModelSpec {
+            name: "strided_valid".into(),
+            input_shape: vec![12, 12, 3],
+            classes: 10,
+            layers: vec![
+                LayerSpec::conv_s(6, 3, 2).as_first(), // 12 -> 6 SAME s2
+                LayerSpec::conv(8, 3).valid(),         // 6 -> 4 VALID
+                LayerSpec::flatten(),
+                LayerSpec::dense(10),
+            ],
+        };
+        let graph = lower(&spec).unwrap();
+        let (x, y) = toy_batch(4, 12 * 12 * 3, 10, 9);
+        let mut a = StandardTrainer::new(&graph, 4, "sgd", Accel::Naive, 5).unwrap();
+        let mut b = StandardTrainer::new(&graph, 4, "sgd", Accel::Tiled(2), 5).unwrap();
+        for step in 0..3 {
+            let (la, _) = a.train_step(&x, &y, 0.01).unwrap();
+            let (lb, _) = b.train_step(&x, &y, 0.01).unwrap();
+            assert!((la - lb).abs() < 1e-3, "step {step}: {la} vs {lb}");
+        }
+        for (wa, wb) in a.weights_snapshot().iter().zip(b.weights_snapshot().iter()) {
+            for (u, v) in wa.iter().zip(wb) {
+                assert!((u - v).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
     fn weights_packed_at_most_once_per_step() {
         let mut t = make("mlp_mini", 8, Accel::Blocked);
         let (x, y) = toy_batch(8, 64, 10, 9);
@@ -836,31 +895,45 @@ mod tests {
 
     #[test]
     fn conv_direct_matches_im2col_gemm() {
-        let mut g = Pcg32::new(4);
-        let (b, h, w, cin, cout, kside) = (2, 5, 5, 3, 4, 3);
-        let x = g.normal_vec(b * h * w * cin);
-        let wg = g.normal_vec(kside * kside * cin * cout);
-        let direct = conv_direct(&x, &wg, b, h, w, cin, cout, kside);
-        let cols = im2col(&x, b, h, w, cin, kside);
-        let mut gemm_out = vec![0.0f32; b * h * w * cout];
-        gemm_f32(b * h * w, kside * kside * cin, cout, &cols, &wg, &mut gemm_out);
-        for i in 0..direct.len() {
-            assert!((direct[i] - gemm_out[i]).abs() < 1e-4, "{i}");
+        let mut rng = Pcg32::new(4);
+        for g in [
+            ConvGeom::same1(5, 5, 3, 3),
+            ConvGeom::same(8, 8, 3, 3, 2),
+            ConvGeom::valid(7, 7, 2, 3, 1),
+            ConvGeom::valid(9, 9, 2, 3, 2),
+        ] {
+            let b = 2;
+            let cout = 4;
+            let x = rng.normal_vec(g.in_len(b));
+            let wg = rng.normal_vec(g.k() * cout);
+            let direct = conv_direct(&x, &wg, b, g, cout);
+            let cols = im2col(&x, b, g);
+            let mut gemm_out = vec![0.0f32; g.rows(b) * cout];
+            gemm_f32(g.rows(b), g.k(), cout, &cols, &wg, &mut gemm_out);
+            for i in 0..direct.len() {
+                assert!((direct[i] - gemm_out[i]).abs() < 1e-4, "{g:?} @ {i}");
+            }
         }
     }
 
     #[test]
     fn col2im_adjoint_of_im2col() {
-        // <im2col(x), c> == <x, col2im(c)> (adjointness)
-        let mut g = Pcg32::new(5);
-        let (b, h, w, cin, kside) = (1, 4, 4, 2, 3);
-        let x = g.normal_vec(b * h * w * cin);
-        let cvec = g.normal_vec(b * h * w * kside * kside * cin);
-        let cx = im2col(&x, b, h, w, cin, kside);
-        let ic: f32 = cx.iter().zip(&cvec).map(|(a, b)| a * b).sum();
-        let xc = col2im(&cvec, b, h, w, cin, kside);
-        let ci: f32 = x.iter().zip(&xc).map(|(a, b)| a * b).sum();
-        assert!((ic - ci).abs() < 1e-3, "{ic} vs {ci}");
+        // <im2col(x), c> == <x, col2im(c)> (adjointness), any geometry
+        let mut rng = Pcg32::new(5);
+        for g in [
+            ConvGeom::same1(4, 4, 2, 3),
+            ConvGeom::same(7, 7, 2, 3, 2),
+            ConvGeom::valid(6, 6, 3, 3, 1),
+        ] {
+            let b = 1;
+            let x = rng.normal_vec(g.in_len(b));
+            let cvec = rng.normal_vec(g.rows(b) * g.k());
+            let cx = im2col(&x, b, g);
+            let ic: f32 = cx.iter().zip(&cvec).map(|(a, b)| a * b).sum();
+            let xc = col2im(&cvec, b, g);
+            let ci: f32 = x.iter().zip(&xc).map(|(a, b)| a * b).sum();
+            assert!((ic - ci).abs() < 1e-3, "{g:?}: {ic} vs {ci}");
+        }
     }
 
     #[test]
@@ -902,6 +975,19 @@ mod tests {
         let before = t.weights_snapshot();
         t.eval(&x, &y).unwrap();
         assert_eq!(before, t.weights_snapshot());
+    }
+
+    #[test]
+    fn residual_eval_matches_train_forward_value() {
+        // eval (retain = false) must still consume the skip buffers:
+        // identical logits path to the training forward
+        let mut t = make("resnete_mini", 8, Accel::Blocked);
+        let (x, y) = toy_batch(8, 16 * 16 * 3, 10, 13);
+        let (le, _) = t.eval(&x, &y).unwrap();
+        let (lt, _) = t.train_step(&x, &y, 0.0).unwrap();
+        // lr = 0 still updates optimizer state but the forward ran on
+        // the same weights — losses must agree exactly
+        assert_eq!(le, lt);
     }
 
     #[test]

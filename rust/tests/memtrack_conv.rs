@@ -14,7 +14,7 @@
 
 use bnn_edge::bitops::{
     conv_dx_streaming, im2col_packed, packed_at_gemm_f32, subtract_pad_dw_contrib, Backend,
-    BitMatrix, Pool,
+    BitMatrix, ConvGeom, Pool,
 };
 use bnn_edge::memtrack::{measure, TrackingAlloc};
 use bnn_edge::models::{get, lower};
@@ -34,8 +34,9 @@ fn fused_conv_pipeline_eliminates_rows_x_k_f32_buffers() {
 
     // a binary conv shape off the word grid: K = 297 bits
     let (b, h, w, cin, kside) = (2usize, 16usize, 16usize, 33usize, 3usize);
-    let k = kside * kside * cin;
-    let rows = b * h * w;
+    let geom = ConvGeom::same1(h, w, cin, kside);
+    let k = geom.k();
+    let rows = geom.rows(b);
     let cols_bytes = rows * k * 4; // the pre-fusion f32 im2col buffer
     let packed_bytes = rows * k.div_ceil(64) * 8;
 
@@ -45,12 +46,12 @@ fn fused_conv_pipeline_eliminates_rows_x_k_f32_buffers() {
     // pre-fusion: materialize f32 cols, then bit-pack (both live at
     // the pack — the PR-1 binary conv path)
     let (pre_m, pre) = measure(|| {
-        let cols = im2col(&x, b, h, w, cin, kside);
+        let cols = im2col(&x, b, geom);
         std::hint::black_box(BitMatrix::pack(rows, k, &cols))
     });
     // fused: straight to the packed panel
     let (post_m, post) = measure(|| {
-        std::hint::black_box(im2col_packed(&x, b, h, w, cin, kside, &Pool::serial()))
+        std::hint::black_box(im2col_packed(&x, b, geom, &Pool::serial()))
     });
     assert_eq!(post_m, pre_m, "paths must produce identical panels");
 
@@ -95,21 +96,21 @@ fn fused_conv_pipeline_eliminates_rows_x_k_f32_buffers() {
         let wt_f = wt.unpack(); // the signed_wt the engines consumed
         let mut dcols = vec![0.0f32; rows * k];
         gemm_f32(rows, cout, k, &dy, &wt_f, &mut dcols);
-        let dx = col2im(&dcols, b, h, w, cin, kside);
+        let dx = col2im(&dcols, b, geom);
         let xhat: Vec<f32> =
             x.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
-        let cols = im2col(&xhat, b, h, w, cin, kside);
+        let cols = im2col(&xhat, b, geom);
         let colst = transpose(&cols, rows, k);
         let mut dw = vec![0.0f32; k * cout];
         gemm_f32(k, rows, cout, &colst, &dy, &mut dw);
         (dx, dw) // dcols/cols/colst all live to here, as in the engines
     });
     let ((dx2, dw2), post_b) = measure(|| {
-        let dx = conv_dx_streaming(&dy, &wt, b, h, w, cin, kside, Backend::Blocked);
-        let xh = im2col_packed(&x, b, h, w, cin, kside, &Pool::serial());
+        let dx = conv_dx_streaming(&dy, &wt, b, geom, Backend::Blocked);
+        let xh = im2col_packed(&x, b, geom, &Pool::serial());
         let mut dw = vec![0.0f32; k * cout];
         packed_at_gemm_f32(&xh, &dy, cout, &mut dw, &Pool::serial());
-        subtract_pad_dw_contrib(&mut dw, &dy, b, h, w, cin, cout, kside);
+        subtract_pad_dw_contrib(&mut dw, &dy, b, geom, cout);
         (dx, dw)
     });
 
@@ -155,4 +156,42 @@ fn fused_conv_pipeline_eliminates_rows_x_k_f32_buffers() {
     let m_pre = bnn_edge::memmodel::conv_backward_transient(&graph, 100, false);
     let m_post = bnn_edge::memmodel::conv_backward_transient(&graph, 100, true);
     assert!(m_pre.total() / m_post.total() >= 3.0);
+
+    // ---- strided geometry (ResNet stage-entry shape): rows are the
+    // *output* positions, so the fused backward's measured peak must
+    // track rows_out × Cin — pricing input positions (the old
+    // in_elems/pos fallback, stride² larger) would overshoot 4x.
+    let sg = ConvGeom::same(16, 16, 33, 3, 2);
+    let (sb, scout) = (2usize, 32usize);
+    let srows = sg.rows(sb);
+    let sx = g.normal_vec(sg.in_len(sb));
+    let sdy = g.normal_vec(srows * scout);
+    let swt = BitMatrix::pack(scout, sg.k(), &g.normal_vec(scout * sg.k()));
+    let (_sgrads, strided_m) = measure(|| {
+        let dx = conv_dx_streaming(&sdy, &swt, sb, sg, Backend::Blocked);
+        let xh = im2col_packed(&sx, sb, sg, &Pool::serial());
+        let mut dw = vec![0.0f32; sg.k() * scout];
+        packed_at_gemm_f32(&xh, &sdy, scout, &mut dw, &Pool::serial());
+        subtract_pad_dw_contrib(&mut dw, &sdy, sb, sg, scout);
+        (dx, dw)
+    });
+    let s_out_bytes = sg.in_len(sb) * 4 + sg.k() * scout * 4;
+    let s_transient = strided_m.growth().saturating_sub(s_out_bytes);
+    // modeled fused transient: one rows_out × cin panel + the packed
+    // panel + the per-tap weight slice (cout × cin)
+    let s_modeled = srows * sg.cin * 4
+        + srows * sg.k().div_ceil(64) * 8
+        + scout * sg.cin * 4;
+    assert!(
+        s_transient < 2 * s_modeled,
+        "strided fused backward transient {s_transient} vs modeled {s_modeled}"
+    );
+    // and far below one rows_out × k f32 buffer (the pre-fusion floor)
+    assert!(s_transient < srows * sg.k() * 4, "{s_transient}");
+
+    // the lib-side model prices ResNet shapes with exact Cin now
+    let rg = lower(&get("resnete18").unwrap()).unwrap();
+    let rt = bnn_edge::memmodel::conv_backward_transient(&rg, 4, true);
+    assert_eq!(rt.dcols_f32_bytes, 0.0);
+    assert!(rt.panel_f32_bytes > 0.0);
 }

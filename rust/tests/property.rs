@@ -3,7 +3,8 @@
 //! DESIGN.md §Key-invariants.
 
 use bnn_edge::bitops::{
-    col2im_tap_scatter, conv_dx_streaming, gemm, im2col_packed, simd, Backend, BitMatrix, Pool,
+    col2im_tap_scatter, conv_dx_streaming, gemm, im2col_packed, simd, Backend, BitMatrix,
+    ConvGeom, Pool,
 };
 use bnn_edge::data;
 use bnn_edge::federated::sign_vote;
@@ -284,35 +285,53 @@ fn prop_backend_dispatch_agrees_everywhere() {
     }
 }
 
+/// Random conv geometry across the full space the engines now
+/// execute: kside 1/3/5 (plus 7 for SAME), stride 1/2, SAME or VALID.
+fn random_geom(g: &mut Pcg32) -> (usize, ConvGeom) {
+    let b = 1 + g.below(2);
+    let kside = [1usize, 3, 5, 7][g.below(4)];
+    let stride = 1 + g.below(2);
+    let h = kside.max(2) + g.below(5);
+    let w = kside.max(2) + g.below(5);
+    let cin = 1 + g.below(9);
+    let geom = if g.below(2) == 0 {
+        ConvGeom::same(h, w, cin, kside, stride)
+    } else {
+        ConvGeom::valid(h, w, cin, kside, stride)
+    };
+    (b, geom)
+}
+
 #[test]
 fn prop_im2col_packed_matches_reference() {
     // the fused bit-im2col is bit-exact against f32 im2col + pack —
-    // kside 1/3/5, patch widths off the u64 word grid, batch 1/3,
-    // every pool thread count (bands must tile the rows exactly)
+    // SAME and VALID, stride 1/2, kside 1..7, patch widths off the
+    // u64 word grid, every pool thread count (bands must tile the
+    // rows exactly)
     let mut g = Pcg32::new(25);
-    let ksides = [1usize, 3, 5];
     for case in 0..CASES {
-        let kside = ksides[g.below(3)];
-        let b = 1 + 2 * g.below(2); // 1 or 3
-        let h = kside.max(2) + g.below(6);
-        let w = kside.max(2) + g.below(6);
-        let cin = 1 + g.below(70); // k²·cin rarely a multiple of 64
-        let k = kside * kside * cin;
-        let rows = b * h * w;
+        let (b, geom) = if case % 3 == 0 {
+            // keep the wide-cin word-grid offenders of the old sweep
+            let kside = [1usize, 3, 5][g.below(3)];
+            let b = 1 + 2 * g.below(2); // 1 or 3
+            let h = kside.max(2) + g.below(6);
+            let w = kside.max(2) + g.below(6);
+            let cin = 1 + g.below(70); // k²·cin rarely a multiple of 64
+            (b, ConvGeom::same1(h, w, cin, kside))
+        } else {
+            random_geom(&mut g)
+        };
         // exact zeros must pack as +1, like the f32 reference
         let x: Vec<f32> = g
-            .normal_vec(b * h * w * cin)
+            .normal_vec(geom.in_len(b))
             .into_iter()
             .enumerate()
             .map(|(i, v)| if i % 13 == 0 { 0.0 } else { v })
             .collect();
-        let want = BitMatrix::pack(rows, k, &im2col(&x, b, h, w, cin, kside));
+        let want = BitMatrix::pack(geom.rows(b), geom.k(), &im2col(&x, b, geom));
         for threads in [1, 2, 4] {
-            let got = im2col_packed(&x, b, h, w, cin, kside, &Pool::new(threads));
-            assert_eq!(
-                got, want,
-                "case {case} b{b} {h}x{w}x{cin} k{kside} t{threads}"
-            );
+            let got = im2col_packed(&x, b, geom, &Pool::new(threads));
+            assert_eq!(got, want, "case {case} {geom:?} b{b} t{threads}");
         }
     }
 }
@@ -359,32 +378,22 @@ fn prop_simd_gemm_bit_exact_vs_scalar_kernels() {
     }
 }
 
-/// Random stride-1 SAME conv geometry: (b, h, w, cin, kside 1/3/5).
-fn conv_geometry(g: &mut Pcg32) -> (usize, usize, usize, usize, usize) {
-    let kside = [1usize, 3, 5][g.below(3)];
-    let b = 1 + g.below(2);
-    let h = kside.max(2) + g.below(4);
-    let w = kside.max(2) + g.below(4);
-    let cin = 1 + g.below(9);
-    (b, h, w, cin, kside)
-}
-
 /// Apply the streaming col2im operator to a full (rows × k) patch
 /// matrix: per-tap panels scattered via `col2im_tap_scatter` — the
 /// operator form of the fused dX path.
-fn streaming_col2im(c: &[f32], b: usize, h: usize, w: usize, cin: usize, kside: usize) -> Vec<f32> {
-    let k = kside * kside * cin;
-    let rows = b * h * w;
-    let mut dx = vec![0.0f32; b * h * w * cin];
-    let mut panel = vec![0.0f32; rows * cin];
-    for ky in 0..kside {
-        for kx in 0..kside {
-            let tap = ky * kside + kx;
+fn streaming_col2im(c: &[f32], b: usize, g: ConvGeom) -> Vec<f32> {
+    let k = g.k();
+    let rows = g.rows(b);
+    let mut dx = vec![0.0f32; g.in_len(b)];
+    let mut panel = vec![0.0f32; rows * g.cin];
+    for ky in 0..g.kside {
+        for kx in 0..g.kside {
+            let tap = ky * g.kside + kx;
             for r in 0..rows {
-                panel[r * cin..(r + 1) * cin]
-                    .copy_from_slice(&c[r * k + tap * cin..r * k + (tap + 1) * cin]);
+                panel[r * g.cin..(r + 1) * g.cin]
+                    .copy_from_slice(&c[r * k + tap * g.cin..r * k + (tap + 1) * g.cin]);
             }
-            col2im_tap_scatter(&mut dx, &panel, b, h, w, cin, kside, ky, kx);
+            col2im_tap_scatter(&mut dx, &panel, b, g, ky, kx);
         }
     }
     dx
@@ -394,24 +403,22 @@ fn streaming_col2im(c: &[f32], b: usize, h: usize, w: usize, cin: usize, kside: 
 fn prop_streaming_col2im_adjoint_of_im2col() {
     // <im2col(x), c> == <x, streaming_col2im(c)> — the adjointness
     // that makes the tap-streamed dX a correct conv backward, across
-    // kside 1/3/5 and random geometry (dots accumulated in f64)
+    // SAME/VALID, strides and ksides (dots accumulated in f64)
     let mut g = Pcg32::new(27);
     for case in 0..CASES {
-        let (b, h, w, cin, kside) = conv_geometry(&mut g);
-        let k = kside * kside * cin;
-        let rows = b * h * w;
-        let x = g.normal_vec(b * h * w * cin);
-        let c = g.normal_vec(rows * k);
-        let cols = im2col(&x, b, h, w, cin, kside);
+        let (b, geom) = random_geom(&mut g);
+        let x = g.normal_vec(geom.in_len(b));
+        let c = g.normal_vec(geom.rows(b) * geom.k());
+        let cols = im2col(&x, b, geom);
         let lhs: f64 = cols.iter().zip(&c).map(|(a, v)| *a as f64 * *v as f64).sum();
-        let dx = streaming_col2im(&c, b, h, w, cin, kside);
+        let dx = streaming_col2im(&c, b, geom);
         let rhs: f64 = x.iter().zip(&dx).map(|(a, v)| *a as f64 * *v as f64).sum();
         assert!(
             (lhs - rhs).abs() <= 1e-3 * (1.0 + lhs.abs()),
-            "case {case} b{b} {h}x{w}x{cin} k{kside}: {lhs} vs {rhs}"
+            "case {case} {geom:?} b{b}: {lhs} vs {rhs}"
         );
         // and the streaming operator equals the batch col2im
-        let want = col2im(&c, b, h, w, cin, kside);
+        let want = col2im(&c, b, geom);
         for i in 0..want.len() {
             assert!(
                 (dx[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
@@ -427,31 +434,30 @@ fn prop_streaming_col2im_adjoint_of_im2col() {
 fn prop_conv_dx_streaming_matches_prefusion_reference() {
     // the fused dX — tap-streamed panels off the *packed* Ŵᵀ —
     // against the pre-fusion dcols = ∂Y·Ŵᵀ + col2im pipeline, across
-    // backends and thread counts (and exact across fused tiers)
+    // geometries, backends and thread counts (exact across fused tiers)
     let mut g = Pcg32::new(28);
     for case in 0..30 {
-        let (b, h, w, cin, kside) = conv_geometry(&mut g);
-        let k = kside * kside * cin;
-        let rows = b * h * w;
+        let (b, geom) = random_geom(&mut g);
+        let k = geom.k();
+        let rows = geom.rows(b);
         let cout = 1 + g.below(7);
         let dy = g.normal_vec(rows * cout);
         let wt = BitMatrix::pack(cout, k, &g.normal_vec(cout * k));
         let wt_f = wt.unpack();
         let mut dcols = vec![0.0f32; rows * k];
         gemm::gemm_f32(rows, cout, k, &dy, &wt_f, &mut dcols);
-        let want = col2im(&dcols, b, h, w, cin, kside);
-        let first = conv_dx_streaming(&dy, &wt, b, h, w, cin, kside, Backend::Blocked);
+        let want = col2im(&dcols, b, geom);
+        let first = conv_dx_streaming(&dy, &wt, b, geom, Backend::Blocked);
         for i in 0..want.len() {
             assert!(
                 (first[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
-                "case {case} @ {i}: {} vs {}",
+                "case {case} {geom:?} @ {i}: {} vs {}",
                 first[i],
                 want[i]
             );
         }
         for threads in [1, 2, 4] {
-            let got =
-                conv_dx_streaming(&dy, &wt, b, h, w, cin, kside, Backend::Tiled { threads });
+            let got = conv_dx_streaming(&dy, &wt, b, geom, Backend::Tiled { threads });
             assert_eq!(got, first, "case {case} t{threads}");
         }
     }
@@ -481,17 +487,28 @@ fn prop_packed_at_gemm_bit_exact_vs_densified() {
     }
 }
 
-/// Small conv net with a given (odd) kernel side for the train-step
-/// equivalence sweep.
-fn conv_spec(kside: usize) -> ModelSpec {
+/// Small conv net for the train-step equivalence sweep: a stride-1
+/// stem, then either a plain conv (SAME or VALID, any stride) or a
+/// ResNetE-style two-conv residual block (SAME; stride-2 blocks get
+/// the strided channel-doubling shortcut).
+fn conv_spec(kside: usize, stride: usize, valid: bool, residual: bool) -> ModelSpec {
+    let body = if residual {
+        LayerSpec::residual(8, kside, stride, false)
+    } else {
+        let c = LayerSpec::conv_s(6, kside, stride);
+        if valid {
+            c.valid()
+        } else {
+            c
+        }
+    };
     ModelSpec {
-        name: format!("prop_conv_k{kside}"),
-        input_shape: vec![8, 8, 3],
+        name: format!("prop_conv_k{kside}_s{stride}_v{valid}_r{residual}"),
+        input_shape: vec![12, 12, 3],
         classes: 10,
         layers: vec![
-            LayerSpec::conv(5, kside).as_first(),
-            LayerSpec::conv(6, kside),
-            LayerSpec::maxpool(),
+            LayerSpec::conv(4, 3).as_first(),
+            body,
             LayerSpec::flatten(),
             LayerSpec::dense(10),
         ],
@@ -502,14 +519,27 @@ fn conv_spec(kside: usize) -> ModelSpec {
 fn train_step_fused_backward_matches_prefusion_reference() {
     // full train-step gradient equivalence: the fused conv backward
     // (streaming dX + packed dW) against the pre-fusion reference
-    // path (kept under Accel::Naive), both engines, kside 1/3/5,
-    // threads 1/2/4.  SGD keeps the update linear in the gradient, so
-    // the layer-level 1e-4 gradient agreement carries to the weights.
+    // path (kept under Accel::Naive), both engines, across the whole
+    // geometry space the engines now execute — kside 3/5/7, stride
+    // 1/2, SAME and VALID, residual on/off — and threads 1/2/4.  SGD
+    // keeps the update linear in the gradient, so the layer-level
+    // 1e-4 gradient agreement carries to the weights.
     let mut g = Pcg32::new(30);
-    for kside in [1usize, 3, 5] {
-        let graph = lower(&conv_spec(kside)).unwrap();
+    let mut configs: Vec<(usize, usize, bool, bool)> = Vec::new();
+    for kside in [3usize, 5, 7] {
+        for stride in [1usize, 2] {
+            configs.push((kside, stride, false, false)); // SAME
+            configs.push((kside, stride, true, false)); // VALID
+            configs.push((kside, stride, false, true)); // SAME residual
+        }
+    }
+    // kside 1 keeps the legacy pad-free case covered
+    configs.push((1, 1, false, false));
+    for (kside, stride, valid, residual) in configs {
+        let tag = format!("k{kside} s{stride} valid={valid} res={residual}");
+        let graph = lower(&conv_spec(kside, stride, valid, residual)).unwrap();
         let batch = 4;
-        let x = g.normal_vec(batch * 8 * 8 * 3);
+        let x = g.normal_vec(batch * 12 * 12 * 3);
         let y: Vec<usize> = (0..batch).map(|i| i % 10).collect();
 
         // standard engine: reference vs every fused tier
@@ -522,11 +552,11 @@ fn train_step_fused_backward_matches_prefusion_reference() {
             let (l, _) = t.train_step(&x, &y, 0.01).unwrap();
             assert!(
                 (l - rl).abs() <= 1e-4 * (1.0 + rl.abs()),
-                "std k{kside} {accel:?}: {l} vs {rl}"
+                "std {tag} {accel:?}: {l} vs {rl}"
             );
             for (wa, wb) in rw.iter().zip(t.weights_snapshot().iter()) {
                 for (u, v) in wa.iter().zip(wb) {
-                    assert!((u - v).abs() <= 1e-4, "std k{kside} {accel:?}: {u} vs {v}");
+                    assert!((u - v).abs() <= 1e-4, "std {tag} {accel:?}: {u} vs {v}");
                 }
             }
         }
@@ -545,9 +575,9 @@ fn train_step_fused_backward_matches_prefusion_reference() {
                 ProposedTrainer::new(&graph, batch, "sgd", Accel::Tiled(threads), 7).unwrap();
             for (si, &want) in losses.iter().enumerate() {
                 let (l, _) = t.train_step(&x, &y, 0.01).unwrap();
-                assert_eq!(l, want, "prop k{kside} t{threads} step {si}");
+                assert_eq!(l, want, "prop {tag} t{threads} step {si}");
             }
-            assert_eq!(t.weights_snapshot(), bw, "prop k{kside} t{threads}");
+            assert_eq!(t.weights_snapshot(), bw, "prop {tag} t{threads}");
         }
         // ...and the naive reference tracks the fused trajectory (the
         // packed ∂Ŵ sign quantization can amplify a ~1e-6 dX
@@ -561,8 +591,51 @@ fn train_step_fused_backward_matches_prefusion_reference() {
         let bl = *losses.last().unwrap();
         assert!(
             (nl - bl).abs() <= 2e-2 * (1.0 + bl.abs()),
-            "prop k{kside}: naive {nl} vs fused {bl}"
+            "prop {tag}: naive {nl} vs fused {bl}"
         );
+    }
+}
+
+#[test]
+fn residual_minis_fused_matches_reference_across_threads() {
+    // the ISSUE acceptance bar: resnete_mini / bireal_mini
+    // fused-vs-reference gradients agree at 1e-4 across threads 1/2/4
+    let mut g = Pcg32::new(31);
+    for model in ["resnete_mini", "bireal_mini"] {
+        let graph = lower(&get(model).unwrap()).unwrap();
+        let batch = 4;
+        let x = g.normal_vec(batch * 16 * 16 * 3);
+        let y: Vec<usize> = (0..batch).map(|i| i % 10).collect();
+        let mut reference =
+            StandardTrainer::new(&graph, batch, "sgd", Accel::Naive, 11).unwrap();
+        let (rl, _) = reference.train_step(&x, &y, 0.01).unwrap();
+        let rw = reference.weights_snapshot();
+        for threads in [1usize, 2, 4] {
+            let mut t =
+                StandardTrainer::new(&graph, batch, "sgd", Accel::Tiled(threads), 11).unwrap();
+            let (l, _) = t.train_step(&x, &y, 0.01).unwrap();
+            assert!(
+                (l - rl).abs() <= 1e-4 * (1.0 + rl.abs()),
+                "{model} t{threads}: {l} vs {rl}"
+            );
+            for (wa, wb) in rw.iter().zip(t.weights_snapshot().iter()) {
+                for (u, v) in wa.iter().zip(wb) {
+                    assert!((u - v).abs() <= 1e-4, "{model} t{threads}: {u} vs {v}");
+                }
+            }
+        }
+        // proposed engine: fused tiers identical across threads
+        let mut blocked =
+            ProposedTrainer::new(&graph, batch, "sgd", Accel::Blocked, 11).unwrap();
+        let (bl, _) = blocked.train_step(&x, &y, 0.01).unwrap();
+        let bw = blocked.weights_snapshot();
+        for threads in [1usize, 2, 4] {
+            let mut t =
+                ProposedTrainer::new(&graph, batch, "sgd", Accel::Tiled(threads), 11).unwrap();
+            let (l, _) = t.train_step(&x, &y, 0.01).unwrap();
+            assert_eq!(l, bl, "{model} t{threads}");
+            assert_eq!(t.weights_snapshot(), bw, "{model} t{threads}");
+        }
     }
 }
 
