@@ -52,25 +52,52 @@ fn main() -> Result<()> {
     println!("{}", report::table2(&std, &prop));
 
     // Measured (tracking allocator) vs modeled, naive engines on the
-    // paper's MLP — the Fig. 6 methodology in miniature.
+    // paper's MLP — the Fig. 6 methodology in miniature.  Since the
+    // step-arena work the interesting split is *first step* (the
+    // warmup that populates the arena pool) vs *steady state* (every
+    // later step: zero heap allocations, peak growth ~0 because all
+    // buffers come from the resident pool).
     let g = lower(&get("mlp")?)?;
     let batch = 100;
     let ds = build("syn-mnist", batch, 0, 1)?;
     let x = ds.train_x.clone();
     let y = ds.train_y.clone();
-    println!("measured peak heap while training one step (MLP, B={batch}):");
+    println!("measured heap while training (MLP, B={batch}, blocked backend):");
     for algo in ["standard", "proposed"] {
-        let mut engine = build_engine(algo, &g, batch, "adam", Accel::Naive, 1)?;
-        // warm once so lazily-allocated state exists, then measure
-        engine.train_step(&x, &y, 0.001)?;
-        let (_, stats) = memtrack::measure(|| engine.train_step(&x, &y, 0.001));
+        let mut engine = build_engine(algo, &g, batch, "adam", Accel::Blocked, 1)?;
+        let (_, first) = memtrack::measure(|| engine.train_step(&x, &y, 0.001));
+        let (_, steady) = memtrack::measure(|| engine.train_step(&x, &y, 0.001));
         let dt = DtypeConfig::ablation(algo).unwrap();
         let modeled = breakdown(&g, batch, &dt, Optimizer::Adam).total_bytes() / MIB;
         let state = engine.state_bytes() as f64 / MIB;
+        let arena = engine.arena_bytes() as f64 / MIB;
         println!(
-            "  {algo:>9}: peak-growth {:.2} MiB + persistent {state:.2} MiB  (modeled total {modeled:.2} MiB)",
-            stats.growth_mib()
+            "  {algo:>9}: first step peak-growth {:.2} MiB / {} allocs -> steady step \
+             peak-growth {:.2} MiB / {} allocs",
+            first.growth_mib(),
+            first.allocs,
+            steady.growth_mib(),
+            steady.allocs
         );
+        println!(
+            "             resident: state {state:.2} MiB + step arena {arena:.2} MiB  \
+             (paper-modeled step total {modeled:.2} MiB)"
+        );
+        // the planned envelope (state + scheduled arena), per microbatch
+        for micro in [0usize, batch / 4] {
+            let env = bnn_edge::memmodel::step_envelope(
+                &g,
+                algo,
+                Optimizer::Adam,
+                batch,
+                micro,
+            )?;
+            println!(
+                "             step_envelope(micro={:>3}): {:.2} MiB",
+                if micro == 0 { batch } else { micro },
+                env.total_mib()
+            );
+        }
     }
     Ok(())
 }

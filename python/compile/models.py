@@ -166,9 +166,13 @@ def param_shapes(spec: ModelSpec):
             ch = l.out
         elif l.kind == "residual":
             # first conv may double channels; ResNetE blocks add a
-            # second (channel-preserving) conv under the same skip
+            # second (channel-preserving, stride-1) conv under the
+            # same skip
             shapes.append(((l.kernel, l.kernel, ch, l.out), (l.out,)))
             ch = l.out
+            if l.stride > 1:
+                # SAME conv: out = ceil(in / stride)
+                spatial = (-(-spatial[0] // l.stride), -(-spatial[1] // l.stride))
             if not l.bireal:
                 shapes.append(((l.kernel, l.kernel, ch, ch), (ch,)))
         elif l.kind == "pool":
@@ -223,26 +227,37 @@ def apply_model(spec: ModelSpec, cfg: L.TrainConfig, params, x):
             h = L.bn_channelwise(y, beta, cfg)
             binarize_next = True
         elif l.kind == "residual":
-            # Bi-Real: skip around every conv; ResNetE: skip around a
-            # 2-conv block.  Skips are high-precision (f32) — the
-            # accuracy enhancement the paper incorporates (Sec. 2).
-            def conv_bn(hh):
+            # Bi-Real: skip around the single conv; ResNetE: one skip
+            # around the 2-conv block, the *second* conv at stride 1
+            # (the lowering convention the Rust engines implement —
+            # the old code applied l.stride to both block convs and
+            # skipped around each conv separately, which is why the
+            # HLO runtime rejected residual train-side goldens; see
+            # ROADMAP PR-4/PR-5 notes).  Skips are high-precision
+            # (f32) — the accuracy enhancement the paper incorporates
+            # (Sec. 2) — and the downsample shortcut is
+            # parameter-free: strided 1×1 subsample + channel
+            # duplication, matching naive::ops::skip_add.
+            def conv_bn(hh, stride):
                 w, beta = take()
                 y = L.binary_conv(L.binarize(hh, cfg), w, cfg,
-                                  first=False, stride=l.stride)
+                                  first=False, stride=stride)
                 return L.bn_channelwise(y, beta, cfg)
 
             def add_skip(y, skip):
+                if l.stride > 1:
+                    # strided subsample picks rows/cols 0, s, 2s, ...
+                    # (out = ceil(in/s), the conv path's grid)
+                    skip = skip[:, ::l.stride, ::l.stride, :]
                 if skip.shape[-1] != y.shape[-1]:
                     # parameter-free channel-doubling expansion
                     skip = jnp.concatenate([skip, skip], axis=-1)
                 return y + skip
 
             if l.bireal:
-                h = add_skip(conv_bn(h), h)
+                h = add_skip(conv_bn(h, l.stride), h)
             else:
-                mid = add_skip(conv_bn(h), h)
-                h = add_skip(conv_bn(mid), mid)
+                h = add_skip(conv_bn(conv_bn(h, l.stride), 1), h)
             binarize_next = True
         elif l.kind == "pool":
             h = L.maxpool2(h)

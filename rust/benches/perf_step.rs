@@ -1,0 +1,112 @@
+//! §Perf whole-step bench — the planned-arena training step, swept
+//! across the zoo, both engines, backends and microbatch settings.
+//!
+//! Measures what the step-arena work actually delivers:
+//!
+//! - `steps_per_sec` — end-to-end training-step throughput (forward +
+//!   backward + update; the steady state is allocation-free, so this
+//!   is pure kernel time after the warmup step);
+//! - `steady_state_bytes` — the **measured** resident footprint after
+//!   warmup: `state_bytes()` (weights, momenta, accumulators, packed
+//!   weight cache) + `arena_bytes()` (the recycled step pool);
+//! - `envelope_bytes` — `memmodel::step_envelope`'s planned twin.
+//!   CI diffs the two and fails on >10% divergence (the regression
+//!   gate for both the planner and the engines' buffer discipline).
+//!
+//! Emits `BENCH_step.json` (stable schema: `{engine, model, backend,
+//! threads, batch, microbatch, steps_per_sec, steady_state_bytes,
+//! envelope_bytes}`).  Flags: `--smoke` (trimmed sweep for CI),
+//! `--out PATH` (default `BENCH_step.json`).
+
+use bnn_edge::memmodel::{step_envelope, Optimizer};
+use bnn_edge::models::{get, lower};
+use bnn_edge::naive::{build_engine_micro, Accel};
+use bnn_edge::util::bench::{write_json_rows, Bencher};
+use bnn_edge::util::cli::Args;
+use bnn_edge::util::json::Json;
+use bnn_edge::util::rng::Pcg32;
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.bool("smoke");
+    let out_path = args.str_or("out", "BENCH_step.json");
+    let mut bench = if smoke { Bencher::quick() } else { Bencher::default() };
+
+    // (model, batch, microbatches to sweep)
+    let sweep: Vec<(&str, usize, Vec<usize>)> = if smoke {
+        vec![
+            ("cnv_mini", 16, vec![0, 4]),
+            ("binarynet_mini", 16, vec![0, 4]),
+        ]
+    } else {
+        vec![
+            ("mlp_mini", 64, vec![0, 16]),
+            ("cnv_mini", 32, vec![0, 8]),
+            ("binarynet_mini", 64, vec![0, 16]),
+            ("bireal_mini", 16, vec![0, 4]),
+            ("resnete_mini", 16, vec![0, 4]),
+        ]
+    };
+    let backends: Vec<(Accel, &str, usize)> = if smoke {
+        vec![(Accel::Tiled(1), "tiled", 1), (Accel::Tiled(2), "tiled", 2)]
+    } else {
+        vec![
+            (Accel::Blocked, "blocked", 1),
+            (Accel::Tiled(1), "tiled", 1),
+            (Accel::Tiled(2), "tiled", 2),
+        ]
+    };
+
+    let mut rows = Vec::new();
+    let mut rng = Pcg32::new(7);
+    for (model, batch, micros) in &sweep {
+        let batch = *batch;
+        let graph = lower(&get(model).unwrap()).unwrap();
+        let x = rng.normal_vec(batch * graph.input_elems);
+        let y: Vec<usize> = (0..batch).map(|i| i % graph.classes).collect();
+        for micro in micros {
+            for (accel, bname, threads) in &backends {
+                for algo in ["standard", "proposed"] {
+                    let mut e = build_engine_micro(
+                        algo, &graph, batch, *micro, "adam", *accel, 1,
+                    )
+                    .unwrap();
+                    // two warmup steps populate the arena pool (one
+                    // reaches the fixed point on these traces; the
+                    // second is margin), and the footprint is sampled
+                    // *after* the bench loop so any residual growth
+                    // during the timed steps is captured
+                    e.train_step(&x, &y, 0.001).unwrap();
+                    e.train_step(&x, &y, 0.001).unwrap();
+                    let label = format!(
+                        "{algo:>8} {model} b{batch} m{} {bname} t{threads}",
+                        if *micro == 0 { batch } else { *micro }
+                    );
+                    let r = bench.bench(&label, || {
+                        e.train_step(&x, &y, 0.001).unwrap();
+                    });
+                    let sps = 1.0 / r.median_s();
+                    let steady = e.state_bytes() + e.arena_bytes();
+                    let env = step_envelope(&graph, algo, Optimizer::Adam, batch, *micro)
+                        .unwrap();
+                    let mut row = Json::obj();
+                    row.set("engine", Json::from(algo));
+                    row.set("model", Json::from(*model));
+                    row.set("backend", Json::from(*bname));
+                    row.set("threads", Json::from(*threads));
+                    row.set("batch", Json::from(batch));
+                    row.set(
+                        "microbatch",
+                        Json::from(if *micro == 0 { batch } else { *micro }),
+                    );
+                    row.set("steps_per_sec", Json::from(sps));
+                    row.set("steady_state_bytes", Json::from(steady));
+                    row.set("envelope_bytes", Json::from(env.total_bytes()));
+                    rows.push(row);
+                }
+            }
+        }
+    }
+    write_json_rows(&out_path, rows).expect("write BENCH_step.json");
+    println!("wrote {out_path}");
+}

@@ -9,6 +9,12 @@
 //! amortized pack cost drops to one pack per layer per step — the
 //! invariant the pack-count probe in the engine tests pins down.
 //!
+//! Since the step-arena work, invalidation marks entries *stale
+//! without dropping their storage*: the next pack rewrites the same
+//! word buffers in place, so steady-state training steps repack
+//! weights with **zero heap allocations** (the fill closures write
+//! via `BitMatrix::pack_into` / `transpose_into`).
+//!
 //! Two layouts are cached per layer, both lazily:
 //! - `w`  — packed Ŵ   (k×n), what the standard engine's forward uses;
 //! - `wt` — packed Ŵᵀ  (n×k), what the XNOR GEMM and the dX matmul
@@ -20,16 +26,24 @@ use super::BitMatrix;
 
 #[derive(Debug, Default)]
 pub struct PackedWeightCache {
-    w: Vec<Option<BitMatrix>>,
-    wt: Vec<Option<BitMatrix>>,
+    w: Vec<BitMatrix>,
+    w_valid: Vec<bool>,
+    wt: Vec<BitMatrix>,
+    wt_valid: Vec<bool>,
     packs: usize,
+}
+
+fn empty() -> BitMatrix {
+    BitMatrix { rows: 0, cols: 0, words_per_row: 0, data: Vec::new() }
 }
 
 impl PackedWeightCache {
     pub fn new(layers: usize) -> PackedWeightCache {
         PackedWeightCache {
-            w: (0..layers).map(|_| None).collect(),
-            wt: (0..layers).map(|_| None).collect(),
+            w: (0..layers).map(|_| empty()).collect(),
+            w_valid: vec![false; layers],
+            wt: (0..layers).map(|_| empty()).collect(),
+            wt_valid: vec![false; layers],
             packs: 0,
         }
     }
@@ -38,53 +52,59 @@ impl PackedWeightCache {
         self.w.len()
     }
 
-    /// Cached packed Ŵ for layer `wi`, packing via `pack` on miss.
-    pub fn w(&mut self, wi: usize, pack: impl FnOnce() -> BitMatrix) -> &BitMatrix {
-        if self.w[wi].is_none() {
-            self.w[wi] = Some(pack());
+    /// Cached packed Ŵ for layer `wi`; on a miss `fill` rewrites the
+    /// retained storage in place (use `BitMatrix::pack_into`).
+    pub fn w(&mut self, wi: usize, fill: impl FnOnce(&mut BitMatrix)) -> &BitMatrix {
+        if !self.w_valid[wi] {
+            fill(&mut self.w[wi]);
+            self.w_valid[wi] = true;
             self.packs += 1;
         }
-        self.w[wi].as_ref().unwrap()
+        &self.w[wi]
     }
 
-    /// Cached packed Ŵᵀ for layer `wi`, packing via `pack_t` on miss.
-    pub fn wt(&mut self, wi: usize, pack_t: impl FnOnce() -> BitMatrix) -> &BitMatrix {
-        if self.wt[wi].is_none() {
-            self.wt[wi] = Some(pack_t());
+    /// Cached packed Ŵᵀ for layer `wi`; `fill_t` rewrites in place on
+    /// a miss.
+    pub fn wt(&mut self, wi: usize, fill_t: impl FnOnce(&mut BitMatrix)) -> &BitMatrix {
+        if !self.wt_valid[wi] {
+            fill_t(&mut self.wt[wi]);
+            self.wt_valid[wi] = true;
             self.packs += 1;
         }
-        self.wt[wi].as_ref().unwrap()
+        &self.wt[wi]
     }
 
     /// Cached packed Ŵᵀ derived from (possibly cached) Ŵ by block
-    /// transpose; `pack_w` fills Ŵ on a double miss.  The transpose
+    /// transpose; `fill_w` fills Ŵ on a double miss.  The transpose
     /// is word-level and does not count as a pack.
     pub fn wt_via_transpose(
         &mut self,
         wi: usize,
-        pack_w: impl FnOnce() -> BitMatrix,
+        fill_w: impl FnOnce(&mut BitMatrix),
     ) -> &BitMatrix {
-        if self.wt[wi].is_none() {
-            if self.w[wi].is_none() {
-                self.w[wi] = Some(pack_w());
+        if !self.wt_valid[wi] {
+            if !self.w_valid[wi] {
+                fill_w(&mut self.w[wi]);
+                self.w_valid[wi] = true;
                 self.packs += 1;
             }
-            self.wt[wi] = Some(self.w[wi].as_ref().unwrap().transpose());
+            self.w[wi].transpose_into(&mut self.wt[wi]);
+            self.wt_valid[wi] = true;
         }
-        self.wt[wi].as_ref().unwrap()
+        &self.wt[wi]
     }
 
-    /// Drop layer `wi`'s cached representations (its weights changed).
+    /// Mark layer `wi` stale (its weights changed).  Storage is
+    /// retained for the in-place repack.
     pub fn invalidate(&mut self, wi: usize) {
-        self.w[wi] = None;
-        self.wt[wi] = None;
+        self.w_valid[wi] = false;
+        self.wt_valid[wi] = false;
     }
 
-    /// Drop everything (end-of-step bulk update / snapshot load).
+    /// Mark everything stale (end-of-step bulk update / snapshot load).
     pub fn invalidate_all(&mut self) {
-        for e in self.w.iter_mut().chain(self.wt.iter_mut()) {
-            *e = None;
-        }
+        self.w_valid.fill(false);
+        self.wt_valid.fill(false);
     }
 
     /// Total packs performed since construction — the probe the
@@ -93,14 +113,10 @@ impl PackedWeightCache {
         self.packs
     }
 
-    /// Live cached bytes (for memory accounting).
+    /// Resident cached bytes (storage persists across invalidation —
+    /// that persistence is what makes steady-state repacks free).
     pub fn heap_bytes(&self) -> usize {
-        self.w
-            .iter()
-            .chain(self.wt.iter())
-            .flatten()
-            .map(BitMatrix::heap_bytes)
-            .sum()
+        self.w.iter().chain(self.wt.iter()).map(BitMatrix::heap_bytes).sum()
     }
 }
 
@@ -115,16 +131,32 @@ mod tests {
         let xs = g.normal_vec(6 * 70);
         let mut c = PackedWeightCache::new(2);
         for _ in 0..3 {
-            let m = c.wt(0, || BitMatrix::pack(6, 70, &xs));
+            let m = c.wt(0, |dst| BitMatrix::pack_into(6, 70, &xs, dst));
             assert_eq!(m.rows, 6);
         }
         assert_eq!(c.pack_count(), 1);
         c.invalidate(0);
-        c.wt(0, || BitMatrix::pack(6, 70, &xs));
+        c.wt(0, |dst| BitMatrix::pack_into(6, 70, &xs, dst));
         assert_eq!(c.pack_count(), 2);
         assert!(c.heap_bytes() > 0);
+        // invalidation keeps the storage resident for in-place repacks
+        let resident = c.heap_bytes();
         c.invalidate_all();
-        assert_eq!(c.heap_bytes(), 0);
+        assert_eq!(c.heap_bytes(), resident);
+    }
+
+    #[test]
+    fn repack_after_invalidate_reuses_storage() {
+        let mut g = Pcg32::new(14);
+        let xs = g.normal_vec(9 * 128);
+        let ys = g.normal_vec(9 * 128);
+        let mut c = PackedWeightCache::new(1);
+        c.w(0, |dst| BitMatrix::pack_into(9, 128, &xs, dst));
+        let cap0 = c.heap_bytes();
+        c.invalidate(0);
+        let m = c.w(0, |dst| BitMatrix::pack_into(9, 128, &ys, dst)).clone();
+        assert_eq!(c.heap_bytes(), cap0, "same storage, no growth");
+        assert_eq!(m, BitMatrix::pack(9, 128, &ys), "repack sees new weights");
     }
 
     #[test]
@@ -132,13 +164,15 @@ mod tests {
         let mut g = Pcg32::new(13);
         let xs = g.normal_vec(9 * 33);
         let mut c = PackedWeightCache::new(1);
-        let w = c.w(0, || BitMatrix::pack(9, 33, &xs)).clone();
-        let wt = c.wt_via_transpose(0, || panic!("w already cached")).clone();
+        let w = c.w(0, |dst| BitMatrix::pack_into(9, 33, &xs, dst)).clone();
+        let wt = c.wt_via_transpose(0, |_| panic!("w already cached")).clone();
         assert_eq!(c.pack_count(), 1);
         assert_eq!(wt, w.transpose());
         // double miss packs exactly once
         let mut c2 = PackedWeightCache::new(1);
-        let wt2 = c2.wt_via_transpose(0, || BitMatrix::pack(9, 33, &xs)).clone();
+        let wt2 = c2
+            .wt_via_transpose(0, |dst| BitMatrix::pack_into(9, 33, &xs, dst))
+            .clone();
         assert_eq!(c2.pack_count(), 1);
         assert_eq!(wt2, wt);
     }

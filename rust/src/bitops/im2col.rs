@@ -95,13 +95,25 @@ fn pack_patch(x: &[f32], words: &mut [u64], bi: usize, oy: usize, ox: usize, g: 
 /// output rows via `pool` (each worker owns a disjoint band of packed
 /// rows).
 pub fn im2col_packed(x: &[f32], b: usize, g: ConvGeom, pool: &Pool) -> BitMatrix {
+    let mut m = BitMatrix::zeros(g.rows(b), g.k());
+    im2col_packed_into(x, b, g, pool, &mut m);
+    m
+}
+
+/// [`im2col_packed`] into caller-owned storage: `out` is reshaped
+/// (word buffer reused, no allocation when capacity suffices) and
+/// re-zeroed before packing (patch packing ORs bits into the words).
+/// The steady-state engines route every per-step bit-im2col through
+/// this with an arena-recycled panel.
+pub fn im2col_packed_into(x: &[f32], b: usize, g: ConvGeom, pool: &Pool, out: &mut BitMatrix) {
     assert_eq!(x.len(), g.in_len(b), "NHWC shape mismatch");
     let k = g.k();
     let rows = g.rows(b);
-    let mut m = BitMatrix::zeros(rows, k);
-    let wpr = m.words_per_row;
+    out.reshape(rows, k);
+    out.data.fill(0);
+    let wpr = out.words_per_row;
     let per_sample = g.oh * g.ow;
-    pool.run_rows(rows, wpr, &mut m.data, |r0, band| {
+    pool.run_rows(rows, wpr, &mut out.data, |r0, band| {
         for (i, words) in band.chunks_mut(wpr).enumerate() {
             let r = r0 + i;
             let bi = r / per_sample;
@@ -109,7 +121,6 @@ pub fn im2col_packed(x: &[f32], b: usize, g: ConvGeom, pool: &Pool) -> BitMatrix
             pack_patch(x, words, bi, rem / g.ow, rem % g.ow, &g);
         }
     });
-    m
 }
 
 /// Popcount of the bit range `[start, end)` of a packed row.
@@ -156,6 +167,24 @@ fn interior(oy: usize, ox: usize, g: &ConvGeom) -> bool {
 /// the (B·OH·OW × Cout) conv output in place.  No-op for unpadded
 /// (VALID / 1×1) geometries.
 pub fn subtract_pad_contrib(y: &mut [f32], wt: &BitMatrix, b: usize, g: ConvGeom) {
+    if !same_overhangs(&g) {
+        return;
+    }
+    let mut t = vec![0.0f32; g.kside * g.kside * wt.rows];
+    subtract_pad_contrib_with(y, wt, b, g, &mut t);
+}
+
+/// [`subtract_pad_contrib`] with caller-owned scratch: `scratch` is
+/// the (k² × cout) per-tap weight-sum table, fully overwritten, so
+/// arena-recycled dirty storage is fine.  Still a no-op (scratch
+/// untouched) for unpadded geometries.
+pub fn subtract_pad_contrib_with(
+    y: &mut [f32],
+    wt: &BitMatrix,
+    b: usize,
+    g: ConvGeom,
+    scratch: &mut [f32],
+) {
     // a geometry can overhang bottom/right even with zero top/left pad
     // only via SAME-stride interplay; cheapest exact test is below per
     // position, but fully unpadded geometries never overhang at all
@@ -168,7 +197,8 @@ pub fn subtract_pad_contrib(y: &mut [f32], wt: &BitMatrix, b: usize, g: ConvGeom
     debug_assert_eq!(wt.cols, kk * cin);
     debug_assert_eq!(y.len(), g.rows(b) * cout);
     // per-tap channel-summed ±1 weights: T[tap][j] = 2·ones − cin
-    let mut t = vec![0.0f32; kk * cout];
+    let t = scratch;
+    assert_eq!(t.len(), kk * cout, "pad-contrib scratch mismatch");
     for j in 0..cout {
         let rw = wt.row_words(j);
         for tap in 0..kk {
@@ -284,14 +314,37 @@ pub fn conv_dx_streaming(
     g: ConvGeom,
     backend: Backend,
 ) -> Vec<f32> {
+    let mut dx = vec![0.0f32; g.in_len(b)];
+    let mut panel = vec![0.0f32; g.rows(b) * g.cin];
+    let mut wtap = vec![0.0f32; wt.rows * g.cin];
+    conv_dx_streaming_into(dy, wt, b, g, backend, &mut dx, &mut panel, &mut wtap);
+    dx
+}
+
+/// [`conv_dx_streaming`] into caller-owned buffers: `dx` must be
+/// **zeroed** (`g.in_len(b)` — taps scatter-add into it), while
+/// `panel` (rows × cin) and `wtap` (cout × cin) are pure scratch that
+/// is fully overwritten per tap, so arena-recycled dirty storage is
+/// fine for both.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_dx_streaming_into(
+    dy: &[f32],
+    wt: &BitMatrix,
+    b: usize,
+    g: ConvGeom,
+    backend: Backend,
+    dx: &mut [f32],
+    panel: &mut [f32],
+    wtap: &mut [f32],
+) {
     let cout = wt.rows;
     let rows = g.rows(b);
     assert_eq!(dy.len(), rows * cout, "dY shape mismatch");
     assert_eq!(wt.cols, g.k(), "Ŵᵀ shape mismatch");
     let cin = g.cin;
-    let mut dx = vec![0.0f32; g.in_len(b)];
-    let mut panel = vec![0.0f32; rows * cin];
-    let mut wtap = vec![0.0f32; cout * cin];
+    assert_eq!(dx.len(), g.in_len(b), "dX shape mismatch");
+    assert_eq!(panel.len(), rows * cin, "panel scratch mismatch");
+    assert_eq!(wtap.len(), cout * cin, "wtap scratch mismatch");
     for ky in 0..g.kside {
         for kx in 0..g.kside {
             let tap = ky * g.kside + kx;
@@ -305,11 +358,10 @@ pub fn conv_dx_streaming(
                     *v = if words[c >> 6] >> (c & 63) & 1 == 1 { 1.0 } else { -1.0 };
                 }
             }
-            backend.gemm_f32(rows, cout, cin, dy, &wtap, &mut panel);
-            col2im_tap_scatter(&mut dx, &panel, b, g, ky, kx);
+            backend.gemm_f32(rows, cout, cin, dy, wtap, panel);
+            col2im_tap_scatter(dx, panel, b, g, ky, kx);
         }
     }
-    dx
 }
 
 /// Masked padding correction for the packed-activation dW of the
@@ -330,11 +382,31 @@ pub fn subtract_pad_dw_contrib(
     if !same_overhangs(&g) {
         return;
     }
+    let mut bs = vec![0.0f32; g.kside * g.kside * cout];
+    subtract_pad_dw_contrib_with(dw, dy, b, g, cout, &mut bs);
+}
+
+/// [`subtract_pad_dw_contrib`] with caller-owned scratch: `scratch`
+/// is the (k² × cout) border-∂Y sum table (re-zeroed here, recycled
+/// dirty storage fine).  No-op for unpadded geometries.
+pub fn subtract_pad_dw_contrib_with(
+    dw: &mut [f32],
+    dy: &[f32],
+    b: usize,
+    g: ConvGeom,
+    cout: usize,
+    scratch: &mut [f32],
+) {
+    if !same_overhangs(&g) {
+        return;
+    }
     let kk = g.kside * g.kside;
     debug_assert_eq!(dw.len(), kk * g.cin * cout);
     debug_assert_eq!(dy.len(), g.rows(b) * cout);
     // border ∂Y sums per tap
-    let mut bs = vec![0.0f32; kk * cout];
+    let bs = scratch;
+    assert_eq!(bs.len(), kk * cout, "pad-dW scratch mismatch");
+    bs.fill(0.0);
     for bi in 0..b {
         for oy in 0..g.oh {
             for ox in 0..g.ow {

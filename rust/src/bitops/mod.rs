@@ -51,8 +51,9 @@ pub use gemm::{
     xnor_gemm_tiled,
 };
 pub use im2col::{
-    col2im_tap_scatter, conv_dx_streaming, im2col_packed, subtract_pad_contrib,
-    subtract_pad_dw_contrib,
+    col2im_tap_scatter, conv_dx_streaming, conv_dx_streaming_into, im2col_packed,
+    im2col_packed_into, subtract_pad_contrib, subtract_pad_contrib_with,
+    subtract_pad_dw_contrib, subtract_pad_dw_contrib_with,
 };
 pub use pool::Pool;
 
@@ -96,12 +97,23 @@ impl BitMatrix {
     /// paper's sgn with sgn(0) = +1).  Branch-free: each output word
     /// is assembled from 64 sign tests in registers and stored once.
     pub fn pack(rows: usize, cols: usize, xs: &[f32]) -> BitMatrix {
-        assert_eq!(xs.len(), rows * cols);
         let mut m = BitMatrix::zeros(rows, cols);
-        let wpr = m.words_per_row;
+        BitMatrix::pack_into(rows, cols, xs, &mut m);
+        m
+    }
+
+    /// [`BitMatrix::pack`] into caller-owned storage: `out` is
+    /// reshaped (its word buffer reused — no allocation when the
+    /// capacity suffices) and every word including the zero tail is
+    /// overwritten, so recycled dirty storage is fine.  The
+    /// steady-state engines route all per-step packing through this.
+    pub fn pack_into(rows: usize, cols: usize, xs: &[f32], out: &mut BitMatrix) {
+        assert_eq!(xs.len(), rows * cols);
+        out.reshape(rows, cols);
+        let wpr = out.words_per_row;
         for r in 0..rows {
             let row = &xs[r * cols..(r + 1) * cols];
-            let words = &mut m.data[r * wpr..(r + 1) * wpr];
+            let words = &mut out.data[r * wpr..(r + 1) * wpr];
             for (w, chunk) in words.iter_mut().zip(row.chunks(64)) {
                 let mut acc = 0u64;
                 for (b, &v) in chunk.iter().enumerate() {
@@ -110,21 +122,38 @@ impl BitMatrix {
                 *w = acc;
             }
         }
-        m
+    }
+
+    /// Re-dimension in place, reusing the word buffer when it is
+    /// large enough.  Word contents after a grow are unspecified;
+    /// every packing routine that accepts recycled storage overwrites
+    /// (or pre-zeros) all words.
+    pub fn reshape(&mut self, rows: usize, cols: usize) {
+        let wpr = cols.div_ceil(64);
+        self.rows = rows;
+        self.cols = cols;
+        self.words_per_row = wpr;
+        self.data.resize(rows * wpr, 0);
     }
 
     /// Unpack to ±1 f32.
     pub fn unpack(&self) -> Vec<f32> {
-        let mut out = vec![-1.0f32; self.rows * self.cols];
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        self.unpack_into(&mut out);
+        out
+    }
+
+    /// Unpack into a caller-owned buffer (every cell written, recycled
+    /// dirty storage fine).
+    pub fn unpack_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.rows * self.cols);
         for r in 0..self.rows {
             let base = r * self.words_per_row;
-            for c in 0..self.cols {
-                if self.data[base + (c >> 6)] >> (c & 63) & 1 == 1 {
-                    out[r * self.cols + c] = 1.0;
-                }
+            let orow = &mut out[r * self.cols..(r + 1) * self.cols];
+            for (c, o) in orow.iter_mut().enumerate() {
+                *o = if self.data[base + (c >> 6)] >> (c & 63) & 1 == 1 { 1.0 } else { -1.0 };
             }
         }
-        out
     }
 
     #[inline]
@@ -153,8 +182,16 @@ impl BitMatrix {
     /// are stored once each — no per-bit read-modify-write of the
     /// output array.
     pub fn pack_f16_t(f16_bits: &[u16], k: usize, n: usize) -> BitMatrix {
-        assert_eq!(f16_bits.len(), k * n);
         let mut m = BitMatrix::zeros(n, k);
+        BitMatrix::pack_f16_t_into(f16_bits, k, n, &mut m);
+        m
+    }
+
+    /// [`BitMatrix::pack_f16_t`] into caller-owned storage (see
+    /// [`BitMatrix::pack_into`]; all words are overwritten).
+    pub fn pack_f16_t_into(f16_bits: &[u16], k: usize, n: usize, m: &mut BitMatrix) {
+        assert_eq!(f16_bits.len(), k * n);
+        m.reshape(n, k);
         let wpr = m.words_per_row;
         let mut j0 = 0;
         while j0 < n {
@@ -178,7 +215,6 @@ impl BitMatrix {
             }
             j0 += 64;
         }
-        m
     }
 
     /// Transpose (used to lay out W column-major for the GEMM):
@@ -188,6 +224,14 @@ impl BitMatrix {
     /// the GEMM's exact-tail invariant.
     pub fn transpose(&self) -> BitMatrix {
         let mut t = BitMatrix::zeros(self.cols, self.rows);
+        self.transpose_into(&mut t);
+        t
+    }
+
+    /// [`BitMatrix::transpose`] into caller-owned storage (see
+    /// [`BitMatrix::pack_into`]; every destination word is written).
+    pub fn transpose_into(&self, t: &mut BitMatrix) {
+        t.reshape(self.cols, self.rows);
         let twpr = t.words_per_row;
         let mut blk = [0u64; 64];
         let mut rb = 0;
@@ -207,7 +251,6 @@ impl BitMatrix {
             }
             rb += 64;
         }
-        t
     }
 
     /// Heap bytes (what the tracking allocator will see).
@@ -226,12 +269,33 @@ pub struct BitMask {
 impl BitMask {
     pub fn from_bools<I: IntoIterator<Item = bool>>(len: usize, it: I) -> BitMask {
         let mut m = BitMask { len, data: vec![0; len.div_ceil(64)] };
-        for (i, b) in it.into_iter().enumerate() {
-            if b {
-                m.data[i >> 6] |= 1 << (i & 63);
-            }
-        }
+        m.fill_from_bools(it);
         m
+    }
+
+    /// Re-fill an existing (recycled) mask in place.  The word buffer
+    /// is rewritten wholesale — each word is assembled in a register
+    /// and stored once — so dirty recycled storage is fine; `len`
+    /// must match the mask's current length.
+    pub fn fill_from_bools<I: IntoIterator<Item = bool>>(&mut self, it: I) {
+        let mut it = it.into_iter();
+        for w in self.data.iter_mut() {
+            let mut acc = 0u64;
+            for b in 0..64 {
+                match it.next() {
+                    Some(true) => acc |= 1 << b,
+                    Some(false) => {}
+                    None => break,
+                }
+            }
+            *w = acc;
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.data[i >> 6] |= 1 << (i & 63);
     }
 
     #[inline]

@@ -156,6 +156,7 @@ fn run_from_json(j: &Json) -> Result<RunConfig> {
         lr: gf("lr", d.lr as f64) as f32,
         engine: EngineKind::parse(&gs("engine", "hlo"))?,
         threads: gu("threads", d.threads),
+        microbatch: gu("microbatch", d.microbatch),
         seed: gu("seed", d.seed as usize) as u64,
         n_train: gu("n_train", d.n_train),
         n_test: gu("n_test", d.n_test),
@@ -208,14 +209,16 @@ mod tests {
     fn json_config_tiled_engine_with_threads() {
         let cfgs = from_json(
             r#"{"runs": [{"model": "mlp_mini", "dataset": "syn-mnist64",
-                 "engine": "tiled", "threads": 4}]}"#,
+                 "engine": "tiled", "threads": 4, "microbatch": 16}]}"#,
         )
         .unwrap();
         assert_eq!(cfgs[0].engine, EngineKind::Tiled);
         assert_eq!(cfgs[0].threads, 4);
-        // threads defaults to auto (0) when omitted
+        assert_eq!(cfgs[0].microbatch, 16);
+        // threads / microbatch default to 0 (auto / whole batch)
         let d = from_json(r#"{"runs": [{"engine": "tiled"}]}"#).unwrap();
         assert_eq!(d[0].threads, 0);
+        assert_eq!(d[0].microbatch, 0);
     }
 
     #[test]

@@ -56,6 +56,9 @@ COMMANDS:
               --model mlp_mini --algo proposed --optimizer adam
               --dataset syn-mnist64 --batch 64 --epochs 3
               --engine hlo|naive|blocked|tiled [--threads 4]
+              [--microbatch 16]  (gradient accumulation: the step
+              executes in microbatch-sized chunks, peak memory scales
+              with the microbatch; must divide --batch; naive engines)
               [--lr 0.001] [--seed 42]
               [--envelope-mib 1024] [--metrics out.jsonl]
               [--artifacts artifacts]

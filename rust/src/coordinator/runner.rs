@@ -11,7 +11,7 @@ use super::hlo_engine::HloEngine;
 use super::metrics::{MetricPoint, Metrics};
 use crate::data::{build, Batches, Dataset};
 use crate::memmodel::Optimizer;
-use crate::naive::{build_engine, Accel, StepEngine};
+use crate::naive::{build_engine_micro, Accel, StepEngine};
 use crate::optim::LrSchedule;
 use crate::util::cli::Args;
 use crate::util::rng::Pcg32;
@@ -55,6 +55,11 @@ pub struct RunConfig {
     pub engine: EngineKind,
     /// Worker threads for the tiled engine (0 = auto-detect).
     pub threads: usize,
+    /// Microbatch for gradient accumulation on the pure-Rust engines
+    /// (0 = whole batch).  Must divide `batch`; the step arena — and
+    /// with it peak training memory — is sized by this instead of the
+    /// logical batch (`memmodel::step_envelope` prices it).
+    pub microbatch: usize,
     pub seed: u64,
     pub n_train: usize,
     pub n_test: usize,
@@ -78,6 +83,7 @@ impl Default for RunConfig {
             lr: 0.001,
             engine: EngineKind::Hlo,
             threads: 0,
+            microbatch: 0,
             seed: 42,
             n_train: 2000,
             n_test: 400,
@@ -104,6 +110,7 @@ impl RunConfig {
             lr: args.f64_or("lr", d.lr as f64)? as f32,
             engine: EngineKind::parse(&args.str_or("engine", "hlo"))?,
             threads: args.threads()?,
+            microbatch: args.usize_or("microbatch", d.microbatch)?,
             seed: args.usize_or("seed", d.seed as usize)? as u64,
             n_train: args.usize_or("n-train", d.n_train)?,
             n_test: args.usize_or("n-test", d.n_test)?,
@@ -203,6 +210,9 @@ impl Runner {
             None => None,
         };
 
+        if cfg.microbatch != 0 && cfg.engine == EngineKind::Hlo {
+            bail!("--microbatch requires a pure-Rust engine (naive|blocked|tiled)");
+        }
         let (engine, eval_chunk): (Box<dyn StepEngine>, usize) = match cfg.engine {
             EngineKind::Hlo => {
                 let rt = crate::runtime::Engine::cpu(&cfg.artifacts_dir)?;
@@ -228,10 +238,11 @@ impl Runner {
                     // resolve 0 = auto once here, not per matmul
                     _ => Accel::Tiled(crate::bitops::Pool::resolve(cfg.threads)),
                 };
-                let eng = build_engine(
+                let eng = build_engine_micro(
                     &cfg.algo,
                     &graph,
                     cfg.batch,
+                    cfg.microbatch,
                     &cfg.optimizer,
                     accel,
                     cfg.seed,

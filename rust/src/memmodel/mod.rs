@@ -441,6 +441,106 @@ pub fn reduction(graph: &Graph, batch: usize, opt: Optimizer) -> f64 {
     std.total_bytes() / prop.total_bytes()
 }
 
+/// Planned steady-state footprint of one training step on the
+/// pure-Rust engines (accelerated tiers): persistent engine state
+/// plus the step arena's scheduled pool.
+///
+/// Unlike [`breakdown`] (the paper's coarse Table-2 classes), this is
+/// the *engine-exact* envelope: `state_bytes` mirrors the trainers'
+/// `state_bytes()` accounting (weights, β, momenta, gradient
+/// accumulators, packed-weight cache after one step) and
+/// `arena_bytes` comes from the step planner's symbolic replay of the
+/// engine's buffer checkouts (`naive::arena::plan_*_step`).  The
+/// perf-step bench emits both, and CI fails when the measured
+/// steady-state footprint diverges from this by more than 10%.
+#[derive(Clone, Copy, Debug)]
+pub struct StepEnvelope {
+    pub state_bytes: f64,
+    pub arena_bytes: f64,
+}
+
+impl StepEnvelope {
+    pub fn total_bytes(&self) -> f64 {
+        self.state_bytes + self.arena_bytes
+    }
+
+    pub fn total_mib(&self) -> f64 {
+        self.total_bytes() / MIB
+    }
+}
+
+/// Price one training step of `algo` ("standard" | "proposed") at
+/// logical `batch` executed in `microbatch`-sized chunks (0 = whole
+/// batch).  Peak training memory is set by the microbatch: the arena
+/// term scales with `microbatch`, the state term is batch-free — the
+/// decoupling the microbatch accumulation work exists to provide.
+pub fn step_envelope(
+    graph: &Graph,
+    algo: &str,
+    opt: Optimizer,
+    batch: usize,
+    microbatch: usize,
+) -> anyhow::Result<StepEnvelope> {
+    use crate::naive::arena::{plan_proposed_step, plan_standard_step};
+    let plan = crate::naive::Plan::from_graph(graph)?;
+    let micro = if microbatch == 0 { batch } else { microbatch };
+    if micro == 0 || batch % micro != 0 {
+        anyhow::bail!("microbatch {micro} must divide batch {batch}");
+    }
+    let chunks = batch / micro;
+    let momenta = opt.momenta_per_weight();
+    let mut state = 0.0f64;
+    let arena;
+    match algo {
+        "standard" => {
+            for l in plan.layers.iter().filter(|l| l.weight_len() > 0) {
+                let (w, ch) = (l.weight_len() as f64, l.channels() as f64);
+                let (k, n) = (l.fan_in(), l.channels());
+                // W + β + momenta + the retained ∂W/∂β accumulators,
+                // all f32
+                state += 4.0 * (w + ch) + momenta * 4.0 * (w + ch) + 4.0 * (w + ch);
+                // packed-weight cache after one step: first layers
+                // pack Ŵ only; the binary layers derive Ŵᵀ too
+                let first = matches!(
+                    l,
+                    crate::naive::LayerPlan::Dense { first: true, .. }
+                        | crate::naive::LayerPlan::Conv { first: true, .. }
+                );
+                state += (k * n.div_ceil(64) * 8) as f64;
+                if !first {
+                    state += (n * k.div_ceil(64) * 8) as f64;
+                }
+            }
+            arena = plan_standard_step(&plan, micro, chunks).total_bytes() as f64;
+        }
+        "proposed" => {
+            for l in plan.layers.iter().filter(|l| l.weight_len() > 0) {
+                let (w, ch) = (l.weight_len() as f64, l.channels() as f64);
+                let (k, n) = (l.fan_in(), l.channels());
+                // f16 W + β + momenta; f32 ∂β accumulator; the f32 ∂W
+                // accumulator only exists when chunks > 1
+                state += 2.0 * (w + ch) + momenta * 2.0 * (w + ch) + 4.0 * ch;
+                if chunks > 1 {
+                    state += 4.0 * w;
+                }
+                // packed Ŵᵀ cache (binary layers only; first layers
+                // never pack)
+                let first = matches!(
+                    l,
+                    crate::naive::LayerPlan::Dense { first: true, .. }
+                        | crate::naive::LayerPlan::Conv { first: true, .. }
+                );
+                if !first {
+                    state += (n * k.div_ceil(64) * 8) as f64;
+                }
+            }
+            arena = plan_proposed_step(&plan, micro, chunks).total_bytes() as f64;
+        }
+        _ => anyhow::bail!("step_envelope: unknown algo '{algo}' (standard|proposed)"),
+    }
+    Ok(StepEnvelope { state_bytes: state, arena_bytes: arena })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -723,5 +823,82 @@ mod tests {
         let g = lower(&get("binarynet").unwrap()).unwrap();
         let b = breakdown(&g, 100, &DtypeConfig::standard(), Optimizer::Bop);
         assert!(b.row("dW").is_none());
+    }
+
+    #[test]
+    fn step_envelope_matches_measured_steady_state() {
+        // the planner's symbolic replay vs the real engines: state +
+        // arena after warmup must agree.  The CI regression gate
+        // holds this to 10% on the perf-step bench; here a band wide
+        // enough to absorb Vec-spine noise on mini models pins the
+        // planner against drift in the trainers' buffer flow.
+        use crate::naive::{build_engine_micro, Accel, StepEngine};
+        use crate::util::rng::Pcg32;
+        for (model, batch, micro) in
+            [("cnv_mini", 8usize, 0usize), ("binarynet_mini", 8, 4), ("bireal_mini", 4, 0)]
+        {
+            let g = lower(&get(model).unwrap()).unwrap();
+            for algo in ["standard", "proposed"] {
+                let mut e =
+                    build_engine_micro(algo, &g, batch, micro, "adam", Accel::Blocked, 1)
+                        .unwrap();
+                let mut rng = Pcg32::new(9);
+                let x = rng.normal_vec(batch * g.input_elems);
+                let y: Vec<usize> = (0..batch).map(|i| i % g.classes).collect();
+                e.train_step(&x, &y, 0.01).unwrap();
+                e.train_step(&x, &y, 0.01).unwrap();
+                let measured = (e.state_bytes() + e.arena_bytes()) as f64;
+                let env = step_envelope(&g, algo, Optimizer::Adam, batch, micro).unwrap();
+                let ratio = env.total_bytes() / measured;
+                assert!(
+                    (0.8..1.25).contains(&ratio),
+                    "{model}/{algo} micro={micro}: planned {:.0} vs measured {measured:.0} \
+                     (ratio {ratio:.3})",
+                    env.total_bytes()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn step_envelope_decouples_from_logical_batch() {
+        // the acceptance claim, modeled: binarynet_mini at B=64 with
+        // microbatch 16 prices ≥2× below the full-batch step, because
+        // the arena term scales with the microbatch while state does
+        // not
+        let g = lower(&get("binarynet_mini").unwrap()).unwrap();
+        for algo in ["standard", "proposed"] {
+            let full = step_envelope(&g, algo, Optimizer::Adam, 64, 0).unwrap();
+            let quarter = step_envelope(&g, algo, Optimizer::Adam, 64, 16).unwrap();
+            assert!(
+                full.total_bytes() / quarter.total_bytes() >= 2.0,
+                "{algo}: full {:.0} vs micro {:.0}",
+                full.total_bytes(),
+                quarter.total_bytes()
+            );
+            // arena scales ~4x with the 4x microbatch reduction
+            assert!(
+                full.arena_bytes / quarter.arena_bytes > 2.5,
+                "{algo}: arena {:.0} vs {:.0}",
+                full.arena_bytes,
+                quarter.arena_bytes
+            );
+            // state is batch-free (up to the accumulating proposed
+            // engine's f32 dW carrier)
+            assert!(quarter.state_bytes >= full.state_bytes);
+        }
+        // and chunking leaves the envelope at the microbatch scale:
+        // B=64/micro=16 arena ≈ B=16 full-batch arena
+        let b16 = step_envelope(&g, "standard", Optimizer::Adam, 16, 0).unwrap();
+        let b64m16 = step_envelope(&g, "standard", Optimizer::Adam, 64, 16).unwrap();
+        let r = b64m16.arena_bytes / b16.arena_bytes;
+        assert!((0.9..1.5).contains(&r), "{r}");
+    }
+
+    #[test]
+    fn step_envelope_rejects_bad_microbatch() {
+        let g = lower(&get("mlp_mini").unwrap()).unwrap();
+        assert!(step_envelope(&g, "standard", Optimizer::Adam, 64, 48).is_err());
+        assert!(step_envelope(&g, "nope", Optimizer::Adam, 64, 0).is_err());
     }
 }

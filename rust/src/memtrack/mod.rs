@@ -33,6 +33,11 @@ use std::sync::Mutex;
 static LIVE: AtomicUsize = AtomicUsize::new(0);
 static PEAK: AtomicUsize = AtomicUsize::new(0);
 static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Monotonic count of heap allocation *events* (allocs + grow
+/// reallocs; frees are not counted).  The step-arena work asserts
+/// this stays flat across steady-state training steps — a stronger
+/// invariant than a flat peak, which reuse-through-malloc could fake.
+static ALLOC_EVENTS: AtomicUsize = AtomicUsize::new(0);
 
 /// Global-allocator wrapper delegating to the system allocator while
 /// maintaining live/peak counters.
@@ -65,6 +70,7 @@ unsafe impl GlobalAlloc for TrackingAlloc {
 
 #[inline]
 fn track_alloc(size: usize) {
+    ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
     let live = LIVE.fetch_add(size, Ordering::Relaxed) + size;
     if ENABLED.load(Ordering::Relaxed) {
         PEAK.fetch_max(live, Ordering::Relaxed);
@@ -79,6 +85,15 @@ fn track_dealloc(size: usize) {
 /// Live heap bytes right now (0 if no TrackingAlloc installed).
 pub fn live_bytes() -> usize {
     LIVE.load(Ordering::Relaxed)
+}
+
+/// Heap allocation events so far (0 if no TrackingAlloc installed).
+/// Diff across a scope to count the allocations it performed: the
+/// steady-state training-step tests assert the diff is *zero* once
+/// the step arena is warm — a flat peak alone can be faked by the
+/// system allocator reusing freed blocks.
+pub fn alloc_count() -> usize {
+    ALLOC_EVENTS.load(Ordering::Relaxed)
 }
 
 /// True when a TrackingAlloc is installed as the global allocator
@@ -98,6 +113,8 @@ pub struct PeakStats {
     pub baseline: usize,
     /// Maximum live bytes observed inside the scope.
     pub peak: usize,
+    /// Heap allocation events performed inside the scope.
+    pub allocs: usize,
 }
 
 impl PeakStats {
@@ -136,20 +153,22 @@ pub fn measure<T, F: FnOnce() -> T>(f: F) -> (T, PeakStats) {
     if IN_MEASURE.with(|c| c.get()) {
         // nested on the measuring thread: reuse the outer watermark
         let baseline = live_bytes();
+        let a0 = alloc_count();
         let out = f();
         let peak = PEAK.load(Ordering::Relaxed).max(baseline);
-        return (out, PeakStats { baseline, peak });
+        return (out, PeakStats { baseline, peak, allocs: alloc_count() - a0 });
     }
     let _guard = MEASURE_SCOPE.lock().unwrap_or_else(|e| e.into_inner());
     IN_MEASURE.with(|c| c.set(true));
     let baseline = live_bytes();
+    let a0 = alloc_count();
     PEAK.store(baseline, Ordering::Relaxed);
     ENABLED.store(true, Ordering::Relaxed);
     let out = f();
     ENABLED.store(false, Ordering::Relaxed);
     IN_MEASURE.with(|c| c.set(false));
     let peak = PEAK.load(Ordering::Relaxed);
-    (out, PeakStats { baseline, peak })
+    (out, PeakStats { baseline, peak, allocs: alloc_count() - a0 })
 }
 
 #[cfg(test)]
@@ -162,17 +181,21 @@ mod tests {
 
     #[test]
     fn peak_stats_growth() {
-        let s = PeakStats { baseline: 1000, peak: 5096 };
+        let s = PeakStats { baseline: 1000, peak: 5096, allocs: 0 };
         assert_eq!(s.growth(), 4096);
-        let s2 = PeakStats { baseline: 10, peak: 5 };
+        let s2 = PeakStats { baseline: 10, peak: 5, allocs: 0 };
         assert_eq!(s2.growth(), 0); // saturates
     }
 
     #[test]
     fn counters_move() {
+        let a0 = alloc_count();
         track_alloc(128);
         assert!(live_bytes() >= 128);
+        assert!(alloc_count() > a0, "alloc events must count up");
         track_dealloc(128);
+        // frees do not decrement the event counter
+        assert!(alloc_count() > a0);
     }
 
     #[test]

@@ -43,6 +43,7 @@
 //! Both engines are cross-validated against the AOT HLO step (same
 //! algorithm, same numerics class) in rust/tests/.
 
+pub(crate) mod arena;
 mod ops;
 mod plan;
 mod proposed;
@@ -92,10 +93,24 @@ pub trait StepEngine {
     /// Forward-only evaluation; returns (loss, accuracy).
     fn eval(&mut self, x: &[f32], labels: &[usize]) -> Result<(f32, f32)>;
     /// Bytes of persistent state currently held (weights, momenta,
-    /// retained stats) — *measured*, not modeled.
+    /// gradient accumulators, packed-weight cache) — *measured*, not
+    /// modeled.
     fn state_bytes(&self) -> usize;
     /// Batch size the engine was built for.
     fn batch(&self) -> usize;
+    /// Microbatch the step executes in (== batch unless gradient
+    /// accumulation was requested).
+    fn microbatch(&self) -> usize {
+        self.batch()
+    }
+    /// Bytes resident in the engine's step arena (0 for engines
+    /// without one, e.g. the HLO runtime).  `state_bytes() +
+    /// arena_bytes()` after a warmup step is the engine's whole
+    /// steady-state footprint — the number `memmodel::step_envelope`
+    /// prices and `benches/perf_step.rs` reports.
+    fn arena_bytes(&self) -> usize {
+        0
+    }
     /// Flat snapshot of the latent weights (checkpointing/federated).
     fn weights_snapshot(&self) -> Vec<Vec<f32>>;
     /// Overwrite latent weights from a snapshot.
@@ -111,9 +126,30 @@ pub fn build_engine(
     accel: Accel,
     seed: u64,
 ) -> Result<Box<dyn StepEngine>> {
+    build_engine_micro(algo, graph, batch, 0, optimizer, accel, seed)
+}
+
+/// [`build_engine`] with microbatch gradient accumulation: the step
+/// executes in `microbatch`-sized chunks (0 = whole batch) with
+/// per-chunk (ghost) batch-norm statistics and ∂W/∂β accumulated
+/// across chunks before one optimizer update, so peak step memory
+/// scales with the microbatch instead of the logical batch.
+pub fn build_engine_micro(
+    algo: &str,
+    graph: &Graph,
+    batch: usize,
+    microbatch: usize,
+    optimizer: &str,
+    accel: Accel,
+    seed: u64,
+) -> Result<Box<dyn StepEngine>> {
     Ok(match algo {
-        "standard" => Box::new(StandardTrainer::new(graph, batch, optimizer, accel, seed)?),
-        "proposed" => Box::new(ProposedTrainer::new(graph, batch, optimizer, accel, seed)?),
+        "standard" => Box::new(StandardTrainer::with_microbatch(
+            graph, batch, microbatch, optimizer, accel, seed,
+        )?),
+        "proposed" => Box::new(ProposedTrainer::with_microbatch(
+            graph, batch, microbatch, optimizer, accel, seed,
+        )?),
         _ => anyhow::bail!("unknown algo '{algo}' (standard|proposed)"),
     })
 }

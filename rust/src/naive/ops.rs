@@ -5,11 +5,22 @@
 //! precision, which BN variant runs, how ∂W is stored) and the
 //! inter-layer gradient carrier (f32 for the standard engine, f16 for
 //! the proposed one).  Everything else — the layer-graph control
-//! flow, max-pool routing, global average pooling, and the residual
-//! skip handling (save at block entry, parameter-free strided
-//! 1×1-avg-pool + channel-duplication downsample, add after the
-//! closing conv's BN, and the mirrored gradient bookkeeping) — is
-//! written once here, over the [`EngineOps`] trait.
+//! flow, max-pool routing, global average pooling, residual skip
+//! handling, and the **microbatch chunk loop** (forward + backward
+//! per microbatch, gradients accumulating across chunks before one
+//! optimizer step) — is written once here, over the [`EngineOps`]
+//! trait.
+//!
+//! ## Arena discipline
+//!
+//! Every `Vec<f32>` crossing the [`EngineOps`] boundary is a
+//! [`StepCtx`] arena checkout.  The receiver of an owned buffer must
+//! retain it (per-chunk residual state), recycle it
+//! (`ctx().arena.put_f32`), or return it; nothing on the step path
+//! may `Vec::new` + drop.  After one warmup step the arena pool is at
+//! fixed point and steady-state steps perform zero heap allocations
+//! (asserted by rust/tests/memtrack_step.rs via
+//! `memtrack::alloc_count`).
 //!
 //! Residual skips are f32 in both engines: the high-precision skip
 //! path is the accuracy enhancement the paper incorporates (Sec. 2),
@@ -18,7 +29,9 @@
 
 use anyhow::{bail, Result};
 
+use super::arena::StepCtx;
 use super::plan::{LayerPlan, SkipGeom};
+use super::softmax_xent_grad;
 use crate::bitops::simd;
 
 /// Engine-specific per-layer ops the shared driver composes.
@@ -26,17 +39,28 @@ use crate::bitops::simd;
 /// `Grad` is the inter-layer gradient carrier (`Vec<f32>` — identity
 /// conversions — for the standard engine; `F16Vec` for the proposed
 /// engine, so gradients crossing layer boundaries really are held in
-/// f16 exactly as before the refactor: the driver converts at each
-/// boundary and a f16→f32→f16 round-trip is lossless).
+/// f16: the driver converts at each boundary and a f16→f32→f16
+/// round-trip is lossless).  Conversions take `&mut self` so the
+/// carriers themselves recycle through the engine's arena.
 pub(crate) trait EngineOps {
     type Grad;
 
-    fn batch(&self) -> usize;
-    fn grad_to_f32(g: Self::Grad) -> Vec<f32>;
-    fn grad_from_f32(v: Vec<f32>) -> Self::Grad;
+    /// Execution batch of one chunk (the microbatch — every per-step
+    /// buffer is sized by this, not the logical batch).
+    fn micro(&self) -> usize;
+
+    /// The engine's step context: arena pool + driver skip stacks.
+    fn ctx(&mut self) -> &mut StepCtx;
+
+    fn grad_to_f32(&mut self, g: Self::Grad) -> Vec<f32>;
+    fn grad_from_f32(&mut self, v: Vec<f32>) -> Self::Grad;
+    /// Return a carrier's storage to the arena.
+    fn recycle_grad(&mut self, g: Self::Grad);
 
     /// One matmul layer (dense or conv) forward + batch norm;
-    /// retains whatever this engine's backward needs when `retain`.
+    /// consumes `cur` (retaining or recycling it), returns the BN
+    /// output; retains whatever this engine's backward needs when
+    /// `retain`.
     fn matmul_forward(
         &mut self,
         cur: Vec<f32>,
@@ -45,39 +69,41 @@ pub(crate) trait EngineOps {
         retain: bool,
     ) -> Result<Vec<f32>>;
 
-    /// One matmul layer backward (BN backward, ∂W/∂β production or
-    /// application, ∂X); consumes the f32 gradient w.r.t. this
-    /// layer's BN output, returns the f32 gradient w.r.t. its input
-    /// (empty for the first layer).
-    fn matmul_backward(
-        &mut self,
-        dnext: Vec<f32>,
-        wi: usize,
-        layer: &LayerPlan,
-        lr: f32,
-    ) -> Result<Vec<f32>>;
+    /// One matmul layer backward (BN backward, ∂W/∂β *accumulation*
+    /// into the step's gradient accumulators, ∂X); consumes the f32
+    /// gradient w.r.t. this layer's BN output, returns the gradient
+    /// w.r.t. its input (empty for the first layer).  Optimizer
+    /// updates are deferred to the engine's update phase after the
+    /// last chunk.
+    fn matmul_backward(&mut self, dnext: Vec<f32>, wi: usize, layer: &LayerPlan)
+        -> Result<Vec<f32>>;
 
     /// 2×2 max-pool forward; the engine stores its own mask format
     /// (pushed in layer order — the backward pops in reverse).
     fn pool_forward(&mut self, cur: Vec<f32>, h: usize, w: usize, c: usize, retain: bool)
         -> Vec<f32>;
     fn pool_backward(&mut self, dnext: Vec<f32>, h: usize, w: usize, c: usize) -> Vec<f32>;
+
+    /// Drain this chunk's retained state back into the arena (called
+    /// after each chunk's backward; single-chunk engines that keep
+    /// update inputs in retained state drain after the update phase
+    /// instead).
+    fn end_chunk(&mut self);
 }
 
-/// Forward through the whole layer graph; returns logits.  `retain`
-/// disables residual storage for eval (skip buffers are still
-/// consumed — they are part of the function value, not of the
-/// retained state).
+/// Forward through the whole layer graph; returns logits (an arena
+/// checkout).  `retain` disables residual storage for eval (skip
+/// buffers are still consumed — they are part of the function value,
+/// not of the retained state).
 pub(crate) fn forward_plan<E: EngineOps>(
     e: &mut E,
     layers: &[LayerPlan],
     x: &[f32],
     retain: bool,
 ) -> Result<Vec<f32>> {
-    let b = e.batch();
-    let mut cur = x.to_vec();
+    let b = e.micro();
+    let mut cur = e.ctx().arena.take_copy_f32(x);
     let mut wi = 0usize;
-    let mut skips: Vec<Vec<f32>> = Vec::new();
     for layer in layers {
         match layer {
             LayerPlan::Dense { .. } | LayerPlan::Conv { .. } => {
@@ -88,87 +114,197 @@ pub(crate) fn forward_plan<E: EngineOps>(
                 cur = e.pool_forward(cur, *h, *w, *c, retain);
             }
             LayerPlan::GlobalPool { h, w, c } => {
-                cur = global_pool_forward(&cur, b, *h, *w, *c);
+                let ctx = e.ctx();
+                let mut out = ctx.arena.take_f32(b * c);
+                global_pool_forward_into(&cur, b, *h, *w, *c, &mut out);
+                ctx.arena.put_f32(std::mem::replace(&mut cur, out));
             }
-            LayerPlan::Residual { save: true, .. } => skips.push(cur.clone()),
+            LayerPlan::Residual { save: true, .. } => {
+                let ctx = e.ctx();
+                let s = ctx.arena.take_copy_f32(&cur);
+                ctx.skips.push(s);
+            }
             LayerPlan::Residual { save: false, skip } => {
-                let s = skips.pop().ok_or_else(|| {
+                let ctx = e.ctx();
+                let s = ctx.skips.pop().ok_or_else(|| {
                     anyhow::anyhow!("residual add without a saved skip (plan bug)")
                 })?;
                 skip_add(&mut cur, &s, b, skip);
+                ctx.arena.put_f32(s);
             }
             LayerPlan::Flatten => { /* layout already flat NHWC */ }
         }
     }
-    if !skips.is_empty() {
+    if !e.ctx().skips.is_empty() {
         bail!("unconsumed residual skip (plan bug)");
     }
     Ok(cur)
 }
 
-/// Backward through the whole layer graph, consuming ∂logits.
+/// Backward through the whole layer graph, consuming ∂logits (an
+/// arena checkout).  Produces gradient *accumulations* only; the
+/// engine's update phase applies them after the last chunk.
 pub(crate) fn backward_plan<E: EngineOps>(
     e: &mut E,
     layers: &[LayerPlan],
     dlogits: Vec<f32>,
-    lr: f32,
 ) -> Result<()> {
-    let b = e.batch();
+    let b = e.micro();
     let mut wi = layers.iter().filter(|l| l.weight_len() > 0).count();
-    let mut dcur = E::grad_from_f32(dlogits);
+    let mut dcur = e.grad_from_f32(dlogits);
     // gradients of pending skip branches: recorded at the block
     // output (Residual close, seen first in reverse), merged into the
     // main gradient at the block input (Residual save)
-    let mut skip_grads: Vec<Vec<f32>> = Vec::new();
     for layer in layers.iter().rev() {
         match layer {
             LayerPlan::Dense { .. } | LayerPlan::Conv { .. } => {
                 wi -= 1;
-                let d = E::grad_to_f32(dcur);
-                let dx = e.matmul_backward(d, wi, layer, lr)?;
-                dcur = E::grad_from_f32(dx);
+                let d = e.grad_to_f32(dcur);
+                let dx = e.matmul_backward(d, wi, layer)?;
+                dcur = e.grad_from_f32(dx);
             }
             LayerPlan::MaxPool { h, w, c, .. } => {
-                let d = E::grad_to_f32(dcur);
-                dcur = E::grad_from_f32(e.pool_backward(d, *h, *w, *c));
+                let d = e.grad_to_f32(dcur);
+                let dx = e.pool_backward(d, *h, *w, *c);
+                dcur = e.grad_from_f32(dx);
             }
             LayerPlan::GlobalPool { h, w, c } => {
-                let d = E::grad_to_f32(dcur);
-                dcur = E::grad_from_f32(global_pool_backward(&d, b, *h, *w, *c));
+                let d = e.grad_to_f32(dcur);
+                let ctx = e.ctx();
+                let mut dx = ctx.arena.take_f32(b * h * w * c);
+                global_pool_backward_into(&d, b, *h, *w, *c, &mut dx);
+                ctx.arena.put_f32(d);
+                dcur = e.grad_from_f32(dx);
             }
             LayerPlan::Residual { save: false, skip } => {
                 // d(out)/d(skip) is the downsample adjoint; the block
                 // path receives the gradient unchanged (the add is an
                 // identity towards the closing conv's BN output)
-                let d = E::grad_to_f32(dcur);
-                skip_grads.push(skip_grad(&d, b, skip));
-                dcur = E::grad_from_f32(d);
+                let d = e.grad_to_f32(dcur);
+                let ctx = e.ctx();
+                let mut sg = ctx.arena.take_zeroed_f32(b * skip.h * skip.w * skip.c);
+                skip_grad_into(&d, b, skip, &mut sg);
+                ctx.skip_grads.push(sg);
+                dcur = e.grad_from_f32(d);
             }
             LayerPlan::Residual { save: true, .. } => {
-                let g = skip_grads.pop().ok_or_else(|| {
+                let mut d = e.grad_to_f32(dcur);
+                let ctx = e.ctx();
+                let g = ctx.skip_grads.pop().ok_or_else(|| {
                     anyhow::anyhow!("residual save without a recorded skip grad (plan bug)")
                 })?;
-                let mut d = E::grad_to_f32(dcur);
                 simd::add_assign_f32(&mut d, &g);
-                dcur = E::grad_from_f32(d);
+                ctx.arena.put_f32(g);
+                dcur = e.grad_from_f32(d);
             }
             LayerPlan::Flatten => {}
         }
     }
-    if !skip_grads.is_empty() {
+    e.recycle_grad(dcur);
+    if !e.ctx().skip_grads.is_empty() {
         bail!("unconsumed residual skip grad (plan bug)");
     }
     Ok(())
 }
 
+/// The microbatched step loop shared by both engines: split the
+/// logical batch into `chunks` microbatches, run forward + backward
+/// per chunk (per-chunk BN statistics — ghost batch norm; gradients
+/// are scaled by `1/chunks` so the accumulated ∂W/∂β equal the
+/// *mean* over the logical batch), and return the averaged
+/// (loss, accuracy).  The engine applies its deferred optimizer
+/// update afterwards.
+pub(crate) fn run_train_chunks<E: EngineOps>(
+    e: &mut E,
+    layers: &[LayerPlan],
+    x: &[f32],
+    labels: &[usize],
+    classes: usize,
+    input_elems: usize,
+    chunks: usize,
+) -> Result<(f32, f32)> {
+    let m = e.micro();
+    let mut loss_sum = 0.0f32;
+    let mut acc_sum = 0.0f32;
+    for ci in 0..chunks {
+        let xs = &x[ci * m * input_elems..(ci + 1) * m * input_elems];
+        let ys = &labels[ci * m..(ci + 1) * m];
+        let logits = forward_plan(e, layers, xs, true)?;
+        let ctx = e.ctx();
+        let mut dlogits = ctx.arena.take_f32(m * classes);
+        let (loss, acc) = softmax_xent_grad(&logits, ys, classes, &mut dlogits);
+        ctx.arena.put_f32(logits);
+        if chunks > 1 {
+            // softmax divided by the chunk rows; rescale so the sum
+            // over chunks is the logical-batch mean
+            let inv = 1.0 / chunks as f32;
+            for v in dlogits.iter_mut() {
+                *v *= inv;
+            }
+        }
+        backward_plan(e, layers, dlogits)?;
+        e.end_chunk();
+        loss_sum += loss;
+        acc_sum += acc;
+    }
+    Ok((loss_sum / chunks as f32, acc_sum / chunks as f32))
+}
+
+/// Chunked forward-only evaluation (mirrors the microbatch split so
+/// eval buffers stay microbatch-sized too).
+pub(crate) fn run_eval_chunks<E: EngineOps>(
+    e: &mut E,
+    layers: &[LayerPlan],
+    x: &[f32],
+    labels: &[usize],
+    classes: usize,
+    input_elems: usize,
+    chunks: usize,
+) -> Result<(f32, f32)> {
+    let m = e.micro();
+    let mut loss_sum = 0.0f32;
+    let mut acc_sum = 0.0f32;
+    for ci in 0..chunks {
+        let xs = &x[ci * m * input_elems..(ci + 1) * m * input_elems];
+        let ys = &labels[ci * m..(ci + 1) * m];
+        let logits = forward_plan(e, layers, xs, false)?;
+        let ctx = e.ctx();
+        let mut d = ctx.arena.take_f32(m * classes);
+        let (loss, acc) = softmax_xent_grad(&logits, ys, classes, &mut d);
+        ctx.arena.put_f32(logits);
+        ctx.arena.put_f32(d);
+        loss_sum += loss;
+        acc_sum += acc;
+    }
+    Ok((loss_sum / chunks as f32, acc_sum / chunks as f32))
+}
+
 // ------------------------------------------------ engine-independent ops
 
 /// Global average pool: NHWC (b, h, w, c) → (b, c).
+/// (Allocating test convenience; the driver uses the `_into` form.)
+#[cfg(test)]
 pub(crate) fn global_pool_forward(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; b * c];
+    global_pool_forward_into(x, b, h, w, c, &mut out);
+    out
+}
+
+/// [`global_pool_forward`] into a caller-owned buffer (re-zeroed
+/// here, recycled dirty storage fine).
+pub(crate) fn global_pool_forward_into(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    out: &mut [f32],
+) {
     let hw = h * w;
     debug_assert_eq!(x.len(), b * hw * c);
+    debug_assert_eq!(out.len(), b * c);
     let inv = 1.0 / hw as f32;
-    let mut out = vec![0.0f32; b * c];
+    out.fill(0.0);
     for bi in 0..b {
         let orow = &mut out[bi * c..(bi + 1) * c];
         for p in 0..hw {
@@ -179,10 +315,10 @@ pub(crate) fn global_pool_forward(x: &[f32], b: usize, h: usize, w: usize, c: us
             *v *= inv;
         }
     }
-    out
 }
 
 /// Global average pool backward: every position receives ∂y/(h·w).
+#[cfg(test)]
 pub(crate) fn global_pool_backward(
     dy: &[f32],
     b: usize,
@@ -190,17 +326,34 @@ pub(crate) fn global_pool_backward(
     w: usize,
     c: usize,
 ) -> Vec<f32> {
+    let mut dx = vec![0.0f32; b * h * w * c];
+    global_pool_backward_into(dy, b, h, w, c, &mut dx);
+    dx
+}
+
+/// [`global_pool_backward`] into a caller-owned buffer (every cell
+/// written, recycled dirty storage fine).
+pub(crate) fn global_pool_backward_into(
+    dy: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    dx: &mut [f32],
+) {
     let hw = h * w;
     debug_assert_eq!(dy.len(), b * c);
+    debug_assert_eq!(dx.len(), b * hw * c);
     let inv = 1.0 / hw as f32;
-    let mut dx = vec![0.0f32; b * hw * c];
     for bi in 0..b {
-        let dyr: Vec<f32> = dy[bi * c..(bi + 1) * c].iter().map(|v| v * inv).collect();
+        let src = &dy[bi * c..(bi + 1) * c];
         for p in 0..hw {
-            dx[(bi * hw + p) * c..][..c].copy_from_slice(&dyr);
+            let row = &mut dx[(bi * hw + p) * c..][..c];
+            for (o, &v) in row.iter_mut().zip(src) {
+                *o = v * inv;
+            }
         }
     }
-    dx
 }
 
 /// Add the downsampled skip into the block-output map in place:
@@ -234,13 +387,23 @@ pub(crate) fn skip_add(cur: &mut [f32], skip: &[f32], b: usize, g: &SkipGeom) {
 /// Adjoint of the downsample shortcut: gradient w.r.t. the saved
 /// skip.  Sampled positions accumulate the sums of their duplicated
 /// channels; unsampled positions (stride > 1) get zero.
+#[cfg(test)]
 pub(crate) fn skip_grad(d: &[f32], b: usize, g: &SkipGeom) -> Vec<f32> {
+    let mut ds = vec![0.0f32; b * g.h * g.w * g.c];
+    skip_grad_into(d, b, g, &mut ds);
+    ds
+}
+
+/// [`skip_grad`] into a caller-owned buffer, which must be **zeroed**
+/// (strided geometries scatter-add; the identity fast path copies).
+pub(crate) fn skip_grad_into(d: &[f32], b: usize, g: &SkipGeom, ds: &mut [f32]) {
     debug_assert_eq!(d.len(), b * g.oh * g.ow * g.co);
+    debug_assert_eq!(ds.len(), b * g.h * g.w * g.c);
     if g.stride == 1 && g.c == g.co {
-        return d.to_vec();
+        ds.copy_from_slice(d);
+        return;
     }
     let s = g.stride;
-    let mut ds = vec![0.0f32; b * g.h * g.w * g.c];
     for bi in 0..b {
         for oy in 0..g.oh {
             for ox in 0..g.ow {
@@ -256,7 +419,6 @@ pub(crate) fn skip_grad(d: &[f32], b: usize, g: &SkipGeom) -> Vec<f32> {
             }
         }
     }
-    ds
 }
 
 #[cfg(test)]
@@ -299,6 +461,22 @@ mod tests {
             .map(|(a, v)| *a as f64 * *v as f64)
             .sum();
         assert!((lhs - rhs).abs() < 1e-4, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_storage() {
+        let (b, h, w, c) = (1, 2, 2, 3);
+        let mut g = Pcg32::new(9);
+        let x = g.normal_vec(b * h * w * c);
+        let want = global_pool_forward(&x, b, h, w, c);
+        let mut out = vec![f32::NAN; b * c];
+        global_pool_forward_into(&x, b, h, w, c, &mut out);
+        assert_eq!(out, want);
+        let dy = g.normal_vec(b * c);
+        let wantb = global_pool_backward(&dy, b, h, w, c);
+        let mut dx = vec![f32::NAN; b * h * w * c];
+        global_pool_backward_into(&dy, b, h, w, c, &mut dx);
+        assert_eq!(dx, wantb);
     }
 
     #[test]

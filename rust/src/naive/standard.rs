@@ -7,22 +7,31 @@
 //! f32 — exactly the left half of Table 2, so the tracking allocator
 //! measures what the paper's standard prototype measured.
 //!
+//! Since the step-arena refactor every per-step buffer — retained
+//! activations, BN statistics, pool masks, GEMM outputs, packed bit
+//! panels, gradient transients — is a [`StepCtx`] arena checkout:
+//! after one warmup step a training step performs **zero heap
+//! allocations**, and ∂W/∂β accumulate across `--microbatch` chunks
+//! into persistent weight-scale buffers before one deferred optimizer
+//! update, so the step's peak memory is set by the microbatch, not
+//! the logical batch.
+//!
 //! The layer-graph control flow (pooling, global pooling, residual
-//! skips) lives in [`super::ops`]; this file implements the standard
-//! engine's per-matmul-layer forward/backward over any [`ConvGeom`].
-//! Binary×binary matmuls — conv *and* hidden dense layers — run the
-//! packed XNOR path on the accelerated tiers (dense needs no pad
-//! correction: there is no padding, so the XNOR product is already
-//! the exact ±1 dot product).
+//! skips, the microbatch chunk loop) lives in [`super::ops`]; this
+//! file implements the standard engine's per-matmul-layer
+//! forward/backward over any [`ConvGeom`].  Binary×binary matmuls —
+//! conv *and* hidden dense layers — run the packed XNOR path on the
+//! accelerated tiers.
 
 use anyhow::{bail, Result};
 
+use super::arena::{StepArena, StepCtx};
 use super::ops::{self, EngineOps};
 use super::plan::{LayerPlan, Plan};
-use super::{glorot_init, softmax_xent_grad, Accel, StepEngine};
+use super::{glorot_init, Accel, StepEngine};
 use crate::bitops::{
-    conv_dx_streaming, im2col_packed, subtract_pad_contrib, subtract_pad_dw_contrib, BitMatrix,
-    ConvGeom, PackedWeightCache,
+    conv_dx_streaming_into, im2col_packed_into, simd, subtract_pad_contrib_with,
+    subtract_pad_dw_contrib_with, BitMatrix, ConvGeom, PackedWeightCache,
 };
 use crate::models::Graph;
 use crate::optim::{OptState, Store};
@@ -30,23 +39,35 @@ use crate::util::rng::Pcg32;
 
 pub struct StandardTrainer {
     plan: Plan,
+    /// Logical batch (what `train_step` consumes per call).
     batch: usize,
+    /// Execution microbatch: every per-step buffer is sized by this;
+    /// gradients accumulate across the `batch / micro` chunks.
+    micro: usize,
     accel: Accel,
     // parameters (f32 latent weights, clipped to [-1,1]) + BN biases
     weights: Vec<Store>,
     betas: Vec<Store>,
     opt_w: Vec<OptState>,
     opt_b: Vec<OptState>,
-    // retained per step (transient between fwd and bwd).  Each matmul
-    // layer wi pushes exactly two f32 activations in order: its input
-    // at index 2·wi and its BN output at 2·wi + 1.
+    // retained per chunk (drained back to the arena after each
+    // chunk's backward).  Each matmul layer wi pushes exactly two f32
+    // activations in order: its input at index 2·wi and its BN output
+    // at 2·wi + 1.
     acts: Vec<Vec<f32>>,
     pool_masks: Vec<Vec<u32>>, // argmax index per pooled cell (f32-class storage)
     bn_mu: Vec<Vec<f32>>,
     bn_psi: Vec<Vec<f32>>,
+    /// Per-step gradient accumulators (persistent, weight-scale):
+    /// chunk backward passes add into these; `apply_update` consumes
+    /// them once per step.  This realizes Table 2's retained-∂W row.
+    dw_acc: Vec<Vec<f32>>,
+    dbeta_acc: Vec<Vec<f32>>,
     /// Per-step binarized-weight cache: sign(W) is packed once per
-    /// step and unpacked per use; invalidated on weight update.
+    /// step into retained storage; invalidated on weight update.
     wcache: PackedWeightCache,
+    /// Arena pool + driver skip stacks (see `naive::arena`).
+    ctx: StepCtx,
 }
 
 impl StandardTrainer {
@@ -57,15 +78,35 @@ impl StandardTrainer {
         accel: Accel,
         seed: u64,
     ) -> Result<StandardTrainer> {
+        StandardTrainer::with_microbatch(graph, batch, 0, optimizer, accel, seed)
+    }
+
+    /// Build with gradient accumulation: the step executes in
+    /// `microbatch`-sized chunks (0 = whole batch, no accumulation).
+    /// `microbatch` must divide `batch`.
+    pub fn with_microbatch(
+        graph: &Graph,
+        batch: usize,
+        microbatch: usize,
+        optimizer: &str,
+        accel: Accel,
+        seed: u64,
+    ) -> Result<StandardTrainer> {
         let plan = Plan::from_graph(graph)?;
         if batch == 0 {
             bail!("batch must be positive");
+        }
+        let micro = if microbatch == 0 { batch } else { microbatch };
+        if batch % micro != 0 {
+            bail!("microbatch {micro} must divide batch {batch}");
         }
         let mut rng = Pcg32::new(seed);
         let mut weights = Vec::new();
         let mut betas = Vec::new();
         let mut opt_w = Vec::new();
         let mut opt_b = Vec::new();
+        let mut dw_acc = Vec::new();
+        let mut dbeta_acc = Vec::new();
         for l in &plan.layers {
             let wl = l.weight_len();
             if wl == 0 {
@@ -76,11 +117,14 @@ impl StandardTrainer {
             betas.push(Store::F32(vec![0.0; l.channels()]));
             opt_w.push(OptState::new(optimizer, wl, false));
             opt_b.push(OptState::new(optimizer, l.channels(), false));
+            dw_acc.push(vec![0.0; wl]);
+            dbeta_acc.push(vec![0.0; l.channels()]);
         }
         let wcache = PackedWeightCache::new(weights.len());
         Ok(StandardTrainer {
             plan,
             batch,
+            micro,
             accel,
             weights,
             betas,
@@ -90,7 +134,10 @@ impl StandardTrainer {
             pool_masks: Vec::new(),
             bn_mu: Vec::new(),
             bn_psi: Vec::new(),
+            dw_acc,
+            dbeta_acc,
             wcache,
+            ctx: StepCtx::default(),
         })
     }
 
@@ -99,74 +146,104 @@ impl StandardTrainer {
         self.wcache.pack_count()
     }
 
+    fn chunks(&self) -> usize {
+        self.batch / self.micro
+    }
+
     /// GEMM dispatch honoring the accel mode.
     fn gemm(&self, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
         self.accel.backend().gemm_f32(m, k, n, a, b, out);
     }
 
-    /// Binarized weights Ŵ (k×n, ±1 f32) via the per-step cache —
-    /// packed once per step instead of sign_vec'd per matmul.
-    fn signed_w(&mut self, wi: usize, k: usize, n: usize) -> Vec<f32> {
+    fn beta_f32(&self, wi: usize) -> &[f32] {
+        self.betas[wi].as_f32().expect("standard engine stores f32 betas")
+    }
+
+    /// Binarized weights Ŵ (k×n, ±1 f32) unpacked from the per-step
+    /// cache into a caller-owned buffer — packed once per step, no
+    /// per-use allocation.
+    fn signed_w_into(&mut self, wi: usize, k: usize, n: usize, out: &mut [f32]) {
         let weights = &self.weights;
-        self.wcache
-            .w(wi, || BitMatrix::pack(k, n, &weights[wi].to_f32()))
-            .unpack()
+        let w = self.wcache.w(wi, |dst| {
+            BitMatrix::pack_into(k, n, weights[wi].as_f32().expect("f32 weights"), dst)
+        });
+        w.unpack_into(out);
     }
 
     /// Binarized transposed weights Ŵᵀ (n×k, ±1 f32): derived from
-    /// the cached Ŵ by the word-level block transpose.
-    fn signed_wt(&mut self, wi: usize, k: usize, n: usize) -> Vec<f32> {
+    /// the cached Ŵ by the word-level block transpose, unpacked into
+    /// a caller-owned buffer.
+    fn signed_wt_into(&mut self, wi: usize, k: usize, n: usize, out: &mut [f32]) {
         let weights = &self.weights;
-        self.wcache
-            .wt_via_transpose(wi, || BitMatrix::pack(k, n, &weights[wi].to_f32()))
-            .unpack()
+        let wt = self.wcache.wt_via_transpose(wi, |dst| {
+            BitMatrix::pack_into(k, n, weights[wi].as_f32().expect("f32 weights"), dst)
+        });
+        wt.unpack_into(out);
     }
 
-    fn forward(&mut self, x: &[f32], retain: bool) -> Result<Vec<f32>> {
-        self.acts.clear();
-        self.pool_masks.clear();
-        self.bn_mu.clear();
-        self.bn_psi.clear();
-        let layers = self.plan.layers.clone();
-        ops::forward_plan(self, &layers, x, retain)
+    /// Drain any retained chunk state back to the arena (begin-step
+    /// hygiene after an aborted step, and the end-of-chunk drain).
+    fn drain_chunk_state(&mut self) {
+        for v in self.acts.drain(..) {
+            self.ctx.arena.put_f32(v);
+        }
+        for v in self.bn_mu.drain(..).chain(self.bn_psi.drain(..)) {
+            self.ctx.arena.put_f32(v);
+        }
+        for m in self.pool_masks.drain(..) {
+            self.ctx.arena.put_u32(m);
+        }
     }
 
-    fn backward(&mut self, dlogits: Vec<f32>, lr: f32) -> Result<()> {
+    fn begin_step(&mut self) {
+        self.drain_chunk_state();
+        self.ctx.drain_skip_stacks();
+        for dw in self.dw_acc.iter_mut() {
+            dw.fill(0.0);
+        }
+        for db in self.dbeta_acc.iter_mut() {
+            db.fill(0.0);
+        }
+    }
+
+    /// Deferred optimizer update: consume the step's accumulated
+    /// ∂W/∂β once, after the last chunk.  Equivalent to the old
+    /// per-layer in-backward updates (weights are not read again
+    /// after their own dX matmul within a step).
+    fn apply_update(&mut self, lr: f32) {
         for st in self.opt_w.iter_mut().chain(self.opt_b.iter_mut()) {
             st.tick();
         }
-        let layers = self.plan.layers.clone();
-        ops::backward_plan(self, &layers, dlogits, lr)
-    }
-
-    /// Real-input (or direct-loop) f32 conv forward.
-    fn conv_forward(&self, a: &[f32], w: &[f32], b: usize, g: ConvGeom, cout: usize) -> Vec<f32> {
-        match self.accel {
-            Accel::Naive => conv_direct(a, w, b, g, cout),
-            _ => {
-                // im2col (transient memory-for-speed buffer) + GEMM
-                let cols = im2col(a, b, g);
-                let mut y = vec![0.0f32; g.rows(b) * cout];
-                self.gemm(g.rows(b), g.k(), cout, &cols, w, &mut y);
-                y
-            }
+        for wi in 0..self.weights.len() {
+            cancel_wgrad(&mut self.dw_acc[wi], &self.weights[wi]);
+            self.opt_w[wi].update(&mut self.weights[wi], &self.dw_acc[wi], lr, true);
+            self.opt_b[wi].update(&mut self.betas[wi], &self.dbeta_acc[wi], lr, false);
         }
+        self.wcache.invalidate_all();
     }
 }
 
 impl EngineOps for StandardTrainer {
     type Grad = Vec<f32>;
 
-    fn batch(&self) -> usize {
-        self.batch
+    fn micro(&self) -> usize {
+        self.micro
     }
 
-    fn grad_to_f32(g: Vec<f32>) -> Vec<f32> {
+    fn ctx(&mut self) -> &mut StepCtx {
+        &mut self.ctx
+    }
+
+    fn grad_to_f32(&mut self, g: Vec<f32>) -> Vec<f32> {
         g
     }
 
-    fn grad_from_f32(v: Vec<f32>) -> Vec<f32> {
+    fn grad_from_f32(&mut self, v: Vec<f32>) -> Vec<f32> {
         v
+    }
+
+    fn recycle_grad(&mut self, g: Vec<f32>) {
+        self.ctx.arena.put_f32(g);
     }
 
     fn matmul_forward(
@@ -176,69 +253,106 @@ impl EngineOps for StandardTrainer {
         layer: &LayerPlan,
         retain: bool,
     ) -> Result<Vec<f32>> {
-        let b = self.batch;
+        let b = self.micro;
         let (y, rows, n) = match *layer {
             LayerPlan::Dense { k, n, first } => {
-                if retain {
-                    self.acts.push(cur.clone()); // retained X_l (f32!)
-                }
-                let y = if first || self.accel == Accel::Naive {
+                let mut y = self.ctx.arena.take_f32(b * n);
+                if first || self.accel == Accel::Naive {
                     // f32 GEMM over the binarized operands
-                    let a = if first { cur } else { sign_vec(&cur) };
-                    let bw = self.signed_w(wi, k, n);
-                    let mut y = vec![0.0f32; b * n];
-                    self.gemm(b, k, n, &a, &bw, &mut y);
-                    y
+                    let mut bw = self.ctx.arena.take_f32(k * n);
+                    self.signed_w_into(wi, k, n, &mut bw);
+                    if first {
+                        self.gemm(b, k, n, &cur, &bw, &mut y);
+                    } else {
+                        let mut a = self.ctx.arena.take_f32(cur.len());
+                        sign_into(&cur, &mut a);
+                        self.gemm(b, k, n, &a, &bw, &mut y);
+                        self.ctx.arena.put_f32(a);
+                    }
+                    self.ctx.arena.put_f32(bw);
                 } else {
                     // binary×binary hidden fc: pack X̂ and run the
                     // XNOR-popcount path against the cached packed Ŵᵀ
                     // — no padding, so no sign correction is needed
                     // and the result is the exact ±1 dot product
-                    let xhat = BitMatrix::pack(b, k, &cur);
+                    let mut xhat = self.ctx.arena.take_bits(b, k);
+                    BitMatrix::pack_into(b, k, &cur, &mut xhat);
                     let weights = &self.weights;
-                    let pack = || BitMatrix::pack(k, n, &weights[wi].to_f32());
-                    let wt = self.wcache.wt_via_transpose(wi, pack);
-                    let mut y = vec![0.0f32; b * n];
+                    let wt = self.wcache.wt_via_transpose(wi, |dst| {
+                        BitMatrix::pack_into(k, n, weights[wi].as_f32().unwrap(), dst)
+                    });
                     self.accel.backend().xnor_gemm(&xhat, wt, &mut y);
-                    y
-                };
+                    self.ctx.arena.put_bits(xhat);
+                }
                 (y, b, n)
             }
             LayerPlan::Conv { g, cout, first } => {
-                if retain {
-                    self.acts.push(cur.clone());
-                }
                 let rows = g.rows(b);
-                let y = if first || self.accel == Accel::Naive {
-                    // real-input (or direct-loop) f32 path
-                    let a = if first { cur } else { sign_vec(&cur) };
-                    let bw = self.signed_w(wi, g.k(), cout);
-                    self.conv_forward(&a, &bw, b, g, cout)
+                let mut y;
+                if first || self.accel == Accel::Naive {
+                    let mut bw = self.ctx.arena.take_f32(g.k() * cout);
+                    self.signed_w_into(wi, g.k(), cout, &mut bw);
+                    if self.accel == Accel::Naive {
+                        // direct loops, minimal buffers
+                        y = self.ctx.arena.take_zeroed_f32(rows * cout);
+                        if first {
+                            conv_direct_into(&cur, &bw, b, g, cout, &mut y);
+                        } else {
+                            let mut a = self.ctx.arena.take_f32(cur.len());
+                            sign_into(&cur, &mut a);
+                            conv_direct_into(&a, &bw, b, g, cout, &mut y);
+                            self.ctx.arena.put_f32(a);
+                        }
+                    } else {
+                        // real-input first layer on the accelerated
+                        // tiers: f32 im2col (transient, arena-pooled)
+                        // + GEMM
+                        y = self.ctx.arena.take_f32(rows * cout);
+                        let mut cols = self.ctx.arena.take_zeroed_f32(rows * g.k());
+                        im2col_into(&cur, b, g, &mut cols);
+                        self.gemm(rows, g.k(), cout, &cols, &bw, &mut y);
+                        self.ctx.arena.put_f32(cols);
+                    }
+                    self.ctx.arena.put_f32(bw);
                 } else {
                     // fused binary path: patches signed+packed
                     // straight into row panels (no f32 cols, no
-                    // sign_vec copy), XNOR against the cached packed
+                    // sign copy), XNOR against the cached packed
                     // Ŵᵀ, then the masked padding edge correction
                     // back to zero-pad semantics (no-op for VALID)
+                    y = self.ctx.arena.take_f32(rows * cout);
                     let backend = self.accel.backend();
-                    let xhat = im2col_packed(&cur, b, g, &backend.pool());
+                    let mut xhat = self.ctx.arena.take_bits(rows, g.k());
+                    im2col_packed_into(&cur, b, g, &backend.pool(), &mut xhat);
                     let weights = &self.weights;
-                    let pack = || BitMatrix::pack(g.k(), cout, &weights[wi].to_f32());
-                    let wt = self.wcache.wt_via_transpose(wi, pack);
-                    let mut y = vec![0.0f32; rows * cout];
+                    let wt = self.wcache.wt_via_transpose(wi, |dst| {
+                        BitMatrix::pack_into(g.k(), cout, weights[wi].as_f32().unwrap(), dst)
+                    });
                     backend.xnor_gemm(&xhat, wt, &mut y);
-                    subtract_pad_contrib(&mut y, wt, b, g);
-                    y
-                };
+                    let mut scratch = self.ctx.arena.take_f32(g.kside * g.kside * cout);
+                    subtract_pad_contrib_with(&mut y, wt, b, g, &mut scratch);
+                    self.ctx.arena.put_f32(scratch);
+                    self.ctx.arena.put_bits(xhat);
+                }
                 (y, rows, cout)
             }
             _ => unreachable!("matmul_forward on a non-matmul layer"),
         };
-        let (xn, mu, psi) = bn_l2_forward(&y, rows, n, &self.betas[wi].to_f32());
+        let mut xn = self.ctx.arena.take_f32(rows * n);
+        let mut mu = self.ctx.arena.take_f32(n);
+        let mut psi = self.ctx.arena.take_f32(n);
+        bn_l2_forward_into(&y, rows, n, self.beta_f32(wi), &mut xn, &mut mu, &mut psi);
+        self.ctx.arena.put_f32(y);
         if retain {
+            self.acts.push(cur); // retained X_l (f32!) at 2·wi
             self.bn_mu.push(mu);
             self.bn_psi.push(psi);
-            self.acts.push(xn.clone()); // x_{l+1} retained
+            let keep = self.ctx.arena.take_copy_f32(&xn);
+            self.acts.push(keep); // x_{l+1} retained at 2·wi + 1
+        } else {
+            self.ctx.arena.put_f32(cur);
+            self.ctx.arena.put_f32(mu);
+            self.ctx.arena.put_f32(psi);
         }
         Ok(xn)
     }
@@ -248,121 +362,171 @@ impl EngineOps for StandardTrainer {
         dnext: Vec<f32>,
         wi: usize,
         layer: &LayerPlan,
-        lr: f32,
     ) -> Result<Vec<f32>> {
-        let b = self.batch;
-        match *layer {
+        let b = self.micro;
+        let direct = self.chunks() == 1; // write ∂W straight into the accumulator
+        let (rows, n) = match *layer {
+            LayerPlan::Dense { n, .. } => (b, n),
+            LayerPlan::Conv { g, cout, .. } => (g.rows(b), cout),
+            _ => unreachable!("matmul_backward on a non-matmul layer"),
+        };
+        // BN backward: dY from ∂x_{l+1}; ∂β adds into the step
+        // accumulator
+        let mut dy = self.ctx.arena.take_f32(rows * n);
+        {
+            let mut mv = self.ctx.arena.take_f32(n);
+            let mut mvx = self.ctx.arena.take_f32(n);
+            bn_l2_backward_into(
+                &dnext,
+                &self.acts[2 * wi + 1],
+                self.betas[wi].as_f32().expect("f32 betas"),
+                &self.bn_psi[wi],
+                rows,
+                n,
+                &mut dy,
+                &mut self.dbeta_acc[wi],
+                &mut mv,
+                &mut mvx,
+            );
+            self.ctx.arena.put_f32(mv);
+            self.ctx.arena.put_f32(mvx);
+        }
+        self.ctx.arena.put_f32(dnext);
+
+        let dx_out = match *layer {
             LayerPlan::Dense { k, n, first } => {
-                let rows = b;
-                let (dy, dbeta) = bn_l2_backward(
-                    &dnext,
-                    &self.acts[2 * wi + 1],
-                    &self.betas[wi].to_f32(),
-                    &self.bn_psi[wi],
-                    rows,
-                    n,
-                );
-                // dX = dY @ W^T  (Ŵᵀ from the per-step cache via the
-                // word-level block transpose)
-                let mut dx = {
-                    let wt = self.signed_wt(wi, k, n);
-                    let mut dx = vec![0.0f32; rows * k];
-                    self.gemm(rows, n, k, &dy, &wt, &mut dx);
+                let dx_out = if first {
+                    Vec::new()
+                } else {
+                    // dX = dY @ Ŵᵀ (from the per-step cache)
+                    let mut wt_f = self.ctx.arena.take_f32(n * k);
+                    self.signed_wt_into(wi, k, n, &mut wt_f);
+                    let mut dx = self.ctx.arena.take_f32(rows * k);
+                    self.gemm(rows, n, k, &dy, &wt_f, &mut dx);
+                    self.ctx.arena.put_f32(wt_f);
+                    ste_mask_apply(&mut dx, &self.acts[2 * wi]);
                     dx
                 };
-                if !first {
-                    ste_mask_apply(&mut dx, &self.acts[2 * wi]);
-                }
-                // dW = X̂ᵀ·dY — transpose-free.  On the accelerated
-                // tiers the binary X̂ is packed and contracted straight
-                // off the bit panel (rows×k f32 sign copy gone);
-                // bands split k, never the reduction, so the result is
-                // bit-identical across tiers and thread counts.
+                // dW = X̂ᵀ·dY — transpose-free; on the accelerated
+                // tiers contracted straight off the packed bit panel.
+                // Accumulates into dw_acc (directly when this is the
+                // only chunk, else via an arena scratch + add); the
+                // first/naive/packed dispatch is shared between both
+                // arms via `dense_dw_into` so it cannot diverge.
                 let backend = self.accel.backend();
-                let mut dw = vec![0.0f32; k * n];
-                if first {
-                    backend.gemm_f32_at(rows, k, n, &self.acts[2 * wi], &dy, &mut dw);
-                } else if self.accel == Accel::Naive {
-                    let xhat = sign_vec(&self.acts[2 * wi]);
-                    backend.gemm_f32_at(rows, k, n, &xhat, &dy, &mut dw);
+                let naive = self.accel == Accel::Naive;
+                if direct {
+                    dense_dw_into(
+                        backend,
+                        naive,
+                        &self.acts[2 * wi],
+                        &dy,
+                        rows,
+                        k,
+                        n,
+                        first,
+                        &mut self.ctx.arena,
+                        &mut self.dw_acc[wi],
+                    );
                 } else {
-                    let xhat = BitMatrix::pack(rows, k, &self.acts[2 * wi]);
-                    backend.packed_at_gemm_f32(&xhat, &dy, n, &mut dw);
+                    let mut dw = self.ctx.arena.take_f32(k * n);
+                    dense_dw_into(
+                        backend,
+                        naive,
+                        &self.acts[2 * wi],
+                        &dy,
+                        rows,
+                        k,
+                        n,
+                        first,
+                        &mut self.ctx.arena,
+                        &mut dw,
+                    );
+                    simd::add_assign_f32(&mut self.dw_acc[wi], &dw);
+                    self.ctx.arena.put_f32(dw);
                 }
-                cancel_wgrad(&mut dw, &self.weights[wi]);
-                self.opt_w[wi].update(&mut self.weights[wi], &dw, lr, true);
-                self.opt_b[wi].update(&mut self.betas[wi], &dbeta, lr, false);
-                self.wcache.invalidate(wi);
-                Ok(dx)
+                dx_out
             }
             LayerPlan::Conv { g, cout, first } => {
-                let rows = g.rows(b);
-                let (dy, dbeta) = bn_l2_backward(
-                    &dnext,
-                    &self.acts[2 * wi + 1],
-                    &self.betas[wi].to_f32(),
-                    &self.bn_psi[wi],
-                    rows,
-                    cout,
-                );
                 let k = g.k();
-                let mut dw = vec![0.0f32; k * cout];
-                let mut dx;
-                if !first && self.accel != Accel::Naive {
-                    // fused backward: no rows×k f32 transient.
-                    // dX streams per-tap panels of dY·Ŵᵀ straight
-                    // into the map (never the full dcols); dW
-                    // contracts a re-packed bit-im2col panel (the
-                    // forward's fused im2col, +1 pads) against dY,
-                    // then subtracts the border dY sums to restore
-                    // zero-pad semantics (both no-ops for VALID).
+                let fused = !first && self.accel != Accel::Naive;
+                let dx_out = if first {
+                    Vec::new()
+                } else if fused {
+                    // fused backward: dX streams per-tap panels of
+                    // dY·Ŵᵀ straight into the map — no rows×k dcols,
+                    // no full f32 Ŵᵀ unpack
                     let backend = self.accel.backend();
+                    let mut dx = self.ctx.arena.take_zeroed_f32(g.in_len(b));
+                    let mut panel = self.ctx.arena.take_f32(rows * g.cin);
+                    let mut wtap = self.ctx.arena.take_f32(cout * g.cin);
                     {
                         let weights = &self.weights;
-                        let pack = || BitMatrix::pack(k, cout, &weights[wi].to_f32());
-                        let wt = self.wcache.wt_via_transpose(wi, pack);
-                        dx = conv_dx_streaming(&dy, wt, b, g, backend);
+                        let wt = self.wcache.wt_via_transpose(wi, |dst| {
+                            BitMatrix::pack_into(k, cout, weights[wi].as_f32().unwrap(), dst)
+                        });
+                        conv_dx_streaming_into(
+                            &dy, wt, b, g, backend, &mut dx, &mut panel, &mut wtap,
+                        );
                     }
-                    let xh = im2col_packed(&self.acts[2 * wi], b, g, &backend.pool());
-                    backend.packed_at_gemm_f32(&xh, &dy, cout, &mut dw);
-                    drop(xh);
-                    subtract_pad_dw_contrib(&mut dw, &dy, b, g, cout);
-                } else {
-                    // reference path (real-input first layer / naive
-                    // accel): f32 im2col math, each rows×k buffer
-                    // scoped to die as soon as it is consumed — peak
-                    // one such buffer, not three
-                    dx = {
-                        let wt = self.signed_wt(wi, k, cout);
-                        let mut dcols = vec![0.0f32; rows * k];
-                        self.gemm(rows, cout, k, &dy, &wt, &mut dcols);
-                        col2im(&dcols, b, g)
-                    };
-                    let backend = self.accel.backend();
-                    let cols = {
-                        let xin = &self.acts[2 * wi];
-                        if first {
-                            // real-input layer: im2col the retained
-                            // activation in place, no copy
-                            im2col(xin, b, g)
-                        } else {
-                            let xhat = sign_vec(xin);
-                            im2col(&xhat, b, g)
-                        }
-                    };
-                    backend.gemm_f32_at(rows, k, cout, &cols, &dy, &mut dw);
-                }
-                if !first {
+                    self.ctx.arena.put_f32(panel);
+                    self.ctx.arena.put_f32(wtap);
                     ste_mask_apply(&mut dx, &self.acts[2 * wi]);
+                    dx
+                } else {
+                    // reference path (naive accel): f32 im2col math,
+                    // buffers arena-scoped to die as soon as consumed
+                    let mut wt_f = self.ctx.arena.take_f32(cout * k);
+                    self.signed_wt_into(wi, k, cout, &mut wt_f);
+                    let mut dcols = self.ctx.arena.take_f32(rows * k);
+                    self.gemm(rows, cout, k, &dy, &wt_f, &mut dcols);
+                    self.ctx.arena.put_f32(wt_f);
+                    let mut dx = self.ctx.arena.take_zeroed_f32(g.in_len(b));
+                    col2im_into(&dcols, b, g, &mut dx);
+                    self.ctx.arena.put_f32(dcols);
+                    ste_mask_apply(&mut dx, &self.acts[2 * wi]);
+                    dx
+                };
+                // dW accumulation — fused/reference dispatch shared
+                // between the direct and accumulate arms via
+                // `conv_dw_into` so it cannot diverge
+                let backend = self.accel.backend();
+                if direct {
+                    conv_dw_into(
+                        backend,
+                        fused,
+                        &self.acts[2 * wi],
+                        &dy,
+                        b,
+                        g,
+                        cout,
+                        first,
+                        &mut self.ctx.arena,
+                        &mut self.dw_acc[wi],
+                    );
+                } else {
+                    let mut dw = self.ctx.arena.take_f32(k * cout);
+                    conv_dw_into(
+                        backend,
+                        fused,
+                        &self.acts[2 * wi],
+                        &dy,
+                        b,
+                        g,
+                        cout,
+                        first,
+                        &mut self.ctx.arena,
+                        &mut dw,
+                    );
+                    simd::add_assign_f32(&mut self.dw_acc[wi], &dw);
+                    self.ctx.arena.put_f32(dw);
                 }
-                cancel_wgrad(&mut dw, &self.weights[wi]);
-                self.opt_w[wi].update(&mut self.weights[wi], &dw, lr, true);
-                self.opt_b[wi].update(&mut self.betas[wi], &dbeta, lr, false);
-                self.wcache.invalidate(wi);
-                Ok(dx)
+                dx_out
             }
-            _ => unreachable!("matmul_backward on a non-matmul layer"),
-        }
+            _ => unreachable!(),
+        };
+        self.ctx.arena.put_f32(dy);
+        Ok(dx_out)
     }
 
     fn pool_forward(
@@ -373,16 +537,32 @@ impl EngineOps for StandardTrainer {
         c: usize,
         retain: bool,
     ) -> Vec<f32> {
-        let (out, mask) = maxpool_forward(&cur, self.batch, h, w, c);
+        let b = self.micro;
+        let cells = b * (h / 2) * (w / 2) * c;
+        let mut out = self.ctx.arena.take_f32(cells);
+        let mut mask = self.ctx.arena.take_u32(cells);
+        maxpool_forward_into(&cur, b, h, w, c, &mut out, &mut mask);
+        self.ctx.arena.put_f32(cur);
         if retain {
             self.pool_masks.push(mask);
+        } else {
+            self.ctx.arena.put_u32(mask);
         }
         out
     }
 
     fn pool_backward(&mut self, dnext: Vec<f32>, h: usize, w: usize, c: usize) -> Vec<f32> {
+        let b = self.micro;
         let mask = self.pool_masks.pop().expect("pool mask stack underflow");
-        maxpool_backward(&dnext, &mask, self.batch, h, w, c)
+        let mut dx = self.ctx.arena.take_zeroed_f32(b * h * w * c);
+        maxpool_backward_into(&dnext, &mask, b, h, w, c, &mut dx);
+        self.ctx.arena.put_u32(mask);
+        self.ctx.arena.put_f32(dnext);
+        dx
+    }
+
+    fn end_chunk(&mut self) {
+        self.drain_chunk_state();
     }
 }
 
@@ -391,24 +571,40 @@ impl StepEngine for StandardTrainer {
         if x.len() != self.batch * self.plan.input_elems || labels.len() != self.batch {
             bail!("bad batch shapes");
         }
-        let logits = self.forward(x, true)?;
-        let classes = self.plan.classes;
-        let mut dlogits = vec![0.0f32; self.batch * classes];
-        let (loss, acc) = softmax_xent_grad(&logits, labels, classes, &mut dlogits);
-        self.backward(dlogits, lr)?;
-        // drop per-step residuals (lifetimes end with the step)
-        self.acts.clear();
-        self.pool_masks.clear();
-        self.bn_mu.clear();
-        self.bn_psi.clear();
+        self.begin_step();
+        let layers = std::mem::take(&mut self.plan.layers);
+        let r = ops::run_train_chunks(
+            self,
+            &layers,
+            x,
+            labels,
+            self.plan.classes,
+            self.plan.input_elems,
+            self.batch / self.micro,
+        );
+        self.plan.layers = layers;
+        let (loss, acc) = r?;
+        self.apply_update(lr);
         Ok((loss, acc))
     }
 
     fn eval(&mut self, x: &[f32], labels: &[usize]) -> Result<(f32, f32)> {
-        let logits = self.forward(x, false)?;
-        let classes = self.plan.classes;
-        let mut d = vec![0.0f32; self.batch * classes];
-        Ok(softmax_xent_grad(&logits, labels, classes, &mut d))
+        if x.len() != self.batch * self.plan.input_elems || labels.len() != self.batch {
+            bail!("bad batch shapes");
+        }
+        self.ctx.drain_skip_stacks();
+        let layers = std::mem::take(&mut self.plan.layers);
+        let r = ops::run_eval_chunks(
+            self,
+            &layers,
+            x,
+            labels,
+            self.plan.classes,
+            self.plan.input_elems,
+            self.batch / self.micro,
+        );
+        self.plan.layers = layers;
+        r
     }
 
     fn state_bytes(&self) -> usize {
@@ -416,11 +612,21 @@ impl StepEngine for StandardTrainer {
             + self.betas.iter().map(Store::heap_bytes).sum::<usize>()
             + self.opt_w.iter().map(OptState::heap_bytes).sum::<usize>()
             + self.opt_b.iter().map(OptState::heap_bytes).sum::<usize>()
+            + self.dw_acc.iter().map(|v| v.len() * 4).sum::<usize>()
+            + self.dbeta_acc.iter().map(|v| v.len() * 4).sum::<usize>()
             + self.wcache.heap_bytes()
     }
 
     fn batch(&self) -> usize {
         self.batch
+    }
+
+    fn microbatch(&self) -> usize {
+        self.micro
+    }
+
+    fn arena_bytes(&self) -> usize {
+        self.ctx.arena.heap_bytes()
     }
 
     fn weights_snapshot(&self) -> Vec<Vec<f32>> {
@@ -451,11 +657,93 @@ impl StepEngine for StandardTrainer {
     }
 }
 
+/// Dense dW contraction X̂ᵀ·dY into `dst` (the step accumulator or an
+/// arena scratch, fully overwritten): f32 AᵀB for the real-input
+/// first layer, sign-copy reference on the naive tier, straight off
+/// the packed bit panel otherwise.  One function for both
+/// accumulation arms of `matmul_backward`, so the dispatch cannot
+/// diverge between them.
+#[allow(clippy::too_many_arguments)]
+fn dense_dw_into(
+    backend: crate::bitops::Backend,
+    naive: bool,
+    xin: &[f32],
+    dy: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    first: bool,
+    arena: &mut StepArena,
+    dst: &mut [f32],
+) {
+    if first {
+        backend.gemm_f32_at(rows, k, n, xin, dy, dst);
+    } else if naive {
+        let mut xs = arena.take_f32(xin.len());
+        sign_into(xin, &mut xs);
+        backend.gemm_f32_at(rows, k, n, &xs, dy, dst);
+        arena.put_f32(xs);
+    } else {
+        let mut xhat = arena.take_bits(rows, k);
+        BitMatrix::pack_into(rows, k, xin, &mut xhat);
+        backend.packed_at_gemm_f32(&xhat, dy, n, dst);
+        arena.put_bits(xhat);
+    }
+}
+
+/// Conv dW contraction into `dst` (fully overwritten): the fused path
+/// re-runs the bit-im2col on the retained f32 acts, contracts off the
+/// packed panel and restores zero-pad dW semantics; the reference
+/// path is the zero-pad f32 im2col + transpose-free AᵀB GEMM.  Shared
+/// by both accumulation arms of `matmul_backward`.
+#[allow(clippy::too_many_arguments)]
+fn conv_dw_into(
+    backend: crate::bitops::Backend,
+    fused: bool,
+    xin: &[f32],
+    dy: &[f32],
+    b: usize,
+    g: ConvGeom,
+    cout: usize,
+    first: bool,
+    arena: &mut StepArena,
+    dst: &mut [f32],
+) {
+    let k = g.k();
+    let rows = g.rows(b);
+    if fused {
+        let mut xh = arena.take_bits(rows, k);
+        im2col_packed_into(xin, b, g, &backend.pool(), &mut xh);
+        let mut scratch = arena.take_f32(g.kside * g.kside * cout);
+        backend.packed_at_gemm_f32(&xh, dy, cout, dst);
+        subtract_pad_dw_contrib_with(dst, dy, b, g, cout, &mut scratch);
+        arena.put_f32(scratch);
+        arena.put_bits(xh);
+    } else {
+        let mut cols = arena.take_zeroed_f32(rows * k);
+        if first {
+            im2col_into(xin, b, g, &mut cols);
+        } else {
+            let mut xs = arena.take_f32(xin.len());
+            sign_into(xin, &mut xs);
+            im2col_into(&xs, b, g, &mut cols);
+            arena.put_f32(xs);
+        }
+        backend.gemm_f32_at(rows, k, cout, &cols, dy, dst);
+        arena.put_f32(cols);
+    }
+}
+
 // ----------------------------------------------------- shared helpers
 // (pub(crate): the proposed engine reuses the float kernels)
 
-pub(crate) fn sign_vec(x: &[f32]) -> Vec<f32> {
-    x.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect()
+/// Binarize into a caller-owned buffer (every cell written):
+/// sgn(x) with sgn(0) = +1.
+pub(crate) fn sign_into(x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = if v >= 0.0 { 1.0 } else { -1.0 };
+    }
 }
 
 pub fn transpose(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
@@ -487,14 +775,36 @@ pub(crate) fn cancel_wgrad(dw: &mut [f32], w: &Store) {
 }
 
 /// ℓ2 batch norm forward over (rows × channels): Alg. 1 lines 5-7.
+/// (Allocating test convenience; the engines use the `_into` form.)
+#[cfg(test)]
 pub(crate) fn bn_l2_forward(
     y: &[f32],
     rows: usize,
     channels: usize,
     beta: &[f32],
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut xn = vec![0.0f32; y.len()];
     let mut mu = vec![0.0f32; channels];
     let mut psi = vec![0.0f32; channels];
+    bn_l2_forward_into(y, rows, channels, beta, &mut xn, &mut mu, &mut psi);
+    (xn, mu, psi)
+}
+
+/// [`bn_l2_forward`] into caller-owned buffers (all re-zeroed here;
+/// recycled dirty storage fine).
+pub(crate) fn bn_l2_forward_into(
+    y: &[f32],
+    rows: usize,
+    channels: usize,
+    beta: &[f32],
+    xn: &mut [f32],
+    mu: &mut [f32],
+    psi: &mut [f32],
+) {
+    debug_assert_eq!(y.len(), rows * channels);
+    debug_assert_eq!(xn.len(), y.len());
+    mu.fill(0.0);
+    psi.fill(0.0);
     for r in 0..rows {
         for c in 0..channels {
             mu[c] += y[r * channels + c];
@@ -512,16 +822,15 @@ pub(crate) fn bn_l2_forward(
     for p in psi.iter_mut() {
         *p = (*p / rows as f32 + 1e-5).sqrt();
     }
-    let mut xn = vec![0.0f32; y.len()];
     for r in 0..rows {
         for c in 0..channels {
             xn[r * channels + c] = (y[r * channels + c] - mu[c]) / psi[c] + beta[c];
         }
     }
-    (xn, mu, psi)
 }
 
 /// ℓ2 batch norm backward: Alg. 1 lines 10-13 (xn is x_{l+1}).
+#[cfg(test)]
 pub(crate) fn bn_l2_backward(
     dx: &[f32],
     x_next: &[f32],
@@ -530,34 +839,58 @@ pub(crate) fn bn_l2_backward(
     rows: usize,
     channels: usize,
 ) -> (Vec<f32>, Vec<f32>) {
-    let mut mean_v = vec![0.0f32; channels];
-    let mut mean_vx = vec![0.0f32; channels];
-    let mut dbeta = vec![0.0f32; channels];
-    for r in 0..rows {
-        for c in 0..channels {
-            let v = dx[r * channels + c] / psi[c];
-            let xn = x_next[r * channels + c] - beta[c];
-            mean_v[c] += v;
-            mean_vx[c] += v * xn;
-            dbeta[c] += dx[r * channels + c];
-        }
-    }
-    for c in 0..channels {
-        mean_v[c] /= rows as f32;
-        mean_vx[c] /= rows as f32;
-    }
     let mut dy = vec![0.0f32; dx.len()];
-    for r in 0..rows {
-        for c in 0..channels {
-            let v = dx[r * channels + c] / psi[c];
-            let xn = x_next[r * channels + c] - beta[c];
-            dy[r * channels + c] = v - mean_v[c] - mean_vx[c] * xn;
-        }
-    }
+    let mut dbeta = vec![0.0f32; channels];
+    let mut mv = vec![0.0f32; channels];
+    let mut mvx = vec![0.0f32; channels];
+    bn_l2_backward_into(dx, x_next, beta, psi, rows, channels, &mut dy, &mut dbeta, &mut mv, &mut mvx);
     (dy, dbeta)
 }
 
+/// [`bn_l2_backward`] into caller-owned buffers.  `dy`, `mv`, `mvx`
+/// are overwritten (dirty recycled storage fine); `dbeta_acc` is
+/// **added into** — the microbatch accumulation point for ∂β.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn bn_l2_backward_into(
+    dx: &[f32],
+    x_next: &[f32],
+    beta: &[f32],
+    psi: &[f32],
+    rows: usize,
+    channels: usize,
+    dy: &mut [f32],
+    dbeta_acc: &mut [f32],
+    mv: &mut [f32],
+    mvx: &mut [f32],
+) {
+    debug_assert_eq!(dx.len(), rows * channels);
+    debug_assert_eq!(dy.len(), dx.len());
+    mv.fill(0.0);
+    mvx.fill(0.0);
+    for r in 0..rows {
+        for c in 0..channels {
+            let v = dx[r * channels + c] / psi[c];
+            let xn = x_next[r * channels + c] - beta[c];
+            mv[c] += v;
+            mvx[c] += v * xn;
+            dbeta_acc[c] += dx[r * channels + c];
+        }
+    }
+    for c in 0..channels {
+        mv[c] /= rows as f32;
+        mvx[c] /= rows as f32;
+    }
+    for r in 0..rows {
+        for c in 0..channels {
+            let v = dx[r * channels + c] / psi[c];
+            let xn = x_next[r * channels + c] - beta[c];
+            dy[r * channels + c] = v - mv[c] - mvx[c] * xn;
+        }
+    }
+}
+
 /// 2×2 max pool (NHWC); mask stores the winning cell index (0..4).
+#[cfg(test)]
 pub(crate) fn maxpool_forward(
     x: &[f32],
     b: usize,
@@ -565,9 +898,26 @@ pub(crate) fn maxpool_forward(
     w: usize,
     c: usize,
 ) -> (Vec<f32>, Vec<u32>) {
+    let cells = b * (h / 2) * (w / 2) * c;
+    let mut out = vec![0.0f32; cells];
+    let mut mask = vec![0u32; cells];
+    maxpool_forward_into(x, b, h, w, c, &mut out, &mut mask);
+    (out, mask)
+}
+
+/// [`maxpool_forward`] into caller-owned buffers (every cell written).
+pub(crate) fn maxpool_forward_into(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    out: &mut [f32],
+    mask: &mut [u32],
+) {
     let (oh, ow) = (h / 2, w / 2);
-    let mut out = vec![0.0f32; b * oh * ow * c];
-    let mut mask = vec![0u32; b * oh * ow * c];
+    debug_assert_eq!(out.len(), b * oh * ow * c);
+    debug_assert_eq!(mask.len(), out.len());
     for bi in 0..b {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -590,9 +940,9 @@ pub(crate) fn maxpool_forward(
             }
         }
     }
-    (out, mask)
 }
 
+#[cfg(test)]
 pub(crate) fn maxpool_backward(
     dout: &[f32],
     mask: &[u32],
@@ -601,8 +951,24 @@ pub(crate) fn maxpool_backward(
     w: usize,
     c: usize,
 ) -> Vec<f32> {
-    let (oh, ow) = (h / 2, w / 2);
     let mut dx = vec![0.0f32; b * h * w * c];
+    maxpool_backward_into(dout, mask, b, h, w, c, &mut dx);
+    dx
+}
+
+/// [`maxpool_backward`] into a caller-owned buffer, which must be
+/// **zeroed** (only winning cells are written).
+pub(crate) fn maxpool_backward_into(
+    dout: &[f32],
+    mask: &[u32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    dx: &mut [f32],
+) {
+    let (oh, ow) = (h / 2, w / 2);
+    debug_assert_eq!(dx.len(), b * h * w * c);
     const OFF: [(usize, usize); 4] = [(0, 0), (0, 1), (1, 0), (1, 1)];
     for bi in 0..b {
         for oy in 0..oh {
@@ -615,16 +981,23 @@ pub(crate) fn maxpool_backward(
             }
         }
     }
-    dx
 }
 
 /// im2col for any conv geometry, NHWC: output (B·OH·OW, k²·Cin).
 /// The f32 reference the fused `bitops::im2col_packed` is bit-exact
 /// against (and the pre-fusion baseline the conv bench diffs).
 pub fn im2col(x: &[f32], b: usize, g: ConvGeom) -> Vec<f32> {
+    let mut cols = vec![0.0f32; g.rows(b) * g.k()];
+    im2col_into(x, b, g, &mut cols);
+    cols
+}
+
+/// [`im2col`] into a caller-owned buffer, which must be **zeroed**
+/// (SAME padding taps are left untouched as zeros).
+pub fn im2col_into(x: &[f32], b: usize, g: ConvGeom, cols: &mut [f32]) {
     assert_eq!(x.len(), g.in_len(b), "NHWC shape mismatch");
     let k = g.k();
-    let mut cols = vec![0.0f32; g.rows(b) * k];
+    assert_eq!(cols.len(), g.rows(b) * k, "cols shape mismatch");
     for bi in 0..b {
         for oy in 0..g.oh {
             for ox in 0..g.ow {
@@ -643,7 +1016,6 @@ pub fn im2col(x: &[f32], b: usize, g: ConvGeom) -> Vec<f32> {
             }
         }
     }
-    cols
 }
 
 /// col2im: scatter-add patch grads back to the input grad (any
@@ -651,9 +1023,17 @@ pub fn im2col(x: &[f32], b: usize, g: ConvGeom) -> Vec<f32> {
 /// `bitops::conv_dx_streaming` path is equivalent to (and the
 /// pre-fusion baseline the backward bench runs).
 pub fn col2im(dcols: &[f32], b: usize, g: ConvGeom) -> Vec<f32> {
+    let mut dx = vec![0.0f32; g.in_len(b)];
+    col2im_into(dcols, b, g, &mut dx);
+    dx
+}
+
+/// [`col2im`] into a caller-owned buffer, which must be **zeroed**
+/// (patch gradients scatter-add).
+pub fn col2im_into(dcols: &[f32], b: usize, g: ConvGeom, dx: &mut [f32]) {
     let k = g.k();
     assert_eq!(dcols.len(), g.rows(b) * k, "cols shape mismatch");
-    let mut dx = vec![0.0f32; g.in_len(b)];
+    assert_eq!(dx.len(), g.in_len(b), "dX shape mismatch");
     for bi in 0..b {
         for oy in 0..g.oh {
             for ox in 0..g.ow {
@@ -674,10 +1054,10 @@ pub fn col2im(dcols: &[f32], b: usize, g: ConvGeom) -> Vec<f32> {
             }
         }
     }
-    dx
 }
 
 /// Direct convolution for any geometry (naïve mode: no im2col buffer).
+#[cfg(test)]
 pub(crate) fn conv_direct(
     x: &[f32],
     wgt: &[f32], // (k², cin, cout) flattened as kside*kside*cin rows × cout
@@ -686,6 +1066,21 @@ pub(crate) fn conv_direct(
     cout: usize,
 ) -> Vec<f32> {
     let mut y = vec![0.0f32; g.rows(b) * cout];
+    conv_direct_into(x, wgt, b, g, cout, &mut y);
+    y
+}
+
+/// [`conv_direct`] into a caller-owned buffer, which must be
+/// **zeroed** (taps accumulate).
+pub(crate) fn conv_direct_into(
+    x: &[f32],
+    wgt: &[f32],
+    b: usize,
+    g: ConvGeom,
+    cout: usize,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(y.len(), g.rows(b) * cout);
     for bi in 0..b {
         for oy in 0..g.oh {
             for ox in 0..g.ow {
@@ -714,7 +1109,6 @@ pub(crate) fn conv_direct(
             }
         }
     }
-    y
 }
 
 #[cfg(test)]
@@ -891,6 +1285,42 @@ mod tests {
         assert!(per_step >= 1 && per_step <= t.weights.len(), "{per_step}");
         t.train_step(&x, &y, 0.01).unwrap();
         assert_eq!(t.weight_pack_count(), 2 * per_step);
+    }
+
+    #[test]
+    fn microbatch_full_chunk_is_identical() {
+        // micro == batch runs the very same code path values: losses
+        // and weights must be bit-identical to the default trainer
+        let g = lower(&get("cnv_mini").unwrap()).unwrap();
+        let (x, y) = toy_batch(8, 16 * 16 * 3, 10, 21);
+        let mut a = StandardTrainer::new(&g, 8, "adam", Accel::Blocked, 3).unwrap();
+        let mut b =
+            StandardTrainer::with_microbatch(&g, 8, 8, "adam", Accel::Blocked, 3).unwrap();
+        for step in 0..3 {
+            let (la, _) = a.train_step(&x, &y, 0.01).unwrap();
+            let (lb, _) = b.train_step(&x, &y, 0.01).unwrap();
+            assert_eq!(la, lb, "step {step}");
+        }
+        assert_eq!(a.weights_snapshot(), b.weights_snapshot());
+    }
+
+    #[test]
+    fn steady_state_stops_allocating_from_the_arena() {
+        // after the warmup step the arena pool is at fixed point:
+        // further steps miss the free lists zero times
+        for accel in [Accel::Blocked, Accel::Tiled(2)] {
+            let mut t = make("cnv_mini", 4, accel);
+            let (x, y) = toy_batch(4, 16 * 16 * 3, 10, 23);
+            t.train_step(&x, &y, 0.01).unwrap();
+            t.train_step(&x, &y, 0.01).unwrap();
+            let misses = t.ctx.arena.misses();
+            let bytes = t.ctx.arena.heap_bytes();
+            for _ in 0..3 {
+                t.train_step(&x, &y, 0.01).unwrap();
+            }
+            assert_eq!(t.ctx.arena.misses(), misses, "{accel:?}: arena missed in steady state");
+            assert_eq!(t.ctx.arena.heap_bytes(), bytes, "{accel:?}: arena grew");
+        }
     }
 
     #[test]

@@ -76,6 +76,26 @@ impl Store {
         }
     }
 
+    /// Borrow the f32 payload without copying (None for f16 storage).
+    /// The standard engine's allocation-free step path reads weights
+    /// and β through this.
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Store::F32(v) => Some(v),
+            Store::F16(_) => None,
+        }
+    }
+
+    /// Decode into a caller-owned buffer (no allocation): `out.len()`
+    /// must equal `self.len()`.
+    pub fn write_f32_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len());
+        match self {
+            Store::F32(v) => out.copy_from_slice(v),
+            Store::F16(v) => v.write_f32_into(out),
+        }
+    }
+
     pub fn heap_bytes(&self) -> usize {
         match self {
             Store::F32(v) => v.len() * 4,

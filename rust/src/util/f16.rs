@@ -216,6 +216,23 @@ impl F16Vec {
     pub fn to_f32(&self) -> Vec<f32> {
         self.0.iter().map(|&h| f16_bits_to_f32(h)).collect()
     }
+
+    /// Decode into a caller-owned buffer (no allocation).
+    pub fn write_f32_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.0.len());
+        for (o, &h) in out.iter_mut().zip(&self.0) {
+            *o = f16_bits_to_f32(h);
+        }
+    }
+
+    /// Re-encode a caller buffer into this carrier in place (no
+    /// allocation): lengths must match.
+    pub fn fill_from_f32(&mut self, xs: &[f32]) {
+        assert_eq!(self.0.len(), xs.len());
+        for (h, &x) in self.0.iter_mut().zip(xs) {
+            *h = f32_to_f16_bits(x);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -74,6 +74,113 @@ fn every_zoo_model_plans_and_takes_a_step_on_every_tier() {
 }
 
 #[test]
+fn microbatch_sweep_matches_reference_gradients() {
+    // ISSUE-5 satellite: micro ∈ {1, B/2, B} on both engines.
+    //
+    // Batch norm couples samples *within* its normalization group, so
+    // a microbatched step uses per-chunk (ghost) BN statistics — the
+    // standard gradient-accumulation semantics.  Exact equality with
+    // the full-batch step is therefore only defined at micro = B
+    // (asserted bit-exact below); for micro < B the mathematically
+    // exact invariant is that the accumulated gradient equals the
+    // *mean of independent chunk gradients* taken at the same
+    // weights, which plain SGD exposes as first-step weight deltas.
+    // That reference match is asserted at 1e-5 on the (all-f32)
+    // standard engine; the proposed engine's weight path binarizes
+    // the accumulated ∂W (sign of a sum ≠ mean of signs), so it is
+    // pinned by micro = B exactness plus the β-path check in
+    // rust/tests/memtrack_step.rs.
+    use bnn_edge::util::rng::Pcg32;
+    let batch = 8usize;
+    for model in ["mlp_mini", "cnv_mini"] {
+        let graph = lower(&get(model).unwrap()).unwrap();
+        let mut rng = Pcg32::new(5);
+        let x = rng.normal_vec(batch * graph.input_elems);
+        let y: Vec<usize> = (0..batch).map(|i| i % graph.classes).collect();
+
+        for algo in ["standard", "proposed"] {
+            // micro = B: bit-identical to the default engine
+            let mut full = build_engine(algo, &graph, batch, "sgd", Accel::Tiled(2), 7)
+                .unwrap();
+            let mut micro_b = bnn_edge::naive::build_engine_micro(
+                algo,
+                &graph,
+                batch,
+                batch,
+                "sgd",
+                Accel::Tiled(2),
+                7,
+            )
+            .unwrap();
+            for step in 0..2 {
+                let (lf, _) = full.train_step(&x, &y, 0.01).unwrap();
+                let (lm, _) = micro_b.train_step(&x, &y, 0.01).unwrap();
+                assert_eq!(lf, lm, "{model}/{algo} micro=B step {step}");
+            }
+            assert_eq!(
+                full.weights_snapshot(),
+                micro_b.weights_snapshot(),
+                "{model}/{algo} micro=B"
+            );
+        }
+
+        // micro ∈ {1, B/2}: standard-engine deltas equal the mean of
+        // independent chunk deltas within 1e-5
+        for micro in [1usize, batch / 2] {
+            let chunks = batch / micro;
+            let mut m = bnn_edge::naive::build_engine_micro(
+                "standard",
+                &graph,
+                batch,
+                micro,
+                "sgd",
+                Accel::Tiled(2),
+                7,
+            )
+            .unwrap();
+            let w0 = m.weights_snapshot();
+            // small enough that no per-chunk update crosses the ±1 weight
+            // clip (clipping is outside the linear-in-gradient regime the
+            // mean-of-chunk-deltas identity relies on)
+            let lr = 0.01f32;
+            let mut want: Vec<Vec<f32>> = w0.iter().map(|v| vec![0.0; v.len()]).collect();
+            for ci in 0..chunks {
+                let mut r =
+                    build_engine("standard", &graph, micro, "sgd", Accel::Tiled(2), 7)
+                        .unwrap();
+                r.load_weights(&w0).unwrap();
+                r.train_step(
+                    &x[ci * micro * graph.input_elems..(ci + 1) * micro * graph.input_elems],
+                    &y[ci * micro..(ci + 1) * micro],
+                    lr,
+                )
+                .unwrap();
+                for (acc, (after, before)) in
+                    want.iter_mut().zip(r.weights_snapshot().iter().zip(&w0))
+                {
+                    for (a, (u, v)) in acc.iter_mut().zip(after.iter().zip(before)) {
+                        *a += (u - v) / chunks as f32;
+                    }
+                }
+            }
+            m.train_step(&x, &y, lr).unwrap();
+            for (li, (after, (before, wnt))) in
+                m.weights_snapshot().iter().zip(w0.iter().zip(&want)).enumerate()
+            {
+                for i in 0..after.len() {
+                    let got = after[i] - before[i];
+                    assert!(
+                        (got - wnt[i]).abs() <= 1e-5 + 1e-5 * wnt[i].abs(),
+                        "{model} micro={micro} layer {li} @ {i}: {got} vs {}",
+                        wnt[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn naive_standard_matches_hlo_golden_loss() {
     if !artifacts_present() {
         return;
@@ -124,6 +231,65 @@ fn naive_standard_matches_hlo_golden_loss() {
         (acc - want_acc).abs() < 1e-6,
         "acc: naive {acc} vs HLO {want_acc}"
     );
+}
+
+#[test]
+#[ignore = "needs artifacts regenerated with the reconciled apply_model (make artifacts)"]
+fn residual_golden_loss_matches_after_apply_model_reconciliation() {
+    // ROADMAP PR-4 quirk, reconciled in PR 5: Python apply_model used
+    // to (a) apply l.stride to BOTH ResNetE block convs and (b) skip
+    // around each conv separately, while the Rust engines lower one
+    // skip around the 2-conv block with a stride-1 second conv.
+    // python/compile/models.py now implements the Rust semantics
+    // (verified against a numpy mirror at 1e-8 — see CHANGES.md), so
+    // once artifacts are regenerated the residual minis' train-side
+    // goldens must load and reproduce the naive engines' loss like
+    // every other model.  Until `make artifacts` runs on a jax
+    // machine, the old residual goldens (if present) predate the fix
+    // — hence #[ignore].
+    if !artifacts_present() {
+        return;
+    }
+    let eng = Engine::cpu(artifacts_dir()).unwrap();
+    for (model, name) in [
+        ("resnete_mini", "resnete_mini_standard_adam_b64"),
+        ("bireal_mini", "bireal_mini_standard_adam_b64"),
+    ] {
+        let art = match eng.load(name) {
+            Ok(a) => a,
+            Err(_) => continue, // artifact set without residual goldens
+        };
+        let golden = eng.golden(name).unwrap();
+        let m = &art.manifest;
+        let graph = lower(&get(model).unwrap()).unwrap();
+        let mut naive =
+            StandardTrainer::new(&graph, m.batch, "adam", Accel::Blocked, 0).unwrap();
+        let params: Vec<Vec<f32>> = m
+            .input_indices(IoKind::Param)
+            .into_iter()
+            .map(|i| golden.inputs[i].data.clone())
+            .collect();
+        naive.load_weights(&params).unwrap();
+        let xi = m.input_indices(IoKind::X)[0];
+        let yi = m.input_indices(IoKind::Y)[0];
+        let labels: Vec<usize> = golden.inputs[yi]
+            .data
+            .chunks(m.classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect();
+        let (loss, _) = naive.train_step(&golden.inputs[xi].data, &labels, 0.001).unwrap();
+        let want = golden.outputs[m.output_index("loss").unwrap()].item().unwrap();
+        assert!(
+            (loss - want).abs() < 5e-3,
+            "{model}: naive {loss} vs HLO golden {want}"
+        );
+    }
 }
 
 #[test]
