@@ -1,0 +1,27 @@
+# Build-time entry points.  The Rust crate is self-contained after
+# `make artifacts` has run once on a machine with jax (the compile
+# path is Python-only; see python/compile/aot.py).
+#
+# NOTE offline images: regeneration *works* wherever jax is installed,
+# but replaying the artifacts (rust/tests/engine_parity.rs golden
+# tests, the `hlo` engine) additionally needs a PJRT-enabled `xla`
+# binding — the vendored rust/vendor/xla stub cannot execute HLO, so
+# on stub builds the golden tests must keep skipping: do not commit
+# rust/artifacts/ into a tree that only builds the stub.
+
+.PHONY: artifacts artifacts-core test bench
+
+# Full variant sweep (Tables 2-6, Fig. 2 — plus goldens, including the
+# residual-model goldens for the reconciled apply_model).
+artifacts:
+	cd python && python3 -m compile.aot --out ../rust/artifacts --set full
+
+# Quickstart subset: mlp + mlp_mini train/eval with goldens.
+artifacts-core:
+	cd python && python3 -m compile.aot --out ../rust/artifacts --set core
+
+test:
+	cd rust && cargo test -q
+
+bench:
+	cd rust && cargo bench

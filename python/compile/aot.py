@@ -239,7 +239,10 @@ def variant_set(which: str):
     for model in ("resnete_mini", "bireal_mini"):
         for algo in ("standard", "f16", "boolgrad_l2", "boolgrad_l1",
                      "proposed"):
-            train(model, algo, batch=64)
+            # goldens on the reconciled-apply_model variants so
+            # rust/tests/engine_parity.rs::residual_golden_loss_* has
+            # ground truth to replay (see the Makefile blocker note)
+            train(model, algo, batch=64, golden=algo == "standard")
             evalv(model, algo, batch=100)
 
     # --- Fig. 2: batch-size sweep (3 optimizers x 2 algos x 3 sizes) ---

@@ -1,0 +1,164 @@
+//! §Perf serving bench — dynamic batching vs serial batch-1 serving,
+//! measured end to end through the [`bnn_edge::serve`] stack.
+//!
+//! Both modes run the *same* served system (clients → queue →
+//! [`BatchServer`] → warmed [`PackedInferEngine`]) under the same
+//! closed-loop offered load; the only difference is the batch cap:
+//! `max_batch = 1` (serial batch-1, every forward is one request) vs
+//! `max_batch = N` (dynamic batching).  That makes the comparison
+//! apples to apples: identical sync overhead, identical queueing
+//! discipline — the delta is purely what batch coalescing buys the
+//! packed XNOR kernels (rows scale with the coalesced batch, so
+//! dense-dominated models gain the most: a batch-1 dense GEMM is a
+//! single-row panel).
+//!
+//! Emits `BENCH_serve.json` rows `{mode, engine, model, backend,
+//! threads, offered_qps, max_batch, slo_us, p50_us, p99_us,
+//! achieved_qps, steady_state_bytes}`.  The load is closed-loop at
+//! saturation, so `offered_qps == achieved_qps` by construction; CI
+//! gates on `dynamic.achieved_qps >= 3x serial.achieved_qps` at
+//! equal-or-better p99 on the dense models.  Flags: `--smoke`
+//! (trimmed sweep for CI), `--out PATH` (default `BENCH_serve.json`).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use bnn_edge::models::{get, lower};
+use bnn_edge::naive::{build_engine, Accel, Plan, StepEngine};
+use bnn_edge::serve::{BatchServer, InferAlgo, PackedInferEngine, WeightSnapshot};
+use bnn_edge::util::bench::write_json_rows;
+use bnn_edge::util::cli::Args;
+use bnn_edge::util::json::Json;
+use bnn_edge::util::rng::Pcg32;
+use bnn_edge::util::stats::percentile;
+
+struct LoadResult {
+    p50_us: f64,
+    p99_us: f64,
+    qps: f64,
+    steady_state_bytes: usize,
+}
+
+/// Drive `clients × per_client` closed-loop requests through a served
+/// engine capped at `max_batch`; returns client-observed latencies.
+#[allow(clippy::too_many_arguments)]
+fn run_load(
+    graph: &bnn_edge::models::Graph,
+    algo: &str,
+    accel: Accel,
+    max_batch: usize,
+    slo_us: u64,
+    clients: usize,
+    per_client: usize,
+    snap: &Arc<WeightSnapshot>,
+) -> LoadResult {
+    let engine = PackedInferEngine::new(
+        graph,
+        InferAlgo::parse(algo).unwrap(),
+        accel,
+        max_batch,
+        Arc::clone(snap),
+    )
+    .unwrap();
+    let (batcher, server) = BatchServer::new(engine, slo_us, max_batch.max(4) * 4).unwrap();
+    let steady = server.steady_state_bytes();
+    let h = std::thread::spawn(move || server.run());
+
+    let ie = graph.input_elems;
+    let cl = graph.classes;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients as u64 {
+        let b = batcher.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg32::new(0x5e4e + c);
+            let x = rng.normal_vec(ie);
+            let mut out = vec![0.0f32; cl];
+            let mut lat = Vec::with_capacity(per_client);
+            for _ in 0..per_client {
+                let t = Instant::now();
+                b.infer_one(&x, &mut out).unwrap();
+                lat.push(t.elapsed().as_secs_f64() * 1e6);
+            }
+            lat
+        }));
+    }
+    let mut lat = Vec::with_capacity(clients * per_client);
+    for h in handles {
+        lat.extend(h.join().unwrap());
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    batcher.shutdown();
+    h.join().unwrap().unwrap();
+    LoadResult {
+        p50_us: percentile(&lat, 50.0),
+        p99_us: percentile(&lat, 99.0),
+        qps: lat.len() as f64 / elapsed.max(1e-12),
+        steady_state_bytes: steady,
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.bool("smoke");
+    let out_path = args.str_or("out", "BENCH_serve.json");
+
+    // dense models lead: batch-1 dense GEMMs are single-row panels,
+    // the case dynamic batching exists for (and the CI gate's models)
+    let models: Vec<&str> = if smoke {
+        vec!["mlp_mini", "mlp"]
+    } else {
+        vec!["mlp_mini", "mlp", "cnv_mini", "binarynet_mini"]
+    };
+    let backends: Vec<(Accel, &str, usize)> = if smoke {
+        vec![(Accel::Tiled(2), "tiled", 2)]
+    } else {
+        vec![(Accel::Blocked, "blocked", 1), (Accel::Tiled(2), "tiled", 2)]
+    };
+    let (clients, per_client) = if smoke { (4, 60) } else { (8, 200) };
+    let (max_batch, slo_us) = (8usize, 200u64);
+
+    let mut rows = Vec::new();
+    for model in &models {
+        let graph = lower(&get(model).unwrap()).unwrap();
+        let plan = Plan::from_graph(&graph).unwrap();
+        for (accel, bname, threads) in &backends {
+            for algo in ["standard", "proposed"] {
+                let trainer = build_engine(algo, &graph, 1, "adam", *accel, 13).unwrap();
+                let snap = Arc::new(
+                    WeightSnapshot::pack(&plan, &trainer.weights_snapshot(), 0).unwrap(),
+                );
+                drop(trainer);
+                for (mode, mb) in [("serial", 1usize), ("dynamic", max_batch)] {
+                    let r = run_load(
+                        &graph, algo, *accel, mb, slo_us, clients, per_client, &snap,
+                    );
+                    println!(
+                        "{mode:>7} {algo:>8} {model} {bname} t{threads} mb{mb}: \
+                         {:>9.1} req/s  p50 {:>7.1}us  p99 {:>7.1}us  ({:.2} MiB)",
+                        r.qps,
+                        r.p50_us,
+                        r.p99_us,
+                        r.steady_state_bytes as f64 / bnn_edge::util::MIB
+                    );
+                    let mut row = Json::obj();
+                    row.set("mode", Json::from(mode));
+                    row.set("engine", Json::from(algo));
+                    row.set("model", Json::from(*model));
+                    row.set("backend", Json::from(*bname));
+                    row.set("threads", Json::from(*threads));
+                    row.set("offered_qps", Json::from(r.qps)); // closed loop: == achieved
+                    row.set("max_batch", Json::from(mb));
+                    row.set("slo_us", Json::from(slo_us as usize));
+                    row.set("p50_us", Json::from(r.p50_us));
+                    row.set("p99_us", Json::from(r.p99_us));
+                    row.set("achieved_qps", Json::from(r.qps));
+                    row.set("steady_state_bytes", Json::from(r.steady_state_bytes));
+                    rows.push(row);
+                }
+            }
+        }
+    }
+    write_json_rows(&out_path, rows).expect("write BENCH_serve.json");
+    println!("wrote {out_path}");
+}

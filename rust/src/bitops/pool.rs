@@ -5,10 +5,12 @@
 //! spawn (~tens of µs per worker) on *every* matmul.  At BinaryNet fc
 //! sizes that is noise; at the small conv shapes edge training
 //! actually runs (mini models, batch ≤ 32, layers of a few ms) it is
-//! a measurable tax.  Workers are now **long-lived**: spawned once per
-//! distinct worker count into a process-global registry and fed jobs
-//! through a condvar-guarded slot, so a [`Pool`] handle is a cheap
-//! `Arc` clone and per-call dispatch cost drops to a lock + wakeup.
+//! a measurable tax.  Workers are now **long-lived**: one
+//! process-global worker set, grown to the largest count any pool
+//! requests, fed jobs through a condvar-guarded slot — so a [`Pool`]
+//! handle is a cheap `Arc` clone, per-call dispatch cost drops to a
+//! lock + wakeup, and concurrent sessions (a trainer and a serve
+//! loop, say) share workers instead of spawning competing sets.
 //!
 //! Parallelism model (unchanged): the output is split into contiguous
 //! *row bands*.  Bands are claimed from an atomic counter by the
@@ -150,38 +152,64 @@ fn worker_loop(shared: Arc<Shared>) {
     }
 }
 
-/// Process-global registry: one persistent worker set per distinct
-/// worker count, spawned on first use and kept for process lifetime.
-fn registry() -> &'static Mutex<HashMap<usize, Arc<Shared>>> {
-    static REG: OnceLock<Mutex<HashMap<usize, Arc<Shared>>>> = OnceLock::new();
-    REG.get_or_init(|| Mutex::new(HashMap::new()))
+/// Process-global registry: **one** persistent worker set shared by
+/// every pool, grown to the largest worker count ever requested.
+///
+/// Keying worker sets by count (the pre-serve design) spawned a
+/// *separate* set per distinct count: a trainer on `Pool::new(4)`
+/// plus a serve loop on `Pool::new(3)` would run 3 + 2 = 5 workers
+/// and two caller threads on a 4-core box — oversubscription exactly
+/// when training and serving coexist.  With a single set the job slot
+/// serializes concurrent sessions (one sweep runs at a time; queued
+/// callers sleep on `done`), a sweep's band count still caps its own
+/// parallelism at the *pool's* configured threads, and workers beyond
+/// a small job's band count find the claim counter exhausted and go
+/// back to waiting — composition instead of competition.
+struct Registry {
+    shared: Arc<Shared>,
+    spawned: usize,
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REG.get_or_init(|| {
+        Mutex::new(Registry {
+            shared: Arc::new(Shared {
+                state: Mutex::new(State::default()),
+                work: Condvar::new(),
+                done: Condvar::new(),
+            }),
+            spawned: 0,
+        })
+    })
 }
 
 fn global_shared_workers(workers: usize) -> Arc<Shared> {
     let mut reg = registry().lock().unwrap();
-    reg.entry(workers)
-        .or_insert_with(|| {
-            let sh = Arc::new(Shared {
-                state: Mutex::new(State::default()),
-                work: Condvar::new(),
-                done: Condvar::new(),
-            });
-            for i in 0..workers {
-                let s = Arc::clone(&sh);
-                std::thread::Builder::new()
-                    .name(format!("bitops-pool-{i}"))
-                    .spawn(move || worker_loop(s))
-                    .expect("spawn bitops pool worker");
-            }
-            sh
-        })
-        .clone()
+    while reg.spawned < workers {
+        let i = reg.spawned;
+        let s = Arc::clone(&reg.shared);
+        std::thread::Builder::new()
+            .name(format!("bitops-pool-{i}"))
+            .spawn(move || worker_loop(s))
+            .expect("spawn bitops pool worker");
+        reg.spawned += 1;
+    }
+    Arc::clone(&reg.shared)
+}
+
+/// Workers currently spawned (the satellite regression probe: a
+/// smaller pool created after a bigger one must spawn nothing).
+pub fn spawned_workers() -> usize {
+    registry().lock().unwrap().spawned
 }
 
 std::thread_local! {
     /// Per-thread mirror of the registry: engines construct a `Pool`
     /// per matmul (the `Backend` enum is `Copy` and cannot hold the
-    /// `Arc`), so repeat lookups must not touch the global mutex.
+    /// `Arc`), so repeat lookups must not touch the global mutex.  A
+    /// cached count means the global set already holds ≥ that many
+    /// workers — the `Arc` is the same single set for every key.
     static LOCAL_POOLS: std::cell::RefCell<HashMap<usize, Arc<Shared>>> =
         std::cell::RefCell::new(HashMap::new());
 }
@@ -199,9 +227,10 @@ fn shared_workers(workers: usize) -> Arc<Shared> {
 
 impl Pool {
     /// `threads = 0` auto-detects from `available_parallelism`.  The
-    /// handle shares `threads - 1` persistent workers (the caller is
-    /// the remaining participant); handles with the same count share
-    /// the same workers.
+    /// handle uses `threads - 1` persistent workers (the caller is
+    /// the remaining participant) out of the single process-global
+    /// set, which grows to the largest count requested so far —
+    /// handles with *different* counts share the same workers.
     pub fn new(threads: usize) -> Pool {
         let threads = Pool::resolve(threads);
         let shared = if threads > 1 { Some(shared_workers(threads - 1)) } else { None };
@@ -396,6 +425,78 @@ mod tests {
                         });
                         for r in 0..rows {
                             assert_eq!(out[r * row_len + 7], t * 1000 + r);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn distinct_counts_share_one_worker_set() {
+        // the trainer+serve composition bug: a smaller pool created
+        // after a bigger one must NOT spawn a second worker set — the
+        // global set grows to max(requested) - 1 and stops.  Raise
+        // the high-water mark above anything other (concurrently
+        // running) tests request, so the spawn count is stable while
+        // we probe it.
+        let top = 17.max(Pool::resolve(0) + 1);
+        let _big = Pool::new(top);
+        let after_big = spawned_workers();
+        assert!(after_big >= top - 1, "{top}-thread pool needs >= {}", top - 1);
+        let _small = Pool::new(3);
+        let _smaller = Pool::new(2);
+        assert_eq!(
+            spawned_workers(),
+            after_big,
+            "smaller pools after a bigger one must spawn nothing"
+        );
+        // and both pool sizes still compute correctly on the shared set
+        for pool in [Pool::new(4), Pool::new(2)] {
+            let (rows, row_len) = (16, 512);
+            let mut out = vec![usize::MAX; rows * row_len];
+            pool.run_rows(rows, row_len, &mut out, |r0, band| {
+                for (i, row) in band.chunks_mut(row_len).enumerate() {
+                    row.fill(r0 + i);
+                }
+            });
+            for r in 0..rows {
+                assert_eq!(out[r * row_len], r, "t={}", pool.threads());
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_sessions_with_mixed_counts_compose() {
+        // a trainer (4 threads) and a serve loop (2 threads) — plus
+        // two more sessions — hammering the single shared worker set
+        // concurrently with *different* configured counts: sweeps
+        // serialize through the job slot, results stay disjoint, and
+        // no session deadlocks or corrupts another's bands
+        let handles: Vec<_> = [4usize, 2, 3, 5]
+            .into_iter()
+            .enumerate()
+            .map(|(t, threads)| {
+                std::thread::spawn(move || {
+                    let pool = Pool::new(threads);
+                    let rows = 32;
+                    let row_len = 256;
+                    for round in 0..50 {
+                        let mut out = vec![usize::MAX; rows * row_len];
+                        pool.run_rows(rows, row_len, &mut out, |r0, band| {
+                            for (i, row) in band.chunks_mut(row_len).enumerate() {
+                                row.fill(t * 10_000 + round + r0 + i);
+                            }
+                        });
+                        for r in 0..rows {
+                            assert_eq!(
+                                out[r * row_len + 13],
+                                t * 10_000 + round + r,
+                                "t={threads} round={round}"
+                            );
                         }
                     }
                 })

@@ -37,6 +37,7 @@ pub fn cli_main() -> Result<()> {
         "fit-batch" => cmd_fit_batch(&args),
         "artifacts" => cmd_artifacts(&args),
         "datasets" => cmd_datasets(),
+        "serve" => cmd_serve(&args),
         "federated" => crate::federated::cli(&args),
         _ => {
             print_help();
@@ -71,6 +72,13 @@ COMMANDS:
               --model binarynet --envelope-mib 512 [--algo proposed]
   artifacts   list AOT artifacts [--artifacts artifacts]
   datasets    list synthetic datasets
+  serve       run the packed-inference serving demo (dynamic batching
+              over the forward-only engine; prints throughput + latency
+              for serial batch-1 vs batched serving)
+              --model mlp_mini --algo proposed
+              --engine tiled [--threads 2]
+              [--max-batch 8] [--slo-us 200]
+              [--clients 4] [--requests 64] [--seed 42]
   federated   run the federated edge-fleet demo
               [--workers 4] [--rounds 5] [--local-steps 8]
 "
@@ -145,6 +153,107 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
     for name in engine.available()? {
         println!("{name}");
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::naive::{build_engine, Accel, StepEngine};
+    use crate::serve::{BatchServer, InferAlgo, PackedInferEngine, WeightSnapshot};
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let model = args.str_or("model", "mlp_mini");
+    let algo = InferAlgo::parse(&args.str_or("algo", "proposed"))?;
+    let accel = match args.str_or("engine", "tiled").as_str() {
+        "naive" => Accel::Naive,
+        "blocked" => Accel::Blocked,
+        "tiled" => Accel::Tiled(crate::bitops::Pool::resolve(args.threads()?)),
+        other => anyhow::bail!("unknown engine '{other}' (naive|blocked|tiled)"),
+    };
+    let max_batch = args.usize_or("max-batch", 8)?;
+    let slo_us = args.usize_or("slo-us", 200)? as u64;
+    let clients = args.usize_or("clients", 4)?;
+    let requests = args.usize_or("requests", 64)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+
+    // weights come from a freshly initialised trainer — in a real
+    // deployment `publish` would hand over a trained snapshot
+    let graph = crate::models::lower(&crate::models::get(&model)?)?;
+    let plan = crate::naive::Plan::from_graph(&graph)?;
+    let algo_name = match algo {
+        InferAlgo::Standard => "standard",
+        InferAlgo::Proposed => "proposed",
+    };
+    let trainer = build_engine(algo_name, &graph, max_batch.max(1), "adam", accel, seed)?;
+    let snap = Arc::new(WeightSnapshot::pack(&plan, &trainer.weights_snapshot(), 0)?);
+    drop(trainer);
+
+    let mk = || PackedInferEngine::new(&graph, algo, accel, max_batch, Arc::clone(&snap));
+    let ie = plan.input_elems;
+    let cl = plan.classes;
+    let per_client = requests.div_ceil(clients.max(1));
+    let total = per_client * clients.max(1);
+
+    // serial batch-1 baseline: one engine, one request at a time
+    let mut serial = mk()?;
+    serial.warmup()?;
+    let mut rng = crate::util::rng::Pcg32::new(seed);
+    let x0 = rng.normal_vec(ie);
+    let mut out = vec![0.0f32; cl];
+    let t0 = Instant::now();
+    for _ in 0..total {
+        serial.infer_into(&x0, 1, &mut out)?;
+    }
+    let serial_s = t0.elapsed().as_secs_f64();
+    let serial_qps = total as f64 / serial_s.max(1e-12);
+
+    // dynamic batching: concurrent clients against one BatchServer
+    let (batcher, server) = BatchServer::new(mk()?, slo_us, max_batch.max(4) * 4)?;
+    let steady = server.steady_state_bytes();
+    let h = std::thread::spawn(move || server.run());
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients.max(1) as u64 {
+        let b = batcher.clone();
+        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+            let mut rng = crate::util::rng::Pcg32::new(seed ^ (0x9e37 + c));
+            let mut out = vec![0.0f32; cl];
+            let mut lat = Vec::with_capacity(per_client);
+            for _ in 0..per_client {
+                let x = rng.normal_vec(ie);
+                let t = Instant::now();
+                b.infer_one(&x, &mut out)?;
+                lat.push(t.elapsed().as_secs_f64() * 1e6);
+            }
+            Ok(lat)
+        }));
+    }
+    let mut lat = Vec::with_capacity(total);
+    for h in handles {
+        lat.extend(h.join().expect("client panicked")?);
+    }
+    let batched_s = t0.elapsed().as_secs_f64();
+    batcher.shutdown();
+    let engine = h.join().expect("server panicked")?;
+    let batched_qps = batcher.served() as f64 / batched_s.max(1e-12);
+
+    println!(
+        "serve demo: {model} ({algo_name}, {accel:?})  max_batch={max_batch} slo={slo_us}µs \
+         clients={clients} requests={total}"
+    );
+    println!(
+        "  snapshot {:.2} MiB + arena {:.2} MiB  (server steady state {:.2} MiB)",
+        engine.state_bytes() as f64 / crate::util::MIB,
+        engine.arena_bytes() as f64 / crate::util::MIB,
+        steady as f64 / crate::util::MIB
+    );
+    println!("  serial batch-1 : {serial_qps:>10.1} req/s");
+    println!(
+        "  dynamic batch  : {batched_qps:>10.1} req/s  ({:.2}x)  p50 {:.0}µs  p99 {:.0}µs",
+        batched_qps / serial_qps.max(1e-12),
+        crate::util::stats::percentile(&lat, 50.0),
+        crate::util::stats::percentile(&lat, 99.0)
+    );
     Ok(())
 }
 

@@ -21,6 +21,8 @@
 //! - [`memtrack`]  — tracking allocator: *measured* peak heap (Fig. 6)
 //! - [`coordinator`] — run plans, step loop, metrics, checkpoints,
 //!                   memory envelopes, batch auto-tuning
+//! - [`serve`]     — forward-only packed inference: dynamic batching
+//!                   + copy-on-publish weight snapshots
 //! - [`federated`] — leader/worker fleet with sign-vote aggregation
 //! - [`util`]      — zero-dependency substrates (JSON, f16, RNG, CLI,
 //!                   stats, tables) replacing serde/clap/criterion,
@@ -39,4 +41,5 @@ pub mod naive;
 pub mod optim;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -541,10 +541,86 @@ pub fn step_envelope(
     Ok(StepEnvelope { state_bytes: state, arena_bytes: arena })
 }
 
+/// Modeled steady-state footprint of a `serve::PackedInferEngine`:
+/// the immutable packed snapshot plus the warmed forward-only scratch
+/// arena.  Both terms are exact — CI and the serve bench diff them
+/// against the measured `state_bytes()` / `arena_bytes()`.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeEnvelope {
+    /// Packed Ŵ + Ŵᵀ + f32 β per matmul layer.
+    pub snapshot_bytes: usize,
+    /// Scratch arena at its post-warmup fixed point (covers every
+    /// batch size ≤ `max_batch`).
+    pub arena_bytes: usize,
+}
+
+impl ServeEnvelope {
+    pub fn total_bytes(&self) -> usize {
+        self.snapshot_bytes + self.arena_bytes
+    }
+
+    pub fn total_mib(&self) -> f64 {
+        self.total_bytes() as f64 / MIB
+    }
+}
+
+/// Price the inference-serving footprint of `algo` at `max_batch`
+/// (accelerated tiers — the ones serving runs on).
+pub fn serve_envelope(
+    graph: &Graph,
+    algo: &str,
+    max_batch: usize,
+) -> anyhow::Result<ServeEnvelope> {
+    use crate::naive::arena::plan_infer_forward;
+    let plan = crate::naive::Plan::from_graph(graph)?;
+    if max_batch == 0 {
+        anyhow::bail!("serve_envelope: max_batch must be positive");
+    }
+    let proposed = match algo {
+        "standard" => false,
+        "proposed" => true,
+        _ => anyhow::bail!("serve_envelope: unknown algo '{algo}' (standard|proposed)"),
+    };
+    let mut snapshot = 0usize;
+    for l in plan.layers.iter().filter(|l| l.weight_len() > 0) {
+        let (k, n) = (l.fan_in(), l.channels());
+        // packed w (k×n) + packed wt (n×k) + f32 β
+        snapshot += k * n.div_ceil(64) * 8 + n * k.div_ceil(64) * 8 + n * 4;
+    }
+    let arena = plan_infer_forward(&plan, proposed, max_batch).total_bytes();
+    Ok(ServeEnvelope { snapshot_bytes: snapshot, arena_bytes: arena })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::models::{get, lower};
+
+    #[test]
+    fn serve_envelope_matches_measured_engine() {
+        use crate::naive::{build_engine, Accel, Plan, StepEngine};
+        use crate::serve::{InferAlgo, PackedInferEngine, WeightSnapshot};
+        use std::sync::Arc;
+        for (m, algo, ia) in [
+            ("cnv_mini", "standard", InferAlgo::Standard),
+            ("mlp_mini", "proposed", InferAlgo::Proposed),
+        ] {
+            let graph = lower(&get(m).unwrap()).unwrap();
+            let plan = Plan::from_graph(&graph).unwrap();
+            let tr = build_engine(algo, &graph, 2, "adam", Accel::Blocked, 5).unwrap();
+            let snap = Arc::new(WeightSnapshot::pack(&plan, &tr.weights_snapshot(), 0).unwrap());
+            let env = serve_envelope(&graph, algo, 4).unwrap();
+            assert_eq!(env.snapshot_bytes, snap.heap_bytes(), "{m} snapshot model drifted");
+            let mut eng =
+                PackedInferEngine::new(&graph, ia, Accel::Blocked, 4, snap).unwrap();
+            eng.warmup().unwrap();
+            assert_eq!(env.arena_bytes, eng.arena_bytes(), "{m} arena model drifted");
+            assert!(env.total_bytes() > 0 && env.total_mib() > 0.0);
+            // serving is far lighter than training the same model
+            let step = step_envelope(&graph, algo, Optimizer::Adam, 4, 0).unwrap();
+            assert!((env.total_bytes() as f64) < step.total_bytes(), "{m}");
+        }
+    }
 
     fn binarynet_b100(cfg: &DtypeConfig) -> Breakdown {
         let g = lower(&get("binarynet").unwrap()).unwrap();

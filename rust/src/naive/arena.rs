@@ -822,6 +822,161 @@ pub fn plan_proposed_step(plan: &Plan, micro: usize, chunks: usize) -> PlannedSt
     PlannedStep::from_sym(&a)
 }
 
+/// Replay the **forward-only inference** arena traffic of
+/// `serve::PackedInferEngine` on the accelerated (fused) tiers:
+/// one forward at every batch size `max_batch..=1` descending —
+/// exactly the engine's `warmup()` schedule — so the result is the
+/// steady scratch pool any batch size ≤ `max_batch` then serves from
+/// allocation-free.  `proposed` selects the Algorithm 2 forward
+/// (ℓ1 BN + packed sign panel) over Algorithm 1 (ℓ2 BN).
+///
+/// DRIFT WARNING: mirrors `serve/engine.rs` take/put for take/put;
+/// the planned-vs-measured test below catches divergence.
+pub fn plan_infer_forward(plan: &Plan, proposed: bool, max_batch: usize) -> PlannedStep {
+    let mut a = SymArena::default();
+    for b in (1..=max_batch).rev() {
+        let mut skips: Vec<usize> = Vec::new();
+        let mut cur = a.f32s.take(b * plan.input_elems);
+        let mut cur_len = b * plan.input_elems;
+        for layer in &plan.layers {
+            match *layer {
+                LayerPlan::Dense { k, n, first } => {
+                    cur = if proposed {
+                        sym_infer_prop(&mut a, cur, b, k, n, first, None)
+                    } else {
+                        sym_infer_std(&mut a, cur, b, k, n, first, None)
+                    };
+                    cur_len = b * n;
+                }
+                LayerPlan::Conv { g, cout, first } => {
+                    let rows = g.rows(b);
+                    cur = if proposed {
+                        sym_infer_prop(&mut a, cur, rows, g.k(), cout, first, Some(g))
+                    } else {
+                        sym_infer_std(&mut a, cur, rows, g.k(), cout, first, Some(g))
+                    };
+                    cur_len = rows * cout;
+                }
+                LayerPlan::MaxPool { c, oh, ow, .. } => {
+                    let cells = b * oh * ow * c;
+                    let out = a.f32s.take(cells);
+                    let mask = a.u32s.take(cells);
+                    a.f32s.put(cur);
+                    a.u32s.put(mask);
+                    cur = out;
+                    cur_len = cells;
+                }
+                LayerPlan::GlobalPool { c, .. } => {
+                    let out = a.f32s.take(b * c);
+                    a.f32s.put(cur);
+                    cur = out;
+                    cur_len = b * c;
+                }
+                LayerPlan::Residual { save: true, .. } => {
+                    skips.push(a.f32s.take(cur_len));
+                }
+                LayerPlan::Residual { save: false, .. } => a.f32s.put(skips.pop().unwrap()),
+                LayerPlan::Flatten => {}
+            }
+        }
+        a.f32s.put(cur); // infer_into recycles the logits
+    }
+    PlannedStep::from_sym(&a)
+}
+
+/// One standard-forward matmul+BN of the inference engine
+/// (serve/engine.rs `forward_standard`, accelerated tiers).
+fn sym_infer_std(
+    a: &mut SymArena,
+    cur: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    first: bool,
+    conv: Option<crate::bitops::ConvGeom>,
+) -> usize {
+    let y;
+    match conv {
+        None => {
+            y = a.f32s.take(rows * n);
+            if first {
+                let bw = a.f32s.take(k * n);
+                a.f32s.put(bw);
+            } else {
+                let xh = a.bits(rows, k);
+                a.u64s.put(xh);
+            }
+        }
+        Some(g) => {
+            if first {
+                let bw = a.f32s.take(k * n);
+                y = a.f32s.take(rows * n);
+                let cols = a.f32s.take(rows * k);
+                a.f32s.put(cols);
+                a.f32s.put(bw);
+            } else {
+                y = a.f32s.take(rows * n);
+                let xh = a.bits(rows, k);
+                let scratch = a.f32s.take(g.kside * g.kside * n);
+                a.f32s.put(scratch);
+                a.u64s.put(xh);
+            }
+        }
+    }
+    let xn = a.f32s.take(rows * n);
+    let mu = a.f32s.take(n);
+    let psi = a.f32s.take(n);
+    a.f32s.put(y);
+    a.f32s.put(cur);
+    a.f32s.put(mu);
+    a.f32s.put(psi);
+    xn
+}
+
+/// One proposed-forward matmul+BN of the inference engine
+/// (serve/engine.rs `forward_proposed`, accelerated tiers).
+fn sym_infer_prop(
+    a: &mut SymArena,
+    cur: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    first: bool,
+    conv: Option<crate::bitops::ConvGeom>,
+) -> usize {
+    let y;
+    if first {
+        let w = a.f32s.take(k * n);
+        y = match conv {
+            None => a.f32s.take(rows * n),
+            Some(_) => {
+                let cols = a.f32s.take(rows * k);
+                let out = a.f32s.take(rows * n);
+                a.f32s.put(cols);
+                out
+            }
+        };
+        a.f32s.put(w);
+        a.f32s.put(cur);
+    } else {
+        let xh = a.bits(rows, k);
+        a.f32s.put(cur);
+        y = a.f32s.take(rows * n);
+        a.u64s.put(xh);
+    }
+    let x_next = a.f32s.take(rows * n);
+    let psi = a.f32s.take(n);
+    let omega = a.f32s.take(n);
+    let mu = a.f32s.take(n);
+    let sign = a.bits(rows, n);
+    a.f32s.put(y);
+    a.f32s.put(psi);
+    a.f32s.put(omega);
+    a.f32s.put(mu);
+    a.u64s.put(sign);
+    x_next
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -920,6 +1075,41 @@ mod tests {
             let one = plan_standard_step(&plan, 4, 1);
             let two = plan_standard_step(&plan, 4, 2);
             assert!(two.total_bytes() < one.total_bytes() * 2, "{m}");
+        }
+    }
+
+    #[test]
+    fn infer_planner_matches_measured_arena() {
+        // plan_infer_forward replays serve::PackedInferEngine's
+        // warmup trace: planned bytes must equal the measured arena
+        // byte for byte (this is the drift tripwire)
+        use crate::models::{get, lower};
+        use crate::naive::{build_engine, Accel, StepEngine};
+        use crate::serve::{InferAlgo, PackedInferEngine, WeightSnapshot};
+        use std::sync::Arc;
+        for m in ["mlp_mini", "cnv_mini", "bireal_mini"] {
+            let graph = lower(&get(m).unwrap()).unwrap();
+            let plan = Plan::from_graph(&graph).unwrap();
+            for (algo, name, prop) in [
+                (InferAlgo::Standard, "standard", false),
+                (InferAlgo::Proposed, "proposed", true),
+            ] {
+                let tr = build_engine(name, &graph, 2, "adam", Accel::Blocked, 1).unwrap();
+                let snap =
+                    Arc::new(WeightSnapshot::pack(&plan, &tr.weights_snapshot(), 0).unwrap());
+                let mut eng =
+                    PackedInferEngine::new(&graph, algo, Accel::Blocked, 3, snap).unwrap();
+                eng.warmup().unwrap();
+                let planned = plan_infer_forward(&plan, prop, 3);
+                assert_eq!(planned.total_bytes(), eng.arena_bytes(), "{m} {name}");
+                // forward-only scratch is far below a training step's
+                let step = if prop {
+                    plan_proposed_step(&plan, 3, 1)
+                } else {
+                    plan_standard_step(&plan, 3, 1)
+                };
+                assert!(planned.total_bytes() < step.total_bytes(), "{m} {name}");
+            }
         }
     }
 

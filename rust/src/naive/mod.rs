@@ -44,7 +44,7 @@
 //! algorithm, same numerics class) in rust/tests/.
 
 pub(crate) mod arena;
-mod ops;
+pub(crate) mod ops;
 mod plan;
 mod proposed;
 mod standard;
@@ -56,6 +56,13 @@ pub use standard::StandardTrainer;
 // perf bench and the memtrack/property tests that diff the fused
 // bit-im2col and the streaming conv backward against them
 pub use standard::{col2im, im2col, transpose};
+// forward kernels the serve engine's inference schedule replays
+// (crate::serve mirrors each trainer's forward branch structure
+// exactly, for bit-identical logits)
+pub(crate) use proposed::bn_l1_forward_packed_into;
+pub(crate) use standard::{
+    bn_l2_forward_into, conv_direct_into, im2col_into, maxpool_forward_into, sign_into,
+};
 
 use anyhow::Result;
 

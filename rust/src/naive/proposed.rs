@@ -949,7 +949,7 @@ fn bn_l1_forward_packed(
 /// `psi`, `omega`, `mu` are overwritten (recycled dirty storage
 /// fine); `sign` must be a **zeroed** packed matrix (bits OR in).
 #[allow(clippy::too_many_arguments)]
-fn bn_l1_forward_packed_into(
+pub(crate) fn bn_l1_forward_packed_into(
     y: &[f32],
     rows: usize,
     channels: usize,

@@ -1,0 +1,384 @@
+//! Dynamic batcher: coalesces single-sample requests into
+//! XNOR-GEMM-friendly batches under a latency SLO.
+//!
+//! Binary GEMM throughput scales strongly with rows (the packed
+//! panels amortize weight traffic and fill the SIMD lanes), so
+//! serving requests one by one wastes most of the kernel stack's
+//! bandwidth.  The [`Batcher`] queues incoming requests; the
+//! [`BatchServer`] loop drains up to `max_batch` of them per forward,
+//! waiting at most `max_wait` after the first request of a batch
+//! before running with whatever has arrived — the classic
+//! max-batch + max-wait SLO policy.
+//!
+//! ## Zero-allocation steady state
+//!
+//! A request is three raw pointers into the *client's* buffers
+//! (input, logits out, done flag) pushed into a pre-sized `VecDeque`;
+//! the server gathers inputs into a pre-sized staging buffer, runs
+//! the warmed [`PackedInferEngine`] (allocation-free by itself), and
+//! scatters logits back under the queue lock.  No step of the
+//! request path touches the heap (hard-asserted in
+//! rust/tests/memtrack_serve.rs), and the worker threads driving the
+//! GEMM are the *process-global* `bitops::Pool` set, so a serve loop
+//! composes with a concurrently-running trainer instead of
+//! oversubscribing cores.
+//!
+//! ## Safety of the pointer protocol
+//!
+//! `infer_one` blocks until the server sets the request's done flag,
+//! so the pointed-to client buffers outlive every server access.
+//! Output writes and the done-flag store happen under the queue
+//! mutex, and the client re-checks the flag under the same mutex —
+//! the lock provides the happens-before edge; the flag is atomic only
+//! so both sides may touch it through a shared pointer.
+//!
+//! ## Snapshot hot-swap
+//!
+//! [`Batcher::publish`] parks a new [`WeightSnapshot`]; the server
+//! installs it at the next *batch boundary*.  Every batch therefore
+//! runs against exactly one snapshot — concurrent clients observe
+//! old-or-new results, never a mix (pinned in
+//! rust/tests/serve_parity.rs).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::engine::PackedInferEngine;
+use super::snapshot::WeightSnapshot;
+
+/// One queued request: pointers into the blocked client's buffers.
+struct Req {
+    x: *const f32,
+    out: *mut f32,
+    done: *const AtomicBool,
+}
+
+// The client blocks in `infer_one` until `done` is set, so the
+// pointees outlive every server access (see module docs).
+unsafe impl Send for Req {}
+
+struct QState {
+    queue: VecDeque<Req>,
+    shutdown: bool,
+    served: u64,
+}
+
+struct Shared {
+    m: Mutex<QState>,
+    /// A request was enqueued (server wakes to form a batch).
+    submitted: Condvar,
+    /// A batch completed (clients re-check their done flags).
+    completed: Condvar,
+    /// Queue space freed (back-pressured clients retry).
+    space: Condvar,
+    /// Parked by `publish`, installed at the next batch boundary.
+    pending_snap: Mutex<Option<Arc<WeightSnapshot>>>,
+    input_elems: usize,
+    classes: usize,
+    max_batch: usize,
+    max_wait: Duration,
+    queue_cap: usize,
+}
+
+/// Client + publisher handle to a running [`BatchServer`] (cheap to
+/// clone; one per client thread).
+#[derive(Clone)]
+pub struct Batcher {
+    sh: Arc<Shared>,
+}
+
+impl Batcher {
+    /// Submit one sample and block until its logits arrive.  `x` is
+    /// `input_elems` long, `out` receives `classes` logits.
+    /// Allocation-free.
+    pub fn infer_one(&self, x: &[f32], out: &mut [f32]) -> Result<()> {
+        if x.len() != self.sh.input_elems {
+            bail!("input is {} elems, want {}", x.len(), self.sh.input_elems);
+        }
+        if out.len() != self.sh.classes {
+            bail!("output is {} elems, want {}", out.len(), self.sh.classes);
+        }
+        let done = AtomicBool::new(false);
+        let req = Req { x: x.as_ptr(), out: out.as_mut_ptr(), done: &done };
+        let mut q = self.sh.m.lock().unwrap();
+        while q.queue.len() >= self.sh.queue_cap && !q.shutdown {
+            q = self.sh.space.wait(q).unwrap();
+        }
+        if q.shutdown {
+            bail!("batcher is shut down");
+        }
+        q.queue.push_back(req);
+        self.sh.submitted.notify_one();
+        // once enqueued we *must* wait for completion (the server owns
+        // our pointers until it sets done); shutdown drains the queue
+        while !done.load(Ordering::Relaxed) {
+            q = self.sh.completed.wait(q).unwrap();
+        }
+        Ok(())
+    }
+
+    /// Park a freshly packed snapshot for installation at the next
+    /// batch boundary (copy-on-publish: in-flight batches finish on
+    /// the old one).
+    pub fn publish(&self, snap: Arc<WeightSnapshot>) {
+        *self.sh.pending_snap.lock().unwrap() = Some(snap);
+    }
+
+    /// Stop accepting requests; the server drains what is queued and
+    /// exits its loop.
+    pub fn shutdown(&self) {
+        self.sh.m.lock().unwrap().shutdown = true;
+        self.sh.submitted.notify_all();
+        self.sh.space.notify_all();
+    }
+
+    /// Total requests completed so far.
+    pub fn served(&self) -> u64 {
+        self.sh.m.lock().unwrap().served
+    }
+}
+
+/// The serve loop: owns the warmed engine and the staging buffers.
+/// Build with [`BatchServer::new`], move to a thread, call
+/// [`BatchServer::run`].
+pub struct BatchServer {
+    engine: PackedInferEngine,
+    sh: Arc<Shared>,
+    /// Gather buffer, `max_batch × input_elems`.
+    batch_x: Vec<f32>,
+    /// Scatter buffer, `max_batch × classes`.
+    batch_logits: Vec<f32>,
+    /// The batch being executed (drained out of the queue so clients
+    /// can keep enqueueing while the forward runs).
+    pending: Vec<Req>,
+}
+
+impl BatchServer {
+    /// Wrap a [`PackedInferEngine`] (warmed up here — its `max_batch`
+    /// is the batch cap) with a request queue of `queue_cap` entries
+    /// and a `max_wait_us` coalescing window.
+    pub fn new(
+        mut engine: PackedInferEngine,
+        max_wait_us: u64,
+        queue_cap: usize,
+    ) -> Result<(Batcher, BatchServer)> {
+        let max_batch = engine.max_batch();
+        if queue_cap < max_batch {
+            bail!("queue_cap {queue_cap} below max_batch {max_batch}");
+        }
+        engine.warmup()?;
+        let sh = Arc::new(Shared {
+            m: Mutex::new(QState {
+                queue: VecDeque::with_capacity(queue_cap),
+                shutdown: false,
+                served: 0,
+            }),
+            submitted: Condvar::new(),
+            completed: Condvar::new(),
+            space: Condvar::new(),
+            pending_snap: Mutex::new(None),
+            input_elems: engine.input_elems(),
+            classes: engine.classes(),
+            max_batch,
+            max_wait: Duration::from_micros(max_wait_us),
+            queue_cap,
+        });
+        let server = BatchServer {
+            batch_x: vec![0.0; max_batch * engine.input_elems()],
+            batch_logits: vec![0.0; max_batch * engine.classes()],
+            pending: Vec::with_capacity(max_batch),
+            engine,
+            sh: Arc::clone(&sh),
+        };
+        Ok((Batcher { sh }, server))
+    }
+
+    /// Steady-state resident bytes of the serve loop: snapshot +
+    /// scratch arena + staging buffers.
+    pub fn steady_state_bytes(&self) -> usize {
+        self.engine.state_bytes()
+            + self.engine.arena_bytes()
+            + (self.batch_x.capacity() + self.batch_logits.capacity()) * 4
+    }
+
+    /// Serve until shutdown; returns the engine (with whatever
+    /// snapshot ended up installed) once the queue is drained.
+    pub fn run(mut self) -> Result<PackedInferEngine> {
+        loop {
+            let n = {
+                let mut q = self.sh.m.lock().unwrap();
+                while q.queue.is_empty() && !q.shutdown {
+                    q = self.sh.submitted.wait(q).unwrap();
+                }
+                if q.queue.is_empty() {
+                    return Ok(self.engine); // shutdown + drained
+                }
+                // SLO window: wait for more requests, at most
+                // max_wait past the first one seen
+                let start = Instant::now();
+                while q.queue.len() < self.sh.max_batch && !q.shutdown {
+                    let elapsed = start.elapsed();
+                    if elapsed >= self.sh.max_wait {
+                        break;
+                    }
+                    let (g, t) = self
+                        .sh
+                        .submitted
+                        .wait_timeout(q, self.sh.max_wait - elapsed)
+                        .unwrap();
+                    q = g;
+                    if t.timed_out() {
+                        break;
+                    }
+                }
+                let take = q.queue.len().min(self.sh.max_batch);
+                for _ in 0..take {
+                    self.pending.push(q.queue.pop_front().unwrap());
+                }
+                self.sh.space.notify_all();
+                take
+            };
+            // batch boundary: install a published snapshot, so every
+            // request of this batch sees exactly one weight version
+            if let Some(s) = self.sh.pending_snap.lock().unwrap().take() {
+                self.engine.install(s)?;
+            }
+            let ie = self.sh.input_elems;
+            let cl = self.sh.classes;
+            for (i, r) in self.pending.iter().enumerate() {
+                let src = unsafe { std::slice::from_raw_parts(r.x, ie) };
+                self.batch_x[i * ie..(i + 1) * ie].copy_from_slice(src);
+            }
+            self.engine
+                .infer_into(&self.batch_x[..n * ie], n, &mut self.batch_logits[..n * cl])?;
+            {
+                let mut q = self.sh.m.lock().unwrap();
+                for (i, r) in self.pending.iter().enumerate() {
+                    let dst = unsafe { std::slice::from_raw_parts_mut(r.out, cl) };
+                    dst.copy_from_slice(&self.batch_logits[i * cl..(i + 1) * cl]);
+                    unsafe { (*r.done).store(true, Ordering::Relaxed) };
+                }
+                q.served += n as u64;
+            }
+            self.sh.completed.notify_all();
+            self.pending.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{get, lower};
+    use crate::naive::{build_engine, Accel, Plan, StepEngine};
+    use crate::serve::engine::InferAlgo;
+    use crate::util::rng::Pcg32;
+
+    fn mini_engine(algo: InferAlgo, max_batch: usize) -> (PackedInferEngine, PackedInferEngine) {
+        let graph = lower(&get("mlp_mini").unwrap()).unwrap();
+        let plan = Plan::from_graph(&graph).unwrap();
+        let trainer = build_engine("standard", &graph, 4, "adam", Accel::Blocked, 7).unwrap();
+        let snap =
+            Arc::new(WeightSnapshot::pack(&plan, &trainer.weights_snapshot(), 1).unwrap());
+        let a =
+            PackedInferEngine::new(&graph, algo, Accel::Blocked, max_batch, Arc::clone(&snap))
+                .unwrap();
+        let b = PackedInferEngine::new(&graph, algo, Accel::Blocked, max_batch, snap).unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn single_client_round_trips_match_direct_inference() {
+        // sequential requests with a tiny wait window ⇒ every batch
+        // is size 1 ⇒ results must equal direct batch-1 inference
+        let (engine, mut reference) = mini_engine(InferAlgo::Standard, 4);
+        let ie = engine.input_elems();
+        let cl = engine.classes();
+        let (batcher, server) = BatchServer::new(engine, 50, 16).unwrap();
+        let h = std::thread::spawn(move || server.run());
+        let mut rng = Pcg32::new(11);
+        for _ in 0..8 {
+            let x = rng.normal_vec(ie);
+            let mut got = vec![0.0f32; cl];
+            batcher.infer_one(&x, &mut got).unwrap();
+            let mut want = vec![0.0f32; cl];
+            reference.infer_into(&x, 1, &mut want).unwrap();
+            assert_eq!(got, want);
+        }
+        assert_eq!(batcher.served(), 8);
+        batcher.shutdown();
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn concurrent_clients_all_complete() {
+        let (engine, _) = mini_engine(InferAlgo::Proposed, 8);
+        let ie = engine.input_elems();
+        let cl = engine.classes();
+        let (batcher, server) = BatchServer::new(engine, 200, 32).unwrap();
+        let h = std::thread::spawn(move || server.run());
+        let mut clients = Vec::new();
+        for t in 0..4u64 {
+            let b = batcher.clone();
+            clients.push(std::thread::spawn(move || {
+                let mut rng = Pcg32::new(100 + t);
+                let mut out = vec![0.0f32; cl];
+                for _ in 0..12 {
+                    let x = rng.normal_vec(ie);
+                    b.infer_one(&x, &mut out).unwrap();
+                    assert!(out.iter().all(|v| v.is_finite()));
+                }
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+        assert_eq!(batcher.served(), 4 * 12);
+        batcher.shutdown();
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn publish_swaps_at_batch_boundary_and_shutdown_rejects_new_requests() {
+        let graph = lower(&get("mlp_mini").unwrap()).unwrap();
+        let plan = Plan::from_graph(&graph).unwrap();
+        let t0 = build_engine("proposed", &graph, 4, "adam", Accel::Blocked, 3).unwrap();
+        let snap0 = Arc::new(WeightSnapshot::pack(&plan, &t0.weights_snapshot(), 0).unwrap());
+        let t1 = build_engine("proposed", &graph, 4, "adam", Accel::Blocked, 99).unwrap();
+        let snap1 = Arc::new(WeightSnapshot::pack(&plan, &t1.weights_snapshot(), 1).unwrap());
+
+        let mk = |snap: &Arc<WeightSnapshot>| {
+            PackedInferEngine::new(&graph, InferAlgo::Proposed, Accel::Blocked, 1, Arc::clone(snap))
+                .unwrap()
+        };
+        let engine = mk(&snap0);
+        let ie = engine.input_elems();
+        let cl = engine.classes();
+        let (batcher, server) = BatchServer::new(engine, 50, 4).unwrap();
+        let h = std::thread::spawn(move || server.run());
+
+        let mut rng = Pcg32::new(5);
+        let x = rng.normal_vec(ie);
+        let mut want0 = vec![0.0f32; cl];
+        mk(&snap0).infer_into(&x, 1, &mut want0).unwrap();
+        let mut want1 = vec![0.0f32; cl];
+        mk(&snap1).infer_into(&x, 1, &mut want1).unwrap();
+        assert_ne!(want0, want1, "differently seeded weights must differ");
+
+        let mut got = vec![0.0f32; cl];
+        batcher.infer_one(&x, &mut got).unwrap();
+        assert_eq!(got, want0);
+        batcher.publish(Arc::clone(&snap1));
+        batcher.infer_one(&x, &mut got).unwrap();
+        assert_eq!(got, want1, "published snapshot applies at the next batch");
+
+        batcher.shutdown();
+        let engine = h.join().unwrap().unwrap();
+        assert_eq!(engine.snapshot().version(), 1);
+        assert!(batcher.infer_one(&x, &mut got).is_err());
+    }
+}

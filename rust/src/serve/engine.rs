@@ -1,0 +1,441 @@
+//! `PackedInferEngine`: the forward-only execution engine.
+//!
+//! Lowers a [`Plan`] into an inference schedule that drives the same
+//! fused kernel pipeline as the trainers — `im2col_packed` bit
+//! panels, XNOR-popcount GEMM on the selected [`Accel`] tier, the
+//! masked padding correction — but retains *nothing*: no activations,
+//! no STE masks, no BN residuals, no gradient transients.  Every
+//! transient is a [`StepArena`] checkout that returns within the same
+//! layer, so after [`PackedInferEngine::warmup`] a forward pass at
+//! *any* batch size ≤ `max_batch` performs **zero heap allocations**
+//! (hard-asserted via `memtrack::alloc_count` in rust/tests/).
+//!
+//! ## Bit-exactness
+//!
+//! `forward_standard` / `forward_proposed` mirror the corresponding
+//! trainer's `matmul_forward` branch structure *exactly* — same
+//! kernels, same operand order, same per-tier dispatch — with the
+//! packed weights read from an immutable [`WeightSnapshot`] instead
+//! of the trainer's per-step cache.  The snapshot packs the same bits
+//! the trainers pack (see `serve::snapshot`), so logits are
+//! bit-identical to `StandardTrainer::eval` / `ProposedTrainer::eval`
+//! on the same tier and batch (rust/tests/serve_parity.rs pins this
+//! for every zoo model).
+//!
+//! DRIFT WARNING: if a trainer forward branch changes, this engine
+//! (and `naive::arena::plan_infer_forward`) must change with it — the
+//! parity tests catch any divergence.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::snapshot::WeightSnapshot;
+use crate::bitops::{im2col_packed_into, subtract_pad_contrib_with, BitMatrix};
+use crate::naive::arena::StepCtx;
+use crate::naive::ops::{self, EngineOps};
+use crate::naive::{
+    bn_l1_forward_packed_into, bn_l2_forward_into, conv_direct_into, im2col_into,
+    maxpool_forward_into, sign_into, softmax_xent_grad, Accel, LayerPlan, Plan,
+};
+use crate::models::Graph;
+
+/// Which training algorithm's forward numerics to replicate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InferAlgo {
+    /// Algorithm 1 forward: ℓ2 batch norm.
+    Standard,
+    /// Algorithm 2 forward: ℓ1 + BNN-specific batch norm.
+    Proposed,
+}
+
+impl InferAlgo {
+    pub fn parse(s: &str) -> Result<InferAlgo> {
+        Ok(match s {
+            "standard" => InferAlgo::Standard,
+            "proposed" => InferAlgo::Proposed,
+            _ => bail!("unknown algo '{s}' (standard|proposed)"),
+        })
+    }
+}
+
+/// Forward-only packed inference engine (see module docs).
+pub struct PackedInferEngine {
+    plan: Plan,
+    algo: InferAlgo,
+    accel: Accel,
+    max_batch: usize,
+    /// Batch of the in-flight forward (`EngineOps::micro`).
+    cur: usize,
+    snap: Arc<WeightSnapshot>,
+    ctx: StepCtx,
+}
+
+impl PackedInferEngine {
+    /// Build an engine for `graph` serving `snap` (shapes validated).
+    pub fn new(
+        graph: &Graph,
+        algo: InferAlgo,
+        accel: Accel,
+        max_batch: usize,
+        snap: Arc<WeightSnapshot>,
+    ) -> Result<PackedInferEngine> {
+        let plan = Plan::from_graph(graph)?;
+        if max_batch == 0 {
+            bail!("max_batch must be positive");
+        }
+        if !snap.matches(&plan) {
+            bail!("weight snapshot does not match plan '{}'", plan.name);
+        }
+        Ok(PackedInferEngine {
+            plan,
+            algo,
+            accel,
+            max_batch,
+            cur: 0,
+            snap,
+            ctx: StepCtx::default(),
+        })
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub fn classes(&self) -> usize {
+        self.plan.classes
+    }
+
+    pub fn input_elems(&self) -> usize {
+        self.plan.input_elems
+    }
+
+    /// The snapshot currently serving.
+    pub fn snapshot(&self) -> &Arc<WeightSnapshot> {
+        &self.snap
+    }
+
+    /// Bytes resident in the scratch arena (the whole per-request
+    /// transient footprint after warmup).
+    pub fn arena_bytes(&self) -> usize {
+        self.ctx.arena.heap_bytes()
+    }
+
+    /// Bytes of the installed snapshot (packed w + wt + β).
+    pub fn state_bytes(&self) -> usize {
+        self.snap.heap_bytes()
+    }
+
+    /// Swap in a newly published snapshot (copy-on-publish: the old
+    /// `Arc` is returned and stays valid for anyone still holding
+    /// it).  Shape-checked; allocation-free beyond the `Arc` swap.
+    pub fn install(&mut self, snap: Arc<WeightSnapshot>) -> Result<Arc<WeightSnapshot>> {
+        if !snap.matches(&self.plan) {
+            bail!("published snapshot does not match plan '{}'", self.plan.name);
+        }
+        Ok(std::mem::replace(&mut self.snap, snap))
+    }
+
+    /// Forward one batch: `x` is `batch × input_elems` NHWC, `logits`
+    /// receives `batch × classes`.  Allocation-free after
+    /// [`PackedInferEngine::warmup`].
+    pub fn infer_into(&mut self, x: &[f32], batch: usize, logits: &mut [f32]) -> Result<()> {
+        let out = self.forward(x, batch)?;
+        logits.copy_from_slice(&out);
+        self.ctx.arena.put_f32(out);
+        Ok(())
+    }
+
+    /// Forward + softmax cross-entropy: returns (loss, accuracy),
+    /// numerically identical to the trainers' `eval` on the same
+    /// batch and tier (single-chunk).  Allocation-free after warmup.
+    pub fn eval(&mut self, x: &[f32], labels: &[usize]) -> Result<(f32, f32)> {
+        let logits = self.forward(x, labels.len())?;
+        let mut d = self.ctx.arena.take_f32(labels.len() * self.plan.classes);
+        let (loss, acc) = softmax_xent_grad(&logits, labels, self.plan.classes, &mut d);
+        self.ctx.arena.put_f32(logits);
+        self.ctx.arena.put_f32(d);
+        Ok((loss, acc))
+    }
+
+    /// Run one forward at every batch size `max_batch..=1`
+    /// (descending, so the arena pool only grows) to bring the scratch
+    /// pool to its fixed point: subsequent forwards at any size
+    /// perform zero heap allocations.
+    pub fn warmup(&mut self) -> Result<()> {
+        let mut x = vec![0.0f32; self.max_batch * self.plan.input_elems];
+        for (i, v) in x.iter_mut().enumerate() {
+            // ±1 checkerboard: exercises both BN sign branches
+            *v = if i % 2 == 0 { 1.0 } else { -1.0 };
+        }
+        let mut logits = vec![0.0f32; self.max_batch * self.plan.classes];
+        for b in (1..=self.max_batch).rev() {
+            self.infer_into(
+                &x[..b * self.plan.input_elems],
+                b,
+                &mut logits[..b * self.plan.classes],
+            )?;
+        }
+        Ok(())
+    }
+
+    fn forward(&mut self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        if batch == 0 || batch > self.max_batch {
+            bail!("batch {batch} outside 1..={}", self.max_batch);
+        }
+        if x.len() != batch * self.plan.input_elems {
+            bail!(
+                "input is {} elems, want {} x {}",
+                x.len(),
+                batch,
+                self.plan.input_elems
+            );
+        }
+        self.cur = batch;
+        // hygiene after an aborted forward (no-op in steady state)
+        self.ctx.drain_skip_stacks();
+        let layers = std::mem::take(&mut self.plan.layers);
+        let r = ops::forward_plan(self, &layers, x, false);
+        self.plan.layers = layers;
+        r
+    }
+
+    /// Algorithm 1 forward branch structure (StandardTrainer
+    /// `matmul_forward` with `retain = false`), weights off the
+    /// snapshot.
+    fn forward_standard(&mut self, cur: Vec<f32>, wi: usize, layer: &LayerPlan) -> Result<Vec<f32>> {
+        let b = self.cur;
+        let (y, rows, n) = match *layer {
+            LayerPlan::Dense { k, n, first } => {
+                let mut y = self.ctx.arena.take_f32(b * n);
+                if first || self.accel == Accel::Naive {
+                    let mut bw = self.ctx.arena.take_f32(k * n);
+                    self.snap.layer(wi).w.unpack_into(&mut bw);
+                    if first {
+                        self.accel.backend().gemm_f32(b, k, n, &cur, &bw, &mut y);
+                    } else {
+                        let mut a = self.ctx.arena.take_f32(cur.len());
+                        sign_into(&cur, &mut a);
+                        self.accel.backend().gemm_f32(b, k, n, &a, &bw, &mut y);
+                        self.ctx.arena.put_f32(a);
+                    }
+                    self.ctx.arena.put_f32(bw);
+                } else {
+                    let mut xhat = self.ctx.arena.take_bits(b, k);
+                    BitMatrix::pack_into(b, k, &cur, &mut xhat);
+                    self.accel
+                        .backend()
+                        .xnor_gemm(&xhat, &self.snap.layer(wi).wt, &mut y);
+                    self.ctx.arena.put_bits(xhat);
+                }
+                (y, b, n)
+            }
+            LayerPlan::Conv { g, cout, first } => {
+                let rows = g.rows(b);
+                let mut y;
+                if first || self.accel == Accel::Naive {
+                    let mut bw = self.ctx.arena.take_f32(g.k() * cout);
+                    self.snap.layer(wi).w.unpack_into(&mut bw);
+                    if self.accel == Accel::Naive {
+                        y = self.ctx.arena.take_zeroed_f32(rows * cout);
+                        if first {
+                            conv_direct_into(&cur, &bw, b, g, cout, &mut y);
+                        } else {
+                            let mut a = self.ctx.arena.take_f32(cur.len());
+                            sign_into(&cur, &mut a);
+                            conv_direct_into(&a, &bw, b, g, cout, &mut y);
+                            self.ctx.arena.put_f32(a);
+                        }
+                    } else {
+                        y = self.ctx.arena.take_f32(rows * cout);
+                        let mut cols = self.ctx.arena.take_zeroed_f32(rows * g.k());
+                        im2col_into(&cur, b, g, &mut cols);
+                        self.accel
+                            .backend()
+                            .gemm_f32(rows, g.k(), cout, &cols, &bw, &mut y);
+                        self.ctx.arena.put_f32(cols);
+                    }
+                    self.ctx.arena.put_f32(bw);
+                } else {
+                    y = self.ctx.arena.take_f32(rows * cout);
+                    let backend = self.accel.backend();
+                    let mut xhat = self.ctx.arena.take_bits(rows, g.k());
+                    im2col_packed_into(&cur, b, g, &backend.pool(), &mut xhat);
+                    let wt = &self.snap.layer(wi).wt;
+                    backend.xnor_gemm(&xhat, wt, &mut y);
+                    let mut scratch = self.ctx.arena.take_f32(g.kside * g.kside * cout);
+                    subtract_pad_contrib_with(&mut y, wt, b, g, &mut scratch);
+                    self.ctx.arena.put_f32(scratch);
+                    self.ctx.arena.put_bits(xhat);
+                }
+                (y, rows, cout)
+            }
+            _ => unreachable!("matmul_forward on a non-matmul layer"),
+        };
+        let mut xn = self.ctx.arena.take_f32(rows * n);
+        let mut mu = self.ctx.arena.take_f32(n);
+        let mut psi = self.ctx.arena.take_f32(n);
+        bn_l2_forward_into(&y, rows, n, &self.snap.layer(wi).beta, &mut xn, &mut mu, &mut psi);
+        self.ctx.arena.put_f32(y);
+        self.ctx.arena.put_f32(cur);
+        self.ctx.arena.put_f32(mu);
+        self.ctx.arena.put_f32(psi);
+        Ok(xn)
+    }
+
+    /// Algorithm 2 forward branch structure (ProposedTrainer
+    /// `matmul_bn_forward` with `retain = false`), weights off the
+    /// snapshot.  The STE mask is skipped entirely — it exists only
+    /// for backward and does not touch the logits.
+    fn forward_proposed(&mut self, cur: Vec<f32>, wi: usize, layer: &LayerPlan) -> Result<Vec<f32>> {
+        let b = self.cur;
+        let (rows, k, n, first, conv) = match *layer {
+            LayerPlan::Dense { k, n, first } => (b, k, n, first, None),
+            LayerPlan::Conv { g, cout, first } => (g.rows(b), g.k(), cout, first, Some(g)),
+            _ => unreachable!("matmul_forward on a non-matmul layer"),
+        };
+        let y: Vec<f32>;
+        if first {
+            // real-input layer: f32 GEMM against sign(W)
+            let backend = self.accel.backend();
+            let mut w = self.ctx.arena.take_f32(k * n);
+            self.snap.layer(wi).w.unpack_into(&mut w);
+            y = match conv {
+                None => {
+                    let mut out = self.ctx.arena.take_f32(rows * n);
+                    backend.gemm_f32(rows, k, n, &cur, &w, &mut out);
+                    out
+                }
+                Some(g) => match self.accel {
+                    Accel::Naive => {
+                        let mut out = self.ctx.arena.take_zeroed_f32(rows * n);
+                        conv_direct_into(&cur, &w, b, g, n, &mut out);
+                        out
+                    }
+                    _ => {
+                        let mut cols = self.ctx.arena.take_zeroed_f32(rows * k);
+                        im2col_into(&cur, b, g, &mut cols);
+                        let mut out = self.ctx.arena.take_f32(rows * n);
+                        backend.gemm_f32(rows, k, n, &cols, &w, &mut out);
+                        self.ctx.arena.put_f32(cols);
+                        out
+                    }
+                },
+            };
+            self.ctx.arena.put_f32(w);
+            self.ctx.arena.put_f32(cur);
+        } else {
+            // binary×binary: pack X̂, XNOR against the snapshot's Ŵᵀ
+            // (no padding correction — matches the trainer)
+            let mut xhat = self.ctx.arena.take_bits(rows, k);
+            match conv {
+                None => BitMatrix::pack_into(rows, k, &cur, &mut xhat),
+                Some(g) => {
+                    let pool = self.accel.backend().pool();
+                    im2col_packed_into(&cur, b, g, &pool, &mut xhat);
+                }
+            }
+            self.ctx.arena.put_f32(cur);
+            let mut out = self.ctx.arena.take_f32(rows * n);
+            self.accel
+                .backend()
+                .xnor_gemm(&xhat, &self.snap.layer(wi).wt, &mut out);
+            y = out;
+            self.ctx.arena.put_bits(xhat);
+        }
+
+        // ℓ1 batch norm; β straight off the snapshot (already f32)
+        let mut x_next = self.ctx.arena.take_f32(rows * n);
+        let mut psi = self.ctx.arena.take_f32(n);
+        let mut omega = self.ctx.arena.take_f32(n);
+        let mut mu = self.ctx.arena.take_f32(n);
+        let mut sign = self.ctx.arena.take_zeroed_bits(rows, n);
+        bn_l1_forward_packed_into(
+            &y,
+            rows,
+            n,
+            &self.snap.layer(wi).beta,
+            &mut x_next,
+            &mut psi,
+            &mut omega,
+            &mut mu,
+            &mut sign,
+        );
+        self.ctx.arena.put_f32(y);
+        self.ctx.arena.put_f32(psi);
+        self.ctx.arena.put_f32(omega);
+        self.ctx.arena.put_f32(mu);
+        self.ctx.arena.put_bits(sign);
+        Ok(x_next)
+    }
+}
+
+impl EngineOps for PackedInferEngine {
+    type Grad = Vec<f32>;
+
+    fn micro(&self) -> usize {
+        self.cur
+    }
+
+    fn ctx(&mut self) -> &mut StepCtx {
+        &mut self.ctx
+    }
+
+    fn grad_to_f32(&mut self, g: Vec<f32>) -> Vec<f32> {
+        g
+    }
+
+    fn grad_from_f32(&mut self, v: Vec<f32>) -> Vec<f32> {
+        v
+    }
+
+    fn recycle_grad(&mut self, g: Vec<f32>) {
+        self.ctx.arena.put_f32(g);
+    }
+
+    fn matmul_forward(
+        &mut self,
+        cur: Vec<f32>,
+        wi: usize,
+        layer: &LayerPlan,
+        _retain: bool,
+    ) -> Result<Vec<f32>> {
+        match self.algo {
+            InferAlgo::Standard => self.forward_standard(cur, wi, layer),
+            InferAlgo::Proposed => self.forward_proposed(cur, wi, layer),
+        }
+    }
+
+    fn matmul_backward(
+        &mut self,
+        _dnext: Vec<f32>,
+        _wi: usize,
+        _layer: &LayerPlan,
+    ) -> Result<Vec<f32>> {
+        bail!("inference engine has no backward")
+    }
+
+    fn pool_forward(
+        &mut self,
+        cur: Vec<f32>,
+        h: usize,
+        w: usize,
+        c: usize,
+        _retain: bool,
+    ) -> Vec<f32> {
+        let b = self.cur;
+        let cells = b * (h / 2) * (w / 2) * c;
+        let mut out = self.ctx.arena.take_f32(cells);
+        let mut mask = self.ctx.arena.take_u32(cells);
+        maxpool_forward_into(&cur, b, h, w, c, &mut out, &mut mask);
+        self.ctx.arena.put_f32(cur);
+        self.ctx.arena.put_u32(mask);
+        out
+    }
+
+    fn pool_backward(&mut self, _dnext: Vec<f32>, _h: usize, _w: usize, _c: usize) -> Vec<f32> {
+        unreachable!("inference engine has no backward")
+    }
+
+    fn end_chunk(&mut self) {}
+}

@@ -1,0 +1,42 @@
+//! Packed inference serving: the deployment-side front door.
+//!
+//! The paper's binary format is as much an inference win as a
+//! training one — this module turns the PR 1–5 kernel stack
+//! (bit-packed im2col, SIMD XNOR-popcount GEMM, the fused conv
+//! pipeline) into a forward-only serving path with three pieces:
+//!
+//! - [`PackedInferEngine`] — lowers a model [`crate::naive::Plan`]
+//!   into an inference-only schedule: no retained activations, no
+//!   gradient transients, one reusable scratch arena.  After
+//!   [`PackedInferEngine::warmup`] a forward pass at any batch size
+//!   performs **zero heap allocations**, and its logits are
+//!   bit-identical to the training engines' `eval` on the same tier.
+//! - [`Batcher`] / [`BatchServer`] — dynamic batching: single-sample
+//!   requests coalesce into XNOR-friendly batches under a
+//!   max-batch + max-wait SLO, on the process-global `bitops::Pool`
+//!   workers (composing with, not oversubscribing, a concurrent
+//!   trainer).
+//! - [`WeightSnapshot`] — copy-on-publish weights: a training loop
+//!   `publish`es an immutable `Arc`-shared packed snapshot; the
+//!   server installs it at a batch boundary while in-flight requests
+//!   finish on the old one.
+//!
+//! Note the BN layers use *batch statistics* (no running stats — both
+//! training algorithms are defined that way), so coalescing couples
+//! the samples of one batch through BN: dynamic batching trades exact
+//! batch-1 reproducibility for throughput.  Parity with the trainers
+//! is defined — and pinned, in rust/tests/serve_parity.rs — on
+//! identical batches.
+//!
+//! `bnn-edge serve` (see `coordinator`) runs a self-driving load demo
+//! over this stack; `benches/perf_serve.rs` measures p50/p99 latency
+//! and throughput vs offered load, and CI gates on dynamic batching
+//! beating serial batch-1 serving.
+
+mod batcher;
+mod engine;
+mod snapshot;
+
+pub use batcher::{BatchServer, Batcher};
+pub use engine::{InferAlgo, PackedInferEngine};
+pub use snapshot::{LayerWeights, WeightSnapshot};

@@ -1,0 +1,167 @@
+//! Copy-on-publish packed weight snapshots.
+//!
+//! A [`WeightSnapshot`] is the *immutable* inference-side image of a
+//! model's weights: per matmul layer the bit-packed binarized Ŵ
+//! (k×n), its word-transposed Ŵᵀ (n×k, what the XNOR GEMM consumes)
+//! and the f32 BN shift β.  Snapshots are shared behind an `Arc`:
+//! `publish` packs **once** from a trainer's `weights_snapshot()`
+//! image, readers clone the `Arc`, and a training loop hot-swapping
+//! weights never touches a snapshot an in-flight request still holds
+//! — requests observe either the old weights or the new ones, never
+//! a mix.
+//!
+//! Bit-exactness with the training engines is by construction:
+//!
+//! - `weights_snapshot()` returns *exact* f32 images of the latent
+//!   weights (f16 stores widen losslessly), so packing here with
+//!   [`BitMatrix::pack`] (`v >= 0.0` ⇒ +1, f32 `-0.0` included)
+//!   reproduces the standard trainer's `pack_into` bit for bit;
+//! - the proposed trainer packs Ŵᵀ straight from f16 sign bits
+//!   (`pack_f16_t_into`, +1 unless strictly negative) — identical
+//!   sign semantics, and pack-then-transpose ≡ direct transposed
+//!   pack (pinned by `pack_f16_t_matches_pack_then_transpose`);
+//! - β is carried as exact f32, matching both trainers' BN input.
+
+use anyhow::{bail, Result};
+
+use crate::bitops::BitMatrix;
+use crate::naive::{LayerPlan, Plan};
+
+/// One matmul layer's packed inference weights.
+pub struct LayerWeights {
+    /// Packed Ŵ (k×n): unpacked to ±1 f32 for first/naive-tier
+    /// layers (the trainers' `signed_w_into` / `store_sign_into`).
+    pub w: BitMatrix,
+    /// Packed Ŵᵀ (n×k): the XNOR-GEMM operand (and the pad-correction
+    /// input on the standard engine's fused conv path).
+    pub wt: BitMatrix,
+    /// BN shift β, exact f32.
+    pub beta: Vec<f32>,
+}
+
+/// Immutable packed-weight snapshot (see module docs).  Build with
+/// [`WeightSnapshot::pack`], share behind an `Arc`.
+pub struct WeightSnapshot {
+    version: u64,
+    layers: Vec<LayerWeights>,
+}
+
+impl WeightSnapshot {
+    /// Pack a snapshot from a trainer's `weights_snapshot()` image:
+    /// interleaved `[w0, beta0, w1, beta1, ...]` f32 vectors, one
+    /// (w, β) pair per matmul layer of `plan`.  This is the *only*
+    /// copy a publish performs; the result is immutable.
+    pub fn pack(plan: &Plan, weights: &[Vec<f32>], version: u64) -> Result<WeightSnapshot> {
+        let wls: Vec<&LayerPlan> = plan.layers.iter().filter(|l| l.weight_len() > 0).collect();
+        if weights.len() != wls.len() * 2 {
+            bail!(
+                "snapshot image has {} vectors, plan '{}' needs {} (w, beta per matmul layer)",
+                weights.len(),
+                plan.name,
+                wls.len() * 2
+            );
+        }
+        let mut layers = Vec::with_capacity(wls.len());
+        for (wi, l) in wls.iter().enumerate() {
+            let (k, n) = (l.fan_in(), l.channels());
+            let wv = &weights[2 * wi];
+            let bv = &weights[2 * wi + 1];
+            if wv.len() != k * n {
+                bail!("layer {wi}: weight image {} elems, want {k}x{n}", wv.len());
+            }
+            if bv.len() != n {
+                bail!("layer {wi}: beta image {} elems, want {n}", bv.len());
+            }
+            let w = BitMatrix::pack(k, n, wv);
+            let wt = w.transpose();
+            layers.push(LayerWeights { w, wt, beta: bv.clone() });
+        }
+        Ok(WeightSnapshot { version, layers })
+    }
+
+    /// Monotone publish counter (set by the publisher; lets tests and
+    /// metrics tell which weights served a response).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn layer(&self, wi: usize) -> &LayerWeights {
+        &self.layers[wi]
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// True when this snapshot's shapes fit `plan` (layer count +
+    /// per-layer k×n) — the install-time compatibility gate.
+    pub fn matches(&self, plan: &Plan) -> bool {
+        let wls: Vec<&LayerPlan> = plan.layers.iter().filter(|l| l.weight_len() > 0).collect();
+        wls.len() == self.layers.len()
+            && wls.iter().zip(&self.layers).all(|(l, s)| {
+                s.w.rows == l.fan_in()
+                    && s.w.cols == l.channels()
+                    && s.beta.len() == l.channels()
+            })
+    }
+
+    /// Resident bytes (packed w + wt words, β f32) — the serve-side
+    /// analogue of the trainers' packed-weight-cache term.
+    pub fn heap_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.w.heap_bytes() + l.wt.heap_bytes() + l.beta.len() * 4)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{get, lower};
+    use crate::naive::{build_engine, Accel, StepEngine};
+
+    #[test]
+    fn pack_roundtrips_trainer_snapshot() {
+        let graph = lower(&get("mlp_mini").unwrap()).unwrap();
+        let plan = Plan::from_graph(&graph).unwrap();
+        for algo in ["standard", "proposed"] {
+            let eng = build_engine(algo, &graph, 4, "adam", Accel::Blocked, 9).unwrap();
+            let img = eng.weights_snapshot();
+            let snap = WeightSnapshot::pack(&plan, &img, 1).unwrap();
+            assert_eq!(snap.layers(), plan.weight_layers());
+            assert!(snap.matches(&plan), "{algo}");
+            assert!(snap.heap_bytes() > 0);
+            assert_eq!(snap.version(), 1);
+            // wt really is the word transpose of w, and signs mirror
+            // the f32 image (v >= 0 ⇒ +1)
+            for (wi, l) in snap.layers.iter().enumerate() {
+                assert_eq!(l.wt, l.w.transpose(), "{algo} layer {wi}");
+                let img_w = &img[2 * wi];
+                assert_eq!(
+                    l.w.get(0, 0),
+                    if img_w[0] >= 0.0 { 1.0 } else { -1.0 },
+                    "{algo} layer {wi}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shape_mismatches_are_rejected() {
+        let graph = lower(&get("mlp_mini").unwrap()).unwrap();
+        let plan = Plan::from_graph(&graph).unwrap();
+        let eng = build_engine("standard", &graph, 4, "adam", Accel::Blocked, 9).unwrap();
+        let mut img = eng.weights_snapshot();
+        assert!(WeightSnapshot::pack(&plan, &img[..2], 0).is_err(), "layer count");
+        img[0].pop();
+        assert!(WeightSnapshot::pack(&plan, &img, 0).is_err(), "weight shape");
+
+        // matches() catches a snapshot from a different model
+        let other = lower(&get("cnv_mini").unwrap()).unwrap();
+        let other_plan = Plan::from_graph(&other).unwrap();
+        let eng2 = build_engine("standard", &other, 4, "adam", Accel::Blocked, 9).unwrap();
+        let snap2 = WeightSnapshot::pack(&other_plan, &eng2.weights_snapshot(), 0).unwrap();
+        assert!(!snap2.matches(&plan));
+    }
+}

@@ -1,0 +1,116 @@
+//! The serving path is **allocation-free** in steady state — the
+//! ISSUE-6 acceptance bar, measured with the tracking allocator (a
+//! separate binary from memtrack_step.rs: `memtrack::alloc_count` is
+//! process-global, so each binary keeps its asserts in one `#[test]`
+//! to avoid cross-test counter noise).
+//!
+//! 1. after `PackedInferEngine::warmup` (descending batch sizes — the
+//!    arena's buffer classes are monotone in batch, so warming the
+//!    largest pre-pools every smaller one) plus one `eval` per batch
+//!    size (eval takes a d-buffer `infer_into` never does), mixed-size
+//!    `infer_into` + `eval` traffic performs **zero** heap
+//!    allocations — both algorithms, conv + dense models, tiled
+//!    backend;
+//! 2. the full dynamic-batching loop — client enqueue, server gather,
+//!    packed forward, scatter, wake — is also allocation-free once a
+//!    few requests have flowed.
+
+use bnn_edge::memtrack::{self, TrackingAlloc};
+use bnn_edge::models::{get, lower};
+use bnn_edge::naive::{build_engine, Accel, Plan, StepEngine};
+use bnn_edge::serve::{BatchServer, InferAlgo, PackedInferEngine, WeightSnapshot};
+use bnn_edge::util::rng::Pcg32;
+use std::sync::Arc;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+fn engine_for(model: &str, algo: &str, max_batch: usize) -> PackedInferEngine {
+    let graph = lower(&get(model).unwrap()).unwrap();
+    let plan = Plan::from_graph(&graph).unwrap();
+    let trainer = build_engine(algo, &graph, 2, "adam", Accel::Tiled(2), 21).unwrap();
+    let snap =
+        Arc::new(WeightSnapshot::pack(&plan, &trainer.weights_snapshot(), 0).unwrap());
+    PackedInferEngine::new(
+        &graph,
+        InferAlgo::parse(algo).unwrap(),
+        Accel::Tiled(2),
+        max_batch,
+        snap,
+    )
+    .unwrap()
+}
+
+#[test]
+fn steady_state_serving_allocates_nothing() {
+    assert!(memtrack::is_active(), "tracking allocator not installed");
+
+    // ---- 1. warmed engine: mixed-size infer + eval traffic
+    let sizes = [1usize, 3, 6];
+    let max_batch = 6;
+    for model in ["cnv_mini", "mlp_mini"] {
+        let graph = lower(&get(model).unwrap()).unwrap();
+        for algo in ["standard", "proposed"] {
+            let mut e = engine_for(model, algo, max_batch);
+            e.warmup().unwrap();
+
+            // pre-build every input/output outside the measured window
+            let mut rng = Pcg32::new(31);
+            let xs: Vec<Vec<f32>> =
+                sizes.iter().map(|&b| rng.normal_vec(b * graph.input_elems)).collect();
+            let ys: Vec<Vec<usize>> = sizes
+                .iter()
+                .map(|&b| (0..b).map(|i| i % graph.classes).collect())
+                .collect();
+            let mut logits = vec![0.0f32; max_batch * graph.classes];
+
+            // eval warmup: its d-buffer class isn't taken by infer_into
+            for (x, y) in xs.iter().zip(&ys) {
+                e.eval(x, y).unwrap();
+            }
+
+            let before = memtrack::alloc_count();
+            for round in 0..3 {
+                for (i, &b) in sizes.iter().enumerate() {
+                    e.infer_into(&xs[i], b, &mut logits[..b * graph.classes]).unwrap();
+                    let (loss, _) = e.eval(&xs[i], &ys[i]).unwrap();
+                    assert!(loss.is_finite(), "{model}/{algo} round {round}");
+                }
+            }
+            let allocs = memtrack::alloc_count() - before;
+            assert_eq!(
+                allocs, 0,
+                "{model}/{algo}: steady-state serving performed {allocs} heap \
+                 allocations (want zero)"
+            );
+        }
+    }
+
+    // ---- 2. the dynamic-batching loop end to end
+    {
+        let graph = lower(&get("mlp_mini").unwrap()).unwrap();
+        let engine = engine_for("mlp_mini", "proposed", 4);
+        let (batcher, server) = BatchServer::new(engine, 50, 16).unwrap();
+        let h = std::thread::spawn(move || server.run());
+
+        let mut rng = Pcg32::new(41);
+        let x = rng.normal_vec(graph.input_elems);
+        let mut out = vec![0.0f32; graph.classes];
+        // warm the request path (lazy lock/condvar init, first wakeups)
+        for _ in 0..6 {
+            batcher.infer_one(&x, &mut out).unwrap();
+        }
+        let before = memtrack::alloc_count();
+        for _ in 0..12 {
+            batcher.infer_one(&x, &mut out).unwrap();
+        }
+        let allocs = memtrack::alloc_count() - before;
+        assert_eq!(
+            allocs, 0,
+            "dynamic batching request path performed {allocs} heap allocations \
+             (want zero)"
+        );
+        batcher.shutdown();
+        h.join().unwrap().unwrap();
+    }
+}

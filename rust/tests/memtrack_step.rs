@@ -9,10 +9,13 @@
 //! 1. after one warmup step, subsequent training steps perform *zero*
 //!    heap allocations — both engines, multiple zoo models, the tiled
 //!    backend at 1 and 2 threads (the ISSUE acceptance bar);
-//! 2. `--microbatch B/4` drops the measured peak step memory ≥2× on
+//! 2. after the same warmup (plus one eval to pool its d-buffer),
+//!    `eval` calls — alone or interleaved with training — are also
+//!    allocation-free (the forward-only scratch path, ISSUE-6);
+//! 3. `--microbatch B/4` drops the measured peak step memory ≥2× on
 //!    binarynet_mini at B=64, with `memmodel::step_envelope` tracking
 //!    the measured steady footprint;
-//! 3. microbatched gradients equal the mean of independent per-chunk
+//! 4. microbatched gradients equal the mean of independent per-chunk
 //!    gradients (the accumulation-correctness invariant, asserted at
 //!    1e-5 on both engines).
 //!
@@ -71,6 +74,35 @@ fn steady_state_steps_allocate_nothing_and_microbatch_caps_peak() {
                      heap allocations (want zero)"
                 );
             }
+        }
+    }
+
+    // ---- 1b. evaluation is allocation-free too (ISSUE-6 satellite):
+    // eval shares the step arena's forward-only scratch path.  One
+    // eval warmup is required on top of the train warmup — eval takes
+    // a d = batch×classes gradient buffer the training step's
+    // microbatch-sized takes don't necessarily pre-pool — after which
+    // interleaved eval/train steady state performs zero allocations.
+    {
+        let graph = lower(&get("cnv_mini").unwrap()).unwrap();
+        let (x, y) = toy(8, graph.input_elems, graph.classes, 9);
+        for algo in ["standard", "proposed"] {
+            let mut e =
+                build_engine_micro(algo, &graph, 8, 0, "adam", Accel::Tiled(2), 3).unwrap();
+            e.train_step(&x, &y, 0.01).unwrap();
+            e.train_step(&x, &y, 0.01).unwrap();
+            e.eval(&x, &y).unwrap();
+            let before = memtrack::alloc_count();
+            for _ in 0..3 {
+                e.eval(&x, &y).unwrap();
+            }
+            e.train_step(&x, &y, 0.01).unwrap();
+            e.eval(&x, &y).unwrap();
+            let allocs = memtrack::alloc_count() - before;
+            assert_eq!(
+                allocs, 0,
+                "{algo}: steady-state eval performed {allocs} heap allocations (want zero)"
+            );
         }
     }
 

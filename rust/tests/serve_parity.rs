@@ -1,0 +1,155 @@
+//! Serving parity: the forward-only `PackedInferEngine` reproduces the
+//! training engines' `eval` **bit-exactly** on the same Accel tier.
+//!
+//! Both sides share every kernel (pack/im2col/XNOR-GEMM/BN) and the
+//! snapshot stores exact f32 weight images, so equality is `==` on
+//! (loss, acc) — not a tolerance.  The sweep covers all zoo models ×
+//! all tiers; tiers must match across the comparison because the Naive
+//! f32 GEMM accumulates in a different order than Blocked/Tiled.
+//!
+//! Also pins the publish contract: a snapshot published mid-flight is
+//! installed only at a batch boundary, so every response is computed
+//! against exactly one snapshot — old or new, never a mix.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use bnn_edge::models::{get, lower, names};
+use bnn_edge::naive::{build_engine, Accel, Plan, StepEngine};
+use bnn_edge::serve::{BatchServer, InferAlgo, PackedInferEngine, WeightSnapshot};
+use bnn_edge::util::rng::Pcg32;
+
+fn infer_algo(s: &str) -> InferAlgo {
+    InferAlgo::parse(s).unwrap()
+}
+
+/// Build a trainer, snapshot its weights, and return (trainer-eval,
+/// serve-eval) results on the same batch + tier.  Bit-equal or bust.
+fn check(model: &str, algo: &str, accel: Accel, batch: usize) {
+    let graph = lower(&get(model).unwrap()).unwrap();
+    let plan = Plan::from_graph(&graph).unwrap();
+    let mut trainer = build_engine(algo, &graph, batch, "adam", accel, 29).unwrap();
+    let snap =
+        Arc::new(WeightSnapshot::pack(&plan, &trainer.weights_snapshot(), 0).unwrap());
+    let mut serve =
+        PackedInferEngine::new(&graph, infer_algo(algo), accel, batch, snap).unwrap();
+
+    let mut rng = Pcg32::new(1000 + batch as u64);
+    let x = rng.normal_vec(batch * graph.input_elems);
+    let y: Vec<usize> = (0..batch).map(|i| i % graph.classes).collect();
+
+    let want = trainer.eval(&x, &y).unwrap();
+    let got = serve.eval(&x, &y).unwrap();
+    assert_eq!(got, want, "{model}/{algo}/{accel:?} b={batch}: serve vs trainer eval");
+}
+
+#[test]
+fn serve_eval_is_bit_exact_with_trainer_eval_across_the_zoo() {
+    for (mi, model) in names().iter().enumerate() {
+        let model = *model;
+        let small = model.ends_with("_mini") || model == "mlp";
+        for accel in [Accel::Naive, Accel::Blocked, Accel::Tiled(2)] {
+            // wall-clock control, same policy as engine_parity.rs: the
+            // scalar Naive tier runs full-scale models on alternating
+            // engines, and caps the mini batch sweep at 7 (batch 64
+            // there is pure repetition of the same scalar kernels)
+            let batches: &[usize] = if !small {
+                &[1]
+            } else if accel == Accel::Naive {
+                &[1, 7]
+            } else {
+                &[1, 7, 64]
+            };
+            let algos: &[&str] = if small || accel != Accel::Naive {
+                &["standard", "proposed"]
+            } else if mi % 2 == 0 {
+                &["standard"]
+            } else {
+                &["proposed"]
+            };
+            for algo in algos {
+                for &b in batches {
+                    check(model, algo, accel, b);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batch64_naive_tier_still_matches_on_a_dense_model() {
+    // keep one large-batch probe on the scalar tier: the dense mini is
+    // cheap enough and covers Naive's distinct f32 accumulation order
+    // at a batch size where the blocked tiers would diverge if the
+    // serve path ever mixed tiers
+    check("mlp_mini", "standard", Accel::Naive, 64);
+    check("mlp_mini", "proposed", Accel::Naive, 64);
+}
+
+#[test]
+fn publish_mid_flight_is_never_mixed() {
+    // max_batch = 1 makes every response a batch-1 forward, so each
+    // must bit-match one of the two snapshots' reference logits —
+    // proving a published snapshot never splices into an in-flight
+    // request.  Clients hammer a fixed input while a publisher swaps
+    // the weights midway through.
+    let graph = lower(&get("cnv_mini").unwrap()).unwrap();
+    let plan = Plan::from_graph(&graph).unwrap();
+    let snap_for = |seed: u64, version: u64| {
+        let t = build_engine("proposed", &graph, 1, "adam", Accel::Tiled(2), seed).unwrap();
+        Arc::new(WeightSnapshot::pack(&plan, &t.weights_snapshot(), version).unwrap())
+    };
+    let snap0 = snap_for(4, 0);
+    let snap1 = snap_for(77, 1);
+    let mk = |snap: &Arc<WeightSnapshot>| {
+        PackedInferEngine::new(&graph, InferAlgo::Proposed, Accel::Tiled(2), 1, Arc::clone(snap))
+            .unwrap()
+    };
+
+    let mut rng = Pcg32::new(9);
+    let x = Arc::new(rng.normal_vec(graph.input_elems));
+    let cl = graph.classes;
+    let mut want0 = vec![0.0f32; cl];
+    mk(&snap0).infer_into(&x[..], 1, &mut want0).unwrap();
+    let mut want1 = vec![0.0f32; cl];
+    mk(&snap1).infer_into(&x[..], 1, &mut want1).unwrap();
+    assert_ne!(want0, want1);
+
+    let (batcher, server) = BatchServer::new(mk(&snap0), 100, 8).unwrap();
+    let server = std::thread::spawn(move || server.run());
+
+    let published = Arc::new(AtomicBool::new(false));
+    let mut clients = Vec::new();
+    for _ in 0..3 {
+        let b = batcher.clone();
+        let x = Arc::clone(&x);
+        let (w0, w1) = (want0.clone(), want1.clone());
+        let published = Arc::clone(&published);
+        let snap1 = Arc::clone(&snap1);
+        clients.push(std::thread::spawn(move || {
+            let mut out = vec![0.0f32; w0.len()];
+            let mut saw_new = false;
+            for i in 0..40 {
+                b.infer_one(&x[..], &mut out).unwrap();
+                if out == w1 {
+                    saw_new = true;
+                } else {
+                    assert_eq!(out, w0, "request {i}: response matches neither snapshot");
+                    assert!(
+                        !saw_new,
+                        "request {i}: old weights served after new ones (install went back)"
+                    );
+                }
+                if i == 10 && !published.swap(true, Ordering::Relaxed) {
+                    b.publish(Arc::clone(&snap1));
+                }
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    batcher.shutdown();
+    let engine = server.join().unwrap().unwrap();
+    assert_eq!(engine.snapshot().version(), 1, "publish never landed");
+}
