@@ -8,10 +8,14 @@
 //! The leader majority-votes the signs (cf. signSGD, the paper's
 //! ref [9]) and broadcasts the new weights.
 //!
-//!     cargo run --release --example federated_edge [-- --workers 6 --rounds 8]
+//! The fleet is fault-tolerant: pass `--chaos hostile` to inject
+//! seeded crash/stall/drop/corrupt faults and watch rounds commit
+//! anyway (staleness-discounted votes, quorum, straggler backoff).
+//!
+//!     cargo run --release --example federated_edge [-- --workers 6 --rounds 8 --chaos hostile]
 
 use anyhow::Result;
-use bnn_edge::federated::{FedConfig, Leader};
+use bnn_edge::federated::{AsyncConfig, FaultPlan, FedConfig, Leader};
 use bnn_edge::memmodel::{breakdown, DtypeConfig, Optimizer};
 use bnn_edge::models::{get, lower};
 use bnn_edge::util::cli::Args;
@@ -19,19 +23,20 @@ use bnn_edge::util::MIB;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let cfg = FedConfig {
-        workers: args.usize_or("workers", 4)?,
-        rounds: args.usize_or("rounds", 8)?,
-        local_steps: args.usize_or("local-steps", 10)?,
-        batch: args.usize_or("batch", 32)?,
-        model: args.str_or("model", "mlp_mini"),
-        dataset: args.str_or("dataset", "syn-mnist64"),
-        lr: args.f64_or("lr", 0.003)? as f32,
-        fed_lr: args.f64_or("fed-lr", 0.02)? as f32,
-        seed: args.usize_or("seed", 42)? as u64,
-        samples_per_worker: args.usize_or("samples-per-worker", 320)?,
-        drop_worker: None,
-    };
+    let workers = args.usize_or("workers", 4)?;
+    let mut cfg = FedConfig::fleet(workers);
+    cfg.rounds = args.usize_or("rounds", 8)?;
+    cfg.local_steps = args.usize_or("local-steps", 10)?;
+    cfg.batch = args.usize_or("batch", 32)?;
+    cfg.model = args.str_or("model", "mlp_mini");
+    cfg.dataset = args.str_or("dataset", "syn-mnist64");
+    cfg.lr = args.f64_or("lr", 0.003)? as f32;
+    cfg.fed_lr = args.f64_or("fed-lr", 0.02)? as f32;
+    cfg.seed = args.usize_or("seed", 42)? as u64;
+    cfg.samples_per_worker = args.usize_or("samples-per-worker", 320)?;
+    cfg.async_cfg = AsyncConfig::majority(workers);
+    cfg.async_cfg.deadline_ms = args.usize_or("deadline-ms", 2000)? as u64;
+    cfg.plan = FaultPlan::parse(&args.str_or("chaos", "none"), cfg.seed)?;
 
     // Per-device memory: each worker runs the proposed step, so its
     // on-device footprint is the Table-2 proposed column.
@@ -46,8 +51,16 @@ fn main() -> Result<()> {
 
     let mut leader = Leader::new(cfg)?;
     let result = leader.run()?;
-    for (i, loss) in result.round_losses.iter().enumerate() {
-        println!("round {i}: fleet mean local loss {loss:.4}");
+    for s in &result.round_stats {
+        println!(
+            "round {}: {} admitted={} (fresh {} stale {}) loss {:.4}",
+            s.round,
+            if s.committed { "commit" } else { "stall " },
+            s.admitted,
+            s.fresh,
+            s.stale,
+            s.mean_loss
+        );
     }
     println!("{}", result.summary());
     Ok(())

@@ -1,0 +1,233 @@
+//! §Perf federated bench — the 10³-worker aggregation story.
+//!
+//! Three row kinds in `BENCH_fed.json`:
+//!
+//! - `kind = "tally"` — the word-level vote tally (stack → word
+//!   transpose → SIMD popcount, sharded) vs the scalar bit-probe
+//!   reference over 10³ packed worker updates of a dense model's
+//!   weight vector.  CI gates `tally_speedup >= 10` on the dense
+//!   models — the per-round aggregation cost is what actually caps
+//!   fleet size at the root.
+//! - `kind = "fleet"` — end-to-end simulated-fleet rounds at 10³
+//!   workers (clean and hostile chaos): rounds/sec, admitted uplink
+//!   bytes/round, commit-latency p50/p99.
+//! - `kind = "accuracy"` — federated (threaded small fleet) vs
+//!   centralized training at matched total step count: test accuracy
+//!   of both, and the gap the sign-vote aggregation costs.
+//!
+//! Flags: `--smoke` (trimmed sweep for CI), `--out PATH` (default
+//! `BENCH_fed.json`).
+
+use std::time::Instant;
+
+use bnn_edge::bitops::BitMatrix;
+use bnn_edge::data::build;
+use bnn_edge::federated::{
+    count_votes_scalar, count_votes_sharded, AsyncConfig, FaultPlan, FedConfig, FleetMode,
+    Leader,
+};
+use bnn_edge::models::{get, lower};
+use bnn_edge::naive::{build_engine, Accel};
+use bnn_edge::util::bench::write_json_rows;
+use bnn_edge::util::cli::Args;
+use bnn_edge::util::json::Json;
+use bnn_edge::util::rng::Pcg32;
+use bnn_edge::util::stats::percentile;
+
+/// Total packed weight elements of a model (w + beta per layer).
+fn model_weights(model: &str) -> usize {
+    let graph = lower(&get(model).unwrap()).unwrap();
+    graph
+        .nodes
+        .iter()
+        .filter(|n| n.is_matmul())
+        .map(|n| n.w_elems + n.channels)
+        .sum()
+}
+
+/// Word-level vs scalar tally over `workers` synthetic updates.
+fn bench_tally(model: &str, workers: usize, shards: usize, reps: usize) -> Json {
+    let n = model_weights(model);
+    let mut g = Pcg32::new(0xFED);
+    let updates: Vec<BitMatrix> =
+        (0..workers).map(|_| BitMatrix::pack(1, n, &g.normal_vec(n))).collect();
+    let refs: Vec<&BitMatrix> = updates.iter().collect();
+    // realistic staleness mix: mostly fresh, some discounted
+    let ws: Vec<u32> = (0..workers).map(|i| [3u32, 3, 3, 3, 3, 3, 2, 1][i % 8]).collect();
+
+    // one correctness check before timing anything
+    assert_eq!(
+        count_votes_sharded(&refs, &ws, shards),
+        count_votes_scalar(&refs, &ws),
+        "word tally must be bit-exact"
+    );
+
+    let mut t_scalar = f64::MAX;
+    let mut t_words = f64::MAX;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let v = count_votes_scalar(&refs, &ws);
+        t_scalar = t_scalar.min(t0.elapsed().as_secs_f64() * 1e3);
+        std::hint::black_box(v);
+        let t0 = Instant::now();
+        let v = count_votes_sharded(&refs, &ws, shards);
+        t_words = t_words.min(t0.elapsed().as_secs_f64() * 1e3);
+        std::hint::black_box(v);
+    }
+    let speedup = t_scalar / t_words.max(1e-9);
+    println!(
+        "tally {model:>10} k={workers} n={n}: scalar {t_scalar:>8.2}ms  words {t_words:>7.2}ms  {speedup:>5.1}x"
+    );
+    let mut row = Json::obj();
+    row.set("kind", Json::from("tally"));
+    row.set("model", Json::from(model));
+    row.set("workers", Json::from(workers));
+    row.set("n_weights", Json::from(n));
+    row.set("shards", Json::from(shards));
+    row.set("tally_scalar_ms", Json::from(t_scalar));
+    row.set("tally_words_ms", Json::from(t_words));
+    row.set("tally_speedup", Json::from(speedup));
+    row
+}
+
+/// End-to-end simulated fleet at `workers`, clean or hostile.
+fn bench_fleet(model: &str, workers: usize, rounds: usize, chaos: &str) -> Json {
+    let mut cfg = FedConfig::fleet(workers);
+    cfg.model = model.into();
+    cfg.rounds = rounds;
+    cfg.local_steps = 4;
+    cfg.batch = 32;
+    cfg.samples_per_worker = 128;
+    cfg.plan = FaultPlan::parse(chaos, 42).unwrap();
+    cfg.mode = FleetMode::Sim { shards: 8, noise_log2: 4 };
+    let t0 = Instant::now();
+    let r = Leader::new(cfg).unwrap().run().unwrap();
+    let elapsed = t0.elapsed().as_secs_f64();
+    let commit_ms: Vec<f64> = r.round_stats.iter().map(|s| s.commit_ms).collect();
+    let bytes: f64 = r.round_stats.iter().map(|s| s.uplink_bytes as f64).sum::<f64>()
+        / r.rounds_attempted.max(1) as f64;
+    let rps = r.rounds_attempted as f64 / elapsed.max(1e-12);
+    println!(
+        "fleet {model:>10} w={workers} chaos={chaos}: {}/{} committed  {rps:>5.2} rounds/s  {:.1} KiB/round  p50 {:.1}ms p99 {:.1}ms",
+        r.rounds_committed,
+        r.rounds_attempted,
+        bytes / 1024.0,
+        percentile(&commit_ms, 50.0),
+        percentile(&commit_ms, 99.0),
+    );
+    let mut row = Json::obj();
+    row.set("kind", Json::from("fleet"));
+    row.set("model", Json::from(model));
+    row.set("workers", Json::from(workers));
+    row.set("chaos", Json::from(chaos));
+    row.set("rounds", Json::from(r.rounds_attempted));
+    row.set("rounds_committed", Json::from(r.rounds_committed));
+    row.set("rounds_per_sec", Json::from(rps));
+    row.set("bytes_per_round", Json::from(bytes));
+    row.set("commit_p50_ms", Json::from(percentile(&commit_ms, 50.0)));
+    row.set("commit_p99_ms", Json::from(percentile(&commit_ms, 99.0)));
+    row.set("quarantined", Json::from(r.quarantined));
+    row
+}
+
+/// Federated (threaded fleet) vs centralized at matched step budget.
+fn bench_accuracy(model: &str, workers: usize, rounds: usize, local_steps: usize) -> Json {
+    let batch = 32;
+    let mut cfg = FedConfig::fleet(workers);
+    cfg.model = model.into();
+    cfg.rounds = rounds;
+    cfg.local_steps = local_steps;
+    cfg.batch = batch;
+    cfg.samples_per_worker = 128;
+    cfg.fed_lr = 0.02;
+    cfg.async_cfg = AsyncConfig::majority(workers);
+    cfg.mode = FleetMode::Threads;
+    let seed = cfg.seed;
+    let dataset = cfg.dataset.clone();
+    let r = Leader::new(cfg).unwrap().run().unwrap();
+
+    let graph = lower(&get(model).unwrap()).unwrap();
+    let n_test = 256;
+    let ds = build(&dataset, workers * 128, n_test, seed).unwrap();
+    let k = ds.sample_elems();
+    let eval_acc = |weights: &[Vec<f32>]| -> f64 {
+        let mut e = build_engine("proposed", &graph, batch, "adam", Accel::Blocked, seed)
+            .unwrap();
+        e.load_weights(weights).unwrap();
+        let mut acc = 0.0f64;
+        let batches = n_test / batch;
+        for bi in 0..batches {
+            let x = &ds.test_x[bi * batch * k..(bi + 1) * batch * k];
+            let y = &ds.test_y[bi * batch..(bi + 1) * batch];
+            acc += e.eval(x, y).unwrap().1 as f64;
+        }
+        acc / batches as f64
+    };
+    let fed_acc = eval_acc(&r.final_weights);
+
+    // centralized: same init, same total optimizer steps, full data
+    let mut central =
+        build_engine("proposed", &graph, batch, "adam", Accel::Blocked, seed).unwrap();
+    let mut w0 = Leader::new({
+        let mut c = FedConfig::fleet(1);
+        c.model = model.into();
+        c.rounds = 0;
+        c.batch = batch;
+        c.samples_per_worker = batch;
+        c
+    })
+    .unwrap();
+    central.load_weights(&w0.run().unwrap().final_weights).unwrap();
+    let n_batches = (ds.train_y.len() / batch).max(1);
+    for s in 0..rounds * local_steps {
+        let bi = s % n_batches;
+        let x = &ds.train_x[bi * batch * k..(bi + 1) * batch * k];
+        let y = &ds.train_y[bi * batch..(bi + 1) * batch];
+        central.train_step(x, y, 0.002).unwrap();
+    }
+    let central_acc = eval_acc(&central.weights_snapshot());
+    println!(
+        "acc   {model:>10} w={workers} r={rounds}: federated {fed_acc:.3}  centralized {central_acc:.3}  gap {:+.3}",
+        fed_acc - central_acc
+    );
+    let mut row = Json::obj();
+    row.set("kind", Json::from("accuracy"));
+    row.set("model", Json::from(model));
+    row.set("workers", Json::from(workers));
+    row.set("rounds", Json::from(rounds));
+    row.set("local_steps", Json::from(local_steps));
+    row.set("fed_acc", Json::from(fed_acc));
+    row.set("central_acc", Json::from(central_acc));
+    row.set("acc_gap", Json::from(fed_acc - central_acc));
+    row
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.bool("smoke");
+    let out_path = args.str_or("out", "BENCH_fed.json");
+
+    // dense models: the tally gate's subjects (conv models tally the
+    // same packed vectors, just smaller)
+    let tally_models: Vec<&str> = if smoke { vec!["mlp_mini", "mlp"] } else {
+        vec!["mlp_mini", "mlp", "cnv_mini"]
+    };
+    let reps = if smoke { 3 } else { 7 };
+
+    let mut rows = Vec::new();
+    for model in &tally_models {
+        rows.push(bench_tally(model, 1000, 4, reps));
+    }
+    let fleet_rounds = if smoke { 5 } else { 12 };
+    for chaos in ["none", "hostile"] {
+        rows.push(bench_fleet("mlp_mini", 1000, fleet_rounds, chaos));
+    }
+    if !smoke {
+        rows.push(bench_fleet("mlp_mini", 200, fleet_rounds, "hostile"));
+    }
+    let (acc_rounds, acc_steps) = if smoke { (4, 6) } else { (10, 10) };
+    rows.push(bench_accuracy("mlp_mini", 4, acc_rounds, acc_steps));
+
+    write_json_rows(&out_path, rows).expect("write BENCH_fed.json");
+    println!("wrote {out_path}");
+}

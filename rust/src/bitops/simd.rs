@@ -109,6 +109,27 @@ pub fn xor_popcount_1x4(a: &[u64], b0: &[u64], b1: &[u64], b2: &[u64], b3: &[u64
     }
 }
 
+/// Σ_w popcount(a[w]) — dispatched.  The federated vote tally's
+/// inner kernel: after the word transpose, one weight's votes are a
+/// contiguous word run, and this is all that remains of counting
+/// them.
+#[inline]
+pub fn popcount(a: &[u64]) -> u64 {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { x86::popcount_avx2(a) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::popcount_neon(a) },
+        _ => popcount_scalar(a),
+    }
+}
+
+/// Scalar reference (also the fallback tier).
+#[inline]
+pub fn popcount_scalar(a: &[u64]) -> u64 {
+    a.iter().map(|&x| x.count_ones() as u64).sum()
+}
+
 /// Scalar reference (also the fallback tier).
 #[inline]
 pub fn xor_popcount_scalar(a: &[u64], b: &[u64]) -> u64 {
@@ -241,6 +262,32 @@ mod x86 {
         let mut lanes = [0u64; 4];
         unsafe { _mm256_storeu_si256(lanes.as_mut_ptr().cast(), v) };
         lanes.iter().sum()
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (see [`super::level`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn popcount_avx2(a: &[u64]) -> u64 {
+        unsafe {
+            let lut = nibble_lut();
+            let mask = _mm256_set1_epi8(0x0f);
+            let zero = _mm256_setzero_si256();
+            let mut acc = zero;
+            let n4 = a.len() & !3;
+            let mut w = 0;
+            while w < n4 {
+                let va = _mm256_loadu_si256(a.as_ptr().add(w).cast());
+                let cnt = popcnt_bytes(va, lut, mask);
+                acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
+                w += 4;
+            }
+            let mut total = sum_lanes_u64(acc);
+            while w < a.len() {
+                total += a[w].count_ones() as u64;
+                w += 1;
+            }
+            total
+        }
     }
 
     /// # Safety
@@ -390,6 +437,27 @@ mod neon {
     #[target_feature(enable = "neon")]
     unsafe fn popcnt_words(x: uint64x2_t) -> uint64x2_t {
         unsafe { vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(x))))) }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64; caller dispatches via [`super::level`].
+    #[target_feature(enable = "neon")]
+    pub unsafe fn popcount_neon(a: &[u64]) -> u64 {
+        unsafe {
+            let mut acc = vdupq_n_u64(0);
+            let n2 = a.len() & !1;
+            let mut w = 0;
+            while w < n2 {
+                let va = vld1q_u64(a.as_ptr().add(w));
+                acc = vaddq_u64(acc, popcnt_words(va));
+                w += 2;
+            }
+            let mut total = vaddvq_u64(acc);
+            if w < a.len() {
+                total += a[w].count_ones() as u64;
+            }
+            total
+        }
     }
 
     /// # Safety
@@ -563,6 +631,20 @@ mod tests {
             // cross-check one lane against the 1x1 kernel
             assert_eq!(got[2], xor_popcount(&a, &bs[2]), "len {len}");
         }
+    }
+
+    #[test]
+    fn popcount_matches_scalar_all_lengths() {
+        let mut g = Pcg32::new(34);
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 13, 16, 63, 64, 65, 129, 500] {
+            let a = words(&mut g, len);
+            assert_eq!(popcount(&a), popcount_scalar(&a), "len {len}");
+            // cross-check against the XOR kernel with a zero operand
+            let z = vec![0u64; len];
+            assert_eq!(popcount(&a), xor_popcount(&a, &z), "len {len}");
+        }
+        assert_eq!(popcount(&[u64::MAX; 5]), 320);
+        assert_eq!(popcount(&[0u64; 9]), 0);
     }
 
     #[test]

@@ -79,8 +79,12 @@ COMMANDS:
               --engine tiled [--threads 2]
               [--max-batch 8] [--slo-us 200]
               [--clients 4] [--requests 64] [--seed 42]
-  federated   run the federated edge-fleet demo
+  federated   run the fault-tolerant federated edge fleet
               [--workers 4] [--rounds 5] [--local-steps 8]
+              [--chaos none|hostile] [--chaos-seed 42]
+              [--quorum N] [--max-staleness 2] [--deadline-ms 4000]
+              [--retry-budget 3] [--backoff 1]
+              [--sim] [--shards 8] [--noise-log2 4]
 "
     );
 }

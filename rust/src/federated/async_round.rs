@@ -1,0 +1,328 @@
+//! Async bounded-staleness round machinery.
+//!
+//! The lockstep broadcast/collect loop is gone; what replaced it is a
+//! *state machine* shared by both fleet transports (engine worker
+//! threads with `recv_timeout`, and the virtual-time simulated fleet):
+//!
+//! - a round commits as soon as **quorum** distinct workers'
+//!   round-admissible updates arrive — only admitted updates count
+//!   against the deadline (a stale or malformed receive never burns a
+//!   live worker's slot);
+//! - updates up to `max_staleness` rounds old are admitted with a
+//!   **staleness-discounted integer vote weight**
+//!   (`max_staleness + 1 − staleness`, see [`vote_weight`] — integer
+//!   so tallies stay bit-exact and permutation-invariant);
+//! - workers that miss a round's deadline become **stragglers** and
+//!   are re-admitted with exponential backoff (sit out `backoff`
+//!   rounds, doubling up to a cap on repeated failure, reset on the
+//!   first successful uplink);
+//! - a malformed sender is **quarantined** — treated as a permanent
+//!   dropout, its update discarded whole (all-or-nothing per update);
+//! - below quorum the round **stalls and retries** within a bounded
+//!   retry budget, then is recorded uncommitted and the fleet moves
+//!   on — committed state is never rolled back.
+
+use anyhow::{bail, Result};
+
+/// Knobs of the async round loop (CLI: `--max-staleness`,
+/// `--deadline-ms`, `--retry-budget`, `--backoff`, `--quorum`).
+#[derive(Clone, Copy, Debug)]
+pub struct AsyncConfig {
+    /// Distinct contributing workers needed to commit a round.
+    pub quorum: usize,
+    /// Oldest admissible update age, in rounds (0 = fresh only).
+    pub max_staleness: usize,
+    /// Threaded fleet: per-round collection deadline (wall clock).
+    /// The simulated fleet runs virtual time and ignores this.
+    pub deadline_ms: u64,
+    /// Collection retries per round while below quorum.
+    pub retry_budget: usize,
+    /// Rounds a first-time straggler sits out before re-admission.
+    pub backoff_base: usize,
+    /// Cap on the doubled backoff.
+    pub backoff_cap: usize,
+}
+
+impl AsyncConfig {
+    /// Strict-majority quorum for `workers`, defaults elsewhere.
+    pub fn majority(workers: usize) -> AsyncConfig {
+        AsyncConfig {
+            quorum: workers / 2 + 1,
+            max_staleness: 2,
+            deadline_ms: 4000,
+            retry_budget: 3,
+            backoff_base: 1,
+            backoff_cap: 8,
+        }
+    }
+
+    pub fn validate(&self, workers: usize) -> Result<()> {
+        if self.quorum == 0 || self.quorum > workers {
+            bail!("quorum {} out of range for {} workers", self.quorum, workers);
+        }
+        Ok(())
+    }
+}
+
+/// Integer vote weight of an update `staleness` rounds old
+/// (`None` = inadmissible).  Fresh = `max_staleness + 1`, oldest
+/// admissible = 1: linear discount, all integer.
+pub fn vote_weight(staleness: usize, max_staleness: usize) -> Option<u32> {
+    (staleness <= max_staleness).then(|| (max_staleness + 1 - staleness) as u32)
+}
+
+/// Leader-side view of one worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    Active,
+    /// Timed out; sits out until `readmit`, next failure doubles
+    /// `backoff` (capped).
+    Straggler { readmit: usize, backoff: usize },
+    /// Sent a malformed update — permanent dropout.
+    Quarantined,
+    /// Channel closed / engine failure — permanent dropout.
+    Dead,
+}
+
+/// Admission verdict for a received update (see [`FleetState::admit`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Counts toward quorum with this vote weight.
+    Admitted { weight: u32, staleness: usize },
+    /// Older than `max_staleness` — discarded, no slot burned.
+    TooStale,
+    /// From a quarantined/dead worker — discarded.
+    Rejected,
+}
+
+/// The whole fleet's round bookkeeping, transport-agnostic.
+#[derive(Debug)]
+pub struct FleetState {
+    pub cfg: AsyncConfig,
+    health: Vec<Health>,
+    /// Rounds committed so far (monotone; commits never roll back).
+    pub committed: usize,
+    /// Highest committed round index.
+    pub last_committed: Option<usize>,
+}
+
+impl FleetState {
+    pub fn new(cfg: AsyncConfig, workers: usize) -> Result<FleetState> {
+        cfg.validate(workers)?;
+        Ok(FleetState {
+            cfg,
+            health: vec![Health::Active; workers],
+            committed: 0,
+            last_committed: None,
+        })
+    }
+
+    pub fn health(&self, worker: usize) -> Health {
+        self.health[worker]
+    }
+
+    /// Workers that should receive round `round`'s work: active ones
+    /// plus stragglers whose backoff has elapsed.
+    pub fn broadcast_set(&self, round: usize) -> Vec<usize> {
+        self.health
+            .iter()
+            .enumerate()
+            .filter(|(_, h)| match h {
+                Health::Active => true,
+                Health::Straggler { readmit, .. } => round >= *readmit,
+                Health::Quarantined | Health::Dead => false,
+            })
+            .map(|(w, _)| w)
+            .collect()
+    }
+
+    /// Admission check for worker `w`'s update tagged `update_round`,
+    /// received while collecting `round`.  Does not mutate health —
+    /// call [`FleetState::on_uplink_ok`] after accepting the payload.
+    pub fn admit(&self, w: usize, round: usize, update_round: usize) -> Admission {
+        match self.health[w] {
+            Health::Quarantined | Health::Dead => return Admission::Rejected,
+            Health::Active | Health::Straggler { .. } => {}
+        }
+        // an update can only be tagged with a round it was sent work
+        // for, i.e. update_round <= round; a "future" tag is malformed
+        if update_round > round {
+            return Admission::Rejected;
+        }
+        match vote_weight(round - update_round, self.cfg.max_staleness) {
+            Some(weight) => Admission::Admitted { weight, staleness: round - update_round },
+            None => Admission::TooStale,
+        }
+    }
+
+    /// A worker delivered an admissible update: it is live again —
+    /// straggler state and backoff reset.
+    pub fn on_uplink_ok(&mut self, w: usize) {
+        if matches!(self.health[w], Health::Active | Health::Straggler { .. }) {
+            self.health[w] = Health::Active;
+        }
+    }
+
+    /// A broadcast-to worker missed the round deadline: mark it a
+    /// straggler (first miss sits out `backoff_base` rounds) or
+    /// double an existing straggler's backoff, capped.
+    pub fn on_timeout(&mut self, w: usize, round: usize) {
+        self.health[w] = match self.health[w] {
+            Health::Active => Health::Straggler {
+                readmit: round + 1 + self.cfg.backoff_base,
+                backoff: self.cfg.backoff_base,
+            },
+            Health::Straggler { backoff, .. } => {
+                let next = (backoff * 2).clamp(1, self.cfg.backoff_cap);
+                Health::Straggler { readmit: round + 1 + next, backoff: next }
+            }
+            h @ (Health::Quarantined | Health::Dead) => h,
+        };
+    }
+
+    /// Malformed update: permanent dropout, votes discarded whole.
+    pub fn quarantine(&mut self, w: usize) {
+        if self.health[w] != Health::Dead {
+            self.health[w] = Health::Quarantined;
+        }
+    }
+
+    /// Channel closed / engine error: permanent dropout.
+    pub fn mark_dead(&mut self, w: usize) {
+        self.health[w] = Health::Dead;
+    }
+
+    /// Workers that could still contribute (not quarantined/dead).
+    /// `reachable() < quorum` means no future round can commit — the
+    /// graceful-degradation exit condition.
+    pub fn reachable(&self) -> usize {
+        self.health
+            .iter()
+            .filter(|h| matches!(h, Health::Active | Health::Straggler { .. }))
+            .count()
+    }
+
+    /// Record a committed round.  Commits are strictly monotone —
+    /// attempting to re-commit or roll back is a logic error.
+    pub fn commit(&mut self, round: usize) {
+        if let Some(last) = self.last_committed {
+            assert!(round > last, "commit must be monotone: {round} after {last}");
+        }
+        self.last_committed = Some(round);
+        self.committed += 1;
+    }
+}
+
+/// Per-round outcome record (`FedResult::round_stats`): what the
+/// chaos tests assert monotonicity/quorum claims against, and what
+/// the bench distills into commit-latency percentiles.
+#[derive(Clone, Debug)]
+pub struct RoundStat {
+    pub round: usize,
+    pub committed: bool,
+    /// Distinct workers whose updates were admitted.
+    pub admitted: usize,
+    pub fresh: usize,
+    pub stale: usize,
+    /// Collection retries spent below quorum.
+    pub retries: usize,
+    pub timeouts: usize,
+    pub quarantined: usize,
+    /// Mean local loss over admitted updates (NaN if uncommitted).
+    pub mean_loss: f32,
+    /// Admitted uplink payload for the round.
+    pub uplink_bytes: usize,
+    /// Wall-clock round start → commit (collection only, sim ≈ compute).
+    pub commit_ms: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AsyncConfig {
+        AsyncConfig {
+            quorum: 2,
+            max_staleness: 2,
+            deadline_ms: 100,
+            retry_budget: 2,
+            backoff_base: 1,
+            backoff_cap: 4,
+        }
+    }
+
+    #[test]
+    fn vote_weight_discounts_linearly() {
+        assert_eq!(vote_weight(0, 2), Some(3));
+        assert_eq!(vote_weight(1, 2), Some(2));
+        assert_eq!(vote_weight(2, 2), Some(1));
+        assert_eq!(vote_weight(3, 2), None);
+        assert_eq!(vote_weight(0, 0), Some(1));
+        assert_eq!(vote_weight(1, 0), None);
+    }
+
+    #[test]
+    fn admission_rules() {
+        let st = FleetState::new(cfg(), 3).unwrap();
+        assert_eq!(st.admit(0, 5, 5), Admission::Admitted { weight: 3, staleness: 0 });
+        assert_eq!(st.admit(0, 5, 4), Admission::Admitted { weight: 2, staleness: 1 });
+        assert_eq!(st.admit(0, 5, 3), Admission::Admitted { weight: 1, staleness: 2 });
+        assert_eq!(st.admit(0, 5, 2), Admission::TooStale);
+        assert_eq!(st.admit(0, 5, 6), Admission::Rejected, "future-tagged update");
+    }
+
+    #[test]
+    fn straggler_backoff_doubles_and_resets() {
+        let mut st = FleetState::new(cfg(), 3).unwrap();
+        st.on_timeout(0, 10);
+        assert_eq!(st.health(0), Health::Straggler { readmit: 12, backoff: 1 });
+        assert!(!st.broadcast_set(11).contains(&0), "sits out its backoff");
+        assert!(st.broadcast_set(12).contains(&0), "re-admitted after backoff");
+        st.on_timeout(0, 12); // failed again: 1 -> 2
+        assert_eq!(st.health(0), Health::Straggler { readmit: 15, backoff: 2 });
+        st.on_timeout(0, 15); // 2 -> 4
+        st.on_timeout(0, 20); // 4 -> 8 capped at 4
+        assert_eq!(st.health(0), Health::Straggler { readmit: 25, backoff: 4 });
+        st.on_uplink_ok(0); // a successful uplink resets everything
+        assert_eq!(st.health(0), Health::Active);
+    }
+
+    #[test]
+    fn quarantine_is_permanent() {
+        let mut st = FleetState::new(cfg(), 3).unwrap();
+        st.quarantine(1);
+        assert_eq!(st.admit(1, 3, 3), Admission::Rejected);
+        st.on_uplink_ok(1); // cannot resurrect
+        assert_eq!(st.health(1), Health::Quarantined);
+        assert!(!st.broadcast_set(4).contains(&1));
+        assert_eq!(st.reachable(), 2);
+        st.mark_dead(2);
+        assert_eq!(st.reachable(), 1);
+    }
+
+    #[test]
+    fn commits_are_monotone() {
+        let mut st = FleetState::new(cfg(), 3).unwrap();
+        st.commit(0);
+        st.commit(2); // round 1 stalled — fine, still monotone
+        assert_eq!(st.committed, 2);
+        assert_eq!(st.last_committed, Some(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "monotone")]
+    fn rollback_commit_panics() {
+        let mut st = FleetState::new(cfg(), 3).unwrap();
+        st.commit(3);
+        st.commit(3);
+    }
+
+    #[test]
+    fn bad_quorum_rejected() {
+        let mut c = cfg();
+        c.quorum = 5;
+        assert!(FleetState::new(c, 3).is_err());
+        c.quorum = 0;
+        assert!(FleetState::new(c, 3).is_err());
+    }
+}

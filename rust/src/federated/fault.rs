@@ -1,0 +1,257 @@
+//! Chaos harness: deterministic, seeded fault injection for the fleet.
+//!
+//! A [`FaultPlan`] is a *pure function* `(worker, round) → Fault` —
+//! no mutable schedule state, so two runs with the same seed inject
+//! byte-identical fault sequences regardless of thread interleaving
+//! (the determinism-under-chaos acceptance test leans on this).  The
+//! stateful part — a crash keeps a worker offline for the whole
+//! outage window, not just the round the dice landed on — lives in
+//! the per-worker [`FaultState`] each consumer owns.
+//!
+//! Faults model the edge-fleet failure modes the paper's setting
+//! implies (devices that flake, lag, and rejoin):
+//!
+//! - **Crash** — the device goes dark for `outage` rounds, then
+//!   rejoins (the leader sees timeouts, marks it a straggler, and
+//!   re-admits it with backoff once it answers again).
+//! - **Stall** — the update arrives late: `rounds` rounds late in the
+//!   simulated fleet (virtual time), after a `millis` sleep in the
+//!   threaded fleet (wall time).  Stale-but-admissible updates are
+//!   vote-weight-discounted by the leader.
+//! - **DropUplink** — local training happens but the update vanishes.
+//! - **Corrupt** — the update is malformed (truncated layer shape);
+//!   the leader must detect it on arrival and quarantine the sender
+//!   without poisoning the round.
+//!
+//! The leader must survive *every* schedule without corrupting
+//! committed state; `rust/tests/federated_chaos.rs` sweeps the matrix.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Pcg32;
+
+/// One injected fault (or none) for a (worker, round) cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    None,
+    /// Go dark now, rejoin after `outage` rounds.
+    Crash { outage: usize },
+    /// Deliver the update late: `rounds` rounds of virtual lateness
+    /// (sim fleet) / a `millis` sleep before the uplink (thread fleet).
+    Stall { rounds: usize, millis: u64 },
+    /// Train, then never send.
+    DropUplink,
+    /// Send a malformed (truncated-layer) update.
+    Corrupt,
+    /// Derived, never scheduled directly: inside a crash outage.
+    Offline,
+}
+
+/// Per-(worker, round) fault probabilities of a seeded plan.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultRates {
+    pub crash: f32,
+    /// Rounds a crashed worker stays dark before rejoining.
+    pub crash_outage: usize,
+    pub stall: f32,
+    /// Virtual lateness of a stalled update (sim fleet).
+    pub stall_rounds: usize,
+    /// Wall-clock lateness of a stalled uplink (thread fleet).
+    pub stall_millis: u64,
+    pub drop: f32,
+    pub corrupt: f32,
+}
+
+impl FaultRates {
+    /// The hostile mix the chaos smoke + acceptance tests run: all
+    /// five failure modes live at once, frequent enough that a 20
+    /// round × dozen worker run sees each several times.
+    pub fn hostile() -> FaultRates {
+        FaultRates {
+            crash: 0.03,
+            crash_outage: 3,
+            stall: 0.08,
+            stall_rounds: 1,
+            stall_millis: 25,
+            drop: 0.05,
+            corrupt: 0.015,
+        }
+    }
+}
+
+/// Deterministic fault schedule. See module docs.
+#[derive(Clone, Debug)]
+pub enum FaultPlan {
+    /// No faults ever (the clean schedule).
+    None,
+    /// Seeded i.i.d. draws per (worker, round) cell.
+    Seeded { seed: u64, rates: FaultRates },
+    /// Explicit (worker, round) → fault script (targeted tests).
+    Scripted(BTreeMap<(usize, usize), Fault>),
+}
+
+impl FaultPlan {
+    /// Hostile seeded plan (see [`FaultRates::hostile`]).
+    pub fn hostile(seed: u64) -> FaultPlan {
+        FaultPlan::Seeded { seed, rates: FaultRates::hostile() }
+    }
+
+    /// Build from a script of (worker, round, fault) triples.
+    pub fn scripted<I: IntoIterator<Item = (usize, usize, Fault)>>(it: I) -> FaultPlan {
+        FaultPlan::Scripted(it.into_iter().map(|(w, r, f)| ((w, r), f)).collect())
+    }
+
+    /// CLI spec: `none` | `hostile` (seeded from `--chaos-seed`).
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        match spec {
+            "none" => Ok(FaultPlan::None),
+            "hostile" => Ok(FaultPlan::hostile(seed)),
+            other => bail!("unknown chaos spec '{other}' (none|hostile)"),
+        }
+    }
+
+    /// The scheduled fault for one (worker, round) cell — pure; crash
+    /// windows are applied by [`FaultState::effective`].
+    pub fn action(&self, worker: usize, round: usize) -> Fault {
+        match self {
+            FaultPlan::None => Fault::None,
+            FaultPlan::Scripted(map) => {
+                map.get(&(worker, round)).copied().unwrap_or(Fault::None)
+            }
+            FaultPlan::Seeded { seed, rates } => {
+                // One independent PCG stream per cell: the draw is a
+                // pure function of (seed, worker, round), so arrival
+                // order / thread interleaving cannot perturb it.
+                let stream = ((worker as u64) << 32) | round as u64;
+                let mut g = Pcg32::with_stream(seed ^ 0xC4A0_5FA1, stream);
+                let p = g.next_f32();
+                let mut lo = 0.0f32;
+                if p < lo + rates.crash {
+                    return Fault::Crash { outage: rates.crash_outage.max(1) };
+                }
+                lo += rates.crash;
+                if p < lo + rates.stall {
+                    return Fault::Stall {
+                        rounds: rates.stall_rounds,
+                        millis: rates.stall_millis,
+                    };
+                }
+                lo += rates.stall;
+                if p < lo + rates.drop {
+                    return Fault::DropUplink;
+                }
+                lo += rates.drop;
+                if p < lo + rates.corrupt {
+                    return Fault::Corrupt;
+                }
+                Fault::None
+            }
+        }
+    }
+}
+
+/// Per-worker fault bookkeeping: turns the pure schedule into
+/// effective faults by holding crash outages open across rounds.
+#[derive(Clone, Debug, Default)]
+pub struct FaultState {
+    /// Offline while `round < offline_until`.
+    offline_until: usize,
+}
+
+impl FaultState {
+    /// Effective fault for this worker at `round`: [`Fault::Offline`]
+    /// inside a crash window (including the crash round itself),
+    /// otherwise the scheduled action.
+    pub fn effective(&mut self, plan: &FaultPlan, worker: usize, round: usize) -> Fault {
+        if round < self.offline_until {
+            return Fault::Offline;
+        }
+        match plan.action(worker, round) {
+            Fault::Crash { outage } => {
+                self.offline_until = round + outage.max(1);
+                Fault::Offline
+            }
+            f => f,
+        }
+    }
+
+    pub fn is_offline(&self, round: usize) -> bool {
+        round < self.offline_until
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_plan_never_faults() {
+        let plan = FaultPlan::None;
+        let mut st = FaultState::default();
+        for w in 0..8 {
+            for r in 0..50 {
+                assert_eq!(st.effective(&plan, w, r), Fault::None);
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_order_free() {
+        let plan = FaultPlan::hostile(99);
+        // same cell, queried in any order, any number of times
+        let probe = plan.action(3, 17);
+        for _ in 0..3 {
+            assert_eq!(plan.action(3, 17), probe);
+        }
+        let forward: Vec<Fault> =
+            (0..40).flat_map(|r| (0..6).map(move |w| (w, r))).map(|(w, r)| plan.action(w, r)).collect();
+        let backward: Vec<Fault> = (0..40)
+            .rev()
+            .flat_map(|r| (0..6).rev().map(move |w| (w, r)))
+            .map(|(w, r)| plan.action(w, r))
+            .collect();
+        let mut back_sorted = backward;
+        back_sorted.reverse();
+        assert_eq!(forward, back_sorted);
+    }
+
+    #[test]
+    fn hostile_plan_hits_every_fault_kind() {
+        let plan = FaultPlan::hostile(7);
+        let mut seen = [false; 4]; // crash, stall, drop, corrupt
+        for w in 0..24 {
+            for r in 0..40 {
+                match plan.action(w, r) {
+                    Fault::Crash { .. } => seen[0] = true,
+                    Fault::Stall { .. } => seen[1] = true,
+                    Fault::DropUplink => seen[2] = true,
+                    Fault::Corrupt => seen[3] = true,
+                    _ => {}
+                }
+            }
+        }
+        assert_eq!(seen, [true; 4], "hostile mix must exercise all faults");
+    }
+
+    #[test]
+    fn crash_window_holds_then_rejoins() {
+        let plan = FaultPlan::scripted([(0, 2, Fault::Crash { outage: 3 })]);
+        let mut st = FaultState::default();
+        assert_eq!(st.effective(&plan, 0, 0), Fault::None);
+        assert_eq!(st.effective(&plan, 0, 1), Fault::None);
+        assert_eq!(st.effective(&plan, 0, 2), Fault::Offline); // crash round
+        assert_eq!(st.effective(&plan, 0, 3), Fault::Offline);
+        assert_eq!(st.effective(&plan, 0, 4), Fault::Offline);
+        assert_eq!(st.effective(&plan, 0, 5), Fault::None); // rejoined
+        assert!(!st.is_offline(5));
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert!(matches!(FaultPlan::parse("none", 1).unwrap(), FaultPlan::None));
+        assert!(matches!(FaultPlan::parse("hostile", 1).unwrap(), FaultPlan::Seeded { .. }));
+        assert!(FaultPlan::parse("meteor", 1).is_err());
+    }
+}

@@ -1,15 +1,53 @@
-//! Federated leader: shard routing, round orchestration, sign-vote
-//! aggregation, quorum handling.
+//! Federated leader: shard routing, async round orchestration,
+//! word-level sign-vote aggregation, quorum + staleness + chaos
+//! handling.
+//!
+//! One leader drives one of two transports behind the same round
+//! loop and the same [`FleetState`] bookkeeping:
+//!
+//! - **Threads** — every worker is a real engine thread with a
+//!   private shard (small fleets; wall-clock `recv_timeout`
+//!   deadlines, collection retries below quorum);
+//! - **Sim** — the virtual-time [`SimFleet`] with shard leaders
+//!   (10³-worker fleets; deterministic, so the chaos acceptance test
+//!   can diff two same-seed runs bit-for-bit).
+//!
+//! Collection rules (the seed's lockstep loop had three bugs, all
+//! pinned by tests now):
+//! - only *admitted* updates count toward the round — a stale,
+//!   malformed, or duplicate receive never burns a live worker's
+//!   collection slot;
+//! - an update is validated on arrival against **every** layer shape;
+//!   a malformed sender is quarantined before any of its votes touch
+//!   the tally, and a round commits all-or-nothing;
+//! - fault injection is the seeded [`FaultPlan`] consulted inside the
+//!   workers — there is no leader-side "kill worker 0" test hook.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use super::async_round::{Admission, AsyncConfig, FleetState, Health, RoundStat};
+use super::fault::FaultPlan;
+use super::sim::SimFleet;
+use super::tally::{count_votes_words, LayerVotes};
 use super::worker::{spawn_worker, RoundMsg, SignUpdate, WorkerHandle};
-use super::sign_vote;
+use crate::bitops::{BitMatrix, Pool};
 use crate::data::build;
 use crate::models::{get, lower};
 use crate::util::rng::Pcg32;
+
+/// Which transport carries the rounds.
+#[derive(Clone, Debug)]
+pub enum FleetMode {
+    /// Real engine threads, one per worker (small fleets).
+    Threads,
+    /// Virtual-time simulated fleet with shard leaders (large fleets).
+    Sim { shards: usize, noise_log2: u32 },
+}
 
 #[derive(Clone, Debug)]
 pub struct FedConfig {
@@ -25,15 +63,58 @@ pub struct FedConfig {
     pub fed_lr: f32,
     pub seed: u64,
     pub samples_per_worker: usize,
-    /// Test hook: drop this worker id after round 0 (dropout test).
-    pub drop_worker: Option<usize>,
+    /// Async round knobs: quorum, staleness, deadline, backoff.
+    pub async_cfg: AsyncConfig,
+    /// Chaos schedule every worker consults (None = clean).
+    pub plan: FaultPlan,
+    pub mode: FleetMode,
+    /// Pool threads for the root tally (0 = auto).
+    pub tally_threads: usize,
+}
+
+impl FedConfig {
+    /// Defaults for a fleet of `workers`: majority quorum, staleness
+    /// 2, no chaos; engine threads up to [`FedConfig::SIM_THRESHOLD`]
+    /// workers, the simulated fleet beyond.
+    pub fn fleet(workers: usize) -> FedConfig {
+        FedConfig {
+            workers,
+            rounds: 5,
+            local_steps: 8,
+            batch: 32,
+            model: "mlp_mini".into(),
+            dataset: "syn-mnist64".into(),
+            lr: 0.002,
+            fed_lr: 0.01,
+            seed: 42,
+            samples_per_worker: 256,
+            async_cfg: AsyncConfig::majority(workers),
+            plan: FaultPlan::None,
+            mode: if workers > Self::SIM_THRESHOLD {
+                FleetMode::Sim { shards: 8, noise_log2: 4 }
+            } else {
+                FleetMode::Threads
+            },
+            tally_threads: 0,
+        }
+    }
+
+    /// Fleets past this size default to the simulated transport.
+    pub const SIM_THRESHOLD: usize = 64;
 }
 
 #[derive(Debug)]
 pub struct FedResult {
+    pub workers: usize,
+    pub rounds_attempted: usize,
     pub rounds_committed: usize,
+    /// Mean admitted local loss per round (NaN for stalled rounds).
     pub round_losses: Vec<f32>,
+    /// Full per-round telemetry (what the chaos tests + bench read).
+    pub round_stats: Vec<RoundStat>,
     pub final_weights: Vec<Vec<f32>>,
+    /// Workers permanently expelled for malformed updates.
+    pub quarantined: usize,
     /// Uplink bytes per worker per round (1 bit/weight + header).
     pub uplink_bytes_per_round: usize,
     /// vs f32 weight upload (the federated communication saving).
@@ -43,22 +124,31 @@ pub struct FedResult {
 impl FedResult {
     pub fn summary(&self) -> String {
         format!(
-            "federated: {} rounds committed | loss {:.3} -> {:.3} | uplink {:.1} KiB/worker/round ({}x smaller than f32)",
+            "federated: {}/{} rounds committed ({} workers) | loss {:.3} -> {:.3} | uplink {:.1} KiB/worker/round ({}x smaller than f32) | {} quarantined",
             self.rounds_committed,
-            self.round_losses.first().unwrap_or(&f32::NAN),
-            self.round_losses.last().unwrap_or(&f32::NAN),
+            self.rounds_attempted,
+            self.workers,
+            self.round_losses.iter().find(|l| l.is_finite()).unwrap_or(&f32::NAN),
+            self.round_losses.iter().rev().find(|l| l.is_finite()).unwrap_or(&f32::NAN),
             self.uplink_bytes_per_round as f64 / 1024.0,
-            self.uplink_reduction.round()
+            self.uplink_reduction.round(),
+            self.quarantined,
         )
     }
 }
 
+enum Transport {
+    Threads { handles: Vec<WorkerHandle>, rx_up: Receiver<Result<SignUpdate, usize>> },
+    Sim(Box<SimFleet>),
+}
+
 pub struct Leader {
     cfg: FedConfig,
-    handles: Vec<WorkerHandle>,
-    rx_up: Receiver<Result<SignUpdate, usize>>,
+    transport: Transport,
+    fleet: FleetState,
+    pool: Pool,
     weights: Vec<Vec<f32>>,
-    /// (rows, cols) per weight layer, for vote shape checks.
+    /// (rows, cols) per weight layer, for on-arrival validation.
     shapes: Vec<(usize, usize)>,
 }
 
@@ -67,6 +157,7 @@ impl Leader {
         if cfg.workers == 0 {
             bail!("need at least one worker");
         }
+        cfg.async_cfg.validate(cfg.workers)?;
         let graph = lower(&get(&cfg.model)?)?;
         // Global init: same scheme as the engines (leader owns w_0).
         let mut rng = Pcg32::new(cfg.seed);
@@ -80,143 +171,331 @@ impl Leader {
             weights.push(vec![0.0; node.channels]);
             shapes.push((1, node.channels));
         }
+        let n_weights: usize = weights.iter().map(Vec::len).sum();
 
-        // Shard routing: contiguous, disjoint, exactly covering the
-        // fleet (invariant tested below).
-        let total = cfg.samples_per_worker * cfg.workers;
-        let ds = build(&cfg.dataset, total, 0, cfg.seed)?;
-        let k = ds.sample_elems();
-
-        let (tx_up, rx_up): (Sender<Result<SignUpdate, usize>>, _) = channel();
-        let mut handles = Vec::new();
-        for wid in 0..cfg.workers {
-            let lo = wid * cfg.samples_per_worker;
-            let hi = lo + cfg.samples_per_worker;
-            let shard_x = ds.train_x[lo * k..hi * k].to_vec();
-            let shard_y = ds.train_y[lo..hi].to_vec();
-            handles.push(spawn_worker(
-                wid,
-                graph.clone(),
+        let fleet = FleetState::new(cfg.async_cfg, cfg.workers)?;
+        let transport = match cfg.mode {
+            FleetMode::Sim { shards, noise_log2 } => Transport::Sim(Box::new(SimFleet::new(
+                &graph,
                 cfg.batch,
-                shard_x,
-                shard_y,
-                cfg.seed ^ (wid as u64 + 1) * 0x9e37,
-                tx_up.clone(),
-            ));
-        }
-        Ok(Leader { cfg, handles, rx_up, weights, shapes })
-    }
-
-    /// Quorum: strict majority of the configured fleet.
-    fn quorum(&self) -> usize {
-        self.cfg.workers / 2 + 1
+                &cfg.dataset,
+                cfg.samples_per_worker,
+                cfg.seed,
+                cfg.workers,
+                shards,
+                noise_log2,
+                cfg.async_cfg,
+                cfg.plan.clone(),
+                n_weights,
+                weights.len(),
+            )?)),
+            FleetMode::Threads => {
+                // Shard routing: contiguous, disjoint, exactly
+                // covering the fleet (invariant tested below).
+                let total = cfg.samples_per_worker * cfg.workers;
+                let ds = build(&cfg.dataset, total, 0, cfg.seed)?;
+                let k = ds.sample_elems();
+                let plan = Arc::new(cfg.plan.clone());
+                let (tx_up, rx_up): (Sender<Result<SignUpdate, usize>>, _) = channel();
+                let mut handles = Vec::new();
+                for wid in 0..cfg.workers {
+                    let lo = wid * cfg.samples_per_worker;
+                    let hi = lo + cfg.samples_per_worker;
+                    handles.push(spawn_worker(
+                        wid,
+                        graph.clone(),
+                        cfg.batch,
+                        ds.train_x[lo * k..hi * k].to_vec(),
+                        ds.train_y[lo..hi].to_vec(),
+                        cfg.seed ^ (wid as u64 + 1) * 0x9e37,
+                        tx_up.clone(),
+                        plan.clone(),
+                    ));
+                }
+                Transport::Threads { handles, rx_up }
+            }
+        };
+        let pool = Pool::new(cfg.tally_threads);
+        Ok(Leader { cfg, transport, fleet, pool, weights, shapes })
     }
 
     pub fn run(&mut self) -> Result<FedResult> {
+        let quorum = self.cfg.async_cfg.quorum;
         let mut round_losses = Vec::new();
-        let mut committed = 0usize;
-        let mut alive: Vec<bool> = vec![true; self.handles.len()];
+        let mut round_stats: Vec<RoundStat> = Vec::new();
 
         for round in 0..self.cfg.rounds {
-            // broadcast
-            for h in &self.handles {
-                if !alive[h.id] {
-                    continue;
+            let reachable = match &self.transport {
+                Transport::Threads { .. } => self.fleet.reachable(),
+                Transport::Sim(f) => f.reachable(),
+            };
+            if reachable < quorum {
+                // no future round can commit: graceful degradation,
+                // committed state stays exactly as it is
+                break;
+            }
+            let t0 = Instant::now();
+            let (votes, mut stat) = match &mut self.transport {
+                Transport::Sim(f) => {
+                    let reports =
+                        f.round(round, &self.weights, self.cfg.local_steps, self.cfg.lr)?;
+                    let mut votes: Vec<LayerVotes> = self
+                        .shapes
+                        .iter()
+                        .map(|&(r, c)| LayerVotes::zeros(r, c))
+                        .collect();
+                    let mut stat = empty_stat(round);
+                    for rep in &reports {
+                        for (v, pv) in votes.iter_mut().zip(&rep.votes) {
+                            v.merge(pv);
+                        }
+                        stat.admitted += rep.admitted;
+                        stat.fresh += rep.fresh;
+                        stat.stale += rep.stale;
+                        stat.timeouts += rep.timeouts;
+                        stat.quarantined += rep.quarantined;
+                        stat.uplink_bytes += rep.uplink_bytes;
+                        stat.mean_loss += rep.loss_sum;
+                    }
+                    stat.mean_loss /= stat.admitted.max(1) as f32;
+                    (votes, stat)
                 }
-                let msg = RoundMsg::Work {
+                Transport::Threads { handles, rx_up } => collect_threaded(
+                    handles,
+                    rx_up,
+                    &mut self.fleet,
+                    &self.shapes,
+                    &self.pool,
+                    &self.weights,
                     round,
-                    weights: self.weights.clone(),
-                    local_steps: self.cfg.local_steps,
-                    lr: self.cfg.lr,
-                };
-                if h.tx.send(msg).is_err() {
-                    alive[h.id] = false;
-                }
-            }
-            // collect (workers that died mid-round count as dropouts)
-            let expected = alive.iter().filter(|&&a| a).count();
-            let mut updates: Vec<SignUpdate> = Vec::new();
-            for _ in 0..expected {
-                match self.rx_up.recv() {
-                    Ok(Ok(u)) if u.round == round => updates.push(u),
-                    Ok(Ok(_stale)) => {}
-                    Ok(Err(wid)) => alive[wid] = false,
-                    Err(_) => break,
-                }
-            }
-            if updates.len() < self.quorum() {
-                // below quorum: stall the round, never corrupt state
-                round_losses.push(f32::NAN);
-                continue;
-            }
-            let mean_loss =
-                updates.iter().map(|u| u.mean_loss).sum::<f32>() / updates.len() as f32;
-            round_losses.push(mean_loss);
+                    &self.cfg,
+                ),
+            };
 
-            // sign-vote aggregation per layer
-            for (li, (_r, n)) in self.shapes.iter().enumerate() {
-                let layer_updates: Vec<&crate::bitops::BitMatrix> =
-                    updates.iter().map(|u| &u.deltas[li]).collect();
-                for u in &layer_updates {
-                    if u.cols != *n {
-                        bail!("worker sent malformed update (layer {li})");
+            if stat.admitted >= quorum {
+                // all layers were validated at admission: applying is
+                // infallible, so the commit is all-or-nothing
+                for (li, votes) in votes.iter().enumerate() {
+                    let w = &mut self.weights[li];
+                    for (i, v) in votes.signs().into_iter().enumerate() {
+                        if v != 0 {
+                            w[i] = (w[i] + self.cfg.fed_lr * v as f32).clamp(-1.0, 1.0);
+                        }
                     }
                 }
-                let vote = sign_vote(&layer_updates);
-                let w = &mut self.weights[li];
-                for (i, &v) in vote.iter().enumerate() {
-                    if v != 0 {
-                        w[i] = (w[i] + self.cfg.fed_lr * v as f32).clamp(-1.0, 1.0);
-                    }
-                }
+                self.fleet.commit(round);
+                stat.committed = true;
+            } else {
+                stat.mean_loss = f32::NAN;
             }
-            committed += 1;
-
-            // test hook: simulate a straggler death
-            if self.cfg.drop_worker == Some(round) {
-                let victim = 0;
-                let _ = self.handles[victim].tx.send(RoundMsg::Shutdown);
-                alive[victim] = false;
-            }
+            stat.commit_ms = t0.elapsed().as_secs_f64() * 1e3;
+            round_losses.push(stat.mean_loss);
+            round_stats.push(stat);
         }
 
-        for h in &self.handles {
-            let _ = h.tx.send(RoundMsg::Shutdown);
-        }
-        while let Some(h) = self.handles.pop() {
-            let _ = h.join.join();
+        if let Transport::Threads { handles, .. } = &mut self.transport {
+            for h in handles.iter() {
+                let _ = h.tx.send(RoundMsg::Shutdown);
+            }
+            while let Some(h) = handles.pop() {
+                let _ = h.join.join();
+            }
         }
 
         let n_weights: usize = self.weights.iter().map(Vec::len).sum();
         let uplink = n_weights / 8 + 16 * self.weights.len();
+        let quarantined = match &self.transport {
+            Transport::Sim(_) => round_stats.iter().map(|s| s.quarantined).sum(),
+            Transport::Threads { .. } => (0..self.cfg.workers)
+                .filter(|&w| self.fleet.health(w) == Health::Quarantined)
+                .count(),
+        };
         Ok(FedResult {
-            rounds_committed: committed,
+            workers: self.cfg.workers,
+            rounds_attempted: round_stats.len(),
+            rounds_committed: self.fleet.committed,
             round_losses,
+            round_stats,
             final_weights: self.weights.clone(),
+            quarantined,
             uplink_bytes_per_round: uplink,
             uplink_reduction: (n_weights * 4) as f64 / uplink as f64,
         })
     }
 }
 
+fn empty_stat(round: usize) -> RoundStat {
+    RoundStat {
+        round,
+        committed: false,
+        admitted: 0,
+        fresh: 0,
+        stale: 0,
+        retries: 0,
+        timeouts: 0,
+        quarantined: 0,
+        mean_loss: 0.0,
+        uplink_bytes: 0,
+        commit_ms: 0.0,
+    }
+}
+
+/// One threaded round: broadcast to the admissible set, then collect
+/// until deadline — retrying (deadline extensions) below quorum —
+/// admitting fresh and bounded-stale updates with discounted weights.
+#[allow(clippy::too_many_arguments)]
+fn collect_threaded(
+    handles: &[WorkerHandle],
+    rx_up: &Receiver<Result<SignUpdate, usize>>,
+    fleet: &mut FleetState,
+    shapes: &[(usize, usize)],
+    pool: &Pool,
+    weights: &[Vec<f32>],
+    round: usize,
+    cfg: &FedConfig,
+) -> (Vec<LayerVotes>, RoundStat) {
+    let mut stat = empty_stat(round);
+    let bset = fleet.broadcast_set(round);
+    let w_arc = Arc::new(weights.to_vec());
+    for &w in &bset {
+        let msg = RoundMsg::Work {
+            round,
+            weights: w_arc.clone(),
+            local_steps: cfg.local_steps,
+            lr: cfg.lr,
+        };
+        if handles[w].tx.send(msg).is_err() {
+            fleet.mark_dead(w);
+        }
+    }
+
+    // freshest admitted update per worker: (staleness, weight, update)
+    let mut got: BTreeMap<usize, (usize, u32, SignUpdate)> = BTreeMap::new();
+    // workers whose *this-round* answer arrived (incl. corrupt/dead):
+    // once every broadcast-to worker answered, nothing else can come
+    let mut answered: Vec<bool> = vec![false; handles.len()];
+    let mut deadline = Instant::now() + Duration::from_millis(cfg.async_cfg.deadline_ms);
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            // below quorum: stall and retry (extend the collection
+            // window) within the bounded retry budget
+            if got.len() < cfg.async_cfg.quorum && stat.retries < cfg.async_cfg.retry_budget
+            {
+                stat.retries += 1;
+                deadline = Instant::now() + Duration::from_millis(cfg.async_cfg.deadline_ms);
+            } else {
+                break;
+            }
+        }
+        let wait = deadline.saturating_duration_since(now);
+        match rx_up.recv_timeout(wait) {
+            Err(RecvTimeoutError::Timeout) => continue, // deadline check above
+            Err(RecvTimeoutError::Disconnected) => break,
+            Ok(Err(wid)) => {
+                fleet.mark_dead(wid);
+                answered[wid] = true;
+            }
+            Ok(Ok(u)) => {
+                let wid = u.worker_id;
+                if wid >= handles.len() {
+                    continue;
+                }
+                // satellite fix: validate EVERY layer on arrival; a
+                // malformed sender is quarantined before any of its
+                // votes can reach the tally
+                let valid = u.deltas.len() == shapes.len()
+                    && u.deltas
+                        .iter()
+                        .zip(shapes)
+                        .all(|(d, &(r, c))| d.rows == r && d.cols == c);
+                if !valid {
+                    fleet.quarantine(wid);
+                    got.remove(&wid); // discard anything it sent before
+                    stat.quarantined += 1;
+                    answered[wid] = true;
+                    continue;
+                }
+                if u.round == round {
+                    answered[wid] = true;
+                }
+                match fleet.admit(wid, round, u.round) {
+                    Admission::Admitted { weight, staleness } => {
+                        fleet.on_uplink_ok(wid);
+                        let fresher = match got.get(&wid) {
+                            Some((s, _, _)) => staleness < *s,
+                            None => true,
+                        };
+                        if fresher {
+                            got.insert(wid, (staleness, weight, u));
+                        }
+                    }
+                    // satellite fix: inadmissible receives burn no
+                    // collection slot — the loop runs on the deadline
+                    Admission::TooStale | Admission::Rejected => {}
+                }
+            }
+        }
+        // every broadcast-to worker answered or is permanently out:
+        // nothing else can arrive for this round
+        let done = bset.iter().all(|&w| {
+            answered[w]
+                || !matches!(fleet.health(w), Health::Active | Health::Straggler { .. })
+        });
+        if done {
+            break;
+        }
+    }
+
+    // broadcast-to workers that never answered this round time out
+    for &w in &bset {
+        if !answered[w]
+            && matches!(fleet.health(w), Health::Active | Health::Straggler { .. })
+        {
+            fleet.on_timeout(w, round);
+            stat.timeouts += 1;
+        }
+    }
+
+    stat.admitted = got.len();
+    stat.fresh = got.values().filter(|(s, _, _)| *s == 0).count();
+    stat.stale = stat.admitted - stat.fresh;
+    stat.uplink_bytes = got.values().map(|(_, _, u)| u.uplink_bytes()).sum();
+    stat.mean_loss = got.values().map(|(_, _, u)| u.mean_loss).sum::<f32>()
+        / stat.admitted.max(1) as f32;
+
+    // word-level weighted tally per layer (root pool)
+    let votes = shapes
+        .iter()
+        .enumerate()
+        .map(|(li, &(r, c))| {
+            if got.is_empty() {
+                return LayerVotes::zeros(r, c);
+            }
+            let refs: Vec<&BitMatrix> = got.values().map(|(_, _, u)| &u.deltas[li]).collect();
+            let ws: Vec<u32> = got.values().map(|(_, w, _)| *w).collect();
+            count_votes_words(&refs, &ws, pool)
+        })
+        .collect();
+    (votes, stat)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::federated::fault::Fault;
 
     fn small_cfg() -> FedConfig {
-        FedConfig {
-            workers: 3,
-            rounds: 3,
-            local_steps: 4,
-            batch: 16,
-            model: "mlp_mini".into(),
-            dataset: "syn-mnist64".into(),
-            lr: 0.003,
-            fed_lr: 0.02,
-            seed: 7,
-            samples_per_worker: 64,
-            drop_worker: None,
-        }
+        let mut cfg = FedConfig::fleet(3);
+        cfg.rounds = 3;
+        cfg.local_steps = 4;
+        cfg.batch = 16;
+        cfg.lr = 0.003;
+        cfg.fed_lr = 0.02;
+        cfg.seed = 7;
+        cfg.samples_per_worker = 64;
+        cfg.async_cfg.deadline_ms = 2000;
+        cfg
     }
 
     #[test]
@@ -231,25 +510,30 @@ mod tests {
             r.round_losses
         );
         assert!(r.uplink_reduction > 25.0, "{}", r.uplink_reduction);
+        assert!(r.round_stats.iter().all(|s| s.committed && s.fresh == 3));
     }
 
     #[test]
-    fn survives_worker_dropout_above_quorum() {
+    fn survives_worker_crash_above_quorum() {
         let mut cfg = small_cfg();
-        cfg.drop_worker = Some(0); // kill one of three after round 0
-        cfg.rounds = 3;
+        // worker 0 crashes at round 1 and never comes back
+        cfg.plan = FaultPlan::scripted([(0, 1, Fault::Crash { outage: 99 })]);
+        cfg.async_cfg.deadline_ms = 400;
         let mut l = Leader::new(cfg).unwrap();
         let r = l.run().unwrap();
         // 2 of 3 still meets quorum (2): all rounds commit
         assert_eq!(r.rounds_committed, 3);
+        assert!(r.round_stats[1].timeouts >= 1);
     }
 
     #[test]
     fn below_quorum_stalls_but_does_not_corrupt() {
         let mut cfg = small_cfg();
         cfg.workers = 1;
-        cfg.drop_worker = Some(0); // sole worker dies after round 0
-        cfg.rounds = 3;
+        cfg.async_cfg = AsyncConfig::majority(1);
+        cfg.async_cfg.deadline_ms = 300;
+        cfg.async_cfg.retry_budget = 0;
+        cfg.plan = FaultPlan::scripted([(0, 1, Fault::Crash { outage: 99 })]);
         let mut l = Leader::new(cfg).unwrap();
         let w_before_len: usize = l.weights.iter().map(Vec::len).sum();
         let r = l.run().unwrap();
@@ -257,9 +541,27 @@ mod tests {
         assert!(r.rounds_committed < 3);
         let w_after_len: usize = r.final_weights.iter().map(Vec::len).sum();
         assert_eq!(w_before_len, w_after_len);
-        // weights stay clipped
+        // weights stay clipped; stalled rounds report NaN loss
         for w in &r.final_weights {
             assert!(w.iter().all(|v| v.abs() <= 1.0));
+        }
+        assert!(r.round_stats.iter().any(|s| !s.committed));
+    }
+
+    #[test]
+    fn corrupt_worker_is_quarantined_and_cannot_poison() {
+        let mut cfg = small_cfg();
+        // worker 1 uplinks a malformed update in round 0 — the seed's
+        // leader would have bailed mid-aggregation on this
+        cfg.plan = FaultPlan::scripted([(1, 0, Fault::Corrupt)]);
+        cfg.async_cfg.deadline_ms = 2000;
+        let mut l = Leader::new(cfg).unwrap();
+        let r = l.run().unwrap();
+        assert_eq!(r.quarantined, 1);
+        // the other two still make quorum every round
+        assert_eq!(r.rounds_committed, 3);
+        for w in &r.final_weights {
+            assert!(w.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
         }
     }
 
@@ -270,6 +572,22 @@ mod tests {
         cfg.rounds = 4;
         let mut l = Leader::new(cfg).unwrap();
         let r = l.run().unwrap();
+        for w in &r.final_weights {
+            assert!(w.iter().all(|v| v.abs() <= 1.0));
+        }
+    }
+
+    #[test]
+    fn sim_mode_commits_and_matches_shapes() {
+        let mut cfg = small_cfg();
+        cfg.workers = 40;
+        cfg.async_cfg = AsyncConfig::majority(40);
+        cfg.mode = FleetMode::Sim { shards: 4, noise_log2: 4 };
+        cfg.samples_per_worker = 64;
+        let mut l = Leader::new(cfg).unwrap();
+        let r = l.run().unwrap();
+        assert_eq!(r.rounds_committed, 3);
+        assert!(r.round_stats.iter().all(|s| s.fresh == 40));
         for w in &r.final_weights {
             assert!(w.iter().all(|v| v.abs() <= 1.0));
         }

@@ -1,30 +1,66 @@
-//! Federated edge-fleet coordinator.
+//! Fault-tolerant federated edge-fleet coordinator.
 //!
 //! The paper motivates on-device training via federated learning
-//! (Sec. 1, refs [13], [14]); this module makes that concrete: a
-//! leader distributes weight snapshots to a fleet of simulated edge
-//! workers (threads), each of which trains the *proposed* low-memory
-//! step on its private shard and sends back a **bit-packed sign
-//! update** — 1 bit per weight, the communication-side twin of the
-//! paper's binary weight gradients (and of signSGD [9], which the
+//! (Sec. 1, refs [13], [14]); this module makes that concrete — and
+//! production-shaped.  A leader distributes weight snapshots to a
+//! fleet of edge workers, each of which trains the *proposed*
+//! low-memory step on its private shard and uplinks a **bit-packed
+//! sign update** — 1 bit per weight, the communication-side twin of
+//! the paper's binary weight gradients (and of signSGD [9], which the
 //! paper cites as the gradient-quantization precedent).
 //!
-//! Aggregation is **majority sign vote** with a fixed step size:
+//! Aggregation is a **staleness-weighted majority sign vote** with a
+//! fixed step size:
 //!
 //! ```text
-//! w ← clip(w − η_fed · sign(Σ_k sign(Δw_k)))   where votes ≥ quorum
+//! w ← clip(w + η_fed · sign(Σ_k ω_k · sign(Δw_k)))   once votes ≥ quorum
 //! ```
 //!
-//! Invariants (tested here + property-tested in rust/tests/):
-//! - every shard is routed to exactly one worker per round;
-//! - aggregation is permutation-invariant in worker order;
-//! - worker dropout below quorum stalls the round rather than
-//!   corrupting state; committed rounds never roll back.
+//! where `ω_k` is an integer discount for admitted-but-stale updates
+//! ([`vote_weight`]).  The tally itself is word-level — stack, word
+//! transpose, SIMD popcount ([`tally`]) — so a 10³-worker round
+//! aggregates in milliseconds rather than a per-bit scalar sweep.
+//!
+//! The moving parts:
+//! - [`fault`] — deterministic seeded chaos: crash/rejoin, stall,
+//!   dropped uplinks, corrupt updates ([`FaultPlan`]);
+//! - [`async_round`] — bounded-staleness admission, quorum commits,
+//!   straggler backoff, quarantine ([`FleetState`]);
+//! - [`tally`] — word-level weighted vote counts, associative across
+//!   shard leaders ([`LayerVotes`]);
+//! - [`sim`] — the virtual-time 10³-worker fleet with shard-leader
+//!   threads ([`SimFleet`]);
+//! - [`leader`] / [`worker`] — the threaded small-fleet transport and
+//!   the round loop both transports share.
+//!
+//! Invariants (tested here, in rust/tests/federated_chaos.rs, and
+//! property-tested in rust/tests/property.rs):
+//! - every shard is routed to exactly one worker;
+//! - aggregation is permutation-invariant in worker order, and the
+//!   word-level tally is bit-exact vs the scalar reference;
+//! - two-level (shard leader → root) tallies are bit-identical to
+//!   flat ones — counts are associative, sign-majorities are not;
+//! - malformed updates are rejected whole on arrival (every layer
+//!   validated) and their sender quarantined; rounds commit
+//!   all-or-nothing;
+//! - below quorum the round stalls (bounded retries), committed
+//!   rounds never roll back, weights stay in the unit box;
+//! - a seeded hostile chaos schedule replays bit-identically.
 
+pub mod async_round;
+pub mod fault;
 mod leader;
+pub mod sim;
+pub mod tally;
 mod worker;
 
-pub use leader::{FedConfig, FedResult, Leader};
+pub use async_round::{vote_weight, Admission, AsyncConfig, FleetState, Health, RoundStat};
+pub use fault::{Fault, FaultPlan, FaultRates, FaultState};
+pub use leader::{FedConfig, FedResult, FleetMode, Leader};
+pub use sim::{ShardReport, SimFleet};
+pub use tally::{
+    count_votes_scalar, count_votes_sharded, count_votes_words, sign_vote_words, LayerVotes,
+};
 pub use worker::{SignUpdate, WorkerHandle};
 
 use anyhow::Result;
@@ -33,8 +69,27 @@ use crate::util::cli::Args;
 
 /// `bnn-edge federated` entrypoint.
 pub fn cli(args: &Args) -> Result<()> {
+    let workers = args.usize_or("workers", 4)?;
+    let mut async_cfg = AsyncConfig::majority(workers);
+    async_cfg.quorum = args.usize_or("quorum", async_cfg.quorum)?;
+    async_cfg.max_staleness = args.usize_or("max-staleness", async_cfg.max_staleness)?;
+    async_cfg.deadline_ms = args.usize_or("deadline-ms", async_cfg.deadline_ms as usize)? as u64;
+    async_cfg.retry_budget = args.usize_or("retry-budget", async_cfg.retry_budget)?;
+    async_cfg.backoff_base = args.usize_or("backoff", async_cfg.backoff_base)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    let chaos_seed = args.usize_or("chaos-seed", seed as usize)? as u64;
+    let plan = FaultPlan::parse(&args.str_or("chaos", "none"), chaos_seed)?;
+    let sim = args.bool("sim") || workers > FedConfig::SIM_THRESHOLD;
+    let mode = if sim {
+        FleetMode::Sim {
+            shards: args.usize_or("shards", 8)?,
+            noise_log2: args.usize_or("noise-log2", 4)? as u32,
+        }
+    } else {
+        FleetMode::Threads
+    };
     let cfg = FedConfig {
-        workers: args.usize_or("workers", 4)?,
+        workers,
         rounds: args.usize_or("rounds", 5)?,
         local_steps: args.usize_or("local-steps", 8)?,
         batch: args.usize_or("batch", 32)?,
@@ -42,42 +97,41 @@ pub fn cli(args: &Args) -> Result<()> {
         dataset: args.str_or("dataset", "syn-mnist64"),
         lr: args.f64_or("lr", 0.002)? as f32,
         fed_lr: args.f64_or("fed-lr", 0.01)? as f32,
-        seed: args.usize_or("seed", 42)? as u64,
+        seed,
         samples_per_worker: args.usize_or("samples-per-worker", 256)?,
-        drop_worker: None,
+        async_cfg,
+        plan,
+        mode,
+        tally_threads: args.usize_or("threads", 0)?,
     };
     let mut leader = Leader::new(cfg)?;
     let result = leader.run()?;
+    for s in &result.round_stats {
+        println!(
+            "round {:>3}: {} admitted={} (fresh {} stale {}) timeouts={} quarantined={} retries={} loss={:.3} {:.1}ms",
+            s.round,
+            if s.committed { "commit" } else { "STALL " },
+            s.admitted,
+            s.fresh,
+            s.stale,
+            s.timeouts,
+            s.quarantined,
+            s.retries,
+            s.mean_loss,
+            s.commit_ms,
+        );
+    }
     println!("{}", result.summary());
     Ok(())
 }
 
-/// Majority sign vote over packed updates: returns ±1 per weight (0 on
-/// exact tie).  Pure function → trivially permutation-invariant; the
-/// tests pin that down anyway.
+/// Majority sign vote over packed updates: returns ±1 per weight (0
+/// on exact tie).  Scalar reference path — [`sign_vote_words`] is the
+/// word-level twin, asserted bit-exact against this.  Pure function →
+/// trivially permutation-invariant; the tests pin that down anyway.
 pub fn sign_vote(updates: &[&crate::bitops::BitMatrix]) -> Vec<i8> {
-    assert!(!updates.is_empty());
-    let rows = updates[0].rows;
-    let cols = updates[0].cols;
-    let n = rows * cols;
-    let mut tally = vec![0i32; n];
-    for u in updates {
-        assert_eq!(u.rows, rows);
-        assert_eq!(u.cols, cols);
-        for r in 0..rows {
-            for c in 0..cols {
-                tally[r * cols + c] += if u.get(r, c) > 0.0 { 1 } else { -1 };
-            }
-        }
-    }
-    tally
-        .into_iter()
-        .map(|t| match t.cmp(&0) {
-            std::cmp::Ordering::Greater => 1,
-            std::cmp::Ordering::Less => -1,
-            std::cmp::Ordering::Equal => 0,
-        })
-        .collect()
+    let weights = vec![1u32; updates.len()];
+    count_votes_scalar(updates, &weights).signs()
 }
 
 #[cfg(test)]

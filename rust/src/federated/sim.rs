@@ -1,0 +1,541 @@
+//! Simulated fleet: 10³+ workers without 10³ engines or threads.
+//!
+//! A thousand real `ProposedTrainer`s would blow the memory budget
+//! and measure thread-scheduler noise, not aggregation.  What the
+//! tentpole actually needs at that scale is (a) a realistic *vote
+//! distribution* per round and (b) the real admission / tally /
+//! commit path under chaos.  So the sim fleet keeps **one** template
+//! trainer (a real engine training on a representative shard) and
+//! derives each worker's packed sign update from the template by
+//! flipping a seeded pseudo-random subset of bits — per-(worker,
+//! round) streams, so updates are decorrelated like real non-IID
+//! shards but reproducible bit-for-bit.
+//!
+//! Topology is two-level: workers are partitioned across **shard
+//! leaders** (one thread each per round), every shard leader owns the
+//! fault/health bookkeeping for its own slice (a worker belongs to
+//! exactly one shard, so straggler backoff and quarantine are
+//! shard-local facts) and tallies its admitted updates word-level
+//! into [`LayerVotes`].  Counts are associative, so the root merges
+//! shard reports — in shard order — and gets a tally bit-identical to
+//! a flat one.
+//!
+//! **Virtual time.**  The sim fleet never sleeps and never reads the
+//! clock: a stalled update is delivered `d` rounds later out of a
+//! small template ring buffer, a crashed worker is absent for its
+//! outage window, a timed-out worker backs off in round units.  Two
+//! runs with the same seeds are bit-identical — which is what lets
+//! the chaos acceptance test diff final weights across runs.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+
+use anyhow::{bail, Result};
+
+use super::async_round::{Admission, AsyncConfig, FleetState};
+use super::fault::{Fault, FaultPlan, FaultState};
+use super::tally::{count_votes_words, LayerVotes};
+use crate::bitops::{BitMatrix, Pool};
+use crate::data::build;
+use crate::models::Graph;
+use crate::naive::{Accel, ProposedTrainer, StepEngine};
+use crate::util::rng::Pcg32;
+
+const NOISE_SALT: u64 = 0x5EED_B175;
+
+/// What one shard leader reports to the root for one round: partial
+/// word-level vote counts over its admitted updates, plus the
+/// per-worker events the root folds into `RoundStat`.
+pub struct ShardReport {
+    pub shard: usize,
+    /// Per-layer weighted vote counts (admitted updates only).
+    pub votes: Vec<LayerVotes>,
+    pub admitted: usize,
+    pub fresh: usize,
+    pub stale: usize,
+    pub timeouts: usize,
+    pub quarantined: usize,
+    pub uplink_bytes: usize,
+    /// Sum of admitted updates' local losses (template loss of the
+    /// round each update was trained against).
+    pub loss_sum: f32,
+}
+
+/// A stalled update waiting in virtual time: reconstructed from the
+/// template ring at delivery, so nothing but three indices is stored.
+struct Pending {
+    deliver_round: usize,
+    update_round: usize,
+    local_w: usize,
+}
+
+/// One shard leader's persistent state (threads are per-round scoped;
+/// state lives here between rounds).
+struct Shard {
+    id: usize,
+    /// Global id of this shard's first worker.
+    base: usize,
+    fleet: FleetState,
+    faults: Vec<FaultState>,
+    pending: Vec<Pending>,
+}
+
+pub struct SimFleet {
+    pub workers: usize,
+    shards_n: usize,
+    noise_log2: u32,
+    seed: u64,
+    plan: FaultPlan,
+    shards: Vec<Shard>,
+    engine: ProposedTrainer,
+    shard_x: Vec<f32>,
+    shard_y: Vec<usize>,
+    batch: usize,
+    /// Template ring: (round, per-layer packed deltas, mean loss).
+    templates: VecDeque<(usize, Vec<BitMatrix>, f32)>,
+    keep_templates: usize,
+    bytes_per_update: usize,
+}
+
+impl SimFleet {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        graph: &Graph,
+        batch: usize,
+        dataset: &str,
+        samples: usize,
+        seed: u64,
+        workers: usize,
+        shards_n: usize,
+        noise_log2: u32,
+        async_cfg: AsyncConfig,
+        plan: FaultPlan,
+        n_weights: usize,
+        n_layers: usize,
+    ) -> Result<SimFleet> {
+        if workers == 0 {
+            bail!("need at least one worker");
+        }
+        let shards_n = shards_n.clamp(1, workers);
+        let ds = build(dataset, samples.max(batch), 0, seed)?;
+        let engine = ProposedTrainer::new(graph, batch, "adam", Accel::Blocked, seed ^ 0x9e37)?;
+        let chunk = workers.div_ceil(shards_n);
+        let mut shards = Vec::new();
+        let mut base = 0usize;
+        let mut sid = 0usize;
+        while base < workers {
+            let n = chunk.min(workers - base);
+            // shard-local admission bookkeeping: quorum is a *global*
+            // predicate, so shard fleets run with quorum 1 and the
+            // root sums admitted counts
+            let mut local = async_cfg;
+            local.quorum = 1;
+            shards.push(Shard {
+                id: sid,
+                base,
+                fleet: FleetState::new(local, n)?,
+                faults: vec![FaultState::default(); n],
+                pending: Vec::new(),
+            });
+            base += n;
+            sid += 1;
+        }
+        // stalled updates older than the ring are inadmissible anyway
+        let keep_templates = async_cfg.max_staleness.max(2) + 2;
+        Ok(SimFleet {
+            workers,
+            shards_n,
+            noise_log2,
+            seed,
+            plan,
+            shards,
+            engine,
+            shard_x: ds.train_x,
+            shard_y: ds.train_y,
+            batch,
+            templates: VecDeque::new(),
+            keep_templates,
+            bytes_per_update: n_weights / 8 + 16 * n_layers,
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards_n
+    }
+
+    /// Workers that could still contribute fleet-wide.
+    pub fn reachable(&self) -> usize {
+        self.shards.iter().map(|s| s.fleet.reachable()).sum()
+    }
+
+    /// Run one virtual round: train the template once, then fan the
+    /// fleet out across shard-leader threads.  Reports come back in
+    /// shard order (sorted, so thread finish order cannot perturb the
+    /// merge — determinism is by construction, tallies are integer).
+    pub fn round(
+        &mut self,
+        round: usize,
+        weights: &[Vec<f32>],
+        local_steps: usize,
+        lr: f32,
+    ) -> Result<Vec<ShardReport>> {
+        // 1. template update: one real engine, real local steps
+        self.engine.load_weights(weights)?;
+        let k = self.shard_x.len() / self.shard_y.len().max(1);
+        let n_batches = (self.shard_y.len() / self.batch).max(1);
+        let mut loss_sum = 0.0f32;
+        for s in 0..local_steps {
+            let bi = (round * local_steps + s) % n_batches;
+            let x = &self.shard_x[bi * self.batch * k..(bi + 1) * self.batch * k];
+            let y = &self.shard_y[bi * self.batch..(bi + 1) * self.batch];
+            let (l, _) = self.engine.train_step(x, y, lr)?;
+            loss_sum += l;
+        }
+        let now = self.engine.weights_snapshot();
+        let deltas: Vec<BitMatrix> = now
+            .iter()
+            .zip(weights)
+            .map(|(new, old)| {
+                let d: Vec<f32> = new.iter().zip(old).map(|(a, b)| a - b).collect();
+                BitMatrix::pack(1, d.len(), &d)
+            })
+            .collect();
+        self.templates.push_back((round, deltas, loss_sum / local_steps.max(1) as f32));
+        while self.templates.len() > self.keep_templates {
+            self.templates.pop_front();
+        }
+
+        // 2. shard leaders, one scoped thread each
+        let templates = &self.templates;
+        let plan = &self.plan;
+        let (seed, noise_log2, bytes) = (self.seed, self.noise_log2, self.bytes_per_update);
+        let (tx, rx) = mpsc::channel::<ShardReport>();
+        std::thread::scope(|scope| {
+            for sh in self.shards.iter_mut() {
+                let tx = tx.clone();
+                scope.spawn(move || {
+                    let rep =
+                        shard_round(sh, round, templates, plan, seed, noise_log2, bytes);
+                    let _ = tx.send(rep);
+                });
+            }
+        });
+        drop(tx);
+        let mut reports: Vec<ShardReport> = rx.iter().collect();
+        reports.sort_by_key(|r| r.shard);
+        Ok(reports)
+    }
+}
+
+/// One shard leader's round: deliver virtually-late updates, roll the
+/// fault dice for every broadcast-to worker, tally admitted updates
+/// word-level.
+fn shard_round(
+    sh: &mut Shard,
+    round: usize,
+    templates: &VecDeque<(usize, Vec<BitMatrix>, f32)>,
+    plan: &FaultPlan,
+    seed: u64,
+    noise_log2: u32,
+    bytes_per_update: usize,
+) -> ShardReport {
+    let (_, tpl, _) = templates.back().expect("current template");
+    let mut rep = ShardReport {
+        shard: sh.id,
+        votes: tpl.iter().map(|d| LayerVotes::zeros(d.rows, d.cols)).collect(),
+        admitted: 0,
+        fresh: 0,
+        stale: 0,
+        timeouts: 0,
+        quarantined: 0,
+        uplink_bytes: 0,
+        loss_sum: 0.0,
+    };
+    // (weight, update) pairs admitted this round; tallied in one
+    // word-level sweep at the end
+    let mut admitted: Vec<(u32, Vec<BitMatrix>)> = Vec::new();
+    // workers that answered fresh this round (a fresh update
+    // supersedes a same-round stale delivery from the same worker —
+    // the threaded leader's dedupe-keep-freshest rule)
+    let mut fresh_set: Vec<bool> = vec![false; sh.faults.len()];
+
+    // snapshot the broadcast set *before* any delivery can flip a
+    // straggler back to Active mid-round
+    let bset = sh.fleet.broadcast_set(round);
+
+    // a) this round's broadcast set rolls the fault dice
+    for local_w in bset {
+        let gw = sh.base + local_w;
+        match sh.faults[local_w].effective(plan, gw, round) {
+            Fault::Offline => {
+                sh.fleet.on_timeout(local_w, round);
+                rep.timeouts += 1;
+            }
+            Fault::DropUplink => {
+                // trained, uplink vanished: leader-side it is a timeout
+                sh.fleet.on_timeout(local_w, round);
+                rep.timeouts += 1;
+            }
+            Fault::Corrupt => {
+                // malformed update detected on arrival: sender is
+                // quarantined, its votes never reach the tally
+                sh.fleet.quarantine(local_w);
+                rep.quarantined += 1;
+            }
+            Fault::Stall { rounds, .. } => {
+                sh.fleet.on_timeout(local_w, round);
+                rep.timeouts += 1;
+                sh.pending.push(Pending {
+                    deliver_round: round + rounds.max(1),
+                    update_round: round,
+                    local_w,
+                });
+            }
+            Fault::None | Fault::Crash { .. } => {
+                // (Crash is rewritten to Offline by FaultState)
+                if let Admission::Admitted { weight, .. } =
+                    sh.fleet.admit(local_w, round, round)
+                {
+                    sh.fleet.on_uplink_ok(local_w);
+                    let (_, tpl, loss) = templates.back().unwrap();
+                    fresh_set[local_w] = true;
+                    rep.admitted += 1;
+                    rep.fresh += 1;
+                    rep.uplink_bytes += bytes_per_update;
+                    rep.loss_sum += loss;
+                    admitted.push((weight, synth_update(tpl, seed, gw, round, noise_log2)));
+                }
+            }
+        }
+    }
+
+    // b) stalled updates whose virtual lateness elapsed
+    let due: Vec<Pending> = {
+        let mut keep = Vec::new();
+        let mut due = Vec::new();
+        for p in sh.pending.drain(..) {
+            if p.deliver_round <= round {
+                due.push(p);
+            } else {
+                keep.push(p);
+            }
+        }
+        sh.pending = keep;
+        due
+    };
+    for p in due {
+        if fresh_set[p.local_w] {
+            continue; // this worker already answered fresh this round
+        }
+        let Some((_, tpl, loss)) =
+            templates.iter().find(|(r, _, _)| *r == p.update_round)
+        else {
+            continue; // template evicted ⇒ older than max_staleness anyway
+        };
+        if let Admission::Admitted { weight, .. } =
+            sh.fleet.admit(p.local_w, round, p.update_round)
+        {
+            sh.fleet.on_uplink_ok(p.local_w);
+            rep.admitted += 1;
+            rep.stale += 1;
+            rep.uplink_bytes += bytes_per_update;
+            rep.loss_sum += loss;
+            admitted.push((
+                weight,
+                synth_update(tpl, seed, sh.base + p.local_w, p.update_round, noise_log2),
+            ));
+        }
+    }
+
+    // c) word-level partial tally (serial pool: parallelism is the
+    // shard threads themselves; nested pools would inline anyway)
+    if !admitted.is_empty() {
+        let pool = Pool::serial();
+        for (li, votes) in rep.votes.iter_mut().enumerate() {
+            let refs: Vec<&BitMatrix> = admitted.iter().map(|(_, u)| &u[li]).collect();
+            let ws: Vec<u32> = admitted.iter().map(|(w, _)| *w).collect();
+            *votes = count_votes_words(&refs, &ws, &pool);
+        }
+    }
+    rep
+}
+
+/// Synthesize worker `gw`'s packed update for `round`: the template's
+/// bits with a seeded pseudo-random subset flipped (flip probability
+/// 2^-noise_log2 per bit).  Pure in (seed, gw, round) — replayable —
+/// and the flip mask is truncated to each row's live bits so the
+/// packed zero-tail invariant survives.
+fn synth_update(
+    template: &[BitMatrix],
+    seed: u64,
+    gw: usize,
+    round: usize,
+    noise_log2: u32,
+) -> Vec<BitMatrix> {
+    template
+        .iter()
+        .enumerate()
+        .map(|(li, t)| {
+            let mut u = t.clone();
+            let stream = ((gw as u64) << 32) | round as u64;
+            let mut g = Pcg32::with_stream(seed ^ NOISE_SALT ^ (li as u64) << 1, stream);
+            let tail = t.cols % 64;
+            let tail_mask: u64 = if tail == 0 { !0 } else { (1u64 << tail) - 1 };
+            for r in 0..t.rows {
+                let row = &mut u.data[r * t.words_per_row..(r + 1) * t.words_per_row];
+                for (wi, w) in row.iter_mut().enumerate() {
+                    // AND of k uniform words ⇒ each bit set w.p. 2^-k
+                    let mut m = !0u64;
+                    for _ in 0..noise_log2.max(1) {
+                        m &= g.next_u64();
+                    }
+                    if wi + 1 == t.words_per_row {
+                        m &= tail_mask;
+                    }
+                    *w ^= m;
+                }
+            }
+            u
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{get, lower};
+
+    fn mini_fleet(workers: usize, shards: usize, plan: FaultPlan) -> SimFleet {
+        let graph = lower(&get("mlp_mini").unwrap()).unwrap();
+        let n_weights: usize = graph
+            .nodes
+            .iter()
+            .filter(|n| n.is_matmul())
+            .map(|n| n.w_elems + n.channels)
+            .sum();
+        let n_layers = 2 * graph.nodes.iter().filter(|n| n.is_matmul()).count();
+        SimFleet::new(
+            &graph,
+            16,
+            "syn-mnist64",
+            64,
+            5,
+            workers,
+            shards,
+            4,
+            AsyncConfig::majority(workers),
+            plan,
+            n_weights,
+            n_layers,
+        )
+        .unwrap()
+    }
+
+    fn init_weights() -> Vec<Vec<f32>> {
+        let graph = lower(&get("mlp_mini").unwrap()).unwrap();
+        let mut rng = Pcg32::new(5);
+        let mut ws = Vec::new();
+        for node in graph.nodes.iter().filter(|n| n.is_matmul()) {
+            ws.push(rng.glorot(node.fan_in, node.channels, node.w_elems));
+            ws.push(vec![0.0; node.channels]);
+        }
+        ws
+    }
+
+    #[test]
+    fn clean_round_admits_everyone_fresh() {
+        let mut fleet = mini_fleet(12, 3, FaultPlan::None);
+        let w = init_weights();
+        let reports = fleet.round(0, &w, 2, 0.002).unwrap();
+        assert_eq!(reports.len(), 3);
+        let admitted: usize = reports.iter().map(|r| r.admitted).sum();
+        let fresh: usize = reports.iter().map(|r| r.fresh).sum();
+        assert_eq!(admitted, 12);
+        assert_eq!(fresh, 12);
+        assert_eq!(fleet.reachable(), 12);
+        // merged tally counts every worker at full fresh weight
+        let mut total = reports[0].votes[0].clone();
+        for r in &reports[1..] {
+            total.merge(&r.votes[0]);
+        }
+        assert_eq!(total.total, 12 * 3); // 12 workers × weight (staleness 2 ⇒ fresh=3)
+    }
+
+    #[test]
+    fn shard_split_is_merge_equivalent() {
+        // same seed, same plan, different shard counts ⇒ identical
+        // merged tallies (counts are associative)
+        let w = init_weights();
+        let mut flat: Option<Vec<LayerVotes>> = None;
+        for shards in [1, 2, 4] {
+            let mut fleet = mini_fleet(8, shards, FaultPlan::None);
+            let reports = fleet.round(0, &w, 2, 0.002).unwrap();
+            let mut merged = reports[0].votes.clone();
+            for r in &reports[1..] {
+                for (m, v) in merged.iter_mut().zip(&r.votes) {
+                    m.merge(v);
+                }
+            }
+            match &flat {
+                None => flat = Some(merged),
+                Some(f) => assert_eq!(&merged, f, "shards={shards}"),
+            }
+        }
+    }
+
+    #[test]
+    fn stalled_update_arrives_next_round_discounted() {
+        let plan = FaultPlan::scripted([(0, 0, Fault::Stall { rounds: 1, millis: 0 })]);
+        let mut fleet = mini_fleet(4, 2, plan);
+        let w = init_weights();
+        let r0 = fleet.round(0, &w, 2, 0.002).unwrap();
+        assert_eq!(r0.iter().map(|r| r.admitted).sum::<usize>(), 3);
+        assert_eq!(r0.iter().map(|r| r.timeouts).sum::<usize>(), 1);
+        let r1 = fleet.round(1, &w, 2, 0.002).unwrap();
+        // worker 0's round-0 update delivers at round 1, stale
+        assert_eq!(r1.iter().map(|r| r.stale).sum::<usize>(), 1);
+        // staleness 1 of max 2 ⇒ weight 2, everyone else fresh at 3
+        let total: u32 = r1.iter().map(|r| r.votes[0].total).sum();
+        assert_eq!(total, 3 * 3 + 2);
+    }
+
+    #[test]
+    fn corrupt_worker_is_quarantined_forever() {
+        let plan = FaultPlan::scripted([(1, 0, Fault::Corrupt)]);
+        let mut fleet = mini_fleet(4, 1, plan);
+        let w = init_weights();
+        let r0 = fleet.round(0, &w, 2, 0.002).unwrap();
+        assert_eq!(r0[0].quarantined, 1);
+        assert_eq!(r0[0].admitted, 3);
+        assert_eq!(fleet.reachable(), 3);
+        let r1 = fleet.round(1, &w, 2, 0.002).unwrap();
+        assert_eq!(r1[0].admitted, 3, "quarantined worker stays out");
+    }
+
+    #[test]
+    fn synth_updates_preserve_packed_tail_invariant() {
+        let t = BitMatrix::pack(1, 70, &vec![1.0; 70]);
+        let u = synth_update(&[t], 9, 3, 7, 1); // heavy noise
+        let tail_mask = (1u64 << (70 - 64)) - 1;
+        assert_eq!(u[0].data[1] & !tail_mask, 0, "tail bits must stay zero");
+        // and the noise actually flips something at p=1/2
+        let flipped: u32 =
+            u[0].data.iter().zip(&BitMatrix::pack(1, 70, &vec![1.0; 70]).data).map(|(a, b)| (a ^ b).count_ones()).sum();
+        assert!(flipped > 10, "{flipped}");
+    }
+
+    #[test]
+    fn same_seed_rounds_are_bit_identical() {
+        let w = init_weights();
+        let mut a = mini_fleet(16, 4, FaultPlan::hostile(3));
+        let mut b = mini_fleet(16, 4, FaultPlan::hostile(3));
+        for round in 0..3 {
+            let ra = a.round(round, &w, 2, 0.002).unwrap();
+            let rb = b.round(round, &w, 2, 0.002).unwrap();
+            for (x, y) in ra.iter().zip(&rb) {
+                assert_eq!(x.votes, y.votes, "round {round}");
+                assert_eq!(x.admitted, y.admitted);
+            }
+        }
+    }
+}

@@ -3,31 +3,51 @@
 //! steps under the edge memory envelope, return a bit-packed sign
 //! update (1 bit/weight uplink — the federated twin of Alg. 2's
 //! binary weight gradients).
+//!
+//! Every worker consults the shared [`FaultPlan`] before acting on a
+//! round, so the chaos harness injects failures *inside* the device,
+//! exactly where real fleets fail: a crashed worker goes silent for
+//! its outage window (the leader sees timeouts), a stalled worker
+//! sleeps past the collection deadline (its update arrives a round
+//! late and is staleness-discounted), a dropped uplink trains but
+//! never sends, and a corrupt worker uplinks a malformed update the
+//! leader must quarantine.
 
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use super::fault::{Fault, FaultPlan, FaultState};
 use crate::bitops::BitMatrix;
 use crate::models::Graph;
 use crate::naive::{Accel, ProposedTrainer, StepEngine};
 
-/// Leader → worker: weights + round meta.  `None` weights = shutdown.
+/// Leader → worker: weights + round meta.
 pub enum RoundMsg {
-    Work { round: usize, weights: Vec<Vec<f32>>, local_steps: usize, lr: f32 },
+    Work { round: usize, weights: Arc<Vec<Vec<f32>>>, local_steps: usize, lr: f32 },
     Shutdown,
 }
 
 /// Worker → leader: packed sign(Δw) per layer + local metrics.
 pub struct SignUpdate {
     pub worker_id: usize,
+    /// The round this update was trained against (the leader admits
+    /// it fresh, staleness-discounted, or not at all).
     pub round: usize,
     /// Per-layer packed signs of (w_local − w_start); rows×cols match
-    /// the layer's logical (fan_in, fan_out).
+    /// the layer's logical (1, elems) snapshot shape.
     pub deltas: Vec<BitMatrix>,
     pub mean_loss: f32,
     pub samples_seen: usize,
+}
+
+impl SignUpdate {
+    /// Uplink payload bytes: 1 bit/weight + a small per-layer header.
+    pub fn uplink_bytes(&self) -> usize {
+        self.deltas.iter().map(|d| d.heap_bytes() + 16).sum()
+    }
 }
 
 pub struct WorkerHandle {
@@ -38,7 +58,8 @@ pub struct WorkerHandle {
 
 /// Spawn a worker thread.  `shard_x`/`shard_y` is its private data
 /// (never leaves the thread — the privacy property federated learning
-/// exists for).
+/// exists for).  `plan` is the chaos schedule the worker consults
+/// each round.
 #[allow(clippy::too_many_arguments)]
 pub fn spawn_worker(
     id: usize,
@@ -48,6 +69,7 @@ pub fn spawn_worker(
     shard_y: Vec<usize>,
     seed: u64,
     tx_up: Sender<Result<SignUpdate, usize>>,
+    plan: Arc<FaultPlan>,
 ) -> WorkerHandle {
     let (tx, rx): (Sender<RoundMsg>, Receiver<RoundMsg>) = std::sync::mpsc::channel();
     let join = std::thread::spawn(move || {
@@ -59,18 +81,36 @@ pub fn spawn_worker(
                 return;
             }
         };
+        let mut faults = FaultState::default();
         let k = shard_x.len() / shard_y.len().max(1);
         let n_batches = shard_y.len() / batch;
         while let Ok(msg) = rx.recv() {
             match msg {
                 RoundMsg::Shutdown => break,
                 RoundMsg::Work { round, weights, local_steps, lr } => {
+                    let fault = faults.effective(&plan, id, round);
+                    match fault {
+                        // crashed: dark for the outage window — the
+                        // leader times us out and backs us off
+                        Fault::Offline => continue,
+                        // malformed uplink: one mid-stack layer has a
+                        // wrong shape, so a leader that only checks
+                        // the first layer would be poisoned — the
+                        // regression test pins that it is not
+                        Fault::Corrupt => {
+                            let bad = corrupt_update(id, round, &weights);
+                            let _ = tx_up.send(Ok(bad));
+                            continue;
+                        }
+                        _ => {}
+                    }
                     if engine.load_weights(&weights).is_err() {
                         let _ = tx_up.send(Err(id));
                         continue;
                     }
                     let mut loss_sum = 0.0f32;
                     let mut seen = 0usize;
+                    let mut failed = false;
                     for s in 0..local_steps {
                         let bi = (round * local_steps + s) % n_batches.max(1);
                         let x = &shard_x[bi * batch * k..(bi + 1) * batch * k];
@@ -82,15 +122,27 @@ pub fn spawn_worker(
                             }
                             Err(_) => {
                                 let _ = tx_up.send(Err(id));
-                                continue;
+                                failed = true;
+                                break;
                             }
                         }
+                    }
+                    if failed {
+                        continue;
+                    }
+                    if let Fault::Stall { millis, .. } = fault {
+                        // lag the uplink past the leader's deadline;
+                        // the update arrives stale next round
+                        std::thread::sleep(std::time::Duration::from_millis(millis));
+                    }
+                    if fault == Fault::DropUplink {
+                        continue; // trained, but the uplink vanished
                     }
                     // packed sign(Δw): 1 bit per weight uplink
                     let now = engine.weights_snapshot();
                     let deltas = now
                         .iter()
-                        .zip(&weights)
+                        .zip(weights.iter())
                         .map(|(new, old)| {
                             let d: Vec<f32> =
                                 new.iter().zip(old).map(|(a, b)| a - b).collect();
@@ -109,4 +161,19 @@ pub fn spawn_worker(
         }
     });
     WorkerHandle { id, tx, join }
+}
+
+/// A malformed update: right layer count, but one mid-stack layer's
+/// shape is wrong (so single-layer validation would miss it).
+fn corrupt_update(id: usize, round: usize, weights: &[Vec<f32>]) -> SignUpdate {
+    let bad_layer = weights.len() / 2;
+    let deltas = weights
+        .iter()
+        .enumerate()
+        .map(|(li, w)| {
+            let cols = if li == bad_layer { w.len() + 1 } else { w.len() };
+            BitMatrix::zeros(1, cols)
+        })
+        .collect();
+    SignUpdate { worker_id: id, round, deltas, mean_loss: f32::NAN, samples_seen: 0 }
 }

@@ -1,0 +1,209 @@
+//! Chaos acceptance tests for the federated fleet: every fault kind ×
+//! {above, below} quorum, plus the headline determinism claim — a
+//! seeded hostile schedule over 20+ rounds replays bit-identically,
+//! commits every quorum-reachable round, and never rolls back.
+//!
+//! The matrix runs on the simulated (virtual-time) transport so every
+//! assertion is exact; the threaded transport gets a wall-clock
+//! hostile smoke with timing-robust assertions only.
+
+use bnn_edge::federated::{
+    AsyncConfig, Fault, FaultPlan, FedConfig, FedResult, FleetMode, Leader,
+};
+
+fn sim_cfg(workers: usize, rounds: usize, plan: FaultPlan) -> FedConfig {
+    let mut cfg = FedConfig::fleet(workers);
+    cfg.rounds = rounds;
+    cfg.local_steps = 2;
+    cfg.batch = 16;
+    cfg.samples_per_worker = 64;
+    cfg.plan = plan;
+    cfg.mode = FleetMode::Sim { shards: 2, noise_log2: 4 };
+    cfg
+}
+
+fn run(cfg: FedConfig) -> FedResult {
+    Leader::new(cfg).unwrap().run().unwrap()
+}
+
+/// Shared invariants every schedule must uphold.
+fn assert_invariants(r: &FedResult, quorum: usize) {
+    // commits are exactly the quorum-reachable rounds, in order
+    let mut last = None;
+    for s in &r.round_stats {
+        assert_eq!(
+            s.committed,
+            s.admitted >= quorum,
+            "round {}: admitted {} vs quorum {}",
+            s.round,
+            s.admitted,
+            quorum
+        );
+        if s.committed {
+            if let Some(prev) = last {
+                assert!(s.round > prev, "rollback: {} after {}", s.round, prev);
+            }
+            last = Some(s.round);
+        }
+    }
+    assert_eq!(r.rounds_committed, r.round_stats.iter().filter(|s| s.committed).count());
+    // weights stay in the unit box and finite under every schedule
+    for w in &r.final_weights {
+        assert!(w.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+    }
+}
+
+#[test]
+fn hostile_20_rounds_is_deterministic_and_commits_reachable_rounds() {
+    // the acceptance run: 100 sim workers, 20 rounds, all five fault
+    // kinds live; two same-seed runs must be bit-identical
+    let mk = || {
+        let mut cfg = sim_cfg(100, 20, FaultPlan::hostile(1234));
+        cfg.mode = FleetMode::Sim { shards: 4, noise_log2: 4 };
+        cfg
+    };
+    let a = run(mk());
+    let b = run(mk());
+    let quorum = AsyncConfig::majority(100).quorum;
+    assert_invariants(&a, quorum);
+    assert!(a.rounds_committed >= 12, "{}/{}", a.rounds_committed, a.rounds_attempted);
+    assert_eq!(a.final_weights, b.final_weights, "same seed must replay bit-identically");
+    assert_eq!(a.rounds_committed, b.rounds_committed);
+    for (x, y) in a.round_stats.iter().zip(&b.round_stats) {
+        assert_eq!((x.admitted, x.fresh, x.stale), (y.admitted, y.fresh, y.stale));
+    }
+}
+
+#[test]
+fn shard_topology_does_not_change_the_answer() {
+    // counts are associative: 2-shard and 5-shard fleets over the
+    // same workers/seed/plan produce bit-identical final weights
+    let mk = |shards| {
+        let mut cfg = sim_cfg(40, 8, FaultPlan::hostile(77));
+        cfg.mode = FleetMode::Sim { shards, noise_log2: 4 };
+        cfg
+    };
+    let a = run(mk(2));
+    let b = run(mk(5));
+    assert_eq!(a.final_weights, b.final_weights);
+    assert_eq!(a.rounds_committed, b.rounds_committed);
+}
+
+#[test]
+fn crash_above_quorum_commits_and_rejoins() {
+    let plan = FaultPlan::scripted([(0, 1, Fault::Crash { outage: 2 })]);
+    let r = run(sim_cfg(4, 5, plan));
+    let quorum = AsyncConfig::majority(4).quorum; // 3
+    assert_invariants(&r, quorum);
+    assert_eq!(r.rounds_committed, 5, "3 of 4 keeps quorum");
+    assert_eq!(r.round_stats[1].admitted, 3);
+    assert_eq!(r.round_stats[1].timeouts, 1);
+    // outage over + backoff elapsed: the crashed worker rejoins
+    assert_eq!(r.round_stats[3].fresh, 4, "worker 0 rejoined");
+}
+
+#[test]
+fn crash_below_quorum_stalls_then_recovers() {
+    let plan = FaultPlan::scripted([(0, 1, Fault::Crash { outage: 2 })]);
+    let mut cfg = sim_cfg(4, 5, plan);
+    cfg.async_cfg.quorum = 4; // unanimous: one crash stalls the round
+    let r = run(cfg);
+    assert_invariants(&r, 4);
+    assert!(!r.round_stats[1].committed, "below quorum must stall");
+    assert!(r.round_stats[1].mean_loss.is_nan());
+    assert!(r.round_stats[3].committed, "fleet recovers after rejoin");
+    assert!(r.rounds_committed >= 3);
+}
+
+#[test]
+fn stall_above_quorum_discounts_the_late_vote() {
+    let plan = FaultPlan::scripted([(1, 0, Fault::Stall { rounds: 1, millis: 0 })]);
+    let r = run(sim_cfg(4, 3, plan));
+    assert_invariants(&r, AsyncConfig::majority(4).quorum);
+    assert_eq!(r.round_stats[0].admitted, 3);
+    assert_eq!(r.round_stats[1].stale, 1, "late update admitted next round");
+    assert_eq!(r.rounds_committed, 3);
+}
+
+#[test]
+fn stall_below_quorum_commits_on_late_delivery() {
+    // unanimous quorum: the stalled round cannot commit, the next one
+    // admits the stale vote and can
+    let plan = FaultPlan::scripted([(1, 0, Fault::Stall { rounds: 1, millis: 0 })]);
+    let mut cfg = sim_cfg(2, 3, plan);
+    cfg.async_cfg.quorum = 2;
+    let r = run(cfg);
+    assert_invariants(&r, 2);
+    assert!(!r.round_stats[0].committed);
+    assert!(r.round_stats[1].committed, "stale vote completes the quorum");
+    assert_eq!(r.round_stats[1].stale, 1);
+}
+
+#[test]
+fn drop_uplink_above_quorum_commits() {
+    let plan = FaultPlan::scripted([(2, 0, Fault::DropUplink), (2, 1, Fault::DropUplink)]);
+    let r = run(sim_cfg(4, 4, plan));
+    assert_invariants(&r, AsyncConfig::majority(4).quorum);
+    assert_eq!(r.rounds_committed, 4);
+    assert_eq!(r.round_stats[0].timeouts, 1);
+}
+
+#[test]
+fn drop_uplink_below_quorum_stalls_without_corruption() {
+    let plan = FaultPlan::scripted([(0, 1, Fault::DropUplink), (1, 1, Fault::DropUplink)]);
+    let mut cfg = sim_cfg(3, 4, plan);
+    cfg.async_cfg.quorum = 2;
+    let r = run(cfg);
+    assert_invariants(&r, 2);
+    assert!(!r.round_stats[1].committed, "1 of 3 is below quorum");
+    // droppers sit out round 2 as stragglers, rejoin at round 3
+    assert!(r.round_stats[3].committed);
+    assert!(r.round_stats[0].committed && r.rounds_committed >= 2);
+}
+
+#[test]
+fn corrupt_worker_is_quarantined_and_fleet_survives() {
+    let plan = FaultPlan::scripted([(3, 0, Fault::Corrupt)]);
+    let r = run(sim_cfg(5, 4, plan));
+    assert_invariants(&r, AsyncConfig::majority(5).quorum);
+    assert_eq!(r.quarantined, 1);
+    assert_eq!(r.rounds_committed, 4);
+    // the quarantined worker never contributes again
+    for s in &r.round_stats {
+        assert!(s.admitted <= 4, "round {}: {}", s.round, s.admitted);
+    }
+}
+
+#[test]
+fn corrupt_majority_below_quorum_never_commits_garbage() {
+    // 3 of 4 workers are malicious in round 0: quorum becomes
+    // unreachable forever — the leader must stop cleanly with round 0
+    // state intact, not aggregate a poisoned minority
+    let plan = FaultPlan::scripted([
+        (0, 0, Fault::Corrupt),
+        (1, 0, Fault::Corrupt),
+        (2, 0, Fault::Corrupt),
+    ]);
+    let r = run(sim_cfg(4, 5, plan));
+    assert_invariants(&r, AsyncConfig::majority(4).quorum);
+    assert_eq!(r.rounds_committed, 0);
+    assert_eq!(r.quarantined, 3);
+    assert!(r.rounds_attempted < 5, "unreachable quorum exits early");
+}
+
+#[test]
+fn threaded_hostile_smoke_survives() {
+    // wall-clock transport: assertions limited to what timing cannot
+    // perturb — invariants hold, no panic, leader drains cleanly
+    let mut cfg = FedConfig::fleet(3);
+    cfg.rounds = 4;
+    cfg.local_steps = 2;
+    cfg.batch = 16;
+    cfg.samples_per_worker = 48;
+    cfg.plan = FaultPlan::hostile(5);
+    cfg.async_cfg.deadline_ms = 400;
+    cfg.async_cfg.retry_budget = 1;
+    let r = run(cfg);
+    assert_invariants(&r, AsyncConfig::majority(3).quorum);
+    assert_eq!(r.rounds_attempted, r.round_stats.len());
+}

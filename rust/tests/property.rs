@@ -7,7 +7,9 @@ use bnn_edge::bitops::{
     ConvGeom, Pool,
 };
 use bnn_edge::data;
-use bnn_edge::federated::sign_vote;
+use bnn_edge::federated::{
+    count_votes_scalar, count_votes_sharded, count_votes_words, sign_vote, vote_weight,
+};
 use bnn_edge::memmodel::{breakdown, DtypeConfig, Optimizer};
 use bnn_edge::models::{get, lower, names, LayerSpec, ModelSpec};
 use bnn_edge::naive::{
@@ -163,6 +165,44 @@ fn prop_sign_vote_bounded_and_odd() {
             assert_eq!(*a, -b);
         }
     }
+}
+
+#[test]
+fn prop_word_tally_matches_scalar() {
+    // the word-level (stack → transpose → popcount) tally is bit-exact
+    // vs the scalar bit-probe reference: random shapes (deliberately
+    // straddling word boundaries), random staleness weights, every
+    // pool width, and the sharded two-level path
+    let mut g = Pcg32::new(29);
+    for case in 0..CASES {
+        let rows = 1 + g.below(3);
+        // mix off-word-grid cols (1..130) with exact multiples of 64
+        let cols = if case % 4 == 0 { 64 * (1 + g.below(3)) } else { 1 + g.below(130) };
+        let k = 1 + g.below(80);
+        let ms: Vec<BitMatrix> = (0..k)
+            .map(|_| BitMatrix::pack(rows, cols, &g.normal_vec(rows * cols)))
+            .collect();
+        let refs: Vec<&BitMatrix> = ms.iter().collect();
+        // staleness-style weights incl. zeros (inadmissible updates)
+        let ws: Vec<u32> = (0..k).map(|_| g.below(4) as u32).collect();
+        if ws.iter().all(|&w| w == 0) {
+            continue;
+        }
+        let want = count_votes_scalar(&refs, &ws);
+        for threads in [1, 2, 4] {
+            let got = count_votes_words(&refs, &ws, &Pool::new(threads));
+            assert_eq!(got, want, "k={k} {rows}x{cols} t{threads}");
+        }
+        let shards = 1 + g.below(4);
+        assert_eq!(count_votes_sharded(&refs, &ws, shards), want, "shards={shards}");
+    }
+    // duplicated update + its negation at equal weight ⇒ exact tie
+    let a = BitMatrix::pack(1, 67, &g.normal_vec(67));
+    let neg: Vec<f32> = a.unpack().iter().map(|x| -x).collect();
+    let b = BitMatrix::pack(1, 67, &neg);
+    let w = vote_weight(0, 2).unwrap();
+    let v = count_votes_words(&[&a, &b], &[w, w], &Pool::new(2));
+    assert!(v.signs().iter().all(|&s| s == 0), "tie must vote 0");
 }
 
 #[test]
