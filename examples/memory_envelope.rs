@@ -14,7 +14,8 @@ use bnn_edge::coordinator::{fit_batch, MemoryEnvelope};
 use bnn_edge::data::build;
 use bnn_edge::memmodel::{breakdown, DtypeConfig, Optimizer};
 use bnn_edge::models::{get, lower};
-use bnn_edge::naive::{build_engine, Accel};
+use bnn_edge::naive::schedule::{self, PoolKind};
+use bnn_edge::naive::{build_engine, Accel, Plan};
 use bnn_edge::util::cli::Args;
 use bnn_edge::util::table::{Align, Table};
 use bnn_edge::util::MIB;
@@ -58,6 +59,7 @@ fn main() -> Result<()> {
     // later step: zero heap allocations, peak growth ~0 because all
     // buffers come from the resident pool).
     let g = lower(&get("mlp")?)?;
+    let plan = Plan::from_graph(&g)?;
     let batch = 100;
     let ds = build("syn-mnist", batch, 0, 1)?;
     let x = ds.train_x.clone();
@@ -82,6 +84,23 @@ fn main() -> Result<()> {
         println!(
             "             resident: state {state:.2} MiB + step arena {arena:.2} MiB  \
              (paper-modeled step total {modeled:.2} MiB)"
+        );
+        // the compiled slot map behind that arena number: typed
+        // pools, interval-colored so disjoint live ranges share slots
+        let sched = schedule::compile_step(&plan, algo, false, batch, 1)?;
+        let saved = sched.uncolored_bytes.saturating_sub(sched.arena_bytes());
+        let pools: Vec<String> = PoolKind::ALL
+            .iter()
+            .filter(|&&p| sched.slots.pool_bytes(p) > 0)
+            .map(|&p| format!("{} {:.2} MiB", p.name(), sched.slots.pool_bytes(p) as f64 / MIB))
+            .collect();
+        println!(
+            "             schedule: {} slots [{}]  coloring saves {:.2} MiB vs \
+             best-fit ({:.1}%)",
+            sched.slot_count(),
+            pools.join(", "),
+            saved as f64 / MIB,
+            100.0 * saved as f64 / sched.uncolored_bytes.max(1) as f64
         );
         // the planned envelope (state + scheduled arena), per microbatch
         for micro in [0usize, batch / 4] {

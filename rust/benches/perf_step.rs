@@ -9,18 +9,23 @@
 //! - `steady_state_bytes` — the **measured** resident footprint after
 //!   warmup: `state_bytes()` (weights, momenta, accumulators, packed
 //!   weight cache) + `arena_bytes()` (the recycled step pool);
-//! - `envelope_bytes` — `memmodel::step_envelope`'s planned twin.
-//!   CI diffs the two and fails on >10% divergence (the regression
-//!   gate for both the planner and the engines' buffer discipline).
+//! - `envelope_bytes` — `memmodel::step_envelope`'s planned twin,
+//!   now a pure fold over the compiled schedule and therefore exact:
+//!   CI fails on *any* divergence from the measured steady state;
+//! - `colored_arena_bytes` / `uncolored_arena_bytes` / `slots` — the
+//!   schedule compiler's interval-colored slot table vs the old
+//!   per-pass best-fit baseline.  CI fails if coloring ever regresses
+//!   above the uncolored baseline for any zoo model.
 //!
 //! Emits `BENCH_step.json` (stable schema: `{engine, model, backend,
 //! threads, batch, microbatch, steps_per_sec, steady_state_bytes,
-//! envelope_bytes}`).  Flags: `--smoke` (trimmed sweep for CI),
-//! `--out PATH` (default `BENCH_step.json`).
+//! envelope_bytes, colored_arena_bytes, uncolored_arena_bytes,
+//! slots}`).  Flags: `--smoke` (trimmed sweep for CI), `--out PATH`
+//! (default `BENCH_step.json`).
 
 use bnn_edge::memmodel::{step_envelope, Optimizer};
 use bnn_edge::models::{get, lower};
-use bnn_edge::naive::{build_engine_micro, Accel};
+use bnn_edge::naive::{build_engine_micro, schedule, Accel, Plan};
 use bnn_edge::util::bench::{write_json_rows, Bencher};
 use bnn_edge::util::cli::Args;
 use bnn_edge::util::json::Json;
@@ -62,6 +67,7 @@ fn main() {
     for (model, batch, micros) in &sweep {
         let batch = *batch;
         let graph = lower(&get(model).unwrap()).unwrap();
+        let plan = Plan::from_graph(&graph).unwrap();
         let x = rng.normal_vec(batch * graph.input_elems);
         let y: Vec<usize> = (0..batch).map(|i| i % graph.classes).collect();
         for micro in micros {
@@ -89,6 +95,11 @@ fn main() {
                     let steady = e.state_bytes() + e.arena_bytes();
                     let env = step_envelope(&graph, algo, Optimizer::Adam, batch, *micro)
                         .unwrap();
+                    // the compiled slot table behind arena_bytes()
+                    // (blocked/tiled share one choreography: naive=false)
+                    let m = if *micro == 0 { batch } else { *micro };
+                    let sched =
+                        schedule::compile_step(&plan, algo, false, m, batch / m).unwrap();
                     let mut row = Json::obj();
                     row.set("engine", Json::from(algo));
                     row.set("model", Json::from(*model));
@@ -102,6 +113,9 @@ fn main() {
                     row.set("steps_per_sec", Json::from(sps));
                     row.set("steady_state_bytes", Json::from(steady));
                     row.set("envelope_bytes", Json::from(env.total_bytes()));
+                    row.set("colored_arena_bytes", Json::from(sched.arena_bytes()));
+                    row.set("uncolored_arena_bytes", Json::from(sched.uncolored_bytes));
+                    row.set("slots", Json::from(sched.slot_count()));
                     rows.push(row);
                 }
             }

@@ -29,6 +29,11 @@ use crate::util::cli::Args;
 /// Launcher entrypoint (`bnn-edge <subcommand> ...`).
 pub fn cli_main() -> Result<()> {
     let args = Args::from_env();
+    // `bnn-edge --dump-schedule [model]` is an alias for the
+    // `schedule` subcommand (the flag's value, if any, names a model)
+    if args.get("dump-schedule").is_some() {
+        return cmd_schedule(&args);
+    }
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
@@ -38,6 +43,7 @@ pub fn cli_main() -> Result<()> {
         "artifacts" => cmd_artifacts(&args),
         "datasets" => cmd_datasets(),
         "serve" => cmd_serve(&args),
+        "schedule" => cmd_schedule(&args),
         "federated" => crate::federated::cli(&args),
         _ => {
             print_help();
@@ -79,6 +85,14 @@ COMMANDS:
               --engine tiled [--threads 2]
               [--max-batch 8] [--slo-us 200]
               [--clients 4] [--requests 64] [--seed 42]
+  schedule    compile and dump the slot-colored buffer schedule the
+              engines execute (JSON, diffable; prints a per-pool slot
+              map + coloring savings to stderr)
+              --model binarynet_mini [--algo standard|proposed|both]
+              [--engine naive|blocked|tiled] [--batch 64]
+              [--microbatch 0] [--serve --max-batch 8]
+              [--out schedule.json]
+              (alias: bnn-edge --dump-schedule [model])
   federated   run the fault-tolerant federated edge fleet
               [--workers 4] [--rounds 5] [--local-steps 8]
               [--chaos none|hostile] [--chaos-seed 42]
@@ -259,6 +273,90 @@ fn cmd_serve(args: &Args) -> Result<()> {
         crate::util::stats::percentile(&lat, 99.0)
     );
     Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    use crate::naive::schedule;
+    use crate::util::json::Json;
+
+    // `--dump-schedule <model>` doubles as the model flag
+    let model = match args.get("dump-schedule") {
+        Some(v) if !matches!(v, "true" | "1" | "yes") => v.to_string(),
+        _ => args.str_or("model", "binarynet_mini"),
+    };
+    let engine = args.str_or("engine", "blocked");
+    let naive = match engine.as_str() {
+        "naive" => true,
+        "blocked" | "tiled" => false,
+        other => anyhow::bail!("unknown engine '{other}' (naive|blocked|tiled)"),
+    };
+    let batch = args.usize_or("batch", 64)?;
+    let micro = match args.usize_or("microbatch", 0)? {
+        0 => batch,
+        m => m,
+    };
+    if batch == 0 || batch % micro != 0 {
+        anyhow::bail!("--microbatch must divide --batch");
+    }
+    let serve = args.bool("serve");
+    let max_batch = args.usize_or("max-batch", 8)?;
+    let algos: Vec<&str> = match args.str_or("algo", "both").as_str() {
+        "both" => vec!["standard", "proposed"],
+        "standard" => vec!["standard"],
+        "proposed" => vec!["proposed"],
+        other => anyhow::bail!("unknown algo '{other}' (standard|proposed|both)"),
+    };
+
+    let graph = crate::models::lower(&crate::models::get(&model)?)?;
+    let plan = crate::naive::Plan::from_graph(&graph)?;
+
+    let mut dump = Json::obj();
+    for algo in algos {
+        let sched = if serve {
+            schedule::compile_serve(&plan, algo, naive, max_batch)?
+        } else {
+            schedule::compile_step(&plan, algo, naive, micro, batch / micro)?
+        };
+        print_schedule_summary(&sched);
+        dump.set(algo, sched.to_json());
+    }
+    let text = dump.to_string_pretty();
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            eprintln!("wrote {path}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+/// One stderr line per compiled schedule: slot count, colored arena
+/// bytes per typed pool, and the coloring's savings vs the old
+/// per-pass best-fit free list.
+fn print_schedule_summary(s: &crate::naive::schedule::StepSchedule) {
+    use crate::naive::schedule::PoolKind;
+    let colored = s.arena_bytes();
+    let uncolored = s.uncolored_bytes;
+    let saved = uncolored.saturating_sub(colored);
+    let pct = if uncolored > 0 {
+        100.0 * saved as f64 / uncolored as f64
+    } else {
+        0.0
+    };
+    let pools: Vec<String> = PoolKind::ALL
+        .iter()
+        .filter(|&&p| s.slots.pool_bytes(p) > 0)
+        .map(|&p| format!("{} {:.1} KiB", p.name(), s.slots.pool_bytes(p) as f64 / 1024.0))
+        .collect();
+    eprintln!(
+        "{:>9}: {} slots, colored {:.1} KiB vs best-fit {:.1} KiB (-{pct:.1}%)  [{}]",
+        s.algo,
+        s.slot_count(),
+        colored as f64 / 1024.0,
+        uncolored as f64 / 1024.0,
+        pools.join(", ")
+    );
 }
 
 fn cmd_datasets() -> Result<()> {

@@ -449,10 +449,11 @@ pub fn reduction(graph: &Graph, batch: usize, opt: Optimizer) -> f64 {
 /// the *engine-exact* envelope: `state_bytes` mirrors the trainers'
 /// `state_bytes()` accounting (weights, β, momenta, gradient
 /// accumulators, packed-weight cache after one step) and
-/// `arena_bytes` comes from the step planner's symbolic replay of the
-/// engine's buffer checkouts (`naive::arena::plan_*_step`).  The
-/// perf-step bench emits both, and CI fails when the measured
-/// steady-state footprint diverges from this by more than 10%.
+/// `arena_bytes` is the compiled schedule's slot-table total
+/// (`naive::schedule::compile_step(..).arena_bytes()`) — the same
+/// slot table the engine's arena installs, so planned == measured
+/// **exactly**; CI and `memtrack_step.rs` assert equality with no
+/// tolerance band.
 #[derive(Clone, Copy, Debug)]
 pub struct StepEnvelope {
     pub state_bytes: f64,
@@ -481,7 +482,6 @@ pub fn step_envelope(
     batch: usize,
     microbatch: usize,
 ) -> anyhow::Result<StepEnvelope> {
-    use crate::naive::arena::{plan_proposed_step, plan_standard_step};
     let plan = crate::naive::Plan::from_graph(graph)?;
     let micro = if microbatch == 0 { batch } else { microbatch };
     if micro == 0 || batch % micro != 0 {
@@ -490,7 +490,11 @@ pub fn step_envelope(
     let chunks = batch / micro;
     let momenta = opt.momenta_per_weight();
     let mut state = 0.0f64;
-    let arena;
+    // the accelerated-tier schedule (naive = false) — the tiers the
+    // envelope has always modeled
+    let arena =
+        crate::naive::schedule::compile_step(&plan, algo, false, micro, chunks)?.arena_bytes()
+            as f64;
     match algo {
         "standard" => {
             for l in plan.layers.iter().filter(|l| l.weight_len() > 0) {
@@ -511,7 +515,6 @@ pub fn step_envelope(
                     state += (n * k.div_ceil(64) * 8) as f64;
                 }
             }
-            arena = plan_standard_step(&plan, micro, chunks).total_bytes() as f64;
         }
         "proposed" => {
             for l in plan.layers.iter().filter(|l| l.weight_len() > 0) {
@@ -534,7 +537,6 @@ pub fn step_envelope(
                     state += (n * k.div_ceil(64) * 8) as f64;
                 }
             }
-            arena = plan_proposed_step(&plan, micro, chunks).total_bytes() as f64;
         }
         _ => anyhow::bail!("step_envelope: unknown algo '{algo}' (standard|proposed)"),
     }
@@ -571,23 +573,19 @@ pub fn serve_envelope(
     algo: &str,
     max_batch: usize,
 ) -> anyhow::Result<ServeEnvelope> {
-    use crate::naive::arena::plan_infer_forward;
     let plan = crate::naive::Plan::from_graph(graph)?;
     if max_batch == 0 {
         anyhow::bail!("serve_envelope: max_batch must be positive");
     }
-    let proposed = match algo {
-        "standard" => false,
-        "proposed" => true,
-        _ => anyhow::bail!("serve_envelope: unknown algo '{algo}' (standard|proposed)"),
-    };
     let mut snapshot = 0usize;
     for l in plan.layers.iter().filter(|l| l.weight_len() > 0) {
         let (k, n) = (l.fan_in(), l.channels());
         // packed w (k×n) + packed wt (n×k) + f32 β
         snapshot += k * n.div_ceil(64) * 8 + n * k.div_ceil(64) * 8 + n * 4;
     }
-    let arena = plan_infer_forward(&plan, proposed, max_batch).total_bytes();
+    // the serve schedule's colored slot table == the engine's
+    // installed arena, exactly (accelerated tiers)
+    let arena = crate::naive::schedule::compile_serve(&plan, algo, false, max_batch)?.arena_bytes();
     Ok(ServeEnvelope { snapshot_bytes: snapshot, arena_bytes: arena })
 }
 
@@ -903,11 +901,11 @@ mod tests {
 
     #[test]
     fn step_envelope_matches_measured_steady_state() {
-        // the planner's symbolic replay vs the real engines: state +
-        // arena after warmup must agree.  The CI regression gate
-        // holds this to 10% on the perf-step bench; here a band wide
-        // enough to absorb Vec-spine noise on mini models pins the
-        // planner against drift in the trainers' buffer flow.
+        // the compiled schedule vs the real engines: the arena term
+        // is the very slot table the engine installs and the state
+        // formula mirrors `state_bytes()` item by item, so planned ==
+        // measured with **no tolerance band** (the pre-schedule 10%
+        // drift gate is retired).
         use crate::naive::{build_engine_micro, Accel, StepEngine};
         use crate::util::rng::Pcg32;
         for (model, batch, micro) in
@@ -923,14 +921,16 @@ mod tests {
                 let y: Vec<usize> = (0..batch).map(|i| i % g.classes).collect();
                 e.train_step(&x, &y, 0.01).unwrap();
                 e.train_step(&x, &y, 0.01).unwrap();
-                let measured = (e.state_bytes() + e.arena_bytes()) as f64;
                 let env = step_envelope(&g, algo, Optimizer::Adam, batch, micro).unwrap();
-                let ratio = env.total_bytes() / measured;
-                assert!(
-                    (0.8..1.25).contains(&ratio),
-                    "{model}/{algo} micro={micro}: planned {:.0} vs measured {measured:.0} \
-                     (ratio {ratio:.3})",
-                    env.total_bytes()
+                assert_eq!(
+                    env.arena_bytes as usize,
+                    e.arena_bytes(),
+                    "{model}/{algo} micro={micro}: arena model drifted"
+                );
+                assert_eq!(
+                    env.state_bytes as usize,
+                    e.state_bytes(),
+                    "{model}/{algo} micro={micro}: state model drifted"
                 );
             }
         }

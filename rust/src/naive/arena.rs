@@ -1,106 +1,168 @@
-//! Step arena: recycled buffer storage that makes steady-state
-//! training steps **allocation-free**.
+//! Step arena: the **schedule executor** that makes steady-state
+//! training and serving steps allocation-free.
 //!
 //! The paper's whole argument is that the *peak memory of a training
-//! step* gates on-device learning — yet the engines used to allocate
-//! fresh `Vec`s at every layer boundary of every step, so the step
-//! footprint was emergent (whatever the allocator happened to do)
-//! rather than scheduled.  The [`StepArena`] turns every transient of
-//! the step — activations, gradients, packed bit panels, BN
-//! statistics, pool masks, f16 gradient carriers — into a checkout
-//! from a typed free-list pool:
+//! step* gates on-device learning.  Since PR 8 the arena no longer
+//! discovers that footprint at runtime with best-fit free lists — it
+//! *executes* a compiled [`super::schedule::StepSchedule`]:
 //!
-//! - [`StepArena::take_f32`] hands out a buffer with the *smallest
-//!   adequate capacity* (best fit); a miss allocates once and the
-//!   buffer joins the pool on [`StepArena::put_f32`] forever after;
-//! - because a training step performs the same sequence of takes and
-//!   puts every time (shapes are fixed by the [`super::plan::Plan`]),
-//!   the pool reaches a fixed point after **one warmup step**: every
-//!   subsequent take hits the pool and the step performs *zero* heap
-//!   allocations (`memtrack::alloc_count` asserts this in
+//! - at install time, every typed pool (f32 / u64 bit panels / f16
+//!   carriers / u32 masks) pre-allocates its colored **slots** at the
+//!   capacities the compiler assigned, so the resident footprint is
+//!   `Σ slot capacities` from the first step and never changes;
+//! - each engine pass (`train_step`, `eval`, per-batch `infer`) runs
+//!   between [`StepArena::begin_pass`] / [`StepArena::end_pass`],
+//!   and every `take_*` / `put_*` is checked against the pass's next
+//!   [`BufEvent`] — pool, length, init mode, slot.  A divergence
+//!   between engine and compiler is an immediate panic (surfaced by
+//!   the `engine_parity` sweep), not a silent drift to band-test;
+//! - takes hand out the slot's buffer resized in place (capacity is
+//!   never exceeded, so the steady state performs **zero** heap
+//!   allocations — `memtrack::alloc_count` asserts this in
 //!   rust/tests/memtrack_step.rs);
-//! - the pool's steady composition *is* the step's transient memory
-//!   schedule: buffers are slots, the take/put pattern is the
-//!   liveness assignment, and [`StepArena::heap_bytes`] is the
-//!   scheduled footprint `memmodel::step_envelope` prices.
+//! - puts outside a pass (begin-step hygiene drains after an aborted
+//!   step) fall back to capacity-matched reclaim, and
+//!   [`StepArena::begin_pass`] re-provisions any slot an error path
+//!   dropped — error recovery may allocate, the steady state never
+//!   does.
 //!
-//! Buffers keep their allocation when parked, so the arena trades a
-//! bounded, *scheduled* resident footprint (microbatch-sized — see
-//! the trainers' gradient accumulation) for a step that never touches
-//! the system allocator.
+//! Because the engines install exactly the schedule the memory model
+//! folds over, `memmodel::{step_envelope,serve_envelope}` equal
+//! [`StepArena::heap_bytes`] *exactly* — by construction, with no
+//! drift band.
 
+use std::sync::Arc;
+
+use super::schedule::{BufEvent, PassEvents, PoolKind, SlotTable, TakeInit};
 use crate::bitops::{BitMask, BitMatrix};
 use crate::util::f16::F16Vec;
 
-/// One typed free list: buffers sorted ascending by capacity.
+/// One typed slot pool: `slots[i]` holds the parked buffer of
+/// capacity `caps[i]`, or `None` while it is checked out.
 #[derive(Debug, Default)]
-struct FreeList<T> {
-    bufs: Vec<Vec<T>>,
-    /// Sum of parked capacities, in elements.
-    pooled: usize,
-    /// Sum of checked-out capacities, in elements (at take time).
-    outstanding: usize,
-    misses: usize,
-    takes: usize,
+struct SlotPool<T> {
+    slots: Vec<Option<Vec<T>>>,
+    caps: Vec<usize>,
 }
 
-impl<T: Clone + Default> FreeList<T> {
-    /// Best-fit checkout: smallest parked buffer with capacity ≥
-    /// `len`, else a fresh exact-capacity allocation (a *miss*).
-    /// Contents are unspecified (stale prior data past `len` is
-    /// truncated; the prefix may hold old values) — callers that
-    /// need zeros use the `_zeroed` wrappers.
-    fn take(&mut self, len: usize) -> Vec<T> {
-        self.takes += 1;
-        if len == 0 {
-            return Vec::new(); // capacity-0: never touches the pool
-        }
-        // bufs is sorted by capacity: first fit == best fit
-        let idx = self.bufs.partition_point(|b| b.capacity() < len);
-        if idx < self.bufs.len() {
-            let mut v = self.bufs.remove(idx);
-            self.pooled -= v.capacity();
-            self.outstanding += v.capacity();
-            if v.len() < len {
-                v.resize(len, T::default());
-            } else {
-                v.truncate(len);
-            }
-            return v;
-        }
-        self.misses += 1;
-        let mut v = Vec::with_capacity(len);
-        v.resize(len, T::default());
-        self.outstanding += v.capacity();
+impl<T: Clone + Default> SlotPool<T> {
+    fn provision(cap: usize) -> Vec<T> {
+        let mut v = Vec::with_capacity(cap);
+        v.resize(cap, T::default());
         v
     }
 
-    fn take_zeroed(&mut self, len: usize) -> Vec<T> {
-        let mut v = self.take(len);
+    fn install(&mut self, caps: &[usize]) {
+        self.caps = caps.to_vec();
+        self.slots = caps.iter().map(|&c| Some(Self::provision(c))).collect();
+    }
+
+    /// Refill any slot whose buffer was dropped on an error path.
+    fn repair(&mut self) {
+        for (s, &c) in self.slots.iter_mut().zip(&self.caps) {
+            if s.is_none() {
+                *s = Some(Self::provision(c));
+            }
+        }
+    }
+
+    fn vacate(&mut self, slot: usize) -> Vec<T> {
+        self.slots[slot]
+            .take()
+            .unwrap_or_else(|| panic!("schedule bug: slot {slot} vacant at take"))
+    }
+
+    fn take(&mut self, slot: usize, len: usize) -> Vec<T> {
+        let mut v = self.vacate(slot);
+        if v.len() < len {
+            v.resize(len, T::default());
+        } else {
+            v.truncate(len);
+        }
+        v
+    }
+
+    fn take_zeroed(&mut self, slot: usize, len: usize) -> Vec<T> {
+        let mut v = self.vacate(slot);
         v.clear();
         v.resize(len, T::default());
         v
     }
 
-    fn put(&mut self, v: Vec<T>) {
+    fn put(&mut self, slot: usize, v: Vec<T>) {
+        assert!(
+            self.slots[slot].is_none(),
+            "schedule bug: slot {slot} already occupied at put"
+        );
+        assert_eq!(
+            v.capacity(),
+            self.caps[slot],
+            "schedule bug: returned capacity does not match slot {slot}"
+        );
+        self.slots[slot] = Some(v);
+    }
+
+    /// Out-of-pass return (hygiene drains after an aborted step): park
+    /// in a vacant slot of the exact capacity, else drop — `repair`
+    /// re-provisions at the next pass start.
+    fn reclaim(&mut self, v: Vec<T>) {
         let cap = v.capacity();
-        if cap == 0 {
-            return; // empty vecs never held heap memory
+        for i in 0..self.slots.len() {
+            if self.slots[i].is_none() && self.caps[i] == cap {
+                self.slots[i] = Some(v);
+                return;
+            }
         }
-        self.outstanding = self.outstanding.saturating_sub(cap);
-        self.pooled += cap;
-        let idx = self.bufs.partition_point(|b| b.capacity() < cap);
-        self.bufs.insert(idx, v);
+    }
+
+    fn bytes(&self, elem: usize) -> usize {
+        self.caps.iter().sum::<usize>() * elem
     }
 }
 
-/// Typed recycling pools for every buffer class of a training step.
+/// Cursor over one pass's event stream: `events` replayed `repeats`
+/// times, then `tail`.
+#[derive(Debug)]
+struct ActivePass {
+    pass: Arc<PassEvents>,
+    idx: usize,
+    rep: usize,
+    in_tail: bool,
+}
+
+impl ActivePass {
+    fn peek(&self) -> Option<BufEvent> {
+        if self.in_tail {
+            self.pass.tail.get(self.idx).copied()
+        } else {
+            self.pass.events.get(self.idx).copied()
+        }
+    }
+
+    fn advance(&mut self) {
+        self.idx += 1;
+        if !self.in_tail && self.idx == self.pass.events.len() {
+            self.rep += 1;
+            self.idx = 0;
+            if self.rep >= self.pass.repeats {
+                self.in_tail = true;
+            }
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.in_tail && self.idx >= self.pass.tail.len()
+    }
+}
+
+/// The slot-table executor for every buffer class of a step.
 #[derive(Debug, Default)]
 pub struct StepArena {
-    f32s: FreeList<f32>,
-    u64s: FreeList<u64>, // BitMatrix / BitMask words
-    u16s: FreeList<u16>, // F16Vec payloads
-    u32s: FreeList<u32>, // pool argmax masks (standard engine)
+    f32s: SlotPool<f32>,
+    u64s: SlotPool<u64>, // BitMatrix / BitMask words
+    u16s: SlotPool<u16>, // F16Vec payloads
+    u32s: SlotPool<u32>, // pool argmax masks (standard engine)
+    stream: Option<ActivePass>,
 }
 
 impl StepArena {
@@ -108,36 +170,155 @@ impl StepArena {
         StepArena::default()
     }
 
+    /// Pre-allocate every colored slot.  Called once per engine at
+    /// construction (and again by `install_schedule`); after this the
+    /// resident footprint is fixed.
+    pub fn install(&mut self, slots: &SlotTable) {
+        assert!(self.stream.is_none(), "install during an active pass");
+        self.f32s.install(&slots.caps[PoolKind::F32.idx()]);
+        self.u64s.install(&slots.caps[PoolKind::U64.idx()]);
+        self.u16s.install(&slots.caps[PoolKind::F16.idx()]);
+        self.u32s.install(&slots.caps[PoolKind::U32.idx()]);
+    }
+
+    /// Start executing a pass's event stream.  Repairs any slot an
+    /// aborted step dropped (steady-state no-op).
+    pub fn begin_pass(&mut self, pass: Arc<PassEvents>) {
+        assert!(
+            self.stream.is_none(),
+            "begin_pass('{}') with a pass already active",
+            pass.name
+        );
+        self.f32s.repair();
+        self.u64s.repair();
+        self.u16s.repair();
+        self.u32s.repair();
+        let in_tail = pass.events.is_empty();
+        self.stream = Some(ActivePass { pass, idx: 0, rep: 0, in_tail });
+    }
+
+    /// Finish the active pass, asserting the stream was fully
+    /// consumed — a short count means the engine skipped scheduled
+    /// work.
+    pub fn end_pass(&mut self) {
+        let st = self.stream.take().expect("end_pass without begin_pass");
+        assert!(
+            st.exhausted(),
+            "pass '{}' ended early: chunk {}/{}, event {}{}",
+            st.pass.name,
+            st.rep,
+            st.pass.repeats,
+            st.idx,
+            if st.in_tail { " (tail)" } else { "" }
+        );
+    }
+
+    /// Drop the active pass after an engine error; subsequent hygiene
+    /// puts reclaim, and the next `begin_pass` repairs the slots.
+    pub fn abort_pass(&mut self) {
+        self.stream = None;
+    }
+
+    fn take_event(&mut self, pool: PoolKind, len: usize, init: TakeInit) -> usize {
+        let Some(st) = self.stream.as_ref() else {
+            panic!("arena take ({pool:?} len {len}) outside a scheduled pass")
+        };
+        match st.peek() {
+            Some(BufEvent::Take { pool: p, slot, len: l, init: i })
+                if p == pool && l == len && i == init =>
+            {
+                self.stream.as_mut().unwrap().advance();
+                slot
+            }
+            other => panic!(
+                "schedule mismatch in pass '{}' (chunk {}, event {}{}): engine takes \
+                 {pool:?} len {len} {init:?}, schedule says {other:?}",
+                st.pass.name,
+                st.rep,
+                st.idx,
+                if st.in_tail { " tail" } else { "" }
+            ),
+        }
+    }
+
+    /// `None` means no pass is active — reclaim mode.
+    fn put_event(&mut self, pool: PoolKind) -> Option<usize> {
+        let st = self.stream.as_ref()?;
+        match st.peek() {
+            Some(BufEvent::Put { pool: p, slot }) if p == pool => {
+                self.stream.as_mut().unwrap().advance();
+                Some(slot)
+            }
+            other => panic!(
+                "schedule mismatch in pass '{}' (chunk {}, event {}{}): engine puts \
+                 {pool:?}, schedule says {other:?}",
+                st.pass.name,
+                st.rep,
+                st.idx,
+                if st.in_tail { " tail" } else { "" }
+            ),
+        }
+    }
+
     // -------------------------------------------------------- f32
     /// Checkout with unspecified contents (for buffers the caller
     /// fully overwrites, e.g. GEMM outputs).
     pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
-        self.f32s.take(len)
+        if len == 0 {
+            return Vec::new();
+        }
+        let slot = self.take_event(PoolKind::F32, len, TakeInit::Raw);
+        self.f32s.take(slot, len)
     }
 
     /// Checkout guaranteed all-zero (for accumulation targets).
     pub fn take_zeroed_f32(&mut self, len: usize) -> Vec<f32> {
-        self.f32s.take_zeroed(len)
+        if len == 0 {
+            return Vec::new();
+        }
+        let slot = self.take_event(PoolKind::F32, len, TakeInit::Zeroed);
+        self.f32s.take_zeroed(slot, len)
     }
 
     /// Checkout holding a copy of `src`.
     pub fn take_copy_f32(&mut self, src: &[f32]) -> Vec<f32> {
-        let mut v = self.f32s.take(src.len());
-        v.copy_from_slice(src);
+        if src.is_empty() {
+            return Vec::new();
+        }
+        let slot = self.take_event(PoolKind::F32, src.len(), TakeInit::Copy);
+        let mut v = self.f32s.vacate(slot);
+        v.clear();
+        v.extend_from_slice(src);
         v
     }
 
     pub fn put_f32(&mut self, v: Vec<f32>) {
-        self.f32s.put(v);
+        if v.capacity() == 0 {
+            return;
+        }
+        match self.put_event(PoolKind::F32) {
+            Some(slot) => self.f32s.put(slot, v),
+            None => self.f32s.reclaim(v),
+        }
     }
 
     // -------------------------------------------------------- u32
     pub fn take_u32(&mut self, len: usize) -> Vec<u32> {
-        self.u32s.take(len)
+        if len == 0 {
+            return Vec::new();
+        }
+        let slot = self.take_event(PoolKind::U32, len, TakeInit::Raw);
+        self.u32s.take(slot, len)
     }
 
     pub fn put_u32(&mut self, v: Vec<u32>) {
-        self.u32s.put(v);
+        if v.capacity() == 0 {
+            return;
+        }
+        match self.put_event(PoolKind::U32) {
+            Some(slot) => self.u32s.put(slot, v),
+            None => self.u32s.reclaim(v),
+        }
     }
 
     // -------------------------------------------------- bit storage
@@ -146,61 +327,87 @@ impl StepArena {
     /// which overwrite (or pre-zero) every word themselves.
     pub fn take_bits(&mut self, rows: usize, cols: usize) -> BitMatrix {
         let wpr = cols.div_ceil(64);
-        let data = self.u64s.take(rows * wpr);
+        let words = rows * wpr;
+        let data = if words == 0 {
+            Vec::new()
+        } else {
+            let slot = self.take_event(PoolKind::U64, words, TakeInit::Raw);
+            self.u64s.take(slot, words)
+        };
         BitMatrix { rows, cols, words_per_row: wpr, data }
     }
 
     /// Zeroed packed matrix — for OR-style bit accumulation targets.
     pub fn take_zeroed_bits(&mut self, rows: usize, cols: usize) -> BitMatrix {
         let wpr = cols.div_ceil(64);
-        let data = self.u64s.take_zeroed(rows * wpr);
+        let words = rows * wpr;
+        let data = if words == 0 {
+            Vec::new()
+        } else {
+            let slot = self.take_event(PoolKind::U64, words, TakeInit::Zeroed);
+            self.u64s.take_zeroed(slot, words)
+        };
         BitMatrix { rows, cols, words_per_row: wpr, data }
     }
 
     pub fn put_bits(&mut self, m: BitMatrix) {
-        self.u64s.put(m.data);
+        self.put_u64_words(m.data);
     }
 
     /// Zeroed bit mask of `len` bits.
     pub fn take_mask(&mut self, len: usize) -> BitMask {
-        BitMask { len, data: self.u64s.take_zeroed(len.div_ceil(64)) }
+        let words = len.div_ceil(64);
+        let data = if words == 0 {
+            Vec::new()
+        } else {
+            let slot = self.take_event(PoolKind::U64, words, TakeInit::Zeroed);
+            self.u64s.take_zeroed(slot, words)
+        };
+        BitMask { len, data }
     }
 
     pub fn put_mask(&mut self, m: BitMask) {
-        self.u64s.put(m.data);
+        self.put_u64_words(m.data);
+    }
+
+    fn put_u64_words(&mut self, v: Vec<u64>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        match self.put_event(PoolKind::U64) {
+            Some(slot) => self.u64s.put(slot, v),
+            None => self.u64s.reclaim(v),
+        }
     }
 
     // -------------------------------------------------------- f16
     /// f16 carrier with unspecified contents (fully overwritten by
     /// the conversion that follows every checkout).
     pub fn take_f16(&mut self, len: usize) -> F16Vec {
-        F16Vec(self.u16s.take(len))
+        if len == 0 {
+            return F16Vec(Vec::new());
+        }
+        let slot = self.take_event(PoolKind::F16, len, TakeInit::Raw);
+        F16Vec(self.u16s.take(slot, len))
     }
 
     pub fn put_f16(&mut self, v: F16Vec) {
-        self.u16s.put(v.0);
+        if v.0.capacity() == 0 {
+            return;
+        }
+        match self.put_event(PoolKind::F16) {
+            Some(slot) => self.u16s.put(slot, v.0),
+            None => self.u16s.reclaim(v.0),
+        }
     }
 
     // -------------------------------------------------- accounting
-    /// Bytes resident in the arena: parked + checked-out capacities.
-    /// After a steady step (everything returned) this is the step's
-    /// whole transient footprint.
+    /// Bytes resident in the arena: the sum of installed slot
+    /// capacities.  Constant from installation on — whether buffers
+    /// are parked or checked out — and equal to the compiled
+    /// schedule's `arena_bytes` by construction.
     pub fn heap_bytes(&self) -> usize {
-        (self.f32s.pooled + self.f32s.outstanding) * 4
-            + (self.u64s.pooled + self.u64s.outstanding) * 8
-            + (self.u16s.pooled + self.u16s.outstanding) * 2
-            + (self.u32s.pooled + self.u32s.outstanding) * 4
-    }
-
-    /// Free-list misses so far — heap allocations the arena performed.
-    /// Flat across steps ⇔ the steady state allocates nothing.
-    pub fn misses(&self) -> usize {
-        self.f32s.misses + self.u64s.misses + self.u16s.misses + self.u32s.misses
-    }
-
-    /// Total checkouts (diagnostic).
-    pub fn takes(&self) -> usize {
-        self.f32s.takes + self.u64s.takes + self.u16s.takes + self.u32s.takes
+        self.f32s.bytes(4) + self.u64s.bytes(8) + self.u16s.bytes(2) + self.u32s.bytes(4)
     }
 }
 
@@ -222,7 +429,8 @@ impl StepCtx {
     /// the stacks are empty after a completed step, but an error
     /// aborting a step between a residual push and its pop would
     /// otherwise leave a stale wrong-shaped buffer for the *next*
-    /// step's residual arm to consume).
+    /// step's residual arm to consume).  Runs outside passes, so the
+    /// puts reclaim.
     pub(crate) fn drain_skip_stacks(&mut self) {
         while let Some(v) = self.skips.pop() {
             self.arena.put_f32(v);
@@ -233,896 +441,163 @@ impl StepCtx {
     }
 }
 
-// ===================================================================
-// Step schedule: symbolic replay of the engines' arena traffic.
-//
-// A training step's take/put sequence is fully determined by the
-// Plan, the engine, the tier, and the microbatch — so the steady
-// arena pool (slot sizes = buffer capacities, slot count = peak
-// concurrency under best-fit reuse) can be *planned* without running
-// anything.  `plan_standard_step` / `plan_proposed_step` replay the
-// same checkout sequence the trainers perform against a simulated
-// free list with the identical best-fit policy; the result is the
-// byte-exact steady-state arena composition `memmodel::step_envelope`
-// prices and CI diffs against the measured `arena_bytes()`.
-//
-// DRIFT WARNING: these traces mirror `standard.rs` / `proposed.rs`
-// line by line (each phase is commented with its source).  When a
-// trainer's buffer flow changes, change the trace with it — the
-// planned-vs-measured tests in this module and the CI regression
-// step exist to catch exactly that.
-// ===================================================================
-
-use super::plan::{LayerPlan, Plan};
-
-/// One simulated typed free list (mirror of [`FreeList`]): caps
-/// sorted ascending, `allocated` = Σ missed capacities = the pool's
-/// steady element count (puts conserve).
-#[derive(Debug, Default, Clone)]
-struct SymPool {
-    caps: Vec<usize>,
-    allocated: usize,
-}
-
-impl SymPool {
-    fn take(&mut self, len: usize) -> usize {
-        if len == 0 {
-            return 0;
-        }
-        let idx = self.caps.partition_point(|c| *c < len);
-        if idx < self.caps.len() {
-            return self.caps.remove(idx);
-        }
-        self.allocated += len;
-        len
-    }
-
-    fn put(&mut self, cap: usize) {
-        if cap == 0 {
-            return;
-        }
-        let idx = self.caps.partition_point(|c| *c < cap);
-        self.caps.insert(idx, cap);
-    }
-}
-
-/// Simulated [`StepArena`].
-#[derive(Debug, Default, Clone)]
-struct SymArena {
-    f32s: SymPool,
-    u64s: SymPool,
-    u16s: SymPool,
-    u32s: SymPool,
-}
-
-impl SymArena {
-    fn bits(&mut self, rows: usize, cols: usize) -> usize {
-        self.u64s.take(rows * cols.div_ceil(64))
-    }
-
-    fn mask(&mut self, len: usize) -> usize {
-        self.u64s.take(len.div_ceil(64))
-    }
-}
-
-/// Planned steady-state arena composition of one training step.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct PlannedStep {
-    pub f32_bytes: usize,
-    pub u64_bytes: usize,
-    pub u16_bytes: usize,
-    pub u32_bytes: usize,
-}
-
-impl PlannedStep {
-    pub fn total_bytes(&self) -> usize {
-        self.f32_bytes + self.u64_bytes + self.u16_bytes + self.u32_bytes
-    }
-
-    fn from_sym(a: &SymArena) -> PlannedStep {
-        PlannedStep {
-            f32_bytes: a.f32s.allocated * 4,
-            u64_bytes: a.u64s.allocated * 8,
-            u16_bytes: a.u16s.allocated * 2,
-            u32_bytes: a.u32s.allocated * 4,
-        }
-    }
-}
-
-/// Replay the standard engine's arena traffic for one step on the
-/// accelerated (fused) tiers.  Mirrors `StandardTrainer`'s
-/// `matmul_forward` / `matmul_backward` / pool ops / `end_chunk`.
-pub fn plan_standard_step(plan: &Plan, micro: usize, chunks: usize) -> PlannedStep {
-    let m = micro;
-    let mut a = SymArena::default();
-    let direct = chunks == 1;
-    for _chunk in 0..chunks {
-        // caps retained to the end of the chunk, in engine drain order
-        let mut acts: Vec<usize> = Vec::new();
-        let mut mus: Vec<usize> = Vec::new();
-        let mut psis: Vec<usize> = Vec::new();
-        let mut masks: Vec<usize> = Vec::new();
-        let mut skips: Vec<usize> = Vec::new();
-        // ---------------- forward (ops::forward_plan)
-        let mut cur = a.f32s.take(m * plan.input_elems);
-        for layer in &plan.layers {
-            match *layer {
-                LayerPlan::Dense { k, n, first } => {
-                    let y = a.f32s.take(m * n);
-                    if first {
-                        let bw = a.f32s.take(k * n);
-                        a.f32s.put(bw);
-                    } else {
-                        let xh = a.bits(m, k);
-                        a.u64s.put(xh);
-                    }
-                    let xn = a.f32s.take(m * n);
-                    let mu = a.f32s.take(n);
-                    let psi = a.f32s.take(n);
-                    a.f32s.put(y);
-                    acts.push(cur);
-                    mus.push(mu);
-                    psis.push(psi);
-                    acts.push(a.f32s.take(m * n)); // retained xn copy
-                    cur = xn;
-                }
-                LayerPlan::Conv { g, cout, first } => {
-                    let rows = g.rows(m);
-                    let y;
-                    if first {
-                        let bw = a.f32s.take(g.k() * cout);
-                        y = a.f32s.take(rows * cout);
-                        let cols = a.f32s.take(rows * g.k());
-                        a.f32s.put(cols);
-                        a.f32s.put(bw);
-                    } else {
-                        y = a.f32s.take(rows * cout);
-                        let xh = a.bits(rows, g.k());
-                        let scratch = a.f32s.take(g.kside * g.kside * cout);
-                        a.f32s.put(scratch);
-                        a.u64s.put(xh);
-                    }
-                    let xn = a.f32s.take(rows * cout);
-                    let mu = a.f32s.take(cout);
-                    let psi = a.f32s.take(cout);
-                    a.f32s.put(y);
-                    acts.push(cur);
-                    mus.push(mu);
-                    psis.push(psi);
-                    acts.push(a.f32s.take(rows * cout));
-                    cur = xn;
-                }
-                LayerPlan::MaxPool { h, w, c, oh, ow } => {
-                    let cells = m * oh * ow * c;
-                    let out = a.f32s.take(cells);
-                    let mask = a.u32s.take(cells);
-                    a.f32s.put(cur);
-                    masks.push(mask);
-                    let _ = (h, w);
-                    cur = out;
-                }
-                LayerPlan::GlobalPool { c, .. } => {
-                    let out = a.f32s.take(m * c);
-                    a.f32s.put(cur);
-                    cur = out;
-                }
-                LayerPlan::Residual { save: true, skip } => {
-                    skips.push(a.f32s.take(m * skip.h * skip.w * skip.c));
-                }
-                LayerPlan::Residual { save: false, .. } => {
-                    let s = skips.pop().unwrap();
-                    a.f32s.put(s);
-                }
-                LayerPlan::Flatten => {}
-            }
-        }
-        // ---------------- softmax (ops::run_train_chunks)
-        let dlogits = a.f32s.take(m * plan.classes);
-        a.f32s.put(cur); // logits
-        // ---------------- backward (ops::backward_plan)
-        let mut dcur = dlogits;
-        let mut skip_grads: Vec<usize> = Vec::new();
-        // retained acts are indexed 2wi / 2wi+1; recover input-act
-        // element counts per weight layer for the dW reference paths
-        let mut wi = plan.layers.iter().filter(|l| l.weight_len() > 0).count();
-        for layer in plan.layers.iter().rev() {
-            match *layer {
-                LayerPlan::Dense { k, n, first } => {
-                    wi -= 1;
-                    let rows = m;
-                    let dy = a.f32s.take(rows * n);
-                    let mv = a.f32s.take(n);
-                    let mvx = a.f32s.take(n);
-                    a.f32s.put(mv);
-                    a.f32s.put(mvx);
-                    a.f32s.put(dcur);
-                    let dx = if first {
-                        0
-                    } else {
-                        let wt_f = a.f32s.take(n * k);
-                        let dx = a.f32s.take(rows * k);
-                        a.f32s.put(wt_f);
-                        dx
-                    };
-                    if direct {
-                        if !first {
-                            let xh = a.bits(rows, k);
-                            a.u64s.put(xh);
-                        }
-                    } else {
-                        let dw = a.f32s.take(k * n);
-                        if !first {
-                            let xh = a.bits(rows, k);
-                            a.u64s.put(xh);
-                        }
-                        a.f32s.put(dw);
-                    }
-                    a.f32s.put(dy);
-                    dcur = dx;
-                }
-                LayerPlan::Conv { g, cout, first } => {
-                    wi -= 1;
-                    let rows = g.rows(m);
-                    let k = g.k();
-                    let dy = a.f32s.take(rows * cout);
-                    let mv = a.f32s.take(cout);
-                    let mvx = a.f32s.take(cout);
-                    a.f32s.put(mv);
-                    a.f32s.put(mvx);
-                    a.f32s.put(dcur);
-                    let dx = if first {
-                        0
-                    } else {
-                        let dxb = a.f32s.take(g.in_len(m));
-                        let panel = a.f32s.take(rows * g.cin);
-                        let wtap = a.f32s.take(cout * g.cin);
-                        a.f32s.put(panel);
-                        a.f32s.put(wtap);
-                        dxb
-                    };
-                    // conv_dw_into: the accumulate arm takes its
-                    // scratch dw before the shared helper runs
-                    let dw = if direct { 0 } else { a.f32s.take(k * cout) };
-                    if first {
-                        // reference dW: zero-pad f32 im2col of the raw
-                        // retained input
-                        let cols = a.f32s.take(rows * k);
-                        a.f32s.put(cols);
-                    } else {
-                        let xh = a.bits(rows, k);
-                        let scratch = a.f32s.take(g.kside * g.kside * cout);
-                        a.f32s.put(scratch);
-                        a.u64s.put(xh);
-                    }
-                    a.f32s.put(dw);
-                    a.f32s.put(dy);
-                    dcur = dx;
-                }
-                LayerPlan::MaxPool { h, w, c, .. } => {
-                    let dx = a.f32s.take(m * h * w * c);
-                    a.u32s.put(masks.pop().unwrap());
-                    a.f32s.put(dcur);
-                    dcur = dx;
-                }
-                LayerPlan::GlobalPool { h, w, c } => {
-                    let dx = a.f32s.take(m * h * w * c);
-                    a.f32s.put(dcur);
-                    dcur = dx;
-                }
-                LayerPlan::Residual { save: false, skip } => {
-                    skip_grads.push(a.f32s.take(m * skip.h * skip.w * skip.c));
-                }
-                LayerPlan::Residual { save: true, .. } => {
-                    a.f32s.put(skip_grads.pop().unwrap());
-                }
-                LayerPlan::Flatten => {}
-            }
-        }
-        a.f32s.put(dcur); // recycle_grad (0 for a first-layer finish)
-        debug_assert_eq!(wi, 0);
-        // ---------------- end_chunk: drain retained state
-        for c in acts {
-            a.f32s.put(c);
-        }
-        for c in mus.into_iter().chain(psis) {
-            a.f32s.put(c);
-        }
-        for c in masks {
-            a.u32s.put(c);
-        }
-    }
-    PlannedStep::from_sym(&a)
-}
-
-/// Retained-residual capacities of one proposed-engine layer (the
-/// trace mirror of `proposed::Residuals`).
-#[derive(Default, Clone, Copy)]
-struct SymRes {
-    xhat: usize,    // u64 words
-    x_first: usize, // f32
-    ste: usize,     // u64
-    bn_sign: usize, // u64
-    psi: usize,     // u16
-    omega: usize,   // u16
-    dw_sign: usize, // u64
-}
-
-/// Trace mirror of `ProposedTrainer::matmul_bn_forward` (fused
-/// tiers).  Consumes the incoming activation cap, returns the new
-/// one (x_next) plus the layer's retained residual caps.
-#[allow(clippy::too_many_arguments)]
-fn sym_prop_forward(
-    a: &mut SymArena,
-    cur: usize,
-    cur_len: usize,
-    rows: usize,
-    k: usize,
-    n: usize,
-    first: bool,
-    conv: bool,
-) -> (usize, SymRes) {
-    let mut r = SymRes::default();
-    let y;
-    if first {
-        let w = a.f32s.take(k * n);
-        y = if conv {
-            let cols = a.f32s.take(rows * k);
-            let out = a.f32s.take(rows * n);
-            a.f32s.put(cols);
-            out
-        } else {
-            a.f32s.take(rows * n)
-        };
-        a.f32s.put(w);
-        r.x_first = cur; // retained
-    } else {
-        r.ste = a.mask(cur_len);
-        r.xhat = a.bits(rows, k);
-        a.f32s.put(cur);
-        y = a.f32s.take(rows * n);
-    }
-    // BN l1 (beta/x_next/psi/omega/mu f32 scratch + zeroed packed
-    // signs; psi/omega re-encode into retained f16 carriers)
-    let beta = a.f32s.take(n);
-    let x_next = a.f32s.take(rows * n);
-    let psi = a.f32s.take(n);
-    let omega = a.f32s.take(n);
-    let mu = a.f32s.take(n);
-    r.bn_sign = a.bits(rows, n);
-    a.f32s.put(y);
-    a.f32s.put(beta);
-    a.f32s.put(mu);
-    r.psi = a.u16s.take(n);
-    r.omega = a.u16s.take(n);
-    a.f32s.put(psi);
-    a.f32s.put(omega);
-    (x_next, r)
-}
-
-/// Trace mirror of the backward driver conversions +
-/// `ProposedTrainer::matmul_bn_backward` / `accumulate_dw` (fused
-/// tiers).  Consumes the incoming f16 gradient cap, returns the
-/// upstream one (0 after the first layer).
-#[allow(clippy::too_many_arguments)]
-fn sym_prop_backward(
-    a: &mut SymArena,
-    dcur16: usize,
-    rows: usize,
-    k: usize,
-    n: usize,
-    first: bool,
-    conv: Option<(crate::bitops::ConvGeom, usize)>,
-    r: &mut SymRes,
-    single: bool,
-) -> usize {
-    // driver: grad_to_f32 before matmul_backward
-    let dnext = a.f32s.take(rows * n);
-    a.u16s.put(dcur16);
-    // BN backward scratch
-    let dy = a.f32s.take(rows * n);
-    let psi = a.f32s.take(n);
-    let omega = a.f32s.take(n);
-    let mv = a.f32s.take(n);
-    let mvx = a.f32s.take(n);
-    a.f32s.put(psi);
-    a.f32s.put(omega);
-    a.f32s.put(mv);
-    a.f32s.put(mvx);
-    a.f32s.put(dnext);
-    // accumulate_dw: first-layer convs im2col their retained input
-    let first_cols = match (first, conv) {
-        (true, Some(_)) => a.f32s.take(rows * k),
-        _ => 0,
-    };
-    if single {
-        let dw = a.f32s.take(k * n);
-        r.dw_sign = a.bits(k, n);
-        a.f32s.put(dw);
-    } else {
-        // dw_acc is persistent (mem::take, not arena); only the
-        // per-chunk scratch comes from the pool
-        let scratch = a.f32s.take(k * n);
-        a.f32s.put(scratch);
-    }
-    a.f32s.put(first_cols);
-    // dX
-    let (dx, dx_len) = if first {
-        (0, 0)
-    } else {
-        match conv {
-            None => {
-                let wt_f = a.f32s.take(n * k);
-                let dx = a.f32s.take(rows * k);
-                a.f32s.put(wt_f);
-                (dx, rows * k)
-            }
-            Some((g, m)) => {
-                let dx = a.f32s.take(g.in_len(m));
-                let panel = a.f32s.take(rows * g.cin);
-                let wtap = a.f32s.take(n * g.cin);
-                a.f32s.put(panel);
-                a.f32s.put(wtap);
-                (dx, g.in_len(m))
-            }
-        }
-    };
-    a.f32s.put(dy);
-    // driver: grad_from_f32 of dx
-    if first {
-        0
-    } else {
-        let h = a.u16s.take(dx_len);
-        a.f32s.put(dx);
-        h
-    }
-}
-
-/// Replay the proposed engine's arena traffic for one step on the
-/// accelerated (fused) tiers.  Mirrors `ProposedTrainer`'s
-/// `matmul_bn_forward` / `matmul_bn_backward` / `accumulate_dw` /
-/// pool ops / drain points.
-pub fn plan_proposed_step(plan: &Plan, micro: usize, chunks: usize) -> PlannedStep {
-    let m = micro;
-    let mut a = SymArena::default();
-    let single = chunks == 1;
-    // single-chunk: residuals (incl. packed dW-sign) drain after the
-    // update phase; accumulating: after each chunk.  Either way the
-    // drain precedes the next chunk's takes, so the trace shape per
-    // chunk is the same.
-    for _chunk in 0..chunks {
-        let mut res: Vec<SymRes> = Vec::new();
-        let mut masks: Vec<usize> = Vec::new();
-        let mut skips: Vec<usize> = Vec::new();
-        // ---------------- forward
-        let mut cur = a.f32s.take(m * plan.input_elems);
-        let mut cur_len = m * plan.input_elems;
-        for layer in &plan.layers {
-            match *layer {
-                LayerPlan::Dense { k, n, first } => {
-                    let (x_next, r) =
-                        sym_prop_forward(&mut a, cur, cur_len, m, k, n, first, false);
-                    cur = x_next;
-                    cur_len = m * n;
-                    res.push(r);
-                }
-                LayerPlan::Conv { g, cout, first } => {
-                    let rows = g.rows(m);
-                    let (x_next, r) =
-                        sym_prop_forward(&mut a, cur, cur_len, rows, g.k(), cout, first, true);
-                    cur = x_next;
-                    cur_len = rows * cout;
-                    res.push(r);
-                }
-                LayerPlan::MaxPool { h, w, c, oh, ow } => {
-                    let cells = m * oh * ow * c;
-                    let out = a.f32s.take(cells);
-                    let mask32 = a.u32s.take(cells);
-                    a.f32s.put(cur);
-                    masks.push(a.mask(m * h * w * c));
-                    a.u32s.put(mask32);
-                    cur = out;
-                    cur_len = cells;
-                }
-                LayerPlan::GlobalPool { c, .. } => {
-                    let out = a.f32s.take(m * c);
-                    a.f32s.put(cur);
-                    cur = out;
-                    cur_len = m * c;
-                }
-                LayerPlan::Residual { save: true, skip } => {
-                    skips.push(a.f32s.take(m * skip.h * skip.w * skip.c));
-                }
-                LayerPlan::Residual { save: false, .. } => a.f32s.put(skips.pop().unwrap()),
-                LayerPlan::Flatten => {}
-            }
-        }
-        // ---------------- softmax + f16 carrier of dlogits
-        let dlogits = a.f32s.take(m * plan.classes);
-        a.f32s.put(cur);
-        let mut dcur16 = a.u16s.take(m * plan.classes);
-        a.f32s.put(dlogits);
-        // ---------------- backward
-        let mut skip_grads: Vec<usize> = Vec::new();
-        let mut wi = plan.layers.iter().filter(|l| l.weight_len() > 0).count();
-        for layer in plan.layers.iter().rev() {
-            match *layer {
-                LayerPlan::Dense { k, n, first } => {
-                    wi -= 1;
-                    dcur16 = sym_prop_backward(
-                        &mut a, dcur16, m, k, n, first, None, &mut res[wi], single,
-                    );
-                }
-                LayerPlan::Conv { g, cout, first } => {
-                    wi -= 1;
-                    dcur16 = sym_prop_backward(
-                        &mut a,
-                        dcur16,
-                        g.rows(m),
-                        g.k(),
-                        cout,
-                        first,
-                        Some((g, m)),
-                        &mut res[wi],
-                        single,
-                    );
-                }
-                LayerPlan::MaxPool { h, w, c, oh, ow } => {
-                    let d = a.f32s.take(m * oh * ow * c);
-                    a.u16s.put(dcur16);
-                    let cells_in = m * h * w * c;
-                    let dx = a.f32s.take(cells_in);
-                    a.u64s.put(masks.pop().unwrap());
-                    a.f32s.put(d);
-                    dcur16 = a.u16s.take(cells_in);
-                    a.f32s.put(dx);
-                }
-                LayerPlan::GlobalPool { h, w, c } => {
-                    let d = a.f32s.take(m * c);
-                    a.u16s.put(dcur16);
-                    let dx = a.f32s.take(m * h * w * c);
-                    a.f32s.put(d);
-                    dcur16 = a.u16s.take(m * h * w * c);
-                    a.f32s.put(dx);
-                }
-                LayerPlan::Residual { save: false, skip } => {
-                    let len = m * skip.oh * skip.ow * skip.co;
-                    let d = a.f32s.take(len);
-                    a.u16s.put(dcur16);
-                    skip_grads.push(a.f32s.take(m * skip.h * skip.w * skip.c));
-                    dcur16 = a.u16s.take(len);
-                    a.f32s.put(d);
-                }
-                LayerPlan::Residual { save: true, skip } => {
-                    let len = m * skip.h * skip.w * skip.c;
-                    let d = a.f32s.take(len);
-                    a.u16s.put(dcur16);
-                    a.f32s.put(skip_grads.pop().unwrap());
-                    dcur16 = a.u16s.take(len);
-                    a.f32s.put(d);
-                }
-                LayerPlan::Flatten => {}
-            }
-        }
-        a.u16s.put(dcur16); // recycle_grad
-        debug_assert_eq!(wi, 0);
-        // ---------------- drain residuals + masks
-        for r in res {
-            a.u64s.put(r.xhat);
-            a.f32s.put(r.x_first);
-            a.u64s.put(r.ste);
-            a.u64s.put(r.bn_sign);
-            a.u16s.put(r.psi);
-            a.u16s.put(r.omega);
-            a.u64s.put(r.dw_sign);
-        }
-        for c in masks {
-            a.u64s.put(c);
-        }
-    }
-    PlannedStep::from_sym(&a)
-}
-
-/// Replay the **forward-only inference** arena traffic of
-/// `serve::PackedInferEngine` on the accelerated (fused) tiers:
-/// one forward at every batch size `max_batch..=1` descending —
-/// exactly the engine's `warmup()` schedule — so the result is the
-/// steady scratch pool any batch size ≤ `max_batch` then serves from
-/// allocation-free.  `proposed` selects the Algorithm 2 forward
-/// (ℓ1 BN + packed sign panel) over Algorithm 1 (ℓ2 BN).
-///
-/// DRIFT WARNING: mirrors `serve/engine.rs` take/put for take/put;
-/// the planned-vs-measured test below catches divergence.
-pub fn plan_infer_forward(plan: &Plan, proposed: bool, max_batch: usize) -> PlannedStep {
-    let mut a = SymArena::default();
-    for b in (1..=max_batch).rev() {
-        let mut skips: Vec<usize> = Vec::new();
-        let mut cur = a.f32s.take(b * plan.input_elems);
-        let mut cur_len = b * plan.input_elems;
-        for layer in &plan.layers {
-            match *layer {
-                LayerPlan::Dense { k, n, first } => {
-                    cur = if proposed {
-                        sym_infer_prop(&mut a, cur, b, k, n, first, None)
-                    } else {
-                        sym_infer_std(&mut a, cur, b, k, n, first, None)
-                    };
-                    cur_len = b * n;
-                }
-                LayerPlan::Conv { g, cout, first } => {
-                    let rows = g.rows(b);
-                    cur = if proposed {
-                        sym_infer_prop(&mut a, cur, rows, g.k(), cout, first, Some(g))
-                    } else {
-                        sym_infer_std(&mut a, cur, rows, g.k(), cout, first, Some(g))
-                    };
-                    cur_len = rows * cout;
-                }
-                LayerPlan::MaxPool { c, oh, ow, .. } => {
-                    let cells = b * oh * ow * c;
-                    let out = a.f32s.take(cells);
-                    let mask = a.u32s.take(cells);
-                    a.f32s.put(cur);
-                    a.u32s.put(mask);
-                    cur = out;
-                    cur_len = cells;
-                }
-                LayerPlan::GlobalPool { c, .. } => {
-                    let out = a.f32s.take(b * c);
-                    a.f32s.put(cur);
-                    cur = out;
-                    cur_len = b * c;
-                }
-                LayerPlan::Residual { save: true, .. } => {
-                    skips.push(a.f32s.take(cur_len));
-                }
-                LayerPlan::Residual { save: false, .. } => a.f32s.put(skips.pop().unwrap()),
-                LayerPlan::Flatten => {}
-            }
-        }
-        a.f32s.put(cur); // infer_into recycles the logits
-    }
-    PlannedStep::from_sym(&a)
-}
-
-/// One standard-forward matmul+BN of the inference engine
-/// (serve/engine.rs `forward_standard`, accelerated tiers).
-fn sym_infer_std(
-    a: &mut SymArena,
-    cur: usize,
-    rows: usize,
-    k: usize,
-    n: usize,
-    first: bool,
-    conv: Option<crate::bitops::ConvGeom>,
-) -> usize {
-    let y;
-    match conv {
-        None => {
-            y = a.f32s.take(rows * n);
-            if first {
-                let bw = a.f32s.take(k * n);
-                a.f32s.put(bw);
-            } else {
-                let xh = a.bits(rows, k);
-                a.u64s.put(xh);
-            }
-        }
-        Some(g) => {
-            if first {
-                let bw = a.f32s.take(k * n);
-                y = a.f32s.take(rows * n);
-                let cols = a.f32s.take(rows * k);
-                a.f32s.put(cols);
-                a.f32s.put(bw);
-            } else {
-                y = a.f32s.take(rows * n);
-                let xh = a.bits(rows, k);
-                let scratch = a.f32s.take(g.kside * g.kside * n);
-                a.f32s.put(scratch);
-                a.u64s.put(xh);
-            }
-        }
-    }
-    let xn = a.f32s.take(rows * n);
-    let mu = a.f32s.take(n);
-    let psi = a.f32s.take(n);
-    a.f32s.put(y);
-    a.f32s.put(cur);
-    a.f32s.put(mu);
-    a.f32s.put(psi);
-    xn
-}
-
-/// One proposed-forward matmul+BN of the inference engine
-/// (serve/engine.rs `forward_proposed`, accelerated tiers).
-fn sym_infer_prop(
-    a: &mut SymArena,
-    cur: usize,
-    rows: usize,
-    k: usize,
-    n: usize,
-    first: bool,
-    conv: Option<crate::bitops::ConvGeom>,
-) -> usize {
-    let y;
-    if first {
-        let w = a.f32s.take(k * n);
-        y = match conv {
-            None => a.f32s.take(rows * n),
-            Some(_) => {
-                let cols = a.f32s.take(rows * k);
-                let out = a.f32s.take(rows * n);
-                a.f32s.put(cols);
-                out
-            }
-        };
-        a.f32s.put(w);
-        a.f32s.put(cur);
-    } else {
-        let xh = a.bits(rows, k);
-        a.f32s.put(cur);
-        y = a.f32s.take(rows * n);
-        a.u64s.put(xh);
-    }
-    let x_next = a.f32s.take(rows * n);
-    let psi = a.f32s.take(n);
-    let omega = a.f32s.take(n);
-    let mu = a.f32s.take(n);
-    let sign = a.bits(rows, n);
-    a.f32s.put(y);
-    a.f32s.put(psi);
-    a.f32s.put(omega);
-    a.f32s.put(mu);
-    a.u64s.put(sign);
-    x_next
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::naive::schedule::POOLS;
 
-    #[test]
-    fn best_fit_reuses_smallest_adequate() {
-        let mut a = StepArena::new();
-        let small = a.take_f32(10);
-        let big = a.take_f32(1000);
-        assert_eq!(a.misses(), 2);
-        a.put_f32(small);
-        a.put_f32(big);
-        // a request for 8 must come from the 10-cap buffer, not 1000
-        let v = a.take_f32(8);
-        assert_eq!(a.misses(), 2, "pool hit expected");
-        assert_eq!(v.capacity(), 10);
-        assert_eq!(v.len(), 8);
-        a.put_f32(v);
-        // a request for 500 skips the 10-cap and takes the 1000-cap
-        let v = a.take_f32(500);
-        assert_eq!(a.misses(), 2);
-        assert_eq!(v.capacity(), 1000);
-        a.put_f32(v);
-        // larger than anything pooled: a miss
-        let v = a.take_f32(2000);
-        assert_eq!(a.misses(), 3);
-        a.put_f32(v);
+    fn table(f32_caps: &[usize], u64_caps: &[usize]) -> SlotTable {
+        let mut caps: [Vec<usize>; POOLS] = Default::default();
+        caps[PoolKind::F32.idx()] = f32_caps.to_vec();
+        caps[PoolKind::U64.idx()] = u64_caps.to_vec();
+        SlotTable { caps }
+    }
+
+    fn pass(name: &str, repeats: usize, events: Vec<BufEvent>, tail: Vec<BufEvent>) -> Arc<PassEvents> {
+        Arc::new(PassEvents { name: name.into(), repeats, events, tail })
+    }
+
+    fn take(slot: usize, len: usize, init: TakeInit) -> BufEvent {
+        BufEvent::Take { pool: PoolKind::F32, slot, len, init }
+    }
+
+    fn put(slot: usize) -> BufEvent {
+        BufEvent::Put { pool: PoolKind::F32, slot }
     }
 
     #[test]
-    fn steady_sequences_stop_missing() {
-        // the zero-alloc guarantee in miniature: a repeated take/put
-        // pattern misses only on its first round
+    fn executes_a_scripted_pass_with_repeats() {
         let mut a = StepArena::new();
-        let mut rounds_misses = Vec::new();
-        for _ in 0..4 {
-            let m0 = a.misses();
-            let x = a.take_f32(128);
-            let y = a.take_zeroed_f32(64);
-            let b = a.take_bits(16, 70);
-            let mask = a.take_mask(300);
-            let h = a.take_f16(50);
-            let u = a.take_u32(40);
+        a.install(&table(&[8, 4], &[]));
+        assert_eq!(a.heap_bytes(), (8 + 4) * 4);
+        let p = pass(
+            "t",
+            3,
+            vec![
+                take(0, 6, TakeInit::Raw),
+                take(1, 4, TakeInit::Zeroed),
+                put(1),
+                put(0),
+            ],
+            vec![],
+        );
+        a.begin_pass(p);
+        for _ in 0..3 {
+            let mut x = a.take_f32(6);
+            assert_eq!(x.len(), 6);
+            x.fill(7.0);
+            let z = a.take_zeroed_f32(4);
+            assert!(z.iter().all(|&v| v == 0.0));
+            a.put_f32(z);
             a.put_f32(x);
-            a.put_f32(y);
-            a.put_bits(b);
-            a.put_mask(mask);
-            a.put_f16(h);
-            a.put_u32(u);
-            rounds_misses.push(a.misses() - m0);
         }
-        assert!(rounds_misses[0] > 0);
-        assert_eq!(&rounds_misses[1..], &[0, 0, 0], "{rounds_misses:?}");
+        a.end_pass();
+        // footprint never moved
+        assert_eq!(a.heap_bytes(), (8 + 4) * 4);
     }
 
     #[test]
-    fn zeroed_and_copy_contents() {
+    fn copy_take_and_len0_rules() {
         let mut a = StepArena::new();
-        let mut v = a.take_f32(6);
-        v.iter_mut().for_each(|x| *x = 7.0);
+        a.install(&table(&[4], &[]));
+        let p = pass("t", 1, vec![take(0, 3, TakeInit::Copy), put(0)], vec![]);
+        a.begin_pass(p);
+        let src = [1.0f32, 2.0, 3.0];
+        let v = a.take_copy_f32(&src);
+        assert_eq!(v, src);
+        // len-0 takes and capacity-0 puts never touch the stream
+        let e = a.take_f32(0);
+        assert!(e.is_empty());
+        a.put_f32(e);
         a.put_f32(v);
-        let z = a.take_zeroed_f32(4);
-        assert!(z.iter().all(|&x| x == 0.0));
-        a.put_f32(z);
-        let c = a.take_copy_f32(&[1.0, 2.0, 3.0]);
-        assert_eq!(c, vec![1.0, 2.0, 3.0]);
-        a.put_f32(c);
-        // zeroed packed storage really is re-zeroed (packing ORs bits)
-        let mut m = a.take_zeroed_bits(2, 64);
-        m.data[0] = u64::MAX;
-        a.put_bits(m);
-        let m2 = a.take_zeroed_bits(2, 64);
-        assert!(m2.data.iter().all(|&w| w == 0));
+        a.end_pass();
     }
 
     #[test]
-    fn planners_run_across_the_zoo() {
-        use crate::models::{get, lower};
-        for m in ["mlp_mini", "cnv_mini", "binarynet_mini", "resnete_mini", "bireal_mini"] {
-            let plan = Plan::from_graph(&lower(&get(m).unwrap()).unwrap()).unwrap();
-            for chunks in [1usize, 2] {
-                let s = plan_standard_step(&plan, 4, chunks);
-                let p = plan_proposed_step(&plan, 4, chunks);
-                assert!(s.total_bytes() > 0, "{m}");
-                assert!(p.total_bytes() > 0, "{m}");
-                // proposed retains bit-packed activations where the
-                // standard engine retains f32: far less f32 traffic
-                assert!(p.f32_bytes < s.f32_bytes, "{m} chunks={chunks}");
-                // replays are deterministic
-                assert_eq!(s, plan_standard_step(&plan, 4, chunks), "{m}");
-                assert_eq!(p, plan_proposed_step(&plan, 4, chunks), "{m}");
-            }
-            // the pool fixed point means chunk count does not change
-            // the per-chunk slot set much: 2 chunks ≈ 1 chunk + the
-            // accumulation scratch
-            let one = plan_standard_step(&plan, 4, 1);
-            let two = plan_standard_step(&plan, 4, 2);
-            assert!(two.total_bytes() < one.total_bytes() * 2, "{m}");
-        }
-    }
-
-    #[test]
-    fn infer_planner_matches_measured_arena() {
-        // plan_infer_forward replays serve::PackedInferEngine's
-        // warmup trace: planned bytes must equal the measured arena
-        // byte for byte (this is the drift tripwire)
-        use crate::models::{get, lower};
-        use crate::naive::{build_engine, Accel, StepEngine};
-        use crate::serve::{InferAlgo, PackedInferEngine, WeightSnapshot};
-        use std::sync::Arc;
-        for m in ["mlp_mini", "cnv_mini", "bireal_mini"] {
-            let graph = lower(&get(m).unwrap()).unwrap();
-            let plan = Plan::from_graph(&graph).unwrap();
-            for (algo, name, prop) in [
-                (InferAlgo::Standard, "standard", false),
-                (InferAlgo::Proposed, "proposed", true),
-            ] {
-                let tr = build_engine(name, &graph, 2, "adam", Accel::Blocked, 1).unwrap();
-                let snap =
-                    Arc::new(WeightSnapshot::pack(&plan, &tr.weights_snapshot(), 0).unwrap());
-                let mut eng =
-                    PackedInferEngine::new(&graph, algo, Accel::Blocked, 3, snap).unwrap();
-                eng.warmup().unwrap();
-                let planned = plan_infer_forward(&plan, prop, 3);
-                assert_eq!(planned.total_bytes(), eng.arena_bytes(), "{m} {name}");
-                // forward-only scratch is far below a training step's
-                let step = if prop {
-                    plan_proposed_step(&plan, 3, 1)
-                } else {
-                    plan_standard_step(&plan, 3, 1)
-                };
-                assert!(planned.total_bytes() < step.total_bytes(), "{m} {name}");
-            }
-        }
-    }
-
-    #[test]
-    fn heap_bytes_tracks_pool() {
+    fn tail_runs_after_the_repeats() {
         let mut a = StepArena::new();
-        let v = a.take_f32(100);
-        assert!(a.heap_bytes() >= 400);
+        a.install(&table(&[4], &[]));
+        let p = pass("t", 1, vec![take(0, 4, TakeInit::Raw)], vec![put(0)]);
+        a.begin_pass(p);
+        let v = a.take_f32(4);
+        a.put_f32(v); // consumed from the tail
+        a.end_pass();
+    }
+
+    #[test]
+    #[should_panic(expected = "schedule mismatch")]
+    fn wrong_length_take_panics() {
+        let mut a = StepArena::new();
+        a.install(&table(&[8], &[]));
+        a.begin_pass(pass("t", 1, vec![take(0, 8, TakeInit::Raw), put(0)], vec![]));
+        let _ = a.take_f32(5);
+    }
+
+    #[test]
+    #[should_panic(expected = "ended early")]
+    fn unfinished_pass_panics_at_end() {
+        let mut a = StepArena::new();
+        a.install(&table(&[8], &[]));
+        a.begin_pass(pass("t", 2, vec![take(0, 8, TakeInit::Raw), put(0)], vec![]));
+        let v = a.take_f32(8);
         a.put_f32(v);
-        assert!(a.heap_bytes() >= 400, "parked buffers stay resident");
-        let before = a.heap_bytes();
-        let v = a.take_f32(50);
+        a.end_pass(); // only one of two chunks ran
+    }
+
+    #[test]
+    fn abort_reclaim_and_repair() {
+        let mut a = StepArena::new();
+        a.install(&table(&[8, 2], &[3]));
+        a.begin_pass(pass(
+            "t",
+            1,
+            vec![take(0, 8, TakeInit::Raw), take(1, 2, TakeInit::Raw), put(0), put(1)],
+            vec![],
+        ));
+        let big = a.take_f32(8);
+        let small = a.take_f32(2);
+        a.abort_pass();
+        drop(big); // lost on the error path
+        a.put_f32(small); // hygiene drain: reclaims into the cap-2 slot
+        assert_eq!(a.heap_bytes(), (8 + 2) * 4 + 3 * 8);
+        // next pass repairs the dropped slot and runs normally
+        a.begin_pass(pass("t2", 1, vec![take(0, 4, TakeInit::Raw), put(0)], vec![]));
+        let v = a.take_f32(4);
         a.put_f32(v);
-        assert_eq!(a.heap_bytes(), before, "steady reuse adds nothing");
+        a.end_pass();
+        assert_eq!(a.heap_bytes(), (8 + 2) * 4 + 3 * 8);
+    }
+
+    #[test]
+    fn bit_buffers_masks_and_f16_route_through_their_pools() {
+        let mut a = StepArena::new();
+        let mut caps: [Vec<usize>; POOLS] = Default::default();
+        caps[PoolKind::U64.idx()] = vec![4, 2];
+        caps[PoolKind::F16.idx()] = vec![5];
+        caps[PoolKind::U32.idx()] = vec![6];
+        a.install(&SlotTable { caps });
+        let ev = vec![
+            BufEvent::Take { pool: PoolKind::U64, slot: 0, len: 4, init: TakeInit::Raw },
+            BufEvent::Take { pool: PoolKind::U64, slot: 1, len: 2, init: TakeInit::Zeroed },
+            BufEvent::Take { pool: PoolKind::F16, slot: 0, len: 5, init: TakeInit::Raw },
+            BufEvent::Take { pool: PoolKind::U32, slot: 0, len: 6, init: TakeInit::Raw },
+            BufEvent::Put { pool: PoolKind::U32, slot: 0 },
+            BufEvent::Put { pool: PoolKind::F16, slot: 0 },
+            BufEvent::Put { pool: PoolKind::U64, slot: 1 },
+            BufEvent::Put { pool: PoolKind::U64, slot: 0 },
+        ];
+        a.begin_pass(pass("t", 1, ev, vec![]));
+        let bits = a.take_bits(2, 100); // 2 rows × 2 words
+        assert_eq!(bits.data.len(), 4);
+        let mask = a.take_mask(80); // 2 words, zeroed
+        assert!(mask.data.iter().all(|&w| w == 0));
+        let h = a.take_f16(5);
+        let m32 = a.take_u32(6);
+        a.put_u32(m32);
+        a.put_f16(h);
+        a.put_mask(mask);
+        a.put_bits(bits);
+        a.end_pass();
+        assert_eq!(a.heap_bytes(), (4 + 2) * 8 + 5 * 2 + 6 * 4);
     }
 }

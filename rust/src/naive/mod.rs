@@ -47,6 +47,7 @@ pub(crate) mod arena;
 pub(crate) mod ops;
 mod plan;
 mod proposed;
+pub mod schedule;
 mod standard;
 
 pub use plan::{LayerPlan, Plan, SkipGeom};

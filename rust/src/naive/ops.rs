@@ -31,6 +31,7 @@ use anyhow::{bail, Result};
 
 use super::arena::StepCtx;
 use super::plan::{LayerPlan, SkipGeom};
+use super::schedule::{OpInstr, StepSchedule};
 use super::softmax_xent_grad;
 use crate::bitops::simd;
 
@@ -91,84 +92,82 @@ pub(crate) trait EngineOps {
     fn end_chunk(&mut self);
 }
 
-/// Forward through the whole layer graph; returns logits (an arena
-/// checkout).  `retain` disables residual storage for eval (skip
-/// buffers are still consumed — they are part of the function value,
-/// not of the retained state).
+/// Forward through a compiled op list ([`StepSchedule::fwd_ops`] —
+/// `Flatten` already eliminated, weight indices baked in); returns
+/// logits (an arena checkout).  `retain` disables residual storage
+/// for eval (skip buffers are still consumed — they are part of the
+/// function value, not of the retained state).
 pub(crate) fn forward_plan<E: EngineOps>(
     e: &mut E,
-    layers: &[LayerPlan],
+    ops: &[OpInstr],
     x: &[f32],
     retain: bool,
 ) -> Result<Vec<f32>> {
     let b = e.micro();
     let mut cur = e.ctx().arena.take_copy_f32(x);
-    let mut wi = 0usize;
-    for layer in layers {
-        match layer {
-            LayerPlan::Dense { .. } | LayerPlan::Conv { .. } => {
-                cur = e.matmul_forward(cur, wi, layer, retain)?;
-                wi += 1;
+    for op in ops {
+        match op {
+            OpInstr::Matmul { wi, layer } => {
+                cur = e.matmul_forward(cur, *wi, layer, retain)?;
             }
-            LayerPlan::MaxPool { h, w, c, .. } => {
+            OpInstr::MaxPool { h, w, c } => {
                 cur = e.pool_forward(cur, *h, *w, *c, retain);
             }
-            LayerPlan::GlobalPool { h, w, c } => {
+            OpInstr::GlobalPool { h, w, c } => {
                 let ctx = e.ctx();
                 let mut out = ctx.arena.take_f32(b * c);
                 global_pool_forward_into(&cur, b, *h, *w, *c, &mut out);
                 ctx.arena.put_f32(std::mem::replace(&mut cur, out));
             }
-            LayerPlan::Residual { save: true, .. } => {
+            OpInstr::SkipSave => {
                 let ctx = e.ctx();
                 let s = ctx.arena.take_copy_f32(&cur);
                 ctx.skips.push(s);
             }
-            LayerPlan::Residual { save: false, skip } => {
+            OpInstr::SkipClose { skip } => {
                 let ctx = e.ctx();
                 let s = ctx.skips.pop().ok_or_else(|| {
-                    anyhow::anyhow!("residual add without a saved skip (plan bug)")
+                    anyhow::anyhow!("residual add without a saved skip (schedule bug)")
                 })?;
                 skip_add(&mut cur, &s, b, skip);
                 ctx.arena.put_f32(s);
             }
-            LayerPlan::Flatten => { /* layout already flat NHWC */ }
         }
     }
     if !e.ctx().skips.is_empty() {
-        bail!("unconsumed residual skip (plan bug)");
+        bail!("unconsumed residual skip (schedule bug)");
     }
     Ok(cur)
 }
 
-/// Backward through the whole layer graph, consuming ∂logits (an
-/// arena checkout).  Produces gradient *accumulations* only; the
-/// engine's update phase applies them after the last chunk.
+/// Backward through a compiled op list ([`StepSchedule::bwd_ops`] —
+/// already in reverse graph order, weight indices baked in),
+/// consuming ∂logits (an arena checkout).  Produces gradient
+/// *accumulations* only; the engine's update phase applies them after
+/// the last chunk.
 pub(crate) fn backward_plan<E: EngineOps>(
     e: &mut E,
-    layers: &[LayerPlan],
+    ops: &[OpInstr],
     dlogits: Vec<f32>,
 ) -> Result<()> {
     let b = e.micro();
-    let mut wi = layers.iter().filter(|l| l.weight_len() > 0).count();
     let mut dcur = e.grad_from_f32(dlogits);
     // gradients of pending skip branches: recorded at the block
-    // output (Residual close, seen first in reverse), merged into the
-    // main gradient at the block input (Residual save)
-    for layer in layers.iter().rev() {
-        match layer {
-            LayerPlan::Dense { .. } | LayerPlan::Conv { .. } => {
-                wi -= 1;
+    // output (SkipClose, seen first in reverse order), merged into
+    // the main gradient at the block input (SkipSave)
+    for op in ops {
+        match op {
+            OpInstr::Matmul { wi, layer } => {
                 let d = e.grad_to_f32(dcur);
-                let dx = e.matmul_backward(d, wi, layer)?;
+                let dx = e.matmul_backward(d, *wi, layer)?;
                 dcur = e.grad_from_f32(dx);
             }
-            LayerPlan::MaxPool { h, w, c, .. } => {
+            OpInstr::MaxPool { h, w, c } => {
                 let d = e.grad_to_f32(dcur);
                 let dx = e.pool_backward(d, *h, *w, *c);
                 dcur = e.grad_from_f32(dx);
             }
-            LayerPlan::GlobalPool { h, w, c } => {
+            OpInstr::GlobalPool { h, w, c } => {
                 let d = e.grad_to_f32(dcur);
                 let ctx = e.ctx();
                 let mut dx = ctx.arena.take_f32(b * h * w * c);
@@ -176,7 +175,7 @@ pub(crate) fn backward_plan<E: EngineOps>(
                 ctx.arena.put_f32(d);
                 dcur = e.grad_from_f32(dx);
             }
-            LayerPlan::Residual { save: false, skip } => {
+            OpInstr::SkipClose { skip } => {
                 // d(out)/d(skip) is the downsample adjoint; the block
                 // path receives the gradient unchanged (the add is an
                 // identity towards the closing conv's BN output)
@@ -187,22 +186,21 @@ pub(crate) fn backward_plan<E: EngineOps>(
                 ctx.skip_grads.push(sg);
                 dcur = e.grad_from_f32(d);
             }
-            LayerPlan::Residual { save: true, .. } => {
+            OpInstr::SkipSave => {
                 let mut d = e.grad_to_f32(dcur);
                 let ctx = e.ctx();
                 let g = ctx.skip_grads.pop().ok_or_else(|| {
-                    anyhow::anyhow!("residual save without a recorded skip grad (plan bug)")
+                    anyhow::anyhow!("residual save without a recorded skip grad (schedule bug)")
                 })?;
                 simd::add_assign_f32(&mut d, &g);
                 ctx.arena.put_f32(g);
                 dcur = e.grad_from_f32(d);
             }
-            LayerPlan::Flatten => {}
         }
     }
     e.recycle_grad(dcur);
     if !e.ctx().skip_grads.is_empty() {
-        bail!("unconsumed residual skip grad (plan bug)");
+        bail!("unconsumed residual skip grad (schedule bug)");
     }
     Ok(())
 }
@@ -216,20 +214,18 @@ pub(crate) fn backward_plan<E: EngineOps>(
 /// update afterwards.
 pub(crate) fn run_train_chunks<E: EngineOps>(
     e: &mut E,
-    layers: &[LayerPlan],
+    sched: &StepSchedule,
     x: &[f32],
     labels: &[usize],
-    classes: usize,
-    input_elems: usize,
-    chunks: usize,
 ) -> Result<(f32, f32)> {
     let m = e.micro();
+    let (classes, input_elems, chunks) = (sched.classes, sched.input_elems, sched.chunks);
     let mut loss_sum = 0.0f32;
     let mut acc_sum = 0.0f32;
     for ci in 0..chunks {
         let xs = &x[ci * m * input_elems..(ci + 1) * m * input_elems];
         let ys = &labels[ci * m..(ci + 1) * m];
-        let logits = forward_plan(e, layers, xs, true)?;
+        let logits = forward_plan(e, &sched.fwd_ops, xs, true)?;
         let ctx = e.ctx();
         let mut dlogits = ctx.arena.take_f32(m * classes);
         let (loss, acc) = softmax_xent_grad(&logits, ys, classes, &mut dlogits);
@@ -242,7 +238,7 @@ pub(crate) fn run_train_chunks<E: EngineOps>(
                 *v *= inv;
             }
         }
-        backward_plan(e, layers, dlogits)?;
+        backward_plan(e, &sched.bwd_ops, dlogits)?;
         e.end_chunk();
         loss_sum += loss;
         acc_sum += acc;
@@ -254,20 +250,18 @@ pub(crate) fn run_train_chunks<E: EngineOps>(
 /// eval buffers stay microbatch-sized too).
 pub(crate) fn run_eval_chunks<E: EngineOps>(
     e: &mut E,
-    layers: &[LayerPlan],
+    sched: &StepSchedule,
     x: &[f32],
     labels: &[usize],
-    classes: usize,
-    input_elems: usize,
-    chunks: usize,
 ) -> Result<(f32, f32)> {
     let m = e.micro();
+    let (classes, input_elems, chunks) = (sched.classes, sched.input_elems, sched.chunks);
     let mut loss_sum = 0.0f32;
     let mut acc_sum = 0.0f32;
     for ci in 0..chunks {
         let xs = &x[ci * m * input_elems..(ci + 1) * m * input_elems];
         let ys = &labels[ci * m..(ci + 1) * m];
-        let logits = forward_plan(e, layers, xs, false)?;
+        let logits = forward_plan(e, &sched.fwd_ops, xs, false)?;
         let ctx = e.ctx();
         let mut d = ctx.arena.take_f32(m * classes);
         let (loss, acc) = softmax_xent_grad(&logits, ys, classes, &mut d);

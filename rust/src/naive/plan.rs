@@ -28,7 +28,7 @@ pub struct SkipGeom {
     pub stride: usize,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum LayerPlan {
     Dense {
         k: usize,
@@ -119,7 +119,7 @@ impl LayerPlan {
     }
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Plan {
     pub name: String,
     pub input_elems: usize,

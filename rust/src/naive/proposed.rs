@@ -29,11 +29,14 @@
 //! f32 — the high-precision skip path of Sec. 2 — and are handled by
 //! the shared layer-graph core in [`super::ops`].
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use super::arena::StepCtx;
 use super::ops::{self, EngineOps};
 use super::plan::{LayerPlan, Plan};
+use super::schedule::{self, StepSchedule};
 use super::standard::{col2im_into, conv_direct_into, im2col_into, sign_into, transpose};
 use super::{glorot_init, Accel, StepEngine};
 use crate::bitops::{
@@ -91,6 +94,9 @@ pub struct ProposedTrainer {
     /// Per-step packed Ŵᵀ cache: each layer packs at most once per
     /// step (invalidated when the update phase writes new weights).
     wcache: PackedWeightCache,
+    /// The compiled buffer schedule this engine executes (train pass
+    /// + eval pass, slot-colored; see `naive::schedule`).
+    sched: Arc<StepSchedule>,
     ctx: StepCtx,
 }
 
@@ -151,6 +157,15 @@ impl ProposedTrainer {
             dbeta_acc.push(vec![0.0; l.channels()]);
         }
         let wcache = PackedWeightCache::new(weights.len());
+        let sched = Arc::new(schedule::compile_step(
+            &plan,
+            "proposed",
+            accel == Accel::Naive,
+            micro,
+            batch / micro,
+        )?);
+        let mut ctx = StepCtx::default();
+        ctx.arena.install(&sched.slots);
         Ok(ProposedTrainer {
             plan,
             batch,
@@ -166,8 +181,22 @@ impl ProposedTrainer {
             dw_acc,
             dbeta_acc,
             wcache,
-            ctx: StepCtx::default(),
+            sched,
+            ctx,
         })
+    }
+
+    /// The compiled schedule this engine executes.
+    pub fn schedule(&self) -> &Arc<StepSchedule> {
+        &self.sched
+    }
+
+    /// Swap in an externally compiled schedule (e.g. one
+    /// deserialized from JSON) and reinstall the arena slots; see
+    /// `StandardTrainer::install_schedule`.
+    pub fn install_schedule(&mut self, sched: Arc<StepSchedule>) {
+        self.ctx.arena.install(&sched.slots);
+        self.sched = sched;
     }
 
     /// Total weight packs so far — the once-per-step probe the tests
@@ -831,20 +860,21 @@ impl StepEngine for ProposedTrainer {
             bail!("bad batch shapes");
         }
         self.begin_step();
-        let layers = std::mem::take(&mut self.plan.layers);
-        let r = ops::run_train_chunks(
-            self,
-            &layers,
-            x,
-            labels,
-            self.plan.classes,
-            self.plan.input_elems,
-            self.batch / self.micro,
-        );
-        self.plan.layers = layers;
-        let (loss, acc) = r?;
+        let sched = self.sched.clone();
+        self.ctx.arena.begin_pass(sched.train_pass().clone());
+        let r = ops::run_train_chunks(self, &sched, x, labels);
+        let (loss, acc) = match r {
+            Ok(v) => v,
+            Err(e) => {
+                self.ctx.arena.abort_pass();
+                return Err(e);
+            }
+        };
         self.apply_update(lr);
+        // single-chunk steps retained `res` through the update phase
+        // (packed ∂Ŵ lives there); this drain is the pass's tail
         self.drain_res();
+        self.ctx.arena.end_pass();
         Ok((loss, acc))
     }
 
@@ -859,18 +889,19 @@ impl StepEngine for ProposedTrainer {
         // in `eval_between_steps_is_invisible_to_training`.
         self.drain_res();
         self.ctx.drain_skip_stacks();
-        let layers = std::mem::take(&mut self.plan.layers);
-        let r = ops::run_eval_chunks(
-            self,
-            &layers,
-            x,
-            labels,
-            self.plan.classes,
-            self.plan.input_elems,
-            self.batch / self.micro,
-        );
-        self.plan.layers = layers;
-        r
+        let sched = self.sched.clone();
+        self.ctx.arena.begin_pass(sched.eval_pass().clone());
+        let r = ops::run_eval_chunks(self, &sched, x, labels);
+        match r {
+            Ok(v) => {
+                self.ctx.arena.end_pass();
+                Ok(v)
+            }
+            Err(e) => {
+                self.ctx.arena.abort_pass();
+                Err(e)
+            }
+        }
     }
 
     fn state_bytes(&self) -> usize {
@@ -1228,14 +1259,11 @@ mod tests {
         for accel in [Accel::Blocked, Accel::Tiled(2)] {
             let mut t = make("cnv_mini", 4, accel, "adam");
             let (x, y) = toy_batch(4, 16 * 16 * 3, 10, 27);
-            t.train_step(&x, &y, 0.01).unwrap();
-            t.train_step(&x, &y, 0.01).unwrap();
-            let misses = t.ctx.arena.misses();
             let bytes = t.ctx.arena.heap_bytes();
-            for _ in 0..3 {
+            assert_eq!(bytes, t.sched.arena_bytes(), "{accel:?}: install != schedule");
+            for _ in 0..5 {
                 t.train_step(&x, &y, 0.01).unwrap();
             }
-            assert_eq!(t.ctx.arena.misses(), misses, "{accel:?}: arena missed in steady state");
             assert_eq!(t.ctx.arena.heap_bytes(), bytes, "{accel:?}: arena grew");
         }
     }

@@ -23,11 +23,14 @@
 //! conv *and* hidden dense layers — run the packed XNOR path on the
 //! accelerated tiers.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use super::arena::{StepArena, StepCtx};
 use super::ops::{self, EngineOps};
 use super::plan::{LayerPlan, Plan};
+use super::schedule::{self, StepSchedule};
 use super::{glorot_init, Accel, StepEngine};
 use crate::bitops::{
     conv_dx_streaming_into, im2col_packed_into, simd, subtract_pad_contrib_with,
@@ -66,6 +69,9 @@ pub struct StandardTrainer {
     /// Per-step binarized-weight cache: sign(W) is packed once per
     /// step into retained storage; invalidated on weight update.
     wcache: PackedWeightCache,
+    /// The compiled buffer schedule this engine executes (train pass
+    /// + eval pass, slot-colored; see `naive::schedule`).
+    sched: Arc<StepSchedule>,
     /// Arena pool + driver skip stacks (see `naive::arena`).
     ctx: StepCtx,
 }
@@ -121,6 +127,15 @@ impl StandardTrainer {
             dbeta_acc.push(vec![0.0; l.channels()]);
         }
         let wcache = PackedWeightCache::new(weights.len());
+        let sched = Arc::new(schedule::compile_step(
+            &plan,
+            "standard",
+            accel == Accel::Naive,
+            micro,
+            batch / micro,
+        )?);
+        let mut ctx = StepCtx::default();
+        ctx.arena.install(&sched.slots);
         Ok(StandardTrainer {
             plan,
             batch,
@@ -137,8 +152,24 @@ impl StandardTrainer {
             dw_acc,
             dbeta_acc,
             wcache,
-            ctx: StepCtx::default(),
+            sched,
+            ctx,
         })
+    }
+
+    /// The compiled schedule this engine executes.
+    pub fn schedule(&self) -> &Arc<StepSchedule> {
+        &self.sched
+    }
+
+    /// Swap in an externally compiled schedule (e.g. one
+    /// deserialized from JSON) and reinstall the arena slots.  The
+    /// schedule must have been compiled for the same plan / algo /
+    /// tier / microbatch — execution asserts every event, so a
+    /// mismatch fails fast rather than corrupting.
+    pub fn install_schedule(&mut self, sched: Arc<StepSchedule>) {
+        self.ctx.arena.install(&sched.slots);
+        self.sched = sched;
     }
 
     /// Total weight packs so far (the once-per-step probe).
@@ -572,18 +603,17 @@ impl StepEngine for StandardTrainer {
             bail!("bad batch shapes");
         }
         self.begin_step();
-        let layers = std::mem::take(&mut self.plan.layers);
-        let r = ops::run_train_chunks(
-            self,
-            &layers,
-            x,
-            labels,
-            self.plan.classes,
-            self.plan.input_elems,
-            self.batch / self.micro,
-        );
-        self.plan.layers = layers;
-        let (loss, acc) = r?;
+        let sched = self.sched.clone();
+        self.ctx.arena.begin_pass(sched.train_pass().clone());
+        let r = ops::run_train_chunks(self, &sched, x, labels);
+        let (loss, acc) = match r {
+            Ok(v) => v,
+            Err(e) => {
+                self.ctx.arena.abort_pass();
+                return Err(e);
+            }
+        };
+        self.ctx.arena.end_pass();
         self.apply_update(lr);
         Ok((loss, acc))
     }
@@ -592,19 +622,21 @@ impl StepEngine for StandardTrainer {
         if x.len() != self.batch * self.plan.input_elems || labels.len() != self.batch {
             bail!("bad batch shapes");
         }
+        self.drain_chunk_state();
         self.ctx.drain_skip_stacks();
-        let layers = std::mem::take(&mut self.plan.layers);
-        let r = ops::run_eval_chunks(
-            self,
-            &layers,
-            x,
-            labels,
-            self.plan.classes,
-            self.plan.input_elems,
-            self.batch / self.micro,
-        );
-        self.plan.layers = layers;
-        r
+        let sched = self.sched.clone();
+        self.ctx.arena.begin_pass(sched.eval_pass().clone());
+        let r = ops::run_eval_chunks(self, &sched, x, labels);
+        match r {
+            Ok(v) => {
+                self.ctx.arena.end_pass();
+                Ok(v)
+            }
+            Err(e) => {
+                self.ctx.arena.abort_pass();
+                Err(e)
+            }
+        }
     }
 
     fn state_bytes(&self) -> usize {
@@ -1306,19 +1338,17 @@ mod tests {
 
     #[test]
     fn steady_state_stops_allocating_from_the_arena() {
-        // after the warmup step the arena pool is at fixed point:
-        // further steps miss the free lists zero times
+        // the installed slot table is the arena: its footprint is
+        // fixed from construction and steps never move it (the hard
+        // zero-alloc assert lives in rust/tests/memtrack_step.rs)
         for accel in [Accel::Blocked, Accel::Tiled(2)] {
             let mut t = make("cnv_mini", 4, accel);
             let (x, y) = toy_batch(4, 16 * 16 * 3, 10, 23);
-            t.train_step(&x, &y, 0.01).unwrap();
-            t.train_step(&x, &y, 0.01).unwrap();
-            let misses = t.ctx.arena.misses();
             let bytes = t.ctx.arena.heap_bytes();
-            for _ in 0..3 {
+            assert_eq!(bytes, t.sched.arena_bytes(), "{accel:?}: install != schedule");
+            for _ in 0..5 {
                 t.train_step(&x, &y, 0.01).unwrap();
             }
-            assert_eq!(t.ctx.arena.misses(), misses, "{accel:?}: arena missed in steady state");
             assert_eq!(t.ctx.arena.heap_bytes(), bytes, "{accel:?}: arena grew");
         }
     }

@@ -23,8 +23,9 @@
 //! for every zoo model).
 //!
 //! DRIFT WARNING: if a trainer forward branch changes, this engine
-//! (and `naive::arena::plan_infer_forward`) must change with it — the
-//! parity tests catch any divergence.
+//! (and the serve modes of `naive::schedule`) must change with it —
+//! the parity tests catch any divergence, and the schedule executor
+//! panics on the first mismatched arena event.
 
 use std::sync::Arc;
 
@@ -34,6 +35,7 @@ use super::snapshot::WeightSnapshot;
 use crate::bitops::{im2col_packed_into, subtract_pad_contrib_with, BitMatrix};
 use crate::naive::arena::StepCtx;
 use crate::naive::ops::{self, EngineOps};
+use crate::naive::schedule::{self, StepSchedule};
 use crate::naive::{
     bn_l1_forward_packed_into, bn_l2_forward_into, conv_direct_into, im2col_into,
     maxpool_forward_into, sign_into, softmax_xent_grad, Accel, LayerPlan, Plan,
@@ -68,6 +70,9 @@ pub struct PackedInferEngine {
     /// Batch of the in-flight forward (`EngineOps::micro`).
     cur: usize,
     snap: Arc<WeightSnapshot>,
+    /// Compiled serve schedule: one infer + one eval pass per batch
+    /// size `1..=max_batch`, slot-colored across all of them.
+    sched: Arc<StepSchedule>,
     ctx: StepCtx,
 }
 
@@ -87,6 +92,18 @@ impl PackedInferEngine {
         if !snap.matches(&plan) {
             bail!("weight snapshot does not match plan '{}'", plan.name);
         }
+        let algo_name = match algo {
+            InferAlgo::Standard => "standard",
+            InferAlgo::Proposed => "proposed",
+        };
+        let sched = Arc::new(schedule::compile_serve(
+            &plan,
+            algo_name,
+            accel == Accel::Naive,
+            max_batch,
+        )?);
+        let mut ctx = StepCtx::default();
+        ctx.arena.install(&sched.slots);
         Ok(PackedInferEngine {
             plan,
             algo,
@@ -94,8 +111,14 @@ impl PackedInferEngine {
             max_batch,
             cur: 0,
             snap,
-            ctx: StepCtx::default(),
+            sched,
+            ctx,
         })
+    }
+
+    /// The compiled serve schedule this engine executes.
+    pub fn schedule(&self) -> &Arc<StepSchedule> {
+        &self.sched
     }
 
     pub fn max_batch(&self) -> usize {
@@ -140,9 +163,10 @@ impl PackedInferEngine {
     /// receives `batch × classes`.  Allocation-free after
     /// [`PackedInferEngine::warmup`].
     pub fn infer_into(&mut self, x: &[f32], batch: usize, logits: &mut [f32]) -> Result<()> {
-        let out = self.forward(x, batch)?;
+        let out = self.forward(x, batch, false)?;
         logits.copy_from_slice(&out);
         self.ctx.arena.put_f32(out);
+        self.ctx.arena.end_pass();
         Ok(())
     }
 
@@ -150,18 +174,20 @@ impl PackedInferEngine {
     /// numerically identical to the trainers' `eval` on the same
     /// batch and tier (single-chunk).  Allocation-free after warmup.
     pub fn eval(&mut self, x: &[f32], labels: &[usize]) -> Result<(f32, f32)> {
-        let logits = self.forward(x, labels.len())?;
+        let logits = self.forward(x, labels.len(), true)?;
         let mut d = self.ctx.arena.take_f32(labels.len() * self.plan.classes);
         let (loss, acc) = softmax_xent_grad(&logits, labels, self.plan.classes, &mut d);
         self.ctx.arena.put_f32(logits);
         self.ctx.arena.put_f32(d);
+        self.ctx.arena.end_pass();
         Ok((loss, acc))
     }
 
-    /// Run one forward at every batch size `max_batch..=1`
-    /// (descending, so the arena pool only grows) to bring the scratch
-    /// pool to its fixed point: subsequent forwards at any size
-    /// perform zero heap allocations.
+    /// Exercise one forward at every batch size `max_batch..=1`.
+    /// Since the schedule executor pre-allocates every colored slot
+    /// at install, the arena is at its fixed point from construction;
+    /// warmup survives as a smoke pass over all batch-size schedules
+    /// (and keeps the serving call sites' warmup discipline honest).
     pub fn warmup(&mut self) -> Result<()> {
         let mut x = vec![0.0f32; self.max_batch * self.plan.input_elems];
         for (i, v) in x.iter_mut().enumerate() {
@@ -179,7 +205,12 @@ impl PackedInferEngine {
         Ok(())
     }
 
-    fn forward(&mut self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+    /// Forward under the batch's scheduled pass (`eval` selects the
+    /// eval-pass variant, whose post-forward events include the
+    /// softmax gradient scratch).  On success the pass is left active
+    /// for the caller's final puts + `end_pass`; on error it is
+    /// aborted here.
+    fn forward(&mut self, x: &[f32], batch: usize, eval: bool) -> Result<Vec<f32>> {
         if batch == 0 || batch > self.max_batch {
             bail!("batch {batch} outside 1..={}", self.max_batch);
         }
@@ -194,9 +225,17 @@ impl PackedInferEngine {
         self.cur = batch;
         // hygiene after an aborted forward (no-op in steady state)
         self.ctx.drain_skip_stacks();
-        let layers = std::mem::take(&mut self.plan.layers);
-        let r = ops::forward_plan(self, &layers, x, false);
-        self.plan.layers = layers;
+        let sched = self.sched.clone();
+        let pass = if eval {
+            sched.serve_eval_pass(batch)
+        } else {
+            sched.infer_pass(batch)
+        };
+        self.ctx.arena.begin_pass(pass.clone());
+        let r = ops::forward_plan(self, &sched.fwd_ops, x, false);
+        if r.is_err() {
+            self.ctx.arena.abort_pass();
+        }
         r
     }
 

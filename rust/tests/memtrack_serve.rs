@@ -15,6 +15,7 @@
 //!    packed forward, scatter, wake — is also allocation-free once a
 //!    few requests have flowed.
 
+use bnn_edge::memmodel::serve_envelope;
 use bnn_edge::memtrack::{self, TrackingAlloc};
 use bnn_edge::models::{get, lower};
 use bnn_edge::naive::{build_engine, Accel, Plan, StepEngine};
@@ -82,6 +83,16 @@ fn steady_state_serving_allocates_nothing() {
                 allocs, 0,
                 "{model}/{algo}: steady-state serving performed {allocs} heap \
                  allocations (want zero)"
+            );
+
+            // the serve envelope is a pure fold over the compiled
+            // serve schedule — exact, not banded
+            let env = serve_envelope(&graph, algo, max_batch).unwrap();
+            assert_eq!(
+                env.arena_bytes,
+                e.arena_bytes(),
+                "{model}/{algo}: serve_envelope arena must equal the engine's \
+                 installed slot table exactly"
             );
         }
     }

@@ -13,8 +13,9 @@
 //!    `eval` calls — alone or interleaved with training — are also
 //!    allocation-free (the forward-only scratch path, ISSUE-6);
 //! 3. `--microbatch B/4` drops the measured peak step memory ≥2× on
-//!    binarynet_mini at B=64, with `memmodel::step_envelope` tracking
-//!    the measured steady footprint;
+//!    binarynet_mini at B=64, with `memmodel::step_envelope` — a pure
+//!    fold over the compiled schedule — *equal* to the measured
+//!    steady footprint, byte for byte;
 //! 4. microbatched gradients equal the mean of independent per-chunk
 //!    gradients (the accumulation-correctness invariant, asserted at
 //!    1e-5 on both engines).
@@ -126,7 +127,9 @@ fn steady_state_steps_allocate_nothing_and_microbatch_caps_peak() {
     }
 
     // ---- 2. microbatch B/4 drops the measured steady footprint ≥2×
-    // on binarynet_mini at B=64, and step_envelope tracks it
+    // on binarynet_mini at B=64, and step_envelope — a pure fold over
+    // the compiled schedule since the schedule-compiler work — equals
+    // the measured steady state *exactly* (the old ±25% band is gone)
     {
         let graph = lower(&get("binarynet_mini").unwrap()).unwrap();
         let (x, y) = toy(64, graph.input_elems, graph.classes, 3);
@@ -153,11 +156,10 @@ fn steady_state_steps_allocate_nothing_and_microbatch_caps_peak() {
             for (tag, measured, planned) in
                 [("full", full, full_env), ("micro", quarter, quarter_env)]
             {
-                let ratio = planned / measured as f64;
-                assert!(
-                    (0.8..1.25).contains(&ratio),
-                    "{algo}/{tag}: envelope {planned:.0} vs measured {measured} \
-                     (ratio {ratio:.3})"
+                assert_eq!(
+                    planned as usize, measured,
+                    "{algo}/{tag}: envelope must equal the measured steady state \
+                     exactly (planned {planned:.0} vs measured {measured})"
                 );
             }
         }

@@ -1,0 +1,225 @@
+//! The schedule compiler's contracts, end to end:
+//!
+//! 1. **JSON round-trip is lossless** — `to_json` → text → parse →
+//!    `from_json` reproduces the compiled `StepSchedule` exactly
+//!    (structural equality, every event/slot/op preserved);
+//! 2. **a deserialized schedule executes bit-identically** — install
+//!    it into a fresh trainer and every train/eval result and weight
+//!    bit matches the trainer running its own compiled schedule;
+//! 3. **coloring never overlaps live ranges** — replaying each pass's
+//!    event stream (repeats + tail) slot by slot, no `Take` ever hits
+//!    an occupied slot, no take exceeds its slot's capacity, and
+//!    every pass returns all slots (the zero-alloc steady state
+//!    depends on this) — swept across the whole zoo × microbatch ×
+//!    accelerator tiers × serve batch;
+//! 4. **coloring never loses to the old best-fit pool**, and strictly
+//!    beats it on at least two zoo models (the CI regression gate's
+//!    in-tree twin);
+//! 5. **the binarynet_mini dump is golden** — pinned at
+//!    `tests/golden/schedule_binarynet_mini.json`, byte-compared
+//!    (deterministic: BTreeMap keys, no floats in event streams).
+//!    Bless with `UPDATE_GOLDEN=1 cargo test`.
+
+use std::sync::Arc;
+
+use bnn_edge::models::{get, lower, names};
+use bnn_edge::naive::schedule::{
+    compile_serve, compile_step, BufEvent, PoolKind, StepSchedule, POOLS,
+};
+use bnn_edge::naive::{Accel, Plan, ProposedTrainer, StandardTrainer, StepEngine};
+use bnn_edge::util::json::Json;
+use bnn_edge::util::rng::Pcg32;
+
+fn plan_for(model: &str) -> Plan {
+    Plan::from_graph(&lower(&get(model).unwrap()).unwrap()).unwrap()
+}
+
+fn round_trip(s: &StepSchedule) -> StepSchedule {
+    let text = s.to_json().to_string_pretty();
+    StepSchedule::from_json(&Json::parse(&text).unwrap()).unwrap()
+}
+
+#[test]
+fn json_round_trip_is_lossless() {
+    for model in ["binarynet_mini", "bireal_mini", "mlp_mini"] {
+        let plan = plan_for(model);
+        for algo in ["standard", "proposed"] {
+            for naive in [false, true] {
+                let s = compile_step(&plan, algo, naive, 4, 2).unwrap();
+                assert_eq!(s, round_trip(&s), "{model}/{algo}/naive={naive} step");
+                let s = compile_serve(&plan, algo, naive, 3).unwrap();
+                assert_eq!(s, round_trip(&s), "{model}/{algo}/naive={naive} serve");
+            }
+        }
+    }
+}
+
+/// A trainer running a schedule that went through JSON must be
+/// bit-identical to one running its own compiled schedule.
+macro_rules! check_serialized_execution {
+    ($T:ty, $graph:expr, $x:expr, $y:expr) => {{
+        let mk = || <$T>::with_microbatch($graph, 8, 2, "adam", Accel::Blocked, 7).unwrap();
+        let mut a = mk();
+        let mut b = mk();
+        b.install_schedule(Arc::new(round_trip(a.schedule())));
+        for step in 0..3 {
+            let (la, aa) = a.train_step($x, $y, 0.01).unwrap();
+            let (lb, ab) = b.train_step($x, $y, 0.01).unwrap();
+            assert_eq!(la.to_bits(), lb.to_bits(), "train loss diverged at step {step}");
+            assert_eq!(aa.to_bits(), ab.to_bits(), "train acc diverged at step {step}");
+        }
+        let (la, _) = a.eval($x, $y).unwrap();
+        let (lb, _) = b.eval($x, $y).unwrap();
+        assert_eq!(la.to_bits(), lb.to_bits(), "eval loss diverged");
+        for (wa, wb) in a.weights_snapshot().iter().zip(&b.weights_snapshot()) {
+            for (u, v) in wa.iter().zip(wb) {
+                assert_eq!(u.to_bits(), v.to_bits(), "weights diverged");
+            }
+        }
+    }};
+}
+
+#[test]
+fn deserialized_schedule_executes_bit_identically() {
+    let graph = lower(&get("cnv_mini").unwrap()).unwrap();
+    let mut rng = Pcg32::new(5);
+    let x = rng.normal_vec(8 * graph.input_elems);
+    let y: Vec<usize> = (0..8).map(|i| i % graph.classes).collect();
+    check_serialized_execution!(StandardTrainer, &graph, &x, &y);
+    check_serialized_execution!(ProposedTrainer, &graph, &x, &y);
+}
+
+/// Replay one pass's stream against the slot table: a `Take` must hit
+/// a vacant slot with sufficient capacity, a `Put` an occupied one,
+/// and after `repeats` rounds plus the tail every slot is vacant
+/// again (so the next pass's identical replay cannot collide — the
+/// executor's zero-alloc steady state).
+fn replay_pass(s: &StepSchedule, pass: &bnn_edge::naive::schedule::PassEvents) {
+    let mut occupied: [Vec<bool>; POOLS] =
+        std::array::from_fn(|p| vec![false; s.slots.caps[p].len()]);
+    let mut check = |ev: &BufEvent, where_: &str| match *ev {
+        BufEvent::Take { pool, slot, len, .. } => {
+            let p = pool.idx();
+            assert!(
+                slot < s.slots.caps[p].len(),
+                "{}/{}/{where_}: take {pool:?} slot {slot} out of range",
+                s.model,
+                pass.name
+            );
+            assert!(
+                !occupied[p][slot],
+                "{}/{}/{where_}: overlapping live ranges on {pool:?} slot {slot}",
+                s.model,
+                pass.name
+            );
+            assert!(
+                len <= s.slots.caps[p][slot],
+                "{}/{}/{where_}: take len {len} exceeds {pool:?} slot {slot} cap {}",
+                s.model,
+                pass.name,
+                s.slots.caps[p][slot]
+            );
+            occupied[p][slot] = true;
+        }
+        BufEvent::Put { pool, slot } => {
+            let p = pool.idx();
+            assert!(
+                occupied[p][slot],
+                "{}/{}/{where_}: put of vacant {pool:?} slot {slot}",
+                s.model,
+                pass.name
+            );
+            occupied[p][slot] = false;
+        }
+    };
+    for _ in 0..pass.repeats {
+        for ev in &pass.events {
+            check(ev, "body");
+        }
+    }
+    for ev in &pass.tail {
+        check(ev, "tail");
+    }
+    for (p, occ) in occupied.iter().enumerate() {
+        for (slot, &o) in occ.iter().enumerate() {
+            assert!(
+                !o,
+                "{}/{}: {} slot {slot} still occupied at pass end",
+                s.model,
+                pass.name,
+                PoolKind::ALL[p].name()
+            );
+        }
+    }
+}
+
+#[test]
+fn coloring_never_overlaps_and_beats_bestfit_across_the_zoo() {
+    let mut strictly_better = 0usize;
+    for &model in names() {
+        let plan = plan_for(model);
+        let mut model_improved = false;
+        for algo in ["standard", "proposed"] {
+            for naive in [false, true] {
+                for (micro, chunks) in [(8usize, 1usize), (4, 2)] {
+                    let s = compile_step(&plan, algo, naive, micro, chunks).unwrap();
+                    for pass in &s.passes {
+                        replay_pass(&s, pass);
+                    }
+                    assert!(
+                        s.arena_bytes() <= s.uncolored_bytes,
+                        "{model}/{algo}/naive={naive}/m{micro}x{chunks}: colored \
+                         {} > uncolored {}",
+                        s.arena_bytes(),
+                        s.uncolored_bytes
+                    );
+                    if s.arena_bytes() < s.uncolored_bytes {
+                        model_improved = true;
+                    }
+                }
+                let s = compile_serve(&plan, algo, naive, 4).unwrap();
+                for pass in &s.passes {
+                    replay_pass(&s, pass);
+                }
+                assert!(
+                    s.arena_bytes() <= s.uncolored_bytes,
+                    "{model}/{algo}/naive={naive}/serve: colored {} > uncolored {}",
+                    s.arena_bytes(),
+                    s.uncolored_bytes
+                );
+            }
+        }
+        if model_improved {
+            strictly_better += 1;
+        }
+    }
+    assert!(
+        strictly_better >= 2,
+        "coloring strictly beat best-fit on only {strictly_better} zoo models (want ≥2)"
+    );
+}
+
+#[test]
+fn binarynet_mini_schedule_is_golden() {
+    let golden_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/schedule_binarynet_mini.json");
+    let plan = plan_for("binarynet_mini");
+    let mut dump = Json::obj();
+    for algo in ["standard", "proposed"] {
+        dump.set(algo, compile_step(&plan, algo, false, 4, 2).unwrap().to_json());
+    }
+    let text = dump.to_string_pretty();
+    if std::env::var_os("UPDATE_GOLDEN").is_some() || !golden_path.exists() {
+        std::fs::create_dir_all(golden_path.parent().unwrap()).unwrap();
+        std::fs::write(&golden_path, &text).unwrap();
+        eprintln!("blessed {} — commit it", golden_path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&golden_path).unwrap();
+    assert_eq!(
+        text.trim(),
+        want.trim(),
+        "binarynet_mini schedule drifted from the golden dump; if intentional, \
+         re-bless with UPDATE_GOLDEN=1 and commit"
+    );
+}
