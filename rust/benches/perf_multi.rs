@@ -1,0 +1,230 @@
+//! §Perf multi-tenant bench — the ISSUE-9 headline: N co-scheduled
+//! tenants vs the same N time-sliced serially, through the identical
+//! [`bnn_edge::serve::MultiModelServer`] stack (only `lanes` differs:
+//! 1 = time-sliced serial execution, 2 = co-scheduled).  The win
+//! comes from work conservation: while one tenant's quantum is in a
+//! serial pack/BN region, another lane drives a second tenant's
+//! schedule instead of idling — plus true parallelism for the mini
+//! models whose kernels stay below the pool's inline threshold.
+//!
+//! Emits `BENCH_multi.json`, one row per tenant per run:
+//! `{kind, pair, mode, lanes, tenant, p50_us, p99_us, aggregate_qps,
+//! fleet_envelope_bytes, measured_bytes, sweeps, contended_sweeps}`
+//! (`kind = "pair"` for the serve-pair sweep; `kind = "live"` adds
+//! `steps` + `published` for the train-and-serve fleet).  CI gates on
+//! co-scheduled aggregate ≥1.5× time-sliced at equal-or-better
+//! per-tenant p99 on ≥2 pairs, and `fleet_envelope_bytes ==
+//! measured_bytes` on every row (bit-identity to solo runs is pinned
+//! separately in rust/tests/multi_tenant.rs).  Flags: `--smoke`,
+//! `--out PATH` (default `BENCH_multi.json`).
+
+use std::time::Instant;
+
+use bnn_edge::models::{get, lower};
+use bnn_edge::naive::Accel;
+use bnn_edge::serve::{MultiModelServer, TenantRole, TenantSpec};
+use bnn_edge::util::bench::write_json_rows;
+use bnn_edge::util::cli::Args;
+use bnn_edge::util::json::Json;
+use bnn_edge::util::rng::Pcg32;
+use bnn_edge::util::stats::percentile;
+
+struct FleetStats {
+    /// Client-observed latencies (µs), per tenant.
+    lat_us: Vec<Vec<f64>>,
+    aggregate_qps: f64,
+    planned_bytes: usize,
+    measured_bytes: usize,
+    sweeps: u64,
+    contended: u64,
+    steps: u64,
+    published: u64,
+}
+
+/// Drive `clients × per_client` closed-loop batch-1 requests per
+/// serving tenant (plus `train_steps` fed to tenant 0 when it
+/// trains), all concurrently, and return per-tenant latencies.
+fn run_fleet(
+    specs: &[TenantSpec],
+    lanes: usize,
+    clients: usize,
+    per_client: usize,
+    train_steps: usize,
+) -> FleetStats {
+    let (client, server) = MultiModelServer::new(specs.to_vec(), lanes).unwrap();
+    let planned = server.fleet_envelope().unwrap().total_bytes() as usize;
+    let sw0 = bnn_edge::bitops::sweep_stats();
+    let h = std::thread::spawn(move || server.run());
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (tid, spec) in specs.iter().enumerate() {
+        if !spec.role.serves() {
+            continue;
+        }
+        let graph = lower(&get(&spec.model).unwrap()).unwrap();
+        for c in 0..clients as u64 {
+            let cl = client.clone();
+            let (ie, ncl) = (graph.input_elems, graph.classes);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Pcg32::new(0x3417 + tid as u64 * 131 + c);
+                let x = rng.normal_vec(ie);
+                let mut out = vec![0.0f32; ncl];
+                let mut lat = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let t = Instant::now();
+                    cl.infer_one(tid, &x, &mut out).unwrap();
+                    lat.push(t.elapsed().as_secs_f64() * 1e6);
+                }
+                (tid, lat)
+            }));
+        }
+    }
+    let feeder = if train_steps > 0 && specs[0].role.trains() {
+        let cl = client.clone();
+        let graph = lower(&get(&specs[0].model).unwrap()).unwrap();
+        let bsz = specs[0].batch;
+        Some(std::thread::spawn(move || {
+            let mut rng = Pcg32::new(0xbeef);
+            for _ in 0..train_steps {
+                let x = rng.normal_vec(graph.input_elems * bsz);
+                let y: Vec<usize> = (0..bsz).map(|i| (i * 7) % graph.classes).collect();
+                cl.train_step(0, &x, &y, 0.01).unwrap();
+            }
+        }))
+    } else {
+        None
+    };
+
+    let mut lat_us: Vec<Vec<f64>> = vec![Vec::new(); specs.len()];
+    let mut total = 0usize;
+    for h in handles {
+        let (tid, lat) = h.join().unwrap();
+        total += lat.len();
+        lat_us[tid].extend(lat);
+    }
+    if let Some(f) = feeder {
+        f.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    client.shutdown();
+    let tenants = h.join().unwrap().unwrap();
+    let sw1 = bnn_edge::bitops::sweep_stats();
+
+    let measured: usize = tenants.iter().map(|t| t.steady_state_bytes()).sum();
+    // the acceptance bar: the planned fold prices the measured fleet
+    // exactly (trained tenants reach steady state after ≥2 steps)
+    if train_steps == 0 || train_steps >= 2 {
+        assert_eq!(planned, measured, "fleet envelope != measured steady state");
+    }
+    FleetStats {
+        lat_us,
+        aggregate_qps: total as f64 / wall.max(1e-12),
+        planned_bytes: planned,
+        measured_bytes: measured,
+        sweeps: sw1.sweeps - sw0.sweeps,
+        contended: sw1.contended - sw0.contended,
+        steps: tenants.iter().map(|t| t.steps()).sum(),
+        published: tenants.iter().map(|t| t.published()).sum(),
+    }
+}
+
+fn serve_spec(tid: usize, model: &str) -> TenantSpec {
+    let mut s = TenantSpec::new(model, model, TenantRole::Serve);
+    s.accel = Accel::Tiled(2);
+    s.seed = 5 + tid as u64;
+    s.max_batch = 8;
+    s.queue_cap = 32;
+    s
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.bool("smoke");
+    let out_path = args.str_or("out", "BENCH_multi.json");
+
+    let pairs: Vec<(&str, &str)> = if smoke {
+        vec![("mlp_mini", "cnv_mini"), ("mlp_mini", "mlp"), ("cnv_mini", "mlp")]
+    } else {
+        vec![
+            ("mlp_mini", "cnv_mini"),
+            ("mlp_mini", "mlp"),
+            ("cnv_mini", "mlp"),
+            ("mlp", "binarynet_mini"),
+        ]
+    };
+    let (clients, per_client) = if smoke { (4, 30) } else { (4, 100) };
+
+    let mut rows = Vec::new();
+    for (a, b) in &pairs {
+        let pair = format!("{a}+{b}");
+        let specs = vec![serve_spec(0, a), serve_spec(1, b)];
+        for (mode, lanes) in [("timesliced", 1usize), ("cosched", 2)] {
+            let s = run_fleet(&specs, lanes, clients, per_client, 0);
+            println!(
+                "{mode:>10} {pair:<24} {lanes} lane(s): {:>9.1} req/s  \
+                 p99 [{:>7.0}us, {:>7.0}us]  ({} sweeps, {} contended)",
+                s.aggregate_qps,
+                percentile(&s.lat_us[0], 99.0),
+                percentile(&s.lat_us[1], 99.0),
+                s.sweeps,
+                s.contended
+            );
+            for (tid, spec) in specs.iter().enumerate() {
+                let mut row = Json::obj();
+                row.set("kind", Json::from("pair"));
+                row.set("pair", Json::from(pair.as_str()));
+                row.set("mode", Json::from(mode));
+                row.set("lanes", Json::from(lanes));
+                row.set("tenant", Json::from(spec.model.as_str()));
+                row.set("p50_us", Json::from(percentile(&s.lat_us[tid], 50.0)));
+                row.set("p99_us", Json::from(percentile(&s.lat_us[tid], 99.0)));
+                row.set("aggregate_qps", Json::from(s.aggregate_qps));
+                row.set("fleet_envelope_bytes", Json::from(s.planned_bytes));
+                row.set("measured_bytes", Json::from(s.measured_bytes));
+                row.set("sweeps", Json::from(s.sweeps as usize));
+                row.set("contended_sweeps", Json::from(s.contended as usize));
+                rows.push(row);
+            }
+        }
+    }
+
+    // live train-and-serve: tenant 0 trains + publishes while both
+    // tenants serve — the envelope assert inside run_fleet covers the
+    // trained-tenant fold
+    let mut ts = TenantSpec::new("mlp_mini", "mlp_mini", TenantRole::TrainServe);
+    ts.accel = Accel::Tiled(2);
+    ts.seed = 5;
+    ts.batch = 16;
+    ts.max_batch = 8;
+    ts.queue_cap = 32;
+    ts.publish_every = 2;
+    let specs = vec![ts, serve_spec(1, "cnv_mini")];
+    let train_steps = if smoke { 4 } else { 8 };
+    let s = run_fleet(&specs, 2, clients, per_client, train_steps);
+    println!(
+        "      live mlp_mini(train+serve)+cnv_mini: {:>9.1} req/s  {} steps, {} publishes",
+        s.aggregate_qps, s.steps, s.published
+    );
+    for (tid, spec) in specs.iter().enumerate() {
+        let mut row = Json::obj();
+        row.set("kind", Json::from("live"));
+        row.set("pair", Json::from("mlp_mini+cnv_mini"));
+        row.set("mode", Json::from("cosched"));
+        row.set("lanes", Json::from(2usize));
+        row.set("tenant", Json::from(spec.model.as_str()));
+        row.set("p50_us", Json::from(percentile(&s.lat_us[tid], 50.0)));
+        row.set("p99_us", Json::from(percentile(&s.lat_us[tid], 99.0)));
+        row.set("aggregate_qps", Json::from(s.aggregate_qps));
+        row.set("fleet_envelope_bytes", Json::from(s.planned_bytes));
+        row.set("measured_bytes", Json::from(s.measured_bytes));
+        row.set("sweeps", Json::from(s.sweeps as usize));
+        row.set("contended_sweeps", Json::from(s.contended as usize));
+        row.set("steps", Json::from(s.steps as usize));
+        row.set("published", Json::from(s.published as usize));
+        rows.push(row);
+    }
+
+    write_json_rows(&out_path, rows).expect("write BENCH_multi.json");
+    println!("wrote {out_path}");
+}

@@ -13,15 +13,26 @@
 //! single-row panel).
 //!
 //! Emits `BENCH_serve.json` rows `{mode, engine, model, backend,
-//! threads, offered_qps, max_batch, slo_us, p50_us, p99_us,
-//! achieved_qps, steady_state_bytes}`.  The load is closed-loop at
-//! saturation, so `offered_qps == achieved_qps` by construction; CI
-//! gates on `dynamic.achieved_qps >= 3x serial.achieved_qps` at
-//! equal-or-better p99 on the dense models.  Flags: `--smoke`
-//! (trimmed sweep for CI), `--out PATH` (default `BENCH_serve.json`).
+//! threads, offered_qps, offered_rps, max_batch, slo_us, p50_us,
+//! p99_us, achieved_qps, steady_state_bytes}`.  Two load shapes:
+//!
+//! - **closed-loop** (`mode = serial|dynamic`): every client fires
+//!   its next request the moment the last returns — saturation, so
+//!   `offered_rps == achieved_qps` by construction.  CI gates on
+//!   `dynamic.achieved_qps >= 3x serial.achieved_qps` at
+//!   equal-or-better p99 on the dense models.
+//! - **open-loop** (`mode = open`): seeded Poisson arrivals at a
+//!   configured `offered_rps` (fractions of the measured closed-loop
+//!   saturation), latency measured from each request's *scheduled*
+//!   arrival — so queueing delay from falling behind counts against
+//!   the server.  This is the p50/p99-vs-load curve a deployment
+//!   actually sees below saturation.
+//!
+//! Flags: `--smoke` (trimmed sweep for CI), `--out PATH` (default
+//! `BENCH_serve.json`).
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use bnn_edge::models::{get, lower};
 use bnn_edge::naive::{build_engine, Accel, Plan, StepEngine};
@@ -98,6 +109,77 @@ fn run_load(
     }
 }
 
+/// Drive open-loop load: each client draws seeded Poisson
+/// interarrivals (`-ln(1-u)/rate`) totalling `offered_rps` across
+/// `clients`, sleeps until each scheduled arrival, and measures
+/// latency from that schedule — late departures accrue queueing
+/// delay instead of silently thinning the offered load.
+#[allow(clippy::too_many_arguments)]
+fn run_open_load(
+    graph: &bnn_edge::models::Graph,
+    algo: &str,
+    accel: Accel,
+    max_batch: usize,
+    slo_us: u64,
+    clients: usize,
+    per_client: usize,
+    snap: &Arc<WeightSnapshot>,
+    offered_rps: f64,
+) -> LoadResult {
+    let engine = PackedInferEngine::new(
+        graph,
+        InferAlgo::parse(algo).unwrap(),
+        accel,
+        max_batch,
+        Arc::clone(snap),
+    )
+    .unwrap();
+    let (batcher, server) = BatchServer::new(engine, slo_us, max_batch.max(4) * 4).unwrap();
+    let steady = server.steady_state_bytes();
+    let h = std::thread::spawn(move || server.run());
+
+    let ie = graph.input_elems;
+    let cl = graph.classes;
+    let rate = offered_rps / clients as f64; // per-client arrival rate
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients as u64 {
+        let b = batcher.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg32::new(0xa11 + c);
+            let x = rng.normal_vec(ie);
+            let mut out = vec![0.0f32; cl];
+            let mut lat = Vec::with_capacity(per_client);
+            let start = Instant::now();
+            let mut next_s = 0.0f64; // scheduled arrival, s after start
+            for _ in 0..per_client {
+                let u = rng.next_f32() as f64;
+                next_s += -(1.0 - u).ln() / rate;
+                let now = start.elapsed().as_secs_f64();
+                if next_s > now {
+                    std::thread::sleep(Duration::from_secs_f64(next_s - now));
+                }
+                b.infer_one(&x, &mut out).unwrap();
+                lat.push((start.elapsed().as_secs_f64() - next_s) * 1e6);
+            }
+            lat
+        }));
+    }
+    let mut lat = Vec::with_capacity(clients * per_client);
+    for h in handles {
+        lat.extend(h.join().unwrap());
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    batcher.shutdown();
+    h.join().unwrap().unwrap();
+    LoadResult {
+        p50_us: percentile(&lat, 50.0),
+        p99_us: percentile(&lat, 99.0),
+        qps: lat.len() as f64 / elapsed.max(1e-12),
+        steady_state_bytes: steady,
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     let smoke = args.bool("smoke");
@@ -129,6 +211,24 @@ fn main() {
                     WeightSnapshot::pack(&plan, &trainer.weights_snapshot(), 0).unwrap(),
                 );
                 drop(trainer);
+                let make_row = |mode: &str, mb: usize, offered_rps: f64, r: &LoadResult| {
+                    let mut row = Json::obj();
+                    row.set("mode", Json::from(mode));
+                    row.set("engine", Json::from(algo));
+                    row.set("model", Json::from(*model));
+                    row.set("backend", Json::from(*bname));
+                    row.set("threads", Json::from(*threads));
+                    row.set("offered_qps", Json::from(offered_rps));
+                    row.set("offered_rps", Json::from(offered_rps));
+                    row.set("max_batch", Json::from(mb));
+                    row.set("slo_us", Json::from(slo_us as usize));
+                    row.set("p50_us", Json::from(r.p50_us));
+                    row.set("p99_us", Json::from(r.p99_us));
+                    row.set("achieved_qps", Json::from(r.qps));
+                    row.set("steady_state_bytes", Json::from(r.steady_state_bytes));
+                    row
+                };
+                let mut saturation = 0.0f64;
                 for (mode, mb) in [("serial", 1usize), ("dynamic", max_batch)] {
                     let r = run_load(
                         &graph, algo, *accel, mb, slo_us, clients, per_client, &snap,
@@ -141,20 +241,27 @@ fn main() {
                         r.p99_us,
                         r.steady_state_bytes as f64 / bnn_edge::util::MIB
                     );
-                    let mut row = Json::obj();
-                    row.set("mode", Json::from(mode));
-                    row.set("engine", Json::from(algo));
-                    row.set("model", Json::from(*model));
-                    row.set("backend", Json::from(*bname));
-                    row.set("threads", Json::from(*threads));
-                    row.set("offered_qps", Json::from(r.qps)); // closed loop: == achieved
-                    row.set("max_batch", Json::from(mb));
-                    row.set("slo_us", Json::from(slo_us as usize));
-                    row.set("p50_us", Json::from(r.p50_us));
-                    row.set("p99_us", Json::from(r.p99_us));
-                    row.set("achieved_qps", Json::from(r.qps));
-                    row.set("steady_state_bytes", Json::from(r.steady_state_bytes));
-                    rows.push(row);
+                    if mode == "dynamic" {
+                        saturation = r.qps;
+                    }
+                    // closed loop: offered == achieved by construction
+                    rows.push(make_row(mode, mb, r.qps, &r));
+                }
+                // open loop at fractions of the measured saturation:
+                // the p50/p99-vs-offered-load curve
+                let fractions: &[f64] = if smoke { &[0.5] } else { &[0.25, 0.5, 0.75] };
+                for &f in fractions {
+                    let offered = saturation * f;
+                    let r = run_open_load(
+                        &graph, algo, *accel, max_batch, slo_us, clients, per_client,
+                        &snap, offered,
+                    );
+                    println!(
+                        "   open {algo:>8} {model} {bname} t{threads} @{:>8.1} rps: \
+                         {:>9.1} req/s  p50 {:>7.1}us  p99 {:>7.1}us",
+                        offered, r.qps, r.p50_us, r.p99_us
+                    );
+                    rows.push(make_row("open", max_batch, offered, &r));
                 }
             }
         }

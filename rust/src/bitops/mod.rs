@@ -55,7 +55,7 @@ pub use im2col::{
     im2col_packed_into, subtract_pad_contrib, subtract_pad_contrib_with,
     subtract_pad_dw_contrib, subtract_pad_dw_contrib_with,
 };
-pub use pool::Pool;
+pub use pool::{sweep_stats, Pool, SweepStats};
 
 /// A bit-packed ±1 matrix, row-major, rows padded to whole u64 words.
 /// Bit set ⇔ +1; zero-padded tail bits are corrected for in the GEMM.

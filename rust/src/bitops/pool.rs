@@ -32,8 +32,33 @@
 //! compose without deadlocking the slot.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Parallel sweeps published to the shared job slot since process
+/// start (inline runs are not counted).
+static SWEEPS: AtomicU64 = AtomicU64::new(0);
+/// Sweeps that found the slot occupied on arrival and had to wait —
+/// the multi-tenant co-scheduling contention signal: lanes running
+/// different tenants' serial regions keep this near zero, lanes
+/// racing large GEMMs push it up.
+static SWEEPS_CONTENDED: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative [`Pool`] sweep counters (process-global, monotone).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SweepStats {
+    pub sweeps: u64,
+    pub contended: u64,
+}
+
+/// Snapshot the process-global sweep counters.  Diff two snapshots to
+/// attribute contention to a workload window.
+pub fn sweep_stats() -> SweepStats {
+    SweepStats {
+        sweeps: SWEEPS.load(Ordering::Relaxed),
+        contended: SWEEPS_CONTENDED.load(Ordering::Relaxed),
+    }
+}
 
 /// Worker pool handle: a configured thread count plus a shared set of
 /// persistent workers (`None` when `threads == 1`: inline only, no
@@ -311,6 +336,10 @@ impl Pool {
         };
         {
             let mut st = shared.state.lock().unwrap();
+            SWEEPS.fetch_add(1, Ordering::Relaxed);
+            if st.job.is_some() {
+                SWEEPS_CONTENDED.fetch_add(1, Ordering::Relaxed);
+            }
             while st.job.is_some() {
                 // another caller's sweep owns the slot: wait it out
                 st = shared.done.wait(st).unwrap();
@@ -378,6 +407,27 @@ mod tests {
                 assert!(calls.load(Ordering::Relaxed) <= threads.min(rows));
             }
         }
+    }
+
+    #[test]
+    fn sweep_stats_count_published_sweeps() {
+        // a parallel sweep above MIN_PARALLEL_CELLS publishes to the
+        // job slot and bumps the counter; an inline run does not
+        let pool = Pool::new(2);
+        let rows = 16;
+        let row_len = 512; // 8192 cells >= MIN_PARALLEL_CELLS
+        let before = sweep_stats();
+        let mut out = vec![0u32; rows * row_len];
+        pool.run_rows(rows, row_len, &mut out, |_, band| band.fill(1));
+        let mid = sweep_stats();
+        assert!(mid.sweeps >= before.sweeps + 1, "parallel sweep not counted");
+        let mut tiny = vec![0u32; 8];
+        pool.run_rows(8, 1, &mut tiny, |_, band| band.fill(1));
+        // contended <= sweeps always holds (other tests run
+        // concurrently, so only monotonicity is assertable)
+        let after = sweep_stats();
+        assert!(after.contended <= after.sweeps);
+        assert!(after.sweeps >= mid.sweeps);
     }
 
     #[test]

@@ -43,6 +43,7 @@ pub fn cli_main() -> Result<()> {
         "artifacts" => cmd_artifacts(&args),
         "datasets" => cmd_datasets(),
         "serve" => cmd_serve(&args),
+        "multi" => cmd_multi(&args),
         "schedule" => cmd_schedule(&args),
         "federated" => crate::federated::cli(&args),
         _ => {
@@ -85,6 +86,15 @@ COMMANDS:
               --engine tiled [--threads 2]
               [--max-batch 8] [--slo-us 200]
               [--clients 4] [--requests 64] [--seed 42]
+  multi       run the multi-tenant co-scheduling demo: N models'
+              compiled schedules interleaved on one worker pool, with
+              live train-and-serve on the first tenant; prints
+              co-scheduled vs time-sliced throughput, per-tenant p99,
+              and the fleet memory envelope (planned == measured)
+              --models mlp_mini,cnv_mini --engine tiled [--threads 2]
+              [--lanes 2] [--max-batch 8] [--batch 16]
+              [--clients 2] [--requests 100] [--train-steps 8]
+              [--publish-every 2] [--seed 42]
   schedule    compile and dump the slot-colored buffer schedule the
               engines execute (JSON, diffable; prints a per-pool slot
               map + coloring savings to stderr)
@@ -275,6 +285,232 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One measured fleet run for `cmd_multi` (co-scheduled or the
+/// 1-lane time-sliced baseline).
+struct MultiRunStats {
+    qps: f64,
+    p99_us: Vec<f64>,
+    planned_bytes: f64,
+    measured_bytes: usize,
+    sweeps: u64,
+    contended: u64,
+    steps: u64,
+    published: u64,
+    /// Per-tenant serving-snapshot digests after the run (`None` for
+    /// train-only tenants) — the bit-identity witness.
+    digests: Vec<Option<u64>>,
+}
+
+fn run_multi_fleet(
+    specs: &[crate::serve::TenantSpec],
+    lanes: usize,
+    clients: usize,
+    requests: usize,
+    train_steps: usize,
+    seed: u64,
+) -> Result<MultiRunStats> {
+    use crate::serve::MultiModelServer;
+    use std::time::Instant;
+
+    let (client, server) = MultiModelServer::new(specs.to_vec(), lanes)?;
+    let planned = server.fleet_envelope()?.total_bytes();
+    let sw0 = crate::bitops::sweep_stats();
+    let h = std::thread::spawn(move || server.run());
+
+    let per_client = requests.div_ceil(clients);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (tid, spec) in specs.iter().enumerate() {
+        if !spec.role.serves() {
+            continue;
+        }
+        let graph = crate::models::lower(&crate::models::get(&spec.model)?)?;
+        for c in 0..clients as u64 {
+            let cl = client.clone();
+            let (ie, ncl) = (graph.input_elems, graph.classes);
+            handles.push(std::thread::spawn(move || -> Result<(usize, Vec<f64>)> {
+                let mut rng = crate::util::rng::Pcg32::new(seed ^ (tid as u64 * 97 + c + 1));
+                let mut out = vec![0.0f32; ncl];
+                let mut lat = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let x = rng.normal_vec(ie);
+                    let t = Instant::now();
+                    cl.infer_one(tid, &x, &mut out)?;
+                    lat.push(t.elapsed().as_secs_f64() * 1e6);
+                }
+                Ok((tid, lat))
+            }));
+        }
+    }
+    // live train-and-serve: a feeder drives tenant 0's training loop
+    // while its serve engine takes the infer load above
+    let feeder = if train_steps > 0 && specs[0].role.trains() {
+        let cl = client.clone();
+        let graph = crate::models::lower(&crate::models::get(&specs[0].model)?)?;
+        let bsz = specs[0].batch;
+        Some(std::thread::spawn(move || -> Result<()> {
+            let mut rng = crate::util::rng::Pcg32::new(seed ^ 0xfeed);
+            for _ in 0..train_steps {
+                let x = rng.normal_vec(graph.input_elems * bsz);
+                let y: Vec<usize> = (0..bsz).map(|i| (i * 7) % graph.classes).collect();
+                cl.train_step(0, &x, &y, 0.01)?;
+            }
+            Ok(())
+        }))
+    } else {
+        None
+    };
+
+    let mut lat_by_tenant: Vec<Vec<f64>> = vec![Vec::new(); specs.len()];
+    let mut total = 0usize;
+    for h in handles {
+        let (tid, lat) = h.join().expect("client panicked")?;
+        total += lat.len();
+        lat_by_tenant[tid].extend(lat);
+    }
+    if let Some(f) = feeder {
+        f.join().expect("feeder panicked")?;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    client.shutdown();
+    let tenants = h.join().expect("server panicked")?;
+    let sw1 = crate::bitops::sweep_stats();
+
+    let measured: usize = tenants.iter().map(|t| t.steady_state_bytes()).sum();
+    // the fold is exact once a trained tenant's packed caches fill
+    // (≥2 steps) — serve-only fleets are exact from the start
+    if train_steps == 0 || train_steps >= 2 {
+        anyhow::ensure!(
+            planned as usize == measured,
+            "fleet envelope {planned} bytes != measured {measured} bytes"
+        );
+    }
+    Ok(MultiRunStats {
+        qps: total as f64 / wall_s.max(1e-12),
+        p99_us: lat_by_tenant
+            .iter()
+            .map(|l| if l.is_empty() { 0.0 } else { crate::util::stats::percentile(l, 99.0) })
+            .collect(),
+        planned_bytes: planned,
+        measured_bytes: measured,
+        sweeps: sw1.sweeps - sw0.sweeps,
+        contended: sw1.contended - sw0.contended,
+        steps: tenants.iter().map(|t| t.steps()).sum(),
+        published: tenants.iter().map(|t| t.published()).sum(),
+        digests: tenants
+            .iter()
+            .map(|t| t.serve_engine().map(|e| e.snapshot().bit_digest()))
+            .collect(),
+    })
+}
+
+fn cmd_multi(args: &Args) -> Result<()> {
+    use crate::naive::{schedule, Accel};
+    use crate::serve::{TenantRole, TenantSpec};
+
+    let models: Vec<String> = args
+        .str_or("models", "mlp_mini,cnv_mini")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if models.is_empty() {
+        anyhow::bail!("--models needs at least one model");
+    }
+    let accel = match args.str_or("engine", "tiled").as_str() {
+        "naive" => Accel::Naive,
+        "blocked" => Accel::Blocked,
+        "tiled" => Accel::Tiled(crate::bitops::Pool::resolve(args.threads()?)),
+        other => anyhow::bail!("unknown engine '{other}' (naive|blocked|tiled)"),
+    };
+    let lanes = args.usize_or("lanes", 2)?.max(1);
+    let max_batch = args.usize_or("max-batch", 8)?;
+    let batch = args.usize_or("batch", 16)?;
+    let clients = args.usize_or("clients", 2)?.max(1);
+    let requests = args.usize_or("requests", 100)?;
+    let train_steps = args.usize_or("train-steps", 8)?;
+    let publish_every = args.usize_or("publish-every", 2)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+
+    let specs: Vec<TenantSpec> = models
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let role = if i == 0 && train_steps > 0 {
+                TenantRole::TrainServe
+            } else {
+                TenantRole::Serve
+            };
+            let mut s = TenantSpec::new(&format!("{m}#{i}"), m, role);
+            s.accel = accel;
+            s.seed = seed + i as u64;
+            s.batch = batch;
+            s.max_batch = max_batch;
+            s.publish_every = publish_every;
+            s.queue_cap = (max_batch * 4).max(32);
+            s
+        })
+        .collect();
+
+    // the compiled schedules each tenant executes
+    let naive = matches!(accel, Accel::Naive);
+    println!(
+        "multi-tenant fleet: {} tenants ({accel:?}), {clients} clients x {requests} reqs/tenant",
+        specs.len()
+    );
+    for s in &specs {
+        let graph = crate::models::lower(&crate::models::get(&s.model)?)?;
+        let plan = crate::naive::Plan::from_graph(&graph)?;
+        if s.role.trains() {
+            let sched = schedule::compile_step(&plan, &s.algo, naive, s.batch, 1)?;
+            println!("  {:<14} train {}", s.name, sched.summary());
+        }
+        if s.role.serves() {
+            let sched = schedule::compile_serve(&plan, &s.algo, naive, s.max_batch)?;
+            println!("  {:<14} serve {}", s.name, sched.summary());
+        }
+    }
+
+    let cos = run_multi_fleet(&specs, lanes, clients, requests, train_steps, seed)?;
+    let sliced = run_multi_fleet(&specs, 1, clients, requests, train_steps, seed)?;
+    // same seeds, same training data: the final weights must be
+    // bit-identical however the quanta interleaved
+    anyhow::ensure!(
+        cos.digests == sliced.digests,
+        "co-scheduled weights diverged from time-sliced"
+    );
+
+    println!(
+        "  fleet envelope: planned {:.2} MiB == measured {:.2} MiB",
+        cos.planned_bytes / crate::util::MIB,
+        cos.measured_bytes as f64 / crate::util::MIB
+    );
+    println!(
+        "  time-sliced  (1 lane) : {:>8.1} req/s           {} steps, {} publishes, {} pool sweeps ({} contended)",
+        sliced.qps, sliced.steps, sliced.published, sliced.sweeps, sliced.contended
+    );
+    println!(
+        "  co-scheduled ({lanes} lanes): {:>8.1} req/s  ({:.2}x)  {} steps, {} publishes, {} pool sweeps ({} contended)",
+        cos.qps,
+        cos.qps / sliced.qps.max(1e-12),
+        cos.steps,
+        cos.published,
+        cos.sweeps,
+        cos.contended
+    );
+    for (i, s) in specs.iter().enumerate() {
+        let snap = match cos.digests[i] {
+            Some(d) => format!("snapshot {d:016x}"),
+            None => "train-only".to_string(),
+        };
+        println!(
+            "    {:<14} p99 {:>7.0}us co-scheduled vs {:>7.0}us time-sliced  {snap}",
+            s.name, cos.p99_us[i], sliced.p99_us[i]
+        );
+    }
+    Ok(())
+}
+
 fn cmd_schedule(args: &Args) -> Result<()> {
     use crate::naive::schedule;
     use crate::util::json::Json;
@@ -317,7 +553,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         } else {
             schedule::compile_step(&plan, algo, naive, micro, batch / micro)?
         };
-        print_schedule_summary(&sched);
+        eprintln!("{}", sched.summary());
         dump.set(algo, sched.to_json());
     }
     let text = dump.to_string_pretty();
@@ -329,34 +565,6 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         None => println!("{text}"),
     }
     Ok(())
-}
-
-/// One stderr line per compiled schedule: slot count, colored arena
-/// bytes per typed pool, and the coloring's savings vs the old
-/// per-pass best-fit free list.
-fn print_schedule_summary(s: &crate::naive::schedule::StepSchedule) {
-    use crate::naive::schedule::PoolKind;
-    let colored = s.arena_bytes();
-    let uncolored = s.uncolored_bytes;
-    let saved = uncolored.saturating_sub(colored);
-    let pct = if uncolored > 0 {
-        100.0 * saved as f64 / uncolored as f64
-    } else {
-        0.0
-    };
-    let pools: Vec<String> = PoolKind::ALL
-        .iter()
-        .filter(|&&p| s.slots.pool_bytes(p) > 0)
-        .map(|&p| format!("{} {:.1} KiB", p.name(), s.slots.pool_bytes(p) as f64 / 1024.0))
-        .collect();
-    eprintln!(
-        "{:>9}: {} slots, colored {:.1} KiB vs best-fit {:.1} KiB (-{pct:.1}%)  [{}]",
-        s.algo,
-        s.slot_count(),
-        colored as f64 / 1024.0,
-        uncolored as f64 / 1024.0,
-        pools.join(", ")
-    );
 }
 
 fn cmd_datasets() -> Result<()> {

@@ -9,10 +9,13 @@ use anyhow::{anyhow, bail, Result};
 use super::envelope::{check, MemoryEnvelope};
 use super::hlo_engine::HloEngine;
 use super::metrics::{MetricPoint, Metrics};
+use std::sync::Arc;
+
 use crate::data::{build, Batches, Dataset};
 use crate::memmodel::Optimizer;
-use crate::naive::{build_engine_micro, Accel, StepEngine};
+use crate::naive::{build_engine_micro, Accel, Plan, StepEngine};
 use crate::optim::LrSchedule;
+use crate::serve::WeightSnapshot;
 use crate::util::cli::Args;
 use crate::util::rng::Pcg32;
 
@@ -178,6 +181,11 @@ impl RunResult {
     }
 }
 
+/// Receives each published [`WeightSnapshot`] — typically
+/// `MultiClient::publish` into a co-resident serving tenant, the live
+/// train-and-serve wiring of `bnn-edge multi`.
+pub type SnapshotSink = Box<dyn FnMut(Arc<WeightSnapshot>) -> Result<()> + Send>;
+
 pub struct Runner {
     cfg: RunConfig,
     dataset: Dataset,
@@ -185,6 +193,11 @@ pub struct Runner {
     eval_chunk: usize,
     schedule: LrSchedule,
     modeled_mib: Option<f64>,
+    plan: Plan,
+    /// `(publish_every_steps, sink)` — see [`Runner::set_snapshot_sink`].
+    sink: Option<(usize, SnapshotSink)>,
+    published: u64,
+    last_pub_step: usize,
 }
 
 impl Runner {
@@ -252,7 +265,46 @@ impl Runner {
         };
 
         let schedule = LrSchedule::dev_based(cfg.lr);
-        Ok(Runner { cfg, dataset, engine, eval_chunk, schedule, modeled_mib })
+        let plan = Plan::from_graph(&graph)?;
+        Ok(Runner {
+            cfg,
+            dataset,
+            engine,
+            eval_chunk,
+            schedule,
+            modeled_mib,
+            plan,
+            sink: None,
+            published: 0,
+            last_pub_step: 0,
+        })
+    }
+
+    /// Publish a packed snapshot of the latent weights into `sink`
+    /// every `every_steps` training steps (and once more after the
+    /// final step — the commit-boundary flush).  Versions are the
+    /// publish count, monotone from 1.
+    pub fn set_snapshot_sink(&mut self, every_steps: usize, sink: SnapshotSink) {
+        assert!(every_steps > 0, "publish interval must be positive");
+        self.sink = Some((every_steps, sink));
+    }
+
+    /// Snapshots published so far.
+    pub fn published(&self) -> u64 {
+        self.published
+    }
+
+    fn maybe_publish(&mut self, step: usize, force: bool) -> Result<()> {
+        let Some((every, sink)) = self.sink.as_mut() else { return Ok(()) };
+        if step == self.last_pub_step || (!force && step % *every != 0) {
+            return Ok(());
+        }
+        let v = self.published + 1;
+        let snap = Arc::new(WeightSnapshot::pack(&self.plan, &self.engine.weights_snapshot(), v)?);
+        sink(snap)?;
+        self.published = v;
+        self.last_pub_step = step;
+        Ok(())
     }
 
     pub fn dataset(&self) -> &Dataset {
@@ -301,6 +353,7 @@ impl Runner {
                 let lr = self.schedule.lr(epoch);
                 let (loss, acc) = self.engine.train_step(&x, &y, lr)?;
                 step += 1;
+                self.maybe_publish(step, false)?;
                 let eval_now = step % self.cfg.eval_every_steps == 0;
                 let (vl, va) = if eval_now {
                     let (l, a) = self.evaluate()?;
@@ -326,6 +379,9 @@ impl Runner {
                 }
             }
         }
+        // flush the endpoint weights to the sink (commit boundary:
+        // whatever serves next must see the final step)
+        self.maybe_publish(step, true)?;
         // final eval (ensures best-acc includes the endpoint)
         let (vl, va) = self.evaluate()?;
         metrics.push(MetricPoint {
@@ -407,6 +463,28 @@ mod tests {
         assert!(result.steps >= 8, "{}", result.steps);
         assert!(result.best_test_acc > 0.15, "acc {}", result.best_test_acc);
         assert!(result.metrics.steps_monotone());
+    }
+
+    #[test]
+    fn snapshot_sink_fires_on_interval_and_final_flush() {
+        use std::sync::Mutex;
+        let mut c = cfg(EngineKind::Blocked);
+        c.max_steps = Some(8);
+        let mut r = Runner::new(c).unwrap();
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let sink_seen = Arc::clone(&seen);
+        r.set_snapshot_sink(
+            3,
+            Box::new(move |snap| {
+                sink_seen.lock().unwrap().push(snap.version());
+                Ok(())
+            }),
+        );
+        let result = r.run().unwrap();
+        assert_eq!(result.steps, 8);
+        // steps 3 and 6 on the interval, plus the step-8 commit flush
+        assert_eq!(*seen.lock().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.published(), 3);
     }
 
     #[test]

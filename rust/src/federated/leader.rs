@@ -38,7 +38,17 @@ use super::worker::{spawn_worker, RoundMsg, SignUpdate, WorkerHandle};
 use crate::bitops::{BitMatrix, Pool};
 use crate::data::build;
 use crate::models::{get, lower};
+use crate::naive::Plan;
+use crate::serve::WeightSnapshot;
 use crate::util::rng::Pcg32;
+
+/// Receives every quorum-committed weight state as a packed
+/// [`WeightSnapshot`] — `(rounds_committed, snapshot)`, the snapshot
+/// version being the committed-round count.  The federated-serving
+/// hook: typically `MultiClient::publish` into a co-resident serving
+/// tenant, so the fleet's committed model is live behind the
+/// multi-tenant runtime the moment the round lands.
+pub type CommitSink = Box<dyn FnMut(u64, Arc<WeightSnapshot>) -> Result<()> + Send>;
 
 /// Which transport carries the rounds.
 #[derive(Clone, Debug)]
@@ -150,6 +160,9 @@ pub struct Leader {
     weights: Vec<Vec<f32>>,
     /// (rows, cols) per weight layer, for on-arrival validation.
     shapes: Vec<(usize, usize)>,
+    /// For packing committed weights into serving snapshots.
+    plan: Plan,
+    commit_sink: Option<CommitSink>,
 }
 
 impl Leader {
@@ -216,7 +229,24 @@ impl Leader {
             }
         };
         let pool = Pool::new(cfg.tally_threads);
-        Ok(Leader { cfg, transport, fleet, pool, weights, shapes })
+        let plan = Plan::from_graph(&graph)?;
+        Ok(Leader {
+            cfg,
+            transport,
+            fleet,
+            pool,
+            weights,
+            shapes,
+            plan,
+            commit_sink: None,
+        })
+    }
+
+    /// Publish every committed round's weights into `sink` (see
+    /// [`CommitSink`]).  Uncommitted rounds publish nothing — the
+    /// sink only ever sees quorum-committed states.
+    pub fn set_commit_sink(&mut self, sink: CommitSink) {
+        self.commit_sink = Some(sink);
     }
 
     pub fn run(&mut self) -> Result<FedResult> {
@@ -285,6 +315,11 @@ impl Leader {
                 }
                 self.fleet.commit(round);
                 stat.committed = true;
+                if let Some(sink) = self.commit_sink.as_mut() {
+                    let v = self.fleet.committed as u64;
+                    let snap = Arc::new(WeightSnapshot::pack(&self.plan, &self.weights, v)?);
+                    sink(v, snap)?;
+                }
             } else {
                 stat.mean_loss = f32::NAN;
             }
@@ -563,6 +598,49 @@ mod tests {
         for w in &r.final_weights {
             assert!(w.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
         }
+    }
+
+    #[test]
+    fn committed_weights_serve_bit_exactly() {
+        use crate::naive::Accel;
+        use crate::serve::{
+            InferAlgo, MultiModelServer, PackedInferEngine, TenantRole, TenantSpec,
+        };
+
+        // a serving tenant co-resident with the federated leader: the
+        // commit sink publishes every quorum-committed round into it
+        let mut spec = TenantSpec::new("fed", "mlp_mini", TenantRole::Serve);
+        spec.max_batch = 4;
+        let (client, server) = MultiModelServer::new(vec![spec], 1).unwrap();
+        let h = std::thread::spawn(move || server.run());
+
+        let mut l = Leader::new(small_cfg()).unwrap();
+        let c = client.clone();
+        l.set_commit_sink(Box::new(move |_committed, snap| c.publish(0, snap)));
+        let r = l.run().unwrap();
+        assert_eq!(r.rounds_committed, 3);
+
+        // a request after the last commit serves exactly the
+        // committed weights — bit-identical to an engine packed
+        // straight from FedResult::final_weights
+        let graph = lower(&get("mlp_mini").unwrap()).unwrap();
+        let plan = Plan::from_graph(&graph).unwrap();
+        let committed =
+            Arc::new(WeightSnapshot::pack(&plan, &r.final_weights, 3).unwrap());
+        let mut reference =
+            PackedInferEngine::new(&graph, InferAlgo::Proposed, Accel::Blocked, 4, committed)
+                .unwrap();
+        let mut rng = Pcg32::new(19);
+        let x = rng.normal_vec(graph.input_elems);
+        let mut got = vec![0.0f32; graph.classes];
+        let mut want = vec![0.0f32; graph.classes];
+        client.infer_one(0, &x, &mut got).unwrap();
+        reference.infer_into(&x, 1, &mut want).unwrap();
+        assert_eq!(got, want, "served logits != committed weights");
+
+        client.shutdown();
+        let tenants = h.join().unwrap().unwrap();
+        assert_eq!(tenants[0].serve_engine().unwrap().snapshot().version(), 3);
     }
 
     #[test]

@@ -56,7 +56,7 @@ mod worker;
 
 pub use async_round::{vote_weight, Admission, AsyncConfig, FleetState, Health, RoundStat};
 pub use fault::{Fault, FaultPlan, FaultRates, FaultState};
-pub use leader::{FedConfig, FedResult, FleetMode, Leader};
+pub use leader::{CommitSink, FedConfig, FedResult, FleetMode, Leader};
 pub use sim::{ShardReport, SimFleet};
 pub use tally::{
     count_votes_scalar, count_votes_sharded, count_votes_words, sign_vote_words, LayerVotes,

@@ -589,6 +589,85 @@ pub fn serve_envelope(
     Ok(ServeEnvelope { snapshot_bytes: snapshot, arena_bytes: arena })
 }
 
+/// One tenant's load declaration for [`fleet_envelope`]: which model,
+/// which algorithm, and which of the two schedules (train, serve) it
+/// co-hosts on the multi-tenant runtime.
+pub struct TenantLoad<'a> {
+    pub graph: &'a Graph,
+    pub algo: &'a str,
+    pub opt: Optimizer,
+    /// `(batch, microbatch)` when the tenant trains (microbatch 0 =
+    /// whole batch).
+    pub train: Option<(usize, usize)>,
+    /// `max_batch` when the tenant serves.
+    pub serve: Option<usize>,
+}
+
+/// Planned steady-state footprint of one tenant: its train and/or
+/// serve envelope plus the runtime's per-tenant staging buffers.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantEnvelope {
+    pub train: Option<StepEnvelope>,
+    pub serve: Option<ServeEnvelope>,
+    /// The multi-tenant lane's gather/scatter staging for this
+    /// tenant: `max_batch × (input_elems + classes)` f32 (serving
+    /// tenants only — training batches arrive pre-staged).
+    pub staging_bytes: usize,
+}
+
+impl TenantEnvelope {
+    pub fn total_bytes(&self) -> f64 {
+        self.train.map(|e| e.total_bytes()).unwrap_or(0.0)
+            + self.serve.map(|e| e.total_bytes()).unwrap_or(0) as f64
+            + self.staging_bytes as f64
+    }
+}
+
+/// The whole fleet's planned envelope: the **exact sum** of the
+/// per-tenant schedule folds.  Same `assert_eq!` discipline as the
+/// single-tenant envelopes — the multi-tenant runtime adds no hidden
+/// per-tenant overhead, so planned == measured with no tolerance
+/// band (rust/tests/multi_tenant.rs and `BENCH_multi.json` pin it).
+#[derive(Clone, Debug)]
+pub struct FleetEnvelope {
+    pub tenants: Vec<TenantEnvelope>,
+}
+
+impl FleetEnvelope {
+    pub fn total_bytes(&self) -> f64 {
+        self.tenants.iter().map(|t| t.total_bytes()).sum()
+    }
+
+    pub fn total_mib(&self) -> f64 {
+        self.total_bytes() / MIB
+    }
+}
+
+/// Price a multi-tenant fleet (accelerated tiers).  A pure fold over
+/// each tenant's compiled schedules; nothing is shared between
+/// tenants except the process-global worker pool (which owns no
+/// per-tenant memory), so the fleet envelope is exactly the sum of
+/// its parts.
+pub fn fleet_envelope(loads: &[TenantLoad]) -> anyhow::Result<FleetEnvelope> {
+    let mut tenants = Vec::with_capacity(loads.len());
+    for l in loads {
+        let train = match l.train {
+            Some((b, m)) => Some(step_envelope(l.graph, l.algo, l.opt, b, m)?),
+            None => None,
+        };
+        let serve = match l.serve {
+            Some(mb) => Some(serve_envelope(l.graph, l.algo, mb)?),
+            None => None,
+        };
+        let staging = l
+            .serve
+            .map(|mb| mb * (l.graph.input_elems + l.graph.classes) * 4)
+            .unwrap_or(0);
+        tenants.push(TenantEnvelope { train, serve, staging_bytes: staging });
+    }
+    Ok(FleetEnvelope { tenants })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -618,6 +697,42 @@ mod tests {
             let step = step_envelope(&graph, algo, Optimizer::Adam, 4, 0).unwrap();
             assert!((env.total_bytes() as f64) < step.total_bytes(), "{m}");
         }
+    }
+
+    #[test]
+    fn fleet_envelope_is_sum_of_parts() {
+        let mlp = lower(&get("mlp_mini").unwrap()).unwrap();
+        let cnv = lower(&get("cnv_mini").unwrap()).unwrap();
+        let loads = [
+            TenantLoad {
+                graph: &mlp,
+                algo: "proposed",
+                opt: Optimizer::Adam,
+                train: Some((16, 0)),
+                serve: Some(8),
+            },
+            TenantLoad {
+                graph: &cnv,
+                algo: "standard",
+                opt: Optimizer::Adam,
+                train: None,
+                serve: Some(4),
+            },
+        ];
+        let fleet = fleet_envelope(&loads).unwrap();
+        assert_eq!(fleet.tenants.len(), 2);
+        let t0 = &fleet.tenants[0];
+        let step = step_envelope(&mlp, "proposed", Optimizer::Adam, 16, 0).unwrap();
+        let serve = serve_envelope(&mlp, "proposed", 8).unwrap();
+        assert_eq!(t0.train.unwrap().total_bytes(), step.total_bytes());
+        assert_eq!(t0.serve.unwrap().total_bytes(), serve.total_bytes());
+        assert_eq!(t0.staging_bytes, 8 * (mlp.input_elems + mlp.classes) * 4);
+        let t1 = &fleet.tenants[1];
+        assert!(t1.train.is_none());
+        assert_eq!(t1.staging_bytes, 4 * (cnv.input_elems + cnv.classes) * 4);
+        let total: f64 = fleet.tenants.iter().map(|t| t.total_bytes()).sum();
+        assert_eq!(fleet.total_bytes(), total);
+        assert!(fleet.total_mib() > 0.0);
     }
 
     fn binarynet_b100(cfg: &DtypeConfig) -> Breakdown {

@@ -118,6 +118,12 @@ impl<T: Clone + Default> SlotPool<T> {
     fn bytes(&self, elem: usize) -> usize {
         self.caps.iter().sum::<usize>() * elem
     }
+
+    /// Every installed slot holds its parked buffer (nothing is
+    /// checked out).
+    fn parked(&self) -> bool {
+        self.slots.iter().all(Option::is_some)
+    }
 }
 
 /// Cursor over one pass's event stream: `events` replayed `repeats`
@@ -409,6 +415,19 @@ impl StepArena {
     pub fn heap_bytes(&self) -> usize {
         self.f32s.bytes(4) + self.u64s.bytes(8) + self.u16s.bytes(2) + self.u32s.bytes(4)
     }
+
+    /// True when no pass is active and every installed slot is parked
+    /// — the quiescence invariant the multi-tenant runtime asserts at
+    /// each preemption boundary: a tenant handed between lanes with a
+    /// buffer still checked out would leak that slot into the next
+    /// lane's pass.
+    pub fn idle(&self) -> bool {
+        self.stream.is_none()
+            && self.f32s.parked()
+            && self.u64s.parked()
+            && self.u16s.parked()
+            && self.u32s.parked()
+    }
 }
 
 /// Per-engine step context: the arena pool plus the layer-graph
@@ -542,6 +561,29 @@ mod tests {
         let v = a.take_f32(8);
         a.put_f32(v);
         a.end_pass(); // only one of two chunks ran
+    }
+
+    #[test]
+    fn idle_tracks_pass_state_and_checkouts() {
+        let mut a = StepArena::new();
+        a.install(&table(&[8], &[]));
+        assert!(a.idle());
+        a.begin_pass(pass("t", 1, vec![take(0, 8, TakeInit::Raw), put(0)], vec![]));
+        assert!(!a.idle(), "active pass is not idle");
+        let v = a.take_f32(8);
+        a.put_f32(v);
+        a.end_pass();
+        assert!(a.idle());
+        // a buffer lost on an error path leaves the arena non-idle
+        // until the next begin_pass repairs the slot
+        a.begin_pass(pass("t2", 1, vec![take(0, 8, TakeInit::Raw), put(0)], vec![]));
+        let v = a.take_f32(8);
+        a.abort_pass();
+        drop(v);
+        assert!(!a.idle(), "vacant slot is not idle");
+        a.begin_pass(pass("t3", 1, vec![], vec![]));
+        a.end_pass();
+        assert!(a.idle());
     }
 
     #[test]

@@ -123,6 +123,13 @@ pub trait StepEngine {
     fn weights_snapshot(&self) -> Vec<Vec<f32>>;
     /// Overwrite latent weights from a snapshot.
     fn load_weights(&mut self, w: &[Vec<f32>]) -> Result<()>;
+    /// True when the engine's arena is quiescent (no pass active,
+    /// every slot parked).  The multi-tenant runtime asserts this at
+    /// every preemption boundary before a tenant changes lanes;
+    /// engines without an arena are trivially idle.
+    fn arena_idle(&self) -> bool {
+        true
+    }
 }
 
 /// Build an engine by algorithm name ("standard" | "proposed").
@@ -151,6 +158,31 @@ pub fn build_engine_micro(
     accel: Accel,
     seed: u64,
 ) -> Result<Box<dyn StepEngine>> {
+    Ok(match algo {
+        "standard" => Box::new(StandardTrainer::with_microbatch(
+            graph, batch, microbatch, optimizer, accel, seed,
+        )?),
+        "proposed" => Box::new(ProposedTrainer::with_microbatch(
+            graph, batch, microbatch, optimizer, accel, seed,
+        )?),
+        _ => anyhow::bail!("unknown algo '{algo}' (standard|proposed)"),
+    })
+}
+
+/// [`build_engine_micro`], but with a `Send` bound on the box so the
+/// engine can be checked out by whichever multi-tenant lane thread
+/// picks its tenant next.  Both naive trainers are plain owned data
+/// (auto-`Send`); only the boxed trait object loses that, hence the
+/// separate builder.
+pub fn build_engine_micro_send(
+    algo: &str,
+    graph: &Graph,
+    batch: usize,
+    microbatch: usize,
+    optimizer: &str,
+    accel: Accel,
+    seed: u64,
+) -> Result<Box<dyn StepEngine + Send>> {
     Ok(match algo {
         "standard" => Box::new(StandardTrainer::with_microbatch(
             graph, batch, microbatch, optimizer, accel, seed,

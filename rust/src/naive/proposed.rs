@@ -953,6 +953,10 @@ impl StepEngine for ProposedTrainer {
         self.wcache.invalidate_all();
         Ok(())
     }
+
+    fn arena_idle(&self) -> bool {
+        self.ctx.arena.idle()
+    }
 }
 
 // -------------------------------------------------------- BN kernels

@@ -252,6 +252,36 @@ impl StepSchedule {
     pub fn pass(&self, name: &str) -> Option<&Arc<PassEvents>> {
         self.passes.iter().find(|p| p.name == name)
     }
+
+    /// One-line human summary: slot count, colored arena bytes per
+    /// typed pool, and the coloring's savings vs the old per-pass
+    /// best-fit free list.  Printed by `bnn-edge schedule` and the
+    /// multi-tenant CLI demo.
+    pub fn summary(&self) -> String {
+        let colored = self.arena_bytes();
+        let uncolored = self.uncolored_bytes;
+        let saved = uncolored.saturating_sub(colored);
+        let pct = if uncolored > 0 {
+            100.0 * saved as f64 / uncolored as f64
+        } else {
+            0.0
+        };
+        let pools: Vec<String> = PoolKind::ALL
+            .iter()
+            .filter(|&&p| self.slots.pool_bytes(p) > 0)
+            .map(|&p| {
+                format!("{} {:.1} KiB", p.name(), self.slots.pool_bytes(p) as f64 / 1024.0)
+            })
+            .collect();
+        format!(
+            "{:>9}: {} slots, colored {:.1} KiB vs best-fit {:.1} KiB (-{pct:.1}%)  [{}]",
+            self.algo,
+            self.slot_count(),
+            colored as f64 / 1024.0,
+            uncolored as f64 / 1024.0,
+            pools.join(", ")
+        )
+    }
 }
 
 // --------------------------------------------------------- lowering

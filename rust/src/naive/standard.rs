@@ -687,6 +687,10 @@ impl StepEngine for StandardTrainer {
         self.wcache.invalidate_all();
         Ok(())
     }
+
+    fn arena_idle(&self) -> bool {
+        self.ctx.arena.idle()
+    }
 }
 
 /// Dense dW contraction X̂ᵀ·dY into `dst` (the step accumulator or an

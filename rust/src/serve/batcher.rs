@@ -215,7 +215,16 @@ impl BatchServer {
                     q = self.sh.submitted.wait(q).unwrap();
                 }
                 if q.queue.is_empty() {
-                    return Ok(self.engine); // shutdown + drained
+                    // shutdown + drained: a snapshot published after
+                    // the last batch is still parked — install it so
+                    // the returned engine (and anything that restarts
+                    // from it) serves the newest weights instead of
+                    // silently dropping the publish
+                    drop(q);
+                    if let Some(s) = self.sh.pending_snap.lock().unwrap().take() {
+                        self.engine.install(s)?;
+                    }
+                    return Ok(self.engine);
                 }
                 // SLO window: wait for more requests, at most
                 // max_wait past the first one seen
@@ -340,6 +349,33 @@ mod tests {
         assert_eq!(batcher.served(), 4 * 12);
         batcher.shutdown();
         h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn shutdown_installs_parked_snapshot() {
+        // regression: a snapshot published after the last served
+        // batch used to be dropped by the shutdown drain — the
+        // returned engine kept serving stale weights
+        let graph = lower(&get("mlp_mini").unwrap()).unwrap();
+        let plan = Plan::from_graph(&graph).unwrap();
+        let t0 = build_engine("proposed", &graph, 4, "adam", Accel::Blocked, 3).unwrap();
+        let snap0 = Arc::new(WeightSnapshot::pack(&plan, &t0.weights_snapshot(), 0).unwrap());
+        let t1 = build_engine("proposed", &graph, 4, "adam", Accel::Blocked, 99).unwrap();
+        let snap1 = Arc::new(WeightSnapshot::pack(&plan, &t1.weights_snapshot(), 1).unwrap());
+        let engine =
+            PackedInferEngine::new(&graph, InferAlgo::Proposed, Accel::Blocked, 1, snap0)
+                .unwrap();
+        let (batcher, server) = BatchServer::new(engine, 50, 4).unwrap();
+        let h = std::thread::spawn(move || server.run());
+        batcher.publish(Arc::clone(&snap1));
+        batcher.shutdown();
+        let engine = h.join().unwrap().unwrap();
+        assert_eq!(
+            engine.snapshot().version(),
+            1,
+            "publish-then-shutdown must install the parked snapshot"
+        );
+        assert_eq!(engine.snapshot().bit_digest(), snap1.bit_digest());
     }
 
     #[test]

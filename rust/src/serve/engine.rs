@@ -133,6 +133,21 @@ impl PackedInferEngine {
         self.plan.input_elems
     }
 
+    pub fn algo(&self) -> InferAlgo {
+        self.algo
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// True when the inference arena is quiescent (no pass active,
+    /// every slot parked) — asserted by the multi-tenant runtime at
+    /// preemption boundaries.
+    pub fn arena_idle(&self) -> bool {
+        self.ctx.arena.idle()
+    }
+
     /// The snapshot currently serving.
     pub fn snapshot(&self) -> &Arc<WeightSnapshot> {
         &self.snap

@@ -32,11 +32,27 @@
 //! over this stack; `benches/perf_serve.rs` measures p50/p99 latency
 //! and throughput vs offered load, and CI gates on dynamic batching
 //! beating serial batch-1 serving.
+//!
+//! On top of the single-engine stack sits the **multi-tenant
+//! runtime** ([`MultiModelServer`]): N [`Tenant`]s — each a compiled
+//! train and/or serve schedule with its own slot arena and snapshot
+//! chain — co-scheduled by a work-conserving round-robin interleaver
+//! on lanes that share the process-global worker pool, with live
+//! train-and-serve (periodic copy-on-publish from a tenant's trainer
+//! into its own serve engine) and a planned
+//! [`crate::memmodel::fleet_envelope`] that equals the measured
+//! steady state exactly.  `bnn-edge multi` demos it;
+//! `benches/perf_multi.rs` + `BENCH_multi.json` carry the
+//! co-scheduled vs time-sliced headline, CI-gated at ≥1.5×.
 
 mod batcher;
 mod engine;
+mod multi;
 mod snapshot;
+mod tenant;
 
 pub use batcher::{BatchServer, Batcher};
 pub use engine::{InferAlgo, PackedInferEngine};
+pub use multi::{MultiClient, MultiModelServer};
 pub use snapshot::{LayerWeights, WeightSnapshot};
+pub use tenant::{Tenant, TenantRole, TenantSpec};

@@ -1,0 +1,780 @@
+//! Multi-tenant schedule runtime: N models' compiled schedules
+//! co-scheduled on one worker pool.
+//!
+//! [`MultiModelServer`] hosts a fleet of [`Tenant`]s — each a
+//! compiled train and/or serve `StepSchedule` with its own slot arena
+//! and `WeightSnapshot` chain — and executes them on `lanes` driver
+//! threads.  The kernels inside every quantum still run on the
+//! **process-global** `bitops::Pool` workers, so lanes never
+//! oversubscribe cores: a lane driving one tenant's serial
+//! pack/BN/optimizer region leaves the pool free for another lane's
+//! GEMM bands, which is exactly where the co-scheduling throughput
+//! win over time-sliced serial execution comes from
+//! (`benches/perf_multi.rs`, CI-gated ≥1.5×).
+//!
+//! ## Work-conserving interleaver
+//!
+//! Per tenant there is a run queue pair (infer requests, train
+//! requests) plus a parked published snapshot.  Lanes pick the next
+//! runnable tenant **round-robin** from a shared cursor, check the
+//! tenant out of the shared state, and run one *quantum*:
+//!
+//! - **Infer** — drain up to `max_batch` queued requests, gather,
+//!   one forward, scatter (the dynamic-batching policy of
+//!   [`super::BatchServer`], greedy rather than SLO-waiting: with
+//!   multiple tenants there is always other work, so a lane never
+//!   sleeps on tenant A while tenant B has requests).
+//! - **Train** — one training step (plus the tenant's periodic
+//!   auto-publish into its own serve engine).
+//! - **Install** — a parked snapshot with no queued work.
+//!
+//! Quantum boundaries are the **preemption points**: a parked
+//! snapshot is installed before the quantum (every batch sees exactly
+//! one weight version — the [`super::Batcher`] discipline), and at
+//! check-in the tenant's arenas must be quiescent
+//! ([`Tenant::is_idle`]) so a tenant can migrate between lanes
+//! without leaking a checked-out slot.  Tenants with both queues
+//! nonempty alternate train/infer quanta (`prefer_train` flips at
+//! each pick), so co-resident serving is never starved by a hot
+//! training loop or vice versa.
+//!
+//! ## Zero-allocation steady state
+//!
+//! The request protocol is the raw-pointer scheme of
+//! [`super::batcher`] (clients block until their done flag is set, so
+//! the pointees outlive every server access; output writes and flag
+//! stores happen under the shared mutex, which provides the
+//! happens-before edge).  Queues are pre-sized and capacity-guarded,
+//! lanes gather/scatter through the tenant's pre-sized staging
+//! buffers, and engines execute their compiled schedules — after
+//! warmup, a steady-state quantum performs zero heap allocations
+//! (hard-asserted in rust/tests/memtrack_multi.rs; auto-publish packs
+//! a fresh snapshot and is the one deliberate exception).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::snapshot::WeightSnapshot;
+use super::tenant::{Tenant, TenantSpec};
+use crate::naive::Plan;
+
+/// One queued inference request (pointers into the blocked client's
+/// buffers — see module docs).
+struct InferReq {
+    x: *const f32,
+    out: *mut f32,
+    done: *const AtomicBool,
+}
+
+/// One queued training step: a whole pre-staged batch.
+struct TrainReq {
+    x: *const f32,
+    y: *const usize,
+    lr: f32,
+    result: *mut (f32, f32),
+    done: *const AtomicBool,
+}
+
+// The client blocks until `done` is set, so the pointees outlive
+// every server access (same argument as serve::batcher::Req).
+unsafe impl Send for InferReq {}
+unsafe impl Send for TrainReq {}
+
+/// Immutable per-tenant facts, readable without the state lock
+/// (submit-time validation).
+struct TenantMeta {
+    name: String,
+    input_elems: usize,
+    classes: usize,
+    train_batch: usize,
+    max_batch: usize,
+    queue_cap: usize,
+    has_train: bool,
+    has_serve: bool,
+    plan: Plan,
+}
+
+/// Mutable per-tenant scheduling state.
+struct TenantSlot {
+    /// `None` while a lane has the tenant checked out.
+    tenant: Option<Box<Tenant>>,
+    infer_q: VecDeque<InferReq>,
+    train_q: VecDeque<TrainReq>,
+    /// Parked by `publish`, installed at the next quantum boundary.
+    pending_snap: Option<Arc<WeightSnapshot>>,
+    /// Alternation bit for TrainServe tenants with both queues
+    /// nonempty.
+    prefer_train: bool,
+    served: u64,
+    steps: u64,
+}
+
+struct MultiState {
+    slots: Vec<TenantSlot>,
+    /// Round-robin cursor: the next pick scans from here.
+    rr: usize,
+    shutdown: bool,
+    failed: bool,
+    /// Quanta currently executing outside the lock.
+    inflight: usize,
+}
+
+struct MultiShared {
+    m: Mutex<MultiState>,
+    /// Runnable work appeared (lanes wake to pick).
+    work: Condvar,
+    /// A quantum completed (clients re-check their done flags).
+    completed: Condvar,
+    /// Queue space freed (back-pressured clients retry).
+    space: Condvar,
+    meta: Vec<TenantMeta>,
+    lanes: usize,
+}
+
+/// What a lane checked out for one quantum.
+enum Quantum {
+    /// Requests already drained into the lane-local batch vec.
+    Infer,
+    Train(TrainReq),
+    /// A parked snapshot with no queued work.
+    Install,
+}
+
+/// Client + publisher handle to a running [`MultiModelServer`]
+/// (cheap to clone; one per client thread).
+#[derive(Clone)]
+pub struct MultiClient {
+    sh: Arc<MultiShared>,
+}
+
+impl MultiClient {
+    fn meta(&self, tid: usize) -> Result<&TenantMeta> {
+        self.sh
+            .meta
+            .get(tid)
+            .ok_or_else(|| anyhow!("no tenant {tid} (fleet has {})", self.sh.meta.len()))
+    }
+
+    /// Submit one sample to tenant `tid` and block until its logits
+    /// arrive.  Allocation-free.
+    pub fn infer_one(&self, tid: usize, x: &[f32], out: &mut [f32]) -> Result<()> {
+        let meta = self.meta(tid)?;
+        if !meta.has_serve {
+            bail!("tenant '{}' has no serving role", meta.name);
+        }
+        if x.len() != meta.input_elems {
+            bail!("input is {} elems, want {}", x.len(), meta.input_elems);
+        }
+        if out.len() != meta.classes {
+            bail!("output is {} elems, want {}", out.len(), meta.classes);
+        }
+        let done = AtomicBool::new(false);
+        let req = InferReq { x: x.as_ptr(), out: out.as_mut_ptr(), done: &done };
+        let mut st = self.sh.m.lock().unwrap();
+        while st.slots[tid].infer_q.len() >= meta.queue_cap && !st.shutdown {
+            st = self.sh.space.wait(st).unwrap();
+        }
+        if st.shutdown {
+            bail!("multi server is shut down");
+        }
+        st.slots[tid].infer_q.push_back(req);
+        self.sh.work.notify_all();
+        // once enqueued we *must* wait (the server owns our pointers
+        // until it sets done)
+        while !done.load(Ordering::Relaxed) {
+            st = self.sh.completed.wait(st).unwrap();
+        }
+        if st.failed {
+            bail!("multi server failed");
+        }
+        Ok(())
+    }
+
+    /// Submit one training step (a whole pre-staged batch) to tenant
+    /// `tid` and block for its (loss, accuracy).
+    pub fn train_step(&self, tid: usize, x: &[f32], y: &[usize], lr: f32) -> Result<(f32, f32)> {
+        let meta = self.meta(tid)?;
+        if !meta.has_train {
+            bail!("tenant '{}' has no training role", meta.name);
+        }
+        if x.len() != meta.train_batch * meta.input_elems || y.len() != meta.train_batch {
+            bail!("bad batch shapes for tenant '{}'", meta.name);
+        }
+        let mut result = (0.0f32, 0.0f32);
+        let done = AtomicBool::new(false);
+        let req = TrainReq {
+            x: x.as_ptr(),
+            y: y.as_ptr(),
+            lr,
+            result: &mut result,
+            done: &done,
+        };
+        let mut st = self.sh.m.lock().unwrap();
+        while st.slots[tid].train_q.len() >= meta.queue_cap && !st.shutdown {
+            st = self.sh.space.wait(st).unwrap();
+        }
+        if st.shutdown {
+            bail!("multi server is shut down");
+        }
+        st.slots[tid].train_q.push_back(req);
+        self.sh.work.notify_all();
+        while !done.load(Ordering::Relaxed) {
+            st = self.sh.completed.wait(st).unwrap();
+        }
+        if st.failed {
+            bail!("multi server failed");
+        }
+        Ok(result)
+    }
+
+    /// Park a snapshot for tenant `tid`, installed at its next
+    /// quantum boundary (copy-on-publish).  Shapes are validated
+    /// here, so the lane-side install cannot fail.
+    pub fn publish(&self, tid: usize, snap: Arc<WeightSnapshot>) -> Result<()> {
+        let meta = self.meta(tid)?;
+        if !meta.has_serve {
+            bail!("tenant '{}' has no serving role", meta.name);
+        }
+        if !snap.matches(&meta.plan) {
+            bail!("snapshot does not match tenant '{}'", meta.name);
+        }
+        let mut st = self.sh.m.lock().unwrap();
+        st.slots[tid].pending_snap = Some(snap);
+        self.sh.work.notify_all();
+        Ok(())
+    }
+
+    /// Stop accepting work; lanes drain what is queued and exit.
+    pub fn shutdown(&self) {
+        self.sh.m.lock().unwrap().shutdown = true;
+        self.sh.work.notify_all();
+        self.sh.space.notify_all();
+    }
+
+    /// Requests served by tenant `tid` so far.
+    pub fn served(&self, tid: usize) -> u64 {
+        self.sh.m.lock().unwrap().slots[tid].served
+    }
+
+    /// Training steps executed by tenant `tid` so far.
+    pub fn steps(&self, tid: usize) -> u64 {
+        self.sh.m.lock().unwrap().slots[tid].steps
+    }
+}
+
+/// The co-scheduling runtime (see module docs).  Build with
+/// [`MultiModelServer::new`], call [`MultiModelServer::run`].
+pub struct MultiModelServer {
+    sh: Arc<MultiShared>,
+}
+
+impl MultiModelServer {
+    /// Build the fleet: one [`Tenant`] per spec, `lanes` driver
+    /// threads (1 = time-sliced serial execution — the bench
+    /// baseline).
+    pub fn new(specs: Vec<TenantSpec>, lanes: usize) -> Result<(MultiClient, MultiModelServer)> {
+        if specs.is_empty() {
+            bail!("multi server needs at least one tenant");
+        }
+        if lanes == 0 {
+            bail!("multi server needs at least one lane");
+        }
+        let mut meta = Vec::with_capacity(specs.len());
+        let mut slots = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let tenant = Tenant::new(spec)?;
+            let spec = tenant.spec();
+            meta.push(TenantMeta {
+                name: spec.name.clone(),
+                input_elems: tenant.graph().input_elems,
+                classes: tenant.graph().classes,
+                train_batch: spec.batch,
+                max_batch: spec.max_batch,
+                queue_cap: spec.queue_cap,
+                has_train: spec.role.trains(),
+                has_serve: spec.role.serves(),
+                plan: tenant.plan().clone(),
+            });
+            let cap = spec.queue_cap;
+            slots.push(TenantSlot {
+                tenant: Some(Box::new(tenant)),
+                infer_q: VecDeque::with_capacity(cap),
+                train_q: VecDeque::with_capacity(cap),
+                pending_snap: None,
+                prefer_train: false,
+                served: 0,
+                steps: 0,
+            });
+        }
+        let sh = Arc::new(MultiShared {
+            m: Mutex::new(MultiState {
+                slots,
+                rr: 0,
+                shutdown: false,
+                failed: false,
+                inflight: 0,
+            }),
+            work: Condvar::new(),
+            completed: Condvar::new(),
+            space: Condvar::new(),
+            meta,
+            lanes,
+        });
+        Ok((MultiClient { sh: Arc::clone(&sh) }, MultiModelServer { sh }))
+    }
+
+    /// Planned steady-state bytes of the whole fleet: the exact sum
+    /// of per-tenant schedule folds.
+    pub fn fleet_envelope(&self) -> Result<crate::memmodel::FleetEnvelope> {
+        let st = self.sh.m.lock().unwrap();
+        let loads: Vec<crate::memmodel::TenantLoad> = st
+            .slots
+            .iter()
+            .map(|s| s.tenant.as_ref().expect("pre-run").load())
+            .collect();
+        crate::memmodel::fleet_envelope(&loads)
+    }
+
+    /// Measured steady-state bytes of the whole fleet (pre-run: every
+    /// tenant checked in).
+    pub fn steady_state_bytes(&self) -> usize {
+        let st = self.sh.m.lock().unwrap();
+        st.slots
+            .iter()
+            .map(|s| s.tenant.as_ref().expect("pre-run").steady_state_bytes())
+            .sum()
+    }
+
+    /// Serve until shutdown: this thread becomes lane 0, `lanes - 1`
+    /// more are spawned.  Returns the tenants (trained weights,
+    /// installed snapshots, counters) once every queue is drained.
+    pub fn run(self) -> Result<Vec<Tenant>> {
+        let sh = self.sh;
+        let mut handles = Vec::new();
+        for l in 1..sh.lanes {
+            let sh2 = Arc::clone(&sh);
+            handles.push(std::thread::spawn(move || lane(&sh2, l)));
+        }
+        let mut first_err = lane(&sh, 0).err();
+        for h in handles {
+            if let Err(e) = h.join().expect("lane panicked") {
+                first_err.get_or_insert(e);
+            }
+        }
+        let mut st = sh.m.lock().unwrap();
+        debug_assert_eq!(st.inflight, 0, "lanes exited with a quantum in flight");
+        // failure path: release clients whose requests were never
+        // drained (no outputs written; they observe `failed`)
+        for slot in &mut st.slots {
+            for r in slot.infer_q.drain(..) {
+                unsafe { (*r.done).store(true, Ordering::Relaxed) };
+            }
+            for r in slot.train_q.drain(..) {
+                unsafe { (*r.done).store(true, Ordering::Relaxed) };
+            }
+        }
+        sh.completed.notify_all();
+        let mut tenants = Vec::with_capacity(st.slots.len());
+        for slot in &mut st.slots {
+            let mut t = *slot.tenant.take().expect("tenant checked out at exit");
+            // a snapshot published after the tenant's last quantum is
+            // still parked — install it so the returned tenant serves
+            // the newest weights (the BatchServer shutdown fix,
+            // applied fleet-wide)
+            if first_err.is_none() {
+                if let Some(s) = slot.pending_snap.take() {
+                    t.install_pending(s)?;
+                }
+            }
+            tenants.push(t);
+        }
+        drop(st);
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(tenants),
+        }
+    }
+}
+
+/// One checked-out quantum, ready to execute outside the lock.
+struct Checkout {
+    tid: usize,
+    tenant: Box<Tenant>,
+    snap: Option<Arc<WeightSnapshot>>,
+    quantum: Quantum,
+}
+
+/// Scan for the next runnable tenant from the round-robin cursor and
+/// check it out.  `batch` receives the drained infer requests.
+fn pick(
+    st: &mut MultiState,
+    meta: &[TenantMeta],
+    batch: &mut Vec<InferReq>,
+) -> Option<Checkout> {
+    let n = st.slots.len();
+    for i in 0..n {
+        let tid = (st.rr + i) % n;
+        let m = &meta[tid];
+        let slot = &mut st.slots[tid];
+        if slot.tenant.is_none() {
+            continue; // checked out by another lane
+        }
+        let can_infer = m.has_serve && !slot.infer_q.is_empty();
+        let can_train = m.has_train && !slot.train_q.is_empty();
+        let can_install = m.has_serve && slot.pending_snap.is_some();
+        if !can_infer && !can_train && !can_install {
+            continue;
+        }
+        let quantum = if can_train && (!can_infer || slot.prefer_train) {
+            slot.prefer_train = false;
+            Quantum::Train(slot.train_q.pop_front().unwrap())
+        } else if can_infer {
+            slot.prefer_train = true;
+            let take = slot.infer_q.len().min(m.max_batch);
+            for _ in 0..take {
+                batch.push(slot.infer_q.pop_front().unwrap());
+            }
+            Quantum::Infer
+        } else {
+            Quantum::Install
+        };
+        let co = Checkout {
+            tid,
+            tenant: slot.tenant.take().unwrap(),
+            snap: slot.pending_snap.take(),
+            quantum,
+        };
+        st.rr = (tid + 1) % n;
+        st.inflight += 1;
+        return Some(co);
+    }
+    None
+}
+
+/// One driver thread: pick → install parked snapshot → run the
+/// quantum → check the tenant back in at the boundary.
+fn lane(sh: &Arc<MultiShared>, _lane_id: usize) -> Result<()> {
+    let max_mb = sh.meta.iter().map(|m| m.max_batch).max().unwrap_or(1);
+    let mut batch: Vec<InferReq> = Vec::with_capacity(max_mb);
+    loop {
+        let co = {
+            let mut st = sh.m.lock().unwrap();
+            loop {
+                if st.failed {
+                    return Ok(()); // the failing lane reported
+                }
+                if let Some(co) = pick(&mut st, &sh.meta, &mut batch) {
+                    // the condvar is shared across tenants, so wake
+                    // every back-pressured client to re-check its own
+                    // queue
+                    sh.space.notify_all();
+                    break co;
+                }
+                if st.shutdown && st.inflight == 0 {
+                    return Ok(()); // drained fleet-wide
+                }
+                st = sh.work.wait(st).unwrap();
+            }
+        };
+        let tid = co.tid;
+        let mut tenant = co.tenant;
+        let meta = &sh.meta[tid];
+        let r = run_quantum(&mut tenant, meta, co.snap, &co.quantum, &batch);
+        // check-in: outputs, done flags and counters land under the
+        // mutex (the happens-before edge for the raw pointers), then
+        // the tenant returns to its slot for the next lane
+        let mut st = sh.m.lock().unwrap();
+        match r {
+            Ok(()) => {
+                debug_assert!(tenant.is_idle(), "tenant '{}' non-idle at check-in", meta.name);
+                let cl = meta.classes;
+                match &co.quantum {
+                    Quantum::Infer => {
+                        for (i, req) in batch.iter().enumerate() {
+                            let dst = unsafe { std::slice::from_raw_parts_mut(req.out, cl) };
+                            dst.copy_from_slice(&tenant.batch_logits[i * cl..(i + 1) * cl]);
+                            unsafe { (*req.done).store(true, Ordering::Relaxed) };
+                        }
+                        st.slots[tid].served += batch.len() as u64;
+                        batch.clear();
+                    }
+                    Quantum::Train(req) => {
+                        unsafe { (*req.done).store(true, Ordering::Relaxed) };
+                        st.slots[tid].steps += 1;
+                    }
+                    Quantum::Install => {}
+                }
+                st.slots[tid].tenant = Some(tenant);
+                st.inflight -= 1;
+                sh.completed.notify_all();
+                sh.work.notify_all();
+            }
+            Err(e) => {
+                // release this quantum's clients (no outputs written —
+                // they observe `failed`), check the tenant back in,
+                // and take the whole fleet down
+                match &co.quantum {
+                    Quantum::Infer => {
+                        for req in batch.drain(..) {
+                            unsafe { (*req.done).store(true, Ordering::Relaxed) };
+                        }
+                    }
+                    Quantum::Train(req) => {
+                        unsafe { (*req.done).store(true, Ordering::Relaxed) };
+                    }
+                    Quantum::Install => {}
+                }
+                st.slots[tid].tenant = Some(tenant);
+                st.inflight -= 1;
+                st.failed = true;
+                st.shutdown = true;
+                sh.completed.notify_all();
+                sh.work.notify_all();
+                sh.space.notify_all();
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// Execute one quantum outside the lock.  The training result is
+/// written through the request pointer here (the client cannot
+/// observe it until its done flag is set under the mutex).
+fn run_quantum(
+    tenant: &mut Tenant,
+    meta: &TenantMeta,
+    snap: Option<Arc<WeightSnapshot>>,
+    quantum: &Quantum,
+    batch: &[InferReq],
+) -> Result<()> {
+    if let Some(s) = snap {
+        tenant.install_pending(s)?;
+    }
+    match quantum {
+        Quantum::Infer => {
+            let ie = meta.input_elems;
+            for (i, req) in batch.iter().enumerate() {
+                let src = unsafe { std::slice::from_raw_parts(req.x, ie) };
+                tenant.batch_x[i * ie..(i + 1) * ie].copy_from_slice(src);
+            }
+            tenant.run_infer(batch.len())
+        }
+        Quantum::Train(req) => {
+            let x =
+                unsafe { std::slice::from_raw_parts(req.x, meta.train_batch * meta.input_elems) };
+            let y = unsafe { std::slice::from_raw_parts(req.y, meta.train_batch) };
+            let out = tenant.run_train(x, y, req.lr)?;
+            unsafe { *req.result = out };
+            tenant.maybe_autopublish()?;
+            Ok(())
+        }
+        Quantum::Install => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::naive::{build_engine, Accel, StepEngine};
+    use crate::serve::engine::{InferAlgo, PackedInferEngine};
+    use crate::serve::tenant::TenantRole;
+    use crate::util::rng::Pcg32;
+
+    fn serve_spec(name: &str, model: &str, seed: u64) -> TenantSpec {
+        let mut s = TenantSpec::new(name, model, TenantRole::Serve);
+        s.seed = seed;
+        s.max_batch = 4;
+        s
+    }
+
+    #[test]
+    fn cosched_serve_tenants_match_solo_engines() {
+        // two models, two lanes, concurrent clients: every tenant's
+        // logits must be bit-identical to a solo engine on the same
+        // snapshot (sequential batch-1 submissions keep the BN batch
+        // composition deterministic)
+        let specs = vec![serve_spec("a", "mlp_mini", 5), serve_spec("b", "cnv_mini", 6)];
+        // a serve-only tenant packs its initial snapshot from a
+        // throwaway trainer seeded with spec.seed; weight init depends
+        // only on the seed and the shapes, so the same pack here is
+        // bit-identical to what each tenant serves
+        let snaps: Vec<Arc<WeightSnapshot>> = [("mlp_mini", 5u64), ("cnv_mini", 6u64)]
+            .iter()
+            .map(|(model, seed)| {
+                let graph = crate::models::lower(&crate::models::get(model).unwrap()).unwrap();
+                let plan = Plan::from_graph(&graph).unwrap();
+                let t = build_engine("proposed", &graph, 1, "adam", Accel::Blocked, *seed)
+                    .unwrap();
+                Arc::new(WeightSnapshot::pack(&plan, &t.weights_snapshot(), 0).unwrap())
+            })
+            .collect();
+        let (client, server) = MultiModelServer::new(specs, 2).unwrap();
+        let h = std::thread::spawn(move || server.run());
+        let mut workers = Vec::new();
+        for (tid, model) in [(0usize, "mlp_mini"), (1usize, "cnv_mini")] {
+            let c = client.clone();
+            let snap = Arc::clone(&snaps[tid]);
+            workers.push(std::thread::spawn(move || {
+                let graph = crate::models::lower(&crate::models::get(model).unwrap()).unwrap();
+                let mut solo =
+                    PackedInferEngine::new(&graph, InferAlgo::Proposed, Accel::Blocked, 4, snap)
+                        .unwrap();
+                let ie = graph.input_elems;
+                let cl = graph.classes;
+                let mut rng = Pcg32::new(40 + tid as u64);
+                let mut got = vec![0.0f32; cl];
+                let mut want = vec![0.0f32; cl];
+                for _ in 0..16 {
+                    let x = rng.normal_vec(ie);
+                    c.infer_one(tid, &x, &mut got).unwrap();
+                    solo.infer_into(&x, 1, &mut want).unwrap();
+                    assert_eq!(got, want, "tenant {tid} diverged from solo");
+                }
+            }));
+        }
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(client.served(0), 16);
+        assert_eq!(client.served(1), 16);
+        client.shutdown();
+        let tenants = h.join().unwrap().unwrap();
+        assert!(tenants.iter().all(|t| t.is_idle()));
+    }
+
+    #[test]
+    fn train_through_the_fleet_matches_solo_training() {
+        let graph = crate::models::lower(&crate::models::get("mlp_mini").unwrap()).unwrap();
+        let mut spec = TenantSpec::new("t", "mlp_mini", TenantRole::Train);
+        spec.batch = 8;
+        spec.seed = 11;
+        let (client, server) = MultiModelServer::new(vec![spec], 2).unwrap();
+        let h = std::thread::spawn(move || server.run());
+        let mut solo = build_engine("proposed", &graph, 8, "adam", Accel::Blocked, 11).unwrap();
+        let ie = graph.input_elems;
+        let cl = graph.classes;
+        let mut rng = Pcg32::new(21);
+        for _ in 0..4 {
+            let x = rng.normal_vec(ie * 8);
+            let y: Vec<usize> = (0..8).map(|i| (i * 3) % cl).collect();
+            let got = client.train_step(0, &x, &y, 0.01).unwrap();
+            let want = solo.train_step(&x, &y, 0.01).unwrap();
+            assert_eq!(got, want, "loss/acc diverged");
+        }
+        assert_eq!(client.steps(0), 4);
+        client.shutdown();
+        let tenants = h.join().unwrap().unwrap();
+        assert_eq!(
+            tenants[0].train_engine().unwrap().weights_snapshot(),
+            solo.weights_snapshot(),
+            "weights diverged from the solo run"
+        );
+    }
+
+    #[test]
+    fn publish_installs_at_quantum_boundary_and_survives_shutdown() {
+        let graph = crate::models::lower(&crate::models::get("mlp_mini").unwrap()).unwrap();
+        let plan = Plan::from_graph(&graph).unwrap();
+        let other = build_engine("proposed", &graph, 4, "adam", Accel::Blocked, 77).unwrap();
+        let snap1 =
+            Arc::new(WeightSnapshot::pack(&plan, &other.weights_snapshot(), 1).unwrap());
+
+        let (client, server) = MultiModelServer::new(vec![serve_spec("a", "mlp_mini", 5)], 1)
+            .unwrap();
+        let h = std::thread::spawn(move || server.run());
+        let mut rng = Pcg32::new(9);
+        let x = rng.normal_vec(graph.input_elems);
+        let mut got = vec![0.0f32; graph.classes];
+        client.infer_one(0, &x, &mut got).unwrap();
+        client.publish(0, Arc::clone(&snap1)).unwrap();
+        client.infer_one(0, &x, &mut got).unwrap();
+        let snap1c = Arc::clone(&snap1);
+        let mut solo =
+            PackedInferEngine::new(&graph, InferAlgo::Proposed, Accel::Blocked, 4, snap1c)
+                .unwrap();
+        let mut want = vec![0.0f32; graph.classes];
+        solo.infer_into(&x, 1, &mut want).unwrap();
+        assert_eq!(got, want, "published snapshot applies at the next quantum");
+
+        // a publish parked after the last quantum must survive the
+        // drain (the BatchServer shutdown fix, fleet-wide)
+        let other2 = build_engine("proposed", &graph, 4, "adam", Accel::Blocked, 78).unwrap();
+        let snap2 =
+            Arc::new(WeightSnapshot::pack(&plan, &other2.weights_snapshot(), 2).unwrap());
+        client.publish(0, Arc::clone(&snap2)).unwrap();
+        client.shutdown();
+        let tenants = h.join().unwrap().unwrap();
+        let served = tenants[0].serve_engine().unwrap().snapshot();
+        assert_eq!(served.version(), 2);
+        assert_eq!(served.bit_digest(), snap2.bit_digest());
+        assert!(client.infer_one(0, &x, &mut got).is_err(), "post-shutdown submit");
+    }
+
+    #[test]
+    fn trainserve_autopublish_serves_fresh_weights() {
+        let mut spec = TenantSpec::new("ts", "mlp_mini", TenantRole::TrainServe);
+        spec.batch = 8;
+        spec.max_batch = 2;
+        spec.publish_every = 2;
+        spec.seed = 13;
+        let (client, server) = MultiModelServer::new(vec![spec], 2).unwrap();
+        let graph = crate::models::lower(&crate::models::get("mlp_mini").unwrap()).unwrap();
+        let plan = Plan::from_graph(&graph).unwrap();
+        let h = std::thread::spawn(move || server.run());
+        // solo mirror: same engine, same data, repacking every 2 steps
+        let mut solo = build_engine("proposed", &graph, 8, "adam", Accel::Blocked, 13).unwrap();
+        let ie = graph.input_elems;
+        let cl = graph.classes;
+        let mut rng = Pcg32::new(31);
+        for step in 1..=4u64 {
+            let x = rng.normal_vec(ie * 8);
+            let y: Vec<usize> = (0..8).map(|i| (i + step as usize) % cl).collect();
+            client.train_step(0, &x, &y, 0.01).unwrap();
+            solo.train_step(&x, &y, 0.01).unwrap();
+        }
+        // after 4 steps the tenant has auto-published version 2; a
+        // served request must use exactly those weights
+        let probe = rng.normal_vec(ie);
+        let mut got = vec![0.0f32; cl];
+        client.infer_one(0, &probe, &mut got).unwrap();
+        let mirror = Arc::new(WeightSnapshot::pack(&plan, &solo.weights_snapshot(), 2).unwrap());
+        let mut reference =
+            PackedInferEngine::new(&graph, InferAlgo::Proposed, Accel::Blocked, 2, mirror).unwrap();
+        let mut want = vec![0.0f32; cl];
+        reference.infer_into(&probe, 1, &mut want).unwrap();
+        assert_eq!(got, want, "served logits must come from the auto-published weights");
+        client.shutdown();
+        let tenants = h.join().unwrap().unwrap();
+        assert_eq!(tenants[0].published(), 2);
+        assert_eq!(tenants[0].steps(), 4);
+        assert_eq!(tenants[0].served(), 1);
+    }
+
+    #[test]
+    fn fleet_envelope_is_exact_pre_run() {
+        // serve-only fleet: the envelope is exact even before any
+        // quantum runs (train tenants need warmup steps for the
+        // packed-weight cache term — pinned in tests/multi_tenant.rs)
+        let specs = vec![serve_spec("a", "mlp_mini", 5), serve_spec("b", "cnv_mini", 6)];
+        let (client, server) = MultiModelServer::new(specs, 1).unwrap();
+        let planned = server.fleet_envelope().unwrap().total_bytes() as usize;
+        assert_eq!(planned, server.steady_state_bytes());
+        client.shutdown();
+        server.run().unwrap();
+    }
+
+    #[test]
+    fn bad_submissions_are_rejected() {
+        let (client, server) = MultiModelServer::new(vec![serve_spec("a", "mlp_mini", 5)], 1)
+            .unwrap();
+        let mut out = vec![0.0f32; 16];
+        assert!(client.infer_one(7, &[0.0; 4], &mut out).is_err(), "no such tenant");
+        assert!(client.infer_one(0, &[0.0; 3], &mut out).is_err(), "bad input len");
+        assert!(client.train_step(0, &[0.0; 4], &[0], 0.1).is_err(), "no train role");
+        client.shutdown();
+        server.run().unwrap();
+    }
+}

@@ -113,6 +113,33 @@ impl WeightSnapshot {
             .map(|l| l.w.heap_bytes() + l.wt.heap_bytes() + l.beta.len() * 4)
             .sum()
     }
+
+    /// FNV-1a digest over every packed weight word and β bit pattern.
+    /// Two snapshots digest equal iff they would serve bit-identical
+    /// logits — the cheap identity the multi-tenant isolation tests
+    /// and the CLI demo print instead of whole weight images.
+    pub fn bit_digest(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(PRIME);
+            }
+        };
+        for l in &self.layers {
+            for &w in &l.w.data {
+                mix(w);
+            }
+            for &w in &l.wt.data {
+                mix(w);
+            }
+            for &b in &l.beta {
+                mix(b.to_bits() as u64);
+            }
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -145,6 +172,21 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn bit_digest_is_a_weight_identity() {
+        let graph = lower(&get("mlp_mini").unwrap()).unwrap();
+        let plan = Plan::from_graph(&graph).unwrap();
+        let eng = build_engine("proposed", &graph, 4, "adam", Accel::Blocked, 9).unwrap();
+        let img = eng.weights_snapshot();
+        let a = WeightSnapshot::pack(&plan, &img, 1).unwrap();
+        let b = WeightSnapshot::pack(&plan, &img, 2).unwrap();
+        // same bits, different version: digest ignores the version
+        assert_eq!(a.bit_digest(), b.bit_digest());
+        let other = build_engine("proposed", &graph, 4, "adam", Accel::Blocked, 10).unwrap();
+        let c = WeightSnapshot::pack(&plan, &other.weights_snapshot(), 1).unwrap();
+        assert_ne!(a.bit_digest(), c.bit_digest(), "different seeds, same digest");
     }
 
     #[test]

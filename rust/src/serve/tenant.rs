@@ -1,0 +1,429 @@
+//! One co-scheduled model on the multi-tenant runtime.
+//!
+//! A [`Tenant`] bundles everything one model needs to run on a
+//! [`super::MultiModelServer`] lane: its lowered graph + plan, a
+//! compiled **train** engine and/or a compiled **serve** engine (each
+//! executing its own slot-colored `StepSchedule` through its own
+//! `StepArena`), the per-tenant gather/scatter staging buffers, and
+//! the tenant's `WeightSnapshot` chain.
+//!
+//! Tenants are *checked out* of the shared state by whichever lane
+//! thread runs their next quantum and checked back in at the batch
+//! boundary — so everything here is owned data (`Send`), and the
+//! quiescence invariant ([`Tenant::is_idle`]) is asserted at every
+//! hand-off: a tenant that crossed lanes with an arena buffer still
+//! checked out would leak that slot into the next lane's pass.
+//!
+//! Live train-and-serve is the [`TenantRole::TrainServe`] role: after
+//! every `publish_every` training steps the tenant packs its latent
+//! weights into a fresh snapshot (version = publish count) and
+//! installs it into its own serve engine — the same copy-on-publish
+//! discipline as [`super::Batcher::publish`], executed at a lane
+//! batch boundary so no in-flight request ever sees mixed weights.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::engine::{InferAlgo, PackedInferEngine};
+use super::snapshot::WeightSnapshot;
+use crate::memmodel::{self, Optimizer};
+use crate::models::{get, lower, Graph};
+use crate::naive::{build_engine_micro_send, Accel, Plan, StepEngine};
+
+/// Which schedules a tenant runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TenantRole {
+    /// Training steps only.
+    Train,
+    /// Inference requests only.
+    Serve,
+    /// Both, with periodic copy-on-publish from train to serve.
+    TrainServe,
+}
+
+impl TenantRole {
+    pub fn trains(&self) -> bool {
+        matches!(self, TenantRole::Train | TenantRole::TrainServe)
+    }
+
+    pub fn serves(&self) -> bool {
+        matches!(self, TenantRole::Serve | TenantRole::TrainServe)
+    }
+}
+
+/// Declarative tenant configuration (everything [`Tenant::new`] needs
+/// to build the engines).
+#[derive(Clone)]
+pub struct TenantSpec {
+    /// Display name (defaults to the model name).
+    pub name: String,
+    /// Zoo model.
+    pub model: String,
+    /// "standard" | "proposed".
+    pub algo: String,
+    pub accel: Accel,
+    pub optimizer: String,
+    pub seed: u64,
+    pub role: TenantRole,
+    /// Training batch (roles that train).
+    pub batch: usize,
+    /// Training microbatch (0 = whole batch).
+    pub microbatch: usize,
+    /// Serving batch cap (roles that serve).
+    pub max_batch: usize,
+    /// `TrainServe`: auto-publish into the serve engine every N
+    /// training steps (0 = only explicit publishes).
+    pub publish_every: usize,
+    /// Per-tenant request queue capacity.
+    pub queue_cap: usize,
+    /// Initial serving snapshot; `None` packs one from the tenant's
+    /// freshly seeded weights.
+    pub init: Option<Arc<WeightSnapshot>>,
+}
+
+impl TenantSpec {
+    pub fn new(name: &str, model: &str, role: TenantRole) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            model: model.to_string(),
+            algo: "proposed".to_string(),
+            accel: Accel::Blocked,
+            optimizer: "adam".to_string(),
+            seed: 42,
+            role,
+            batch: 16,
+            microbatch: 0,
+            max_batch: 8,
+            publish_every: 0,
+            queue_cap: 32,
+            init: None,
+        }
+    }
+}
+
+/// A built tenant: owned engines + staging, checked out by one lane
+/// at a time (see module docs).
+pub struct Tenant {
+    spec: TenantSpec,
+    graph: Graph,
+    plan: Plan,
+    opt: Optimizer,
+    train: Option<Box<dyn StepEngine + Send>>,
+    serve: Option<PackedInferEngine>,
+    /// Gather staging, `max_batch × input_elems` (serving roles).
+    pub(crate) batch_x: Vec<f32>,
+    /// Scatter staging, `max_batch × classes` (serving roles).
+    pub(crate) batch_logits: Vec<f32>,
+    steps: u64,
+    served: u64,
+    published: u64,
+}
+
+impl Tenant {
+    pub fn new(spec: TenantSpec) -> Result<Tenant> {
+        let graph = lower(&get(&spec.model)?)?;
+        let plan = Plan::from_graph(&graph)?;
+        let opt = Optimizer::parse(&spec.optimizer)
+            .ok_or_else(|| anyhow::anyhow!("unknown optimizer '{}'", spec.optimizer))?;
+        if spec.role.trains() {
+            if spec.batch == 0 {
+                bail!("tenant '{}': training role needs a positive batch", spec.name);
+            }
+            let micro = if spec.microbatch == 0 { spec.batch } else { spec.microbatch };
+            if spec.batch % micro != 0 {
+                bail!("tenant '{}': microbatch must divide batch", spec.name);
+            }
+        }
+        if spec.role.serves() {
+            if spec.max_batch == 0 {
+                bail!("tenant '{}': serving role needs a positive max_batch", spec.name);
+            }
+            if spec.queue_cap < spec.max_batch {
+                bail!(
+                    "tenant '{}': queue_cap {} below max_batch {}",
+                    spec.name,
+                    spec.queue_cap,
+                    spec.max_batch
+                );
+            }
+        }
+        let train = if spec.role.trains() {
+            Some(build_engine_micro_send(
+                &spec.algo,
+                &graph,
+                spec.batch,
+                spec.microbatch,
+                &spec.optimizer,
+                spec.accel,
+                spec.seed,
+            )?)
+        } else {
+            None
+        };
+        let (serve, published) = if spec.role.serves() {
+            let snap = match (&spec.init, &train) {
+                (Some(s), _) => Arc::clone(s),
+                // TrainServe starts serving its own initial weights
+                (None, Some(t)) => Arc::new(WeightSnapshot::pack(&plan, &t.weights_snapshot(), 0)?),
+                // Serve-only without an init: a throwaway seeded
+                // trainer supplies the weights (demo/bench path)
+                (None, None) => {
+                    let t = build_engine_micro_send(
+                        &spec.algo,
+                        &graph,
+                        1,
+                        0,
+                        &spec.optimizer,
+                        spec.accel,
+                        spec.seed,
+                    )?;
+                    Arc::new(WeightSnapshot::pack(&plan, &t.weights_snapshot(), 0)?)
+                }
+            };
+            let version = snap.version();
+            let algo = InferAlgo::parse(&spec.algo)?;
+            let mut eng =
+                PackedInferEngine::new(&graph, algo, spec.accel, spec.max_batch, snap)?;
+            eng.warmup()?;
+            (Some(eng), version)
+        } else {
+            (None, 0)
+        };
+        let (bx, bl) = if spec.role.serves() {
+            (
+                vec![0.0f32; spec.max_batch * graph.input_elems],
+                vec![0.0f32; spec.max_batch * graph.classes],
+            )
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        Ok(Tenant {
+            spec,
+            graph,
+            plan,
+            opt,
+            train,
+            serve,
+            batch_x: bx,
+            batch_logits: bl,
+            steps: 0,
+            served: 0,
+            published,
+        })
+    }
+
+    pub fn spec(&self) -> &TenantSpec {
+        &self.spec
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Training steps executed so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Inference requests served so far.
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    /// Snapshots published into the serve engine so far (== the
+    /// serving snapshot's version).
+    pub fn published(&self) -> u64 {
+        self.published
+    }
+
+    pub fn train_engine(&self) -> Option<&(dyn StepEngine + Send)> {
+        self.train.as_deref()
+    }
+
+    pub fn train_engine_mut(&mut self) -> Option<&mut (dyn StepEngine + Send)> {
+        match &mut self.train {
+            Some(t) => Some(t.as_mut()),
+            None => None,
+        }
+    }
+
+    pub fn serve_engine(&self) -> Option<&PackedInferEngine> {
+        self.serve.as_ref()
+    }
+
+    /// One training step on a pre-staged batch.
+    pub fn run_train(&mut self, x: &[f32], y: &[usize], lr: f32) -> Result<(f32, f32)> {
+        let Some(t) = self.train.as_mut() else {
+            bail!("tenant '{}' has no training role", self.spec.name)
+        };
+        let r = t.train_step(x, y, lr)?;
+        self.steps += 1;
+        Ok(r)
+    }
+
+    /// Run the serve engine on the first `n` staged rows of
+    /// `batch_x`, leaving logits in `batch_logits`.
+    pub fn run_infer(&mut self, n: usize) -> Result<()> {
+        let Some(s) = self.serve.as_mut() else {
+            bail!("tenant '{}' has no serving role", self.spec.name)
+        };
+        let ie = self.graph.input_elems;
+        let cl = self.graph.classes;
+        s.infer_into(&self.batch_x[..n * ie], n, &mut self.batch_logits[..n * cl])?;
+        self.served += n as u64;
+        Ok(())
+    }
+
+    /// Install an externally published snapshot (lane batch
+    /// boundary).
+    pub fn install_pending(&mut self, snap: Arc<WeightSnapshot>) -> Result<()> {
+        let Some(s) = self.serve.as_mut() else {
+            bail!("tenant '{}' has no serving role", self.spec.name)
+        };
+        self.published = snap.version();
+        s.install(snap)?;
+        Ok(())
+    }
+
+    /// `TrainServe` auto-publish: every `publish_every` steps, pack
+    /// the latent weights (version = publish count) and install the
+    /// snapshot into this tenant's own serve engine.  Returns the
+    /// snapshot so callers (tests, the CLI demo) can observe it.
+    pub fn maybe_autopublish(&mut self) -> Result<Option<Arc<WeightSnapshot>>> {
+        let every = self.spec.publish_every;
+        if every == 0 || !self.spec.role.serves() || self.steps % every as u64 != 0 {
+            return Ok(None);
+        }
+        let Some(t) = self.train.as_ref() else { return Ok(None) };
+        let v = self.published + 1;
+        let snap = Arc::new(WeightSnapshot::pack(&self.plan, &t.weights_snapshot(), v)?);
+        self.published = v;
+        self.serve
+            .as_mut()
+            .expect("serves() checked above")
+            .install(Arc::clone(&snap))?;
+        Ok(Some(snap))
+    }
+
+    /// Measured steady-state bytes: train state+arena, serve
+    /// snapshot+arena, and the staging buffers — the number
+    /// [`crate::memmodel::fleet_envelope`] prices exactly.
+    pub fn steady_state_bytes(&self) -> usize {
+        let train = self
+            .train
+            .as_ref()
+            .map(|t| t.state_bytes() + t.arena_bytes())
+            .unwrap_or(0);
+        let serve = self
+            .serve
+            .as_ref()
+            .map(|s| s.state_bytes() + s.arena_bytes())
+            .unwrap_or(0);
+        train + serve + (self.batch_x.capacity() + self.batch_logits.capacity()) * 4
+    }
+
+    /// Both arenas quiescent — asserted at every lane hand-off.
+    pub fn is_idle(&self) -> bool {
+        self.train.as_ref().map(|t| t.arena_idle()).unwrap_or(true)
+            && self.serve.as_ref().map(|s| s.arena_idle()).unwrap_or(true)
+    }
+
+    /// This tenant's load declaration for the fleet envelope.
+    pub fn load(&self) -> memmodel::TenantLoad<'_> {
+        memmodel::TenantLoad {
+            graph: &self.graph,
+            algo: &self.spec.algo,
+            opt: self.opt,
+            train: self.spec.role.trains().then_some((self.spec.batch, self.spec.microbatch)),
+            serve: self.spec.role.serves().then_some(self.spec.max_batch),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trainserve_tenant_publishes_its_own_weights() {
+        let mut spec = TenantSpec::new("t", "mlp_mini", TenantRole::TrainServe);
+        spec.batch = 8;
+        spec.publish_every = 2;
+        let mut t = Tenant::new(spec).unwrap();
+        assert!(t.is_idle());
+        assert_eq!(t.published(), 0);
+        let ie = t.graph().input_elems;
+        let mut rng = crate::util::rng::Pcg32::new(3);
+        let x: Vec<f32> = rng.normal_vec(ie * 8);
+        let y: Vec<usize> = (0..8).map(|i| i % t.graph().classes).collect();
+        t.run_train(&x, &y, 0.01).unwrap();
+        assert!(t.maybe_autopublish().unwrap().is_none(), "step 1 of 2");
+        t.run_train(&x, &y, 0.01).unwrap();
+        let snap = t.maybe_autopublish().unwrap().expect("step 2 publishes");
+        assert_eq!(snap.version(), 1);
+        assert_eq!(t.published(), 1);
+        assert_eq!(t.serve_engine().unwrap().snapshot().version(), 1);
+        // the published snapshot is exactly the trained weights
+        let want = WeightSnapshot::pack(
+            t.plan(),
+            &t.train_engine().unwrap().weights_snapshot(),
+            1,
+        )
+        .unwrap();
+        assert_eq!(snap.bit_digest(), want.bit_digest());
+        assert!(t.is_idle());
+    }
+
+    #[test]
+    fn serve_only_tenant_runs_staged_batches() {
+        let mut spec = TenantSpec::new("s", "mlp_mini", TenantRole::Serve);
+        spec.max_batch = 4;
+        let mut t = Tenant::new(spec).unwrap();
+        assert!(t.train_engine().is_none());
+        let ie = t.graph().input_elems;
+        let cl = t.graph().classes;
+        let mut rng = crate::util::rng::Pcg32::new(7);
+        let x = rng.normal_vec(ie);
+        t.batch_x[..ie].copy_from_slice(&x);
+        t.run_infer(1).unwrap();
+        assert_eq!(t.served(), 1);
+        assert!(t.batch_logits[..cl].iter().all(|v| v.is_finite()));
+        // identical to a solo engine on the same snapshot
+        let mut solo = PackedInferEngine::new(
+            t.graph(),
+            InferAlgo::Proposed,
+            Accel::Blocked,
+            4,
+            Arc::clone(t.serve_engine().unwrap().snapshot()),
+        )
+        .unwrap();
+        let mut want = vec![0.0f32; cl];
+        solo.infer_into(&x, 1, &mut want).unwrap();
+        assert_eq!(&t.batch_logits[..cl], &want[..]);
+        // steady state is priced exactly by the fleet envelope
+        let env = memmodel::fleet_envelope(&[t.load()]).unwrap();
+        assert_eq!(env.total_bytes() as usize, t.steady_state_bytes());
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let mut s = TenantSpec::new("x", "mlp_mini", TenantRole::Train);
+        s.batch = 0;
+        assert!(Tenant::new(s).is_err(), "zero batch");
+        let mut s = TenantSpec::new("x", "mlp_mini", TenantRole::Train);
+        s.batch = 8;
+        s.microbatch = 3;
+        assert!(Tenant::new(s).is_err(), "microbatch must divide");
+        let mut s = TenantSpec::new("x", "mlp_mini", TenantRole::Serve);
+        s.max_batch = 0;
+        assert!(Tenant::new(s).is_err(), "zero max_batch");
+        let mut s = TenantSpec::new("x", "mlp_mini", TenantRole::Serve);
+        s.queue_cap = 2;
+        assert!(Tenant::new(s).is_err(), "queue below max_batch");
+    }
+}

@@ -1,0 +1,112 @@
+//! The multi-tenant runtime is **allocation-free** in steady state —
+//! the ISSUE-9 zero-allocation bar, measured with the tracking
+//! allocator (its own binary: `memtrack::alloc_count` is
+//! process-global, so each binary keeps its asserts in one `#[test]`).
+//!
+//! A 2-lane fleet (one TrainServe tenant, one Serve tenant) takes
+//! concurrent train + infer traffic from pre-spawned client threads.
+//! After a warm phase (arena pools filled, packed-weight caches
+//! populated, queue/condvar paths exercised) a barrier-fenced
+//! measured window of mixed quanta must perform **zero** heap
+//! allocations across the whole process — clients, lanes, and both
+//! tenants' engines.  Auto-publish is the one deliberate allocator
+//! (it packs a fresh snapshot), so the measured fleet runs
+//! `publish_every = 0`.
+
+use std::sync::{Arc, Barrier};
+
+use bnn_edge::memtrack::{self, TrackingAlloc};
+use bnn_edge::models::{get, lower};
+use bnn_edge::naive::Accel;
+use bnn_edge::serve::{MultiModelServer, TenantRole, TenantSpec};
+use bnn_edge::util::rng::Pcg32;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+const WARM: usize = 6;
+const MEASURED: usize = 12;
+
+#[test]
+fn steady_state_fleet_allocates_nothing() {
+    assert!(memtrack::is_active(), "tracking allocator not installed");
+
+    let mut ts = TenantSpec::new("ts", "mlp_mini", TenantRole::TrainServe);
+    ts.accel = Accel::Tiled(2);
+    ts.batch = 8;
+    ts.max_batch = 4;
+    ts.publish_every = 0; // auto-publish packs a snapshot: excluded
+    let mut sv = TenantSpec::new("sv", "cnv_mini", TenantRole::Serve);
+    sv.accel = Accel::Tiled(2);
+    sv.max_batch = 4;
+    sv.seed = 43;
+
+    let (client, server) = MultiModelServer::new(vec![ts, sv], 2).unwrap();
+    let h = std::thread::spawn(move || server.run());
+
+    // fence the measured window: [0] warm done → main snapshots,
+    // [1] window opens, [2] window closed → main snapshots again
+    let gates: Vec<Arc<Barrier>> = (0..3).map(|_| Arc::new(Barrier::new(4))).collect();
+
+    let mut drivers = Vec::new();
+    // infer clients, one per tenant — inputs pre-generated
+    for tid in 0..2usize {
+        let c = client.clone();
+        let g = gates.clone();
+        drivers.push(std::thread::spawn(move || {
+            let model = ["mlp_mini", "cnv_mini"][tid];
+            let graph = lower(&get(model).unwrap()).unwrap();
+            let mut rng = Pcg32::new(60 + tid as u64);
+            let x = rng.normal_vec(graph.input_elems);
+            let mut out = vec![0.0f32; graph.classes];
+            for _ in 0..WARM {
+                c.infer_one(tid, &x, &mut out).unwrap();
+            }
+            g[0].wait();
+            g[1].wait();
+            for _ in 0..MEASURED {
+                c.infer_one(tid, &x, &mut out).unwrap();
+            }
+            g[2].wait();
+        }));
+    }
+    // training feeder for tenant 0 — batches pre-generated
+    {
+        let c = client.clone();
+        let g = gates.clone();
+        drivers.push(std::thread::spawn(move || {
+            let graph = lower(&get("mlp_mini").unwrap()).unwrap();
+            let mut rng = Pcg32::new(66);
+            let x = rng.normal_vec(graph.input_elems * 8);
+            let y: Vec<usize> = (0..8).map(|i| i % graph.classes).collect();
+            // ≥2 warm steps: optimizer state + packed caches filled
+            for _ in 0..3 {
+                c.train_step(0, &x, &y, 0.01).unwrap();
+            }
+            g[0].wait();
+            g[1].wait();
+            for _ in 0..3 {
+                c.train_step(0, &x, &y, 0.01).unwrap();
+            }
+            g[2].wait();
+        }));
+    }
+
+    gates[0].wait();
+    let before = memtrack::alloc_count();
+    gates[1].wait();
+    gates[2].wait();
+    let allocs = memtrack::alloc_count() - before;
+
+    for d in drivers {
+        d.join().unwrap();
+    }
+    client.shutdown();
+    let tenants = h.join().unwrap().unwrap();
+    assert_eq!(
+        allocs, 0,
+        "steady-state fleet performed {allocs} heap allocations (want zero)"
+    );
+    assert!(tenants.iter().all(|t| t.is_idle()));
+    assert_eq!(tenants[0].steps(), 6);
+}

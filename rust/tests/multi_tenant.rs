@@ -1,0 +1,235 @@
+//! Tenant isolation under full contention — the ISSUE-9 acceptance
+//! bar.  Two zoo models co-scheduled on 2 lanes, swept across
+//! {train, serve, train+serve} roles × accelerated tiers, with
+//! concurrent driver threads per tenant, must be **bit-identical** to
+//! the same work run solo:
+//!
+//! - train: after N fleet steps on the same data, every tenant's
+//!   latent weights equal its solo engine's exactly;
+//! - serve: every request's logits equal a solo engine's on the same
+//!   snapshot (sequential batch-1 submissions per tenant keep the BN
+//!   batch composition deterministic);
+//! - train+serve: logits served after auto-publish equal a solo
+//!   mirror's weights re-packed at the same publish boundary;
+//! - the planned [`bnn_edge::memmodel::fleet_envelope`] equals the
+//!   measured fleet steady state exactly once trained tenants' packed
+//!   caches fill (≥2 steps).
+//!
+//! (The zero-allocation steady-state assert lives in its own binary,
+//! rust/tests/memtrack_multi.rs — the tracking allocator's counters
+//! are process-global.)
+
+use std::sync::Arc;
+
+use bnn_edge::models::{get, lower, Graph};
+use bnn_edge::naive::{build_engine, Accel, Plan, StepEngine};
+use bnn_edge::serve::{
+    InferAlgo, MultiModelServer, PackedInferEngine, TenantRole, TenantSpec, WeightSnapshot,
+};
+use bnn_edge::util::rng::Pcg32;
+
+const MODELS: [&str; 2] = ["mlp_mini", "cnv_mini"];
+const TIERS: [Accel; 2] = [Accel::Blocked, Accel::Tiled(2)];
+const STEPS: usize = 4;
+const BATCH: usize = 8;
+
+fn graph_for(model: &str) -> Graph {
+    lower(&get(model).unwrap()).unwrap()
+}
+
+fn spec_for(tid: usize, model: &str, role: TenantRole, accel: Accel) -> TenantSpec {
+    let mut s = TenantSpec::new(model, model, role);
+    s.accel = accel;
+    s.seed = 50 + tid as u64;
+    s.batch = BATCH;
+    s.max_batch = 4;
+    s
+}
+
+/// Deterministic per-tenant training batches — the fleet driver and
+/// the solo mirror construct identical streams.
+fn train_batch(rng: &mut Pcg32, graph: &Graph, step: usize) -> (Vec<f32>, Vec<usize>) {
+    let x = rng.normal_vec(graph.input_elems * BATCH);
+    let y = (0..BATCH).map(|i| (i + step) % graph.classes).collect();
+    (x, y)
+}
+
+#[test]
+fn train_tenants_match_solo_under_contention() {
+    for accel in TIERS {
+        let specs: Vec<TenantSpec> = MODELS
+            .iter()
+            .enumerate()
+            .map(|(tid, m)| spec_for(tid, m, TenantRole::Train, accel))
+            .collect();
+        let (client, server) = MultiModelServer::new(specs, 2).unwrap();
+        let planned = server.fleet_envelope().unwrap().total_bytes();
+        let h = std::thread::spawn(move || server.run());
+
+        // both tenants trained concurrently — full lane contention
+        let mut drivers = Vec::new();
+        for (tid, model) in MODELS.into_iter().enumerate() {
+            let c = client.clone();
+            drivers.push(std::thread::spawn(move || {
+                let graph = graph_for(model);
+                let mut rng = Pcg32::new(70 + tid as u64);
+                for step in 0..STEPS {
+                    let (x, y) = train_batch(&mut rng, &graph, step);
+                    c.train_step(tid, &x, &y, 0.01).unwrap();
+                }
+            }));
+        }
+        for d in drivers {
+            d.join().unwrap();
+        }
+        client.shutdown();
+        let tenants = h.join().unwrap().unwrap();
+
+        // solo mirrors: same seeds, same data, no contention
+        for (tid, model) in MODELS.into_iter().enumerate() {
+            let graph = graph_for(model);
+            let mut solo =
+                build_engine("proposed", &graph, BATCH, "adam", accel, 50 + tid as u64).unwrap();
+            let mut rng = Pcg32::new(70 + tid as u64);
+            for step in 0..STEPS {
+                let (x, y) = train_batch(&mut rng, &graph, step);
+                solo.train_step(&x, &y, 0.01).unwrap();
+            }
+            assert_eq!(
+                tenants[tid].train_engine().unwrap().weights_snapshot(),
+                solo.weights_snapshot(),
+                "{model} ({accel:?}): fleet weights != solo weights"
+            );
+            assert_eq!(tenants[tid].steps(), STEPS as u64);
+        }
+
+        // ≥2 steps ran: the packed caches are full and the planned
+        // envelope prices the measured fleet exactly
+        let measured: usize = tenants.iter().map(|t| t.steady_state_bytes()).sum();
+        assert_eq!(planned as usize, measured, "{accel:?}: envelope mismatch");
+    }
+}
+
+#[test]
+fn serve_tenants_match_solo_under_contention() {
+    for accel in TIERS {
+        let specs: Vec<TenantSpec> = MODELS
+            .iter()
+            .enumerate()
+            .map(|(tid, m)| spec_for(tid, m, TenantRole::Serve, accel))
+            .collect();
+        let (client, server) = MultiModelServer::new(specs, 2).unwrap();
+        // serve-only: exact before any quantum runs
+        let planned = server.fleet_envelope().unwrap().total_bytes();
+        assert_eq!(planned as usize, server.steady_state_bytes());
+        let h = std::thread::spawn(move || server.run());
+
+        let mut drivers = Vec::new();
+        for (tid, model) in MODELS.into_iter().enumerate() {
+            let c = client.clone();
+            drivers.push(std::thread::spawn(move || {
+                let graph = graph_for(model);
+                // a serve-only tenant packs its initial snapshot from
+                // a throwaway batch-1 trainer at spec.seed; weight
+                // init depends only on seed + shapes, so this is the
+                // same snapshot bit for bit
+                let seeded =
+                    build_engine("proposed", &graph, 1, "adam", accel, 50 + tid as u64).unwrap();
+                let plan = Plan::from_graph(&graph).unwrap();
+                let snap = Arc::new(
+                    WeightSnapshot::pack(&plan, &seeded.weights_snapshot(), 0).unwrap(),
+                );
+                let mut solo =
+                    PackedInferEngine::new(&graph, InferAlgo::Proposed, accel, 4, snap).unwrap();
+                let mut rng = Pcg32::new(80 + tid as u64);
+                let mut got = vec![0.0f32; graph.classes];
+                let mut want = vec![0.0f32; graph.classes];
+                for _ in 0..16 {
+                    let x = rng.normal_vec(graph.input_elems);
+                    c.infer_one(tid, &x, &mut got).unwrap();
+                    solo.infer_into(&x, 1, &mut want).unwrap();
+                    assert_eq!(got, want, "{model} ({accel:?}): logits != solo");
+                }
+            }));
+        }
+        for d in drivers {
+            d.join().unwrap();
+        }
+        client.shutdown();
+        let tenants = h.join().unwrap().unwrap();
+        assert!(tenants.iter().all(|t| t.served() == 16));
+    }
+}
+
+#[test]
+fn trainserve_tenants_serve_their_own_published_weights() {
+    for accel in TIERS {
+        let specs: Vec<TenantSpec> = MODELS
+            .iter()
+            .enumerate()
+            .map(|(tid, m)| {
+                let mut s = spec_for(tid, m, TenantRole::TrainServe, accel);
+                s.publish_every = 2;
+                s
+            })
+            .collect();
+        let (client, server) = MultiModelServer::new(specs, 2).unwrap();
+        let planned = server.fleet_envelope().unwrap().total_bytes();
+        let h = std::thread::spawn(move || server.run());
+
+        // each driver trains its tenant and then probes the serve
+        // side; the probe logits are checked against a solo mirror
+        // re-packed at the same publish boundary
+        let mut drivers = Vec::new();
+        for (tid, model) in MODELS.into_iter().enumerate() {
+            let c = client.clone();
+            drivers.push(std::thread::spawn(move || -> (Vec<f32>, Vec<f32>) {
+                let graph = graph_for(model);
+                let mut rng = Pcg32::new(90 + tid as u64);
+                for step in 0..STEPS {
+                    let (x, y) = train_batch(&mut rng, &graph, step);
+                    c.train_step(tid, &x, &y, 0.01).unwrap();
+                }
+                // STEPS=4, publish_every=2: version 2 installed at
+                // the step-4 quantum, strictly before this submit
+                let probe = rng.normal_vec(graph.input_elems);
+                let mut got = vec![0.0f32; graph.classes];
+                c.infer_one(tid, &probe, &mut got).unwrap();
+                (probe, got)
+            }));
+        }
+        let probes: Vec<(Vec<f32>, Vec<f32>)> =
+            drivers.into_iter().map(|d| d.join().unwrap()).collect();
+        client.shutdown();
+        let tenants = h.join().unwrap().unwrap();
+
+        for (tid, model) in MODELS.into_iter().enumerate() {
+            let graph = graph_for(model);
+            let plan = Plan::from_graph(&graph).unwrap();
+            let mut solo =
+                build_engine("proposed", &graph, BATCH, "adam", accel, 50 + tid as u64).unwrap();
+            let mut rng = Pcg32::new(90 + tid as u64);
+            for step in 0..STEPS {
+                let (x, y) = train_batch(&mut rng, &graph, step);
+                solo.train_step(&x, &y, 0.01).unwrap();
+            }
+            assert_eq!(
+                tenants[tid].train_engine().unwrap().weights_snapshot(),
+                solo.weights_snapshot(),
+                "{model} ({accel:?}): fleet weights != solo weights"
+            );
+            let mirror =
+                Arc::new(WeightSnapshot::pack(&plan, &solo.weights_snapshot(), 2).unwrap());
+            let mut reference =
+                PackedInferEngine::new(&graph, InferAlgo::Proposed, accel, 4, mirror).unwrap();
+            let (probe, got) = &probes[tid];
+            let mut want = vec![0.0f32; graph.classes];
+            reference.infer_into(probe, 1, &mut want).unwrap();
+            assert_eq!(got, &want, "{model} ({accel:?}): served logits != mirror");
+            assert_eq!(tenants[tid].published(), 2);
+        }
+
+        let measured: usize = tenants.iter().map(|t| t.steady_state_bytes()).sum();
+        assert_eq!(planned as usize, measured, "{accel:?}: envelope mismatch");
+    }
+}
