@@ -12,7 +12,8 @@
 //!
 //! Emits `BENCH_conv.json` (stable schema: `{backend, layer, h, w,
 //! cin, cout, kside, stride, pad, batch, giops, threads,
-//! im2col_f32_bytes}`) via `util::bench::write_json_rows`; `giops`
+//! im2col_f32_bytes}`, plus `tuned_config`/`tuned_giops` on tiled
+//! forward rows) via `util::bench::write_json_rows`; `giops`
 //! counts the conv GEMM ops (2·B·OH·OW·k²·Cin·Cout) over the *whole*
 //! pipeline time, so im2col overheads depress it honestly.
 //! `im2col_f32_bytes` records the transient f32 buffer each variant
@@ -38,7 +39,7 @@
 
 use bnn_edge::bitops::{
     conv_dx_streaming, im2col_packed, packed_at_gemm_f32, simd, subtract_pad_dw_contrib,
-    Backend, BitMatrix, ConvGeom,
+    tune, Backend, BitMatrix, ConvGeom,
 };
 use bnn_edge::models::{get, lower};
 use bnn_edge::naive::{col2im, im2col, transpose, LayerPlan, Plan};
@@ -245,7 +246,10 @@ fn main() {
         let ops = 2.0 * (orows * k * cout) as f64;
         let mut y = vec![0.0f32; orows * cout];
 
-        // fused pipeline per backend tier
+        // fused pipeline per backend tier; tiled tiers are benched a
+        // second time with the autotuner on (the conv GEMM is the
+        // tuner-dispatched stage), adding tuned_config/tuned_giops —
+        // backward rows skip this, their GEMMs bypass the tuner
         for &be in &backends {
             let pool = be.pool();
             let r = bench.bench(&format!("conv fused {:<9} {label}", be.label()), || {
@@ -256,6 +260,30 @@ fn main() {
             let giops = r.giops(ops);
             println!("  -> fused {:<9} {label}: {giops:.2} GiOp/s", be.label());
             push_row(&mut rows, be.name(), s, giops, be.threads(), "im2col_f32_bytes", 0);
+
+            if matches!(be, Backend::Tiled { .. }) {
+                tune::set_mode(tune::Mode::Auto);
+                let xh = im2col_packed(&x, b, geom, &pool);
+                be.xnor_gemm(&xh, &wt, &mut y); // first call tunes the shape class
+                let r = bench.bench(&format!("conv fused {:<9} {label} tuned", be.label()), || {
+                    let xh = im2col_packed(&x, b, geom, &pool);
+                    be.xnor_gemm(&xh, &wt, &mut y);
+                    black_box(y[0]);
+                });
+                let tuned_giops = r.giops(ops);
+                let cfg =
+                    tune::current_config(orows, wt.words_per_row, cout, false, be.threads());
+                tune::set_mode(tune::Mode::Fixed);
+                println!(
+                    "  -> fused {:<9} {label} tuned [{}]: {tuned_giops:.2} GiOp/s ({:.2}x fixed)",
+                    be.label(),
+                    cfg.label(),
+                    tuned_giops / giops.max(1e-12)
+                );
+                let row = rows.last_mut().unwrap();
+                row.set("tuned_config", Json::from(cfg.label()));
+                row.set("tuned_giops", Json::from(tuned_giops));
+            }
         }
 
         // PR-1 baseline: f32 im2col + pack + the same tiled GEMM

@@ -2,11 +2,17 @@
 //! backend tier (naive / blocked / tiled×threads).
 //!
 //! Emits `BENCH_gemm.json` (stable schema: `{backend, m, k, n,
-//! giops, threads}`) so each PR's throughput is diffable against the
-//! last — the perf trajectory the CI smoke job archives.  Also times
-//! the word-level pack/transpose overheads (the energy model's
-//! E_PACK term) and full naive-engine step times (Fig. 7's time
-//! axis).
+//! giops, threads}`, plus `tuned_config`/`tuned_giops` on the tiled
+//! rows) so each PR's throughput is diffable against the last — the
+//! perf trajectory the CI smoke job archives.  Also times the
+//! word-level pack/transpose overheads (the energy model's E_PACK
+//! term) and full naive-engine step times (Fig. 7's time axis).
+//!
+//! Each tiled row is benched twice: fixed dispatch (the deterministic
+//! default every run gets) and autotuned dispatch (`tune::Mode::Auto`
+//! flipped on just for the second pass) — the tuned-vs-fixed ratio is
+//! what CI gates on.  Wide shapes also pack [`BPanels`], exercising
+//! the interleaved panel kernel the weight cache feeds the engines.
 //!
 //! Flags: `--smoke` (quick sampling + trimmed shape set for CI; the
 //! acceptance shape is still included so the CI artifact records the
@@ -16,7 +22,7 @@
 
 mod common;
 
-use bnn_edge::bitops::{gemm, Backend, BitMatrix};
+use bnn_edge::bitops::{cache, gemm, tune, Backend, BitMatrix, BPanels};
 use bnn_edge::data::build;
 use bnn_edge::models::{get, lower};
 use bnn_edge::naive::{build_engine, Accel};
@@ -73,13 +79,17 @@ fn main() {
         let bt = g.normal_vec(n * k); // already transposed layout
         let ap = BitMatrix::pack(m, k, &a);
         let btp = BitMatrix::pack(n, k, &bt);
+        // wide layers get interleaved B panels, as the weight cache
+        // would hand the engines
+        let panels =
+            if cache::panels_worthwhile(n) { Some(BPanels::pack(&btp)) } else { None };
         let mut out = vec![0.0f32; m * n];
         let ops = 2.0 * (m * k * n) as f64;
 
         let mut blocked_giops = 0.0f64;
         for &be in &backends {
             let r = bench.bench(&format!("xnor {:<9} {label}", be.label()), || {
-                be.xnor_gemm(&ap, &btp, &mut out);
+                be.xnor_gemm_packed(&ap, &btp, panels.as_ref(), &mut out);
                 black_box(out[0]);
             });
             let giops = r.giops(ops);
@@ -99,6 +109,35 @@ fn main() {
             row.set("n", Json::from(n));
             row.set("giops", Json::from(giops));
             row.set("threads", Json::from(be.threads()));
+
+            // second pass with the autotuner on: first call tunes the
+            // shape class on these very buffers, the timed loop then
+            // replays the cached winner (only Tiled dispatches tuned)
+            if matches!(be, Backend::Tiled { .. }) {
+                tune::set_mode(tune::Mode::Auto);
+                be.xnor_gemm_packed(&ap, &btp, panels.as_ref(), &mut out);
+                let r = bench.bench(&format!("xnor {:<9} {label} tuned", be.label()), || {
+                    be.xnor_gemm_packed(&ap, &btp, panels.as_ref(), &mut out);
+                    black_box(out[0]);
+                });
+                let tuned_giops = r.giops(ops);
+                let cfg = tune::current_config(
+                    m,
+                    btp.words_per_row,
+                    n,
+                    panels.is_some(),
+                    be.threads(),
+                );
+                tune::set_mode(tune::Mode::Fixed);
+                println!(
+                    "  -> {:<9} {label} tuned [{}]: {tuned_giops:.2} GiOp/s ({:.2}x fixed)",
+                    be.label(),
+                    cfg.label(),
+                    tuned_giops / giops.max(1e-12)
+                );
+                row.set("tuned_config", Json::from(cfg.label()));
+                row.set("tuned_giops", Json::from(tuned_giops));
+            }
             rows.push(row);
         }
 

@@ -20,9 +20,13 @@
 //! Emits `BENCH_step.json` (stable schema: `{engine, model, backend,
 //! threads, batch, microbatch, steps_per_sec, steady_state_bytes,
 //! envelope_bytes, colored_arena_bytes, uncolored_arena_bytes,
-//! slots}`).  Flags: `--smoke` (trimmed sweep for CI), `--out PATH`
-//! (default `BENCH_step.json`).
+//! slots}`, plus `tuned_config`/`tuned_steps_per_sec` on tiled rows —
+//! the whole-step tuned-vs-fixed ratio, with `tuned_config`
+//! summarizing how many GEMM shape classes the step tuned).  Flags:
+//! `--smoke` (trimmed sweep for CI), `--out PATH` (default
+//! `BENCH_step.json`).
 
+use bnn_edge::bitops::tune;
 use bnn_edge::memmodel::{step_envelope, Optimizer};
 use bnn_edge::models::{get, lower};
 use bnn_edge::naive::{build_engine_micro, schedule, Accel, Plan};
@@ -116,6 +120,30 @@ fn main() {
                     row.set("colored_arena_bytes", Json::from(sched.arena_bytes()));
                     row.set("uncolored_arena_bytes", Json::from(sched.uncolored_bytes));
                     row.set("slots", Json::from(sched.slot_count()));
+
+                    // tiled rows: re-bench the same engine with the
+                    // autotuner on (one warmup step tunes every GEMM
+                    // shape class the step touches, then the timed
+                    // steps replay the cached winners)
+                    if matches!(accel, Accel::Tiled(_)) {
+                        let before = tune::len();
+                        tune::set_mode(tune::Mode::Auto);
+                        e.train_step(&x, &y, 0.001).unwrap();
+                        let r = bench.bench(&format!("{label} tuned"), || {
+                            e.train_step(&x, &y, 0.001).unwrap();
+                        });
+                        let tuned_sps = 1.0 / r.median_s();
+                        tune::set_mode(tune::Mode::Fixed);
+                        row.set(
+                            "tuned_config",
+                            Json::from(format!("auto({} shapes)", tune::len() - before)),
+                        );
+                        row.set("tuned_steps_per_sec", Json::from(tuned_sps));
+                        println!(
+                            "    tuned: {tuned_sps:.2} steps/s ({:.2}x fixed)",
+                            tuned_sps / sps.max(1e-12)
+                        );
+                    }
                     rows.push(row);
                 }
             }

@@ -17,7 +17,8 @@
 
 use anyhow::{bail, Result};
 
-use super::{gemm, BitMatrix, Pool};
+use super::gemm::BPanels;
+use super::{gemm, tune, BitMatrix, Pool};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -74,11 +75,30 @@ impl Backend {
     /// Packed ±1 GEMM: out (m×n) = a (m×k) @ b (k×n), `b_t` packed
     /// transposed.  All tiers are bit-exact.
     pub fn xnor_gemm(&self, a: &BitMatrix, b_t: &BitMatrix, out: &mut [f32]) {
+        self.xnor_gemm_packed(a, b_t, None, out);
+    }
+
+    /// [`Backend::xnor_gemm`] with optional pre-packed B panels.  The
+    /// `Tiled` tier routes through the autotuner ([`tune::config_for`]):
+    /// fixed mode / registry hits cost one atomic load + hash lookup,
+    /// a first-use miss under `--tune=auto` microbenches on these very
+    /// buffers.  `Naive` and `Blocked` stay untouched reference tiers
+    /// (panels ignored); every path is bit-exact, so the tier and the
+    /// tuner only ever change speed.
+    pub fn xnor_gemm_packed(
+        &self,
+        a: &BitMatrix,
+        b_t: &BitMatrix,
+        bp: Option<&BPanels>,
+        out: &mut [f32],
+    ) {
         match self {
             Backend::Naive => gemm::xnor_gemm_naive(a, b_t, out),
             Backend::Blocked => gemm::xnor_gemm(a, b_t, out),
             Backend::Tiled { threads } => {
-                gemm::xnor_gemm_parallel(a, b_t, out, &Pool::new(*threads))
+                let pool = Pool::new(*threads);
+                let cfg = tune::config_for(a, b_t, bp, out, &pool);
+                gemm::xnor_gemm_with(cfg, a, b_t, bp, out, &pool);
             }
         }
     }
@@ -90,6 +110,27 @@ impl Backend {
             Backend::Blocked => gemm::gemm_f32(m, k, n, a, b, out),
             Backend::Tiled { threads } => {
                 gemm::gemm_f32_parallel(m, k, n, a, b, out, &Pool::new(*threads))
+            }
+        }
+    }
+
+    /// Dense f32 GEMM, accumulating: out += a (m×k) @ b (k×n).  Same
+    /// ascending-k per-cell order as [`Backend::gemm_f32`] within each
+    /// tier, so a k-partition summed tap-by-tap is bit-identical to
+    /// one full-k call (the fused first-conv path relies on this).
+    pub fn gemm_f32_acc(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+    ) {
+        match self {
+            Backend::Naive | Backend::Blocked => gemm::gemm_f32_acc(m, k, n, a, b, out),
+            Backend::Tiled { threads } => {
+                gemm::gemm_f32_acc_parallel(m, k, n, a, b, out, &Pool::new(*threads))
             }
         }
     }
@@ -150,11 +191,15 @@ mod tests {
         let btp = BitMatrix::pack(n, k, &bt);
         let mut want = vec![0.0; m * n];
         Backend::Naive.xnor_gemm(&ap, &btp, &mut want);
+        let panels = BPanels::pack(&btp);
         for be in [Backend::Blocked, Backend::Tiled { threads: 1 }, Backend::Tiled { threads: 3 }]
         {
             let mut got = vec![0.0; m * n];
             be.xnor_gemm(&ap, &btp, &mut got);
             assert_eq!(got, want, "{}", be.label());
+            got.fill(9.0);
+            be.xnor_gemm_packed(&ap, &btp, Some(&panels), &mut got);
+            assert_eq!(got, want, "{} packed", be.label());
         }
 
         let b = g.normal_vec(k * n);
@@ -165,6 +210,15 @@ mod tests {
             be.gemm_f32(m, k, n, &a, &b, &mut got);
             for i in 0..fw.len() {
                 assert!((got[i] - fw[i]).abs() < 1e-3, "{} @ {i}", be.label());
+            }
+        }
+
+        // accumulating variant adds on top of what's there, every tier
+        for be in [Backend::Naive, Backend::Blocked, Backend::Tiled { threads: 2 }] {
+            let mut got = vec![1.5; m * n];
+            be.gemm_f32_acc(m, k, n, &a, &b, &mut got);
+            for i in 0..fw.len() {
+                assert!((got[i] - 1.5 - fw[i]).abs() < 1e-3, "{} acc @ {i}", be.label());
             }
         }
     }

@@ -21,8 +21,28 @@
 //!   use.  It can be packed directly (the proposed engine packs
 //!   straight from f16 sign bits) or derived from a cached `w` by the
 //!   word-level block transpose (not counted as a new pack).
+//!
+//! Wide layers (n ≥ [`PANEL_MIN_N`] output columns) additionally
+//! cache `wt` re-laid-out as interleaved [`BPanels`] so the tiled
+//! GEMM's panel micro-kernel streams B contiguously at BinaryNet fc
+//! widths.  The threshold is a deterministic function of the layer
+//! shape — `memmodel` mirrors it exactly — and panel storage follows
+//! the same retain-on-invalidate discipline as the bit matrices.
 
+use super::gemm::BPanels;
 use super::BitMatrix;
+
+/// Layers with at least this many output columns get a cached
+/// [`BPanels`] layout alongside `wt`.  Below it the panel kernel has
+/// nothing to win (B already fits in cache) and the extra resident
+/// copy would be pure overhead; the rule must stay a pure function of
+/// `n` so the `memmodel` envelope can reproduce it exactly.
+pub const PANEL_MIN_N: usize = 256;
+
+/// Deterministic panel rule shared with `memmodel`.
+pub fn panels_worthwhile(n: usize) -> bool {
+    n >= PANEL_MIN_N
+}
 
 #[derive(Debug, Default)]
 pub struct PackedWeightCache {
@@ -30,6 +50,8 @@ pub struct PackedWeightCache {
     w_valid: Vec<bool>,
     wt: Vec<BitMatrix>,
     wt_valid: Vec<bool>,
+    bp: Vec<BPanels>,
+    bp_valid: Vec<bool>,
     packs: usize,
 }
 
@@ -44,6 +66,8 @@ impl PackedWeightCache {
             w_valid: vec![false; layers],
             wt: (0..layers).map(|_| empty()).collect(),
             wt_valid: vec![false; layers],
+            bp: (0..layers).map(|_| BPanels::default()).collect(),
+            bp_valid: vec![false; layers],
             packs: 0,
         }
     }
@@ -94,17 +118,71 @@ impl PackedWeightCache {
         &self.wt[wi]
     }
 
+    /// [`Self::wt`] plus the layer's cached B panels when the width
+    /// rule says panels pay off ([`panels_worthwhile`]); panels are
+    /// re-interleaved in place from the (possibly just-filled) `wt` on
+    /// a miss — no allocation once warm, and not counted as a pack.
+    pub fn wt_with_panels(
+        &mut self,
+        wi: usize,
+        fill_t: impl FnOnce(&mut BitMatrix),
+    ) -> (&BitMatrix, Option<&BPanels>) {
+        if !self.wt_valid[wi] {
+            fill_t(&mut self.wt[wi]);
+            self.wt_valid[wi] = true;
+            self.packs += 1;
+        }
+        let wt = &self.wt[wi];
+        if !panels_worthwhile(wt.rows) {
+            return (wt, None);
+        }
+        if !self.bp_valid[wi] {
+            self.bp[wi].pack_into(wt);
+            self.bp_valid[wi] = true;
+        }
+        (wt, Some(&self.bp[wi]))
+    }
+
+    /// [`Self::wt_via_transpose`] plus cached B panels (see
+    /// [`Self::wt_with_panels`]).
+    pub fn wt_via_transpose_with_panels(
+        &mut self,
+        wi: usize,
+        fill_w: impl FnOnce(&mut BitMatrix),
+    ) -> (&BitMatrix, Option<&BPanels>) {
+        if !self.wt_valid[wi] {
+            if !self.w_valid[wi] {
+                fill_w(&mut self.w[wi]);
+                self.w_valid[wi] = true;
+                self.packs += 1;
+            }
+            self.w[wi].transpose_into(&mut self.wt[wi]);
+            self.wt_valid[wi] = true;
+        }
+        let wt = &self.wt[wi];
+        if !panels_worthwhile(wt.rows) {
+            return (wt, None);
+        }
+        if !self.bp_valid[wi] {
+            self.bp[wi].pack_into(wt);
+            self.bp_valid[wi] = true;
+        }
+        (wt, Some(&self.bp[wi]))
+    }
+
     /// Mark layer `wi` stale (its weights changed).  Storage is
     /// retained for the in-place repack.
     pub fn invalidate(&mut self, wi: usize) {
         self.w_valid[wi] = false;
         self.wt_valid[wi] = false;
+        self.bp_valid[wi] = false;
     }
 
     /// Mark everything stale (end-of-step bulk update / snapshot load).
     pub fn invalidate_all(&mut self) {
         self.w_valid.fill(false);
         self.wt_valid.fill(false);
+        self.bp_valid.fill(false);
     }
 
     /// Total packs performed since construction — the probe the
@@ -115,8 +193,10 @@ impl PackedWeightCache {
 
     /// Resident cached bytes (storage persists across invalidation —
     /// that persistence is what makes steady-state repacks free).
+    /// Includes the interleaved panel copies of wide layers.
     pub fn heap_bytes(&self) -> usize {
-        self.w.iter().chain(self.wt.iter()).map(BitMatrix::heap_bytes).sum()
+        self.w.iter().chain(self.wt.iter()).map(BitMatrix::heap_bytes).sum::<usize>()
+            + self.bp.iter().map(BPanels::heap_bytes).sum::<usize>()
     }
 }
 
@@ -157,6 +237,43 @@ mod tests {
         let m = c.w(0, |dst| BitMatrix::pack_into(9, 128, &ys, dst)).clone();
         assert_eq!(c.heap_bytes(), cap0, "same storage, no growth");
         assert_eq!(m, BitMatrix::pack(9, 128, &ys), "repack sees new weights");
+    }
+
+    #[test]
+    fn panels_follow_the_width_rule_and_reuse_storage() {
+        let mut g = Pcg32::new(15);
+        let narrow = g.normal_vec(64 * 70); // n=64 < PANEL_MIN_N
+        let wide = g.normal_vec(PANEL_MIN_N * 70);
+        let wide2 = g.normal_vec(PANEL_MIN_N * 70);
+        let mut c = PackedWeightCache::new(2);
+
+        let (_, bp) = c.wt_with_panels(0, |dst| BitMatrix::pack_into(64, 70, &narrow, dst));
+        assert!(bp.is_none(), "narrow layers stay panel-free");
+
+        let (wt, bp) =
+            c.wt_with_panels(1, |dst| BitMatrix::pack_into(PANEL_MIN_N, 70, &wide, dst));
+        let bp = bp.expect("wide layer gets panels");
+        assert_eq!((bp.n, bp.wpr), (wt.rows, wt.words_per_row));
+        assert_eq!(bp.heap_bytes(), BPanels::words_for(PANEL_MIN_N, 70usize.div_ceil(64)) * 8);
+        let resident = c.heap_bytes();
+        assert_eq!(c.pack_count(), 2, "panel interleave is not a pack");
+
+        // invalidate + repack with new weights: same storage, fresh panels
+        c.invalidate(1);
+        assert_eq!(c.heap_bytes(), resident, "panels stay resident when stale");
+        let (wt, bp) =
+            c.wt_with_panels(1, |dst| BitMatrix::pack_into(PANEL_MIN_N, 70, &wide2, dst));
+        let bp = bp.expect("panels rebuilt");
+        assert_eq!(bp.data, BPanels::pack(wt).data, "repacked panels match new weights");
+        assert_eq!(c.heap_bytes(), resident, "no growth on same-shape repack");
+
+        // the transpose-derived variant agrees
+        let mut c2 = PackedWeightCache::new(1);
+        let (wt2, bp2) = c2.wt_via_transpose_with_panels(0, |dst| {
+            BitMatrix::pack_into(70, PANEL_MIN_N, &wide2, dst)
+        });
+        assert_eq!(wt2.rows, PANEL_MIN_N);
+        assert_eq!(bp2.expect("wide via transpose").data, BPanels::pack(wt2).data);
     }
 
     #[test]

@@ -32,6 +32,82 @@ const NR: usize = 4;
 /// accumulator far below overflow regardless of total K.
 const KC_WORDS: usize = 128;
 
+/// Micro-kernel variant of the tiled band kernel — the autotuner's
+/// main candidate axis (`bitops::tune`).  Every variant computes the
+/// identical integer popcounts, so all are bit-exact against
+/// [`xnor_gemm_naive`]; they differ only in register blocking and
+/// B-operand layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MicroKernel {
+    /// Scalar 4×4 MR×NR register block with K-word tiling
+    /// ([`KernelCfg::kc_words`]) — the no-SIMD tier.
+    Scalar4x4,
+    /// 1 A row × 4 B rows over the vectorized XOR-popcount (the
+    /// pre-tuner fixed SIMD kernel).
+    Simd1x4,
+    /// 1 A row × 8 B rows: twice the B fan-out per A load.
+    Simd1x8,
+    /// 2 A rows × 4 B rows: B reuse across an A pair.
+    Simd2x4,
+    /// 1 A row × one interleaved 8-column [`BPanels`] panel: the
+    /// inner loop streams B contiguously (large-N layouts).  Falls
+    /// back to the fixed kernel when no panels were packed.
+    Panel8,
+}
+
+impl MicroKernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            MicroKernel::Scalar4x4 => "scalar4x4",
+            MicroKernel::Simd1x4 => "simd1x4",
+            MicroKernel::Simd1x8 => "simd1x8",
+            MicroKernel::Simd2x4 => "simd2x4",
+            MicroKernel::Panel8 => "panel8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MicroKernel> {
+        Some(match s {
+            "scalar4x4" => MicroKernel::Scalar4x4,
+            "simd1x4" => MicroKernel::Simd1x4,
+            "simd1x8" => MicroKernel::Simd1x8,
+            "simd2x4" => MicroKernel::Simd2x4,
+            "panel8" => MicroKernel::Panel8,
+            _ => return None,
+        })
+    }
+}
+
+/// One tuned kernel configuration: which micro-kernel, its K tile (the
+/// scalar block's word depth), and the parallel driver's row-band
+/// granularity (0 = one even band per worker).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelCfg {
+    pub micro: MicroKernel,
+    pub kc_words: usize,
+    pub band_rows: usize,
+}
+
+impl KernelCfg {
+    /// The deterministic pre-tuner configuration (`--tune=fixed`):
+    /// exactly the dispatch the fixed-tile kernels always ran — SIMD
+    /// 1×4 panels where the host has AVX2/NEON, the scalar 4×4
+    /// micro-kernel with the default K tile otherwise.
+    pub fn fixed() -> KernelCfg {
+        let micro = if simd::level() == simd::Level::Scalar {
+            MicroKernel::Scalar4x4
+        } else {
+            MicroKernel::Simd1x4
+        };
+        KernelCfg { micro, kc_words: KC_WORDS, band_rows: 0 }
+    }
+
+    /// Compact display form, e.g. `simd1x8/kc128/band0`.
+    pub fn label(&self) -> String {
+        format!("{}/kc{}/band{}", self.micro.name(), self.kc_words, self.band_rows)
+    }
+}
+
 /// Naive packed GEMM: out (m×n) f32 = a (m×k ±1) @ b (k×n ±1),
 /// with `b_t` packed transposed (n rows of k bits).
 pub fn xnor_gemm_naive(a: &BitMatrix, b_t: &BitMatrix, out: &mut [f32]) {
@@ -153,10 +229,24 @@ fn xnor_band_simd(a: &BitMatrix, b_t: &BitMatrix, row0: usize, band: &mut [f32])
 
 /// Scalar band kernel: 4×4 register blocks, K in `KC_WORDS` tiles.
 fn xnor_band_scalar(a: &BitMatrix, b_t: &BitMatrix, row0: usize, band: &mut [f32]) {
+    xnor_band_scalar_kc(a, b_t, row0, band, KC_WORDS);
+}
+
+/// Scalar band kernel with an explicit K tile (the autotuner's
+/// `kc_words` axis).  `kc_words · 64` bounds each u32 partial; any
+/// tile ≤ 2²⁶ words is overflow-safe.
+fn xnor_band_scalar_kc(
+    a: &BitMatrix,
+    b_t: &BitMatrix,
+    row0: usize,
+    band: &mut [f32],
+    kc_words: usize,
+) {
     let n = b_t.rows;
     if n == 0 || band.is_empty() {
         return;
     }
+    let kc_words = kc_words.max(1);
     let k = a.cols;
     let kw = a.words_per_row;
     let kk = k as i64;
@@ -181,7 +271,7 @@ fn xnor_band_scalar(a: &BitMatrix, b_t: &BitMatrix, row0: usize, band: &mut [f32
             let mut c = [[0u64; NR]; MR];
             let mut w0 = 0;
             while w0 < kw {
-                let we = (w0 + KC_WORDS).min(kw);
+                let we = (w0 + kc_words).min(kw);
                 let mut p = [[0u32; NR]; MR];
                 for w in w0..we {
                     let (aw0, aw1, aw2, aw3) = (a0[w], a1[w], a2[w], a3[w]);
@@ -242,6 +332,253 @@ fn xnor_band_scalar(a: &BitMatrix, b_t: &BitMatrix, row0: usize, band: &mut [f32
         xnor_row_1x4(a.row_words(row0 + i), b_t, &mut band[i * n..(i + 1) * n], k);
         i += 1;
     }
+}
+
+/// One output row over the vectorized 1×4 kernel — the shared M/N
+/// remainder path of the wider SIMD band kernels.
+#[inline]
+fn xnor_row_simd(ar: &[u64], b_t: &BitMatrix, orow: &mut [f32], kk: i64) {
+    let n = b_t.rows;
+    let kw = b_t.words_per_row;
+    let bdata = &b_t.data;
+    let n4 = n - n % 4;
+    let mut j = 0;
+    while j < n4 {
+        let b0 = &bdata[j * kw..(j + 1) * kw];
+        let b1 = &bdata[(j + 1) * kw..(j + 2) * kw];
+        let b2 = &bdata[(j + 2) * kw..(j + 3) * kw];
+        let b3 = &bdata[(j + 3) * kw..(j + 4) * kw];
+        let c = simd::xor_popcount_1x4(ar, b0, b1, b2, b3);
+        for l in 0..4 {
+            orow[j + l] = (kk - 2 * c[l] as i64) as f32;
+        }
+        j += 4;
+    }
+    while j < n {
+        let c = simd::xor_popcount(ar, b_t.row_words(j));
+        orow[j] = (kk - 2 * c as i64) as f32;
+        j += 1;
+    }
+}
+
+/// SIMD band kernel, 1×8 panels: twice the B fan-out per A load of
+/// the 1×4 kernel (autotuner candidate).
+fn xnor_band_simd_1x8(a: &BitMatrix, b_t: &BitMatrix, row0: usize, band: &mut [f32]) {
+    let n = b_t.rows;
+    if n == 0 || band.is_empty() {
+        return;
+    }
+    let kw = b_t.words_per_row;
+    let kk = a.cols as i64;
+    let br = band.len() / n;
+    let bdata = &b_t.data;
+    let n8 = n - n % 8;
+    for i in 0..br {
+        let ar = a.row_words(row0 + i);
+        let orow = &mut band[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j < n8 {
+            let panel: [&[u64]; 8] =
+                std::array::from_fn(|l| &bdata[(j + l) * kw..(j + l + 1) * kw]);
+            let c = simd::xor_popcount_1x8(ar, panel);
+            for l in 0..8 {
+                orow[j + l] = (kk - 2 * c[l] as i64) as f32;
+            }
+            j += 8;
+        }
+        if j + 4 <= n {
+            let b0 = &bdata[j * kw..(j + 1) * kw];
+            let b1 = &bdata[(j + 1) * kw..(j + 2) * kw];
+            let b2 = &bdata[(j + 2) * kw..(j + 3) * kw];
+            let b3 = &bdata[(j + 3) * kw..(j + 4) * kw];
+            let c = simd::xor_popcount_1x4(ar, b0, b1, b2, b3);
+            for l in 0..4 {
+                orow[j + l] = (kk - 2 * c[l] as i64) as f32;
+            }
+            j += 4;
+        }
+        while j < n {
+            let c = simd::xor_popcount(ar, b_t.row_words(j));
+            orow[j] = (kk - 2 * c as i64) as f32;
+            j += 1;
+        }
+    }
+}
+
+/// SIMD band kernel, 2×4 blocks: each B panel load serves two A rows
+/// (autotuner candidate for tall-M shapes).
+fn xnor_band_simd_2x4(a: &BitMatrix, b_t: &BitMatrix, row0: usize, band: &mut [f32]) {
+    let n = b_t.rows;
+    if n == 0 || band.is_empty() {
+        return;
+    }
+    let kw = b_t.words_per_row;
+    let kk = a.cols as i64;
+    let br = band.len() / n;
+    let bdata = &b_t.data;
+    let m2 = br - br % 2;
+    let n4 = n - n % 4;
+    let mut i = 0;
+    while i < m2 {
+        let a0 = a.row_words(row0 + i);
+        let a1 = a.row_words(row0 + i + 1);
+        let mut j = 0;
+        while j < n4 {
+            let panel: [&[u64]; 4] =
+                std::array::from_fn(|l| &bdata[(j + l) * kw..(j + l + 1) * kw]);
+            let c = simd::xor_popcount_2x4(a0, a1, panel);
+            for l in 0..4 {
+                band[i * n + j + l] = (kk - 2 * c[l] as i64) as f32;
+                band[(i + 1) * n + j + l] = (kk - 2 * c[4 + l] as i64) as f32;
+            }
+            j += 4;
+        }
+        while j < n {
+            let bj = b_t.row_words(j);
+            band[i * n + j] = (kk - 2 * simd::xor_popcount(a0, bj) as i64) as f32;
+            band[(i + 1) * n + j] = (kk - 2 * simd::xor_popcount(a1, bj) as i64) as f32;
+            j += 1;
+        }
+        i += 2;
+    }
+    while i < br {
+        xnor_row_simd(a.row_words(row0 + i), b_t, &mut band[i * n..(i + 1) * n], kk);
+        i += 1;
+    }
+}
+
+/// B packed into interleaved 8-column panels: `data[(p·wpr + w)·8 + l]`
+/// holds word `w` of column `p·8 + l` of Ŵᵀ/Bᵀ.  The panel band
+/// kernel's inner loop then streams `data` strictly forward — at
+/// BinaryNet fc widths (N = 1024–4096) the row-major `b_t` walk
+/// touches N scattered K-word rows per A row, while the panel walk is
+/// one sequential pass.  Missing tail columns are zero-filled (their
+/// counts are computed and discarded, never written).
+///
+/// Panels are packed once per weight update (cached in
+/// `PackedWeightCache`) and rebuilt in place — steady state stays
+/// allocation-free.
+#[derive(Debug, Clone, Default)]
+pub struct BPanels {
+    pub n: usize,
+    pub wpr: usize,
+    pub data: Vec<u64>,
+}
+
+impl BPanels {
+    /// Panel width (columns per panel).
+    pub const NR: usize = 8;
+
+    /// Word count of the panel store for an (n × wpr-word) `b_t` —
+    /// the `memmodel` mirror of [`Self::heap_bytes`].
+    pub fn words_for(n: usize, wpr: usize) -> usize {
+        n.div_ceil(Self::NR) * wpr * Self::NR
+    }
+
+    pub fn pack(b_t: &BitMatrix) -> BPanels {
+        let mut p = BPanels::default();
+        p.pack_into(b_t);
+        p
+    }
+
+    /// Re-pack in place; allocates only if the shape grew (repacking
+    /// the same weight shape every update is allocation-free).
+    pub fn pack_into(&mut self, b_t: &BitMatrix) {
+        let (n, wpr) = (b_t.rows, b_t.words_per_row);
+        self.n = n;
+        self.wpr = wpr;
+        self.data.resize(Self::words_for(n, wpr), 0);
+        for p in 0..n.div_ceil(Self::NR) {
+            let base = p * wpr * Self::NR;
+            for l in 0..Self::NR {
+                let col = p * Self::NR + l;
+                if col >= n {
+                    for w in 0..wpr {
+                        self.data[base + w * Self::NR + l] = 0;
+                    }
+                } else {
+                    let row = b_t.row_words(col);
+                    for w in 0..wpr {
+                        self.data[base + w * Self::NR + l] = row[w];
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+/// Panel band kernel: one interleaved panel sweep per A row.
+fn xnor_band_panels(a: &BitMatrix, bp: &BPanels, row0: usize, band: &mut [f32]) {
+    let n = bp.n;
+    if n == 0 || band.is_empty() {
+        return;
+    }
+    let nr = BPanels::NR;
+    let pw = bp.wpr * nr; // words per panel
+    let kk = a.cols as i64;
+    let br = band.len() / n;
+    for i in 0..br {
+        let ar = a.row_words(row0 + i);
+        let orow = &mut band[i * n..(i + 1) * n];
+        for p in 0..n.div_ceil(nr) {
+            let c = simd::xor_popcount_p8(ar, &bp.data[p * pw..(p + 1) * pw]);
+            let cols = nr.min(n - p * nr);
+            for l in 0..cols {
+                orow[p * nr + l] = (kk - 2 * c[l] as i64) as f32;
+            }
+        }
+    }
+}
+
+/// Band kernel dispatched by an explicit [`KernelCfg`] (the tuned
+/// path).  `Panel8` without packed panels falls back to the fixed
+/// dispatch — every arm is bit-exact, so the choice is purely perf.
+fn xnor_band_cfg(
+    cfg: KernelCfg,
+    a: &BitMatrix,
+    b_t: &BitMatrix,
+    bp: Option<&BPanels>,
+    row0: usize,
+    band: &mut [f32],
+) {
+    match cfg.micro {
+        MicroKernel::Scalar4x4 => xnor_band_scalar_kc(a, b_t, row0, band, cfg.kc_words),
+        MicroKernel::Simd1x4 => xnor_band_simd(a, b_t, row0, band),
+        MicroKernel::Simd1x8 => xnor_band_simd_1x8(a, b_t, row0, band),
+        MicroKernel::Simd2x4 => xnor_band_simd_2x4(a, b_t, row0, band),
+        MicroKernel::Panel8 => match bp {
+            Some(p) => xnor_band_panels(a, p, row0, band),
+            None => xnor_band(a, b_t, row0, band),
+        },
+    }
+}
+
+/// Tiled packed GEMM under an explicit tuned configuration: the
+/// micro-kernel, K tile, and row-band granularity of `cfg`, with
+/// optional pre-packed B panels.  Bands split only M, so the result
+/// is bit-exact against [`xnor_gemm_naive`] for every `cfg` at every
+/// thread count (rust/tests/property.rs sweeps the full space).
+pub fn xnor_gemm_with(
+    cfg: KernelCfg,
+    a: &BitMatrix,
+    b_t: &BitMatrix,
+    bp: Option<&BPanels>,
+    out: &mut [f32],
+    pool: &Pool,
+) {
+    assert_eq!(a.cols, b_t.cols, "K mismatch");
+    let (m, n) = (a.rows, b_t.rows);
+    assert_eq!(out.len(), m * n);
+    if let Some(p) = bp {
+        assert_eq!((p.n, p.wpr), (n, b_t.words_per_row), "panel shape mismatch");
+    }
+    pool.run_rows_chunk(m, n, cfg.band_rows, out, |row0, band| {
+        xnor_band_cfg(cfg, a, b_t, bp, row0, band)
+    });
 }
 
 /// Tiled packed GEMM, single-threaded: the band kernel alone (SIMD
@@ -341,6 +678,59 @@ pub fn gemm_f32_parallel(
     pool.run_rows(m, n, out, |row0, band| {
         let rows = band.len() / n.max(1);
         gemm_f32(rows, k, n, &a[row0 * k..(row0 + rows) * k], b, band);
+    });
+}
+
+/// [`gemm_f32`] without the zero fill: out += a @ b.  Each out cell
+/// accumulates in ascending-k order exactly as the blocked kernel
+/// does, so summing a k-partition tap by tap (the fused first conv)
+/// is **bit-identical** to one full-k [`gemm_f32`] call over the
+/// concatenated operands.
+pub fn gemm_f32_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    const KB: usize = 64;
+    const NB: usize = 256;
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    let mut k0 = 0;
+    while k0 < k {
+        let kend = (k0 + KB).min(k);
+        let mut n0 = 0;
+        while n0 < n {
+            let nend = (n0 + NB).min(n);
+            for i in 0..m {
+                let orow = &mut out[i * n + n0..i * n + nend];
+                for kk in k0..kend {
+                    let av = a[i * k + kk];
+                    let brow = &b[kk * n + n0..kk * n + nend];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            n0 = nend;
+        }
+        k0 = kend;
+    }
+}
+
+/// Row-parallel [`gemm_f32_acc`]: bands split only M, so results are
+/// bit-identical to the serial accumulate at any thread count.
+pub fn gemm_f32_acc_parallel(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    pool: &Pool,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    pool.run_rows(m, n, out, |row0, band| {
+        let rows = band.len() / n.max(1);
+        gemm_f32_acc(rows, k, n, &a[row0 * k..(row0 + rows) * k], b, band);
     });
 }
 
@@ -555,6 +945,111 @@ mod tests {
             let mut dispatched = vec![0.0; m * n];
             xnor_gemm_tiled(&ap, &btp, &mut dispatched);
             assert_eq!(dispatched, scalar, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn every_kernel_cfg_bit_exact_vs_naive() {
+        // the autotuner's whole candidate space — every micro-kernel
+        // (panels packed and not), K tiles, band granularities — on
+        // shapes hitting panel/word/row remainders
+        let mut g = Pcg32::new(23);
+        let micros = [
+            MicroKernel::Scalar4x4,
+            MicroKernel::Simd1x4,
+            MicroKernel::Simd1x8,
+            MicroKernel::Simd2x4,
+            MicroKernel::Panel8,
+        ];
+        for (m, k, n) in [(1, 1, 1), (3, 63, 5), (5, 129, 9), (7, 200, 17), (70, 130, 70)] {
+            let a = g.normal_vec(m * k);
+            let b = g.normal_vec(k * n);
+            let ap = BitMatrix::pack(m, k, &a);
+            let btp = pack_b_t(k, n, &b);
+            let panels = BPanels::pack(&btp);
+            let mut naive = vec![0.0; m * n];
+            xnor_gemm_naive(&ap, &btp, &mut naive);
+            for micro in micros {
+                for kc in [1usize, 2, 128] {
+                    for band_rows in [0usize, 1, 3] {
+                        let cfg = KernelCfg { micro, kc_words: kc, band_rows };
+                        for (bp, tag) in [(None, "flat"), (Some(&panels), "panels")] {
+                            for threads in [1, 4] {
+                                let mut out = vec![0.0; m * n];
+                                xnor_gemm_with(cfg, &ap, &btp, bp, &mut out, &Pool::new(threads));
+                                assert_eq!(
+                                    out, naive,
+                                    "{} {tag} t={threads} {m}x{k}x{n}",
+                                    cfg.label()
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn b_panels_pack_into_reuses_storage() {
+        let mut g = Pcg32::new(24);
+        let (k, n) = (130, 19);
+        let bt = BitMatrix::pack(n, k, &g.normal_vec(n * k));
+        let mut p = BPanels::pack(&bt);
+        assert_eq!(p.data.len(), BPanels::words_for(n, bt.words_per_row));
+        assert_eq!(p.heap_bytes(), p.data.len() * 8);
+        let ptr = p.data.as_ptr();
+        let bt2 = BitMatrix::pack(n, k, &g.normal_vec(n * k));
+        p.pack_into(&bt2);
+        assert_eq!(ptr, p.data.as_ptr(), "same-shape repack must not reallocate");
+        // repacked panels compute the new matrix
+        let a = BitMatrix::pack(4, k, &g.normal_vec(4 * k));
+        let mut want = vec![0.0; 4 * n];
+        xnor_gemm_naive(&a, &bt2, &mut want);
+        let cfg = KernelCfg { micro: MicroKernel::Panel8, kc_words: 128, band_rows: 0 };
+        let mut got = vec![0.0; 4 * n];
+        xnor_gemm_with(cfg, &a, &bt2, Some(&p), &mut got, &Pool::serial());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn gemm_f32_acc_tap_partition_is_bit_identical() {
+        // accumulate k in uneven chunks == one full-k call, exactly
+        // (the fused first conv's correctness claim)
+        let mut g = Pcg32::new(25);
+        for (m, k, n) in [(3, 11, 7), (8, 64, 33), (5, 100, 9)] {
+            let a = g.normal_vec(m * k);
+            let b = g.normal_vec(k * n);
+            let mut want = vec![0.0f32; m * n];
+            gemm_f32(m, k, n, &a, &b, &mut want);
+            for chunk in [1usize, 3, 64] {
+                for threads in [1usize, 4] {
+                    let pool = Pool::new(threads);
+                    let mut got = vec![0.0f32; m * n];
+                    let mut k0 = 0;
+                    while k0 < k {
+                        let kc = chunk.min(k - k0);
+                        // gather the a column block (what the tap
+                        // panel gather does)
+                        let mut ablk = vec![0.0f32; m * kc];
+                        for i in 0..m {
+                            ablk[i * kc..(i + 1) * kc]
+                                .copy_from_slice(&a[i * k + k0..i * k + k0 + kc]);
+                        }
+                        gemm_f32_acc_parallel(
+                            m,
+                            kc,
+                            n,
+                            &ablk,
+                            &b[k0 * n..(k0 + kc) * n],
+                            &mut got,
+                            &pool,
+                        );
+                        k0 += kc;
+                    }
+                    assert_eq!(got, want, "chunk={chunk} t={threads} {m}x{k}x{n}");
+                }
+            }
         }
     }
 

@@ -17,7 +17,11 @@
 //! path of Fig. 7, and the tiled kernel — SIMD XOR-popcount panels
 //! (AVX2 `vpshufb` / NEON `vcnt`, runtime-dispatched via [`simd`])
 //! with a scalar 4×4 fallback — row-parallel over the persistent
-//! worker [`Pool`].  Packing, unpacking and transposition are all
+//! worker [`Pool`].  The tiled tier's micro-kernel, K tile and band
+//! split are chosen per shape class by the [`tune`] autotuner
+//! (deterministic fixed dispatch by default, `--tune=auto` to
+//! microbench; wide layers stream B through interleaved [`BPanels`]).
+//! Packing, unpacking and transposition are all
 //! word-level (branch-free pack, 64×64 bit-block transpose) so the
 //! non-GEMM overheads stay negligible next to the popcount stream;
 //! [`PackedWeightCache`] lets the training engines pack each layer's
@@ -42,13 +46,14 @@ pub mod geom;
 pub mod im2col;
 pub mod pool;
 pub mod simd;
+pub mod tune;
 
 pub use backend::Backend;
 pub use cache::PackedWeightCache;
 pub use geom::ConvGeom;
 pub use gemm::{
     gemm_f32_at, packed_at_gemm_f32, xnor_gemm, xnor_gemm_naive, xnor_gemm_parallel,
-    xnor_gemm_tiled,
+    xnor_gemm_tiled, xnor_gemm_with, BPanels, KernelCfg, MicroKernel,
 };
 pub use im2col::{
     col2im_tap_scatter, conv_dx_streaming, conv_dx_streaming_into, im2col_packed,

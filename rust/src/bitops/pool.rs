@@ -300,6 +300,26 @@ impl Pool {
         T: Send,
         F: Fn(usize, &mut [T]) + Sync,
     {
+        self.run_rows_chunk(rows, row_len, 0, out, f)
+    }
+
+    /// [`Self::run_rows`] with an explicit band granularity: `chunk`
+    /// rows per claimed band (0 = one even band per worker, the
+    /// default split).  Smaller chunks trade dispatch overhead for
+    /// dynamic load balancing; the kernel autotuner
+    /// (`bitops::tune`) sweeps this axis per shape.  Bands are still
+    /// claimed atomically and cover every row exactly once.
+    pub fn run_rows_chunk<T, F>(
+        &self,
+        rows: usize,
+        row_len: usize,
+        chunk: usize,
+        out: &mut [T],
+        f: F,
+    ) where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
         assert_eq!(out.len(), rows * row_len, "band partition mismatch");
         if rows == 0 || row_len == 0 {
             return;
@@ -318,7 +338,7 @@ impl Pool {
                 return;
             }
         };
-        let band_rows = rows.div_ceil(workers);
+        let band_rows = if chunk == 0 { rows.div_ceil(workers) } else { chunk.min(rows) };
         let n_bands = rows.div_ceil(band_rows);
         let ctx = Ctx {
             out: out.as_mut_ptr(),
@@ -405,6 +425,34 @@ mod tests {
                     }
                 }
                 assert!(calls.load(Ordering::Relaxed) <= threads.min(rows));
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_bands_cover_all_rows_exactly_once() {
+        // explicit chunk sizes, including ones that don't divide rows
+        // and chunk > rows; same coverage invariant as the default split
+        for threads in [2, 4] {
+            for rows in [5usize, 16, 33] {
+                for chunk in [1usize, 2, 7, 64] {
+                    let row_len = 512;
+                    let mut out = vec![usize::MAX; rows * row_len];
+                    Pool::new(threads).run_rows_chunk(rows, row_len, chunk, &mut out, |r0, band| {
+                        for (i, row) in band.chunks_mut(row_len).enumerate() {
+                            row.fill(r0 + i);
+                        }
+                    });
+                    for r in 0..rows {
+                        for c in 0..row_len {
+                            assert_eq!(
+                                out[r * row_len + c],
+                                r,
+                                "t={threads} rows={rows} chunk={chunk}"
+                            );
+                        }
+                    }
+                }
             }
         }
     }

@@ -109,6 +109,57 @@ pub fn xor_popcount_1x4(a: &[u64], b0: &[u64], b1: &[u64], b2: &[u64], b3: &[u64
     }
 }
 
+/// Eight mismatch counts of one packed A row against an 8-row B panel
+/// — dispatched.  Same reuse idea as 1×4 with twice the B fan-out:
+/// each A word is loaded once and XORed against eight B rows, the
+/// widest panel before accumulator pressure costs more than the loads
+/// save.  The autotuner picks between 1×4 / 1×8 / 2×4 per shape.
+#[inline]
+pub fn xor_popcount_1x8(a: &[u64], b: [&[u64]; 8]) -> [u64; 8] {
+    debug_assert!(b.iter().all(|r| r.len() == a.len()));
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { x86::xor_popcount_1x8_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::xor_popcount_1x8_neon(a, b) },
+        _ => xor_popcount_1x8_scalar(a, b),
+    }
+}
+
+/// Eight mismatch counts of a 2-row A block against a 4-row B panel —
+/// dispatched.  Loads each B word once per pair of A rows (the 2×4
+/// register block), trading A reuse for B reuse; wins on tall-M
+/// shapes where the A panel stays cache-hot.
+#[inline]
+pub fn xor_popcount_2x4(a0: &[u64], a1: &[u64], b: [&[u64]; 4]) -> [u64; 8] {
+    debug_assert!(a0.len() == a1.len() && b.iter().all(|r| r.len() == a0.len()));
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { x86::xor_popcount_2x4_avx2(a0, a1, b) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::xor_popcount_2x4_neon(a0, a1, b) },
+        _ => xor_popcount_2x4_scalar(a0, a1, b),
+    }
+}
+
+/// Eight mismatch counts of one packed A row against an *interleaved*
+/// 8-column B panel — dispatched.  `panel[w * 8 + l]` holds word `w`
+/// of panel column `l` (see `gemm::BPanels`), so the whole inner loop
+/// is one contiguous forward stream over `panel`: 8 B words per 64
+/// bytes of sequential reads, where the strided row layout costs 8
+/// scattered cache lines at large N.
+#[inline]
+pub fn xor_popcount_p8(a: &[u64], panel: &[u64]) -> [u64; 8] {
+    debug_assert_eq!(panel.len(), a.len() * 8);
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { x86::xor_popcount_p8_avx2(a, panel) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { neon::xor_popcount_p8_neon(a, panel) },
+        _ => xor_popcount_p8_scalar(a, panel),
+    }
+}
+
 /// Σ_w popcount(a[w]) — dispatched.  The federated vote tally's
 /// inner kernel: after the word transpose, one weight's votes are a
 /// contiguous word run, and this is all that remains of counting
@@ -154,6 +205,48 @@ pub fn xor_popcount_1x4_scalar(
         c3 += (aw ^ b3[w]).count_ones() as u64;
     }
     [c0, c1, c2, c3]
+}
+
+/// Scalar reference for the 1×8 panel kernel.
+#[inline]
+pub fn xor_popcount_1x8_scalar(a: &[u64], b: [&[u64]; 8]) -> [u64; 8] {
+    let mut c = [0u64; 8];
+    for w in 0..a.len() {
+        let aw = a[w];
+        for (j, row) in b.iter().enumerate() {
+            c[j] += (aw ^ row[w]).count_ones() as u64;
+        }
+    }
+    c
+}
+
+/// Scalar reference for the interleaved-panel kernel.
+#[inline]
+pub fn xor_popcount_p8_scalar(a: &[u64], panel: &[u64]) -> [u64; 8] {
+    let mut c = [0u64; 8];
+    for (w, &aw) in a.iter().enumerate() {
+        let pw = &panel[w * 8..w * 8 + 8];
+        for l in 0..8 {
+            c[l] += (aw ^ pw[l]).count_ones() as u64;
+        }
+    }
+    c
+}
+
+/// Scalar reference for the 2×4 panel kernel.  Output layout:
+/// `[a0^b0..a0^b3, a1^b0..a1^b3]`.
+#[inline]
+pub fn xor_popcount_2x4_scalar(a0: &[u64], a1: &[u64], b: [&[u64]; 4]) -> [u64; 8] {
+    let mut c = [0u64; 8];
+    for w in 0..a0.len() {
+        let (x0, x1) = (a0[w], a1[w]);
+        for (j, row) in b.iter().enumerate() {
+            let bw = row[w];
+            c[j] += (x0 ^ bw).count_ones() as u64;
+            c[4 + j] += (x1 ^ bw).count_ones() as u64;
+        }
+    }
+    c
 }
 
 // ------------------------------------------------------- f32 row ops
@@ -367,6 +460,109 @@ mod x86 {
     /// # Safety
     /// Caller must have verified AVX2 support (see [`super::level`]).
     #[target_feature(enable = "avx2")]
+    pub unsafe fn xor_popcount_1x8_avx2(a: &[u64], b: [&[u64]; 8]) -> [u64; 8] {
+        unsafe {
+            let lut = nibble_lut();
+            let mask = _mm256_set1_epi8(0x0f);
+            let zero = _mm256_setzero_si256();
+            let mut acc = [zero; 8];
+            let n4 = a.len() & !3;
+            let mut w = 0;
+            while w < n4 {
+                let va = _mm256_loadu_si256(a.as_ptr().add(w).cast());
+                for j in 0..8 {
+                    let vb = _mm256_loadu_si256(b[j].as_ptr().add(w).cast());
+                    let cnt = popcnt_bytes(_mm256_xor_si256(va, vb), lut, mask);
+                    acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(cnt, zero));
+                }
+                w += 4;
+            }
+            let mut out = [0u64; 8];
+            for j in 0..8 {
+                out[j] = sum_lanes_u64(acc[j]);
+            }
+            while w < a.len() {
+                let aw = a[w];
+                for j in 0..8 {
+                    out[j] += (aw ^ b[j][w]).count_ones() as u64;
+                }
+                w += 1;
+            }
+            out
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (see [`super::level`]).
+    /// `panel.len()` must be `a.len() * 8`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xor_popcount_p8_avx2(a: &[u64], panel: &[u64]) -> [u64; 8] {
+        unsafe {
+            let lut = nibble_lut();
+            let mask = _mm256_set1_epi8(0x0f);
+            let zero = _mm256_setzero_si256();
+            // each vpsadbw u64 lane IS one panel column: 2 vectors hold
+            // all 8 per-column accumulators
+            let (mut s0, mut s1) = (zero, zero);
+            for (w, &aw) in a.iter().enumerate() {
+                let va = _mm256_set1_epi64x(aw as i64);
+                let p0 = _mm256_loadu_si256(panel.as_ptr().add(w * 8).cast());
+                let p1 = _mm256_loadu_si256(panel.as_ptr().add(w * 8 + 4).cast());
+                let c0 = popcnt_bytes(_mm256_xor_si256(va, p0), lut, mask);
+                let c1 = popcnt_bytes(_mm256_xor_si256(va, p1), lut, mask);
+                s0 = _mm256_add_epi64(s0, _mm256_sad_epu8(c0, zero));
+                s1 = _mm256_add_epi64(s1, _mm256_sad_epu8(c1, zero));
+            }
+            let mut out = [0u64; 8];
+            _mm256_storeu_si256(out.as_mut_ptr().cast(), s0);
+            _mm256_storeu_si256(out.as_mut_ptr().add(4).cast(), s1);
+            out
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (see [`super::level`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xor_popcount_2x4_avx2(a0: &[u64], a1: &[u64], b: [&[u64]; 4]) -> [u64; 8] {
+        unsafe {
+            let lut = nibble_lut();
+            let mask = _mm256_set1_epi8(0x0f);
+            let zero = _mm256_setzero_si256();
+            let mut acc = [zero; 8];
+            let n4 = a0.len() & !3;
+            let mut w = 0;
+            while w < n4 {
+                let v0 = _mm256_loadu_si256(a0.as_ptr().add(w).cast());
+                let v1 = _mm256_loadu_si256(a1.as_ptr().add(w).cast());
+                for j in 0..4 {
+                    let vb = _mm256_loadu_si256(b[j].as_ptr().add(w).cast());
+                    let c0 = popcnt_bytes(_mm256_xor_si256(v0, vb), lut, mask);
+                    let c1 = popcnt_bytes(_mm256_xor_si256(v1, vb), lut, mask);
+                    acc[j] = _mm256_add_epi64(acc[j], _mm256_sad_epu8(c0, zero));
+                    acc[4 + j] = _mm256_add_epi64(acc[4 + j], _mm256_sad_epu8(c1, zero));
+                }
+                w += 4;
+            }
+            let mut out = [0u64; 8];
+            for j in 0..8 {
+                out[j] = sum_lanes_u64(acc[j]);
+            }
+            while w < a0.len() {
+                let (x0, x1) = (a0[w], a1[w]);
+                for j in 0..4 {
+                    let bw = b[j][w];
+                    out[j] += (x0 ^ bw).count_ones() as u64;
+                    out[4 + j] += (x1 ^ bw).count_ones() as u64;
+                }
+                w += 1;
+            }
+            out
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support (see [`super::level`]).
+    #[target_feature(enable = "avx2")]
     pub unsafe fn add_assign_avx2(dst: &mut [f32], src: &[f32]) {
         unsafe {
             let n8 = dst.len() & !7;
@@ -520,6 +716,93 @@ mod neon {
     /// # Safety
     /// NEON is baseline on aarch64; caller dispatches via [`super::level`].
     #[target_feature(enable = "neon")]
+    pub unsafe fn xor_popcount_1x8_neon(a: &[u64], b: [&[u64]; 8]) -> [u64; 8] {
+        unsafe {
+            let mut acc = [vdupq_n_u64(0); 8];
+            let n2 = a.len() & !1;
+            let mut w = 0;
+            while w < n2 {
+                let va = vld1q_u64(a.as_ptr().add(w));
+                for j in 0..8 {
+                    let vb = vld1q_u64(b[j].as_ptr().add(w));
+                    acc[j] = vaddq_u64(acc[j], popcnt_words(veorq_u64(va, vb)));
+                }
+                w += 2;
+            }
+            let mut out = [0u64; 8];
+            for j in 0..8 {
+                out[j] = vaddvq_u64(acc[j]);
+            }
+            if w < a.len() {
+                let aw = a[w];
+                for j in 0..8 {
+                    out[j] += (aw ^ b[j][w]).count_ones() as u64;
+                }
+            }
+            out
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64; caller dispatches via [`super::level`].
+    /// `panel.len()` must be `a.len() * 8`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn xor_popcount_p8_neon(a: &[u64], panel: &[u64]) -> [u64; 8] {
+        unsafe {
+            // each 128-bit accumulator lane IS one panel column
+            let mut acc = [vdupq_n_u64(0); 4];
+            for (w, &aw) in a.iter().enumerate() {
+                let va = vdupq_n_u64(aw);
+                for v in 0..4 {
+                    let p = vld1q_u64(panel.as_ptr().add(w * 8 + v * 2));
+                    acc[v] = vaddq_u64(acc[v], popcnt_words(veorq_u64(va, p)));
+                }
+            }
+            let mut out = [0u64; 8];
+            for v in 0..4 {
+                vst1q_u64(out.as_mut_ptr().add(v * 2), acc[v]);
+            }
+            out
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64; caller dispatches via [`super::level`].
+    #[target_feature(enable = "neon")]
+    pub unsafe fn xor_popcount_2x4_neon(a0: &[u64], a1: &[u64], b: [&[u64]; 4]) -> [u64; 8] {
+        unsafe {
+            let mut acc = [vdupq_n_u64(0); 8];
+            let n2 = a0.len() & !1;
+            let mut w = 0;
+            while w < n2 {
+                let v0 = vld1q_u64(a0.as_ptr().add(w));
+                let v1 = vld1q_u64(a1.as_ptr().add(w));
+                for j in 0..4 {
+                    let vb = vld1q_u64(b[j].as_ptr().add(w));
+                    acc[j] = vaddq_u64(acc[j], popcnt_words(veorq_u64(v0, vb)));
+                    acc[4 + j] = vaddq_u64(acc[4 + j], popcnt_words(veorq_u64(v1, vb)));
+                }
+                w += 2;
+            }
+            let mut out = [0u64; 8];
+            for j in 0..8 {
+                out[j] = vaddvq_u64(acc[j]);
+            }
+            if w < a0.len() {
+                let (x0, x1) = (a0[w], a1[w]);
+                for j in 0..4 {
+                    let bw = b[j][w];
+                    out[j] += (x0 ^ bw).count_ones() as u64;
+                    out[4 + j] += (x1 ^ bw).count_ones() as u64;
+                }
+            }
+            out
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64; caller dispatches via [`super::level`].
+    #[target_feature(enable = "neon")]
     pub unsafe fn add_assign_neon(dst: &mut [f32], src: &[f32]) {
         unsafe {
             let n4 = dst.len() & !3;
@@ -630,6 +913,63 @@ mod tests {
             assert_eq!(got, want, "len {len}");
             // cross-check one lane against the 1x1 kernel
             assert_eq!(got[2], xor_popcount(&a, &bs[2]), "len {len}");
+        }
+    }
+
+    #[test]
+    fn dispatched_1x8_matches_scalar() {
+        let mut g = Pcg32::new(35);
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 13, 64, 129] {
+            let a = words(&mut g, len);
+            let bs: Vec<Vec<u64>> = (0..8).map(|_| words(&mut g, len)).collect();
+            let panel: [&[u64]; 8] = std::array::from_fn(|j| bs[j].as_slice());
+            let want = xor_popcount_1x8_scalar(&a, panel);
+            let got = xor_popcount_1x8(&a, panel);
+            assert_eq!(got, want, "len {len}");
+            // cross-check lanes against the 1x1 kernel
+            for j in 0..8 {
+                assert_eq!(got[j], xor_popcount(&a, &bs[j]), "len {len} lane {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_2x4_matches_scalar() {
+        let mut g = Pcg32::new(36);
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 13, 64, 129] {
+            let a0 = words(&mut g, len);
+            let a1 = words(&mut g, len);
+            let bs: Vec<Vec<u64>> = (0..4).map(|_| words(&mut g, len)).collect();
+            let panel: [&[u64]; 4] = std::array::from_fn(|j| bs[j].as_slice());
+            let want = xor_popcount_2x4_scalar(&a0, &a1, panel);
+            let got = xor_popcount_2x4(&a0, &a1, panel);
+            assert_eq!(got, want, "len {len}");
+            for j in 0..4 {
+                assert_eq!(got[j], xor_popcount(&a0, &bs[j]), "len {len} lane {j}");
+                assert_eq!(got[4 + j], xor_popcount(&a1, &bs[j]), "len {len} lane {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_p8_matches_scalar_and_rowwise() {
+        let mut g = Pcg32::new(37);
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 13, 64, 129] {
+            let a = words(&mut g, len);
+            let bs: Vec<Vec<u64>> = (0..8).map(|_| words(&mut g, len)).collect();
+            // interleave: panel[w*8 + l] = bs[l][w]
+            let mut panel = vec![0u64; len * 8];
+            for w in 0..len {
+                for (l, row) in bs.iter().enumerate() {
+                    panel[w * 8 + l] = row[w];
+                }
+            }
+            let want = xor_popcount_p8_scalar(&a, &panel);
+            let got = xor_popcount_p8(&a, &panel);
+            assert_eq!(got, want, "len {len}");
+            for (l, row) in bs.iter().enumerate() {
+                assert_eq!(got[l], xor_popcount(&a, row), "len {len} lane {l}");
+            }
         }
     }
 

@@ -1,0 +1,410 @@
+//! Per-shape kernel autotuner for the tiled XNOR GEMM.
+//!
+//! At the first use of an (m-class, k-words, n, panels, threads) shape
+//! class under `--tune=auto`, every candidate [`KernelCfg`] — the SIMD
+//! 1×4 / 1×8 / 2×4 micro-kernels, the scalar 4×4 block at several
+//! K-word tiles, the interleaved [`BPanels`] panel kernel when panels
+//! are packed, and a second-phase row-band sweep for the parallel
+//! driver — is microbenched **on the caller's real buffers** and the
+//! fastest is cached in a process-global registry.  All candidates
+//! compute identical integer popcounts (bit-exact against
+//! `xnor_gemm_naive`), so tuning can only change speed, never results.
+//!
+//! Tuning happens strictly at warmup: a registry hit is a read-lock +
+//! hash lookup with no allocation, so the zero-alloc steady state of
+//! the training/serving engines is untouched (the one-time insert at
+//! first use lands in the same warmup step that grows the arenas).
+//!
+//! The default mode is [`Mode::Fixed`]: exactly the pre-tuner fixed
+//! dispatch, bit-for-bit and timing-deterministic — CI and tests run
+//! fixed unless they opt in.  `bnn-edge tune` pre-warms a cache
+//! offline and `--tune-cache PATH` persists/loads it as JSON; entries
+//! record the SIMD level and are dropped on load when the host's
+//! detected level differs (tile choices do not transfer across ISAs).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{OnceLock, RwLock};
+use std::time::Instant;
+
+use super::gemm::{self, BPanels, KernelCfg, MicroKernel};
+use super::pool::Pool;
+use super::{simd, BitMatrix};
+use crate::util::json::Json;
+
+/// Tuning mode, process-global (see [`set_mode`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Always dispatch [`KernelCfg::fixed`] — the deterministic
+    /// pre-tuner behavior.  The default.
+    Fixed,
+    /// Microbench per shape class on first use, then replay the cached
+    /// winner.
+    Auto,
+}
+
+static MODE: AtomicU8 = AtomicU8::new(0); // 0 = Fixed, 1 = Auto
+
+pub fn set_mode(m: Mode) {
+    MODE.store(matches!(m, Mode::Auto) as u8, Ordering::Relaxed);
+}
+
+pub fn mode() -> Mode {
+    if MODE.load(Ordering::Relaxed) == 0 {
+        Mode::Fixed
+    } else {
+        Mode::Auto
+    }
+}
+
+/// Parse a `--tune` argument: `fixed` | `auto`.
+pub fn parse_mode(s: &str) -> Option<Mode> {
+    match s {
+        "fixed" => Some(Mode::Fixed),
+        "auto" => Some(Mode::Auto),
+        _ => None,
+    }
+}
+
+/// Shape class key.  M (the batch/rows side) is bucketed to the next
+/// power of two: microbatch splits and a partial last batch land in
+/// the class tuned at warmup instead of re-tuning mid-epoch, and the
+/// kernel choice is insensitive to M within a 2× band (it only sets
+/// the band count).  K and N are exact — they are weight dimensions,
+/// fixed per layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ShapeKey {
+    pub m_class: usize,
+    pub k_words: usize,
+    pub n: usize,
+    pub panels: bool,
+    pub threads: usize,
+}
+
+/// M bucket: next power of two (minimum 1).
+pub fn m_class(m: usize) -> usize {
+    m.max(1).next_power_of_two()
+}
+
+impl ShapeKey {
+    pub fn of(m: usize, k_words: usize, n: usize, panels: bool, threads: usize) -> ShapeKey {
+        ShapeKey { m_class: m_class(m), k_words, n, panels, threads }
+    }
+}
+
+fn registry() -> &'static RwLock<HashMap<ShapeKey, KernelCfg>> {
+    static R: OnceLock<RwLock<HashMap<ShapeKey, KernelCfg>>> = OnceLock::new();
+    R.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
+/// Number of cached shape classes.
+pub fn len() -> usize {
+    registry().read().unwrap().len()
+}
+
+/// Drop every cached choice (tests / re-tuning).
+pub fn clear() {
+    registry().write().unwrap().clear();
+}
+
+/// Cached choice for a shape class, if tuned.
+pub fn lookup(key: &ShapeKey) -> Option<KernelCfg> {
+    registry().read().unwrap().get(key).copied()
+}
+
+/// Snapshot of the registry, sorted by key (stable listing order for
+/// `bnn-edge tune` and the cache file).
+pub fn entries() -> Vec<(ShapeKey, KernelCfg)> {
+    let reg = registry().read().unwrap();
+    let mut rows: Vec<(ShapeKey, KernelCfg)> = reg.iter().map(|(k, v)| (*k, *v)).collect();
+    drop(reg);
+    rows.sort_by_key(|(k, _)| (k.m_class, k.k_words, k.n, k.panels, k.threads));
+    rows
+}
+
+/// The config the tiled backend will dispatch for this GEMM right
+/// now, without tuning anything — [`KernelCfg::fixed`] in fixed mode
+/// or on a registry miss.  Benches use this to label rows.
+pub fn current_config(m: usize, k_words: usize, n: usize, panels: bool, threads: usize) -> KernelCfg {
+    if mode() == Mode::Fixed {
+        return KernelCfg::fixed();
+    }
+    lookup(&ShapeKey::of(m, k_words, n, panels, threads)).unwrap_or_else(KernelCfg::fixed)
+}
+
+/// Resolve the kernel config for one GEMM call.  Fixed mode and
+/// registry hits return without touching the operands; a miss in auto
+/// mode microbenches the candidates on (`a`, `b_t`, `bp`, `out`)
+/// themselves — `out` holds a valid product afterwards (every
+/// candidate computes it), and the only allocation is the registry
+/// insert.
+pub fn config_for(
+    a: &BitMatrix,
+    b_t: &BitMatrix,
+    bp: Option<&BPanels>,
+    out: &mut [f32],
+    pool: &Pool,
+) -> KernelCfg {
+    if mode() == Mode::Fixed {
+        return KernelCfg::fixed();
+    }
+    let key = ShapeKey::of(a.rows, b_t.words_per_row, b_t.rows, bp.is_some(), pool.threads());
+    if let Some(cfg) = lookup(&key) {
+        return cfg;
+    }
+    let cfg = tune_shape(a, b_t, bp, out, pool);
+    registry().write().unwrap().insert(key, cfg);
+    cfg
+}
+
+/// Candidate micro-kernel configs for phase 1 (band_rows = 0).
+fn candidates(panels: bool, out: &mut Vec<KernelCfg>) {
+    out.clear();
+    let kc = |micro, kc_words| KernelCfg { micro, kc_words, band_rows: 0 };
+    if simd::level() == simd::Level::Scalar {
+        // no-SIMD tier: only the K tile is worth sweeping
+        for w in [32, 128, 512] {
+            out.push(kc(MicroKernel::Scalar4x4, w));
+        }
+    } else {
+        out.push(kc(MicroKernel::Simd1x4, 128));
+        out.push(kc(MicroKernel::Simd1x8, 128));
+        out.push(kc(MicroKernel::Simd2x4, 128));
+        out.push(kc(MicroKernel::Scalar4x4, 128));
+        if panels {
+            out.push(kc(MicroKernel::Panel8, 128));
+        }
+    }
+}
+
+/// Best-of-N wall time of one config on the real operands (one warmup
+/// run, then the minimum of `TRIALS` timed runs — min is the standard
+/// robust estimator for microbenches on a shared machine).
+fn bench_cfg(
+    cfg: KernelCfg,
+    a: &BitMatrix,
+    b_t: &BitMatrix,
+    bp: Option<&BPanels>,
+    out: &mut [f32],
+    pool: &Pool,
+) -> f64 {
+    const TRIALS: usize = 2;
+    gemm::xnor_gemm_with(cfg, a, b_t, bp, out, pool);
+    let mut best = f64::INFINITY;
+    for _ in 0..TRIALS {
+        let t0 = Instant::now();
+        gemm::xnor_gemm_with(cfg, a, b_t, bp, out, pool);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Two-phase microbench: pick the micro-kernel with the default band
+/// split, then sweep row-band granularities for the winner (bands
+/// only matter with >1 worker).  ~10–20 GEMM runs total, once per
+/// shape class per process (or zero with a pre-warmed `--tune-cache`).
+fn tune_shape(
+    a: &BitMatrix,
+    b_t: &BitMatrix,
+    bp: Option<&BPanels>,
+    out: &mut [f32],
+    pool: &Pool,
+) -> KernelCfg {
+    let mut cands = Vec::new();
+    candidates(bp.is_some(), &mut cands);
+    let mut best = KernelCfg::fixed();
+    let mut best_t = f64::INFINITY;
+    for &cfg in &cands {
+        let t = bench_cfg(cfg, a, b_t, bp, out, pool);
+        if t < best_t {
+            best_t = t;
+            best = cfg;
+        }
+    }
+    if pool.threads() > 1 && a.rows > 1 {
+        for band_rows in [8usize, 32] {
+            if band_rows >= a.rows {
+                continue;
+            }
+            let cfg = KernelCfg { band_rows, ..best };
+            let t = bench_cfg(cfg, a, b_t, bp, out, pool);
+            if t < best_t {
+                best_t = t;
+                best = cfg;
+            }
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------- JSON cache
+
+/// Serialize the registry:
+/// `{"level": "<simd>", "entries": [{m_class, k_words, n, panels,
+/// threads, micro, kc_words, band_rows}, ...]}` — rows sorted by key
+/// so repeated saves of the same registry are byte-identical.
+pub fn save_cache(path: &str) -> std::io::Result<usize> {
+    let rows = entries();
+    let mut entries = Vec::with_capacity(rows.len());
+    for (k, c) in &rows {
+        let mut e = Json::obj();
+        e.set("m_class", Json::from(k.m_class));
+        e.set("k_words", Json::from(k.k_words));
+        e.set("n", Json::from(k.n));
+        e.set("panels", Json::from(k.panels));
+        e.set("threads", Json::from(k.threads));
+        e.set("micro", Json::from(c.micro.name()));
+        e.set("kc_words", Json::from(c.kc_words));
+        e.set("band_rows", Json::from(c.band_rows));
+        entries.push(e);
+    }
+    let mut root = Json::obj();
+    root.set("level", Json::from(simd::label()));
+    root.set("entries", Json::Arr(entries));
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, root.to_string_pretty())?;
+    Ok(rows.len())
+}
+
+/// Load a cache file into the registry (merging over existing
+/// entries).  Returns the number of entries installed; a file written
+/// on a host with a different detected SIMD level installs nothing —
+/// tile choices do not transfer across ISAs.
+pub fn load_cache(path: &str) -> anyhow::Result<usize> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("tune cache {path}: {e}"))?;
+    let root = Json::parse(&text)?;
+    if root.req("level")?.as_str()? != simd::label() {
+        return Ok(0);
+    }
+    let mut n = 0;
+    let mut reg = registry().write().unwrap();
+    for e in root.req("entries")?.as_arr()? {
+        let micro = MicroKernel::parse(e.req("micro")?.as_str()?)
+            .ok_or_else(|| anyhow::anyhow!("unknown micro-kernel in tune cache"))?;
+        let key = ShapeKey {
+            m_class: e.req("m_class")?.as_usize()?,
+            k_words: e.req("k_words")?.as_usize()?,
+            n: e.req("n")?.as_usize()?,
+            panels: e.req("panels")?.as_bool()?,
+            threads: e.req("threads")?.as_usize()?,
+        };
+        let cfg = KernelCfg {
+            micro,
+            kc_words: e.req("kc_words")?.as_usize()?.max(1),
+            band_rows: e.req("band_rows")?.as_usize()?,
+        };
+        reg.insert(key, cfg);
+        n += 1;
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use std::sync::Mutex;
+
+    /// Tests here flip the process-global mode; serialize them and
+    /// always restore Fixed (other tests assume the default).
+    fn mode_lock() -> &'static Mutex<()> {
+        static L: OnceLock<Mutex<()>> = OnceLock::new();
+        L.get_or_init(|| Mutex::new(()))
+    }
+
+    fn rand_ops(g: &mut Pcg32, m: usize, k: usize, n: usize) -> (BitMatrix, BitMatrix) {
+        let a = BitMatrix::pack(m, k, &g.normal_vec(m * k));
+        let b_t = BitMatrix::pack(n, k, &g.normal_vec(n * k));
+        (a, b_t)
+    }
+
+    #[test]
+    fn fixed_mode_never_tunes() {
+        let _g = mode_lock().lock().unwrap();
+        set_mode(Mode::Fixed);
+        let mut g = Pcg32::new(11);
+        let (a, b_t) = rand_ops(&mut g, 5, 130, 7);
+        let mut out = vec![0.0f32; 5 * 7];
+        let before = len();
+        let cfg = config_for(&a, &b_t, None, &mut out, &Pool::serial());
+        assert_eq!(cfg, KernelCfg::fixed());
+        assert_eq!(len(), before, "fixed mode must not insert registry entries");
+    }
+
+    #[test]
+    fn auto_mode_caches_and_replays_one_choice() {
+        let _g = mode_lock().lock().unwrap();
+        set_mode(Mode::Auto);
+        let mut g = Pcg32::new(12);
+        let (a, b_t) = rand_ops(&mut g, 9, 200, 17);
+        let panels = BPanels::pack(&b_t);
+        let mut out = vec![0.0f32; 9 * 17];
+        let pool = Pool::new(2);
+        let key = ShapeKey::of(9, b_t.words_per_row, 17, true, pool.threads());
+        registry().write().unwrap().remove(&key);
+        let cfg = config_for(&a, &b_t, Some(&panels), &mut out, &pool);
+        // the microbench leaves a correct product behind
+        let mut want = vec![0.0f32; 9 * 17];
+        gemm::xnor_gemm_naive(&a, &b_t, &mut want);
+        assert_eq!(out, want);
+        // replay: same key → same cached choice, registry stable
+        assert_eq!(lookup(&key), Some(cfg));
+        let n_before = len();
+        let again = config_for(&a, &b_t, Some(&panels), &mut out, &pool);
+        assert_eq!(again, cfg);
+        assert_eq!(len(), n_before);
+        // a partial "last batch" (m=7 < 9, same power-of-two bucket
+        // boundary 16) shares the class — no re-tune mid-epoch
+        assert_eq!(m_class(9), m_class(16));
+        set_mode(Mode::Fixed);
+    }
+
+    #[test]
+    fn cache_roundtrips_and_filters_by_level() {
+        let _g = mode_lock().lock().unwrap();
+        set_mode(Mode::Auto);
+        let mut g = Pcg32::new(13);
+        let (a, b_t) = rand_ops(&mut g, 4, 64, 5);
+        let mut out = vec![0.0f32; 4 * 5];
+        let _ = config_for(&a, &b_t, None, &mut out, &Pool::serial());
+        set_mode(Mode::Fixed);
+
+        let dir = std::env::temp_dir().join(format!("bnn_tune_{}", std::process::id()));
+        let path = dir.join("tune.json").to_string_lossy().into_owned();
+        let saved = save_cache(&path).unwrap();
+        assert!(saved >= 1);
+        // byte-identical on re-save (sorted rows)
+        let t1 = std::fs::read_to_string(&path).unwrap();
+        save_cache(&path).unwrap();
+        assert_eq!(t1, std::fs::read_to_string(&path).unwrap());
+
+        clear();
+        assert_eq!(len(), 0);
+        let loaded = load_cache(&path).unwrap();
+        assert_eq!(loaded, saved);
+        assert_eq!(len(), saved);
+
+        // a cache from a different SIMD level installs nothing
+        let foreign = t1.replace(simd::label(), "not-a-real-level");
+        let fpath = dir.join("foreign.json").to_string_lossy().into_owned();
+        std::fs::write(&fpath, foreign).unwrap();
+        clear();
+        assert_eq!(load_cache(&fpath).unwrap(), 0);
+        assert_eq!(len(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(parse_mode("fixed"), Some(Mode::Fixed));
+        assert_eq!(parse_mode("auto"), Some(Mode::Auto));
+        assert_eq!(parse_mode("fast"), None);
+        // default is fixed (bit-reproducible CI)
+        assert_eq!(parse_mode("fixed").unwrap(), Mode::Fixed);
+    }
+}

@@ -29,26 +29,75 @@ use crate::util::cli::Args;
 /// Launcher entrypoint (`bnn-edge <subcommand> ...`).
 pub fn cli_main() -> Result<()> {
     let args = Args::from_env();
+    // global kernel-dispatch flags: --tune=fixed|auto selects the
+    // autotuner mode (default fixed: deterministic pre-tuner
+    // dispatch), --tune-cache PATH pre-loads a tuned registry and
+    // persists any newly tuned shape classes on exit
+    let tune_cache = apply_tune_flags(&args)?;
     // `bnn-edge --dump-schedule [model]` is an alias for the
     // `schedule` subcommand (the flag's value, if any, names a model)
-    if args.get("dump-schedule").is_some() {
-        return cmd_schedule(&args);
+    let r = if args.get("dump-schedule").is_some() {
+        cmd_schedule(&args)
+    } else {
+        let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+        match cmd {
+            "train" => cmd_train(&args),
+            "memory" => cmd_memory(&args),
+            "energy" => cmd_energy(&args),
+            "fit-batch" => cmd_fit_batch(&args),
+            "artifacts" => cmd_artifacts(&args),
+            "datasets" => cmd_datasets(),
+            "serve" => cmd_serve(&args),
+            "multi" => cmd_multi(&args),
+            "schedule" => cmd_schedule(&args),
+            "tune" => cmd_tune(&args),
+            "federated" => crate::federated::cli(&args),
+            _ => {
+                print_help();
+                Ok(())
+            }
+        }
+    };
+    save_tune_cache(tune_cache.as_deref());
+    r
+}
+
+/// Parse `--tune` / `--tune-cache`, set the process-global tuner mode
+/// and pre-load the cache file if it exists.  Returns the cache path
+/// (to persist on exit) when tuning is on.
+fn apply_tune_flags(args: &Args) -> Result<Option<String>> {
+    use crate::bitops::tune;
+    // the `tune` subcommand is itself the opt-in: it always runs auto
+    let tune_cmd = args.positional.first().map(String::as_str) == Some("tune");
+    let mode = match args.get("tune") {
+        None if tune_cmd => tune::Mode::Auto,
+        None => tune::Mode::Fixed,
+        Some(s) => tune::parse_mode(s)
+            .ok_or_else(|| anyhow::anyhow!("bad --tune '{s}' (fixed|auto)"))?,
+    };
+    tune::set_mode(mode);
+    let path = args.get("tune-cache").map(str::to_string);
+    if let Some(p) = &path {
+        if mode == tune::Mode::Fixed {
+            anyhow::bail!("--tune-cache requires --tune=auto");
+        }
+        if std::path::Path::new(p).exists() {
+            let n = tune::load_cache(p)?;
+            eprintln!("tune: loaded {n} shape classes from {p}");
+        }
     }
-    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
-    match cmd {
-        "train" => cmd_train(&args),
-        "memory" => cmd_memory(&args),
-        "energy" => cmd_energy(&args),
-        "fit-batch" => cmd_fit_batch(&args),
-        "artifacts" => cmd_artifacts(&args),
-        "datasets" => cmd_datasets(),
-        "serve" => cmd_serve(&args),
-        "multi" => cmd_multi(&args),
-        "schedule" => cmd_schedule(&args),
-        "federated" => crate::federated::cli(&args),
-        _ => {
-            print_help();
-            Ok(())
+    Ok(path)
+}
+
+/// Persist the tuner registry after a run when `--tune-cache` was
+/// given (no-op otherwise; errors are non-fatal — the run's results
+/// already stand).
+fn save_tune_cache(path: Option<&str>) {
+    use crate::bitops::tune;
+    if let Some(p) = path {
+        match tune::save_cache(p) {
+            Ok(n) => eprintln!("tune: saved {n} shape classes to {p}"),
+            Err(e) => eprintln!("tune: failed to save {p}: {e}"),
         }
     }
 }
@@ -58,6 +107,12 @@ fn print_help() {
         "bnn-edge — low-memory BNN training on the edge (Wang et al. 2021)
 
 USAGE: bnn-edge <command> [flags]
+
+GLOBAL FLAGS (kernel dispatch):
+  --tune fixed|auto   per-shape kernel autotuning for the tiled
+                      backend (default fixed: deterministic dispatch)
+  --tune-cache PATH   with --tune=auto: load a pre-warmed tune cache
+                      (JSON) and persist newly tuned shapes on exit
 
 COMMANDS:
   train       run a training job
@@ -103,6 +158,12 @@ COMMANDS:
               [--microbatch 0] [--serve --max-batch 8]
               [--out schedule.json]
               (alias: bnn-edge --dump-schedule [model])
+  tune        pre-warm the kernel autotuner: microbench every GEMM
+              shape class a model's train step + serving forward touch
+              on this host's tiled backend, print the tuned table
+              --models binarynet_mini[,cnv_mini] [--algo both]
+              [--threads 4] [--batch 64] [--steps 2]
+              [--tune-cache tune.json]  (persist for --tune=auto runs)
   federated   run the fault-tolerant federated edge fleet
               [--workers 4] [--rounds 5] [--local-steps 8]
               [--chaos none|hostile] [--chaos-seed 42]
@@ -570,6 +631,66 @@ fn cmd_schedule(args: &Args) -> Result<()> {
 fn cmd_datasets() -> Result<()> {
     for (name, desc) in crate::data::catalog() {
         println!("{name:<16} {desc}");
+    }
+    Ok(())
+}
+
+/// `bnn-edge tune`: pre-warm the kernel autotuner offline.  Runs a few
+/// training steps (and a serving forward) of each requested model so
+/// every GEMM shape class the step touches gets microbenched, then
+/// prints the tuned table; with `--tune-cache PATH` the launcher
+/// persists it for later `--tune=auto` runs to load.
+fn cmd_tune(args: &Args) -> Result<()> {
+    use crate::bitops::tune;
+    use crate::naive::{build_engine, Accel};
+
+    let models: Vec<String> = args
+        .str_or("models", &args.str_or("model", "binarynet_mini"))
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let algos: Vec<&str> = match args.str_or("algo", "both").as_str() {
+        "both" => vec!["standard", "proposed"],
+        "standard" => vec!["standard"],
+        "proposed" => vec!["proposed"],
+        other => anyhow::bail!("unknown algo '{other}' (standard|proposed|both)"),
+    };
+    let threads = crate::bitops::Pool::resolve(args.threads()?);
+    let accel = Accel::Tiled(threads);
+    let batch = args.usize_or("batch", 64)?;
+    let steps = args.usize_or("steps", 2)?.max(1);
+    let seed = args.usize_or("seed", 42)? as u64;
+
+    for model in &models {
+        let graph = crate::models::lower(&crate::models::get(model)?)?;
+        let mut rng = crate::util::rng::Pcg32::new(seed);
+        let x = rng.normal_vec(graph.input_elems * batch);
+        let y: Vec<usize> = (0..batch).map(|i| (i * 7) % graph.classes).collect();
+        for algo in &algos {
+            let before = tune::len();
+            let mut eng = build_engine(algo, &graph, batch, "adam", accel, seed)?;
+            for _ in 0..steps {
+                eng.train_step(&x, &y, 0.01)?;
+            }
+            eng.eval(&x, &y)?;
+            println!(
+                "tuned {model}/{algo} ({threads} threads): {} new shape classes",
+                tune::len() - before
+            );
+        }
+    }
+    println!("\n{:<30} {:>8} config", "shape class (mclass,kw,n,p,t)", "");
+    for (k, c) in tune::entries() {
+        println!(
+            "  m{:<5} k{:<4} n{:<5} {}{:<2}     {}",
+            k.m_class,
+            k.k_words,
+            k.n,
+            if k.panels { "P" } else { "-" },
+            k.threads,
+            c.label()
+        );
     }
     Ok(())
 }

@@ -307,8 +307,8 @@ pub fn breakdown(
 
 /// Peak transient im2col footprint of the binary conv **forward**
 /// GEMM path (max over non-first conv layers; the real-input first
-/// layer keeps its f32 im2col and is priced by the engine's
-/// transient rows).
+/// layer streams its f32 im2col tap-by-tap and is priced by
+/// [`first_conv_transient`]).
 ///
 /// Pre-fusion (PR 1) the accelerated engines' forward materialized a
 /// f32 cols buffer of B·H·W × k²·Cin and bit-packed it in a second
@@ -434,6 +434,60 @@ pub fn conv_backward_transient(
     best
 }
 
+/// Peak transient footprint of the **real-input first conv** (f32
+/// activations — the one layer the binary panels never cover), per
+/// direction.
+///
+/// Pre-fusion (PR 10) both engines materialized a rows × k²·Cin f32
+/// `cols` buffer for the first layer's forward GEMM and again for
+/// its ∂W contraction.  The fused path streams the f32 im2col
+/// tap-by-tap through one rows × Cin panel (the adjoint of the
+/// streaming dX): `cols_f32_bytes` drops to exactly zero in both
+/// directions and the panel is all that remains — a kside² cut.
+/// `memtrack`-measured counterpart: rust/tests/memtrack_conv.rs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FirstConvTransient {
+    /// rows × k f32 im2col cols (0 on the fused path).
+    pub cols_f32_bytes: f64,
+    /// Streaming per-tap panel (rows × Cin f32; fused path only).
+    pub panel_f32_bytes: f64,
+}
+
+impl FirstConvTransient {
+    pub fn total(&self) -> f64 {
+        self.cols_f32_bytes + self.panel_f32_bytes
+    }
+}
+
+/// Model the first conv's transient im2col memory, pre-fusion
+/// (`fused = false`: the rows × k f32 cols buffer) or fused
+/// (`fused = true`: one rows × Cin f32 panel).  The same shape
+/// appears once in forward and once in the ∂W contraction, so the
+/// model prices a single direction.
+pub fn first_conv_transient(graph: &Graph, batch: usize, fused: bool) -> FirstConvTransient {
+    let mut best = FirstConvTransient::default();
+    for n in &graph.nodes {
+        if n.kind != LayerKind::Conv || !n.first {
+            continue;
+        }
+        let (pos, k, _) = n.gemm; // pos = h_out · w_out
+        let rows = (pos * batch) as f64;
+        let cin = n
+            .geom
+            .map(|g| g.c_in as f64)
+            .unwrap_or((n.in_elems / pos) as f64);
+        let cand = if fused {
+            FirstConvTransient { cols_f32_bytes: 0.0, panel_f32_bytes: rows * cin * 4.0 }
+        } else {
+            FirstConvTransient { cols_f32_bytes: rows * k as f64 * 4.0, panel_f32_bytes: 0.0 }
+        };
+        if cand.total() > best.total() {
+            best = cand;
+        }
+    }
+    best
+}
+
 /// Reduction factor standard/proposed (the paper's Δ columns).
 pub fn reduction(graph: &Graph, batch: usize, opt: Optimizer) -> f64 {
     let std = breakdown(graph, batch, &DtypeConfig::standard(), opt);
@@ -513,6 +567,12 @@ pub fn step_envelope(
                 state += (k * n.div_ceil(64) * 8) as f64;
                 if !first {
                     state += (n * k.div_ceil(64) * 8) as f64;
+                    // interleaved B panels cached next to Ŵᵀ on wide
+                    // layers (the tuner's panel kernel operand)
+                    if crate::bitops::cache::panels_worthwhile(n) {
+                        state +=
+                            (crate::bitops::BPanels::words_for(n, k.div_ceil(64)) * 8) as f64;
+                    }
                 }
             }
         }
@@ -535,6 +595,12 @@ pub fn step_envelope(
                 );
                 if !first {
                     state += (n * k.div_ceil(64) * 8) as f64;
+                    // interleaved B panels cached next to Ŵᵀ on wide
+                    // layers (the tuner's panel kernel operand)
+                    if crate::bitops::cache::panels_worthwhile(n) {
+                        state +=
+                            (crate::bitops::BPanels::words_for(n, k.div_ceil(64)) * 8) as f64;
+                    }
                 }
             }
         }

@@ -63,7 +63,13 @@ impl LayerSpec {
     }
 
     pub fn maxpool() -> LayerSpec {
-        LayerSpec { kind: LayerKind::MaxPool, out: 0, kernel: 2, stride: 2, first: false, bireal: false, pad: Padding::Valid }
+        LayerSpec::maxpool_k(2, 2)
+    }
+
+    /// General `kside`×`kside` stride-`stride` max-pool (VALID floor
+    /// geometry: out = (in − kside)/stride + 1).
+    pub fn maxpool_k(kside: usize, stride: usize) -> LayerSpec {
+        LayerSpec { kind: LayerKind::MaxPool, out: 0, kernel: kside, stride, first: false, bireal: false, pad: Padding::Valid }
     }
 
     pub fn global_pool() -> LayerSpec {
@@ -110,7 +116,7 @@ pub struct NodeGeom {
     /// Output spatial dims (GlobalPool: 1×1).
     pub oh: usize,
     pub ow: usize,
-    /// Kernel side (MaxPool: 2; GlobalPool: 0 — the whole map).
+    /// Kernel side (GlobalPool: 0 — the whole map).
     pub kside: usize,
     /// Spatial stride.
     pub stride: usize,
@@ -353,10 +359,18 @@ pub fn lower(spec: &ModelSpec) -> Result<Graph> {
             }
             LayerKind::MaxPool => {
                 let (h, w) = spatial.unwrap();
+                if l.kernel == 0 || l.stride == 0 || l.kernel > h || l.kernel > w {
+                    bail!(
+                        "max-pool kernel/stride (k={}, s={}) invalid for a {h}x{w} map",
+                        l.kernel,
+                        l.stride
+                    );
+                }
+                let (oh, ow) = ((h - l.kernel) / l.stride + 1, (w - l.kernel) / l.stride + 1);
                 nodes.push(Node {
                     kind: LayerKind::MaxPool,
                     in_elems: h * w * ch,
-                    out_elems: (h / 2) * (w / 2) * ch,
+                    out_elems: oh * ow * ch,
                     w_elems: 0,
                     channels: 0,
                     fan_in: 0,
@@ -367,16 +381,16 @@ pub fn lower(spec: &ModelSpec) -> Result<Graph> {
                         h,
                         w,
                         c_in: ch,
-                        oh: h / 2,
-                        ow: w / 2,
-                        kside: 2,
-                        stride: 2,
+                        oh,
+                        ow,
+                        kside: l.kernel,
+                        stride: l.stride,
                         pad: Padding::Valid,
                     }),
                     skip_open: false,
                     skip_close: false,
                 });
-                spatial = Some((h / 2, w / 2));
+                spatial = Some((oh, ow));
             }
             LayerKind::GlobalPool => {
                 let (h, w) = spatial.unwrap();

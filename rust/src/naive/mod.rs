@@ -31,7 +31,7 @@
 //!
 //! Since PR 4 the engines execute a *general* layer graph: strided
 //! and VALID convs (explicit [`crate::bitops::ConvGeom`] threaded
-//! through the whole packed pipeline), validated 2×2 max-pools,
+//! through the whole packed pipeline), general kside/stride max-pools,
 //! global average pooling, and residual blocks (ResNetE two-conv and
 //! Bi-Real single-conv skips with the strided 1×1-avg-pool +
 //! channel-duplication downsample shortcut).  The layer-graph control
@@ -57,13 +57,15 @@ pub use standard::StandardTrainer;
 // perf bench and the memtrack/property tests that diff the fused
 // bit-im2col and the streaming conv backward against them
 pub use standard::{col2im, im2col, transpose};
+// the general max-pool kernels, public for the property tests that
+// diff them against a per-window reference (the serve engine also
+// replays the forward kernel)
+pub use standard::{maxpool_backward_into, maxpool_forward_into, pool_out_dims};
 // forward kernels the serve engine's inference schedule replays
 // (crate::serve mirrors each trainer's forward branch structure
 // exactly, for bit-identical logits)
 pub(crate) use proposed::bn_l1_forward_packed_into;
-pub(crate) use standard::{
-    bn_l2_forward_into, conv_direct_into, im2col_into, maxpool_forward_into, sign_into,
-};
+pub(crate) use standard::{bn_l2_forward_into, conv_direct_into, im2col_into, sign_into};
 
 use anyhow::Result;
 

@@ -79,11 +79,29 @@ pub(crate) trait EngineOps {
     fn matmul_backward(&mut self, dnext: Vec<f32>, wi: usize, layer: &LayerPlan)
         -> Result<Vec<f32>>;
 
-    /// 2×2 max-pool forward; the engine stores its own mask format
-    /// (pushed in layer order — the backward pops in reverse).
-    fn pool_forward(&mut self, cur: Vec<f32>, h: usize, w: usize, c: usize, retain: bool)
-        -> Vec<f32>;
-    fn pool_backward(&mut self, dnext: Vec<f32>, h: usize, w: usize, c: usize) -> Vec<f32>;
+    /// `kside`×`kside` stride-`stride` max-pool forward; the engine
+    /// stores its own mask format (pushed in layer order — the
+    /// backward pops in reverse).
+    #[allow(clippy::too_many_arguments)]
+    fn pool_forward(
+        &mut self,
+        cur: Vec<f32>,
+        h: usize,
+        w: usize,
+        c: usize,
+        kside: usize,
+        stride: usize,
+        retain: bool,
+    ) -> Vec<f32>;
+    fn pool_backward(
+        &mut self,
+        dnext: Vec<f32>,
+        h: usize,
+        w: usize,
+        c: usize,
+        kside: usize,
+        stride: usize,
+    ) -> Vec<f32>;
 
     /// Drain this chunk's retained state back into the arena (called
     /// after each chunk's backward; single-chunk engines that keep
@@ -110,8 +128,8 @@ pub(crate) fn forward_plan<E: EngineOps>(
             OpInstr::Matmul { wi, layer } => {
                 cur = e.matmul_forward(cur, *wi, layer, retain)?;
             }
-            OpInstr::MaxPool { h, w, c } => {
-                cur = e.pool_forward(cur, *h, *w, *c, retain);
+            OpInstr::MaxPool { h, w, c, kside, stride } => {
+                cur = e.pool_forward(cur, *h, *w, *c, *kside, *stride, retain);
             }
             OpInstr::GlobalPool { h, w, c } => {
                 let ctx = e.ctx();
@@ -162,9 +180,9 @@ pub(crate) fn backward_plan<E: EngineOps>(
                 let dx = e.matmul_backward(d, *wi, layer)?;
                 dcur = e.grad_from_f32(dx);
             }
-            OpInstr::MaxPool { h, w, c } => {
+            OpInstr::MaxPool { h, w, c, kside, stride } => {
                 let d = e.grad_to_f32(dcur);
-                let dx = e.pool_backward(d, *h, *w, *c);
+                let dx = e.pool_backward(d, *h, *w, *c, *kside, *stride);
                 dcur = e.grad_from_f32(dx);
             }
             OpInstr::GlobalPool { h, w, c } => {

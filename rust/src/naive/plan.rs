@@ -42,16 +42,21 @@ pub enum LayerPlan {
         cout: usize,
         first: bool,
     },
-    /// 2×2 stride-2 max-pool with *validated* geometry: odd input
-    /// dims are rejected at plan build (the old silent `(h/2, w/2)`
-    /// floor dropped the last row/column), and the output dims are
-    /// stored explicitly.
+    /// `kside`×`kside` stride-`stride` max-pool with *validated*
+    /// geometry: inputs whose last rows/columns the floor formula
+    /// would silently drop are rejected at plan build
+    /// (`(dim − kside) % stride` must be 0 — for the classic 2×2
+    /// stride-2 pool that is the old even-dims rule; a 3×3 stride-2
+    /// pool covers odd inputs), and the output dims are stored
+    /// explicitly.
     MaxPool {
         h: usize,
         w: usize,
         c: usize,
         oh: usize,
         ow: usize,
+        kside: usize,
+        stride: usize,
     },
     /// Global average pool: `h × w × c` → `c` per sample.
     GlobalPool {
@@ -242,14 +247,30 @@ impl Plan {
                     let ng = node
                         .geom
                         .ok_or_else(|| anyhow::anyhow!("pool node without geometry"))?;
-                    if ng.h % 2 != 0 || ng.w % 2 != 0 {
+                    let (kside, stride) = (ng.kside, ng.stride);
+                    if kside == 0 || stride == 0 || kside > ng.h || kside > ng.w {
                         bail!(
-                            "2x2 stride-2 max-pool input {}x{} in '{}' has odd dims: \
-                             the pool would silently drop the last row/column",
+                            "{kside}x{kside} stride-{stride} max-pool does not fit the \
+                             {}x{} map in '{}'",
                             ng.h,
                             ng.w,
                             graph.name
                         );
+                    }
+                    if (ng.h - kside) % stride != 0 || (ng.w - kside) % stride != 0 {
+                        bail!(
+                            "{kside}x{kside} stride-{stride} max-pool input {}x{} in '{}' \
+                             has uncovered dims: the floor output would silently drop \
+                             the last rows/columns ((dim - kside) % stride must be 0)",
+                            ng.h,
+                            ng.w,
+                            graph.name
+                        );
+                    }
+                    if (ng.oh, ng.ow)
+                        != ((ng.h - kside) / stride + 1, (ng.w - kside) / stride + 1)
+                    {
+                        bail!("max-pool geometry mismatch in '{}'", graph.name);
                     }
                     layers.push(LayerPlan::MaxPool {
                         h: ng.h,
@@ -257,6 +278,8 @@ impl Plan {
                         c: ng.c_in,
                         oh: ng.oh,
                         ow: ng.ow,
+                        kside,
+                        stride,
                     });
                 }
                 LayerKind::GlobalPool => {
@@ -312,7 +335,7 @@ mod tests {
             ref other => panic!("{other:?}"),
         }
         match p.layers[2] {
-            LayerPlan::MaxPool { h: 16, w: 16, c: 16, oh: 8, ow: 8 } => {}
+            LayerPlan::MaxPool { h: 16, w: 16, c: 16, oh: 8, ow: 8, kside: 2, stride: 2 } => {}
             ref other => panic!("{other:?}"),
         }
     }
@@ -494,8 +517,9 @@ mod tests {
     }
 
     #[test]
-    fn odd_pool_input_rejected_at_plan_build() {
-        // 5x5 input into a 2x2 pool would silently drop a row/column
+    fn uncovered_pool_input_rejected_at_plan_build() {
+        // 5x5 input into a 2x2 stride-2 pool would silently drop a
+        // row/column ((5-2) % 2 != 0)
         let spec = ModelSpec {
             name: "odd_pool".into(),
             input_shape: vec![5, 5, 3],
@@ -509,7 +533,7 @@ mod tests {
         };
         let g = lower(&spec).unwrap();
         let err = Plan::from_graph(&g).unwrap_err().to_string();
-        assert!(err.contains("odd dims"), "{err}");
+        assert!(err.contains("uncovered dims"), "{err}");
         // even dims still build
         let spec = ModelSpec {
             name: "even_pool".into(),
@@ -523,6 +547,40 @@ mod tests {
             ],
         };
         assert!(Plan::from_graph(&lower(&spec).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn general_pool_geometry_validated_at_plan_build() {
+        let with_pool = |hw: usize, kside: usize, stride: usize| ModelSpec {
+            name: format!("pool_{hw}_{kside}_{stride}"),
+            input_shape: vec![hw, hw, 3],
+            classes: 10,
+            layers: vec![
+                LayerSpec::conv(4, 3).as_first(),
+                LayerSpec::maxpool_k(kside, stride),
+                LayerSpec::flatten(),
+                LayerSpec::dense(10),
+            ],
+        };
+        // a 3x3 stride-2 pool covers odd inputs the 2x2 pool rejects
+        let p = Plan::from_graph(&lower(&with_pool(7, 3, 2)).unwrap()).unwrap();
+        match p.layers[1] {
+            LayerPlan::MaxPool { h: 7, w: 7, c: 4, oh: 3, ow: 3, kside: 3, stride: 2 } => {}
+            ref other => panic!("{other:?}"),
+        }
+        // overlapping 3x3 stride-1 builds too (out = in - 2)
+        let p = Plan::from_graph(&lower(&with_pool(6, 3, 1)).unwrap()).unwrap();
+        assert!(matches!(
+            p.layers[1],
+            LayerPlan::MaxPool { h: 6, oh: 4, kside: 3, stride: 1, .. }
+        ));
+        // 3x3 stride-2 on an even map drops the last row/column
+        let err = Plan::from_graph(&lower(&with_pool(8, 3, 2)).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("uncovered dims"), "{err}");
+        // kernel larger than the map is rejected at lowering
+        assert!(lower(&with_pool(4, 6, 1)).is_err());
     }
 
     #[test]

@@ -37,10 +37,13 @@ use super::arena::StepCtx;
 use super::ops::{self, EngineOps};
 use super::plan::{LayerPlan, Plan};
 use super::schedule::{self, StepSchedule};
-use super::standard::{col2im_into, conv_direct_into, im2col_into, sign_into, transpose};
+use super::standard::{col2im_into, conv_direct_into, sign_into, transpose};
 use super::{glorot_init, Accel, StepEngine};
+use crate::bitops::im2col::{
+    conv_dw_first_streaming_into, conv_fwd_first_streaming_into, im2col_at,
+};
 use crate::bitops::{
-    conv_dx_streaming_into, im2col_packed_into, simd, BitMask, BitMatrix, ConvGeom,
+    conv_dx_streaming_into, im2col_packed_into, simd, BPanels, BitMask, BitMatrix, ConvGeom,
     PackedWeightCache,
 };
 use crate::models::Graph;
@@ -86,6 +89,9 @@ pub struct ProposedTrainer {
     opt_b: Vec<OptState>,
     res: Vec<Residuals>,
     pool_masks: Vec<BitMask>,
+    /// u32 winner-index masks for general (non-2×2) retained pools,
+    /// where the packed 1-bit was-max encoding is ambiguous.
+    pool_masks_u32: Vec<Vec<u32>>,
     /// f32 ∂W accumulators, allocated only when chunks > 1 (see the
     /// module docs); empty single-chunk.
     dw_acc: Vec<Vec<f32>>,
@@ -178,6 +184,7 @@ impl ProposedTrainer {
             opt_b,
             res: Vec::new(),
             pool_masks: Vec::new(),
+            pool_masks_u32: Vec::new(),
             dw_acc,
             dbeta_acc,
             wcache,
@@ -224,6 +231,25 @@ impl ProposedTrainer {
         })
     }
 
+    /// [`Self::packed_wt`] plus the layer's cached interleaved B
+    /// panels when the width rule packs them (wide-N forward
+    /// dispatch; see `PackedWeightCache::wt_with_panels`).
+    fn packed_wt_with_panels(
+        &mut self,
+        wi: usize,
+        k: usize,
+        n: usize,
+    ) -> (&BitMatrix, Option<&BPanels>) {
+        let weights = &self.weights;
+        self.wcache.wt_with_panels(wi, |dst| match &weights[wi] {
+            Store::F16(v) => BitMatrix::pack_f16_t_into(&v.0, k, n, dst),
+            Store::F32(v) => {
+                let wt = transpose(v, k, n);
+                BitMatrix::pack_into(n, k, &wt, dst);
+            }
+        })
+    }
+
     /// Drain residuals + pool masks back to the arena.
     fn drain_res(&mut self) {
         for r in self.res.drain(..) {
@@ -247,6 +273,9 @@ impl ProposedTrainer {
         }
         for m in self.pool_masks.drain(..) {
             self.ctx.arena.put_mask(m);
+        }
+        for m in self.pool_masks_u32.drain(..) {
+            self.ctx.arena.put_u32(m);
         }
     }
 
@@ -341,12 +370,15 @@ impl ProposedTrainer {
                         out
                     }
                     _ => {
-                        // im2col (transient arena buffer) + GEMM
-                        let mut cols = self.ctx.arena.take_zeroed_f32(rows * k);
-                        im2col_into(&cur, b, g, &mut cols);
+                        // tap-streamed f32 im2col: one rows×cin
+                        // panel, never the rows×k cols buffer —
+                        // bit-identical to the unfused GEMM
                         let mut out = self.ctx.arena.take_f32(rows * n);
-                        backend.gemm_f32(rows, k, n, &cols, &w, &mut out);
-                        self.ctx.arena.put_f32(cols);
+                        let mut panel = self.ctx.arena.take_f32(rows * g.cin);
+                        conv_fwd_first_streaming_into(
+                            &cur, &w, b, g, n, backend, &mut out, &mut panel,
+                        );
+                        self.ctx.arena.put_f32(panel);
                         out
                     }
                 },
@@ -378,8 +410,8 @@ impl ProposedTrainer {
             let mut out = self.ctx.arena.take_f32(rows * n);
             {
                 let backend = self.accel.backend();
-                let wpt = self.packed_wt(wi, k, n);
-                backend.xnor_gemm(&xhat, wpt, &mut out);
+                let (wpt, bp) = self.packed_wt_with_panels(wi, k, n);
+                backend.xnor_gemm_packed(&xhat, wpt, bp, &mut out);
             }
             y = out;
             if retain {
@@ -552,20 +584,11 @@ impl ProposedTrainer {
         rows: usize,
         k: usize,
         n: usize,
-        first: bool,
+        _first: bool,
         conv: Option<ConvGeom>,
     ) {
         let b = self.micro;
         let single = self.chunks() == 1;
-        // first-layer conv inputs need a transient f32 im2col
-        let first_cols: Option<Vec<f32>> = match (first, conv) {
-            (true, Some(g)) => {
-                let mut cols = self.ctx.arena.take_zeroed_f32(rows * k);
-                im2col_into(self.res[wi].x_first.as_ref().unwrap(), b, g, &mut cols);
-                Some(cols)
-            }
-            _ => None,
-        };
         match self.accel {
             Accel::Blocked | Accel::Tiled(_) => {
                 // k×n f32 accumulator (transient single-chunk, the
@@ -587,13 +610,24 @@ impl ProposedTrainer {
                     let dst = if single { &mut dw } else { &mut scratch };
                     match &self.res[wi].xhat {
                         Some(xh) => backend.packed_at_gemm_f32(xh, dy, n, dst),
-                        None => {
-                            let xf: &[f32] = match &first_cols {
-                                Some(c) => c,
-                                None => self.res[wi].x_first.as_ref().unwrap(),
-                            };
-                            backend.gemm_f32_at(rows, k, n, xf, dy, dst);
-                        }
+                        None => match conv {
+                            Some(g) => {
+                                // tap-streamed first-conv ∂W: one
+                                // rows×cin panel instead of the
+                                // rows×k f32 im2col (bit-identical
+                                // to the unfused AᵀB)
+                                let x = self.res[wi].x_first.as_ref().unwrap();
+                                let mut panel = self.ctx.arena.take_f32(rows * g.cin);
+                                conv_dw_first_streaming_into(
+                                    x, dy, b, g, n, backend, dst, &mut panel,
+                                );
+                                self.ctx.arena.put_f32(panel);
+                            }
+                            None => {
+                                let x = self.res[wi].x_first.as_ref().unwrap();
+                                backend.gemm_f32_at(rows, k, n, x, dy, dst);
+                            }
+                        },
                     }
                 }
                 if single {
@@ -622,10 +656,16 @@ impl ProposedTrainer {
                     for r in 0..rows {
                         let xv = match &self.res[wi].xhat {
                             Some(xh) => xh.get(r, kk),
-                            None => match &first_cols {
-                                Some(c) => c[r * k + kk],
-                                None => self.res[wi].x_first.as_ref().unwrap()[r * k + kk],
-                            },
+                            None => {
+                                let x = self.res[wi].x_first.as_ref().unwrap();
+                                match conv {
+                                    // patch element straight off the
+                                    // geometry — the rows×k cols
+                                    // buffer never exists
+                                    Some(g) => im2col_at(x, &g, r, kk),
+                                    None => x[r * k + kk],
+                                }
+                            }
                         };
                         if xv == 0.0 {
                             continue;
@@ -655,9 +695,6 @@ impl ProposedTrainer {
                     self.res[wi].dw_sign = Some(bm);
                 }
             }
-        }
-        if let Some(cols) = first_cols {
-            self.ctx.arena.put_f32(cols);
         }
     }
 }
@@ -787,59 +824,90 @@ impl EngineOps for ProposedTrainer {
         h: usize,
         w: usize,
         c: usize,
+        kside: usize,
+        stride: usize,
         retain: bool,
     ) -> Vec<f32> {
         let b = self.micro;
-        let cells = b * (h / 2) * (w / 2) * c;
+        let (oh, ow) = super::standard::pool_out_dims(h, w, kside, stride);
+        let cells = b * oh * ow * c;
         let mut out = self.ctx.arena.take_f32(cells);
         let mut mask = self.ctx.arena.take_u32(cells);
-        super::standard::maxpool_forward_into(&cur, b, h, w, c, &mut out, &mut mask);
+        super::standard::maxpool_forward_into(
+            &cur, b, h, w, c, kside, stride, &mut out, &mut mask,
+        );
         self.ctx.arena.put_f32(cur);
         if retain {
-            // pack: 1 bit per input element (was-max)
-            let mut bits = self.ctx.arena.take_mask(b * h * w * c);
-            const OFF: [(usize, usize); 4] = [(0, 0), (0, 1), (1, 0), (1, 1)];
-            for bi in 0..b {
-                for oy in 0..h / 2 {
-                    for ox in 0..w / 2 {
-                        for ch in 0..c {
-                            let o = ((bi * (h / 2) + oy) * (w / 2) + ox) * c + ch;
-                            let (dy, dx) = OFF[mask[o] as usize];
-                            bits.set(((bi * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ch);
+            if (kside, stride) == (2, 2) {
+                // pack: 1 bit per input element (was-max); unambiguous
+                // because non-overlapping 2×2 windows partition the
+                // input, so each bit maps to exactly one window
+                let mut bits = self.ctx.arena.take_mask(b * h * w * c);
+                const OFF: [(usize, usize); 4] = [(0, 0), (0, 1), (1, 0), (1, 1)];
+                for bi in 0..b {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            for ch in 0..c {
+                                let o = ((bi * oh + oy) * ow + ox) * c + ch;
+                                let (dy, dx) = OFF[mask[o] as usize];
+                                bits.set(((bi * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ch);
+                            }
                         }
                     }
                 }
+                self.pool_masks.push(bits);
+                self.ctx.arena.put_u32(mask);
+            } else {
+                // general pools keep the u32 winner index: a 1-bit
+                // was-max mask is ambiguous once windows overlap
+                self.pool_masks_u32.push(mask);
             }
-            self.pool_masks.push(bits);
+        } else {
+            self.ctx.arena.put_u32(mask);
         }
-        self.ctx.arena.put_u32(mask);
         out
     }
 
-    fn pool_backward(&mut self, dnext: Vec<f32>, h: usize, w: usize, c: usize) -> Vec<f32> {
+    fn pool_backward(
+        &mut self,
+        dnext: Vec<f32>,
+        h: usize,
+        w: usize,
+        c: usize,
+        kside: usize,
+        stride: usize,
+    ) -> Vec<f32> {
         let b = self.micro;
-        let mask = self.pool_masks.pop().expect("pool mask stack underflow");
         let mut dx = self.ctx.arena.take_zeroed_f32(b * h * w * c);
-        let (oh, ow) = (h / 2, w / 2);
-        // route each pooled grad to its masked input cell
-        let mut oidx = 0usize;
-        for bi in 0..b {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    for ch in 0..c {
-                        let g = dnext[oidx];
-                        oidx += 1;
-                        for (dy, dxo) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
-                            let ii = ((bi * h + oy * 2 + dy) * w + ox * 2 + dxo) * c + ch;
-                            if mask.get(ii) {
-                                dx[ii] = g;
+        if (kside, stride) == (2, 2) {
+            let mask = self.pool_masks.pop().expect("pool mask stack underflow");
+            let (oh, ow) = (h / 2, w / 2);
+            // route each pooled grad to its masked input cell
+            let mut oidx = 0usize;
+            for bi in 0..b {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        for ch in 0..c {
+                            let g = dnext[oidx];
+                            oidx += 1;
+                            for (dy, dxo) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                                let ii = ((bi * h + oy * 2 + dy) * w + ox * 2 + dxo) * c + ch;
+                                if mask.get(ii) {
+                                    dx[ii] = g;
+                                }
                             }
                         }
                     }
                 }
             }
+            self.ctx.arena.put_mask(mask);
+        } else {
+            let mask = self.pool_masks_u32.pop().expect("pool mask stack underflow");
+            super::standard::maxpool_backward_into(
+                &dnext, &mask, b, h, w, c, kside, stride, &mut dx,
+            );
+            self.ctx.arena.put_u32(mask);
         }
-        self.ctx.arena.put_mask(mask);
         self.ctx.arena.put_f32(dnext);
         dx
     }
@@ -1399,6 +1467,7 @@ mod tests {
             b.eval(&xe, &ye).unwrap();
             assert!(b.res.is_empty(), "{model}: eval left residuals behind");
             assert!(b.pool_masks.is_empty(), "{model}: eval left pool masks behind");
+            assert!(b.pool_masks_u32.is_empty(), "{model}: eval left u32 pool masks behind");
             let (la, _) = a.train_step(&x, &y, 0.01).unwrap();
             let (lb, _) = b.train_step(&x, &y, 0.01).unwrap();
             assert_eq!(la, lb, "{model}: eval perturbed the training trajectory");

@@ -148,7 +148,7 @@ pub enum BufEvent {
 #[derive(Clone, Debug, PartialEq)]
 pub enum OpInstr {
     Matmul { wi: usize, layer: LayerPlan },
-    MaxPool { h: usize, w: usize, c: usize },
+    MaxPool { h: usize, w: usize, c: usize, kside: usize, stride: usize },
     GlobalPool { h: usize, w: usize, c: usize },
     SkipSave,
     SkipClose { skip: SkipGeom },
@@ -298,9 +298,13 @@ pub fn lower_ops(plan: &Plan) -> (Vec<OpInstr>, Vec<OpInstr>) {
                 fwd.push(OpInstr::Matmul { wi, layer: layer.clone() });
                 wi += 1;
             }
-            LayerPlan::MaxPool { h, w, c, .. } => {
-                fwd.push(OpInstr::MaxPool { h: *h, w: *w, c: *c })
-            }
+            LayerPlan::MaxPool { h, w, c, kside, stride, .. } => fwd.push(OpInstr::MaxPool {
+                h: *h,
+                w: *w,
+                c: *c,
+                kside: *kside,
+                stride: *stride,
+            }),
             LayerPlan::GlobalPool { h, w, c } => {
                 fwd.push(OpInstr::GlobalPool { h: *h, w: *w, c: *c })
             }
@@ -505,8 +509,8 @@ impl SymEngine {
                     };
                     let _ = wi;
                 }
-                OpInstr::MaxPool { h, w, c } => {
-                    cur = self.pool_fwd(cur, *h, *w, *c, retain);
+                OpInstr::MaxPool { h, w, c, kside, stride } => {
+                    cur = self.pool_fwd(cur, *h, *w, *c, *kside, *stride, retain);
                 }
                 OpInstr::GlobalPool { c, .. } => {
                     let out = self.sym.f32(m * c);
@@ -540,9 +544,9 @@ impl SymEngine {
                     };
                     dcur = self.grad_from_f32(dx);
                 }
-                OpInstr::MaxPool { h, w, c } => {
+                OpInstr::MaxPool { h, w, c, kside, stride } => {
                     let d = self.grad_to_f32(dcur);
-                    let dx = self.pool_bwd(d, *h, *w, *c);
+                    let dx = self.pool_bwd(d, *h, *w, *c, *kside, *stride);
                     dcur = self.grad_from_f32(dx);
                 }
                 OpInstr::GlobalPool { h, w, c } => {
@@ -599,43 +603,60 @@ impl SymEngine {
     // ---- max-pool (identical event shapes across engines; only the
     // retained mask representation differs)
 
-    fn pool_fwd(&mut self, cur: SBuf, h: usize, w: usize, c: usize, retain: bool) -> SBuf {
+    fn pool_fwd(
+        &mut self,
+        cur: SBuf,
+        h: usize,
+        w: usize,
+        c: usize,
+        kside: usize,
+        stride: usize,
+        retain: bool,
+    ) -> SBuf {
         let b = self.micro;
-        let cells = b * (h / 2) * (w / 2) * c;
+        let (oh, ow) = ((h - kside) / stride + 1, (w - kside) / stride + 1);
+        let cells = b * oh * ow * c;
         let out = self.sym.f32(cells);
         let mask = self.sym.u32(cells);
         self.sym.put(cur);
         match self.mode {
             Mode::Std if retain => self.pool_masks_u32.push(mask),
-            Mode::Prop if retain => {
+            // the proposed engine's 1-bit was-max mask is only
+            // unambiguous for non-overlapping 2×2 stride-2 windows;
+            // general pools retain the u32 winner index instead
+            Mode::Prop if retain && (kside, stride) == (2, 2) => {
                 let bits = self.sym.mask(b * h * w * c);
                 self.pool_masks_bits.push(bits);
                 self.sym.put(mask);
             }
+            Mode::Prop if retain => self.pool_masks_u32.push(mask),
             _ => self.sym.put(mask),
         }
         out
     }
 
-    fn pool_bwd(&mut self, dnext: SBuf, h: usize, w: usize, c: usize) -> SBuf {
+    fn pool_bwd(
+        &mut self,
+        dnext: SBuf,
+        h: usize,
+        w: usize,
+        c: usize,
+        kside: usize,
+        stride: usize,
+    ) -> SBuf {
         let b = self.micro;
-        match self.mode {
-            Mode::Std => {
-                let mask = self.pool_masks_u32.pop().expect("pool mask underflow");
-                let dx = self.sym.zeroed_f32(b * h * w * c);
-                self.sym.put(mask);
-                self.sym.put(dnext);
-                dx
+        let mask = match self.mode {
+            Mode::Std => self.pool_masks_u32.pop().expect("pool mask underflow"),
+            Mode::Prop if (kside, stride) == (2, 2) => {
+                self.pool_masks_bits.pop().expect("pool mask underflow")
             }
-            Mode::Prop => {
-                let mask = self.pool_masks_bits.pop().expect("pool mask underflow");
-                let dx = self.sym.zeroed_f32(b * h * w * c);
-                self.sym.put(mask);
-                self.sym.put(dnext);
-                dx
-            }
+            Mode::Prop => self.pool_masks_u32.pop().expect("pool mask underflow"),
             _ => unreachable!(),
-        }
+        };
+        let dx = self.sym.zeroed_f32(b * h * w * c);
+        self.sym.put(mask);
+        self.sym.put(dnext);
+        dx
     }
 
     // ---- standard engine (trainer forward doubles as the serving
@@ -672,9 +693,11 @@ impl SymEngine {
                             self.sym.put(a);
                         }
                     } else {
+                        // fused first conv: rows×cin tap panel, no
+                        // rows×k cols
                         y = self.sym.f32(rows * cout);
-                        let cols = self.sym.zeroed_f32(rows * g.k());
-                        self.sym.put(cols);
+                        let panel = self.sym.f32(rows * g.cin);
+                        self.sym.put(panel);
                     }
                     self.sym.put(bw);
                 } else {
@@ -791,12 +814,15 @@ impl SymEngine {
             let scratch = self.sym.f32(g.kside * g.kside * cout);
             self.sym.put(scratch);
             self.sym.put(xh);
+        } else if first {
+            // fused first-layer ∂W: one rows×cin tap panel on every
+            // tier, no rows×k cols
+            let panel = self.sym.f32(rows * g.cin);
+            self.sym.put(panel);
         } else {
             let cols = self.sym.zeroed_f32(rows * k);
-            if !first {
-                let xs = self.sym.f32(g.in_len(b));
-                self.sym.put(xs);
-            }
+            let xs = self.sym.f32(g.in_len(b));
+            self.sym.put(xs);
             self.sym.put(cols);
         }
     }
@@ -826,10 +852,12 @@ impl SymEngine {
             out = match conv {
                 None => self.sym.f32(rows * n),
                 Some(_) if self.naive => self.sym.zeroed_f32(rows * n),
-                Some(_) => {
-                    let cols = self.sym.zeroed_f32(rows * k);
+                Some(g) => {
+                    // fused first conv: rows×cin tap panel, no
+                    // rows×k cols
                     let o = self.sym.f32(rows * n);
-                    self.sym.put(cols);
+                    let panel = self.sym.f32(rows * g.cin);
+                    self.sym.put(panel);
                     o
                 }
             };
@@ -931,16 +959,29 @@ impl SymEngine {
         first: bool,
         conv: Option<ConvGeom>,
     ) {
-        let first_cols =
-            if first && conv.is_some() { Some(self.sym.zeroed_f32(rows * k)) } else { None };
+        // first-conv ∂W streams tap panels (rows×cin) on the
+        // accelerated tiers and reads patch elements in place on the
+        // naive tier — the rows×k f32 im2col no longer exists
+        let first_conv_cin = match (first, conv) {
+            (true, Some(g)) => Some(g.cin),
+            _ => None,
+        };
         if !self.naive {
             if self.single {
                 let dw = self.sym.f32(k * n);
+                if let Some(cin) = first_conv_cin {
+                    let panel = self.sym.f32(rows * cin);
+                    self.sym.put(panel);
+                }
                 let bits = self.sym.bits(k, n);
                 self.res[wi].dw_sign = Some(bits);
                 self.sym.put(dw);
             } else {
                 let scratch = self.sym.f32(k * n);
+                if let Some(cin) = first_conv_cin {
+                    let panel = self.sym.f32(rows * cin);
+                    self.sym.put(panel);
+                }
                 self.sym.put(scratch);
             }
         } else {
@@ -950,9 +991,6 @@ impl SymEngine {
             if let Some(bits) = bits {
                 self.res[wi].dw_sign = Some(bits);
             }
-        }
-        if let Some(cols) = first_cols {
-            self.sym.put(cols);
         }
     }
 
@@ -965,6 +1003,10 @@ impl SymEngine {
             }
         }
         for m in std::mem::take(&mut self.pool_masks_bits) {
+            self.sym.put(m);
+        }
+        // general (non-2×2) pools retain u32 winner masks instead
+        for m in std::mem::take(&mut self.pool_masks_u32) {
             self.sym.put(m);
         }
     }
@@ -980,10 +1022,11 @@ impl SymEngine {
             out = match conv {
                 None => self.sym.f32(rows * n),
                 Some(_) if self.naive => self.sym.zeroed_f32(rows * n),
-                Some(_) => {
-                    let cols = self.sym.zeroed_f32(rows * k);
+                Some(g) => {
+                    // fused first conv (mirrors the trainer arm)
                     let o = self.sym.f32(rows * n);
-                    self.sym.put(cols);
+                    let panel = self.sym.f32(rows * g.cin);
+                    self.sym.put(panel);
                     o
                 }
             };
@@ -1343,11 +1386,16 @@ fn op_to_json(op: &OpInstr) -> Json {
                 .set("wi", Json::from(*wi))
                 .set("layer", layer_to_json(layer));
         }
-        OpInstr::MaxPool { h, w, c } => {
+        OpInstr::MaxPool { h, w, c, kside, stride } => {
             j.set("op", Json::from("maxpool"))
                 .set("h", Json::from(*h))
                 .set("w", Json::from(*w))
                 .set("c", Json::from(*c));
+            // emitted only for non-default geometry so committed 2×2
+            // stride-2 schedule dumps stay byte-identical
+            if (*kside, *stride) != (2, 2) {
+                j.set("kside", Json::from(*kside)).set("stride", Json::from(*stride));
+            }
         }
         OpInstr::GlobalPool { h, w, c } => {
             j.set("op", Json::from("gpool"))
@@ -1382,6 +1430,8 @@ fn op_from_json(j: &Json) -> Result<OpInstr> {
             h: j.req("h")?.as_usize()?,
             w: j.req("w")?.as_usize()?,
             c: j.req("c")?.as_usize()?,
+            kside: j.get("kside").map(Json::as_usize).transpose()?.unwrap_or(2),
+            stride: j.get("stride").map(Json::as_usize).transpose()?.unwrap_or(2),
         },
         "gpool" => OpInstr::GlobalPool {
             h: j.req("h")?.as_usize()?,

@@ -32,6 +32,7 @@ use super::ops::{self, EngineOps};
 use super::plan::{LayerPlan, Plan};
 use super::schedule::{self, StepSchedule};
 use super::{glorot_init, Accel, StepEngine};
+use crate::bitops::im2col::{conv_dw_first_streaming_into, conv_fwd_first_streaming_into};
 use crate::bitops::{
     conv_dx_streaming_into, im2col_packed_into, simd, subtract_pad_contrib_with,
     subtract_pad_dw_contrib_with, BitMatrix, ConvGeom, PackedWeightCache,
@@ -308,11 +309,12 @@ impl EngineOps for StandardTrainer {
                     // and the result is the exact ±1 dot product
                     let mut xhat = self.ctx.arena.take_bits(b, k);
                     BitMatrix::pack_into(b, k, &cur, &mut xhat);
+                    let backend = self.accel.backend();
                     let weights = &self.weights;
-                    let wt = self.wcache.wt_via_transpose(wi, |dst| {
+                    let (wt, bp) = self.wcache.wt_via_transpose_with_panels(wi, |dst| {
                         BitMatrix::pack_into(k, n, weights[wi].as_f32().unwrap(), dst)
                     });
-                    self.accel.backend().xnor_gemm(&xhat, wt, &mut y);
+                    backend.xnor_gemm_packed(&xhat, wt, bp, &mut y);
                     self.ctx.arena.put_bits(xhat);
                 }
                 (y, b, n)
@@ -336,13 +338,16 @@ impl EngineOps for StandardTrainer {
                         }
                     } else {
                         // real-input first layer on the accelerated
-                        // tiers: f32 im2col (transient, arena-pooled)
-                        // + GEMM
+                        // tiers: tap-streamed f32 im2col — one
+                        // rows×cin panel instead of the rows×k cols
+                        // buffer, bit-identical to the unfused GEMM
                         y = self.ctx.arena.take_f32(rows * cout);
-                        let mut cols = self.ctx.arena.take_zeroed_f32(rows * g.k());
-                        im2col_into(&cur, b, g, &mut cols);
-                        self.gemm(rows, g.k(), cout, &cols, &bw, &mut y);
-                        self.ctx.arena.put_f32(cols);
+                        let mut panel = self.ctx.arena.take_f32(rows * g.cin);
+                        let backend = self.accel.backend();
+                        conv_fwd_first_streaming_into(
+                            &cur, &bw, b, g, cout, backend, &mut y, &mut panel,
+                        );
+                        self.ctx.arena.put_f32(panel);
                     }
                     self.ctx.arena.put_f32(bw);
                 } else {
@@ -356,10 +361,10 @@ impl EngineOps for StandardTrainer {
                     let mut xhat = self.ctx.arena.take_bits(rows, g.k());
                     im2col_packed_into(&cur, b, g, &backend.pool(), &mut xhat);
                     let weights = &self.weights;
-                    let wt = self.wcache.wt_via_transpose(wi, |dst| {
+                    let (wt, bp) = self.wcache.wt_via_transpose_with_panels(wi, |dst| {
                         BitMatrix::pack_into(g.k(), cout, weights[wi].as_f32().unwrap(), dst)
                     });
-                    backend.xnor_gemm(&xhat, wt, &mut y);
+                    backend.xnor_gemm_packed(&xhat, wt, bp, &mut y);
                     let mut scratch = self.ctx.arena.take_f32(g.kside * g.kside * cout);
                     subtract_pad_contrib_with(&mut y, wt, b, g, &mut scratch);
                     self.ctx.arena.put_f32(scratch);
@@ -566,13 +571,16 @@ impl EngineOps for StandardTrainer {
         h: usize,
         w: usize,
         c: usize,
+        kside: usize,
+        stride: usize,
         retain: bool,
     ) -> Vec<f32> {
         let b = self.micro;
-        let cells = b * (h / 2) * (w / 2) * c;
+        let (oh, ow) = pool_out_dims(h, w, kside, stride);
+        let cells = b * oh * ow * c;
         let mut out = self.ctx.arena.take_f32(cells);
         let mut mask = self.ctx.arena.take_u32(cells);
-        maxpool_forward_into(&cur, b, h, w, c, &mut out, &mut mask);
+        maxpool_forward_into(&cur, b, h, w, c, kside, stride, &mut out, &mut mask);
         self.ctx.arena.put_f32(cur);
         if retain {
             self.pool_masks.push(mask);
@@ -582,11 +590,19 @@ impl EngineOps for StandardTrainer {
         out
     }
 
-    fn pool_backward(&mut self, dnext: Vec<f32>, h: usize, w: usize, c: usize) -> Vec<f32> {
+    fn pool_backward(
+        &mut self,
+        dnext: Vec<f32>,
+        h: usize,
+        w: usize,
+        c: usize,
+        kside: usize,
+        stride: usize,
+    ) -> Vec<f32> {
         let b = self.micro;
         let mask = self.pool_masks.pop().expect("pool mask stack underflow");
         let mut dx = self.ctx.arena.take_zeroed_f32(b * h * w * c);
-        maxpool_backward_into(&dnext, &mask, b, h, w, c, &mut dx);
+        maxpool_backward_into(&dnext, &mask, b, h, w, c, kside, stride, &mut dx);
         self.ctx.arena.put_u32(mask);
         self.ctx.arena.put_f32(dnext);
         dx
@@ -755,16 +771,20 @@ fn conv_dw_into(
         subtract_pad_dw_contrib_with(dst, dy, b, g, cout, &mut scratch);
         arena.put_f32(scratch);
         arena.put_bits(xh);
+    } else if first {
+        // fused first-layer dW: tap-streamed panels contract straight
+        // into each tap's dW rows — the backward twin of the fused
+        // first-conv forward, no rows×k cols, bit-identical to the
+        // unfused AᵀB on every tier
+        let mut panel = arena.take_f32(rows * g.cin);
+        conv_dw_first_streaming_into(xin, dy, b, g, cout, backend, dst, &mut panel);
+        arena.put_f32(panel);
     } else {
         let mut cols = arena.take_zeroed_f32(rows * k);
-        if first {
-            im2col_into(xin, b, g, &mut cols);
-        } else {
-            let mut xs = arena.take_f32(xin.len());
-            sign_into(xin, &mut xs);
-            im2col_into(&xs, b, g, &mut cols);
-            arena.put_f32(xs);
-        }
+        let mut xs = arena.take_f32(xin.len());
+        sign_into(xin, &mut xs);
+        im2col_into(&xs, b, g, &mut cols);
+        arena.put_f32(xs);
         backend.gemm_f32_at(rows, k, cout, &cols, dy, dst);
         arena.put_f32(cols);
     }
@@ -925,7 +945,13 @@ pub(crate) fn bn_l2_backward_into(
     }
 }
 
-/// 2×2 max pool (NHWC); mask stores the winning cell index (0..4).
+/// Output dims of a `kside`×`kside` stride-`stride` max-pool over an
+/// `h × w` map (VALID floor geometry; plan building guarantees the
+/// floor drops nothing).
+pub fn pool_out_dims(h: usize, w: usize, kside: usize, stride: usize) -> (usize, usize) {
+    ((h - kside) / stride + 1, (w - kside) / stride + 1)
+}
+
 #[cfg(test)]
 pub(crate) fn maxpool_forward(
     x: &[f32],
@@ -933,25 +959,36 @@ pub(crate) fn maxpool_forward(
     h: usize,
     w: usize,
     c: usize,
+    kside: usize,
+    stride: usize,
 ) -> (Vec<f32>, Vec<u32>) {
-    let cells = b * (h / 2) * (w / 2) * c;
+    let (oh, ow) = pool_out_dims(h, w, kside, stride);
+    let cells = b * oh * ow * c;
     let mut out = vec![0.0f32; cells];
     let mut mask = vec![0u32; cells];
-    maxpool_forward_into(x, b, h, w, c, &mut out, &mut mask);
+    maxpool_forward_into(x, b, h, w, c, kside, stride, &mut out, &mut mask);
     (out, mask)
 }
 
-/// [`maxpool_forward`] into caller-owned buffers (every cell written).
-pub(crate) fn maxpool_forward_into(
+/// `kside`×`kside` stride-`stride` max-pool forward (NHWC) into
+/// caller-owned buffers (every cell written).  `mask` records the
+/// winner's in-window index
+/// `ky·kside + kx` — for the classic 2×2 stride-2 pool this is the
+/// historical `[(0,0),(0,1),(1,0),(1,1)]` encoding, bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_forward_into(
     x: &[f32],
     b: usize,
     h: usize,
     w: usize,
     c: usize,
+    kside: usize,
+    stride: usize,
     out: &mut [f32],
     mask: &mut [u32],
 ) {
-    let (oh, ow) = (h / 2, w / 2);
+    let (oh, ow) = pool_out_dims(h, w, kside, stride);
+    debug_assert_eq!(x.len(), b * h * w * c);
     debug_assert_eq!(out.len(), b * oh * ow * c);
     debug_assert_eq!(mask.len(), out.len());
     for bi in 0..b {
@@ -960,13 +997,14 @@ pub(crate) fn maxpool_forward_into(
                 for ch in 0..c {
                     let mut best = f32::NEG_INFINITY;
                     let mut bidx = 0u32;
-                    for (i, (dy, dx)) in
-                        [(0, 0), (0, 1), (1, 0), (1, 1)].iter().enumerate()
-                    {
-                        let v = x[((bi * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ch];
-                        if v > best {
-                            best = v;
-                            bidx = i as u32;
+                    for ky in 0..kside {
+                        for kx in 0..kside {
+                            let v = x
+                                [((bi * h + oy * stride + ky) * w + ox * stride + kx) * c + ch];
+                            if v > best {
+                                best = v;
+                                bidx = (ky * kside + kx) as u32;
+                            }
                         }
                     }
                     let o = ((bi * oh + oy) * ow + ox) * c + ch;
@@ -986,33 +1024,47 @@ pub(crate) fn maxpool_backward(
     h: usize,
     w: usize,
     c: usize,
+    kside: usize,
+    stride: usize,
 ) -> Vec<f32> {
     let mut dx = vec![0.0f32; b * h * w * c];
-    maxpool_backward_into(dout, mask, b, h, w, c, &mut dx);
+    maxpool_backward_into(dout, mask, b, h, w, c, kside, stride, &mut dx);
     dx
 }
 
-/// [`maxpool_backward`] into a caller-owned buffer, which must be
-/// **zeroed** (only winning cells are written).
-pub(crate) fn maxpool_backward_into(
+/// Max-pool backward (winner routing off the forward mask) into a
+/// caller-owned buffer, which must be
+/// **zeroed** (only winning cells are touched).  Overlapping windows
+/// (stride < kside) accumulate — one input cell can win several
+/// windows; non-overlapping geometry keeps the historical
+/// single-write behaviour bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_backward_into(
     dout: &[f32],
     mask: &[u32],
     b: usize,
     h: usize,
     w: usize,
     c: usize,
+    kside: usize,
+    stride: usize,
     dx: &mut [f32],
 ) {
-    let (oh, ow) = (h / 2, w / 2);
+    let (oh, ow) = pool_out_dims(h, w, kside, stride);
     debug_assert_eq!(dx.len(), b * h * w * c);
-    const OFF: [(usize, usize); 4] = [(0, 0), (0, 1), (1, 0), (1, 1)];
+    let overlap = stride < kside;
     for bi in 0..b {
         for oy in 0..oh {
             for ox in 0..ow {
                 for ch in 0..c {
                     let o = ((bi * oh + oy) * ow + ox) * c + ch;
-                    let (dy, dxo) = OFF[mask[o] as usize];
-                    dx[((bi * h + oy * 2 + dy) * w + ox * 2 + dxo) * c + ch] = dout[o];
+                    let (ky, kx) = ((mask[o] as usize) / kside, (mask[o] as usize) % kside);
+                    let ii = ((bi * h + oy * stride + ky) * w + ox * stride + kx) * c + ch;
+                    if overlap {
+                        dx[ii] += dout[o];
+                    } else {
+                        dx[ii] = dout[o];
+                    }
                 }
             }
         }
@@ -1408,12 +1460,32 @@ mod tests {
             0.0, 2.0, 1.0, 1.0, //
             9.0, 1.0, 0.0, 3.0,
         ];
-        let (out, mask) = maxpool_forward(&x, 1, 4, 4, 1);
+        let (out, mask) = maxpool_forward(&x, 1, 4, 4, 1, 2, 2);
         assert_eq!(out, vec![5.0, 8.0, 9.0, 3.0]);
-        let dx = maxpool_backward(&[1.0, 2.0, 3.0, 4.0], &mask, 1, 4, 4, 1);
+        let dx = maxpool_backward(&[1.0, 2.0, 3.0, 4.0], &mask, 1, 4, 4, 1, 2, 2);
         assert_eq!(dx.iter().filter(|&&v| v != 0.0).count(), 4);
         assert_eq!(dx[1], 1.0); // the 5.0 cell
         assert_eq!(dx[12], 3.0); // the 9.0 cell
+    }
+
+    #[test]
+    fn maxpool_general_geometry() {
+        // 5×5 map, 3×3 stride-2 pool → 2×2 output.
+        let x: Vec<f32> = (0..25).map(|i| ((i * 7) % 13) as f32).collect();
+        let (out, mask) = maxpool_forward(&x, 1, 5, 5, 1, 3, 2);
+        assert_eq!(out.len(), 4);
+        for (o, (oy, ox)) in [(0, 0), (0, 1), (1, 0), (1, 1)].iter().enumerate() {
+            let mut best = f32::NEG_INFINITY;
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    best = best.max(x[(oy * 2 + ky) * 5 + ox * 2 + kx]);
+                }
+            }
+            assert_eq!(out[o], best);
+        }
+        // Overlapping windows accumulate in the backward scatter.
+        let dx = maxpool_backward(&[1.0, 1.0, 1.0, 1.0], &mask, 1, 5, 5, 1, 3, 2);
+        assert_eq!(dx.iter().sum::<f32>(), 4.0);
     }
 
     #[test]

@@ -32,13 +32,14 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use super::snapshot::WeightSnapshot;
+use crate::bitops::im2col::conv_fwd_first_streaming_into;
 use crate::bitops::{im2col_packed_into, subtract_pad_contrib_with, BitMatrix};
 use crate::naive::arena::StepCtx;
 use crate::naive::ops::{self, EngineOps};
 use crate::naive::schedule::{self, StepSchedule};
 use crate::naive::{
-    bn_l1_forward_packed_into, bn_l2_forward_into, conv_direct_into, im2col_into,
-    maxpool_forward_into, sign_into, softmax_xent_grad, Accel, LayerPlan, Plan,
+    bn_l1_forward_packed_into, bn_l2_forward_into, conv_direct_into, maxpool_forward_into,
+    sign_into, softmax_xent_grad, Accel, LayerPlan, Plan,
 };
 use crate::models::Graph;
 
@@ -301,13 +302,21 @@ impl PackedInferEngine {
                             self.ctx.arena.put_f32(a);
                         }
                     } else {
+                        // tap-streamed first conv mirroring the
+                        // trainer's fused arm (bit-identical)
                         y = self.ctx.arena.take_f32(rows * cout);
-                        let mut cols = self.ctx.arena.take_zeroed_f32(rows * g.k());
-                        im2col_into(&cur, b, g, &mut cols);
-                        self.accel
-                            .backend()
-                            .gemm_f32(rows, g.k(), cout, &cols, &bw, &mut y);
-                        self.ctx.arena.put_f32(cols);
+                        let mut panel = self.ctx.arena.take_f32(rows * g.cin);
+                        conv_fwd_first_streaming_into(
+                            &cur,
+                            &bw,
+                            b,
+                            g,
+                            cout,
+                            self.accel.backend(),
+                            &mut y,
+                            &mut panel,
+                        );
+                        self.ctx.arena.put_f32(panel);
                     }
                     self.ctx.arena.put_f32(bw);
                 } else {
@@ -367,11 +376,14 @@ impl PackedInferEngine {
                         out
                     }
                     _ => {
-                        let mut cols = self.ctx.arena.take_zeroed_f32(rows * k);
-                        im2col_into(&cur, b, g, &mut cols);
+                        // tap-streamed first conv mirroring the
+                        // trainer's fused arm (bit-identical)
                         let mut out = self.ctx.arena.take_f32(rows * n);
-                        backend.gemm_f32(rows, k, n, &cols, &w, &mut out);
-                        self.ctx.arena.put_f32(cols);
+                        let mut panel = self.ctx.arena.take_f32(rows * g.cin);
+                        conv_fwd_first_streaming_into(
+                            &cur, &w, b, g, n, backend, &mut out, &mut panel,
+                        );
+                        self.ctx.arena.put_f32(panel);
                         out
                     }
                 },
@@ -475,19 +487,30 @@ impl EngineOps for PackedInferEngine {
         h: usize,
         w: usize,
         c: usize,
+        kside: usize,
+        stride: usize,
         _retain: bool,
     ) -> Vec<f32> {
         let b = self.cur;
-        let cells = b * (h / 2) * (w / 2) * c;
+        let (oh, ow) = crate::naive::pool_out_dims(h, w, kside, stride);
+        let cells = b * oh * ow * c;
         let mut out = self.ctx.arena.take_f32(cells);
         let mut mask = self.ctx.arena.take_u32(cells);
-        maxpool_forward_into(&cur, b, h, w, c, &mut out, &mut mask);
+        maxpool_forward_into(&cur, b, h, w, c, kside, stride, &mut out, &mut mask);
         self.ctx.arena.put_f32(cur);
         self.ctx.arena.put_u32(mask);
         out
     }
 
-    fn pool_backward(&mut self, _dnext: Vec<f32>, _h: usize, _w: usize, _c: usize) -> Vec<f32> {
+    fn pool_backward(
+        &mut self,
+        _dnext: Vec<f32>,
+        _h: usize,
+        _w: usize,
+        _c: usize,
+        _kside: usize,
+        _stride: usize,
+    ) -> Vec<f32> {
         unreachable!("inference engine has no backward")
     }
 

@@ -243,8 +243,10 @@ fn residual_golden_loss_matches_after_apply_model_reconciliation() {
     // python/compile/models.py now implements the Rust semantics
     // (verified against a numpy mirror at 1e-8 — see CHANGES.md), and
     // `make artifacts` (ISSUE-6: aot.py now emits goldens for the
-    // residual standard/adam b64 variants, generation verified on the
-    // jax side) produces the ground truth this test replays.  The
+    // residual standard/adam b64 variants; generation re-verified
+    // under ISSUE-10 on jax 0.4.37 — the full set builds all 85
+    // artifacts including both residual goldens) produces the ground
+    // truth this test replays.  The
     // remaining blocker is executing the replay: `Engine::cpu` needs
     // a PJRT-enabled `xla` binding, and the offline image vendors a
     // stub whose constructors error — hence #[ignore] stays until the

@@ -12,6 +12,7 @@
 //! Single `#[test]`: peak tracking is process-global, so keeping one
 //! test in this binary avoids cross-test allocation noise.
 
+use bnn_edge::bitops::im2col::{conv_dw_first_streaming_into, conv_fwd_first_streaming_into};
 use bnn_edge::bitops::{
     conv_dx_streaming, im2col_packed, packed_at_gemm_f32, subtract_pad_dw_contrib, Backend,
     BitMatrix, ConvGeom, Pool,
@@ -194,4 +195,78 @@ fn fused_conv_pipeline_eliminates_rows_x_k_f32_buffers() {
     let rt = bnn_edge::memmodel::conv_backward_transient(&rg, 4, true);
     assert_eq!(rt.dcols_f32_bytes, 0.0);
     assert!(rt.panel_f32_bytes > 0.0);
+
+    // ---- first (real-input) conv: the last rows×k f32 cols buffer.
+    // Pre-fusion both directions materialized the full f32 im2col of
+    // the real input; the streaming path gathers one rows×Cin tap
+    // panel (k²× smaller) and accumulates per-tap GEMMs.  Measured
+    // twin of `memmodel::first_conv_transient`.
+    let (fb, fgeom, fcout) = (2usize, ConvGeom::same1(16, 16, 3, 3), 32usize);
+    let fk = fgeom.k();
+    let frows = fgeom.rows(fb);
+    let f_cols_bytes = frows * fk * 4;
+    let f_panel_bytes = frows * fgeom.cin * 4;
+    let fx = g.normal_vec(fgeom.in_len(fb));
+    let fw = g.normal_vec(fk * fcout);
+    let fdy = g.normal_vec(frows * fcout);
+
+    // forward: pre-fusion f32 im2col + GEMM vs streaming taps
+    let (y1, pre_f) = measure(|| {
+        let cols = im2col(&fx, fb, fgeom);
+        let mut y = vec![0.0f32; frows * fcout];
+        gemm_f32(frows, fk, fcout, &cols, &fw, &mut y);
+        y
+    });
+    let (y2, post_f) = measure(|| {
+        let mut y = vec![0.0f32; frows * fcout];
+        let mut panel = vec![0.0f32; frows * fgeom.cin];
+        conv_fwd_first_streaming_into(&fx, &fw, fb, fgeom, fcout, Backend::Blocked, &mut y, &mut panel);
+        y
+    });
+    // same ascending-k accumulation order per cell: bit-identical
+    assert_eq!(y1, y2, "streaming first-conv forward must match unfused");
+    let f_out = frows * fcout * 4;
+    assert!(pre_f.growth().saturating_sub(f_out) >= f_cols_bytes);
+    assert!(
+        post_f.growth().saturating_sub(f_out) < f_cols_bytes / 4,
+        "fused first-conv forward transient {} should be far below the f32 cols {}",
+        post_f.growth().saturating_sub(f_out),
+        f_cols_bytes
+    );
+
+    // backward dW: pre-fusion im2col + transpose + GEMM vs streaming
+    let (dwa, pre_w) = measure(|| {
+        let cols = im2col(&fx, fb, fgeom);
+        let colst = transpose(&cols, frows, fk);
+        let mut dw = vec![0.0f32; fk * fcout];
+        gemm_f32(fk, frows, fcout, &colst, &fdy, &mut dw);
+        dw
+    });
+    let (dwb, post_w) = measure(|| {
+        let mut dw = vec![0.0f32; fk * fcout];
+        let mut panel = vec![0.0f32; frows * fgeom.cin];
+        conv_dw_first_streaming_into(&fx, &fdy, fb, fgeom, fcout, Backend::Blocked, &mut dw, &mut panel);
+        dw
+    });
+    assert_eq!(dwa, dwb, "streaming first-conv dW must match unfused");
+    let w_out = fk * fcout * 4;
+    // pre-fusion held cols AND its transpose live at the GEMM
+    assert!(pre_w.growth().saturating_sub(w_out) >= 2 * f_cols_bytes);
+    assert!(
+        post_w.growth().saturating_sub(w_out) < f_cols_bytes / 4,
+        "fused first-conv dW transient {} should be far below the f32 cols {}",
+        post_w.growth().saturating_sub(w_out),
+        f_cols_bytes
+    );
+
+    // the lib-side model agrees: fused prices one rows×Cin panel,
+    // unfused the rows×k cols buffer, a k² = 9x drop on this shape
+    let mg = lower(&get("cnv_mini").unwrap()).unwrap();
+    let t_pre = bnn_edge::memmodel::first_conv_transient(&mg, 8, false);
+    let t_post = bnn_edge::memmodel::first_conv_transient(&mg, 8, true);
+    assert_eq!(t_pre.panel_f32_bytes, 0.0);
+    assert_eq!(t_post.cols_f32_bytes, 0.0);
+    assert!(t_pre.total() / t_post.total() >= 8.9, "{}", t_pre.total() / t_post.total());
+    // and on THIS measured geometry the modeled ratio matches
+    assert_eq!(f_cols_bytes / f_panel_bytes, fk / fgeom.cin);
 }

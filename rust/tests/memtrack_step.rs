@@ -8,7 +8,9 @@
 //!
 //! 1. after one warmup step, subsequent training steps perform *zero*
 //!    heap allocations — both engines, multiple zoo models, the tiled
-//!    backend at 1 and 2 threads (the ISSUE acceptance bar);
+//!    backend at 1 and 2 threads (the ISSUE acceptance bar) — and the
+//!    kernel autotuner keeps it that way: one Auto-mode step pays the
+//!    per-shape registry inserts, replay steps allocate nothing;
 //! 2. after the same warmup (plus one eval to pool its d-buffer),
 //!    `eval` calls — alone or interleaved with training — are also
 //!    allocation-free (the forward-only scratch path, ISSUE-6);
@@ -103,6 +105,40 @@ fn steady_state_steps_allocate_nothing_and_microbatch_caps_peak() {
             assert_eq!(
                 allocs, 0,
                 "{algo}: steady-state eval performed {allocs} heap allocations (want zero)"
+            );
+        }
+    }
+
+    // ---- 1c. the autotuner preserves the zero-alloc steady state:
+    // the first step under tune::Mode::Auto microbenches each GEMM
+    // shape class on the arena's own buffers and pays one registry
+    // insert per class — the only allocations tuning ever makes —
+    // after which every step replays the cached winners through an
+    // atomic load + read-locked hash lookup (run_rows_chunk drives
+    // tuned row-bands from stack context, no heap traffic)
+    {
+        use bnn_edge::bitops::tune;
+        let graph = lower(&get("cnv_mini").unwrap()).unwrap();
+        let (x, y) = toy(8, graph.input_elems, graph.classes, 21);
+        for algo in ["standard", "proposed"] {
+            let mut e =
+                build_engine_micro(algo, &graph, 8, 0, "adam", Accel::Tiled(2), 3).unwrap();
+            e.train_step(&x, &y, 0.01).unwrap();
+            e.train_step(&x, &y, 0.01).unwrap();
+            tune::set_mode(tune::Mode::Auto);
+            // the tuning step (benches candidates, inserts winners)
+            e.train_step(&x, &y, 0.01).unwrap();
+            assert!(tune::len() > 0, "{algo}: auto step tuned no GEMM shape classes");
+            let before = memtrack::alloc_count();
+            for _ in 0..3 {
+                e.train_step(&x, &y, 0.01).unwrap();
+            }
+            let allocs = memtrack::alloc_count() - before;
+            tune::set_mode(tune::Mode::Fixed);
+            assert_eq!(
+                allocs, 0,
+                "{algo}: tuned steady-state steps performed {allocs} heap \
+                 allocations (want zero)"
             );
         }
     }

@@ -3,8 +3,8 @@
 //! DESIGN.md §Key-invariants.
 
 use bnn_edge::bitops::{
-    col2im_tap_scatter, conv_dx_streaming, gemm, im2col_packed, simd, Backend, BitMatrix,
-    ConvGeom, Pool,
+    col2im_tap_scatter, conv_dx_streaming, gemm, im2col_packed, simd, tune, BPanels, Backend,
+    BitMatrix, ConvGeom, KernelCfg, MicroKernel, Pool,
 };
 use bnn_edge::data;
 use bnn_edge::federated::{
@@ -13,7 +13,8 @@ use bnn_edge::federated::{
 use bnn_edge::memmodel::{breakdown, DtypeConfig, Optimizer};
 use bnn_edge::models::{get, lower, names, LayerSpec, ModelSpec};
 use bnn_edge::naive::{
-    col2im, im2col, transpose, Accel, ProposedTrainer, StandardTrainer, StepEngine,
+    col2im, im2col, maxpool_backward_into, maxpool_forward_into, pool_out_dims, transpose, Accel,
+    ProposedTrainer, StandardTrainer, StepEngine,
 };
 use bnn_edge::util::f16::{f16_bits_to_f32, f32_to_f16_bits, q16};
 use bnn_edge::util::json::Json;
@@ -675,6 +676,314 @@ fn residual_minis_fused_matches_reference_across_threads() {
             let (l, _) = t.train_step(&x, &y, 0.01).unwrap();
             assert_eq!(l, bl, "{model} t{threads}");
             assert_eq!(t.weights_snapshot(), bw, "{model} t{threads}");
+        }
+    }
+}
+
+// ------------------------------------------------------------ §Autotuner
+
+/// Serializes the tests that flip the process-global tune mode; every
+/// other test runs under the deterministic `Fixed` default.  (Tuned
+/// dispatch is bit-exact, so a concurrent reader would still compute
+/// correct products — the lock just keeps mode transitions ordered.)
+static TUNE_MODE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[test]
+fn prop_every_tuner_candidate_bit_exact_vs_naive() {
+    // the invariant the autotuner rests on: every (micro-kernel,
+    // K-tile, row-band) config it may ever pick computes the identical
+    // integer popcount product — with and without interleaved B
+    // panels, across odd shapes (K off the word grid, M/N below the
+    // register blocks) and thread counts — so tuning is purely a perf
+    // decision and `--tune=auto` can never change a result
+    let mut g = Pcg32::new(32);
+    let micros = [
+        MicroKernel::Scalar4x4,
+        MicroKernel::Simd1x4,
+        MicroKernel::Simd1x8,
+        MicroKernel::Simd2x4,
+        MicroKernel::Panel8,
+    ];
+    for case in 0..20 {
+        let m = 1 + g.below(20);
+        let k = 1 + g.below(400);
+        let n = 1 + g.below(20);
+        let ap = BitMatrix::pack(m, k, &g.normal_vec(m * k));
+        let btp = BitMatrix::pack(n, k, &g.normal_vec(n * k));
+        let panels = BPanels::pack(&btp);
+        let mut want = vec![0.0; m * n];
+        gemm::xnor_gemm_naive(&ap, &btp, &mut want);
+        for &micro in &micros {
+            for kc_words in [32usize, 128] {
+                for band_rows in [0usize, 3] {
+                    let cfg = KernelCfg { micro, kc_words, band_rows };
+                    for threads in [1usize, 2, 4] {
+                        // Panel8 without panels exercises the fallback
+                        for bp in [None, Some(&panels)] {
+                            let mut got = vec![9.0; m * n];
+                            gemm::xnor_gemm_with(
+                                cfg,
+                                &ap,
+                                &btp,
+                                bp,
+                                &mut got,
+                                &Pool::new(threads),
+                            );
+                            assert_eq!(
+                                got,
+                                want,
+                                "case {case} ({m},{k},{n}) {} t{threads} panels={}",
+                                cfg.label(),
+                                bp.is_some()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_bpanels_gemm_bit_exact_vs_naive() {
+    // the interleaved 8-column panel kernel (what the weight cache
+    // hands wide layers) against the naive triple loop: panel tails
+    // (n % 8 != 0), single-column B, K straddling word boundaries
+    let mut g = Pcg32::new(33);
+    for case in 0..CASES {
+        let m = 1 + g.below(24);
+        let k = 1 + g.below(300);
+        let n = 1 + g.below(30);
+        let ap = BitMatrix::pack(m, k, &g.normal_vec(m * k));
+        let btp = BitMatrix::pack(n, k, &g.normal_vec(n * k));
+        let panels = BPanels::pack(&btp);
+        assert_eq!(panels.data.len(), BPanels::words_for(n, btp.words_per_row));
+        let mut want = vec![0.0; m * n];
+        gemm::xnor_gemm_naive(&ap, &btp, &mut want);
+        let cfg = KernelCfg { micro: MicroKernel::Panel8, kc_words: 128, band_rows: 0 };
+        for threads in [1usize, 2, 4] {
+            let mut got = vec![0.0; m * n];
+            gemm::xnor_gemm_with(cfg, &ap, &btp, Some(&panels), &mut got, &Pool::new(threads));
+            assert_eq!(got, want, "case {case} ({m},{k},{n}) t{threads}");
+        }
+    }
+}
+
+#[test]
+fn tune_auto_caches_winner_and_leaves_valid_product() {
+    let _guard = TUNE_MODE.lock().unwrap_or_else(|e| e.into_inner());
+    let mut g = Pcg32::new(34);
+    // a shape class nothing else in the process tunes
+    let (m, k, n) = (13usize, 777usize, 9usize);
+    let ap = BitMatrix::pack(m, k, &g.normal_vec(m * k));
+    let btp = BitMatrix::pack(n, k, &g.normal_vec(n * k));
+    let mut want = vec![0.0; m * n];
+    gemm::xnor_gemm_naive(&ap, &btp, &mut want);
+    let pool = Pool::new(2);
+
+    // a miss in auto mode microbenches on the real operands and must
+    // leave `out` holding the true product
+    tune::set_mode(tune::Mode::Auto);
+    let mut out = vec![0.0; m * n];
+    let cfg = tune::config_for(&ap, &btp, None, &mut out, &pool);
+    tune::set_mode(tune::Mode::Fixed);
+    assert_eq!(out, want, "auto-tune bench must leave a valid product");
+
+    // the winner is cached under its shape class...
+    let key = tune::ShapeKey::of(m, btp.words_per_row, n, false, pool.threads());
+    assert_eq!(tune::lookup(&key), Some(cfg));
+    assert_eq!(tune::current_config(m, btp.words_per_row, n, false, 2), KernelCfg::fixed());
+
+    // ...and a registry hit replays it without touching the operands
+    tune::set_mode(tune::Mode::Auto);
+    let mut out2 = vec![7.0; m * n];
+    let cfg2 = tune::config_for(&ap, &btp, None, &mut out2, &pool);
+    assert_eq!(tune::current_config(m, btp.words_per_row, n, false, 2), cfg);
+    tune::set_mode(tune::Mode::Fixed);
+    assert_eq!(cfg2, cfg, "cache hit must replay the stored winner");
+    assert!(out2.iter().all(|&v| v == 7.0), "cache hit must not run a GEMM");
+
+    // fixed mode: the deterministic config, no registry traffic
+    let before = tune::len();
+    let cfg3 = tune::config_for(&ap, &btp, None, &mut out2, &pool);
+    assert_eq!(cfg3, KernelCfg::fixed());
+    assert_eq!(tune::len(), before);
+}
+
+#[test]
+fn tiled_backend_auto_dispatch_bit_exact() {
+    // end-to-end through Backend::Tiled: flipping the autotuner on
+    // (tune + replay, with packed panels) never changes a single bit
+    // of the product vs the fixed dispatch and the naive loop
+    let _guard = TUNE_MODE.lock().unwrap_or_else(|e| e.into_inner());
+    let mut g = Pcg32::new(35);
+    for case in 0..10 {
+        let m = 1 + g.below(30);
+        let k = 1 + g.below(500);
+        let n = 1 + g.below(40);
+        let ap = BitMatrix::pack(m, k, &g.normal_vec(m * k));
+        let btp = BitMatrix::pack(n, k, &g.normal_vec(n * k));
+        let panels = if case % 2 == 0 { Some(BPanels::pack(&btp)) } else { None };
+        let mut want = vec![0.0; m * n];
+        gemm::xnor_gemm_naive(&ap, &btp, &mut want);
+        for threads in [1usize, 2, 4] {
+            let be = Backend::Tiled { threads };
+            let mut fixed = vec![0.0; m * n];
+            be.xnor_gemm_packed(&ap, &btp, panels.as_ref(), &mut fixed);
+            assert_eq!(fixed, want, "case {case} fixed t{threads}");
+            tune::set_mode(tune::Mode::Auto);
+            let mut tuned = vec![0.0; m * n];
+            be.xnor_gemm_packed(&ap, &btp, panels.as_ref(), &mut tuned); // tunes
+            assert_eq!(tuned, want, "case {case} tuning call t{threads}");
+            be.xnor_gemm_packed(&ap, &btp, panels.as_ref(), &mut tuned); // replays
+            tune::set_mode(tune::Mode::Fixed);
+            assert_eq!(tuned, want, "case {case} tuned t{threads}");
+        }
+    }
+}
+
+// ----------------------------------------------------- §General max-pool
+
+#[test]
+fn prop_general_maxpool_matches_per_window_reference() {
+    // forward: every output cell is the window max and the mask points
+    // at the *first* cell attaining it (scan order ky, kx — ties
+    // forced via quantized inputs); backward: gradients route to
+    // exactly the masked winners, overlapping windows accumulate, and
+    // the gradient mass is preserved
+    let mut g = Pcg32::new(36);
+    for case in 0..CASES {
+        let kside = 2 + g.below(3); // 2..=4
+        let stride = 1 + g.below(3); // 1..=3 (stride < kside overlaps)
+        let (oh, ow) = (1 + g.below(4), 1 + g.below(4));
+        let h = (oh - 1) * stride + kside;
+        let w = (ow - 1) * stride + kside;
+        let (b, c) = (1 + g.below(2), 1 + g.below(5));
+        assert_eq!(pool_out_dims(h, w, kside, stride), (oh, ow), "case {case}");
+        // quarter-grid values make in-window ties common
+        let x: Vec<f32> =
+            g.normal_vec(b * h * w * c).iter().map(|v| (v * 4.0).round() / 4.0).collect();
+        let cells = b * oh * ow * c;
+        let mut out = vec![0.0f32; cells];
+        let mut mask = vec![0u32; cells];
+        maxpool_forward_into(&x, b, h, w, c, kside, stride, &mut out, &mut mask);
+        let at = |bi: usize, oy: usize, ox: usize, m: usize, ch: usize| {
+            let (ky, kx) = (m / kside, m % kside);
+            x[((bi * h + oy * stride + ky) * w + ox * stride + kx) * c + ch]
+        };
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ch in 0..c {
+                        let o = ((bi * oh + oy) * ow + ox) * c + ch;
+                        let win: Vec<f32> =
+                            (0..kside * kside).map(|m| at(bi, oy, ox, m, ch)).collect();
+                        let best = win.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                        let tag = format!("case {case} k{kside} s{stride} @({bi},{oy},{ox},{ch})");
+                        assert_eq!(out[o], best, "{tag}: not the window max");
+                        let widx = mask[o] as usize;
+                        assert_eq!(win[widx], best, "{tag}: mask not at a max");
+                        assert!(
+                            win[..widx].iter().all(|&v| v < best),
+                            "{tag}: mask skipped an earlier winner (tie-break)"
+                        );
+                    }
+                }
+            }
+        }
+        // backward: scatter a random upstream gradient through the mask
+        let dout = g.normal_vec(cells);
+        let mut dx = vec![0.0f32; b * h * w * c];
+        maxpool_backward_into(&dout, &mask, b, h, w, c, kside, stride, &mut dx);
+        let mut want = vec![0.0f32; b * h * w * c];
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ch in 0..c {
+                        let o = ((bi * oh + oy) * ow + ox) * c + ch;
+                        let (ky, kx) = (mask[o] as usize / kside, mask[o] as usize % kside);
+                        want[((bi * h + oy * stride + ky) * w + ox * stride + kx) * c + ch] +=
+                            dout[o];
+                    }
+                }
+            }
+        }
+        assert_eq!(dx, want, "case {case} k{kside} s{stride} backward routing");
+        let mass_in: f64 = dout.iter().map(|&v| v as f64).sum();
+        let mass_out: f64 = dx.iter().map(|&v| v as f64).sum();
+        assert!(
+            (mass_in - mass_out).abs() <= 1e-3 * (1.0 + mass_in.abs()),
+            "case {case}: gradient mass {mass_in} vs {mass_out}"
+        );
+    }
+}
+
+/// Conv → general pool → conv net for the end-to-end pool sweep.
+fn pool_spec(kside: usize, stride: usize, hw: usize) -> ModelSpec {
+    ModelSpec {
+        name: format!("prop_pool_k{kside}_s{stride}"),
+        input_shape: vec![hw, hw, 3],
+        classes: 10,
+        layers: vec![
+            LayerSpec::conv(4, 3).as_first(),
+            LayerSpec::maxpool_k(kside, stride),
+            LayerSpec::conv(6, 3),
+            LayerSpec::flatten(),
+            LayerSpec::dense(10),
+        ],
+    }
+}
+
+#[test]
+fn train_step_general_pool_matches_reference_across_tiers() {
+    // 3×3 stride-2 over an odd map, the overlapping 3×3 stride-1 and
+    // 2×2 stride-1 — the geometries the 2×2-only engines used to
+    // reject — taking full gradient steps on every accel tier
+    let mut g = Pcg32::new(37);
+    for (kside, stride, hw) in [(3usize, 2usize, 9usize), (3, 1, 7), (2, 1, 8)] {
+        let graph = lower(&pool_spec(kside, stride, hw)).unwrap();
+        let batch = 4;
+        let x = g.normal_vec(batch * hw * hw * 3);
+        let y: Vec<usize> = (0..batch).map(|i| i % 10).collect();
+        let tag = format!("pool k{kside} s{stride} {hw}x{hw}");
+
+        // standard engine: naive reference vs the fused tiers (1e-4)
+        let mut reference =
+            StandardTrainer::new(&graph, batch, "sgd", Accel::Naive, 7).unwrap();
+        let (rl, _) = reference.train_step(&x, &y, 0.01).unwrap();
+        let rw = reference.weights_snapshot();
+        for accel in [Accel::Blocked, Accel::Tiled(2)] {
+            let mut t = StandardTrainer::new(&graph, batch, "sgd", accel, 7).unwrap();
+            let (l, _) = t.train_step(&x, &y, 0.01).unwrap();
+            assert!(
+                (l - rl).abs() <= 1e-4 * (1.0 + rl.abs()),
+                "{tag} {accel:?}: {l} vs {rl}"
+            );
+            for (wa, wb) in rw.iter().zip(t.weights_snapshot().iter()) {
+                for (u, v) in wa.iter().zip(wb) {
+                    assert!((u - v).abs() <= 1e-4, "{tag} {accel:?}: {u} vs {v}");
+                }
+            }
+        }
+
+        // proposed engine: every fused tier identical bit-for-bit
+        // (this walks the retained u32 winner-mask path — the general
+        // pool's backward state — on both the blocked and tiled tiers)
+        let mut blocked =
+            ProposedTrainer::new(&graph, batch, "sgd", Accel::Blocked, 7).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..2 {
+            losses.push(blocked.train_step(&x, &y, 0.01).unwrap().0);
+        }
+        let bw = blocked.weights_snapshot();
+        for threads in [1usize, 2, 4] {
+            let mut t =
+                ProposedTrainer::new(&graph, batch, "sgd", Accel::Tiled(threads), 7).unwrap();
+            for (si, &want) in losses.iter().enumerate() {
+                let (l, _) = t.train_step(&x, &y, 0.01).unwrap();
+                assert_eq!(l, want, "{tag} t{threads} step {si}");
+            }
+            assert_eq!(t.weights_snapshot(), bw, "{tag} t{threads}");
         }
     }
 }
